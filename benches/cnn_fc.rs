@@ -1,0 +1,18 @@
+//! Bench: paper Fig. 11 — FC layers of eleven CNNs, measured on the
+//! host (the Raspberry Pi 4 substitution, DESIGN.md §2).
+//!
+//! Run: `cargo bench --bench cnn_fc` (QUICK=1 for shorter sampling)
+
+use fullpack::figures::ondevice::fig11;
+
+fn main() {
+    let quick = std::env::var("QUICK").is_ok();
+    let (warmup, ms) = if quick { (2, 10) } else { (10, 100) }; // paper: 10 warmup, 100 iters
+    println!("Fig. 11: CNN FC layers, speedup vs Ruy-W8A8 (measured)\n");
+    let (table, geo) = fig11(warmup, ms);
+    table.print();
+    println!("\ngeomean speedups vs ruy-w8a8 (paper: W1A1 1.2x, W2A2 1.5x, W4A4 1.43x):");
+    for (m, g) in geo {
+        println!("  {m:>14}: {g:.2}x");
+    }
+}

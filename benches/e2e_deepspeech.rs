@@ -1,0 +1,54 @@
+//! Bench: paper Figs. 1 and 10 — measured end-to-end DeepSpeech with
+//! per-layer breakdown through the serving engine, every variant.
+//!
+//! Run: `cargo bench --bench e2e_deepspeech` (QUICK=1 uses the tiny
+//! config).  The simulated (gem5-stand-in) version of the same figure
+//! is `fullpack simulate fig10`.
+
+use fullpack::models::{DeepSpeech, DeepSpeechConfig};
+use fullpack::pack::Variant;
+use fullpack::util::bench::Table;
+
+fn main() {
+    let quick = std::env::var("QUICK").is_ok();
+    let cfg = if quick { DeepSpeechConfig::TINY } else { DeepSpeechConfig::FULL };
+    let runs = if quick { 2 } else { 4 };
+    let frames: Vec<f32> =
+        (0..cfg.time_steps * cfg.n_input).map(|i| (i as f32 * 0.01).sin()).collect();
+    let variants = ["w8a8", "w4a8", "w4a4", "w2a2", "w1a1"];
+    println!(
+        "DeepSpeech measured per-layer breakdown (hidden={}, T={})\n",
+        cfg.n_hidden, cfg.time_steps
+    );
+    let mut t = Table::new(vec!["variant", "fc1", "fc2", "fc3", "lstm", "fc5", "fc6", "total ms", "lstm %"]);
+    let mut totals = Vec::new();
+    for v in variants {
+        let model = DeepSpeech::new(cfg, Variant::parse(v).unwrap(), 7);
+        model.forward_timed(&frames); // warmup
+        let mut best: Option<Vec<(&'static str, u128)>> = None;
+        let mut best_total = u128::MAX;
+        for _ in 0..runs {
+            let (_, times) = model.forward_timed(&frames);
+            let total: u128 = times.iter().map(|(_, t)| t).sum();
+            if total < best_total {
+                best_total = total;
+                best = Some(times);
+            }
+        }
+        let times = best.unwrap();
+        let lstm = times.iter().find(|(n, _)| *n == "lstm").unwrap().1;
+        let mut row = vec![v.to_string()];
+        row.extend(times.iter().map(|(_, ns)| format!("{:.2}", *ns as f64 / 1e6)));
+        row.push(format!("{:.2}", best_total as f64 / 1e6));
+        row.push(format!("{:.0}%", lstm as f64 / best_total as f64 * 100.0));
+        t.row(row);
+        totals.push((v, best_total));
+    }
+    t.print();
+    let base = totals.iter().find(|(v, _)| *v == "w8a8").unwrap().1 as f64;
+    println!("\nend-to-end speedup vs w8a8 (paper §4.6: 1.56-2.11x on gem5;");
+    println!("host LLC is far larger than the paper's 2MB, see EXPERIMENTS.md):");
+    for (v, t) in &totals {
+        println!("  {v:>5}: {:.2}x", base / *t as f64);
+    }
+}

@@ -1,0 +1,48 @@
+//! Bench: measured FullyConnected GEMV sweep — the wall-clock analog of
+//! paper Figs. 4 and 5 (the simulated versions live in
+//! `fullpack simulate fig4|fig5`).  Prints speedup-vs-Ruy tables over
+//! the IO-size grid for the FullPack variants and the rival baselines.
+//!
+//! Run: `cargo bench --bench fc_sweep` (QUICK=1 for a reduced grid)
+
+use fullpack::figures::ondevice::measure_method;
+use fullpack::models::FcShape;
+use fullpack::util::bench::Table;
+
+fn main() {
+    let quick = std::env::var("QUICK").is_ok();
+    let sizes: &[usize] =
+        if quick { &[256, 1024, 4096] } else { &[128, 256, 512, 1024, 2048, 4096] };
+    let ms = if quick { 10 } else { 40 };
+    let methods = [
+        "w4a8", "w8a4", "w4a4", "w2a2", "w1a1", "xnn-w8a8", "tflite-w8a8", "gemmlowp-w8a8",
+        "ruy-f32", "eigen-f32", "ulppack-w2a2", "ulppack-w1a1",
+    ];
+    println!("measured GEMV sweep (speedup = T_ruy-w8a8 / T_method), host CPU\n");
+    for m in methods {
+        let mut t = Table::new(
+            std::iter::once("z\\k".to_string())
+                .chain(sizes.iter().map(|k| k.to_string()))
+                .collect::<Vec<_>>(),
+        );
+        let mut geo = 0.0;
+        for &z in sizes {
+            let mut row = vec![z.to_string()];
+            for &k in sizes {
+                let fc = FcShape { name: "sweep", z, k };
+                let base = measure_method(&fc, "ruy-w8a8", 2, ms).median_ns;
+                let ours = measure_method(&fc, m, 2, ms).median_ns;
+                let s = base / ours;
+                geo += s.ln();
+                row.push(format!("{s:.2}"));
+            }
+            t.row(row);
+        }
+        println!("-- {m} --");
+        t.print();
+        println!(
+            "geomean: {:.2}x\n",
+            (geo / (sizes.len() * sizes.len()) as f64).exp()
+        );
+    }
+}

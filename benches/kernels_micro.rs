@@ -1,0 +1,47 @@
+//! Bench: per-kernel micro benchmarks — the §Perf profiling tool.
+//! Reports ns/call, elements/ns and weight-GB/s for every FullPack
+//! variant and baseline at three representative sizes (L1-resident,
+//! LLC-resident, DRAM-streaming on the host).
+//!
+//! Run: `cargo bench --bench kernels_micro` (QUICK=1 for less sampling)
+
+use fullpack::figures::ondevice::measure_method;
+use fullpack::models::FcShape;
+use fullpack::util::bench::Table;
+
+fn main() {
+    let quick = std::env::var("QUICK").is_ok();
+    let ms = if quick { 8 } else { 60 };
+    let shapes = [(256usize, 256usize), (2048, 2048), (8192, 4096)];
+    let methods = [
+        "ruy-w8a8", "xnn-w8a8", "tflite-w8a8", "gemmlowp-w8a8",
+        "w4a8", "w8a4", "w4a4", "w2a8", "w8a2", "w2a2", "w1a8", "w8a1", "w1a1",
+        "ruy-f32", "eigen-f32", "tflite-f32", "ulppack-w2a2", "ulppack-w1a1",
+    ];
+    for (z, k) in shapes {
+        println!("\n== {z}x{k} ==");
+        let mut t = Table::new(vec!["kernel", "us/call", "elems/ns", "wt GB/s", "vs ruy"]);
+        let fc = FcShape { name: "micro", z, k };
+        let base = measure_method(&fc, "ruy-w8a8", 3, ms).median_ns;
+        for m in methods {
+            let r = measure_method(&fc, m, 3, ms);
+            let wbytes: f64 = match m {
+                m if m.ends_with("f32") => (4 * z * k) as f64,
+                m if m.starts_with("ulppack") => (z * k) as f64,
+                m if m.starts_with('w') => {
+                    let wb: usize = m[1..2].parse().unwrap();
+                    (z * k * wb) as f64 / 8.0
+                }
+                _ => (z * k) as f64,
+            };
+            t.row(vec![
+                m.to_string(),
+                format!("{:.1}", r.micros()),
+                format!("{:.2}", (z * k) as f64 / r.median_ns),
+                format!("{:.2}", wbytes / r.median_ns),
+                format!("{:.2}x", base / r.median_ns),
+            ]);
+        }
+        t.print();
+    }
+}

@@ -1,0 +1,40 @@
+//! Bench: regenerate ALL simulated paper figures at the full IO-size
+//! grid — Fig. 4, 5, 6, 7, 8, 10 (+1), 12, 13 — on the cache simulator
+//! and cost model (the gem5 stand-in).
+//!
+//! Run: `cargo bench --bench sim_figures` (QUICK=1 for the small grid)
+
+use fullpack::costmodel::Method;
+use fullpack::figures::{e2e, sweeps, SIZES, SIZES_QUICK};
+use fullpack::models::DeepSpeechConfig;
+
+fn main() {
+    let quick = std::env::var("QUICK").is_ok();
+    let sizes: &[usize] = if quick { &SIZES_QUICK } else { &SIZES };
+    for (name, f) in [
+        ("fig4", sweeps::fig4 as fn(&[usize]) -> sweeps::FigureReport),
+        ("fig5", sweeps::fig5),
+        ("fig6", sweeps::fig6),
+        ("fig7", sweeps::fig7),
+        ("fig8", sweeps::fig8),
+        ("fig12", sweeps::fig12),
+        ("fig13", sweeps::fig13),
+    ] {
+        let t0 = std::time::Instant::now();
+        let report = f(sizes);
+        report.print();
+        eprintln!("[{name} regenerated in {:.1}s]", t0.elapsed().as_secs_f64());
+    }
+    let t0 = std::time::Instant::now();
+    let (table, totals) = e2e::fig10(DeepSpeechConfig::FULL);
+    println!("=== fig10 (simulated DeepSpeech breakdown) ===\n");
+    table.print();
+    let base = totals.iter().find(|(n, _)| n == "Ruy-W8A8").unwrap().1;
+    println!("\nend-to-end speedups vs Ruy-W8A8 (paper: 1.56-2.11x for FullPack):");
+    for (n, t) in &totals {
+        println!("  {n:>16}: {:.2}x", base / t);
+    }
+    let share = e2e::lstm_share(Method::RuyW8A8, Method::RuyW8A8, DeepSpeechConfig::FULL);
+    println!("\nfig1: LSTM share of Ruy-W8A8 runtime = {:.0}% (paper: >70%)", share * 100.0);
+    eprintln!("[fig10/fig1 regenerated in {:.1}s]", t0.elapsed().as_secs_f64());
+}

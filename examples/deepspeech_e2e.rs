@@ -1,0 +1,112 @@
+//! End-to-end driver (DESIGN.md deliverable): serve batched requests of
+//! the full-size DeepSpeech-like model (paper Fig. 9) through the
+//! serving engine for every FullPack bit-width and the W8A8 baseline,
+//! reporting per-layer breakdown (Fig. 10), end-to-end speedup (§4.6),
+//! and serving latency/throughput.  Results are recorded in
+//! EXPERIMENTS.md §E2E.
+//!
+//! ```sh
+//! cargo run --release --example deepspeech_e2e            # full size
+//! cargo run --release --example deepspeech_e2e -- --tiny  # CI-sized
+//! ```
+
+use fullpack::coordinator::{BatcherConfig, Engine, EngineConfig, RouterConfig};
+use fullpack::models::{DeepSpeech, DeepSpeechConfig};
+use fullpack::pack::Variant;
+use std::collections::BTreeMap;
+
+fn main() -> anyhow::Result<()> {
+    let tiny = std::env::args().any(|a| a == "--tiny");
+    let cfg = if tiny { DeepSpeechConfig::TINY } else { DeepSpeechConfig::FULL };
+    let requests = if tiny { 8 } else { 12 };
+    println!(
+        "DeepSpeech end-to-end: input={} hidden={} T={} | {} requests per variant\n",
+        cfg.n_input, cfg.n_hidden, cfg.time_steps, requests
+    );
+
+    let frames: Vec<f32> =
+        (0..cfg.time_steps * cfg.n_input).map(|i| (i as f32 * 0.01).sin()).collect();
+    let variants = ["w8a8", "w4a8", "w4a4", "w2a2", "w1a1"];
+    let mut totals: BTreeMap<&str, f64> = BTreeMap::new();
+    let mut layer_tables: Vec<(String, Vec<(&'static str, f64)>)> = Vec::new();
+
+    for v in variants {
+        let variant = Variant::parse(v)?;
+        let engine = Engine::new(EngineConfig {
+            workers: 2,
+            batcher: BatcherConfig::default(),
+            router: RouterConfig::default(),
+        });
+        engine.register_model("deepspeech", DeepSpeech::new(cfg, variant, 7));
+
+        // warm-up (cache + branch predictors), then measured burst
+        engine.infer("deepspeech", frames.clone())?;
+        let rxs: Vec<_> = (0..requests)
+            .map(|_| engine.submit("deepspeech", frames.clone()))
+            .collect::<anyhow::Result<_>>()?;
+        let mut layer_ns: BTreeMap<&'static str, f64> = BTreeMap::new();
+        let mut best_total = f64::INFINITY;
+        for rx in rxs {
+            let resp = rx.recv().map_err(|_| anyhow::anyhow!("dropped"))??;
+            let total: u128 = resp.layer_times.iter().map(|(_, t)| t).sum();
+            if (total as f64) < best_total {
+                best_total = total as f64;
+                layer_ns = resp.layer_times.iter().map(|&(n, t)| (n, t as f64)).collect();
+            }
+        }
+        println!(
+            "{v:>5}: best {:.3} ms | engine {}",
+            best_total / 1e6,
+            engine.metrics().summary()
+        );
+        totals.insert(v, best_total);
+        layer_tables.push((
+            v.to_string(),
+            ["fc1", "fc2", "fc3", "lstm", "fc5", "fc6"]
+                .iter()
+                .map(|&n| (n as &'static str, layer_ns.get(n).copied().unwrap_or(0.0)))
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|(n, t)| (match n { // keep static strs
+                    "fc1" => "fc1", "fc2" => "fc2", "fc3" => "fc3",
+                    "lstm" => "lstm", "fc5" => "fc5", _ => "fc6",
+                }, t))
+                .collect(),
+        ));
+        engine.shutdown();
+    }
+
+    println!("\nper-layer breakdown (ms) — measured Fig. 10:");
+    print!("{:>6}", "layer");
+    for (v, _) in &layer_tables {
+        print!("{v:>10}");
+    }
+    println!();
+    for i in 0..6 {
+        let name = layer_tables[0].1[i].0;
+        print!("{name:>6}");
+        for (_, layers) in &layer_tables {
+            print!("{:>10.3}", layers[i].1 / 1e6);
+        }
+        println!();
+    }
+
+    let base = totals["w8a8"];
+    println!("\nend-to-end speedup vs W8A8 baseline (paper §4.6: 1.56-2.11x):");
+    for (v, t) in &totals {
+        println!("  {v:>5}: {:.2}x", base / t);
+    }
+    let lstm_share = layer_tables
+        .iter()
+        .find(|(v, _)| v == "w8a8")
+        .map(|(_, l)| {
+            let total: f64 = l.iter().map(|(_, t)| t).sum();
+            l.iter().find(|(n, _)| *n == "lstm").unwrap().1 / total
+        })
+        .unwrap();
+    println!(
+        "\nFig. 1 check — LSTM share of W8A8 runtime: {:.0}% (paper: >70%)",
+        lstm_share * 100.0
+    );
+    Ok(())
+}

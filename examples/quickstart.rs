@@ -1,0 +1,86 @@
+//! Quickstart: quantize an f32 weight matrix to 4 bits, pack it with the
+//! FullPack layout, run a GEMV three ways — native Rust kernel, scalar
+//! oracle, and the AOT-compiled Pallas kernel via PJRT — and check all
+//! three agree.
+//!
+//! ```sh
+//! make artifacts            # once (python, build-time only)
+//! cargo run --release --example quickstart
+//! ```
+
+use fullpack::kernels::{self, ActVec};
+use fullpack::pack::{BitWidth, PackedMatrix, Variant};
+use fullpack::quant::{quantize_per_row, requantize_vec};
+use fullpack::runtime::{Runtime, Tensor};
+
+fn main() -> anyhow::Result<()> {
+    let variant = Variant::parse("w4a8")?;
+    let (z, k) = (256usize, 256usize);
+
+    // 1. a synthetic f32 layer, quantized per-row to 4-bit weights
+    let w_f32: Vec<f32> = (0..z * k).map(|i| ((i as f32) * 0.37).sin() * 0.1).collect();
+    let a_f32: Vec<f32> = (0..k).map(|i| ((i as f32) * 0.11).cos()).collect();
+    let (w_q, w_scales) = quantize_per_row(&w_f32, z, k, BitWidth::B4);
+    let a_q: Vec<i8> = a_f32.iter().map(|&v| (v * 127.0).round() as i8).collect();
+
+    // 2. pack the weights — zero spacer bits, stride-16 layout (Fig. 2)
+    let wp = PackedMatrix::from_i8(&w_q, z, k, BitWidth::B4)?;
+    println!(
+        "packed {}x{} 4-bit weights: {} bytes ({}x smaller than int8)",
+        z,
+        k,
+        wp.footprint(),
+        z * k / wp.footprint()
+    );
+
+    // 3. native FullPack GEMV
+    let mut acc = vec![0i32; z];
+    kernels::gemv(&wp, ActVec::I8(&a_q), &mut acc)?;
+
+    // 4. scalar oracle (unpack + plain dot)
+    let w_back = wp.unpack_all();
+    let oracle: Vec<i32> = (0..z)
+        .map(|r| {
+            w_back[r * k..(r + 1) * k]
+                .iter()
+                .zip(&a_q)
+                .map(|(&w, &a)| w as i32 * a as i32)
+                .sum()
+        })
+        .collect();
+    assert_eq!(acc, oracle, "native kernel == scalar oracle");
+    println!("native kernel matches the scalar oracle ({} outputs)", z);
+
+    // 5. same computation through the AOT Pallas kernel (PJRT)
+    match Runtime::load("artifacts") {
+        Ok(rt) => {
+            let name = format!("gemv_{}_256x256", variant.name());
+            let out = rt.execute(
+                &name,
+                &[
+                    Tensor::u8(wp.bytes().to_vec(), vec![z, wp.bytes_per_row()]),
+                    Tensor::s8(a_q.clone(), vec![k]),
+                ],
+            )?;
+            assert_eq!(out[0].as_s32()?, acc.as_slice(), "PJRT == native");
+            println!("AOT Pallas kernel (PJRT) matches the native kernel bit-for-bit");
+        }
+        Err(e) => println!("skipping PJRT check (run `make artifacts`): {e}"),
+    }
+
+    // 6. requantize the accumulators back to f32
+    let bias = vec![0.0f32; z];
+    let y: Vec<f32> = requantize_vec(&acc, 1.0 / 127.0, 1.0, &bias)
+        .iter()
+        .zip(&w_scales)
+        .map(|(v, s)| v * s)
+        .collect();
+    let y_ref: Vec<f32> = (0..z)
+        .map(|r| w_f32[r * k..(r + 1) * k].iter().zip(&a_f32).map(|(w, a)| w * a).sum())
+        .collect();
+    let max_err = y.iter().zip(&y_ref).map(|(a, b)| (a - b).abs()).fold(0f32, f32::max);
+    println!("quantized vs f32 reference: max |err| = {max_err:.4} (4-bit weights)");
+    assert!(max_err < 0.5);
+    println!("quickstart OK");
+    Ok(())
+}

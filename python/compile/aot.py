@@ -1,0 +1,227 @@
+"""AOT compile path: lower the L1/L2 jax functions to HLO *text* artifacts
+consumed by the Rust runtime (``rust/src/runtime``).
+
+HLO text — NOT serialized ``HloModuleProto`` — is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the published ``xla`` crate) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly.  See /opt/xla-example/README.md.
+
+Outputs (under ``artifacts/``):
+  * ``<name>.hlo.txt``   one per lowered function
+  * ``manifest.json``    machine-readable index: per artifact the input
+                         names/dtypes/shapes, output shapes, kind,
+                         variant and shape metadata.  The Rust
+                         ``ArtifactRegistry`` loads this.
+
+Python runs ONCE (`make artifacts`); the rust binary is self-contained
+afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import fullpack_gemv as fg
+from .kernels import pack as packmod
+from .kernels import ref as refmod
+
+_DTYPE_NAMES = {
+    np.dtype(np.int8): "s8", np.dtype(np.uint8): "u8",
+    np.dtype(np.int32): "s32", np.dtype(np.float32): "f32",
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """jax Lowered → XLA HLO text via stablehlo (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _iospec(tree):
+    out = []
+    for leaf in jax.tree_util.tree_leaves(tree):
+        out.append({"dtype": _DTYPE_NAMES[np.dtype(leaf.dtype)],
+                    "shape": list(leaf.shape)})
+    return out
+
+
+class Emitter:
+    def __init__(self, outdir: str):
+        self.outdir = outdir
+        self.manifest: list[dict] = []
+        os.makedirs(outdir, exist_ok=True)
+
+    def emit(self, name: str, fn, example_args: tuple, *, kind: str,
+             variant: str, meta: dict, arg_names: list[str]) -> None:
+        lowered = jax.jit(fn, keep_unused=True).lower(*example_args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.outdir, fname), "w") as f:
+            f.write(text)
+        out_spec = jax.eval_shape(fn, *example_args)
+        entry = {
+            "name": name, "file": fname, "kind": kind, "variant": variant,
+            "meta": meta,
+            "inputs": [dict(n, name=an) for an, n in
+                       zip(arg_names, _iospec(example_args))],
+            "outputs": _iospec(out_spec),
+        }
+        self.manifest.append(entry)
+        print(f"  wrote {fname}  ({len(text)} chars, "
+              f"{len(entry['inputs'])} inputs)")
+
+    def finish(self):
+        path = os.path.join(self.outdir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump({"version": 1, "vl": packmod.VL,
+                       "artifacts": self.manifest}, f, indent=1)
+        print(f"manifest: {path} ({len(self.manifest)} artifacts)")
+
+
+# --------------------------------------------------------------------------
+# GEMV artifacts
+# --------------------------------------------------------------------------
+
+def emit_gemv(em: Emitter, variant: str, z: int, k: int, row_tile: int):
+    name = f"gemv_{variant}_{z}x{k}"
+    if variant == "f32":
+        fn = functools.partial(fg.gemv_f32, row_tile=row_tile)
+        args = (_spec((z, k), jnp.float32), _spec((k,), jnp.float32))
+    elif variant == "w8a8":
+        fn = functools.partial(fg.gemv_w8a8, row_tile=row_tile)
+        args = (_spec((z, k), jnp.int8), _spec((k,), jnp.int8))
+    else:
+        fn = functools.partial(fg.gemv, variant=variant, row_tile=row_tile)
+        (wshape, ashape) = fg.packed_shapes(z, k, variant)
+        wbits, abits = refmod.parse_variant(variant)
+        wdt = jnp.int8 if wbits == 8 else jnp.uint8
+        adt = jnp.int8 if abits == 8 else jnp.uint8
+        args = (_spec(wshape, wdt), _spec(ashape, adt))
+    em.emit(name, fn, args, kind="gemv", variant=variant,
+            meta={"z": z, "k": k, "row_tile": row_tile},
+            arg_names=["weights", "activations"])
+
+
+# --------------------------------------------------------------------------
+# LSTM step artifacts
+# --------------------------------------------------------------------------
+
+def _lstm_arg_specs(variant: str, hidden: int):
+    h4 = 4 * hidden
+    if variant == "f32":
+        wx = _spec((h4, hidden), jnp.float32)
+        x = _spec((hidden,), jnp.float32)
+        h = _spec((hidden,), jnp.float32)
+        return wx, wx, x, h
+    wbits, abits = refmod.parse_variant(variant)
+    if wbits == 8:
+        wx = _spec((h4, hidden), jnp.int8)
+    else:
+        wx = _spec((h4, hidden // packmod.elems_per_byte(wbits)), jnp.uint8)
+    if abits == 8:
+        x = _spec((hidden,), jnp.int8)
+    else:
+        x = _spec((hidden // packmod.elems_per_byte(abits),), jnp.uint8)
+    return wx, wx, x, x
+
+
+def emit_lstm_step(em: Emitter, variant: str, hidden: int, row_tile: int,
+                   tag: str):
+    name = f"lstm_step_{variant}_{tag}"
+    wx, wh, x, h = _lstm_arg_specs(variant, hidden)
+    bias = _spec((4 * hidden,), jnp.float32)
+    c = _spec((hidden,), jnp.float32)
+    s = _spec((), jnp.float32)
+    fn = functools.partial(M.lstm_step, variant, row_tile=row_tile)
+    em.emit(name, fn, (wx, wh, bias, x, h, c, s, s, s),
+            kind="lstm_step", variant=variant,
+            meta={"hidden": hidden, "row_tile": row_tile},
+            arg_names=["wx", "wh", "bias", "x", "h", "c", "s_x", "s_h", "s_w"])
+
+
+# --------------------------------------------------------------------------
+# Dense (batch GEMM) artifact — the Ruy-like W8A8 path for FC layers
+# --------------------------------------------------------------------------
+
+def emit_fc_w8a8(em: Emitter, batch: int, z: int, k: int):
+    name = f"fc_w8a8_b{batch}_{z}x{k}"
+    args = (_spec((batch, k), jnp.int8), _spec((z, k), jnp.int8),
+            _spec((z,), jnp.float32), _spec((), jnp.float32),
+            _spec((), jnp.float32))
+    em.emit(name, M.fc_w8a8, args, kind="fc_w8a8", variant="w8a8",
+            meta={"batch": batch, "z": z, "k": k},
+            arg_names=["x", "weights", "bias", "s_in", "s_w"])
+
+
+# --------------------------------------------------------------------------
+# Tiny end-to-end forward (weights baked as constants) — integration check
+# --------------------------------------------------------------------------
+
+def emit_deepspeech_tiny(em: Emitter, variant: str):
+    cfg = M.TINY
+    params = M.make_params(cfg, variant, seed=7)
+    fn = functools.partial(M.deepspeech_forward, params, row_tile=8)
+    args = (_spec((cfg.time_steps, cfg.n_input), jnp.float32),)
+    em.emit(f"deepspeech_tiny_{variant}", fn, args,
+            kind="deepspeech", variant=variant,
+            meta={"time_steps": cfg.time_steps, "n_input": cfg.n_input,
+                  "n_hidden": cfg.n_hidden, "n_output": cfg.n_output,
+                  "seed": 7},
+            arg_names=["frames"])
+
+
+# --------------------------------------------------------------------------
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="output directory (default: ../artifacts)")
+    ap.add_argument("--full", action="store_true",
+                    help="also emit full-size (2048) DeepSpeech LSTM artifacts")
+    args = ap.parse_args()
+    em = Emitter(args.out)
+
+    print("[1/4] GEMV kernels @ 256x256 (all variants)")
+    for variant in refmod.VARIANTS + refmod.BASELINES:
+        emit_gemv(em, variant, 256, 256, row_tile=8)
+
+    print("[2/4] GEMV kernels @ 2048x2048 (perf-representative subset)")
+    for variant in ("w4a8", "w4a4", "w2a2", "w1a1", "w8a8", "f32"):
+        emit_gemv(em, variant, 2048, 2048, row_tile=64)
+
+    print("[3/4] LSTM steps (tiny for integration; full with --full)")
+    for variant in refmod.VARIANTS + refmod.BASELINES:
+        emit_lstm_step(em, variant, M.TINY.n_hidden, row_tile=8, tag="tiny")
+    if args.full:
+        for variant in ("w4a8", "w4a4", "w2a2", "w1a1", "w8a8", "f32"):
+            emit_lstm_step(em, variant, M.FULL.n_hidden, row_tile=64,
+                           tag="full")
+        emit_fc_w8a8(em, M.FULL.fc_batch, M.FULL.n_hidden, M.FULL.n_hidden)
+
+    print("[4/4] tiny DeepSpeech end-to-end forwards")
+    emit_fc_w8a8(em, M.TINY.fc_batch, M.TINY.n_hidden, M.TINY.n_hidden)
+    for variant in ("w4a8", "w2a2", "w1a1", "w8a8", "f32"):
+        emit_deepspeech_tiny(em, variant)
+
+    em.finish()
+
+
+if __name__ == "__main__":
+    main()

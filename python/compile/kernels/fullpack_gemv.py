@@ -1,0 +1,190 @@
+"""L1 — FullPack GEMV as Pallas kernels (paper §3.2, Alg. 2, Fig. 3).
+
+Hardware-Adaptation (DESIGN.md §3): the paper's NEON schedule maps onto
+Pallas as
+
+* 16×i8 NEON register        → 16-lane minor axis of a VMEM tile
+                                (``VL = 16`` kept so the layout is
+                                bit-identical to the Rust SWAR kernels);
+* ``LD1 {v0.16b}``           → BlockSpec-scheduled HBM→VMEM tile copy —
+                                dense packing means every byte moved over
+                                the TPU's HBM bus is useful data, the
+                                same bandwidth argument as the paper's;
+* ``SSHL`` / ``SSHR`` lanes  → ``lax.shift_left`` /
+                                ``shift_right_arithmetic`` on int8 —
+                                the two-shift mask+sign-extend extraction
+                                of Fig. 3 (LSL then ASR for the low
+                                sub-vector, a single ASR for the top one);
+* ``SMLAL`` accumulate       → int32 ``jnp.dot`` with
+                                ``preferred_element_type=int32`` (MXU-
+                                shaped on real hardware).
+
+Kernels run ``interpret=True`` — real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute (see /opt/xla-example).
+
+All kernels consume *packed* operands in the normative layout of
+``pack.py`` and produce raw int32 accumulators; (re)quantization scales
+are applied by the L2 model, mirroring TFLite's pipeline.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from .pack import VL, elems_per_byte, group_size, padded_len
+from .ref import parse_variant
+
+#: default number of output rows computed per grid step.
+ROW_TILE = 8
+
+
+def _bitcast_i8(x: jax.Array) -> jax.Array:
+    """uint8 → int8 reinterpret (two's complement), the 'load into a signed
+    vector register' step."""
+    return lax.bitcast_convert_type(x, jnp.int8)
+
+
+def extract_subvectors(block_i8: jax.Array, bits: int) -> jax.Array:
+    """The paper's two-shift extraction, vectorized over a whole tile.
+
+    ``block_i8``: (..., n_bytes) int8 where every VL consecutive bytes are
+    one packed block.  Returns (..., n_bytes * E) int8 in original element
+    order — sub-vector ``k`` of block ``g`` lands at positions
+    ``g*G + k*VL .. g*G + (k+1)*VL``.
+
+    For each ``k``: ``ASR(LSL(V, 8-(k+1)b), 8-b)`` — LSL masks away the
+    higher sub-elements, ASR sign-extends.  ``k = E-1`` needs only the ASR
+    (Fig. 3's "one shift for W17..W32").
+    """
+    e = elems_per_byte(bits)
+    *lead, nbytes = block_i8.shape
+    v = block_i8.reshape(*lead, nbytes // VL, VL)
+    subs = []
+    for k in range(e):
+        lsl = 8 - (k + 1) * bits
+        shifted = v if lsl == 0 else lax.shift_left(v, jnp.int8(lsl))
+        subs.append(lax.shift_right_arithmetic(shifted, jnp.int8(8 - bits)))
+    # (..., groups, E, VL) -> (..., n_bytes * E): original order.
+    return jnp.stack(subs, axis=-2).reshape(*lead, nbytes * e)
+
+
+def _unpack_operand(ref_val: jax.Array, bits: int) -> jax.Array:
+    """Packed uint8 (or plain int8 when bits == 8) → int8 element stream."""
+    if bits == 8:
+        return ref_val
+    return extract_subvectors(_bitcast_i8(ref_val), bits)
+
+
+def _gemv_kernel(wp_ref, ap_ref, o_ref, *, wbits: int, abits: int):
+    """One grid step: a ROW_TILE×K block of the packed weight matrix against
+    the full packed activation vector (GEMV is K-bound; activations fit
+    VMEM whole, weights stream — Alg. 2's loop structure with the j-loop
+    vectorized away)."""
+    w = _unpack_operand(wp_ref[...], wbits)          # (tile, kp) int8
+    a = _unpack_operand(ap_ref[...], abits)          # (kp,) int8
+    o_ref[...] = jnp.dot(w.astype(jnp.int32), a.astype(jnp.int32),
+                         preferred_element_type=jnp.int32)
+
+
+def packed_shapes(z: int, k: int, variant: str) -> tuple[tuple[int, int], tuple[int,]]:
+    """Packed operand shapes for a z×k GEMV under ``variant``."""
+    wbits, abits = parse_variant(variant)
+    kp_w = k if wbits == 8 else padded_len(k, wbits) // elems_per_byte(wbits)
+    kp_a = k if abits == 8 else padded_len(k, abits) // elems_per_byte(abits)
+    return (z, kp_w), (kp_a,)
+
+
+@functools.partial(jax.jit, static_argnames=("variant", "row_tile"))
+def gemv(wp: jax.Array, ap: jax.Array, variant: str, row_tile: int = ROW_TILE
+         ) -> jax.Array:
+    """FullPack GEMV: packed weights (z, kbytes) × packed activations → (z,) i32.
+
+    Requirements: ``z % row_tile == 0`` and, for sub-byte operands, the
+    packed byte counts already group-aligned (``pack.pack`` guarantees
+    this).  When both operands are sub-byte their *padded element* counts
+    must agree (use the same ``k`` through ``pack``).
+    """
+    wbits, abits = parse_variant(variant)
+    z, wbytes = wp.shape
+    if z % row_tile != 0:
+        raise ValueError(f"z={z} not a multiple of row_tile={row_tile}")
+    k_w = wbytes * (elems_per_byte(wbits) if wbits != 8 else 1)
+    k_a = ap.shape[0] * (elems_per_byte(abits) if abits != 8 else 1)
+    if k_w != k_a:
+        raise ValueError(f"padded depth mismatch: weights {k_w} vs activations {k_a}"
+                         " — pad operands to a common group-aligned k first")
+
+    kernel = functools.partial(_gemv_kernel, wbits=wbits, abits=abits)
+    grid = (z // row_tile,)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((row_tile, wbytes), lambda i: (i, 0)),
+            pl.BlockSpec((ap.shape[0],), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((row_tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((z,), jnp.int32),
+        interpret=True,
+    )(wp, ap)
+
+
+@functools.partial(jax.jit, static_argnames=("row_tile",))
+def gemv_w8a8(w: jax.Array, a: jax.Array, row_tile: int = ROW_TILE) -> jax.Array:
+    """Ruy-like W8A8 baseline GEMV as a Pallas kernel (no unpack stage)."""
+    z, k = w.shape
+
+    def kernel(w_ref, a_ref, o_ref):
+        o_ref[...] = jnp.dot(w_ref[...].astype(jnp.int32),
+                             a_ref[...].astype(jnp.int32),
+                             preferred_element_type=jnp.int32)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(z // row_tile,),
+        in_specs=[pl.BlockSpec((row_tile, k), lambda i: (i, 0)),
+                  pl.BlockSpec((k,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((row_tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((z,), jnp.int32),
+        interpret=True,
+    )(w, a)
+
+
+@functools.partial(jax.jit, static_argnames=("row_tile",))
+def gemv_f32(w: jax.Array, a: jax.Array, row_tile: int = ROW_TILE) -> jax.Array:
+    """FP32 baseline GEMV (Eigen/Ruy-FP32 rival) as a Pallas kernel."""
+    z, k = w.shape
+
+    def kernel(w_ref, a_ref, o_ref):
+        o_ref[...] = jnp.dot(w_ref[...], a_ref[...],
+                             preferred_element_type=jnp.float32)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(z // row_tile,),
+        in_specs=[pl.BlockSpec((row_tile, k), lambda i: (i, 0)),
+                  pl.BlockSpec((k,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((row_tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((z,), jnp.float32),
+        interpret=True,
+    )(w, a)
+
+
+def vmem_bytes(z: int, k: int, variant: str, row_tile: int = ROW_TILE) -> int:
+    """Static VMEM-footprint estimate per grid step (DESIGN.md §8 L1):
+    weight tile + packed activations + unpacked staging + output tile.
+    Used by the perf notes — interpret-mode wallclock is *not* a TPU
+    proxy, the structural footprint is what we optimize."""
+    wbits, abits = parse_variant(variant)
+    (z_, wbytes), (abytes,) = packed_shapes(z, k, variant)
+    kp_w = wbytes * (elems_per_byte(wbits) if wbits != 8 else 1)
+    tile_w_packed = row_tile * wbytes
+    tile_w_unpacked = row_tile * kp_w            # int8 staging post-extract
+    acts = abytes + kp_w                         # packed + unpacked
+    out = row_tile * 4
+    return tile_w_packed + tile_w_unpacked + acts + out

@@ -1,0 +1,168 @@
+"""FullPack packing scheme (paper §3.1, Fig. 2) — normative layout.
+
+For bit-width ``b ∈ {4, 2, 1}`` and vector lane count ``VL`` (16 for the
+paper's NEON target, kept at 16 here so the layout is bit-identical to the
+Rust SWAR kernels):
+
+* elements-per-byte  ``E = 8 // b``
+* group size         ``G = E * VL``  (32 / 64 / 128 elements)
+
+A vector ``x[0..n)`` (``n`` padded to a multiple of ``G``) is split into
+groups of ``G`` elements.  Within group ``g``, **byte ``j`` of the
+16-byte block** holds original elements ``g*G + k*VL + j`` for
+``k = 0..E-1``, with sub-element ``k`` stored in bits
+``[k*b, (k+1)*b)`` (k = 0 is the least-significant bits).
+
+Extraction of sub-vector ``k`` (16 originally-consecutive elements) from a
+loaded 16-byte block ``V`` is then exactly the paper's two-shift schedule::
+
+    sub_k = ASR( LSL(V, 8 - (k+1)*b), 8 - b )
+
+— a logical shift left to mask away higher sub-elements, then an
+arithmetic shift right to sign-extend.  For the top sub-vector
+(k = E-1) the LSL is a no-op, matching the paper's "only one ASR for
+W17..W32" observation (Fig. 3).
+
+Values are signed two's-complement ``b``-bit integers, range
+``[-2^(b-1), 2^(b-1) - 1]`` (for b=1: {-1, 0}, the natural 1-bit
+two's-complement domain that the ASR sign-extension realizes).
+
+Matrix rows are packed independently and stored consecutively ("repeat
+for all other sets of rows", §3.1).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+#: vector lane count — 16 int8 lanes of a 128-bit NEON register.
+VL = 16
+
+SUPPORTED_BITS = (8, 4, 2, 1)
+SUB_BYTE_BITS = (4, 2, 1)
+
+
+def elems_per_byte(bits: int) -> int:
+    """Number of sub-byte elements stored per packed byte."""
+    if bits not in SUB_BYTE_BITS:
+        raise ValueError(f"sub-byte bits must be one of {SUB_BYTE_BITS}, got {bits}")
+    return 8 // bits
+
+
+def group_size(bits: int, vl: int = VL) -> int:
+    """Elements covered by one VL-byte packed block (G = E * VL)."""
+    return elems_per_byte(bits) * vl
+
+
+def value_range(bits: int) -> tuple[int, int]:
+    """Inclusive [lo, hi] range of signed b-bit two's-complement values."""
+    if bits not in SUPPORTED_BITS:
+        raise ValueError(f"bits must be one of {SUPPORTED_BITS}, got {bits}")
+    return -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+
+
+def padded_len(n: int, bits: int, vl: int = VL) -> int:
+    """Smallest multiple of the group size >= n."""
+    g = group_size(bits, vl)
+    return ((n + g - 1) // g) * g
+
+
+def pack(x: np.ndarray, bits: int, vl: int = VL) -> np.ndarray:
+    """Pack the last axis of ``x`` (signed b-bit values) into FullPack layout.
+
+    ``x``: integer array, last axis length ``n``; values must lie in
+    ``value_range(bits)``.  The last axis is zero-padded to a multiple of
+    ``G = (8//bits) * vl``.
+
+    Returns a ``uint8`` array with last axis ``padded_len(n) // E``.
+    """
+    e = elems_per_byte(bits)
+    g = e * vl
+    lo, hi = value_range(bits)
+    x = np.asarray(x)
+    if x.dtype.kind not in "iu":
+        raise TypeError(f"pack expects an integer array, got {x.dtype}")
+    if x.size and (x.min() < lo or x.max() > hi):
+        raise ValueError(f"values out of range [{lo}, {hi}] for {bits}-bit packing")
+
+    n = x.shape[-1]
+    np_ = padded_len(n, bits, vl)
+    if np_ != n:
+        pad = [(0, 0)] * (x.ndim - 1) + [(0, np_ - n)]
+        x = np.pad(x, pad)
+
+    # (..., groups, E, VL): element (g, k, j) is original index g*G + k*VL + j
+    xg = x.reshape(*x.shape[:-1], np_ // g, e, vl).astype(np.int64)
+    mask = (1 << bits) - 1
+    out = np.zeros((*x.shape[:-1], np_ // g, vl), dtype=np.uint8)
+    for k in range(e):
+        out |= ((xg[..., k, :] & mask) << (k * bits)).astype(np.uint8)
+    return out.reshape(*x.shape[:-1], np_ // e)
+
+
+def unpack(packed: np.ndarray, bits: int, n: int | None = None, vl: int = VL) -> np.ndarray:
+    """Inverse of :func:`pack`.  Scalar bit-twiddling on purpose — this is
+    the *independent oracle* for the shift-based vector extraction used by
+    the kernels.  Returns ``int8`` with last axis ``n`` (or the full padded
+    length if ``n`` is None)."""
+    e = elems_per_byte(bits)
+    packed = np.asarray(packed, dtype=np.uint8)
+    nbytes = packed.shape[-1]
+    if nbytes % vl != 0:
+        raise ValueError(f"packed length {nbytes} not a multiple of VL={vl}")
+    pg = packed.reshape(*packed.shape[:-1], nbytes // vl, vl).astype(np.int64)
+    subs = []
+    half = 1 << (bits - 1)
+    mask = (1 << bits) - 1
+    for k in range(e):
+        v = (pg >> (k * bits)) & mask
+        v = np.where(v >= half, v - (1 << bits), v)  # sign-extend
+        subs.append(v)
+    # (..., groups, E, VL) -> (..., padded_n)
+    full = np.stack(subs, axis=-2).reshape(*packed.shape[:-1], nbytes * e)
+    out = full.astype(np.int8)
+    if n is not None:
+        out = out[..., :n]
+    return out
+
+
+def pack_naive(x: np.ndarray, bits: int) -> np.ndarray:
+    """Naive adjacent packing (paper Alg. 1 strawman): consecutive elements
+    share a byte, element 0 in the *high* bits as Alg. 1's ``W[i] >> 4``
+    extraction implies.  Used by the naive-method baseline."""
+    e = elems_per_byte(bits)
+    x = np.asarray(x)
+    n = x.shape[-1]
+    np_ = ((n + e - 1) // e) * e
+    if np_ != n:
+        x = np.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, np_ - n)])
+    mask = (1 << bits) - 1
+    xg = x.reshape(*x.shape[:-1], np_ // e, e).astype(np.int64)
+    out = np.zeros((*x.shape[:-1], np_ // e), dtype=np.uint8)
+    for k in range(e):
+        # element k of the byte sits in the highest remaining bits
+        out |= ((xg[..., k] & mask) << ((e - 1 - k) * bits)).astype(np.uint8)
+    return out
+
+
+def pack_ulppack(x: np.ndarray, bits: int, lane_bits: int = 16) -> np.ndarray:
+    """ULPPACK-style spacer packing (Won et al., 2022): sub-byte values are
+    placed in a wider lane with guard (spacer) bits between them so that
+    lane-wise multiply-accumulate cannot overflow into a neighbour.
+
+    Two b-bit values per 16-bit lane with ``16 - 2b`` wasted bits — the
+    memory-bandwidth waste FullPack eliminates.  Returned as ``uint16``
+    lanes (baseline comparator only)."""
+    per_lane = 2
+    x = np.asarray(x)
+    n = x.shape[-1]
+    np_ = ((n + per_lane - 1) // per_lane) * per_lane
+    if np_ != n:
+        x = np.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, np_ - n)])
+    mask = (1 << bits) - 1
+    xg = x.reshape(*x.shape[:-1], np_ // per_lane, per_lane).astype(np.int64)
+    shift = lane_bits // per_lane  # value k at bit k*8
+    out = np.zeros((*x.shape[:-1], np_ // per_lane), dtype=np.uint16)
+    for k in range(per_lane):
+        out |= ((xg[..., k] & mask) << (k * shift)).astype(np.uint16)
+    return out

@@ -1,0 +1,114 @@
+"""Pure-numpy correctness oracles for the FullPack GEMV kernels.
+
+These deliberately avoid the vector-shift extraction path: sub-byte
+operands are unpacked element-by-element (``pack.unpack`` does scalar
+bit-twiddling) and the dot product is a plain int32 ``matmul``.  Every
+Pallas kernel and every Rust SWAR kernel must match these bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from . import pack as packmod
+
+#: the nine paper variants (§3.2) plus the two comparison baselines.
+VARIANTS = (
+    "w8a4", "w4a8", "w4a4",
+    "w2a8", "w8a2", "w2a2",
+    "w1a8", "w8a1", "w1a1",
+)
+BASELINES = ("w8a8", "f32")
+
+
+def parse_variant(variant: str) -> tuple[int, int]:
+    """``"w4a8" -> (4, 8)`` — weight bits, activation bits."""
+    v = variant.lower()
+    if not (v.startswith("w") and "a" in v):
+        raise ValueError(f"bad variant {variant!r}")
+    wb, ab = v[1:].split("a")
+    wbits, abits = int(wb), int(ab)
+    for b in (wbits, abits):
+        if b not in packmod.SUPPORTED_BITS:
+            raise ValueError(f"unsupported bit-width {b} in {variant!r}")
+    return wbits, abits
+
+
+def gemv_ref(w: np.ndarray, a: np.ndarray) -> np.ndarray:
+    """int32 GEMV oracle on *unpacked* operands: ``(z,k) @ (k,) -> (z,)``."""
+    w = np.asarray(w, dtype=np.int32)
+    a = np.asarray(a, dtype=np.int32)
+    if w.ndim != 2 or a.ndim != 1 or w.shape[1] != a.shape[0]:
+        raise ValueError(f"shape mismatch: w{w.shape} @ a{a.shape}")
+    return (w @ a).astype(np.int32)
+
+
+def gemm_ref(w: np.ndarray, a: np.ndarray) -> np.ndarray:
+    """int32 GEMM oracle: ``(z,k) @ (k,b) -> (z,b)``."""
+    return (np.asarray(w, np.int32) @ np.asarray(a, np.int32)).astype(np.int32)
+
+
+def gemv_packed_ref(wp: np.ndarray, ap: np.ndarray, variant: str,
+                    k: int, vl: int = packmod.VL) -> np.ndarray:
+    """Oracle that takes *packed* operands (as the kernels do), unpacks via
+    the scalar path, and reduces in int32.
+
+    ``wp``: (z, k/Ew) uint8 if weights are sub-byte else (z, k) int8.
+    ``ap``: (k/Ea,) uint8 if activations are sub-byte else (k,) int8.
+    ``k``: logical depth (pre-padding length).
+    """
+    wbits, abits = parse_variant(variant)
+    if wbits == 8:
+        w = np.asarray(wp, np.int8)[:, :k]
+    else:
+        w = packmod.unpack(wp, wbits, n=k, vl=vl)
+    if abits == 8:
+        a = np.asarray(ap, np.int8)[:k]
+    else:
+        a = packmod.unpack(ap, abits, n=k, vl=vl)
+    return gemv_ref(w, a)
+
+
+def random_operands(z: int, k: int, variant: str, rng: np.random.Generator
+                    ) -> tuple[np.ndarray, np.ndarray]:
+    """Random (unpacked) int8 operands with values in the variant's range."""
+    wbits, abits = parse_variant(variant)
+    wlo, whi = packmod.value_range(wbits)
+    alo, ahi = packmod.value_range(abits)
+    w = rng.integers(wlo, whi + 1, size=(z, k), dtype=np.int64).astype(np.int8)
+    a = rng.integers(alo, ahi + 1, size=(k,), dtype=np.int64).astype(np.int8)
+    return w, a
+
+
+def pack_operands(w: np.ndarray, a: np.ndarray, variant: str,
+                  vl: int = packmod.VL) -> tuple[np.ndarray, np.ndarray]:
+    """Pack unpacked int8 operands per the variant (identity for 8-bit)."""
+    wbits, abits = parse_variant(variant)
+    wp = w.astype(np.int8) if wbits == 8 else packmod.pack(w, wbits, vl=vl)
+    ap = a.astype(np.int8) if abits == 8 else packmod.pack(a, abits, vl=vl)
+    return wp, ap
+
+
+def lstm_step_ref(x: np.ndarray, h: np.ndarray, c: np.ndarray,
+                  w_x: np.ndarray, w_h: np.ndarray, bias: np.ndarray,
+                  sx: float, sh: float, sw: float,
+                  ) -> tuple[np.ndarray, np.ndarray]:
+    """f64-accurate oracle for the hybrid-quantized LSTM step used by the
+    DeepSpeech model (gates from integer GEMV accumulators, f32
+    nonlinearities).
+
+    ``w_x``: (4H, X) int, ``w_h``: (4H, H) int, ``x``: (X,) int, ``h``: (H,) int,
+    ``bias``: (4H,) f32.  ``sx, sh, sw``: activation/state/weight scales.
+    Gate order: i, f, g, o (input, forget, cell, output).
+    Returns (h', c') in f32.
+    """
+    acc = (gemv_ref(w_x, x).astype(np.float64) * (sw * sx)
+           + gemv_ref(w_h, h).astype(np.float64) * (sw * sh)
+           + bias.astype(np.float64))
+    hdim = h.shape[0]
+    i, f, g, o = (acc[0:hdim], acc[hdim:2 * hdim],
+                  acc[2 * hdim:3 * hdim], acc[3 * hdim:4 * hdim])
+    sig = lambda v: 1.0 / (1.0 + np.exp(-v))
+    c_new = sig(f) * c.astype(np.float64) + sig(i) * np.tanh(g)
+    h_new = sig(o) * np.tanh(c_new)
+    return h_new.astype(np.float32), c_new.astype(np.float32)

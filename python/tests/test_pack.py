@@ -1,0 +1,145 @@
+"""Unit tests for the FullPack packing layout (pack.py) — including a
+golden-vector check of the paper's Fig. 2 example layout."""
+
+import numpy as np
+import pytest
+
+from compile.kernels import pack as P
+
+
+class TestLayoutGolden:
+    def test_fig2_4bit_layout(self):
+        """Paper Fig. 2: 4-bit, byte j of a block holds elements j (low
+        nibble) and j+16 (high nibble) of a 32-element group."""
+        x = np.arange(32, dtype=np.int8) % 8  # values 0..7, in-range for 4-bit
+        packed = P.pack(x, 4)
+        assert packed.shape == (16,)
+        for j in range(16):
+            lo = packed[j] & 0xF
+            hi = (packed[j] >> 4) & 0xF
+            assert lo == x[j], f"byte {j} low nibble"
+            assert hi == x[j + 16], f"byte {j} high nibble"
+
+    def test_2bit_layout(self):
+        x = np.arange(64, dtype=np.int8) % 2
+        packed = P.pack(x, 2)
+        assert packed.shape == (16,)
+        for j in range(16):
+            for k in range(4):
+                v = (packed[j] >> (2 * k)) & 0x3
+                assert v == x[j + 16 * k]
+
+    def test_1bit_layout(self):
+        rng = np.random.default_rng(3)
+        x = -rng.integers(0, 2, size=128).astype(np.int8)  # {-1, 0}
+        packed = P.pack(x, 1)
+        assert packed.shape == (16,)
+        for j in range(16):
+            for k in range(8):
+                bit = int((packed[j] >> k) & 1)
+                assert -bit == int(x[j + 16 * k])
+
+    def test_negative_values_two_complement(self):
+        x = np.array([-8, 7, -1, 0] * 8, dtype=np.int8)
+        packed = P.pack(x, 4)
+        got = P.unpack(packed, 4, n=32)
+        np.testing.assert_array_equal(got, x)
+
+
+class TestRoundTrip:
+    @pytest.mark.parametrize("bits", [4, 2, 1])
+    @pytest.mark.parametrize("n", [0, 1, 15, 16, 31, 32, 100, 128, 500])
+    def test_roundtrip_padded(self, bits, n):
+        rng = np.random.default_rng(bits * 1000 + n)
+        lo, hi = P.value_range(bits)
+        x = rng.integers(lo, hi + 1, size=n).astype(np.int8)
+        packed = P.pack(x, bits)
+        assert packed.dtype == np.uint8
+        assert packed.shape[-1] == P.padded_len(n, bits) // P.elems_per_byte(bits)
+        got = P.unpack(packed, bits, n=n)
+        np.testing.assert_array_equal(got, x)
+
+    @pytest.mark.parametrize("bits", [4, 2, 1])
+    def test_roundtrip_matrix(self, bits):
+        rng = np.random.default_rng(17)
+        lo, hi = P.value_range(bits)
+        w = rng.integers(lo, hi + 1, size=(8, 192)).astype(np.int8)
+        got = P.unpack(P.pack(w, bits), bits, n=192)
+        np.testing.assert_array_equal(got, w)
+        # rows are packed independently
+        row0 = P.pack(w[0], bits)
+        np.testing.assert_array_equal(P.pack(w, bits)[0], row0)
+
+    def test_padding_is_zero(self):
+        x = np.array([1, -2, 3], dtype=np.int8)
+        packed = P.pack(x, 4)
+        full = P.unpack(packed, 4)
+        np.testing.assert_array_equal(full[3:], np.zeros(29, np.int8))
+
+
+class TestValidation:
+    def test_out_of_range_rejected(self):
+        with pytest.raises(ValueError):
+            P.pack(np.array([8], dtype=np.int8), 4)   # 4-bit max is 7
+        with pytest.raises(ValueError):
+            P.pack(np.array([-9], dtype=np.int8), 4)
+        with pytest.raises(ValueError):
+            P.pack(np.array([1], dtype=np.int8), 1)   # 1-bit domain {-1,0}
+
+    def test_float_rejected(self):
+        with pytest.raises(TypeError):
+            P.pack(np.array([1.0]), 4)
+
+    def test_bad_bits_rejected(self):
+        with pytest.raises(ValueError):
+            P.pack(np.array([0], dtype=np.int8), 3)
+        with pytest.raises(ValueError):
+            P.elems_per_byte(8)
+
+    def test_value_range(self):
+        assert P.value_range(8) == (-128, 127)
+        assert P.value_range(4) == (-8, 7)
+        assert P.value_range(2) == (-2, 1)
+        assert P.value_range(1) == (-1, 0)
+
+
+class TestNaivePacking:
+    @pytest.mark.parametrize("bits", [4, 2, 1])
+    def test_naive_density(self, bits):
+        """Naive packing has the same density as FullPack — the difference
+        is extraction cost, not footprint (paper Alg. 1 discussion)."""
+        lo, hi = P.value_range(bits)
+        rng = np.random.default_rng(5)
+        x = rng.integers(lo, hi + 1, size=P.group_size(bits)).astype(np.int8)
+        assert P.pack_naive(x, bits).nbytes == P.pack(x, bits).nbytes
+
+    def test_naive_4bit_alg1_order(self):
+        """Alg. 1: W0 = (W[i] >> 4) << 4 — first element in the high bits."""
+        x = np.array([3, 5], dtype=np.int8)
+        packed = P.pack_naive(x, 4)
+        assert (packed[0] >> 4) & 0xF == 3
+        assert packed[0] & 0xF == 5
+
+
+class TestUlppackPacking:
+    def test_spacer_waste(self):
+        """ULPPACK wastes (16-2b)/16 of each lane — FullPack's motivating
+        comparison (§1): same data, larger footprint."""
+        rng = np.random.default_rng(7)
+        for bits in (4, 2, 1):
+            lo, hi = P.value_range(bits)
+            x = rng.integers(lo, hi + 1, size=256).astype(np.int8)
+            ulp = P.pack_ulppack(x, bits)
+            full = P.pack(x, bits)
+            assert ulp.nbytes == 256  # 2 values per 2-byte lane
+            # FullPack footprint is bits/8 bytes per value:
+            assert full.nbytes == 256 * bits // 8
+            assert ulp.nbytes >= full.nbytes * 2
+
+    def test_lane_values_recoverable(self):
+        x = np.array([1, -2, 0, 1], dtype=np.int8)
+        lanes = P.pack_ulppack(x, 2)
+        assert lanes.dtype == np.uint16
+        assert lanes.shape == (2,)
+        assert lanes[0] & 0x3 == (1 & 0x3)
+        assert (lanes[0] >> 8) & 0x3 == (-2 & 0x3)

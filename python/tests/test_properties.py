@@ -1,0 +1,112 @@
+"""Hypothesis property sweeps: shapes, values and variants for the packing
+layout and the Pallas kernels vs the scalar oracle (DESIGN.md deliverable
+(c): L1 property testing)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fullpack_gemv as fg
+from compile.kernels import pack as P
+from compile.kernels import ref
+
+SUB_BITS = st.sampled_from([4, 2, 1])
+VARIANT = st.sampled_from(list(ref.VARIANTS))
+
+
+@st.composite
+def packed_vector(draw, bits=None):
+    b = draw(SUB_BITS) if bits is None else bits
+    n = draw(st.integers(0, 400))
+    lo, hi = P.value_range(b)
+    x = draw(st.lists(st.integers(lo, hi), min_size=n, max_size=n))
+    return b, np.array(x, dtype=np.int8)
+
+
+class TestPackProperties:
+    @given(packed_vector())
+    @settings(max_examples=60, deadline=None)
+    def test_roundtrip(self, bv):
+        bits, x = bv
+        got = P.unpack(P.pack(x, bits), bits, n=x.shape[-1])
+        np.testing.assert_array_equal(got, x)
+
+    @given(packed_vector())
+    @settings(max_examples=60, deadline=None)
+    def test_density(self, bv):
+        """Zero spacer bits: footprint is exactly ceil(n/G)*G*bits/8."""
+        bits, x = bv
+        packed = P.pack(x, bits)
+        np_ = P.padded_len(x.shape[-1], bits)
+        assert packed.nbytes == np_ * bits // 8
+
+    @given(packed_vector(), st.integers(0, 2**32 - 1))
+    @settings(max_examples=40, deadline=None)
+    def test_pack_is_injective_on_groups(self, bv, seed):
+        """Different in-range vectors yield different packed bytes (on the
+        unpadded prefix) — no information loss."""
+        bits, x = bv
+        if x.size == 0:
+            return
+        rng = np.random.default_rng(seed)
+        y = x.copy()
+        i = rng.integers(0, x.size)
+        lo, hi = P.value_range(bits)
+        alt = [v for v in range(lo, hi + 1) if v != x[i]]
+        y[i] = alt[rng.integers(0, len(alt))]
+        assert not np.array_equal(P.pack(x, bits), P.pack(y, bits))
+
+
+class TestGemvProperties:
+    @given(
+        VARIANT,
+        st.integers(1, 6),     # row tiles of 8
+        st.integers(1, 4),     # depth in groups of 128
+        st.integers(0, 2**32 - 1),
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_kernel_matches_oracle(self, variant, zt, kg, seed):
+        z, k = zt * 8, kg * 128
+        rng = np.random.default_rng(seed)
+        w, a = ref.random_operands(z, k, variant, rng)
+        wp, ap = ref.pack_operands(w, a, variant)
+        got = np.asarray(fg.gemv(wp, ap, variant))
+        np.testing.assert_array_equal(got, ref.gemv_ref(w, a))
+
+    @given(VARIANT, st.integers(0, 2**32 - 1))
+    @settings(max_examples=20, deadline=None)
+    def test_linearity_in_activations(self, variant, seed):
+        """gemv(w, a1 + a2) == gemv(w, a1) + gemv(w, a2) when the sum stays
+        in range — integer GEMV is linear."""
+        wbits, abits = ref.parse_variant(variant)
+        z, k = 8, 128
+        rng = np.random.default_rng(seed)
+        w, _ = ref.random_operands(z, k, variant, rng)
+        alo, ahi = P.value_range(abits)
+        half_lo, half_hi = alo // 2, max(ahi // 2, 0)
+        a1 = rng.integers(half_lo, half_hi + 1, size=k).astype(np.int8)
+        a2 = rng.integers(half_lo, half_hi + 1, size=k).astype(np.int8)
+        if abits == 1:
+            a1, a2 = np.minimum(a1, 0), np.zeros_like(a2)
+        wp, _ = ref.pack_operands(w, a1, variant)
+
+        def run(a):
+            _, ap = ref.pack_operands(w, a, variant)
+            return np.asarray(fg.gemv(wp, ap, variant))
+
+        s = (a1.astype(np.int32) + a2.astype(np.int32))
+        if s.min() < alo or s.max() > ahi:
+            return  # would saturate the packed domain; property inapplicable
+        np.testing.assert_array_equal(run((a1 + a2).astype(np.int8)),
+                                      run(a1) + run(a2))
+
+    @given(st.integers(0, 2**32 - 1))
+    @settings(max_examples=20, deadline=None)
+    def test_zero_weights_zero_output(self, seed):
+        rng = np.random.default_rng(seed)
+        for variant in ("w4a8", "w2a2", "w1a1"):
+            _, a = ref.random_operands(8, 128, variant, rng)
+            w = np.zeros((8, 128), np.int8)
+            wp, ap = ref.pack_operands(w, a, variant)
+            got = np.asarray(fg.gemv(wp, ap, variant))
+            np.testing.assert_array_equal(got, np.zeros(8, np.int32))

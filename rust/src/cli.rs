@@ -1,0 +1,120 @@
+//! Hand-rolled CLI (clap is unavailable offline — DESIGN.md §7).
+//!
+//! ```text
+//! fullpack simulate <fig4|fig5|fig6|fig7|fig8|fig10|fig12|fig13|all> [--quick] [--csv DIR]
+//! fullpack simulate --show-config [--preset NAME]
+//! fullpack bench <fig11|deepspeech> [--variant V] [--ms N]
+//! fullpack serve [--variant V] [--requests N] [--workers N] [--tiny]
+//! fullpack models show deepspeech
+//! fullpack artifact run <name> [--dir artifacts]
+//! fullpack artifact list [--dir artifacts]
+//! ```
+
+use std::collections::HashMap;
+
+/// Parsed command line: positionals + `--key value` / `--flag` options.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positionals: Vec<String>,
+    options: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Flags that never take a value.
+    const FLAGS: [&'static str; 5] = ["quick", "show-config", "breakdown", "tiny", "help"];
+
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Result<Args, String> {
+        let mut a = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if Self::FLAGS.contains(&name) {
+                    a.flags.push(name.to_string());
+                } else {
+                    let val = it
+                        .next()
+                        .ok_or_else(|| format!("--{name} expects a value"))?;
+                    a.options.insert(name.to_string(), val);
+                }
+            } else {
+                a.positionals.push(arg);
+            }
+        }
+        Ok(a)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: bad number {v:?}")),
+        }
+    }
+
+    pub fn pos(&self, i: usize) -> Option<&str> {
+        self.positionals.get(i).map(String::as_str)
+    }
+}
+
+pub const USAGE: &str = "\
+fullpack — sub-byte quantized inference engine (FullPack reproduction)
+
+USAGE:
+  fullpack simulate <fig4|fig5|fig6|fig7|fig8|fig10|fig12|fig13|all>
+                    [--quick] [--csv DIR]      regenerate a paper figure
+  fullpack simulate --show-config [--preset P] print a cache preset
+  fullpack bench fig11 [--ms N]                measured CNN-FC sweep (RPi substitution)
+  fullpack bench deepspeech [--variant V] [--breakdown] [--tiny]
+                                               measured end-to-end DeepSpeech
+  fullpack serve [--config F.json] [--variant V] [--requests N]
+                 [--workers N] [--tiny]
+                                               serving-engine demo (latency/throughput)
+  fullpack models show deepspeech              print the Fig. 9 topology
+  fullpack artifact list [--dir D]             list AOT artifacts
+  fullpack artifact run <name> [--dir D]       execute one artifact via PJRT
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn positionals_and_options() {
+        let a = parse("simulate fig4 --quick --csv out");
+        assert_eq!(a.pos(0), Some("simulate"));
+        assert_eq!(a.pos(1), Some("fig4"));
+        assert!(a.flag("quick"));
+        assert_eq!(a.opt("csv"), Some("out"));
+        assert_eq!(a.opt_or("preset", "gem5"), "gem5");
+    }
+
+    #[test]
+    fn numbers() {
+        let a = parse("serve --requests 64");
+        assert_eq!(a.opt_usize("requests", 8).unwrap(), 64);
+        assert_eq!(a.opt_usize("workers", 2).unwrap(), 2);
+        let bad = parse("serve --requests xyz");
+        assert!(bad.opt_usize("requests", 8).is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(vec!["--csv".to_string()]).is_err());
+    }
+}

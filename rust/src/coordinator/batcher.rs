@@ -1,0 +1,204 @@
+//! Dynamic batcher: coalesces independent requests into a batch before
+//! dispatch, bounded by a max batch size and a flush deadline.  The
+//! DeepSpeech FC front-end is a batch-16 GEMM in the paper; the batcher
+//! is how a serving deployment reaches that batch from independent
+//! arrivals while bounding added latency (backpressure: `push` reports
+//! a full queue instead of growing unboundedly).
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone, Copy)]
+pub struct BatcherConfig {
+    /// flush as soon as this many requests are waiting
+    pub max_batch: usize,
+    /// flush a non-empty partial batch after this long
+    pub max_wait: Duration,
+    /// reject new work beyond this queue depth (backpressure)
+    pub max_queue: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_batch: 16,
+            max_wait: Duration::from_millis(2),
+            max_queue: 1024,
+        }
+    }
+}
+
+/// A queued item plus its arrival time.
+#[derive(Debug)]
+struct Entry<T> {
+    item: T,
+    arrived: Instant,
+}
+
+/// Deadline-based dynamic batcher (single consumer; callers lock it).
+#[derive(Debug)]
+pub struct Batcher<T> {
+    cfg: BatcherConfig,
+    queue: VecDeque<Entry<T>>,
+}
+
+/// Why `pop_batch` returned a batch (for tests/metrics).
+#[derive(Debug, PartialEq, Eq, Clone, Copy)]
+pub enum FlushReason {
+    Full,
+    Deadline,
+    Drained,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        Batcher { cfg, queue: VecDeque::new() }
+    }
+
+    /// Enqueue; `Err(item)` when the queue is full (backpressure).
+    pub fn push(&mut self, item: T) -> Result<(), T> {
+        if self.queue.len() >= self.cfg.max_queue {
+            return Err(item);
+        }
+        self.queue.push_back(Entry { item, arrived: Instant::now() });
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Is a batch ready (full, or the oldest entry has waited past the
+    /// deadline)?
+    pub fn ready(&self) -> bool {
+        if self.queue.len() >= self.cfg.max_batch {
+            return true;
+        }
+        match self.queue.front() {
+            Some(e) => e.arrived.elapsed() >= self.cfg.max_wait,
+            None => false,
+        }
+    }
+
+    /// Time until the current partial batch must flush (consumers can
+    /// sleep this long), `None` when empty.
+    pub fn time_to_deadline(&self) -> Option<Duration> {
+        self.queue.front().map(|e| self.cfg.max_wait.saturating_sub(e.arrived.elapsed()))
+    }
+
+    /// Take up to `max_batch` items if ready (or `force`).
+    pub fn pop_batch(&mut self, force: bool) -> Option<(Vec<T>, FlushReason)> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let full = self.queue.len() >= self.cfg.max_batch;
+        let due = self
+            .queue
+            .front()
+            .map(|e| e.arrived.elapsed() >= self.cfg.max_wait)
+            .unwrap_or(false);
+        if !(full || due || force) {
+            return None;
+        }
+        let n = self.queue.len().min(self.cfg.max_batch);
+        let batch: Vec<T> = self.queue.drain(..n).map(|e| e.item).collect();
+        let reason = if full {
+            FlushReason::Full
+        } else if due {
+            FlushReason::Deadline
+        } else {
+            FlushReason::Drained
+        };
+        Some((batch, reason))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(max_batch: usize, wait_ms: u64, max_queue: usize) -> BatcherConfig {
+        BatcherConfig {
+            max_batch,
+            max_wait: Duration::from_millis(wait_ms),
+            max_queue,
+        }
+    }
+
+    #[test]
+    fn flushes_when_full() {
+        let mut b = Batcher::new(cfg(4, 1000, 100));
+        for i in 0..4 {
+            b.push(i).unwrap();
+        }
+        assert!(b.ready());
+        let (batch, reason) = b.pop_batch(false).unwrap();
+        assert_eq!(batch, vec![0, 1, 2, 3]);
+        assert_eq!(reason, FlushReason::Full);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn partial_not_ready_before_deadline() {
+        let mut b = Batcher::new(cfg(4, 1000, 100));
+        b.push(1).unwrap();
+        assert!(!b.ready());
+        assert!(b.pop_batch(false).is_none());
+        assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn deadline_flush() {
+        let mut b = Batcher::new(cfg(16, 1, 100));
+        b.push(7).unwrap();
+        std::thread::sleep(Duration::from_millis(3));
+        assert!(b.ready());
+        let (batch, reason) = b.pop_batch(false).unwrap();
+        assert_eq!(batch, vec![7]);
+        assert_eq!(reason, FlushReason::Deadline);
+    }
+
+    #[test]
+    fn force_drain() {
+        let mut b = Batcher::new(cfg(16, 10_000, 100));
+        b.push(1).unwrap();
+        b.push(2).unwrap();
+        let (batch, reason) = b.pop_batch(true).unwrap();
+        assert_eq!(batch.len(), 2);
+        assert_eq!(reason, FlushReason::Drained);
+    }
+
+    #[test]
+    fn backpressure() {
+        let mut b = Batcher::new(cfg(4, 1000, 2));
+        b.push(1).unwrap();
+        b.push(2).unwrap();
+        assert_eq!(b.push(3), Err(3));
+        assert_eq!(b.len(), 2);
+    }
+
+    #[test]
+    fn oversize_queue_flushes_in_chunks() {
+        let mut b = Batcher::new(cfg(2, 1000, 100));
+        for i in 0..5 {
+            b.push(i).unwrap();
+        }
+        assert_eq!(b.pop_batch(false).unwrap().0, vec![0, 1]);
+        assert_eq!(b.pop_batch(false).unwrap().0, vec![2, 3]);
+        assert_eq!(b.pop_batch(true).unwrap().0, vec![4]);
+        assert!(b.pop_batch(true).is_none());
+    }
+
+    #[test]
+    fn time_to_deadline_decreases() {
+        let mut b = Batcher::new(cfg(4, 50, 10));
+        assert!(b.time_to_deadline().is_none());
+        b.push(0).unwrap();
+        let d = b.time_to_deadline().unwrap();
+        assert!(d <= Duration::from_millis(50));
+    }
+}

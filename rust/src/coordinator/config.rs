@@ -1,0 +1,144 @@
+//! Engine configuration files (JSON) — the deployment-facing config
+//! system: workers, batching policy, routing policy and the model
+//! roster are declared in one file and loaded by `fullpack serve
+//! --config engine.json`.
+//!
+//! ```json
+//! {
+//!   "workers": 4,
+//!   "batcher": { "max_batch": 16, "max_wait_ms": 2, "max_queue": 1024 },
+//!   "router":  { "gemv_max_batch": 1, "disable_fullpack": false },
+//!   "models": [
+//!     { "name": "deepspeech", "variant": "w4a8", "size": "full", "seed": 7 }
+//!   ]
+//! }
+//! ```
+
+use super::{BatcherConfig, EngineConfig, RouterConfig};
+use crate::models::DeepSpeechConfig;
+use crate::pack::Variant;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+use std::time::Duration;
+
+/// One model roster entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    pub name: String,
+    pub variant: Variant,
+    pub config: DeepSpeechConfig,
+    pub seed: u64,
+}
+
+/// Parsed config file: engine knobs + model roster.
+#[derive(Debug, Clone)]
+pub struct FileConfig {
+    pub engine: EngineConfig,
+    pub models: Vec<ModelSpec>,
+}
+
+impl FileConfig {
+    pub fn parse(text: &str) -> Result<FileConfig> {
+        let j = Json::parse(text).map_err(|e| anyhow!("config JSON: {e}"))?;
+        let usize_at = |node: &Json, key: &str, default: usize| -> usize {
+            node.get(key).and_then(Json::as_usize).unwrap_or(default)
+        };
+
+        let defaults = EngineConfig::default();
+        let mut engine = EngineConfig {
+            workers: usize_at(&j, "workers", defaults.workers),
+            ..defaults
+        };
+        if let Some(b) = j.get("batcher") {
+            engine.batcher = BatcherConfig {
+                max_batch: usize_at(b, "max_batch", defaults.batcher.max_batch),
+                max_wait: Duration::from_millis(
+                    usize_at(b, "max_wait_ms", defaults.batcher.max_wait.as_millis() as usize)
+                        as u64,
+                ),
+                max_queue: usize_at(b, "max_queue", defaults.batcher.max_queue),
+            };
+        }
+        if let Some(r) = j.get("router") {
+            engine.router = RouterConfig {
+                gemv_max_batch: usize_at(r, "gemv_max_batch", defaults.router.gemv_max_batch),
+                disable_fullpack: matches!(r.get("disable_fullpack"), Some(Json::Bool(true))),
+            };
+        }
+
+        let mut models = Vec::new();
+        if let Some(arr) = j.get("models").and_then(Json::as_arr) {
+            for (i, m) in arr.iter().enumerate() {
+                let name = m
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("models[{i}] missing name"))?
+                    .to_string();
+                let variant = Variant::parse(
+                    m.get("variant").and_then(Json::as_str).unwrap_or("w4a8"),
+                )
+                .map_err(|e| anyhow!("models[{i}] variant: {e}"))?;
+                let config = match m.get("size").and_then(Json::as_str).unwrap_or("full") {
+                    "full" => DeepSpeechConfig::FULL,
+                    "tiny" => DeepSpeechConfig::TINY,
+                    other => bail!("models[{i}] size {other:?} (expected full|tiny)"),
+                };
+                let seed = m.get("seed").and_then(Json::as_usize).unwrap_or(7) as u64;
+                models.push(ModelSpec { name, variant, config, seed });
+            }
+        }
+        Ok(FileConfig { engine, models })
+    }
+
+    pub fn load(path: &str) -> Result<FileConfig> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading config {path:?}: {e}"))?;
+        Self::parse(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_config_roundtrip() {
+        let cfg = FileConfig::parse(
+            r#"{
+              "workers": 4,
+              "batcher": {"max_batch": 8, "max_wait_ms": 5, "max_queue": 32},
+              "router": {"gemv_max_batch": 2, "disable_fullpack": true},
+              "models": [
+                {"name": "ds", "variant": "w2a2", "size": "tiny", "seed": 3},
+                {"name": "ds-full", "variant": "w4a8"}
+              ]
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.engine.workers, 4);
+        assert_eq!(cfg.engine.batcher.max_batch, 8);
+        assert_eq!(cfg.engine.batcher.max_wait, Duration::from_millis(5));
+        assert_eq!(cfg.engine.router.gemv_max_batch, 2);
+        assert!(cfg.engine.router.disable_fullpack);
+        assert_eq!(cfg.models.len(), 2);
+        assert_eq!(cfg.models[0].variant, Variant::parse("w2a2").unwrap());
+        assert_eq!(cfg.models[0].config, DeepSpeechConfig::TINY);
+        assert_eq!(cfg.models[1].config, DeepSpeechConfig::FULL);
+        assert_eq!(cfg.models[1].seed, 7);
+    }
+
+    #[test]
+    fn defaults_when_sections_missing() {
+        let cfg = FileConfig::parse("{}").unwrap();
+        assert_eq!(cfg.engine.workers, EngineConfig::default().workers);
+        assert!(cfg.models.is_empty());
+    }
+
+    #[test]
+    fn bad_inputs_rejected() {
+        assert!(FileConfig::parse("not json").is_err());
+        assert!(FileConfig::parse(r#"{"models": [{"variant": "w4a8"}]}"#).is_err());
+        assert!(FileConfig::parse(r#"{"models": [{"name": "x", "size": "huge"}]}"#).is_err());
+        assert!(FileConfig::load("/no/such/file.json").is_err());
+    }
+}

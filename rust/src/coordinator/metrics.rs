@@ -1,0 +1,150 @@
+//! Serving metrics: counters and a fixed-bucket latency histogram.
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Log-spaced latency buckets in microseconds (upper bounds).
+const BUCKETS_US: [u64; 17] = [
+    50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000, 25_000, 50_000, 100_000, 250_000, 500_000,
+    1_000_000, 2_500_000, 10_000_000, u64::MAX,
+];
+
+/// Engine-wide metrics; cheap to update from worker threads.
+#[derive(Debug)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub completed: AtomicU64,
+    pub errors: AtomicU64,
+    latency_buckets: [AtomicU64; 17],
+    latency_sum_us: AtomicU64,
+    started: Mutex<Option<Instant>>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics {
+            requests: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            latency_buckets: Default::default(),
+            latency_sum_us: AtomicU64::new(0),
+            started: Mutex::new(None),
+        }
+    }
+}
+
+impl Metrics {
+    pub fn mark_started(&self) {
+        let mut s = self.started.lock().unwrap();
+        if s.is_none() {
+            *s = Some(Instant::now());
+        }
+    }
+
+    pub fn observe_latency_us(&self, us: u64) {
+        self.completed.fetch_add(1, Relaxed);
+        self.latency_sum_us.fetch_add(us, Relaxed);
+        let idx = BUCKETS_US.iter().position(|&b| us <= b).unwrap_or(BUCKETS_US.len() - 1);
+        self.latency_buckets[idx].fetch_add(1, Relaxed);
+    }
+
+    /// Approximate quantile from the histogram (upper bound of the
+    /// bucket containing the q-th observation).
+    pub fn latency_quantile_us(&self, q: f64) -> u64 {
+        let total: u64 = self.latency_buckets.iter().map(|b| b.load(Relaxed)).sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((total as f64) * q).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.latency_buckets.iter().enumerate() {
+            seen += b.load(Relaxed);
+            if seen >= target {
+                return BUCKETS_US[i];
+            }
+        }
+        BUCKETS_US[BUCKETS_US.len() - 1]
+    }
+
+    pub fn mean_latency_us(&self) -> f64 {
+        let n = self.completed.load(Relaxed);
+        if n == 0 {
+            0.0
+        } else {
+            self.latency_sum_us.load(Relaxed) as f64 / n as f64
+        }
+    }
+
+    /// Completed requests per second since the first request.
+    pub fn throughput_rps(&self) -> f64 {
+        let started = self.started.lock().unwrap();
+        match *started {
+            Some(t0) => {
+                let secs = t0.elapsed().as_secs_f64();
+                if secs > 0.0 {
+                    self.completed.load(Relaxed) as f64 / secs
+                } else {
+                    0.0
+                }
+            }
+            None => 0.0,
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        let q = |v: u64| {
+            if v == u64::MAX {
+                ">10s".to_string()
+            } else if v >= 1_000_000 {
+                format!("{:.1}s", v as f64 / 1e6)
+            } else {
+                format!("{}us", v)
+            }
+        };
+        format!(
+            "requests={} completed={} errors={} mean={:.0}us p50<={} p95<={} rps={:.1}",
+            self.requests.load(Relaxed),
+            self.completed.load(Relaxed),
+            self.errors.load(Relaxed),
+            self.mean_latency_us(),
+            q(self.latency_quantile_us(0.5)),
+            q(self.latency_quantile_us(0.95)),
+            self.throughput_rps(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_from_histogram() {
+        let m = Metrics::default();
+        for us in [40, 60, 90, 200, 400, 900, 2_000, 6_000, 20_000, 90_000] {
+            m.observe_latency_us(us);
+        }
+        assert_eq!(m.completed.load(Relaxed), 10);
+        let p50 = m.latency_quantile_us(0.5);
+        assert!(p50 <= 1_000, "p50 {p50}");
+        let p95 = m.latency_quantile_us(0.95);
+        assert!(p95 >= 25_000, "p95 {p95}");
+        assert!(m.mean_latency_us() > 0.0);
+    }
+
+    #[test]
+    fn empty_metrics() {
+        let m = Metrics::default();
+        assert_eq!(m.latency_quantile_us(0.99), 0);
+        assert_eq!(m.mean_latency_us(), 0.0);
+        assert_eq!(m.throughput_rps(), 0.0);
+    }
+
+    #[test]
+    fn huge_latency_lands_in_last_bucket() {
+        let m = Metrics::default();
+        m.observe_latency_us(u64::MAX / 2);
+        assert_eq!(m.latency_quantile_us(1.0), u64::MAX);
+    }
+}

@@ -1,0 +1,304 @@
+//! L3 serving engine — the coordinator: request queue → dynamic batcher
+//! → worker pool → per-layer routed execution (FullPack GEMV for
+//! single-batch LSTM steps, Ruy-like GEMM for the batched FC stack),
+//! with metrics and graceful shutdown.
+//!
+//! Python never appears here: models execute on the native Rust kernels
+//! or through AOT-compiled PJRT artifacts (`crate::runtime`).
+
+pub mod batcher;
+pub mod config;
+pub mod metrics;
+pub mod request;
+pub mod router;
+
+pub use batcher::{Batcher, BatcherConfig, FlushReason};
+pub use config::{FileConfig, ModelSpec};
+pub use metrics::Metrics;
+pub use request::{OpDesc, Path, Request, RequestId, Response};
+pub use router::{Router, RouterConfig};
+
+use crate::models::DeepSpeech;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed};
+use std::sync::{mpsc, Arc, Condvar, Mutex, RwLock};
+use std::time::Instant;
+
+/// Engine configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineConfig {
+    pub workers: usize,
+    pub batcher: BatcherConfig,
+    pub router: RouterConfig,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            workers: 2,
+            batcher: BatcherConfig::default(),
+            router: RouterConfig::default(),
+        }
+    }
+}
+
+type Reply = mpsc::Sender<Result<Response>>;
+
+struct Shared {
+    batcher: Mutex<Batcher<(Request, Reply)>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+    models: RwLock<HashMap<String, Arc<DeepSpeech>>>,
+    metrics: Metrics,
+    router: Router,
+}
+
+/// The serving engine.
+pub struct Engine {
+    shared: Arc<Shared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    next_id: AtomicU64,
+}
+
+impl Engine {
+    pub fn new(config: EngineConfig) -> Engine {
+        let shared = Arc::new(Shared {
+            batcher: Mutex::new(Batcher::new(config.batcher)),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            models: RwLock::new(HashMap::new()),
+            metrics: Metrics::default(),
+            router: Router::new(config.router),
+        });
+        let workers = (0..config.workers.max(1))
+            .map(|i| {
+                let s = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("fullpack-worker-{i}"))
+                    .spawn(move || worker_loop(s))
+                    .expect("spawn worker")
+            })
+            .collect();
+        Engine { shared, workers, next_id: AtomicU64::new(1) }
+    }
+
+    /// Register (or replace) a model under a name.
+    pub fn register_model(&self, name: &str, model: DeepSpeech) {
+        self.shared
+            .models
+            .write()
+            .unwrap()
+            .insert(name.to_string(), Arc::new(model));
+    }
+
+    pub fn model(&self, name: &str) -> Option<Arc<DeepSpeech>> {
+        self.shared.models.read().unwrap().get(name).cloned()
+    }
+
+    /// Submit asynchronously; the receiver yields the response.
+    pub fn submit(&self, model: &str, frames: Vec<f32>) -> Result<mpsc::Receiver<Result<Response>>> {
+        let (tx, rx) = mpsc::channel();
+        let req = Request {
+            id: self.next_id.fetch_add(1, Relaxed),
+            model: model.to_string(),
+            frames,
+            arrived: Instant::now(),
+        };
+        self.shared.metrics.mark_started();
+        self.shared.metrics.requests.fetch_add(1, Relaxed);
+        {
+            let mut b = self.shared.batcher.lock().unwrap();
+            b.push((req, tx)).map_err(|_| anyhow!("queue full (backpressure)"))?;
+        }
+        self.shared.cv.notify_one();
+        Ok(rx)
+    }
+
+    /// Synchronous convenience wrapper.
+    pub fn infer(&self, model: &str, frames: Vec<f32>) -> Result<Response> {
+        self.submit(model, frames)?
+            .recv()
+            .map_err(|_| anyhow!("engine dropped request"))?
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.shared.metrics
+    }
+
+    pub fn router(&self) -> &Router {
+        &self.shared.router
+    }
+
+    /// Drain and stop the workers.
+    pub fn shutdown(mut self) {
+        self.shared.shutdown.store(true, Relaxed);
+        self.shared.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Relaxed);
+        self.shared.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(s: Arc<Shared>) {
+    loop {
+        let batch = {
+            let mut b = s.batcher.lock().unwrap();
+            loop {
+                if let Some((batch, _reason)) = b.pop_batch(s.shutdown.load(Relaxed)) {
+                    break Some(batch);
+                }
+                if s.shutdown.load(Relaxed) {
+                    break None;
+                }
+                let wait = b
+                    .time_to_deadline()
+                    .unwrap_or(std::time::Duration::from_millis(50))
+                    .max(std::time::Duration::from_micros(100));
+                let (guard, _timeout) = s.cv.wait_timeout(b, wait).unwrap();
+                b = guard;
+            }
+        };
+        let Some(batch) = batch else { return };
+        for (req, reply) in batch {
+            let result = process(&s, &req);
+            if result.is_err() {
+                s.metrics.errors.fetch_add(1, Relaxed);
+            }
+            let _ = reply.send(result);
+        }
+    }
+}
+
+fn process(s: &Shared, req: &Request) -> Result<Response> {
+    let model = s
+        .models
+        .read()
+        .unwrap()
+        .get(&req.model)
+        .cloned()
+        .ok_or_else(|| anyhow!("unknown model {:?}", req.model))?;
+    let queue_ns = req.arrived.elapsed().as_nanos();
+    let expected = model.config.time_steps * model.config.n_input;
+    if req.frames.len() != expected {
+        return Err(anyhow!(
+            "frames len {} != time_steps*n_input {}",
+            req.frames.len(),
+            expected
+        ));
+    }
+    // route per layer (stats only — the model's forward applies the
+    // identical policy internally, mirroring the paper's §4.6 split)
+    for layer in &model.layers {
+        let batch = match layer.kind {
+            crate::models::LayerKind::FcBatch => model.config.time_steps,
+            crate::models::LayerKind::LstmStep => 1,
+        };
+        s.router.route(&OpDesc {
+            batch,
+            z: layer.z,
+            k: layer.k,
+            sub_byte: model.variant.w.is_sub_byte() || model.variant.a.is_sub_byte(),
+        });
+    }
+    let t0 = Instant::now();
+    let (logits, layer_times) = model.forward_timed(&req.frames);
+    let total_ns = queue_ns + t0.elapsed().as_nanos();
+    s.metrics.observe_latency_us((total_ns / 1_000) as u64);
+    Ok(Response { id: req.id, logits, layer_times, queue_ns, total_ns })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::DeepSpeechConfig;
+    use crate::pack::Variant;
+
+    fn tiny_engine(variant: &str) -> Engine {
+        let e = Engine::new(EngineConfig {
+            workers: 2,
+            batcher: BatcherConfig {
+                max_batch: 4,
+                max_wait: std::time::Duration::from_millis(1),
+                max_queue: 64,
+            },
+            router: RouterConfig::default(),
+        });
+        let m = DeepSpeech::new(DeepSpeechConfig::TINY, Variant::parse(variant).unwrap(), 5);
+        e.register_model("deepspeech", m);
+        e
+    }
+
+    fn frames() -> Vec<f32> {
+        let cfg = DeepSpeechConfig::TINY;
+        (0..cfg.time_steps * cfg.n_input).map(|i| (i as f32 * 0.01).sin()).collect()
+    }
+
+    #[test]
+    fn infer_roundtrip() {
+        let e = tiny_engine("w4a8");
+        let r = e.infer("deepspeech", frames()).unwrap();
+        let cfg = DeepSpeechConfig::TINY;
+        assert_eq!(r.logits.len(), cfg.time_steps * cfg.n_output);
+        assert_eq!(r.layer_times.len(), 6);
+        assert!(r.total_ns > 0);
+        assert_eq!(e.metrics().completed.load(Relaxed), 1);
+        let (gemv, gemm) = e.router().counts();
+        assert_eq!(gemv, 1); // the LSTM layer
+        assert_eq!(gemm, 5); // the five FC layers
+    }
+
+    #[test]
+    fn unknown_model_is_error() {
+        let e = tiny_engine("w4a8");
+        assert!(e.infer("nope", frames()).is_err());
+        assert_eq!(e.metrics().errors.load(Relaxed), 1);
+    }
+
+    #[test]
+    fn bad_frame_len_is_error() {
+        let e = tiny_engine("w4a8");
+        assert!(e.infer("deepspeech", vec![0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn concurrent_submissions_all_complete() {
+        let e = tiny_engine("w2a2");
+        let rxs: Vec<_> = (0..16).map(|_| e.submit("deepspeech", frames()).unwrap()).collect();
+        let mut ok = 0;
+        for rx in rxs {
+            let r = rx.recv().unwrap().unwrap();
+            assert!(r.logits.iter().all(|x| x.is_finite()));
+            ok += 1;
+        }
+        assert_eq!(ok, 16);
+        assert_eq!(e.metrics().completed.load(Relaxed), 16);
+        assert!(e.metrics().throughput_rps() > 0.0);
+    }
+
+    #[test]
+    fn shutdown_drains() {
+        let e = tiny_engine("w1a1");
+        let rx = e.submit("deepspeech", frames()).unwrap();
+        e.shutdown();
+        // the queued request was served before exit
+        assert!(rx.recv().unwrap().is_ok());
+    }
+
+    #[test]
+    fn deterministic_across_engines() {
+        let a = tiny_engine("w4a8").infer("deepspeech", frames()).unwrap().logits;
+        let b = tiny_engine("w4a8").infer("deepspeech", frames()).unwrap().logits;
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,56 @@
+//! Request/response types for the serving engine.
+
+use std::time::Instant;
+
+/// Unique request id.
+pub type RequestId = u64;
+
+/// An inference request: a window of audio feature frames for a named
+/// model (the DeepSpeech-style workload of §4.6).
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: RequestId,
+    pub model: String,
+    /// `time_steps × n_input` row-major f32 feature frames
+    pub frames: Vec<f32>,
+    /// enqueue timestamp (set by the engine)
+    pub arrived: Instant,
+}
+
+/// Per-layer timing entry: (layer name, nanoseconds).
+pub type LayerTiming = (&'static str, u128);
+
+/// The response: logits plus the per-layer breakdown (paper Fig. 10).
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: RequestId,
+    /// `time_steps × n_output` logits
+    pub logits: Vec<f32>,
+    pub layer_times: Vec<LayerTiming>,
+    /// queueing delay before a worker picked the request up
+    pub queue_ns: u128,
+    /// total service time (queue + compute)
+    pub total_ns: u128,
+}
+
+/// What kind of linear-algebra call a layer needs — the router's input
+/// (paper §4.6: GEMV single-batch vs GEMM multi-batch).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OpDesc {
+    pub batch: usize,
+    pub z: usize,
+    pub k: usize,
+    /// weight/activation bit-widths are sub-byte?
+    pub sub_byte: bool,
+}
+
+/// The execution path the router chose.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Path {
+    /// single-batch sub-byte → FullPack GEMV kernels
+    FullPackGemv,
+    /// multi-batch (or 8-bit single-batch) → Ruy-like W8A8 GEMM
+    RuyGemm,
+    /// FP32 fallback
+    F32,
+}

@@ -1,0 +1,92 @@
+//! Path router — the paper's §4.6 execution policy as a first-class
+//! component: single-batch sub-byte ops take the FullPack GEMV kernels;
+//! multi-batch ops take the Ruy-like W8A8 GEMM path ("FullPack does not
+//! support GEMM, so we used Ruy-W8A8 for the GEMM operations"); pure
+//! f32 models fall through to the FP32 kernels.
+
+use super::request::{OpDesc, Path};
+
+/// Routing policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct RouterConfig {
+    /// largest batch still routed to the GEMV path (paper: 1)
+    pub gemv_max_batch: usize,
+    /// force everything onto the baseline path (ablation switch)
+    pub disable_fullpack: bool,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig { gemv_max_batch: 1, disable_fullpack: false }
+    }
+}
+
+/// Stateless router (kept as a struct for config + stats).
+#[derive(Debug, Default)]
+pub struct Router {
+    pub config: RouterConfig,
+    pub gemv_routed: std::sync::atomic::AtomicU64,
+    pub gemm_routed: std::sync::atomic::AtomicU64,
+}
+
+impl Router {
+    pub fn new(config: RouterConfig) -> Self {
+        Router { config, ..Default::default() }
+    }
+
+    /// Choose the execution path for one op.
+    pub fn route(&self, op: &OpDesc) -> Path {
+        use std::sync::atomic::Ordering::Relaxed;
+        if !op.sub_byte {
+            self.gemm_routed.fetch_add(1, Relaxed);
+            return Path::RuyGemm;
+        }
+        if self.config.disable_fullpack || op.batch > self.config.gemv_max_batch {
+            self.gemm_routed.fetch_add(1, Relaxed);
+            Path::RuyGemm
+        } else {
+            self.gemv_routed.fetch_add(1, Relaxed);
+            Path::FullPackGemv
+        }
+    }
+
+    pub fn counts(&self) -> (u64, u64) {
+        use std::sync::atomic::Ordering::Relaxed;
+        (self.gemv_routed.load(Relaxed), self.gemm_routed.load(Relaxed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn op(batch: usize, sub_byte: bool) -> OpDesc {
+        OpDesc { batch, z: 2048, k: 2048, sub_byte }
+    }
+
+    #[test]
+    fn paper_policy() {
+        let r = Router::default();
+        // single-batch sub-byte LSTM step -> FullPack
+        assert_eq!(r.route(&op(1, true)), Path::FullPackGemv);
+        // batch-16 FC -> Ruy GEMM even when quantized sub-byte
+        assert_eq!(r.route(&op(16, true)), Path::RuyGemm);
+        // 8-bit ops always take the baseline
+        assert_eq!(r.route(&op(1, false)), Path::RuyGemm);
+        let (gemv, gemm) = r.counts();
+        assert_eq!((gemv, gemm), (1, 2));
+    }
+
+    #[test]
+    fn ablation_switch() {
+        let r = Router::new(RouterConfig { disable_fullpack: true, ..Default::default() });
+        assert_eq!(r.route(&op(1, true)), Path::RuyGemm);
+    }
+
+    #[test]
+    fn batch_threshold() {
+        let r = Router::new(RouterConfig { gemv_max_batch: 4, ..Default::default() });
+        assert_eq!(r.route(&op(4, true)), Path::FullPackGemv);
+        assert_eq!(r.route(&op(5, true)), Path::RuyGemm);
+    }
+}

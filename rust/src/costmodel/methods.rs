@@ -1,0 +1,344 @@
+//! Per-method traffic and instruction-mix models for every method the
+//! paper compares (§4.1), plus the naive Alg. 1 strawman as an ablation.
+
+use crate::pack::Variant;
+use crate::sim::GemvTraffic;
+
+/// One of the compared execution methods.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// our kernels, any of the nine W/A variants
+    FullPack(Variant),
+    /// Alg. 1 adjacent packing with scalar extraction (ablation)
+    Naive(Variant),
+    /// ULPPACK— (Won et al. 2022): spacer-lane GEMM, batch 8 per the
+    /// paper's evaluation protocol; `bits` ∈ {1, 2, 3}
+    Ulppack { bits: u8 },
+    RuyW8A8,
+    XnnW8A8,
+    TfliteW8A8,
+    GemmlowpW8A8,
+    RuyF32,
+    XnnF32,
+    TfliteF32,
+    EigenF32,
+}
+
+impl Method {
+    /// Convenience constructor: `Method::fullpack("w4a8")`.
+    pub fn fullpack(v: &str) -> Method {
+        Method::FullPack(Variant::parse(v).expect("valid variant"))
+    }
+
+    /// Display name matching the paper's legend.
+    pub fn label(&self) -> String {
+        match self {
+            Method::FullPack(v) => format!("FullPack-{}", v.name().to_uppercase()),
+            Method::Naive(v) => format!("Naive-{}", v.name().to_uppercase()),
+            Method::Ulppack { bits } => format!("ULPPACK-W{bits}A{bits}"),
+            Method::RuyW8A8 => "Ruy-W8A8".into(),
+            Method::XnnW8A8 => "XNNPack-W8A8".into(),
+            Method::TfliteW8A8 => "TFLite-W8A8".into(),
+            Method::GemmlowpW8A8 => "GEMMLOWP-W8A8".into(),
+            Method::RuyF32 => "Ruy-FP32".into(),
+            Method::XnnF32 => "XNNPack-FP32".into(),
+            Method::TfliteF32 => "TFLite-FP32".into(),
+            Method::EigenF32 => "Eigen-FP32".into(),
+        }
+    }
+
+    /// The ten methods of Fig. 4 (baseline first), using the paper's
+    /// ULPPACK bit-widths.
+    pub fn fig4_lineup() -> Vec<Method> {
+        vec![
+            Method::RuyW8A8,
+            Method::fullpack("w4a8"),
+            Method::XnnW8A8,
+            Method::TfliteW8A8,
+            Method::GemmlowpW8A8,
+            Method::RuyF32,
+            Method::XnnF32,
+            Method::TfliteF32,
+            Method::EigenF32,
+            Method::Ulppack { bits: 1 },
+            Method::Ulppack { bits: 2 },
+            Method::Ulppack { bits: 3 },
+        ]
+    }
+
+    /// Bytes of weight storage per row of a depth-`k` layer.
+    pub fn weight_bytes_per_row(&self, k: usize) -> usize {
+        match self {
+            Method::FullPack(v) | Method::Naive(v) => v.w.packed_bytes(v.padded_depth(k)),
+            Method::Ulppack { .. } => k, // 1 byte/value in a u16 half-lane
+            Method::RuyW8A8 | Method::XnnW8A8 | Method::TfliteW8A8 | Method::GemmlowpW8A8 => k,
+            Method::RuyF32 | Method::XnnF32 | Method::TfliteF32 | Method::EigenF32 => 4 * k,
+        }
+    }
+
+    /// Bytes of one activation vector of logical depth `k`.
+    pub fn act_bytes(&self, k: usize) -> usize {
+        match self {
+            Method::FullPack(v) | Method::Naive(v) => v.a.packed_bytes(v.padded_depth(k)),
+            Method::Ulppack { .. } => k,
+            Method::RuyW8A8 | Method::XnnW8A8 | Method::TfliteW8A8 | Method::GemmlowpW8A8 => k,
+            Method::RuyF32 | Method::XnnF32 | Method::TfliteF32 | Method::EigenF32 => 4 * k,
+        }
+    }
+
+    /// Batch columns per weight pass (1 except ULPPACK—'s batch-8 GEMM).
+    pub fn batch(&self) -> usize {
+        match self {
+            Method::Ulppack { .. } => 8,
+            _ => 1,
+        }
+    }
+
+    /// Memory traffic of one inference call on a `z × k` layer.
+    pub fn traffic(&self, z: usize, k: usize) -> GemvTraffic {
+        GemvTraffic {
+            z,
+            w_bytes_per_row: self.weight_bytes_per_row(k),
+            a_bytes: self.act_bytes(k),
+            batch: self.batch(),
+            out_elem_bytes: 4,
+        }
+    }
+
+    /// Instruction mix of one inference call on a `z × k` layer.
+    pub fn instr_mix(&self, z: usize, k: usize) -> InstrMix {
+        let zf = z as f64;
+        let kf = k as f64;
+        // per-row fixed overhead: accumulator setup, 16-lane reduction,
+        // result store, loop bookkeeping
+        let row_overhead = InstrMix { loads: 0.0, stores: 1.0, macs: 0.0, alus: 4.0, scalar: 6.0 };
+        let per_row: InstrMix = match self {
+            Method::FullPack(v) => {
+                let kp = v.padded_depth(k) as f64;
+                match (v.w.is_sub_byte(), v.a.is_sub_byte()) {
+                    (true, false) => {
+                        // W-sub × A8: per block of G = 16·E elements:
+                        // 1 weight load + E act loads, 2E-1 shifts, 2E
+                        // widening MACs, 2 bookkeeping
+                        let e = v.w.elems_per_byte() as f64;
+                        let blocks = kp / (16.0 * e);
+                        InstrMix {
+                            loads: blocks * (1.0 + e),
+                            stores: 0.0,
+                            macs: blocks * 2.0 * e,
+                            alus: blocks * (2.0 * e - 1.0),
+                            scalar: blocks * 2.0,
+                        }
+                    }
+                    (false, true) => {
+                        let e = v.a.elems_per_byte() as f64;
+                        let blocks = kp / (16.0 * e);
+                        InstrMix {
+                            loads: blocks * (e + 1.0),
+                            stores: 0.0,
+                            macs: blocks * 2.0 * e,
+                            alus: blocks * (2.0 * e - 1.0),
+                            scalar: blocks * 2.0,
+                        }
+                    }
+                    (true, true) => {
+                        let e = v.w.elems_per_byte() as f64;
+                        let blocks = kp / (16.0 * e);
+                        InstrMix {
+                            loads: blocks * 2.0,
+                            stores: 0.0,
+                            macs: blocks * 2.0 * e,
+                            alus: blocks * 2.0 * (2.0 * e - 1.0),
+                            scalar: blocks * 2.0,
+                        }
+                    }
+                    (false, false) => per16(kf, 2.0, 2.0, 0.0, 0.75), // = Ruy
+                }
+            }
+            Method::Naive(v) => {
+                // Alg. 1: scalar extraction — per element ~1.5 shift, 1
+                // scalar MAC, 1.5 loads amortized, heavy bookkeeping
+                let e = v.w.elems_per_byte().max(v.a.elems_per_byte()) as f64;
+                let _ = e;
+                InstrMix {
+                    loads: kf * 1.5,
+                    stores: 0.0,
+                    macs: kf,
+                    alus: kf * 2.0,
+                    scalar: kf,
+                }
+            }
+            // ULPPACK: per 16 values (8 u16 lanes): 2 loads, 2 lane
+            // MAC/acc ops, extraction every S lanes (~6 ALU per event),
+            // per-batch-column; zero-point correction folded into
+            // row_overhead scale below.
+            Method::Ulppack { bits } => {
+                let s = (255usize / ((((1usize << bits) - 1).pow(2)).max(1))).max(1) as f64;
+                let per_col = InstrMix {
+                    loads: kf / 16.0 * 2.0,
+                    stores: 0.0,
+                    macs: kf / 16.0 * 2.0,
+                    alus: (kf / 2.0 / s) * 6.0,
+                    scalar: kf / 16.0,
+                };
+                per_col.scale(self.batch() as f64)
+            }
+            Method::RuyW8A8 => per16(kf, 2.0, 2.0, 0.0, 0.75),
+            Method::XnnW8A8 => per16(kf, 1.25, 2.0, 0.0, 0.125),
+            Method::TfliteW8A8 => per16(kf, 2.0, 2.0, 2.0, 4.0),
+            Method::GemmlowpW8A8 => {
+                // Ruy + the pack-to-temp pass (1 extra load+store/16B)
+                let mut m = per16(kf, 3.0, 2.0, 0.0, 1.25);
+                m.stores += kf / 16.0;
+                m
+            }
+            Method::RuyF32 => per16(kf, 8.0, 4.0, 0.0, 1.0),
+            Method::XnnF32 => per16(kf, 5.0, 4.0, 0.0, 0.5),
+            Method::EigenF32 => per16(kf, 5.25, 4.0, 0.0, 1.0),
+            Method::TfliteF32 => per16(kf, 8.0, 4.0, 4.0, 6.0),
+        };
+        let overhead_scale = self.batch() as f64;
+        per_row.add(&row_overhead.scale(overhead_scale)).scale(zf)
+    }
+}
+
+/// Helper: a mix expressed per 16 logical elements.
+fn per16(k: f64, loads: f64, macs: f64, alus: f64, scalar: f64) -> InstrMix {
+    let u = k / 16.0;
+    InstrMix { loads: u * loads, stores: 0.0, macs: u * macs, alus: u * alus, scalar: u * scalar }
+}
+
+/// Instruction counts by pipeline class, for one GEMV call.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct InstrMix {
+    /// 16-byte vector loads
+    pub loads: f64,
+    /// stores
+    pub stores: f64,
+    /// widening multiply-accumulate ops (NEON smlal class)
+    pub macs: f64,
+    /// vector ALU ops: shifts, adds, reductions
+    pub alus: f64,
+    /// scalar bookkeeping: address increments, branches, moves
+    pub scalar: f64,
+}
+
+impl InstrMix {
+    pub fn total(&self) -> f64 {
+        self.loads + self.stores + self.macs + self.alus + self.scalar
+    }
+
+    pub fn scale(&self, f: f64) -> InstrMix {
+        InstrMix {
+            loads: self.loads * f,
+            stores: self.stores * f,
+            macs: self.macs * f,
+            alus: self.alus * f,
+            scalar: self.scalar * f,
+        }
+    }
+
+    pub fn add(&self, o: &InstrMix) -> InstrMix {
+        InstrMix {
+            loads: self.loads + o.loads,
+            stores: self.stores + o.stores,
+            macs: self.macs + o.macs,
+            alus: self.alus + o.alus,
+            scalar: self.scalar + o.scalar,
+        }
+    }
+}
+
+/// All FullPack variants + key rivals, used by several figure harnesses.
+pub fn all_methods() -> Vec<Method> {
+    let mut v: Vec<Method> = Variant::PAPER_VARIANTS.iter().copied().map(Method::FullPack).collect();
+    v.extend(Method::fig4_lineup());
+    v
+}
+
+/// The weight footprint in bytes of a `z × k` layer under this method —
+/// the quantity behind the Fig. 6 "fits in LLC" boundary.
+pub fn weight_footprint(method: Method, z: usize, k: usize) -> usize {
+    z * method.weight_bytes_per_row(k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_match_paper_legend() {
+        assert_eq!(Method::RuyW8A8.label(), "Ruy-W8A8");
+        assert_eq!(Method::fullpack("w4a8").label(), "FullPack-W4A8");
+        assert_eq!(Method::Ulppack { bits: 3 }.label(), "ULPPACK-W3A3");
+    }
+
+    #[test]
+    fn traffic_scales_with_bits() {
+        let k = 2048;
+        let w8 = Method::RuyW8A8.weight_bytes_per_row(k);
+        assert_eq!(Method::fullpack("w4a8").weight_bytes_per_row(k), w8 / 2);
+        assert_eq!(Method::fullpack("w2a2").weight_bytes_per_row(k), w8 / 4);
+        assert_eq!(Method::fullpack("w1a1").weight_bytes_per_row(k), w8 / 8);
+        assert_eq!(Method::RuyF32.weight_bytes_per_row(k), w8 * 4);
+        // ULPPACK stores 1 byte per value despite sub-byte data
+        assert_eq!(Method::Ulppack { bits: 2 }.weight_bytes_per_row(k), w8);
+    }
+
+    #[test]
+    fn instr_count_monotone_in_size() {
+        let m = Method::fullpack("w4a8");
+        let a = m.instr_mix(256, 256).total();
+        let b = m.instr_mix(512, 512).total();
+        assert!(b > 3.0 * a);
+    }
+
+    #[test]
+    fn fullpack_w8a8_degenerates_to_ruy() {
+        let f = Method::fullpack("w8a8").instr_mix(128, 256);
+        let r = Method::RuyW8A8.instr_mix(128, 256);
+        assert_eq!(f, r);
+    }
+
+    #[test]
+    fn subbyte_variants_fewer_loads_more_alus() {
+        let k = 2048;
+        let z = 128;
+        let full = Method::fullpack("w4a8").instr_mix(z, k);
+        let ruy = Method::RuyW8A8.instr_mix(z, k);
+        assert!(full.loads < ruy.loads, "packed loads fewer");
+        assert!(full.alus > ruy.alus, "extraction shifts extra");
+    }
+
+    #[test]
+    fn w1a1_vs_w4a4_instruction_ratio() {
+        // paper §4.5 discussion: W1A1's extraction overhead keeps its
+        // instruction count near W4A4's despite 4x fewer bytes.
+        let a = Method::fullpack("w1a1").instr_mix(2048, 2048).total();
+        let b = Method::fullpack("w4a4").instr_mix(2048, 2048).total();
+        let r = a / b;
+        assert!((0.6..1.3).contains(&r), "ratio {r}");
+    }
+
+    #[test]
+    fn ulppack_batch8() {
+        assert_eq!(Method::Ulppack { bits: 2 }.batch(), 8);
+        assert_eq!(Method::RuyW8A8.batch(), 1);
+        let t = Method::Ulppack { bits: 2 }.traffic(64, 64);
+        assert_eq!(t.batch, 8);
+    }
+
+    #[test]
+    fn footprint_boundary() {
+        // 2048x2048: 4MB at W8A8 (spills 2MB L2), 2MB at W4A8 (fits-ish)
+        assert_eq!(weight_footprint(Method::RuyW8A8, 2048, 2048), 4 << 20);
+        assert_eq!(weight_footprint(Method::fullpack("w4a8"), 2048, 2048), 2 << 20);
+    }
+
+    #[test]
+    fn lineup_has_all_rivals() {
+        let lineup = Method::fig4_lineup();
+        assert_eq!(lineup.len(), 12);
+        assert_eq!(lineup[0], Method::RuyW8A8);
+    }
+}

@@ -1,0 +1,103 @@
+//! Figure/table harnesses: one function per figure of the paper's
+//! evaluation (§4), each returning printable tables with the same
+//! rows/series the paper reports.  DESIGN.md §5 maps figure → harness.
+//!
+//! Simulated figures (4–8, 12, 13) run on the cache simulator + cost
+//! model (the gem5 stand-in); measured figures (11, and the measured
+//! variant of 10) run the native kernels under the wall clock.
+
+pub mod e2e;
+pub mod ondevice;
+pub mod sweeps;
+
+use crate::costmodel::{simulate_gemv, CoreModel, Method, SimResult};
+use crate::sim::CachePreset;
+use crate::util::bench::Table;
+
+/// Default IO-size grid of the Fig. 4/5/6/12/13 sweeps.
+pub const SIZES: [usize; 6] = [128, 256, 512, 1024, 2048, 4096];
+
+/// Reduced grid for `--quick` runs and tests.
+pub const SIZES_QUICK: [usize; 3] = [256, 1024, 4096];
+
+/// Steady-state warmup calls before measuring (weights resident if they
+/// fit the LLC — the regime the paper's inference benchmarks measure).
+pub const STEADY_CALLS: usize = 3;
+
+/// One simulated sweep cell.
+#[derive(Debug, Clone, Copy)]
+pub struct Cell {
+    pub z: usize,
+    pub k: usize,
+    pub result: SimResult,
+}
+
+/// Run `method` over a `sizes × sizes` grid.
+pub fn sweep(method: Method, sizes: &[usize], preset: CachePreset, core: &CoreModel) -> Vec<Cell> {
+    let mut cells = Vec::with_capacity(sizes.len() * sizes.len());
+    for &z in sizes {
+        for &k in sizes {
+            cells.push(Cell { z, k, result: simulate_gemv(method, z, k, preset, core, STEADY_CALLS) });
+        }
+    }
+    cells
+}
+
+/// Render a per-method grid of `value(cell, baseline_cell)` as a table
+/// with `k` columns and `z` rows (the paper's heatmap layout).
+pub fn grid_table(
+    title: &str,
+    sizes: &[usize],
+    cells: &[Cell],
+    base: &[Cell],
+    value: impl Fn(&SimResult, &SimResult) -> f64,
+) -> Table {
+    let mut headers = vec![format!("{title} z\\k")];
+    headers.extend(sizes.iter().map(|k| k.to_string()));
+    let mut t = Table::new(headers);
+    for (zi, &z) in sizes.iter().enumerate() {
+        let mut row = vec![z.to_string()];
+        for ki in 0..sizes.len() {
+            let c = &cells[zi * sizes.len() + ki];
+            let b = &base[zi * sizes.len() + ki];
+            row.push(format!("{:.2}", value(&c.result, &b.result)));
+        }
+        t.row(row);
+    }
+    t
+}
+
+/// Geometric mean of a grid metric (the paper quotes average speedups).
+pub fn geomean(cells: &[Cell], base: &[Cell], value: impl Fn(&SimResult, &SimResult) -> f64) -> f64 {
+    let logs: f64 = cells
+        .iter()
+        .zip(base)
+        .map(|(c, b)| value(&c.result, &b.result).max(1e-12).ln())
+        .sum();
+    (logs / cells.len() as f64).exp()
+}
+
+/// speedup = T_baseline / T_case (paper Fig. 4 caption).
+pub fn speedup(case: &SimResult, base: &SimResult) -> f64 {
+    base.cycles / case.cycles
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_and_geomean() {
+        let core = CoreModel::ex5_big();
+        let base = sweep(Method::RuyW8A8, &SIZES_QUICK, CachePreset::Gem5Ex5Big, &core);
+        let full = sweep(Method::fullpack("w4a8"), &SIZES_QUICK, CachePreset::Gem5Ex5Big, &core);
+        assert_eq!(base.len(), 9);
+        let g = geomean(&base, &full, speedup); // baseline vs fullpack < 1
+        let g_inv = geomean(&full, &base, speedup);
+        assert!(g_inv > 1.0, "FullPack-W4A8 mean speedup {g_inv}");
+        assert!((g * g_inv - 1.0).abs() < 1e-9);
+        let t = grid_table("w4a8", &SIZES_QUICK, &full, &base, speedup);
+        let s = t.render();
+        assert!(s.contains("4096"));
+    }
+}

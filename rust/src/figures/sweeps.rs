@@ -1,0 +1,282 @@
+//! The simulated sweep figures: Fig. 4 (speedup heatmaps for all
+//! methods), Fig. 5 (what to quantize), Fig. 6 (LLC metrics), Fig. 7
+//! (LLC size/hierarchy sweep), Fig. 8 (narrower bit-widths), Fig. 12
+//! (instruction counts), Fig. 13 (IPC).
+
+use super::{geomean, grid_table, speedup, sweep};
+use crate::costmodel::{CoreModel, Method};
+use crate::sim::CachePreset;
+use crate::util::bench::Table;
+
+/// A figure's rendered output: named tables + headline numbers.
+pub struct FigureReport {
+    pub id: &'static str,
+    pub tables: Vec<(String, Table)>,
+    pub headlines: Vec<(String, f64)>,
+}
+
+impl FigureReport {
+    pub fn print(&self) {
+        println!("=== {} ===", self.id);
+        for (name, t) in &self.tables {
+            println!("\n-- {name}");
+            t.print();
+        }
+        for (name, v) in &self.headlines {
+            println!("{name}: {v:.3}");
+        }
+        println!();
+    }
+}
+
+fn core() -> CoreModel {
+    CoreModel::ex5_big()
+}
+
+/// Fig. 4: speedup of every method vs Ruy-W8A8 over the IO-size grid.
+pub fn fig4(sizes: &[usize]) -> FigureReport {
+    let c = core();
+    let base = sweep(Method::RuyW8A8, sizes, CachePreset::Gem5Ex5Big, &c);
+    let mut tables = Vec::new();
+    let mut headlines = Vec::new();
+    for m in Method::fig4_lineup().into_iter().skip(1) {
+        let cells = sweep(m, sizes, CachePreset::Gem5Ex5Big, &c);
+        let g = geomean(&cells, &base, speedup);
+        tables.push((
+            format!("{} speedup vs Ruy-W8A8", m.label()),
+            grid_table(&m.label(), sizes, &cells, &base, speedup),
+        ));
+        headlines.push((format!("{} geomean speedup", m.label()), g));
+    }
+    FigureReport { id: "fig4", tables, headlines }
+}
+
+/// Fig. 5: W4A8 vs W8A4 vs W4A4 — what to quantize.
+pub fn fig5(sizes: &[usize]) -> FigureReport {
+    let c = core();
+    let base = sweep(Method::RuyW8A8, sizes, CachePreset::Gem5Ex5Big, &c);
+    let mut tables = Vec::new();
+    let mut headlines = Vec::new();
+    for v in ["w4a8", "w8a4", "w4a4"] {
+        let m = Method::fullpack(v);
+        let cells = sweep(m, sizes, CachePreset::Gem5Ex5Big, &c);
+        headlines.push((format!("{} geomean speedup", m.label()), geomean(&cells, &base, speedup)));
+        tables.push((
+            format!("{} speedup vs Ruy-W8A8", m.label()),
+            grid_table(v, sizes, &cells, &base, speedup),
+        ));
+    }
+    FigureReport { id: "fig5", tables, headlines }
+}
+
+/// Fig. 6: LLC access / miss / miss-rate / miss-latency ratios
+/// (M_case / M_baseline) for W4A8, W8A4, W4A4.
+pub fn fig6(sizes: &[usize]) -> FigureReport {
+    let c = core();
+    let base = sweep(Method::RuyW8A8, sizes, CachePreset::Gem5Ex5Big, &c);
+    let mut tables = Vec::new();
+    let mut headlines = Vec::new();
+    let metrics: [(&str, fn(&super::SimResult, &super::SimResult) -> f64); 4] = [
+        ("LLC accesses", |a, b| a.llc.accesses as f64 / b.llc.accesses.max(1) as f64),
+        ("LLC misses", |a, b| a.llc.misses as f64 / b.llc.misses.max(1) as f64),
+        ("LLC miss rate", |a, b| a.llc.miss_rate() / b.llc.miss_rate().max(1e-12)),
+        ("LLC miss latency", |a, b| {
+            a.llc.miss_latency_total as f64 / b.llc.miss_latency_total.max(1) as f64
+        }),
+    ];
+    for v in ["w4a8", "w8a4", "w4a4"] {
+        let m = Method::fullpack(v);
+        let cells = sweep(m, sizes, CachePreset::Gem5Ex5Big, &c);
+        for (name, f) in metrics {
+            tables.push((
+                format!("{} {name} ratio vs baseline", m.label()),
+                grid_table(v, sizes, &cells, &base, f),
+            ));
+        }
+        // headline: access reduction at the largest size (paper: ~0.5)
+        let last = cells.len() - 1;
+        headlines.push((
+            format!("{} largest-size access ratio", m.label()),
+            cells[last].result.llc.accesses as f64 / base[last].result.llc.accesses.max(1) as f64,
+        ));
+    }
+    FigureReport { id: "fig6", tables, headlines }
+}
+
+/// Fig. 7: FullPack-W4A4 speedup under different LLC sizes/hierarchies.
+pub fn fig7(sizes: &[usize]) -> FigureReport {
+    let c = core();
+    let m = Method::fullpack("w4a4");
+    let mut tables = Vec::new();
+    let mut headlines = Vec::new();
+    for preset in [
+        CachePreset::L21M,
+        CachePreset::Gem5Ex5Big,
+        CachePreset::L28M,
+        CachePreset::Gem5Ex5BigL3,
+        CachePreset::L1Only,
+    ] {
+        let base = sweep(Method::RuyW8A8, sizes, preset, &c);
+        let cells = sweep(m, sizes, preset, &c);
+        headlines.push((
+            format!("W4A4 geomean speedup [{}]", preset.name()),
+            geomean(&cells, &base, speedup),
+        ));
+        tables.push((
+            format!("W4A4 speedup vs Ruy-W8A8 [{}]", preset.name()),
+            grid_table("w4a4", sizes, &cells, &base, speedup),
+        ));
+    }
+    FigureReport { id: "fig7", tables, headlines }
+}
+
+/// Fig. 8: W2A2 / W1A1 speedup and instruction count **relative to
+/// W4A4** (T_w4a4/T_case, I_case/I_w4a4).
+pub fn fig8(sizes: &[usize]) -> FigureReport {
+    let c = core();
+    let w4a4 = sweep(Method::fullpack("w4a4"), sizes, CachePreset::Gem5Ex5Big, &c);
+    let mut tables = Vec::new();
+    let mut headlines = Vec::new();
+    for v in ["w2a2", "w1a1"] {
+        let m = Method::fullpack(v);
+        let cells = sweep(m, sizes, CachePreset::Gem5Ex5Big, &c);
+        tables.push((
+            format!("{} speedup vs W4A4", m.label()),
+            grid_table(v, sizes, &cells, &w4a4, speedup),
+        ));
+        tables.push((
+            format!("{} instruction ratio vs W4A4", m.label()),
+            grid_table(v, sizes, &cells, &w4a4, |a, b| a.instrs / b.instrs),
+        ));
+        headlines.push((format!("{} geomean speedup vs W4A4", m.label()), geomean(&cells, &w4a4, speedup)));
+        headlines.push((
+            format!("{} instr ratio vs W4A4", m.label()),
+            geomean(&cells, &w4a4, |a, b| a.instrs / b.instrs),
+        ));
+    }
+    FigureReport { id: "fig8", tables, headlines }
+}
+
+/// Fig. 12: instruction-count ratio (I_case / I_baseline) per method.
+pub fn fig12(sizes: &[usize]) -> FigureReport {
+    let c = core();
+    let base = sweep(Method::RuyW8A8, sizes, CachePreset::Gem5Ex5Big, &c);
+    let mut tables = Vec::new();
+    let mut headlines = Vec::new();
+    let lineup: Vec<Method> = Method::fig4_lineup()
+        .into_iter()
+        .skip(1)
+        .chain([Method::fullpack("w8a4"), Method::fullpack("w4a4")])
+        .collect();
+    for m in lineup {
+        let cells = sweep(m, sizes, CachePreset::Gem5Ex5Big, &c);
+        headlines.push((
+            format!("{} instr ratio", m.label()),
+            geomean(&cells, &base, |a, b| a.instrs / b.instrs),
+        ));
+        tables.push((
+            format!("{} instruction ratio vs Ruy-W8A8", m.label()),
+            grid_table(&m.label(), sizes, &cells, &base, |a, b| a.instrs / b.instrs),
+        ));
+    }
+    FigureReport { id: "fig12", tables, headlines }
+}
+
+/// Fig. 13: IPC ratio (IPC_case / IPC_baseline) per method.
+pub fn fig13(sizes: &[usize]) -> FigureReport {
+    let c = core();
+    let base = sweep(Method::RuyW8A8, sizes, CachePreset::Gem5Ex5Big, &c);
+    let mut tables = Vec::new();
+    let mut headlines = Vec::new();
+    for m in [
+        Method::fullpack("w4a8"),
+        Method::fullpack("w8a4"),
+        Method::fullpack("w4a4"),
+        Method::XnnW8A8,
+    ] {
+        let cells = sweep(m, sizes, CachePreset::Gem5Ex5Big, &c);
+        headlines.push((
+            format!("{} IPC ratio", m.label()),
+            geomean(&cells, &base, |a, b| a.ipc() / b.ipc()),
+        ));
+        tables.push((
+            format!("{} IPC ratio vs Ruy-W8A8", m.label()),
+            grid_table(&m.label(), sizes, &cells, &base, |a, b| a.ipc() / b.ipc()),
+        ));
+    }
+    FigureReport { id: "fig13", tables, headlines }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::figures::SIZES_QUICK;
+
+    #[test]
+    fn fig4_shape_holds() {
+        let r = fig4(&SIZES_QUICK);
+        let hl: std::collections::HashMap<&str, f64> =
+            r.headlines.iter().map(|(n, v)| (n.as_str(), *v)).collect();
+        // who wins: FullPack-W4A8 > 1, FP32 methods < 1, ULPPACK << 1
+        assert!(hl["FullPack-W4A8 geomean speedup"] > 1.0);
+        assert!(hl["TFLite-FP32 geomean speedup"] < 0.5);
+        assert!(hl["ULPPACK-W2A2 geomean speedup"] < 0.5);
+        // XNNPack beats baseline on average (paper: 2.4x overall)
+        assert!(hl["XNNPack-W8A8 geomean speedup"] > 1.0);
+    }
+
+    #[test]
+    fn fig5_weight_quant_dominates() {
+        let r = fig5(&SIZES_QUICK);
+        let hl: std::collections::HashMap<&str, f64> =
+            r.headlines.iter().map(|(n, v)| (n.as_str(), *v)).collect();
+        let w = hl["FullPack-W4A8 geomean speedup"];
+        let a = hl["FullPack-W8A4 geomean speedup"];
+        let both = hl["FullPack-W4A4 geomean speedup"];
+        assert!(w > a, "weights {w} vs acts {a}");
+        // paper: W4A4 ≈ 1.02x of W4A8 — near parity.  Our instruction
+        // model charges W4A4's extra extraction shifts slightly more
+        // than gem5 measured, so allow a 15% band around parity.
+        assert!(both >= w * 0.85, "both {both} vs weights {w}");
+    }
+
+    #[test]
+    fn fig6_access_halving() {
+        let r = fig6(&SIZES_QUICK);
+        let hl: std::collections::HashMap<&str, f64> =
+            r.headlines.iter().map(|(n, v)| (n.as_str(), *v)).collect();
+        let ratio = hl["FullPack-W4A8 largest-size access ratio"];
+        assert!((0.4..0.7).contains(&ratio), "access ratio {ratio}");
+    }
+
+    #[test]
+    fn fig7_reports_all_hierarchies() {
+        let r = fig7(&SIZES_QUICK);
+        assert_eq!(r.tables.len(), 5);
+        for (_, v) in &r.headlines {
+            assert!(*v > 0.5, "speedup {v}");
+        }
+    }
+
+    #[test]
+    fn fig8_narrow_bits_help_at_scale() {
+        let r = fig8(&SIZES_QUICK);
+        let hl: std::collections::HashMap<&str, f64> =
+            r.headlines.iter().map(|(n, v)| (n.as_str(), *v)).collect();
+        assert!(hl["FullPack-W2A2 geomean speedup vs W4A4"] > 0.9);
+        // instruction ratios stay near 1 (paper: 1.03x / 0.8x)
+        let i1 = hl["FullPack-W1A1 instr ratio vs W4A4"];
+        assert!((0.5..1.5).contains(&i1), "w1a1 instr ratio {i1}");
+    }
+
+    #[test]
+    fn fig12_fig13_render() {
+        let r12 = fig12(&SIZES_QUICK);
+        assert!(!r12.tables.is_empty());
+        let r13 = fig13(&SIZES_QUICK);
+        let hl: std::collections::HashMap<&str, f64> =
+            r13.headlines.iter().map(|(n, v)| (n.as_str(), *v)).collect();
+        // FullPack has better IPC than the baseline (paper Fig. 13)
+        assert!(hl["FullPack-W4A8 IPC ratio"] > 0.9);
+    }
+}

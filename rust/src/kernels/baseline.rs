@@ -1,0 +1,271 @@
+//! Baseline GEMV/GEMM kernels standing in for the paper's nine rivals
+//! (§4.1).  Each mirrors the *inner-loop structure* of the library it
+//! represents — bytes moved per element, blocking, unrolling, extra
+//! passes — which is what the figures compare (DESIGN.md substitution
+//! table).
+
+use crate::pack::{PackedMatrix, VL};
+
+/// Ruy-like W8A8 (the paper's main baseline): row-major streaming with
+/// 16-lane i32 accumulation — a well-optimized but straightforward i8
+/// GEMV.
+pub fn gemv_ruy_i8(wp: &PackedMatrix, a: &[i8], out: &mut [i32]) {
+    gemv_ruy_i8_at(wp, a, out, 0)
+}
+
+/// [`gemv_ruy_i8`] over the row range `[row0, row0 + out.len())`.
+pub fn gemv_ruy_i8_at(wp: &PackedMatrix, a: &[i8], out: &mut [i32], row0: usize) {
+    debug_assert!(!wp.bits().is_sub_byte());
+    for (r, o) in out.iter_mut().enumerate() {
+        let row = wp.row_i8(row0 + r);
+        let mut acc = [0i32; VL];
+        let chunks = row.len() / VL;
+        for c in 0..chunks {
+            let mut wv = [0i8; VL];
+            wv.copy_from_slice(&row[c * VL..(c + 1) * VL]);
+            let mut av = [0i8; VL];
+            av.copy_from_slice(&a[c * VL..(c + 1) * VL]);
+            for j in 0..VL {
+                acc[j] += (wv[j] as i16 * av[j] as i16) as i32;
+            }
+        }
+        let mut sum: i32 = acc.iter().sum();
+        for i in chunks * VL..row.len() {
+            sum += row[i] as i32 * a[i] as i32;
+        }
+        *o = sum;
+    }
+}
+
+/// XNNPack-like W8A8: 4-row micro-kernel with depth unrolled by 2×VL —
+/// fewer loop-bookkeeping instructions per MAC (the paper's Fig. 12
+/// shows XNNPack at ~0.68× of Ruy's instruction count).
+pub fn gemv_xnn_i8(wp: &PackedMatrix, a: &[i8], out: &mut [i32]) {
+    debug_assert!(!wp.bits().is_sub_byte());
+    let z = wp.rows();
+    let k = wp.k();
+    let blocks = k / (2 * VL);
+    let load = |src: &[i8]| -> [i8; VL] {
+        let mut v = [0i8; VL];
+        v.copy_from_slice(&src[..VL]);
+        v
+    };
+    let mut r = 0;
+    while r + 4 <= z {
+        let rows = [wp.row_i8(r), wp.row_i8(r + 1), wp.row_i8(r + 2), wp.row_i8(r + 3)];
+        let mut acc = [[0i32; VL]; 4];
+        for c in 0..blocks {
+            let base = c * 2 * VL;
+            let a0 = load(&a[base..]);
+            let a1 = load(&a[base + VL..]);
+            for (ri, row) in rows.iter().enumerate() {
+                let w0 = load(&row[base..]);
+                let w1 = load(&row[base + VL..]);
+                for j in 0..VL {
+                    acc[ri][j] += (w0[j] as i16 * a0[j] as i16) as i32;
+                    acc[ri][j] += (w1[j] as i16 * a1[j] as i16) as i32;
+                }
+            }
+        }
+        for ri in 0..4 {
+            let mut sum: i32 = acc[ri].iter().sum();
+            for i in blocks * 2 * VL..k {
+                sum += rows[ri][i] as i32 * a[i] as i32;
+            }
+            out[r + ri] = sum;
+        }
+        r += 4;
+    }
+    if r < z {
+        gemv_ruy_i8_rows(wp, a, &mut out[r..], r);
+    }
+}
+
+fn gemv_ruy_i8_rows(wp: &PackedMatrix, a: &[i8], out: &mut [i32], first: usize) {
+    for (i, o) in out.iter_mut().enumerate() {
+        let row = wp.row_i8(first + i);
+        *o = row.iter().zip(a).map(|(&w, &x)| w as i32 * x as i32).sum();
+    }
+}
+
+/// TFLite-default-like W8A8: plain scalar loop (C++ w/ intrinsics but no
+/// hand blocking — consistently slower than Ruy in the paper's Fig. 4).
+pub fn gemv_tflite_i8(wp: &PackedMatrix, a: &[i8], out: &mut [i32]) {
+    debug_assert!(!wp.bits().is_sub_byte());
+    for (r, o) in out.iter_mut().enumerate() {
+        let row = wp.row_i8(r);
+        let mut sum = 0i32;
+        for i in 0..row.len() {
+            sum += row[i] as i32 * a[i] as i32;
+        }
+        *o = sum;
+    }
+}
+
+/// GEMMLOWP-like W8A8: an extra pack-to-temporary pass before the dot
+/// (gemmlowp's packing stage) — same arithmetic, one more sweep over the
+/// weight bytes per call.
+pub fn gemv_gemmlowp_i8(wp: &PackedMatrix, a: &[i8], out: &mut [i32], scratch: &mut Vec<i8>) {
+    debug_assert!(!wp.bits().is_sub_byte());
+    let k = wp.k();
+    scratch.clear();
+    scratch.reserve(k);
+    for (r, o) in out.iter_mut().enumerate() {
+        // packing stage: copy the row into the packed buffer
+        scratch.clear();
+        scratch.extend_from_slice(wp.row_i8(r));
+        let mut acc = [0i32; VL];
+        let chunks = k / VL;
+        for c in 0..chunks {
+            for j in 0..VL {
+                acc[j] += (scratch[c * VL + j] as i16 * a[c * VL + j] as i16) as i32;
+            }
+        }
+        let mut sum: i32 = acc.iter().sum();
+        for i in chunks * VL..k {
+            sum += scratch[i] as i32 * a[i] as i32;
+        }
+        *o = sum;
+    }
+}
+
+/// Ruy-like FP32 GEMV: blocked f32 with lane accumulation.
+pub fn gemv_ruy_f32(w: &[f32], z: usize, k: usize, a: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(w.len(), z * k);
+    for (r, o) in out.iter_mut().enumerate() {
+        let row = &w[r * k..(r + 1) * k];
+        let mut acc = [0f32; 8];
+        let chunks = k / 8;
+        for c in 0..chunks {
+            for j in 0..8 {
+                acc[j] += row[c * 8 + j] * a[c * 8 + j];
+            }
+        }
+        let mut sum: f32 = acc.iter().sum();
+        for i in chunks * 8..k {
+            sum += row[i] * a[i];
+        }
+        *o = sum;
+    }
+}
+
+/// Eigen-like FP32: 4-row blocked with 8-lane accumulators (Eigen's
+/// gebp-style register blocking, simplified to GEMV).
+pub fn gemv_eigen_f32(w: &[f32], z: usize, k: usize, a: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(w.len(), z * k);
+    let mut r = 0;
+    while r + 4 <= z {
+        let mut acc = [[0f32; 8]; 4];
+        let chunks = k / 8;
+        for c in 0..chunks {
+            for ri in 0..4 {
+                let row = &w[(r + ri) * k..(r + ri + 1) * k];
+                for j in 0..8 {
+                    acc[ri][j] += row[c * 8 + j] * a[c * 8 + j];
+                }
+            }
+        }
+        for ri in 0..4 {
+            let row = &w[(r + ri) * k..(r + ri + 1) * k];
+            let mut sum: f32 = acc[ri].iter().sum();
+            for i in chunks * 8..k {
+                sum += row[i] * a[i];
+            }
+            out[r + ri] = sum;
+        }
+        r += 4;
+    }
+    for ri in r..z {
+        let row = &w[ri * k..(ri + 1) * k];
+        out[ri] = row.iter().zip(a).map(|(x, y)| x * y).sum();
+    }
+}
+
+/// TFLite-default-like FP32: plain scalar loop.
+pub fn gemv_tflite_f32(w: &[f32], z: usize, k: usize, a: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(w.len(), z * k);
+    for (r, o) in out.iter_mut().enumerate() {
+        *o = w[r * k..(r + 1) * k].iter().zip(a).map(|(x, y)| x * y).sum();
+    }
+}
+
+/// W8A8 GEMM for the batch-16 FC layers (Ruy path in the paper's
+/// end-to-end run): `out[z][b] = Σ_k w[z][k] · a[b][k]`, activations
+/// row-major per batch.
+pub fn gemm_ruy_i8(wp: &PackedMatrix, a: &[i8], batch: usize, out: &mut [i32]) {
+    debug_assert!(!wp.bits().is_sub_byte());
+    let z = wp.rows();
+    let k = wp.k();
+    debug_assert_eq!(a.len(), batch * k);
+    debug_assert_eq!(out.len(), batch * z);
+    for b in 0..batch {
+        let av = &a[b * k..(b + 1) * k];
+        gemv_ruy_i8(wp, av, &mut out[b * z..(b + 1) * z]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::testutil::{oracle_gemv, rngvals};
+    use crate::pack::{BitWidth, PackedMatrix};
+
+    fn setup(z: usize, k: usize) -> (PackedMatrix, Vec<i8>, Vec<i8>, Vec<i32>) {
+        let w = rngvals(BitWidth::B8, z * k, 21);
+        let a = rngvals(BitWidth::B8, k, 22);
+        let wp = PackedMatrix::from_i8(&w, z, k, BitWidth::B8).unwrap();
+        let oracle = oracle_gemv(&w, &a, z, k);
+        (wp, w, a, oracle)
+    }
+
+    #[test]
+    fn all_i8_baselines_match_oracle() {
+        for (z, k) in [(16usize, 96usize), (7, 100), (4, 15), (1, 1)] {
+            let (wp, _w, a, oracle) = setup(z, k);
+            let mut out = vec![0i32; z];
+            gemv_ruy_i8(&wp, &a, &mut out);
+            assert_eq!(out, oracle, "ruy z={z} k={k}");
+            gemv_xnn_i8(&wp, &a, &mut out);
+            assert_eq!(out, oracle, "xnn z={z} k={k}");
+            gemv_tflite_i8(&wp, &a, &mut out);
+            assert_eq!(out, oracle, "tflite z={z} k={k}");
+            let mut scratch = Vec::new();
+            gemv_gemmlowp_i8(&wp, &a, &mut out, &mut scratch);
+            assert_eq!(out, oracle, "gemmlowp z={z} k={k}");
+        }
+    }
+
+    #[test]
+    fn f32_baselines_agree() {
+        let z = 13;
+        let k = 77;
+        let w: Vec<f32> = (0..z * k).map(|i| ((i % 17) as f32 - 8.0) * 0.25).collect();
+        let a: Vec<f32> = (0..k).map(|i| ((i % 11) as f32 - 5.0) * 0.5).collect();
+        let mut o1 = vec![0f32; z];
+        let mut o2 = vec![0f32; z];
+        let mut o3 = vec![0f32; z];
+        gemv_ruy_f32(&w, z, k, &a, &mut o1);
+        gemv_eigen_f32(&w, z, k, &a, &mut o2);
+        gemv_tflite_f32(&w, z, k, &a, &mut o3);
+        for i in 0..z {
+            assert!((o1[i] - o3[i]).abs() < 1e-3);
+            assert!((o2[i] - o3[i]).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn gemm_matches_stacked_gemv() {
+        let z = 8;
+        let k = 64;
+        let batch = 3;
+        let w = rngvals(BitWidth::B8, z * k, 31);
+        let a = rngvals(BitWidth::B8, batch * k, 32);
+        let wp = PackedMatrix::from_i8(&w, z, k, BitWidth::B8).unwrap();
+        let mut out = vec![0i32; batch * z];
+        gemm_ruy_i8(&wp, &a, batch, &mut out);
+        for b in 0..batch {
+            let oracle = oracle_gemv(&w, &a[b * k..(b + 1) * k], z, k);
+            assert_eq!(&out[b * z..(b + 1) * z], oracle.as_slice());
+        }
+    }
+}

@@ -1,0 +1,282 @@
+//! The FullPack GEMV kernels (paper §3.2, Alg. 2, Fig. 3) as 16-lane
+//! SWAR loops.
+//!
+//! Structure per 16-byte weight block (Alg. 2 lines 6–13):
+//!
+//! ```text
+//!   V0 ← load 16 packed bytes                 (one vector load)
+//!   for k in 0..E:                            (E = 8/bits sub-vectors)
+//!     Vk ← ASR(LSL(V0, 8-(k+1)b), 8-b)        (2 shifts; top one: 1 ASR)
+//!     ACC ← FMA(Vk, A[blk, k], ACC)           (lane MAC into i32)
+//!   out[i] ← ElementWiseAdd(ACC)              (final lane reduction)
+//! ```
+//!
+//! The shift amounts are compile-time constants through `const B`, so
+//! each instantiation mirrors one of the paper's nine hand-written
+//! kernels.  Lanes are fixed-size `[i8; VL]` / `[i32; VL]` arrays staged
+//! with `copy_from_slice` — the shape LLVM's SLP vectorizer reliably
+//! turns into the target's SIMD (the NEON analog on AArch64, AVX2 on
+//! x86-64; see EXPERIMENTS.md §Perf for the before/after of this
+//! choice).  The computation's *shape* (loads per useful element,
+//! shifts per block, MACs per lane) is identical to the paper's
+//! assembly, which is what the cost model counts.
+
+use crate::pack::{PackedMatrix, VL};
+
+/// Extract sub-vector element `k` from a packed byte: the two-shift
+/// mask+sign-extend schedule.  `B` is the element bit-width.
+#[inline(always)]
+fn extract<const B: usize>(byte: i8, k: usize) -> i8 {
+    let lsl = 8 - (k + 1) * B; // 0 for the top sub-vector (single ASR)
+    ((byte << lsl) as i8) >> (8 - B)
+}
+
+/// Extract all E sub-vectors of one 16-byte block into `E × VL` lanes.
+#[inline(always)]
+fn extract_block<const B: usize>(bytes: &[u8]) -> [[i8; VL]; 8] {
+    let e = 8 / B;
+    let mut v = [[0i8; VL]; 8]; // only the first E rows are used
+    let mut blk = [0i8; VL];
+    for j in 0..VL {
+        blk[j] = bytes[j] as i8;
+    }
+    for (k, row) in v.iter_mut().enumerate().take(e) {
+        for j in 0..VL {
+            row[j] = extract::<B>(blk[j], k);
+        }
+    }
+    v
+}
+
+/// Lane-wise widening MAC: `acc[j] += w[j] * a[j]` over 16 int8 lanes.
+#[inline(always)]
+fn mac16(acc: &mut [i32; VL], w: &[i8; VL], a: &[i8; VL]) {
+    for j in 0..VL {
+        acc[j] += (w[j] as i16 * a[j] as i16) as i32;
+    }
+}
+
+#[inline(always)]
+fn load16(src: &[i8]) -> [i8; VL] {
+    let mut v = [0i8; VL];
+    v.copy_from_slice(&src[..VL]);
+    v
+}
+
+/// W sub-byte (`B` bits) × A int8 — the paper's W4A8/W2A8/W1A8 kernels.
+pub fn gemv_wsub_a8<const B: usize>(wp: &PackedMatrix, a: &[i8], out: &mut [i32]) {
+    gemv_wsub_a8_at::<B>(wp, a, out, 0)
+}
+
+/// [`gemv_wsub_a8`] over the row range `[row0, row0 + out.len())` —
+/// zero-copy sharding for `kernels::parallel`.
+pub fn gemv_wsub_a8_at<const B: usize>(
+    wp: &PackedMatrix,
+    a: &[i8],
+    out: &mut [i32],
+    row0: usize,
+) {
+    let e = 8 / B;
+    debug_assert_eq!(wp.bits().bits(), B);
+    debug_assert!(a.len() >= wp.k_padded());
+    // NOTE (§Perf iteration 3): a 2-block unroll with dual accumulators
+    // was tried here and REVERTED — it regressed w4a8 600→682us and
+    // w1a8 361→537us on the host (the single-block loop already
+    // saturates the load pipe; the unroll only added register pressure).
+    for (r, o) in out.iter_mut().enumerate() {
+        let row = wp.row(row0 + r);
+        let mut acc = [0i32; VL];
+        for (blk, bytes) in row.chunks_exact(VL).enumerate() {
+            let base = blk * e * VL;
+            let w = extract_block::<B>(bytes);
+            for (k, wk) in w.iter().enumerate().take(e) {
+                let av = load16(&a[base + k * VL..]);
+                mac16(&mut acc, wk, &av);
+            }
+        }
+        *o = acc.iter().sum();
+    }
+}
+
+/// W int8 × A sub-byte (`B` bits) — the W8A4/W8A2/W8A1 kernels: the
+/// activation vector is unpacked in-register, weights stream as int8.
+pub fn gemv_w8_asub<const B: usize>(wp: &PackedMatrix, a_packed: &[u8], out: &mut [i32]) {
+    gemv_w8_asub_at::<B>(wp, a_packed, out, 0)
+}
+
+/// [`gemv_w8_asub`] over a row range (zero-copy sharding).
+pub fn gemv_w8_asub_at<const B: usize>(
+    wp: &PackedMatrix,
+    a_packed: &[u8],
+    out: &mut [i32],
+    row0: usize,
+) {
+    let e = 8 / B;
+    debug_assert!(!wp.bits().is_sub_byte());
+    debug_assert!(a_packed.len() * e >= wp.k_padded());
+    // unpack the activation vector once per call (it is shared by every
+    // row — the in-register unpack of the paper amortizes the same way
+    // across the row loop, which reuses the same extracted registers)
+    let mut a_unpacked: Vec<[i8; VL]> = Vec::with_capacity(a_packed.len() / VL * e);
+    for bytes in a_packed.chunks_exact(VL) {
+        let v = extract_block::<B>(bytes);
+        a_unpacked.extend_from_slice(&v[..e]);
+    }
+    for (r, o) in out.iter_mut().enumerate() {
+        let row = wp.row_i8(row0 + r);
+        let mut acc = [0i32; VL];
+        let full = row.len() / VL;
+        for (i, av) in a_unpacked.iter().enumerate().take(full) {
+            let wv = load16(&row[i * VL..]);
+            mac16(&mut acc, &wv, av);
+        }
+        let mut sum: i32 = acc.iter().sum();
+        // tail: weight depth not padded to the activation group
+        for i in full * VL..row.len() {
+            let av = extract::<B>(a_packed[(i / (e * VL)) * VL + i % VL] as i8, (i / VL) % e);
+            sum += row[i] as i32 * av as i32;
+        }
+        *o = sum;
+    }
+}
+
+/// W and A both sub-byte with the same width — W4A4/W2A2/W1A1: weights
+/// unpacked in-register per block; activations unpacked once per call
+/// (shared across rows, exactly like the register reuse in the paper's
+/// kernel which keeps the extracted activation vectors live).
+pub fn gemv_wsub_asub<const B: usize>(wp: &PackedMatrix, a_packed: &[u8], out: &mut [i32]) {
+    gemv_wsub_asub_at::<B>(wp, a_packed, out, 0)
+}
+
+/// [`gemv_wsub_asub`] over a row range (zero-copy sharding).
+pub fn gemv_wsub_asub_at<const B: usize>(
+    wp: &PackedMatrix,
+    a_packed: &[u8],
+    out: &mut [i32],
+    row0: usize,
+) {
+    let e = 8 / B;
+    debug_assert_eq!(wp.bits().bits(), B);
+    debug_assert!(a_packed.len() * e >= wp.k_padded());
+    let blocks = wp.bytes_per_row() / VL;
+    let mut a_unpacked: Vec<[i8; VL]> = Vec::with_capacity(blocks * e);
+    for bytes in a_packed.chunks_exact(VL).take(blocks) {
+        let v = extract_block::<B>(bytes);
+        a_unpacked.extend_from_slice(&v[..e]);
+    }
+    for (r, o) in out.iter_mut().enumerate() {
+        let row = wp.row(row0 + r);
+        let mut acc = [0i32; VL];
+        for (blk, bytes) in row.chunks_exact(VL).enumerate() {
+            let w = extract_block::<B>(bytes);
+            for (k, wk) in w.iter().enumerate().take(e) {
+                mac16(&mut acc, wk, &a_unpacked[blk * e + k]);
+            }
+        }
+        *o = acc.iter().sum();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::testutil::{oracle_gemv, rngvals};
+    use crate::pack::{pack, BitWidth, PackedMatrix};
+
+    #[test]
+    fn extract_matches_scalar_signext() {
+        // every byte value, every sub-position, every width
+        for b in 0..=255u8 {
+            let byte = b as i8;
+            for k in 0..2 {
+                let lo4 = extract::<4>(byte, k);
+                let want = {
+                    let v = (b >> (4 * k)) & 0xF;
+                    ((v << 4) as i8) >> 4
+                };
+                assert_eq!(lo4, want);
+            }
+            for k in 0..4 {
+                let v2 = extract::<2>(byte, k);
+                let want = {
+                    let v = (b >> (2 * k)) & 0x3;
+                    ((v << 6) as i8) >> 6
+                };
+                assert_eq!(v2, want);
+            }
+            for k in 0..8 {
+                let v1 = extract::<1>(byte, k);
+                assert_eq!(v1, -(((b >> k) & 1) as i8));
+            }
+        }
+    }
+
+    #[test]
+    fn extract_block_matches_unpack() {
+        for (bits, b) in [(BitWidth::B4, 4usize), (BitWidth::B2, 2), (BitWidth::B1, 1)] {
+            let x = rngvals(bits, bits.group_size(), 77);
+            let packed = pack(&x, bits).unwrap();
+            let v = match b {
+                4 => extract_block::<4>(&packed),
+                2 => extract_block::<2>(&packed),
+                _ => extract_block::<1>(&packed),
+            };
+            let e = bits.elems_per_byte();
+            for k in 0..e {
+                for j in 0..VL {
+                    assert_eq!(v[k][j], x[k * VL + j], "{bits:?} k={k} j={j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wsub_a8_extremes() {
+        // all-min weights, all-max activations: worst-case accumulators
+        for (bits, b) in [(BitWidth::B4, 4usize), (BitWidth::B2, 2), (BitWidth::B1, 1)] {
+            let (wlo, _) = bits.value_range();
+            let g = bits.group_size();
+            let z = 4;
+            let w = vec![wlo; z * g];
+            let a = vec![127i8; g];
+            let wp = PackedMatrix::from_i8(&w, z, g, bits).unwrap();
+            let mut out = vec![0i32; z];
+            match b {
+                4 => gemv_wsub_a8::<4>(&wp, &a, &mut out),
+                2 => gemv_wsub_a8::<2>(&wp, &a, &mut out),
+                _ => gemv_wsub_a8::<1>(&wp, &a, &mut out),
+            }
+            assert_eq!(out, oracle_gemv(&w, &a, z, g));
+        }
+    }
+
+    #[test]
+    fn w8_asub_weights_shorter_than_padded_acts() {
+        // 8-bit weights need no padding; packed acts may be longer.
+        for k in [160usize, 100, 128, 17] {
+            let z = 4;
+            let w = rngvals(BitWidth::B8, z * k, 3);
+            let mut a = rngvals(BitWidth::B1, k, 4);
+            a.resize(BitWidth::B1.padded_len(k), 0);
+            let ap = pack(&a, BitWidth::B1).unwrap();
+            let wp = PackedMatrix::from_i8(&w, z, k, BitWidth::B8).unwrap();
+            let mut out = vec![0i32; z];
+            gemv_w8_asub::<1>(&wp, &ap, &mut out);
+            assert_eq!(out, oracle_gemv(&w, &a[..k], z, k), "k={k}");
+        }
+    }
+
+    #[test]
+    fn wsub_asub_multi_block() {
+        let bits = BitWidth::B2;
+        let k = bits.group_size() * 3;
+        let z = 8;
+        let w = rngvals(bits, z * k, 9);
+        let a = rngvals(bits, k, 10);
+        let wp = PackedMatrix::from_i8(&w, z, k, bits).unwrap();
+        let ap = pack(&a, bits).unwrap();
+        let mut out = vec![0i32; z];
+        gemv_wsub_asub::<2>(&wp, &ap, &mut out);
+        assert_eq!(out, oracle_gemv(&w, &a, z, k));
+    }
+}

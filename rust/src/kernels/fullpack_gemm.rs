@@ -1,0 +1,150 @@
+//! FullPack batched GEMM — the paper's explicit **future-work gap**
+//! ("FullPack does not support GEMM, so we used Ruy-W8A8 for the GEMM
+//! operations", Fig. 10 caption) — implemented here as an extension:
+//! the packed weight block is extracted *once* and the unpacked lanes
+//! are reused across all batch columns, amortizing the extraction
+//! overhead that makes repeated-GEMV batching wasteful.
+//!
+//! Cost intuition: repeated GEMV extracts each weight block `batch`
+//! times (extraction : MAC ratio constant); batched GEMM extracts once
+//! per `batch` MAC groups, so as batch grows the kernel converges to
+//! pure-MAC throughput while still moving `b/8` bytes per weight.
+
+use super::KernelError;
+use crate::pack::{BitWidth, PackedMatrix, VL};
+
+/// Extract + MAC over all batch columns: `out[c][r] = Σ_k w[r][k] · a[c][k]`.
+///
+/// `a_cols`: `batch` unpacked int8 activation vectors, each of length
+/// `wp.k_padded()` (column-major batches, as the dynamic batcher
+/// collects them).  `out`: `batch * rows`, batch-major.
+pub fn gemm_fullpack<const B: usize>(
+    wp: &PackedMatrix,
+    a_cols: &[&[i8]],
+    out: &mut [i32],
+) -> Result<(), KernelError> {
+    let e = 8 / B;
+    let z = wp.rows();
+    let batch = a_cols.len();
+    if out.len() != z * batch {
+        return Err(KernelError::Shape(format!(
+            "out len {} != rows*batch {}",
+            out.len(),
+            z * batch
+        )));
+    }
+    for (c, col) in a_cols.iter().enumerate() {
+        if col.len() < wp.k_padded() {
+            return Err(KernelError::Shape(format!(
+                "column {c} len {} < padded depth {}",
+                col.len(),
+                wp.k_padded()
+            )));
+        }
+    }
+    // column tiles of 4 with stack-array accumulators: one weight
+    // extraction feeds four MAC streams and the fixed shapes keep the
+    // SLP vectorizer engaged (a heap `Vec` of accumulators defeated it —
+    // see EXPERIMENTS.md §Perf iteration 4)
+    const CT: usize = 4;
+    for r in 0..z {
+        let row = wp.row(r);
+        let mut c0 = 0;
+        while c0 < batch {
+            let ct = (batch - c0).min(CT);
+            let mut accs = [[0i32; VL]; CT];
+            for (blk, bytes) in row.chunks_exact(VL).enumerate() {
+                let base = blk * e * VL;
+                let mut blk_i8 = [0i8; VL];
+                for j in 0..VL {
+                    blk_i8[j] = bytes[j] as i8;
+                }
+                for k in 0..e {
+                    let mut w = [0i8; VL];
+                    let lsl = 8 - (k + 1) * B;
+                    for j in 0..VL {
+                        w[j] = ((blk_i8[j] << lsl) as i8) >> (8 - B);
+                    }
+                    for (ci, acc) in accs.iter_mut().enumerate().take(ct) {
+                        let mut a = [0i8; VL];
+                        a.copy_from_slice(&a_cols[c0 + ci][base + k * VL..base + (k + 1) * VL]);
+                        for j in 0..VL {
+                            acc[j] += (w[j] as i16 * a[j] as i16) as i32;
+                        }
+                    }
+                }
+            }
+            for (ci, acc) in accs.iter().enumerate().take(ct) {
+                out[(c0 + ci) * z + r] = acc.iter().sum();
+            }
+            c0 += ct;
+        }
+    }
+    Ok(())
+}
+
+/// Width-dispatched wrapper.
+pub fn gemm_fullpack_dyn(
+    wp: &PackedMatrix,
+    a_cols: &[&[i8]],
+    out: &mut [i32],
+) -> Result<(), KernelError> {
+    match wp.bits() {
+        BitWidth::B4 => gemm_fullpack::<4>(wp, a_cols, out),
+        BitWidth::B2 => gemm_fullpack::<2>(wp, a_cols, out),
+        BitWidth::B1 => gemm_fullpack::<1>(wp, a_cols, out),
+        BitWidth::B8 => Err(KernelError::Unsupported("w8 gemm: use baseline::gemm_ruy_i8".into())),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::testutil::{oracle_gemv, rngvals};
+
+    #[test]
+    fn batched_matches_per_column_oracle() {
+        for bits in [BitWidth::B4, BitWidth::B2, BitWidth::B1] {
+            let z = 16;
+            let k = bits.group_size() * 2;
+            let batch = 5;
+            let w = rngvals(bits, z * k, 61);
+            let wp = PackedMatrix::from_i8(&w, z, k, bits).unwrap();
+            let cols: Vec<Vec<i8>> =
+                (0..batch).map(|c| rngvals(BitWidth::B8, k, 62 + c as u64)).collect();
+            let col_refs: Vec<&[i8]> = cols.iter().map(|c| c.as_slice()).collect();
+            let mut out = vec![0i32; z * batch];
+            gemm_fullpack_dyn(&wp, &col_refs, &mut out).unwrap();
+            for (c, col) in cols.iter().enumerate() {
+                assert_eq!(
+                    &out[c * z..(c + 1) * z],
+                    oracle_gemv(&w, col, z, k).as_slice(),
+                    "{bits:?} col {c}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_ok() {
+        let w = rngvals(BitWidth::B4, 8 * 32, 1);
+        let wp = PackedMatrix::from_i8(&w, 8, 32, BitWidth::B4).unwrap();
+        let mut out = vec![];
+        gemm_fullpack_dyn(&wp, &[], &mut out).unwrap();
+    }
+
+    #[test]
+    fn shape_errors() {
+        let w = rngvals(BitWidth::B4, 8 * 32, 1);
+        let wp = PackedMatrix::from_i8(&w, 8, 32, BitWidth::B4).unwrap();
+        let a = vec![0i8; 32];
+        let mut bad = vec![0i32; 3];
+        assert!(gemm_fullpack_dyn(&wp, &[&a], &mut bad).is_err());
+        let short = vec![0i8; 16];
+        let mut out = vec![0i32; 8];
+        assert!(gemm_fullpack_dyn(&wp, &[&short], &mut out).is_err());
+        // 8-bit weights are not a FullPack GEMM case
+        let w8 = PackedMatrix::from_i8(&vec![0i8; 8 * 32], 8, 32, BitWidth::B8).unwrap();
+        assert!(gemm_fullpack_dyn(&w8, &[&a], &mut out).is_err());
+    }
+}

@@ -1,0 +1,256 @@
+//! Native GEMV/GEMM kernels — the measured hot path (DESIGN.md
+//! substitution table: these are the Rust twins of the paper's ARMv8
+//! NEON assembly kernels, written as 16-lane SWAR loops the compiler
+//! auto-vectorizes; the layout, shift schedule and instruction mix match
+//! the paper's kernels one-for-one).
+//!
+//! * [`fullpack`] — the nine paper variants (§3.2) over the dense layout;
+//! * [`baseline`] — Ruy/XNNPack/TFLite/GEMMLOWP-like i8 and f32 rivals;
+//! * [`ulppack`]  — the ULPPACK spacer-lane comparator (Won et al. 2022);
+//! * [`naive`]    — the Alg. 1 strawman over adjacent packing.
+
+pub mod baseline;
+pub mod fullpack;
+pub mod fullpack_gemm;
+pub mod naive;
+pub mod parallel;
+pub mod ulppack;
+
+use crate::pack::{BitWidth, PackError, PackedMatrix, Variant};
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum KernelError {
+    #[error("operand shape mismatch: {0}")]
+    Shape(String),
+    #[error(transparent)]
+    Pack(#[from] PackError),
+    #[error("variant {0} not supported by this kernel")]
+    Unsupported(String),
+}
+
+/// An activation vector for the FullPack GEMV dispatcher: plain int8 or
+/// packed sub-byte bytes.
+#[derive(Debug, Clone, Copy)]
+pub enum ActVec<'a> {
+    I8(&'a [i8]),
+    Packed { bytes: &'a [u8], bits: BitWidth },
+}
+
+impl<'a> ActVec<'a> {
+    /// Logical element count carried by this vector.
+    pub fn elems(&self) -> usize {
+        match self {
+            ActVec::I8(v) => v.len(),
+            ActVec::Packed { bytes, bits } => bytes.len() * bits.elems_per_byte(),
+        }
+    }
+
+    pub fn bits(&self) -> BitWidth {
+        match self {
+            ActVec::I8(_) => BitWidth::B8,
+            ActVec::Packed { bits, .. } => *bits,
+        }
+    }
+}
+
+/// Pack an int8 activation vector per `bits` (identity wrapper for B8).
+pub fn pack_activations(a: &[i8], bits: BitWidth) -> Result<Vec<u8>, PackError> {
+    debug_assert!(bits.is_sub_byte());
+    crate::pack::pack(a, bits)
+}
+
+/// Dispatch a FullPack GEMV over any of the nine paper variants.
+///
+/// `out.len()` must equal `w.rows()`; the activation element count must
+/// equal the weight matrix's padded depth (pad with zeros via
+/// [`crate::pack::BitWidth::padded_len`] before packing).
+pub fn gemv(w: &PackedMatrix, a: ActVec<'_>, out: &mut [i32]) -> Result<(), KernelError> {
+    if out.len() != w.rows() {
+        return Err(KernelError::Shape(format!(
+            "out len {} != rows {}",
+            out.len(),
+            w.rows()
+        )));
+    }
+    gemv_at(w, a, out, 0)
+}
+
+/// [`gemv`] over the row range `[row0, row0 + out.len())` of the weight
+/// matrix — the zero-copy sharding entry used by [`parallel`].
+pub fn gemv_at(
+    w: &PackedMatrix,
+    a: ActVec<'_>,
+    out: &mut [i32],
+    row0: usize,
+) -> Result<(), KernelError> {
+    if row0 + out.len() > w.rows() {
+        return Err(KernelError::Shape(format!(
+            "row range {row0}..{} exceeds rows {}",
+            row0 + out.len(),
+            w.rows()
+        )));
+    }
+    let need = w.k_padded();
+    let have = a.elems();
+    if have < need {
+        return Err(KernelError::Shape(format!(
+            "activation elems {have} < padded depth {need}"
+        )));
+    }
+    let variant = Variant::new(w.bits(), a.bits());
+    match (w.bits(), a) {
+        (BitWidth::B8, ActVec::I8(av)) => baseline::gemv_ruy_i8_at(w, av, out, row0),
+        (BitWidth::B4, ActVec::I8(av)) => fullpack::gemv_wsub_a8_at::<4>(w, av, out, row0),
+        (BitWidth::B2, ActVec::I8(av)) => fullpack::gemv_wsub_a8_at::<2>(w, av, out, row0),
+        (BitWidth::B1, ActVec::I8(av)) => fullpack::gemv_wsub_a8_at::<1>(w, av, out, row0),
+        (BitWidth::B8, ActVec::Packed { bytes, bits }) => match bits {
+            BitWidth::B4 => fullpack::gemv_w8_asub_at::<4>(w, bytes, out, row0),
+            BitWidth::B2 => fullpack::gemv_w8_asub_at::<2>(w, bytes, out, row0),
+            BitWidth::B1 => fullpack::gemv_w8_asub_at::<1>(w, bytes, out, row0),
+            BitWidth::B8 => unreachable!("B8 activations are ActVec::I8"),
+        },
+        (wb, ActVec::Packed { bytes, bits }) if wb == bits => match bits {
+            BitWidth::B4 => fullpack::gemv_wsub_asub_at::<4>(w, bytes, out, row0),
+            BitWidth::B2 => fullpack::gemv_wsub_asub_at::<2>(w, bytes, out, row0),
+            BitWidth::B1 => fullpack::gemv_wsub_asub_at::<1>(w, bytes, out, row0),
+            BitWidth::B8 => unreachable!(),
+        },
+        _ => return Err(KernelError::Unsupported(variant.name())),
+    }
+    Ok(())
+}
+
+/// GEMM (batch > 1) as repeated GEMV — the paper provides GEMV kernels
+/// only and routes GEMM to Ruy; this wrapper exists for completeness and
+/// for the router's fallback path.
+pub fn gemm(
+    w: &PackedMatrix,
+    acts: &[ActVec<'_>],
+    out: &mut [i32],
+) -> Result<(), KernelError> {
+    let z = w.rows();
+    if out.len() != z * acts.len() {
+        return Err(KernelError::Shape(format!(
+            "out len {} != rows*batch {}",
+            out.len(),
+            z * acts.len()
+        )));
+    }
+    for (b, a) in acts.iter().enumerate() {
+        gemv(w, *a, &mut out[b * z..(b + 1) * z])?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use crate::pack::BitWidth;
+
+    /// Deterministic xorshift values in the width's signed range.
+    pub fn rngvals(bits: BitWidth, n: usize, seed: u64) -> Vec<i8> {
+        let (lo, hi) = bits.value_range();
+        let span = (hi as i16 - lo as i16 + 1) as u64;
+        let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+        (0..n)
+            .map(|_| {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                (lo as i16 + (s % span) as i16) as i8
+            })
+            .collect()
+    }
+
+    /// int32 oracle GEMV on unpacked operands.
+    pub fn oracle_gemv(w: &[i8], a: &[i8], z: usize, k: usize) -> Vec<i32> {
+        (0..z)
+            .map(|r| {
+                w[r * k..(r + 1) * k]
+                    .iter()
+                    .zip(a)
+                    .map(|(&wv, &av)| wv as i32 * av as i32)
+                    .sum()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::*;
+    use super::*;
+    use crate::pack::{pack, PackedMatrix, Variant};
+
+    fn run_variant(variant: Variant, z: usize, k: usize, seed: u64) {
+        let kp = variant.padded_depth(k);
+        let mut w = rngvals(variant.w, z * k, seed);
+        let mut a = rngvals(variant.a, k, seed + 1);
+        // zero-pad to the common padded depth
+        let mut wfull = vec![0i8; z * kp];
+        for r in 0..z {
+            wfull[r * kp..r * kp + k].copy_from_slice(&w[r * k..(r + 1) * k]);
+        }
+        a.resize(kp, 0);
+        w = wfull;
+
+        let wp = PackedMatrix::from_i8(&w, z, kp, variant.w).unwrap();
+        let packed_a;
+        let act = if variant.a.is_sub_byte() {
+            packed_a = pack(&a, variant.a).unwrap();
+            ActVec::Packed { bytes: &packed_a, bits: variant.a }
+        } else {
+            ActVec::I8(&a)
+        };
+        let mut out = vec![0i32; z];
+        gemv(&wp, act, &mut out).unwrap();
+        assert_eq!(out, oracle_gemv(&w, &a, z, kp), "{variant} z={z} k={k}");
+    }
+
+    #[test]
+    fn all_nine_variants_match_oracle() {
+        for (i, v) in Variant::PAPER_VARIANTS.iter().enumerate() {
+            run_variant(*v, 24, 160, 1000 + i as u64);
+        }
+    }
+
+    #[test]
+    fn w8a8_dispatch_matches_oracle() {
+        run_variant(Variant::parse("w8a8").unwrap(), 16, 96, 77);
+    }
+
+    #[test]
+    fn unaligned_depths() {
+        for v in ["w4a8", "w2a2", "w1a1", "w8a4"] {
+            let v = Variant::parse(v).unwrap();
+            for k in [1usize, 17, 33, 127, 129] {
+                run_variant(v, 8, k, k as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn shape_errors() {
+        let w = PackedMatrix::from_i8(&[0i8; 64], 2, 32, BitWidth::B4).unwrap();
+        let a = [0i8; 32];
+        let mut bad_out = vec![0i32; 3];
+        assert!(gemv(&w, ActVec::I8(&a), &mut bad_out).is_err());
+        let short_a = [0i8; 16];
+        let mut out = vec![0i32; 2];
+        assert!(gemv(&w, ActVec::I8(&short_a), &mut out).is_err());
+    }
+
+    #[test]
+    fn gemm_wrapper_matches_per_column() {
+        let z = 8;
+        let k = 64;
+        let w = rngvals(BitWidth::B4, z * k, 5);
+        let wp = PackedMatrix::from_i8(&w, z, k, BitWidth::B4).unwrap();
+        let a0 = rngvals(BitWidth::B8, k, 6);
+        let a1 = rngvals(BitWidth::B8, k, 7);
+        let mut out = vec![0i32; 2 * z];
+        gemm(&wp, &[ActVec::I8(&a0), ActVec::I8(&a1)], &mut out).unwrap();
+        assert_eq!(&out[..z], oracle_gemv(&w, &a0, z, k).as_slice());
+        assert_eq!(&out[z..], oracle_gemv(&w, &a1, z, k).as_slice());
+    }
+}

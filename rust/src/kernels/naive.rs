@@ -1,0 +1,69 @@
+//! The naive sub-byte method (paper Alg. 1): adjacent packing, per-byte
+//! scalar extraction with shifts, FMA per element.  Same memory density
+//! as FullPack but the extraction overhead dominates — the strawman the
+//! packing/processing co-design beats.
+
+use crate::pack::BitWidth;
+
+/// Naive W-sub-byte × A-int8 GEMV over the adjacent (Alg. 1) layout.
+/// `w_naive` holds `rows` rows of `ceil(k/E)` bytes each.
+pub fn gemv_naive_wsub_a8(
+    w_naive: &[u8],
+    rows: usize,
+    k: usize,
+    bits: BitWidth,
+    a: &[i8],
+    out: &mut [i32],
+) {
+    let e = bits.elems_per_byte();
+    let b = bits.bits();
+    let bytes_per_row = k.div_ceil(e);
+    debug_assert!(a.len() >= k);
+    debug_assert_eq!(out.len(), rows);
+    let shift = 8 - b;
+    for (r, o) in out.iter_mut().enumerate() {
+        let row = &w_naive[r * bytes_per_row..(r + 1) * bytes_per_row];
+        let mut sum = 0i32;
+        for (byte_idx, &byte) in row.iter().enumerate() {
+            let base = byte_idx * e;
+            // Alg. 1 lines 6-11: extract each element with shift pairs,
+            // then FMA with the corresponding activation.
+            for sub in 0..e {
+                let i = base + sub;
+                if i >= k {
+                    break;
+                }
+                // element `sub` sits in the high-to-low order (Alg. 1:
+                // W0 = (W >> 4) << 4 is the *high* nibble)
+                let v = (byte >> ((e - 1 - sub) * b)) as u8;
+                let w = ((((v & (((1u16 << b) - 1) as u8)) << shift) as i8) >> shift) as i32;
+                sum += w * a[i] as i32;
+            }
+        }
+        *o = sum;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::testutil::{oracle_gemv, rngvals};
+    use crate::pack::pack_naive;
+
+    #[test]
+    fn naive_matches_oracle_all_widths() {
+        for bits in [BitWidth::B4, BitWidth::B2, BitWidth::B1] {
+            let z = 8;
+            let k = 100; // deliberately unaligned
+            let w = rngvals(bits, z * k, 41);
+            let a = rngvals(BitWidth::B8, k, 42);
+            let mut packed = Vec::new();
+            for r in 0..z {
+                packed.extend(pack_naive(&w[r * k..(r + 1) * k], bits).unwrap());
+            }
+            let mut out = vec![0i32; z];
+            gemv_naive_wsub_a8(&packed, z, k, bits, &a, &mut out);
+            assert_eq!(out, oracle_gemv(&w, &a, z, k), "{bits:?}");
+        }
+    }
+}

@@ -1,0 +1,109 @@
+//! Row-parallel GEMV: intra-op parallelism for the serving hot path.
+//!
+//! The DeepSpeech LSTM gate matrices are 4H×H (8192×2048 full size) —
+//! large enough that a single core leaves most of the socket idle while
+//! a request is being served.  `gemv_parallel` splits the output rows
+//! across a scoped thread pool; each shard runs the same single-thread
+//! FullPack kernel on a row-contiguous sub-matrix (the packed layout is
+//! row-independent by construction, §3.1), so results are bit-identical
+//! to the serial kernel.
+
+use super::{gemv, ActVec, KernelError};
+
+use crate::pack::PackedMatrix;
+
+/// Minimum rows per shard — below this the spawn overhead dominates.
+pub const MIN_ROWS_PER_SHARD: usize = 256;
+
+/// Row-sharded GEMV.  `threads = 1` (or small matrices) falls back to
+/// the serial kernel.  Output is bit-identical to [`gemv`].
+pub fn gemv_parallel(
+    wp: &PackedMatrix,
+    a: ActVec<'_>,
+    out: &mut [i32],
+    threads: usize,
+) -> Result<(), KernelError> {
+    let z = wp.rows();
+    if out.len() != z {
+        return Err(KernelError::Shape(format!("out len {} != rows {z}", out.len())));
+    }
+    let shards = threads.min(z / MIN_ROWS_PER_SHARD.max(1)).max(1);
+    if shards <= 1 {
+        return gemv(wp, a, out);
+    }
+    let rows_per = z.div_ceil(shards);
+    let results: Vec<Result<(), KernelError>> = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(shards);
+        let mut rest = &mut *out;
+        for s in 0..shards {
+            let lo = s * rows_per;
+            let hi = ((s + 1) * rows_per).min(z);
+            if lo >= hi {
+                break;
+            }
+            let (chunk, tail) = rest.split_at_mut(hi - lo);
+            rest = tail;
+            // zero-copy: each shard borrows the shared packed matrix and
+            // runs the serial kernel over its row range
+            handles.push(scope.spawn(move || super::gemv_at(wp, a, chunk, lo)));
+        }
+        handles.into_iter().map(|h| h.join().expect("shard panicked")).collect()
+    });
+    for r in results {
+        r?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::pack_activations;
+    use crate::kernels::testutil::{oracle_gemv, rngvals};
+    use crate::pack::{BitWidth, Variant};
+
+    #[test]
+    fn parallel_equals_serial_all_variants() {
+        for v in Variant::PAPER_VARIANTS {
+            let z = 1024; // enough rows to actually shard
+            let k = v.padded_depth(128);
+            let w = rngvals(v.w, z * k, 91);
+            let a = rngvals(v.a, k, 92);
+            let wp = PackedMatrix::from_i8(&w, z, k, v.w).unwrap();
+            let packed_a;
+            let act = if v.a.is_sub_byte() {
+                packed_a = pack_activations(&a, v.a).unwrap();
+                ActVec::Packed { bytes: &packed_a, bits: v.a }
+            } else {
+                ActVec::I8(&a)
+            };
+            let mut serial = vec![0i32; z];
+            gemv(&wp, act, &mut serial).unwrap();
+            for threads in [1, 2, 3, 4] {
+                let mut par = vec![0i32; z];
+                gemv_parallel(&wp, act, &mut par, threads).unwrap();
+                assert_eq!(par, serial, "{v} threads={threads}");
+            }
+            assert_eq!(serial, oracle_gemv(&w, &a, z, k), "{v}");
+        }
+    }
+
+    #[test]
+    fn small_matrix_falls_back_serial() {
+        let w = rngvals(BitWidth::B4, 8 * 32, 1);
+        let wp = PackedMatrix::from_i8(&w, 8, 32, BitWidth::B4).unwrap();
+        let a = rngvals(BitWidth::B8, 32, 2);
+        let mut out = vec![0i32; 8];
+        gemv_parallel(&wp, ActVec::I8(&a), &mut out, 8).unwrap();
+        assert_eq!(out, oracle_gemv(&w, &a, 8, 32));
+    }
+
+    #[test]
+    fn shape_error_propagates() {
+        let w = rngvals(BitWidth::B4, 8 * 32, 1);
+        let wp = PackedMatrix::from_i8(&w, 8, 32, BitWidth::B4).unwrap();
+        let a = rngvals(BitWidth::B8, 32, 2);
+        let mut bad = vec![0i32; 5];
+        assert!(gemv_parallel(&wp, ActVec::I8(&a), &mut bad, 4).is_err());
+    }
+}

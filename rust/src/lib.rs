@@ -1,0 +1,20 @@
+//! # FullPack — full vector utilization for sub-byte quantized inference
+//!
+//! Rust + JAX + Pallas reproduction of *"FullPack: Full Vector
+//! Utilization for Sub-Byte Quantized Inference on General Purpose
+//! CPUs"* (Katebi, Asadi, Goudarzi; 2022).
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
+//! paper-vs-measured experiment log.
+
+pub mod cli;
+pub mod coordinator;
+pub mod figures;
+pub mod costmodel;
+pub mod kernels;
+pub mod models;
+pub mod pack;
+pub mod quant;
+pub mod runtime;
+pub mod util;
+pub mod sim;

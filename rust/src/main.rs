@@ -1,0 +1,309 @@
+//! `fullpack` — leader entrypoint: figure regeneration, measured
+//! benches, the serving-engine demo, and PJRT artifact execution.
+
+use anyhow::{anyhow, bail, Result};
+use fullpack::cli::{Args, USAGE};
+use fullpack::coordinator::{BatcherConfig, Engine, EngineConfig, RouterConfig};
+use fullpack::costmodel::Method;
+use fullpack::figures::{e2e, ondevice, sweeps, SIZES, SIZES_QUICK};
+use fullpack::models::{DeepSpeech, DeepSpeechConfig};
+use fullpack::pack::Variant;
+use fullpack::runtime::{Runtime, Tensor};
+use fullpack::sim::CachePreset;
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if args.flag("help") || args.positionals.is_empty() {
+        print!("{USAGE}");
+        return;
+    }
+    let r = match args.pos(0).unwrap() {
+        "simulate" => cmd_simulate(&args),
+        "bench" => cmd_bench(&args),
+        "serve" => cmd_serve(&args),
+        "models" => cmd_models(&args),
+        "artifact" => cmd_artifact(&args),
+        other => Err(anyhow!("unknown command {other:?}\n\n{USAGE}")),
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn sizes(args: &Args) -> &'static [usize] {
+    if args.flag("quick") {
+        &SIZES_QUICK
+    } else {
+        &SIZES
+    }
+}
+
+fn emit_csv(dir: Option<&str>, report: &sweeps::FigureReport) -> Result<()> {
+    let Some(dir) = dir else { return Ok(()) };
+    std::fs::create_dir_all(dir)?;
+    for (name, table) in &report.tables {
+        let slug: String = name
+            .chars()
+            .map(|c| if c.is_alphanumeric() { c.to_ascii_lowercase() } else { '_' })
+            .collect();
+        std::fs::write(format!("{dir}/{}_{slug}.csv", report.id), table.to_csv())?;
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    if args.flag("show-config") {
+        let preset = CachePreset::parse(args.opt_or("preset", "gem5"))
+            .ok_or_else(|| anyhow!("unknown preset"))?;
+        let h = preset.build();
+        println!("preset: {} ({} levels, mem latency {} cycles)", preset.name(), h.depth(), h.mem_latency);
+        for i in 0..h.depth() {
+            let c = h.level_config(i);
+            println!(
+                "  {}: {} KB, {}B lines, {}-way, {}-cycle hits",
+                c.name,
+                c.size / 1024,
+                c.line,
+                c.assoc,
+                c.hit_latency
+            );
+        }
+        return Ok(());
+    }
+    let which = args.pos(1).unwrap_or("all");
+    let sz = sizes(args);
+    let csv = args.opt("csv");
+    let run = |id: &str| -> Result<()> {
+        let report = match id {
+            "fig4" => sweeps::fig4(sz),
+            "fig5" => sweeps::fig5(sz),
+            "fig6" => sweeps::fig6(sz),
+            "fig7" => sweeps::fig7(sz),
+            "fig8" => sweeps::fig8(sz),
+            "fig12" => sweeps::fig12(sz),
+            "fig13" => sweeps::fig13(sz),
+            "fig10" | "fig1" => {
+                let (table, totals) = e2e::fig10(DeepSpeechConfig::FULL);
+                println!("=== fig10 (DeepSpeech per-layer breakdown, simulated) ===\n");
+                table.print();
+                let base = totals.iter().find(|(n, _)| n == "Ruy-W8A8").unwrap().1;
+                println!("\nend-to-end speedup vs Ruy-W8A8:");
+                for (name, total) in &totals {
+                    println!("  {name:>16}: {:.2}x", base / total);
+                }
+                let share = e2e::lstm_share(Method::RuyW8A8, Method::RuyW8A8, DeepSpeechConfig::FULL);
+                println!("\nfig1 headline — LSTM share of Ruy-W8A8 runtime: {:.0}%", share * 100.0);
+                if let Some(dir) = csv {
+                    std::fs::create_dir_all(dir)?;
+                    std::fs::write(format!("{dir}/fig10_breakdown.csv"), table.to_csv())?;
+                }
+                return Ok(());
+            }
+            other => bail!("unknown figure {other:?}"),
+        };
+        report.print();
+        emit_csv(csv, &report)
+    };
+    if which == "all" {
+        for id in ["fig4", "fig5", "fig6", "fig7", "fig8", "fig10", "fig12", "fig13"] {
+            run(id)?;
+        }
+        Ok(())
+    } else {
+        run(which)
+    }
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    match args.pos(1) {
+        Some("fig11") => {
+            let ms = args.opt_usize("ms", 30).map_err(|e| anyhow!(e))? as u64;
+            println!("=== fig11 (measured CNN FC layers; host = RPi-4 substitution) ===\n");
+            let (table, geo) = ondevice::fig11(3, ms);
+            table.print();
+            println!("\ngeomean speedups vs ruy-w8a8:");
+            for (m, g) in geo {
+                println!("  {m:>14}: {g:.2}x");
+            }
+            Ok(())
+        }
+        Some("deepspeech") => {
+            let variant = Variant::parse(args.opt_or("variant", "w4a8"))
+                .map_err(|e| anyhow!("bad variant: {e}"))?;
+            let cfg = if args.flag("tiny") { DeepSpeechConfig::TINY } else { DeepSpeechConfig::FULL };
+            let mut model = DeepSpeech::new(cfg, variant, 7);
+            model.intra_op_threads =
+                args.opt_usize("intra-threads", 1).map_err(|e| anyhow!(e))?;
+            let frames: Vec<f32> =
+                (0..cfg.time_steps * cfg.n_input).map(|i| (i as f32 * 0.01).sin()).collect();
+            // warmup + 5 measured runs, keep the best
+            let mut best: Option<Vec<(&'static str, u128)>> = None;
+            let mut best_total = u128::MAX;
+            model.forward_timed(&frames);
+            for _ in 0..5 {
+                let (_, times) = model.forward_timed(&frames);
+                let total: u128 = times.iter().map(|(_, t)| t).sum();
+                if total < best_total {
+                    best_total = total;
+                    best = Some(times);
+                }
+            }
+            let times = best.unwrap();
+            println!(
+                "deepspeech {variant} (T={} input={} hidden={}): total {:.3} ms",
+                cfg.time_steps,
+                cfg.n_input,
+                cfg.n_hidden,
+                best_total as f64 / 1e6
+            );
+            if args.flag("breakdown") {
+                for (name, ns) in &times {
+                    println!(
+                        "  {name:>5}: {:>9.3} ms  ({:>4.1}%)",
+                        *ns as f64 / 1e6,
+                        *ns as f64 / best_total as f64 * 100.0
+                    );
+                }
+            }
+            Ok(())
+        }
+        _ => bail!("bench expects fig11|deepspeech"),
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let requests = args.opt_usize("requests", 32).map_err(|e| anyhow!(e))?;
+    // config file takes precedence over ad-hoc flags
+    let (engine_cfg, roster) = if let Some(path) = args.opt("config") {
+        let fc = fullpack::coordinator::FileConfig::load(path)?;
+        (fc.engine, fc.models)
+    } else {
+        let variant = Variant::parse(args.opt_or("variant", "w4a8"))
+            .map_err(|e| anyhow!("bad variant: {e}"))?;
+        let workers = args.opt_usize("workers", 2).map_err(|e| anyhow!(e))?;
+        let cfg = if args.flag("tiny") { DeepSpeechConfig::TINY } else { DeepSpeechConfig::FULL };
+        (
+            EngineConfig { workers, batcher: BatcherConfig::default(), router: RouterConfig::default() },
+            vec![fullpack::coordinator::ModelSpec {
+                name: "deepspeech".into(),
+                variant,
+                config: cfg,
+                seed: 7,
+            }],
+        )
+    };
+    let intra = args.opt_usize("intra-threads", 1).map_err(|e| anyhow!(e))?;
+    let engine = Engine::new(engine_cfg);
+    let mut first = None;
+    for spec in &roster {
+        let mut model = DeepSpeech::new(spec.config, spec.variant, spec.seed);
+        model.intra_op_threads = intra;
+        engine.register_model(&spec.name, model);
+        println!("registered {} ({}, hidden {})", spec.name, spec.variant, spec.config.n_hidden);
+        first.get_or_insert((spec.name.clone(), spec.config));
+    }
+    let (target, cfg) = first.ok_or_else(|| anyhow!("config has no models"))?;
+    println!("serving {target} ({} workers, {requests} requests)...", engine_cfg.workers);
+    let frames: Vec<f32> =
+        (0..cfg.time_steps * cfg.n_input).map(|i| (i as f32 * 0.01).sin()).collect();
+    let rxs: Vec<_> = (0..requests)
+        .map(|_| engine.submit(&target, frames.clone()))
+        .collect::<Result<_>>()?;
+    for rx in rxs {
+        rx.recv().map_err(|_| anyhow!("engine dropped request"))??;
+    }
+    println!("metrics: {}", engine.metrics().summary());
+    let (gemv, gemm) = engine.router().counts();
+    println!("router:  gemv(FullPack)={gemv} gemm(Ruy)={gemm}");
+    engine.shutdown();
+    Ok(())
+}
+
+fn cmd_models(args: &Args) -> Result<()> {
+    match (args.pos(1), args.pos(2)) {
+        (Some("show"), Some("deepspeech")) => {
+            let cfg = DeepSpeechConfig::FULL;
+            let model = DeepSpeech::new(cfg, Variant::parse("w4a8").unwrap(), 7);
+            println!(
+                "DeepSpeech (paper Fig. 9): input {}, hidden {}, output {}, T={}",
+                cfg.n_input, cfg.n_hidden, cfg.n_output, cfg.time_steps
+            );
+            for l in &model.layers {
+                println!("  {:>5}: {:?} {}x{}", l.name, l.kind, l.z, l.k);
+            }
+            println!("weight footprint (w4a8): {:.1} MB", model.weight_footprint() as f64 / 1e6);
+            Ok(())
+        }
+        _ => bail!("models expects: show deepspeech"),
+    }
+}
+
+fn cmd_artifact(args: &Args) -> Result<()> {
+    let dir = args.opt_or("dir", "artifacts");
+    let rt = Runtime::load(dir)?;
+    match args.pos(1) {
+        Some("list") => {
+            println!("{} artifacts (VL={}):", rt.manifest().artifacts.len(), rt.manifest().vl);
+            for a in &rt.manifest().artifacts {
+                println!(
+                    "  {:<28} kind={:<10} variant={:<5} inputs={}",
+                    a.name,
+                    a.kind,
+                    a.variant,
+                    a.inputs.len()
+                );
+            }
+            Ok(())
+        }
+        Some("run") => {
+            let name = args.pos(2).ok_or_else(|| anyhow!("artifact run <name>"))?;
+            let meta = rt
+                .manifest()
+                .get(name)
+                .ok_or_else(|| anyhow!("unknown artifact {name:?}"))?
+                .clone();
+            // synthesize small deterministic inputs per the manifest
+            let inputs: Vec<Tensor> = meta
+                .inputs
+                .iter()
+                .map(|spec| {
+                    let n = spec.elems();
+                    match spec.dtype {
+                        fullpack::runtime::DType::S8 => Tensor::s8(
+                            (0..n).map(|i| (i % 3) as i8 - 1).collect(),
+                            spec.shape.clone(),
+                        ),
+                        fullpack::runtime::DType::U8 => Tensor::u8(
+                            (0..n).map(|i| (i % 16) as u8).collect(),
+                            spec.shape.clone(),
+                        ),
+                        fullpack::runtime::DType::S32 => Tensor::s32(vec![0; n], spec.shape.clone()),
+                        fullpack::runtime::DType::F32 => Tensor::f32(
+                            (0..n).map(|i| (i as f32 * 0.01).sin() * 0.1).collect(),
+                            spec.shape.clone(),
+                        ),
+                    }
+                })
+                .collect();
+            let t0 = std::time::Instant::now();
+            let out = rt.execute(name, &inputs)?;
+            println!(
+                "{name}: {} outputs in {:.2} ms (compile included on first call)",
+                out.len(),
+                t0.elapsed().as_secs_f64() * 1e3
+            );
+            for (i, t) in out.iter().enumerate() {
+                println!("  out[{i}]: {} x{} {:?}", t.dtype().name(), t.len(), &t.shape);
+            }
+            Ok(())
+        }
+        _ => bail!("artifact expects list|run"),
+    }
+}

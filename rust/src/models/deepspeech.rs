@@ -1,0 +1,377 @@
+//! The DeepSpeech-like network (paper Fig. 9) as a Rust layer graph with
+//! per-layer method assignment — the paper's split: FullPack on the
+//! single-batch LSTM GEMVs, Ruy-W8A8 on the batch-16 FC GEMMs (§4.6).
+//!
+//! Weights are synthetic (DESIGN.md substitution table: end-to-end
+//! timing depends on shapes and the GEMV/GEMM split, not weight values)
+//! and generated deterministically from a seed so Rust and Python twins
+//! agree on shapes.
+
+use crate::kernels::{self, ActVec};
+use crate::pack::{BitWidth, PackedMatrix, Variant};
+use crate::quant::requantize_vec;
+
+/// Shape configuration (defaults = Mozilla DeepSpeech v0.9).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DeepSpeechConfig {
+    pub n_input: usize,
+    pub n_hidden: usize,
+    pub n_output: usize,
+    /// LSTM unroll length == FC batch (paper: 16)
+    pub time_steps: usize,
+}
+
+impl DeepSpeechConfig {
+    pub const FULL: DeepSpeechConfig =
+        DeepSpeechConfig { n_input: 494, n_hidden: 2048, n_output: 32, time_steps: 16 };
+
+    /// Tiny config matching `python/compile/model.py::TINY`.
+    pub const TINY: DeepSpeechConfig =
+        DeepSpeechConfig { n_input: 64, n_hidden: 128, n_output: 32, time_steps: 4 };
+
+    pub fn gate_dim(&self) -> usize {
+        4 * self.n_hidden
+    }
+}
+
+/// What kind of compute a layer performs — drives the router's
+/// GEMV-vs-GEMM path choice (paper §4.6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    /// batch-16 FullyConnected (GEMM; Ruy-W8A8 path)
+    FcBatch,
+    /// single-batch LSTM step GEMVs (FullPack path)
+    LstmStep,
+}
+
+/// One layer of the Fig. 9 graph.
+#[derive(Debug)]
+pub struct Layer {
+    pub name: &'static str,
+    pub kind: LayerKind,
+    pub z: usize,
+    pub k: usize,
+}
+
+/// The assembled model: quantized weights packed per the chosen variant
+/// for the LSTM, W8A8 for the FC stack.
+pub struct DeepSpeech {
+    pub config: DeepSpeechConfig,
+    pub variant: Variant,
+    pub layers: Vec<Layer>,
+    /// FC weights, always W8A8 (paper routes GEMM to Ruy)
+    pub fc_weights: Vec<PackedMatrix>,
+    pub fc_biases: Vec<Vec<f32>>,
+    /// LSTM gate weights `[wx, wh]`, packed per `variant.w`
+    pub lstm_wx: PackedMatrix,
+    pub lstm_wh: PackedMatrix,
+    pub lstm_bias: Vec<f32>,
+    pub s_x: f32,
+    pub s_h: f32,
+    pub s_w: f32,
+    /// intra-op row-parallelism for the LSTM gate GEMVs (1 = serial;
+    /// results are bit-identical either way — `kernels::parallel`)
+    pub intra_op_threads: usize,
+}
+
+fn xorshift_vals(bits: BitWidth, n: usize, seed: u64) -> Vec<i8> {
+    let (lo, hi) = bits.value_range();
+    let span = (hi as i16 - lo as i16 + 1) as u64;
+    let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+    (0..n)
+        .map(|_| {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            (lo as i16 + (s % span) as i16) as i8
+        })
+        .collect()
+}
+
+impl DeepSpeech {
+    /// Build with synthetic weights.  `variant` applies to the LSTM
+    /// GEMVs; FC layers are W8A8 as in the paper's end-to-end setup.
+    pub fn new(config: DeepSpeechConfig, variant: Variant, seed: u64) -> Self {
+        let h = config.n_hidden;
+        let layers = vec![
+            Layer { name: "fc1", kind: LayerKind::FcBatch, z: h, k: config.n_input },
+            Layer { name: "fc2", kind: LayerKind::FcBatch, z: h, k: h },
+            Layer { name: "fc3", kind: LayerKind::FcBatch, z: h, k: h },
+            Layer { name: "lstm", kind: LayerKind::LstmStep, z: config.gate_dim(), k: 2 * h },
+            Layer { name: "fc5", kind: LayerKind::FcBatch, z: h, k: h },
+            Layer { name: "fc6", kind: LayerKind::FcBatch, z: config.n_output, k: h },
+        ];
+        let mut fc_weights = Vec::new();
+        let mut fc_biases = Vec::new();
+        for (i, l) in layers.iter().enumerate() {
+            if l.kind == LayerKind::FcBatch {
+                let w = xorshift_vals(BitWidth::B8, l.z * l.k, seed + i as u64);
+                fc_weights.push(PackedMatrix::from_i8(&w, l.z, l.k, BitWidth::B8).unwrap());
+                fc_biases.push(vec![0.01; l.z]);
+            }
+        }
+        let kp = variant.padded_depth(h);
+        let mk = |s| {
+            let mut w = xorshift_vals(variant.w, config.gate_dim() * h, s);
+            if kp != h {
+                // zero-pad each row to the group-aligned depth
+                let mut padded = vec![0i8; config.gate_dim() * kp];
+                for r in 0..config.gate_dim() {
+                    padded[r * kp..r * kp + h].copy_from_slice(&w[r * h..(r + 1) * h]);
+                }
+                w = padded;
+            }
+            PackedMatrix::from_i8(&w, config.gate_dim(), kp, variant.w).unwrap()
+        };
+        let lstm_wx = mk(seed + 100);
+        let lstm_wh = mk(seed + 101);
+        let mut lstm_bias = vec![0.0f32; config.gate_dim()];
+        lstm_bias[h..2 * h].fill(1.0); // forget-gate bias 1
+        let (_, ahi) = variant.a.value_range();
+        DeepSpeech {
+            intra_op_threads: 1,
+            config,
+            variant,
+            layers,
+            fc_weights,
+            fc_biases,
+            lstm_wx,
+            lstm_wh,
+            lstm_bias,
+            s_x: 0.05,
+            s_h: if ahi > 0 { 1.0 / ahi as f32 } else { 1.0 },
+            s_w: 0.02,
+        }
+    }
+
+    /// Quantize an f32 vector to the variant's activation width.
+    fn quant_act(&self, x: &[f32], scale: f32) -> Vec<i8> {
+        let (lo, hi) = self.variant.a.value_range();
+        x.iter()
+            .map(|&v| (v / scale).round().clamp(lo as f32, hi as f32) as i8)
+            .collect()
+    }
+
+    /// One LSTM step over the native kernels (the FullPack hot path).
+    /// `x` is the quantized input (padded to the gate matrices' depth),
+    /// `h_q` the quantized previous hidden state, `c` the f32 cell.
+    /// Returns `(h_f32, c_next)`.
+    pub fn lstm_step(
+        &self,
+        x_q: &[i8],
+        h_q: &[i8],
+        c: &[f32],
+        scratch: &mut LstmScratch,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let hdim = self.config.n_hidden;
+        let gd = self.config.gate_dim();
+        let kp = self.lstm_wx.k_padded();
+        debug_assert_eq!(x_q.len(), kp);
+        debug_assert_eq!(h_q.len(), kp);
+
+        let threads = self.intra_op_threads.max(1);
+        let run = |w: &PackedMatrix, a: &[i8], out: &mut [i32], buf: &mut Vec<u8>| {
+            if self.variant.a.is_sub_byte() {
+                buf.clear();
+                buf.extend(crate::pack::pack_unchecked(a, self.variant.a));
+                let act = ActVec::Packed { bytes: buf, bits: self.variant.a };
+                kernels::parallel::gemv_parallel(w, act, out, threads).expect("lstm gemv");
+            } else {
+                kernels::parallel::gemv_parallel(w, ActVec::I8(a), out, threads)
+                    .expect("lstm gemv");
+            }
+        };
+        scratch.acc_x.resize(gd, 0);
+        scratch.acc_h.resize(gd, 0);
+        run(&self.lstm_wx, x_q, &mut scratch.acc_x, &mut scratch.pack_buf);
+        run(&self.lstm_wh, h_q, &mut scratch.acc_h, &mut scratch.pack_buf);
+
+        let gates_x = requantize_vec(&scratch.acc_x, self.s_w, self.s_x, &self.lstm_bias);
+        let sig = |v: f32| 1.0 / (1.0 + (-v).exp());
+        let mut h_new = vec![0.0f32; hdim];
+        let mut c_new = vec![0.0f32; hdim];
+        for j in 0..hdim {
+            let g_h = |lane: usize| scratch.acc_h[lane] as f32 * (self.s_w * self.s_h);
+            let i = sig(gates_x[j] + g_h(j));
+            let f = sig(gates_x[hdim + j] + g_h(hdim + j));
+            let g = (gates_x[2 * hdim + j] + g_h(2 * hdim + j)).tanh();
+            let o = sig(gates_x[3 * hdim + j] + g_h(3 * hdim + j));
+            c_new[j] = f * c[j] + i * g;
+            h_new[j] = o * c_new[j].tanh();
+        }
+        (h_new, c_new)
+    }
+
+    /// Full forward over `frames` (time_steps × n_input, row-major f32):
+    /// FC stack (batch GEMM) → LSTM scan (per-step GEMVs) → FC stack.
+    /// Returns (logits, per-layer elapsed nanoseconds) — the per-layer
+    /// breakdown is exactly what Fig. 1 / Fig. 10 plot.
+    pub fn forward_timed(&self, frames: &[f32]) -> (Vec<f32>, Vec<(&'static str, u128)>) {
+        let cfg = self.config;
+        let t = cfg.time_steps;
+        assert_eq!(frames.len(), t * cfg.n_input);
+        let mut times = Vec::new();
+        let s_act = 0.05f32;
+
+        // FC front-end (batch GEMM, W8A8 — Ruy path)
+        let mut cur: Vec<f32> = frames.to_vec();
+        let mut dim = cfg.n_input;
+        let mut fc_idx = 0;
+        for name in ["fc1", "fc2", "fc3"] {
+            let start = std::time::Instant::now();
+            cur = self.fc_forward(fc_idx, &cur, t, dim, s_act, true);
+            dim = self.fc_weights[fc_idx].rows();
+            times.push((name, start.elapsed().as_nanos()));
+            fc_idx += 1;
+        }
+
+        // LSTM scan — single-batch steps (FullPack path)
+        let start = std::time::Instant::now();
+        let hdim = cfg.n_hidden;
+        let kp = self.lstm_wx.k_padded();
+        let mut h_q = vec![0i8; kp];
+        let mut c = vec![0.0f32; hdim];
+        let mut hs = vec![0.0f32; t * hdim];
+        let mut scratch = LstmScratch::default();
+        for step in 0..t {
+            let x = &cur[step * hdim..(step + 1) * hdim];
+            let mut x_q = self.quant_act(x, self.s_x);
+            x_q.resize(kp, 0);
+            let (h_f, c_n) = self.lstm_step(&x_q, &h_q, &c, &mut scratch);
+            let mut hq = self.quant_act(&h_f, self.s_h);
+            hq.resize(kp, 0);
+            h_q = hq;
+            c = c_n;
+            hs[step * hdim..(step + 1) * hdim].copy_from_slice(&h_f);
+        }
+        times.push(("lstm", start.elapsed().as_nanos()));
+
+        // FC back-end
+        let mut out = hs;
+        let mut dim2 = hdim;
+        for name in ["fc5", "fc6"] {
+            let start = std::time::Instant::now();
+            let relu = name == "fc5";
+            out = self.fc_forward(fc_idx, &out, t, dim2, s_act, relu);
+            dim2 = self.fc_weights[fc_idx].rows();
+            times.push((name, start.elapsed().as_nanos()));
+            fc_idx += 1;
+        }
+        (out, times)
+    }
+
+    fn fc_forward(
+        &self,
+        idx: usize,
+        x: &[f32],
+        batch: usize,
+        k: usize,
+        s_act: f32,
+        relu: bool,
+    ) -> Vec<f32> {
+        let w = &self.fc_weights[idx];
+        let z = w.rows();
+        debug_assert_eq!(w.k(), k);
+        // quantize activations to int8
+        let xq: Vec<i8> = x
+            .iter()
+            .map(|&v| (v / s_act).round().clamp(-128.0, 127.0) as i8)
+            .collect();
+        let mut acc = vec![0i32; batch * z];
+        crate::kernels::baseline::gemm_ruy_i8(w, &xq, batch, &mut acc);
+        let s = s_act * self.s_w;
+        let bias = &self.fc_biases[idx];
+        let mut out = vec![0.0f32; batch * z];
+        for b in 0..batch {
+            for j in 0..z {
+                let v = acc[b * z + j] as f32 * s + bias[j];
+                out[b * z + j] = if relu { v.clamp(0.0, 20.0) } else { v };
+            }
+        }
+        out
+    }
+
+    /// Total weight footprint in bytes (capacity metric).
+    pub fn weight_footprint(&self) -> usize {
+        self.fc_weights.iter().map(|w| w.footprint()).sum::<usize>()
+            + self.lstm_wx.footprint()
+            + self.lstm_wh.footprint()
+    }
+}
+
+/// Reusable buffers for the LSTM hot loop (no allocation per step).
+#[derive(Default)]
+pub struct LstmScratch {
+    acc_x: Vec<i32>,
+    acc_h: Vec<i32>,
+    pack_buf: Vec<u8>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_shapes_all_variants() {
+        let cfg = DeepSpeechConfig::TINY;
+        let frames = vec![0.1f32; cfg.time_steps * cfg.n_input];
+        for v in Variant::PAPER_VARIANTS {
+            let m = DeepSpeech::new(cfg, v, 7);
+            let (out, times) = m.forward_timed(&frames);
+            assert_eq!(out.len(), cfg.time_steps * cfg.n_output, "{v}");
+            assert!(out.iter().all(|x| x.is_finite()), "{v}");
+            assert_eq!(times.len(), 6);
+            assert_eq!(times[3].0, "lstm");
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let cfg = DeepSpeechConfig::TINY;
+        let frames: Vec<f32> = (0..cfg.time_steps * cfg.n_input)
+            .map(|i| (i as f32 * 0.01).sin())
+            .collect();
+        let v = Variant::parse("w4a8").unwrap();
+        let a = DeepSpeech::new(cfg, v, 7).forward_timed(&frames).0;
+        let b = DeepSpeech::new(cfg, v, 7).forward_timed(&frames).0;
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn footprint_shrinks_with_bits() {
+        let cfg = DeepSpeechConfig::TINY;
+        let f8 = DeepSpeech::new(cfg, Variant::parse("w8a8").unwrap(), 1).weight_footprint();
+        let f4 = DeepSpeech::new(cfg, Variant::parse("w4a4").unwrap(), 1).weight_footprint();
+        let f1 = DeepSpeech::new(cfg, Variant::parse("w1a1").unwrap(), 1).weight_footprint();
+        assert!(f4 < f8 && f1 < f4);
+    }
+
+    #[test]
+    fn lstm_step_matches_scalar_reference() {
+        // cross-check the packed LSTM gates against a direct i32 GEMV
+        let cfg = DeepSpeechConfig::TINY;
+        let v = Variant::parse("w4a8").unwrap();
+        let m = DeepSpeech::new(cfg, v, 3);
+        let kp = m.lstm_wx.k_padded();
+        let x_q = vec![1i8; kp];
+        let h_q = vec![0i8; kp];
+        let c = vec![0.0f32; cfg.n_hidden];
+        let mut scratch = LstmScratch::default();
+        let (h, c2) = m.lstm_step(&x_q, &h_q, &c, &mut scratch);
+        // oracle for gate 0 lane 0
+        let wx = m.lstm_wx.unpack_all();
+        let acc: i32 = wx[..kp].iter().map(|&w| w as i32).sum();
+        let gate0 = acc as f32 * (m.s_w * m.s_x) + m.lstm_bias[0];
+        let sig = |v: f32| 1.0 / (1.0 + (-v).exp());
+        let hdim = cfg.n_hidden;
+        let accf = |r: usize| -> f32 {
+            wx[r * kp..(r + 1) * kp].iter().map(|&w| w as i32).sum::<i32>() as f32
+                * (m.s_w * m.s_x)
+                + m.lstm_bias[r]
+        };
+        let c_expect = sig(accf(hdim)) * 0.0 + sig(gate0) * accf(2 * hdim).tanh();
+        let h_expect = sig(accf(3 * hdim)) * c_expect.tanh();
+        assert!((c2[0] - c_expect).abs() < 1e-4);
+        assert!((h[0] - h_expect).abs() < 1e-4);
+    }
+}

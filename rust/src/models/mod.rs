@@ -1,0 +1,46 @@
+//! Model definitions: the DeepSpeech-like network of the paper's
+//! end-to-end evaluation (Fig. 9) and the CNN FC-layer zoo of the
+//! on-device study (Fig. 11).
+
+pub mod deepspeech;
+
+pub use deepspeech::{DeepSpeech, DeepSpeechConfig, Layer, LayerKind};
+
+/// One FullyConnected layer shape: `z` outputs from `k` inputs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FcShape {
+    pub name: &'static str,
+    pub k: usize,
+    pub z: usize,
+}
+
+/// Final-classifier FC layers of the eleven CNNs in the paper's §4.7
+/// Raspberry Pi study (feature dim → 1000 ImageNet classes; VGG19 also
+/// carries its two 4096-wide FC layers, we use the classifier head as
+/// the paper's figure does).
+pub const CNN_FC_ZOO: [FcShape; 11] = [
+    FcShape { name: "DenseNet201", k: 1920, z: 1000 },
+    FcShape { name: "EfficientNetV2L", k: 1280, z: 1000 },
+    FcShape { name: "InceptionV3", k: 2048, z: 1000 },
+    FcShape { name: "InceptionResNetV2", k: 1536, z: 1000 },
+    FcShape { name: "MobileNetV2", k: 1280, z: 1000 },
+    FcShape { name: "NASNetLarge", k: 4032, z: 1000 },
+    FcShape { name: "RegNetY320", k: 3712, z: 1000 },
+    FcShape { name: "ResNet152", k: 2048, z: 1000 },
+    FcShape { name: "ResNet152V2", k: 2048, z: 1000 },
+    FcShape { name: "VGG19", k: 4096, z: 1000 },
+    FcShape { name: "Xception", k: 2048, z: 1000 },
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_has_eleven_networks() {
+        assert_eq!(CNN_FC_ZOO.len(), 11);
+        for fc in CNN_FC_ZOO {
+            assert!(fc.k >= 1000 && fc.z == 1000, "{}", fc.name);
+        }
+    }
+}

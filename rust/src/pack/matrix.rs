@@ -1,0 +1,266 @@
+//! Packed matrix containers: row-major matrices whose rows are packed
+//! independently (paper §3.1 — "repeated again for all other sets of
+//! rows"), plus the ULPPACK comparison container.
+
+use super::{pack, pack_ulppack, unpack, BitWidth, PackError, VL};
+
+/// A `rows × k` matrix of signed `bits`-wide values in FullPack layout
+/// (or plain int8 for `BitWidth::B8`).  Rows are packed independently so
+/// the GEMV kernels can stream one row at a time.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PackedMatrix {
+    data: Vec<u8>,
+    rows: usize,
+    /// logical (unpadded) depth
+    k: usize,
+    /// group-padded depth
+    k_padded: usize,
+    bits: BitWidth,
+    bytes_per_row: usize,
+}
+
+impl PackedMatrix {
+    /// Pack from a row-major `rows × k` signed int8 matrix.
+    pub fn from_i8(w: &[i8], rows: usize, k: usize, bits: BitWidth) -> Result<Self, PackError> {
+        assert_eq!(w.len(), rows * k, "matrix data length mismatch");
+        if bits.is_sub_byte() {
+            let bytes_per_row = bits.packed_bytes(k);
+            let mut data = Vec::with_capacity(rows * bytes_per_row);
+            for r in 0..rows {
+                data.extend(pack(&w[r * k..(r + 1) * k], bits)?);
+            }
+            Ok(PackedMatrix {
+                data,
+                rows,
+                k,
+                k_padded: bits.padded_len(k),
+                bits,
+                bytes_per_row,
+            })
+        } else {
+            Ok(PackedMatrix {
+                data: w.iter().map(|&v| v as u8).collect(),
+                rows,
+                k,
+                k_padded: k,
+                bits,
+                bytes_per_row: k,
+            })
+        }
+    }
+
+    /// Adopt pre-packed bytes (e.g. read from disk or produced by the
+    /// Python pack twin).  Validates the byte count.
+    pub fn from_packed(
+        data: Vec<u8>,
+        rows: usize,
+        k: usize,
+        bits: BitWidth,
+    ) -> Result<Self, PackError> {
+        let bytes_per_row = bits.packed_bytes(k);
+        if bits.is_sub_byte() && bytes_per_row % VL != 0 {
+            return Err(PackError::BadPackedLen(bytes_per_row));
+        }
+        assert_eq!(data.len(), rows * bytes_per_row, "packed data length mismatch");
+        Ok(PackedMatrix {
+            data,
+            rows,
+            k,
+            k_padded: bits.padded_len(k),
+            bits,
+            bytes_per_row,
+        })
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    #[inline]
+    pub fn k_padded(&self) -> usize {
+        self.k_padded
+    }
+
+    #[inline]
+    pub fn bits(&self) -> BitWidth {
+        self.bits
+    }
+
+    #[inline]
+    pub fn bytes_per_row(&self) -> usize {
+        self.bytes_per_row
+    }
+
+    /// Packed bytes of row `r`.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[u8] {
+        &self.data[r * self.bytes_per_row..(r + 1) * self.bytes_per_row]
+    }
+
+    /// Row `r` as signed int8 (only valid for `B8` matrices).
+    #[inline]
+    pub fn row_i8(&self, r: usize) -> &[i8] {
+        debug_assert!(!self.bits.is_sub_byte());
+        let row = self.row(r);
+        // SAFETY: i8 and u8 have identical layout.
+        unsafe { std::slice::from_raw_parts(row.as_ptr() as *const i8, row.len()) }
+    }
+
+    /// Whole packed buffer (for PJRT literal upload / serialization).
+    #[inline]
+    pub fn bytes(&self) -> &[u8] {
+        &self.data
+    }
+
+    /// Total footprint in bytes — the paper's memory-capacity metric.
+    #[inline]
+    pub fn footprint(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Unpack row `r` to int8 (oracle/debug path).
+    pub fn unpack_row(&self, r: usize) -> Vec<i8> {
+        if self.bits.is_sub_byte() {
+            unpack(self.row(r), self.bits, self.k).expect("valid packed row")
+        } else {
+            self.row_i8(r).to_vec()
+        }
+    }
+
+    /// Unpack the whole matrix to row-major int8 (oracle/debug path).
+    pub fn unpack_all(&self) -> Vec<i8> {
+        let mut out = Vec::with_capacity(self.rows * self.k);
+        for r in 0..self.rows {
+            out.extend(self.unpack_row(r));
+        }
+        out
+    }
+}
+
+/// ULPPACK-layout matrix: unsigned values with zero point, two per u16
+/// lane (baseline comparator; see `pack_ulppack`).
+#[derive(Debug, Clone)]
+pub struct UlppackMatrix {
+    data: Vec<u16>,
+    rows: usize,
+    k: usize,
+    bits: BitWidth,
+    lanes_per_row: usize,
+    /// zero point added when converting from the signed domain.
+    pub zero_point: u8,
+}
+
+impl UlppackMatrix {
+    /// Pack from signed int8 by shifting to the unsigned domain
+    /// (`zero_point = 2^(b-1)`).
+    pub fn from_i8(w: &[i8], rows: usize, k: usize, bits: BitWidth) -> Result<Self, PackError> {
+        assert_eq!(w.len(), rows * k);
+        let zp = 1u8 << (bits.bits() - 1);
+        let lanes_per_row = k.div_ceil(2);
+        let mut data = Vec::with_capacity(rows * lanes_per_row);
+        for r in 0..rows {
+            let row: Vec<u8> = w[r * k..(r + 1) * k]
+                .iter()
+                .map(|&v| (v as i16 + zp as i16) as u8)
+                .collect();
+            data.extend(pack_ulppack(&row, bits)?);
+        }
+        Ok(UlppackMatrix {
+            data,
+            rows,
+            k,
+            bits,
+            lanes_per_row,
+            zero_point: zp,
+        })
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    #[inline]
+    pub fn bits(&self) -> BitWidth {
+        self.bits
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[u16] {
+        &self.data[r * self.lanes_per_row..(r + 1) * self.lanes_per_row]
+    }
+
+    /// Footprint in bytes — 2 bytes per 2 values regardless of b: the
+    /// spacer waste FullPack eliminates.
+    #[inline]
+    pub fn footprint(&self) -> usize {
+        self.data.len() * 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_roundtrip() {
+        let rows = 4;
+        let k = 40; // unaligned: pads to 64 for 4-bit
+        let w: Vec<i8> = (0..rows * k).map(|i| ((i % 15) as i8) - 7).collect();
+        let m = PackedMatrix::from_i8(&w, rows, k, BitWidth::B4).unwrap();
+        assert_eq!(m.k_padded(), 64);
+        assert_eq!(m.bytes_per_row(), 32);
+        assert_eq!(m.unpack_all(), w);
+    }
+
+    #[test]
+    fn matrix_b8_passthrough() {
+        let w: Vec<i8> = vec![-128, 0, 127, 5];
+        let m = PackedMatrix::from_i8(&w, 2, 2, BitWidth::B8).unwrap();
+        assert_eq!(m.row_i8(0), &[-128, 0]);
+        assert_eq!(m.unpack_all(), w);
+        assert_eq!(m.footprint(), 4);
+    }
+
+    #[test]
+    fn footprint_ratios_match_bits() {
+        // The paper's capacity claim: footprint scales with b/8.
+        let k = 256;
+        let w: Vec<i8> = vec![0; 8 * k];
+        let f8 = PackedMatrix::from_i8(&w, 8, k, BitWidth::B8).unwrap().footprint();
+        let f4 = PackedMatrix::from_i8(&w, 8, k, BitWidth::B4).unwrap().footprint();
+        let f2 = PackedMatrix::from_i8(&w, 8, k, BitWidth::B2).unwrap().footprint();
+        let f1 = PackedMatrix::from_i8(&w, 8, k, BitWidth::B1).unwrap().footprint();
+        assert_eq!(f4 * 2, f8);
+        assert_eq!(f2 * 4, f8);
+        assert_eq!(f1 * 8, f8);
+    }
+
+    #[test]
+    fn ulppack_footprint_vs_fullpack() {
+        let k = 256;
+        let w: Vec<i8> = vec![1; 4 * k];
+        let ulp = UlppackMatrix::from_i8(&w, 4, k, BitWidth::B2).unwrap();
+        let full = PackedMatrix::from_i8(&w, 4, k, BitWidth::B2).unwrap();
+        assert_eq!(ulp.footprint(), 4 * k); // 1 byte/value
+        assert_eq!(full.footprint(), 4 * k / 4); // 0.25 byte/value
+        assert_eq!(ulp.zero_point, 2);
+    }
+
+    #[test]
+    fn from_packed_validates_length() {
+        let ok = PackedMatrix::from_packed(vec![0u8; 2 * 16], 2, 32, BitWidth::B4);
+        assert!(ok.is_ok());
+    }
+}

@@ -1,0 +1,419 @@
+//! FullPack packing scheme (paper §3.1, Fig. 2) — the Rust twin of
+//! `python/compile/kernels/pack.py`, bit-identical by construction.
+//!
+//! Layout (normative, DESIGN.md §6): for bit-width `b ∈ {4,2,1}`, lane
+//! count `VL = 16`, elements-per-byte `E = 8/b`, group `G = E·VL`:
+//! byte `j` of group `g`'s 16-byte block holds original elements
+//! `g·G + k·VL + j` for `k = 0..E`, sub-element `k` in bits
+//! `[k·b, (k+1)·b)`.  Extraction of sub-vector `k` is the paper's
+//! two-shift schedule `ASR(LSL(V, 8-(k+1)b), 8-b)`.
+//!
+//! Also provides the two comparison layouts: the naive adjacent packing
+//! of Alg. 1 and the ULPPACK spacer-lane packing (Won et al., 2022).
+
+mod matrix;
+pub mod serialize;
+pub use matrix::{PackedMatrix, UlppackMatrix};
+
+use thiserror::Error;
+
+/// Vector lane count: 16 int8 lanes of a 128-bit NEON register.  Kept at
+/// 16 on every target so layouts are interchangeable with the Pallas
+/// kernels and the AOT artifacts.
+pub const VL: usize = 16;
+
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum PackError {
+    #[error("value {0} out of range [{1}, {2}] for {3}-bit packing")]
+    OutOfRange(i8, i8, i8, u8),
+    #[error("unsupported bit-width {0} (expected 8, 4, 2 or 1)")]
+    BadBits(u8),
+    #[error("packed length {0} is not a multiple of VL={VL}")]
+    BadPackedLen(usize),
+}
+
+/// Supported element bit-widths.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum BitWidth {
+    B1 = 1,
+    B2 = 2,
+    B4 = 4,
+    B8 = 8,
+}
+
+impl BitWidth {
+    pub fn from_u8(b: u8) -> Result<Self, PackError> {
+        match b {
+            1 => Ok(BitWidth::B1),
+            2 => Ok(BitWidth::B2),
+            4 => Ok(BitWidth::B4),
+            8 => Ok(BitWidth::B8),
+            other => Err(PackError::BadBits(other)),
+        }
+    }
+
+    #[inline]
+    pub fn bits(self) -> usize {
+        self as usize
+    }
+
+    /// Is this a sub-byte width (needs packing)?
+    #[inline]
+    pub fn is_sub_byte(self) -> bool {
+        !matches!(self, BitWidth::B8)
+    }
+
+    /// Elements stored per packed byte (1 for 8-bit).
+    #[inline]
+    pub fn elems_per_byte(self) -> usize {
+        8 / self.bits()
+    }
+
+    /// Elements covered by one VL-byte packed block (G = E·VL).
+    #[inline]
+    pub fn group_size(self) -> usize {
+        self.elems_per_byte() * VL
+    }
+
+    /// Inclusive signed two's-complement value range.
+    #[inline]
+    pub fn value_range(self) -> (i8, i8) {
+        let half = 1i16 << (self.bits() - 1);
+        ((-half) as i8, (half - 1) as i8)
+    }
+
+    /// Smallest group-aligned length >= n (identity for 8-bit).
+    #[inline]
+    pub fn padded_len(self, n: usize) -> usize {
+        if !self.is_sub_byte() {
+            return n;
+        }
+        let g = self.group_size();
+        n.div_ceil(g) * g
+    }
+
+    /// Bytes needed to store `n` elements in this width (after padding).
+    #[inline]
+    pub fn packed_bytes(self, n: usize) -> usize {
+        if self.is_sub_byte() {
+            self.padded_len(n) / self.elems_per_byte()
+        } else {
+            n
+        }
+    }
+}
+
+/// A weight/activation datatype pair, e.g. `W4A8` (paper §3.2 kernels).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Variant {
+    pub w: BitWidth,
+    pub a: BitWidth,
+}
+
+impl Variant {
+    pub const fn new(w: BitWidth, a: BitWidth) -> Self {
+        Variant { w, a }
+    }
+
+    /// Parse `"w4a8"` → W4A8.  Case-insensitive.
+    pub fn parse(s: &str) -> Result<Self, PackError> {
+        let s = s.to_ascii_lowercase();
+        let rest = s.strip_prefix('w').ok_or(PackError::BadBits(0))?;
+        let (wb, ab) = rest.split_once('a').ok_or(PackError::BadBits(0))?;
+        let w = BitWidth::from_u8(wb.parse().map_err(|_| PackError::BadBits(0))?)?;
+        let a = BitWidth::from_u8(ab.parse().map_err(|_| PackError::BadBits(0))?)?;
+        Ok(Variant::new(w, a))
+    }
+
+    /// `"w4a8"`-style lowercase name.
+    pub fn name(&self) -> String {
+        format!("w{}a{}", self.w.bits(), self.a.bits())
+    }
+
+    /// Common padded depth for a logical GEMV depth `k`: both operands
+    /// padded to the larger group alignment.
+    pub fn padded_depth(&self, k: usize) -> usize {
+        self.w.padded_len(k).max(self.a.padded_len(k))
+    }
+
+    /// The nine paper kernel variants (§3.2).
+    pub const PAPER_VARIANTS: [Variant; 9] = [
+        Variant::new(BitWidth::B8, BitWidth::B4),
+        Variant::new(BitWidth::B4, BitWidth::B8),
+        Variant::new(BitWidth::B4, BitWidth::B4),
+        Variant::new(BitWidth::B2, BitWidth::B8),
+        Variant::new(BitWidth::B8, BitWidth::B2),
+        Variant::new(BitWidth::B2, BitWidth::B2),
+        Variant::new(BitWidth::B1, BitWidth::B8),
+        Variant::new(BitWidth::B8, BitWidth::B1),
+        Variant::new(BitWidth::B1, BitWidth::B1),
+    ];
+}
+
+impl std::fmt::Display for Variant {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+fn check_range(x: &[i8], bits: BitWidth) -> Result<(), PackError> {
+    let (lo, hi) = bits.value_range();
+    for &v in x {
+        if v < lo || v > hi {
+            return Err(PackError::OutOfRange(v, lo, hi, bits.bits() as u8));
+        }
+    }
+    Ok(())
+}
+
+/// Pack a vector of signed `bits`-wide values into the FullPack layout.
+/// Input is zero-padded to a group multiple.  `bits` must be sub-byte.
+pub fn pack(x: &[i8], bits: BitWidth) -> Result<Vec<u8>, PackError> {
+    if !bits.is_sub_byte() {
+        return Err(PackError::BadBits(8));
+    }
+    check_range(x, bits)?;
+    Ok(pack_unchecked(x, bits))
+}
+
+/// `pack` without the range check — values are masked; caller guarantees
+/// range (the kernels' internal path).
+pub fn pack_unchecked(x: &[i8], bits: BitWidth) -> Vec<u8> {
+    let b = bits.bits();
+    let e = bits.elems_per_byte();
+    let g = bits.group_size();
+    let np = bits.padded_len(x.len());
+    let mask = ((1u16 << b) - 1) as u8;
+    let mut out = vec![0u8; np / e];
+    for (i, &v) in x.iter().enumerate() {
+        let grp = i / g;
+        let within = i % g;
+        let k = within / VL;
+        let j = within % VL;
+        out[grp * VL + j] |= ((v as u8) & mask) << (k * b);
+    }
+    out
+}
+
+/// Inverse of [`pack`]: scalar bit-twiddling (the oracle path — kernels
+/// use the two-shift vector extraction instead).  Returns `n` elements.
+pub fn unpack(packed: &[u8], bits: BitWidth, n: usize) -> Result<Vec<i8>, PackError> {
+    if !bits.is_sub_byte() {
+        return Err(PackError::BadBits(8));
+    }
+    if packed.len() % VL != 0 {
+        return Err(PackError::BadPackedLen(packed.len()));
+    }
+    let b = bits.bits();
+    let e = bits.elems_per_byte();
+    let g = bits.group_size();
+    let total = packed.len() * e;
+    let mut out = vec![0i8; total];
+    for (i, slot) in out.iter_mut().enumerate() {
+        let grp = i / g;
+        let within = i % g;
+        let k = within / VL;
+        let j = within % VL;
+        let byte = packed[grp * VL + j];
+        let v = (byte >> (k * b)) & (((1u16 << b) - 1) as u8);
+        // sign extend b-bit value
+        let shift = 8 - b;
+        *slot = (((v << shift) as i8) >> shift) as i8;
+    }
+    out.truncate(n.min(total));
+    Ok(out)
+}
+
+/// Naive adjacent packing (paper Alg. 1): consecutive elements share a
+/// byte, first element in the *high* bits.  Same density as FullPack,
+/// worse extraction cost — the strawman baseline.
+pub fn pack_naive(x: &[i8], bits: BitWidth) -> Result<Vec<u8>, PackError> {
+    if !bits.is_sub_byte() {
+        return Err(PackError::BadBits(8));
+    }
+    check_range(x, bits)?;
+    let b = bits.bits();
+    let e = bits.elems_per_byte();
+    let np = x.len().div_ceil(e) * e;
+    let mask = ((1u16 << b) - 1) as u8;
+    let mut out = vec![0u8; np / e];
+    for (i, &v) in x.iter().enumerate() {
+        let byte = i / e;
+        let k = i % e;
+        out[byte] |= ((v as u8) & mask) << ((e - 1 - k) * b);
+    }
+    Ok(out)
+}
+
+/// Unpack the naive layout (for the naive-method baseline kernel tests).
+pub fn unpack_naive(packed: &[u8], bits: BitWidth, n: usize) -> Vec<i8> {
+    let b = bits.bits();
+    let e = bits.elems_per_byte();
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let byte = packed[i / e];
+        let k = i % e;
+        let v = (byte >> ((e - 1 - k) * b)) & (((1u16 << b) - 1) as u8);
+        let shift = 8 - b;
+        out.push((((v << shift) as i8) >> shift) as i8);
+    }
+    out
+}
+
+/// ULPPACK spacer-lane packing (Won et al., 2022): two *unsigned*
+/// (zero-point shifted) b-bit values per 16-bit lane, value 0 at bit 0
+/// and value 1 at bit 8, leaving `16 - 2b` guard bits so lane-wise
+/// multiply-accumulate cannot overflow into a neighbour.  This is the
+/// memory/bandwidth waste FullPack removes: 16 bits carry only `2b`
+/// useful bits.
+///
+/// Values here are the *unsigned* quantized domain `[0, 2^b)` (ULPPACK
+/// uses asymmetric quantization with a zero point).
+pub fn pack_ulppack(x_unsigned: &[u8], bits: BitWidth) -> Result<Vec<u16>, PackError> {
+    if !bits.is_sub_byte() {
+        return Err(PackError::BadBits(8));
+    }
+    let b = bits.bits();
+    let limit = 1u16 << b;
+    let np = x_unsigned.len().div_ceil(2) * 2;
+    let mut out = vec![0u16; np / 2];
+    for (i, &v) in x_unsigned.iter().enumerate() {
+        if (v as u16) >= limit {
+            return Err(PackError::OutOfRange(v as i8, 0, (limit - 1) as i8, b as u8));
+        }
+        out[i / 2] |= (v as u16) << ((i % 2) * 8);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rngvals(bits: BitWidth, n: usize, seed: u64) -> Vec<i8> {
+        let (lo, hi) = bits.value_range();
+        let span = (hi as i16 - lo as i16 + 1) as u64;
+        let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+        (0..n)
+            .map(|_| {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                (lo as i16 + (s % span) as i16) as i8
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fig2_4bit_layout_golden() {
+        // Paper Fig. 2: byte j holds elements j (low nibble) and j+16 (high).
+        let x: Vec<i8> = (0..32).map(|i| (i % 8) as i8).collect();
+        let p = pack(&x, BitWidth::B4).unwrap();
+        assert_eq!(p.len(), 16);
+        for j in 0..16 {
+            assert_eq!((p[j] & 0xF) as i8, x[j], "low nibble {j}");
+            assert_eq!((p[j] >> 4) as i8, x[j + 16], "high nibble {j}");
+        }
+    }
+
+    #[test]
+    fn layout_2bit_stride16() {
+        let x: Vec<i8> = (0..64).map(|i| (i % 2) as i8).collect();
+        let p = pack(&x, BitWidth::B2).unwrap();
+        for j in 0..16 {
+            for k in 0..4 {
+                assert_eq!(((p[j] >> (2 * k)) & 0x3) as i8, x[j + 16 * k]);
+            }
+        }
+    }
+
+    #[test]
+    fn layout_1bit_stride16() {
+        let x = rngvals(BitWidth::B1, 128, 3);
+        let p = pack(&x, BitWidth::B1).unwrap();
+        for j in 0..16 {
+            for k in 0..8 {
+                let bit = (p[j] >> k) & 1;
+                assert_eq!(-(bit as i8), x[j + 16 * k]);
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_all_widths_and_lengths() {
+        for bits in [BitWidth::B4, BitWidth::B2, BitWidth::B1] {
+            for n in [0usize, 1, 15, 16, 31, 32, 100, 128, 500] {
+                let x = rngvals(bits, n, (n as u64) * 7 + bits.bits() as u64);
+                let p = pack(&x, bits).unwrap();
+                assert_eq!(p.len(), bits.packed_bytes(n));
+                let u = unpack(&p, bits, n).unwrap();
+                assert_eq!(u, x, "bits={bits:?} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn out_of_range_rejected() {
+        assert!(pack(&[8], BitWidth::B4).is_err());
+        assert!(pack(&[-9], BitWidth::B4).is_err());
+        assert!(pack(&[1], BitWidth::B1).is_err());
+        assert!(pack(&[0], BitWidth::B8).is_err()); // 8-bit never packs
+    }
+
+    #[test]
+    fn value_ranges() {
+        assert_eq!(BitWidth::B8.value_range(), (-128, 127));
+        assert_eq!(BitWidth::B4.value_range(), (-8, 7));
+        assert_eq!(BitWidth::B2.value_range(), (-2, 1));
+        assert_eq!(BitWidth::B1.value_range(), (-1, 0));
+    }
+
+    #[test]
+    fn variant_parse_and_name() {
+        let v = Variant::parse("W4A8").unwrap();
+        assert_eq!(v.w, BitWidth::B4);
+        assert_eq!(v.a, BitWidth::B8);
+        assert_eq!(v.name(), "w4a8");
+        assert!(Variant::parse("w3a3").is_err());
+        assert!(Variant::parse("x4a8").is_err());
+        assert_eq!(Variant::PAPER_VARIANTS.len(), 9);
+    }
+
+    #[test]
+    fn naive_same_density_different_layout() {
+        let x = rngvals(BitWidth::B4, 64, 11);
+        let full = pack(&x, BitWidth::B4).unwrap();
+        let naive = pack_naive(&x, BitWidth::B4).unwrap();
+        assert_eq!(full.len(), naive.len());
+        assert_ne!(full, naive);
+        assert_eq!(unpack_naive(&naive, BitWidth::B4, 64), x);
+    }
+
+    #[test]
+    fn naive_alg1_msb_first() {
+        // Alg. 1: W0 = (W[i] >> 4) << 4 — element 0 in the high nibble.
+        let p = pack_naive(&[3, 5], BitWidth::B4).unwrap();
+        assert_eq!(p[0] >> 4, 3);
+        assert_eq!(p[0] & 0xF, 5);
+    }
+
+    #[test]
+    fn ulppack_wastes_spacer_bits() {
+        let x: Vec<u8> = (0..64).map(|i| (i % 4) as u8).collect();
+        let ulp = pack_ulppack(&x, BitWidth::B2).unwrap();
+        // 2 values per u16 lane: 64 bytes for 64 values...
+        assert_eq!(ulp.len() * 2, 64);
+        // ...vs FullPack's 16 bytes for the same 64 2-bit values.
+        let signed: Vec<i8> = x.iter().map(|&v| (v as i8) - 2).collect();
+        assert_eq!(pack(&signed, BitWidth::B2).unwrap().len(), 16);
+        assert!(pack_ulppack(&[4], BitWidth::B2).is_err());
+    }
+
+    #[test]
+    fn padding_is_zero() {
+        let p = pack(&[1, -2, 3], BitWidth::B4).unwrap();
+        let full = unpack(&p, BitWidth::B4, 32).unwrap();
+        assert_eq!(&full[..3], &[1, -2, 3]);
+        assert!(full[3..].iter().all(|&v| v == 0));
+    }
+}

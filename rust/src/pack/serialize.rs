@@ -1,0 +1,115 @@
+//! Packed-weight serialization: store a [`PackedMatrix`] to disk and
+//! load it back — the deployment path (pack once offline, ship the
+//! packed blob, the server never touches unpacked weights).
+//!
+//! Format (little-endian): magic `FPCK`, version u32, bits u32,
+//! rows u64, k u64, then the packed bytes.
+
+use super::{BitWidth, PackedMatrix};
+use std::io::{self, Read, Write};
+
+const MAGIC: &[u8; 4] = b"FPCK";
+const VERSION: u32 = 1;
+
+/// Serialize to any writer.
+pub fn write_packed<W: Write>(m: &PackedMatrix, w: &mut W) -> io::Result<()> {
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&(m.bits().bits() as u32).to_le_bytes())?;
+    w.write_all(&(m.rows() as u64).to_le_bytes())?;
+    w.write_all(&(m.k() as u64).to_le_bytes())?;
+    w.write_all(m.bytes())
+}
+
+/// Deserialize from any reader.
+pub fn read_packed<R: Read>(r: &mut R) -> io::Result<PackedMatrix> {
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "bad magic (not a FPCK file)"));
+    }
+    let mut b4 = [0u8; 4];
+    r.read_exact(&mut b4)?;
+    let version = u32::from_le_bytes(b4);
+    if version != VERSION {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("unsupported FPCK version {version}"),
+        ));
+    }
+    r.read_exact(&mut b4)?;
+    let bits = BitWidth::from_u8(u32::from_le_bytes(b4) as u8)
+        .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e.to_string()))?;
+    let mut b8 = [0u8; 8];
+    r.read_exact(&mut b8)?;
+    let rows = u64::from_le_bytes(b8) as usize;
+    r.read_exact(&mut b8)?;
+    let k = u64::from_le_bytes(b8) as usize;
+    let expect = rows * bits.packed_bytes(k);
+    let mut data = vec![0u8; expect];
+    r.read_exact(&mut data)?;
+    PackedMatrix::from_packed(data, rows, k, bits)
+        .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e.to_string()))
+}
+
+/// File convenience wrappers.
+pub fn save(m: &PackedMatrix, path: impl AsRef<std::path::Path>) -> io::Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    write_packed(m, &mut f)
+}
+
+pub fn load(path: impl AsRef<std::path::Path>) -> io::Result<PackedMatrix> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    read_packed(&mut f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(bits: BitWidth) -> PackedMatrix {
+        let (lo, hi) = bits.value_range();
+        let k = 100;
+        let rows = 7;
+        let vals: Vec<i8> = (0..rows * k)
+            .map(|i| (lo as i32 + (i as i32 % (hi as i32 - lo as i32 + 1))) as i8)
+            .collect();
+        PackedMatrix::from_i8(&vals, rows, k, bits).unwrap()
+    }
+
+    #[test]
+    fn roundtrip_every_width() {
+        for bits in [BitWidth::B8, BitWidth::B4, BitWidth::B2, BitWidth::B1] {
+            let m = sample(bits);
+            let mut buf = Vec::new();
+            write_packed(&m, &mut buf).unwrap();
+            let back = read_packed(&mut buf.as_slice()).unwrap();
+            assert_eq!(back, m, "{bits:?}");
+            assert_eq!(back.unpack_all(), m.unpack_all());
+        }
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let m = sample(BitWidth::B4);
+        let path = std::env::temp_dir().join("fullpack_test_weights.fpck");
+        save(&m, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back, m);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn corrupt_inputs_rejected() {
+        assert!(read_packed(&mut &b"XXXX"[..]).is_err());
+        let m = sample(BitWidth::B2);
+        let mut buf = Vec::new();
+        write_packed(&m, &mut buf).unwrap();
+        // truncated payload
+        let cut = buf.len() - 5;
+        assert!(read_packed(&mut &buf[..cut]).is_err());
+        // wrong version
+        buf[4] = 9;
+        assert!(read_packed(&mut buf.as_slice()).is_err());
+    }
+}

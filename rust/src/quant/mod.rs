@@ -1,0 +1,133 @@
+//! Symmetric quantization f32 ↔ signed b-bit, per-tensor and per-row.
+//!
+//! This is the substrate the paper assumes ("prior art has demonstrated
+//! negligible accuracy drop in sub-byte quantization", §1): it produces
+//! the integer operands the FullPack kernels consume and the scales the
+//! requantization pipeline applies to the int32 accumulators.
+
+use crate::pack::BitWidth;
+
+/// A quantized tensor: int8-held values (range limited by `bits`) plus a
+/// symmetric scale such that `f32 ≈ q * scale`.
+#[derive(Debug, Clone)]
+pub struct Quantized {
+    pub values: Vec<i8>,
+    pub scale: f32,
+    pub bits: BitWidth,
+}
+
+/// Symmetric per-tensor quantization: `scale = max|x| / qmax`,
+/// `q = clamp(round(x / scale))`.
+///
+/// For `B1` the domain is {-1, 0} (the two's-complement 1-bit range the
+/// FullPack ASR sign-extension realizes): negative values map to -1,
+/// non-negative to 0, with `scale = max|x|`.
+pub fn quantize(x: &[f32], bits: BitWidth) -> Quantized {
+    let max_abs = x.iter().fold(0f32, |m, &v| m.max(v.abs()));
+    if bits == BitWidth::B1 {
+        let scale = if max_abs > 0.0 { max_abs } else { 1.0 };
+        let values = x.iter().map(|&v| if v < 0.0 { -1i8 } else { 0i8 }).collect();
+        return Quantized { values, scale, bits };
+    }
+    let (lo, hi) = bits.value_range();
+    let qmax = hi as f32;
+    let scale = if max_abs > 0.0 { max_abs / qmax } else { 1.0 };
+    let values = x
+        .iter()
+        .map(|&v| (v / scale).round().clamp(lo as f32, hi as f32) as i8)
+        .collect();
+    Quantized { values, scale, bits }
+}
+
+/// Quantize a row-major matrix with one scale per row (per-channel
+/// weight quantization, the standard for FC layers).
+pub fn quantize_per_row(w: &[f32], rows: usize, k: usize, bits: BitWidth) -> (Vec<i8>, Vec<f32>) {
+    assert_eq!(w.len(), rows * k);
+    let mut values = Vec::with_capacity(rows * k);
+    let mut scales = Vec::with_capacity(rows);
+    for r in 0..rows {
+        let q = quantize(&w[r * k..(r + 1) * k], bits);
+        values.extend(q.values);
+        scales.push(q.scale);
+    }
+    (values, scales)
+}
+
+/// Dequantize int8-held values back to f32.
+pub fn dequantize(q: &[i8], scale: f32) -> Vec<f32> {
+    q.iter().map(|&v| v as f32 * scale).collect()
+}
+
+/// Requantize an int32 GEMV accumulator to f32: `acc * (s_w * s_a) + bias`.
+#[inline]
+pub fn requantize(acc: i32, s_w: f32, s_a: f32, bias: f32) -> f32 {
+    acc as f32 * (s_w * s_a) + bias
+}
+
+/// Apply [`requantize`] across a whole output vector.
+pub fn requantize_vec(acc: &[i32], s_w: f32, s_a: f32, bias: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(acc.len(), bias.len());
+    acc.iter()
+        .zip(bias)
+        .map(|(&a, &b)| requantize(a, s_w, s_a, b))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_step() {
+        let x: Vec<f32> = (0..100).map(|i| (i as f32 - 50.0) * 0.13).collect();
+        for bits in [BitWidth::B8, BitWidth::B4, BitWidth::B2] {
+            let q = quantize(&x, bits);
+            let deq = dequantize(&q.values, q.scale);
+            let max_err = x
+                .iter()
+                .zip(&deq)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0f32, f32::max);
+            // symmetric quantizer error <= scale/2 (clamp only at |max|)
+            assert!(max_err <= q.scale * 0.5 + 1e-6, "{bits:?}: {max_err}");
+        }
+    }
+
+    #[test]
+    fn values_in_range() {
+        let x: Vec<f32> = (0..64).map(|i| (i as f32) - 32.0).collect();
+        for bits in [BitWidth::B8, BitWidth::B4, BitWidth::B2, BitWidth::B1] {
+            let q = quantize(&x, bits);
+            let (lo, hi) = bits.value_range();
+            assert!(q.values.iter().all(|&v| v >= lo && v <= hi));
+        }
+    }
+
+    #[test]
+    fn one_bit_sign_semantics() {
+        let q = quantize(&[-3.0, -0.1, 0.0, 2.0], BitWidth::B1);
+        assert_eq!(q.values, vec![-1, -1, 0, 0]);
+    }
+
+    #[test]
+    fn zero_input_unit_scale() {
+        let q = quantize(&[0.0; 8], BitWidth::B4);
+        assert_eq!(q.scale, 1.0);
+        assert!(q.values.iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn per_row_scales_independent() {
+        let w = [1.0f32, -1.0, 100.0, -100.0];
+        let (vals, scales) = quantize_per_row(&w, 2, 2, BitWidth::B4);
+        assert_eq!(vals.len(), 4);
+        assert!(scales[1] > scales[0] * 50.0);
+    }
+
+    #[test]
+    fn requantize_identity() {
+        assert_eq!(requantize(10, 0.5, 2.0, 1.0), 11.0);
+        let out = requantize_vec(&[1, 2], 1.0, 1.0, &[0.5, 0.5]);
+        assert_eq!(out, vec![1.5, 2.5]);
+    }
+}

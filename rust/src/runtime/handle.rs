@@ -1,0 +1,138 @@
+//! Channel-backed executor thread for the (non-`Send`) PJRT runtime.
+//!
+//! The serving engine's workers hold a cloneable [`RuntimeHandle`];
+//! execution requests are serialized onto the device thread — the same
+//! isolation a production engine uses for an accelerator context.
+
+use super::{Runtime, Tensor};
+use anyhow::{anyhow, Result};
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+enum Job {
+    Execute {
+        artifact: String,
+        inputs: Vec<Tensor>,
+        reply: mpsc::Sender<Result<Vec<Tensor>>>,
+    },
+    Warmup {
+        artifact: String,
+        reply: mpsc::Sender<Result<()>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable, thread-safe handle to the runtime executor thread.
+#[derive(Clone)]
+pub struct RuntimeHandle {
+    tx: Arc<Mutex<mpsc::Sender<Job>>>,
+}
+
+impl RuntimeHandle {
+    /// Execute an artifact synchronously (the call blocks until the
+    /// device thread replies).
+    pub fn execute(&self, artifact: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Job::Execute { artifact: artifact.to_string(), inputs, reply })
+            .map_err(|_| anyhow!("runtime thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("runtime thread dropped reply"))?
+    }
+
+    /// Pre-compile an artifact (populate the executable cache).
+    pub fn warmup(&self, artifact: &str) -> Result<()> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Job::Warmup { artifact: artifact.to_string(), reply })
+            .map_err(|_| anyhow!("runtime thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("runtime thread dropped reply"))?
+    }
+
+    /// Ask the executor thread to exit (best effort).
+    pub fn shutdown(&self) {
+        let _ = self.tx.lock().unwrap().send(Job::Shutdown);
+    }
+}
+
+/// Spawn the executor thread.  Loads the manifest on the device thread;
+/// returns the handle plus manifest metadata for the caller.
+pub fn spawn(artifacts_dir: impl Into<PathBuf>) -> Result<(RuntimeHandle, super::Manifest)> {
+    let dir = artifacts_dir.into();
+    let (tx, rx) = mpsc::channel::<Job>();
+    let (boot_tx, boot_rx) = mpsc::channel::<Result<super::Manifest>>();
+    std::thread::Builder::new()
+        .name("pjrt-executor".into())
+        .spawn(move || {
+            let rt = match Runtime::load(&dir) {
+                Ok(rt) => {
+                    let _ = boot_tx.send(Ok(rt.manifest().clone()));
+                    rt
+                }
+                Err(e) => {
+                    let _ = boot_tx.send(Err(e));
+                    return;
+                }
+            };
+            while let Ok(job) = rx.recv() {
+                match job {
+                    Job::Execute { artifact, inputs, reply } => {
+                        let _ = reply.send(rt.execute(&artifact, &inputs));
+                    }
+                    Job::Warmup { artifact, reply } => {
+                        let _ = reply.send(rt.executable(&artifact).map(|_| ()));
+                    }
+                    Job::Shutdown => break,
+                }
+            }
+        })
+        .map_err(|e| anyhow!("spawning pjrt-executor: {e}"))?;
+    let manifest = boot_rx
+        .recv()
+        .map_err(|_| anyhow!("runtime thread died during boot"))??;
+    Ok((RuntimeHandle { tx: Arc::new(Mutex::new(tx)) }, manifest))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn handle_is_send_and_clone() {
+        fn assert_send<T: Send + Clone>() {}
+        assert_send::<RuntimeHandle>();
+    }
+
+    #[test]
+    fn boot_failure_reported() {
+        assert!(spawn("/definitely/not/a/dir").is_err());
+    }
+
+    #[test]
+    fn execute_via_handle_from_another_thread() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        };
+        let (h, manifest) = spawn(dir).unwrap();
+        assert!(manifest.get("gemv_w8a8_256x256").is_some());
+        let h2 = h.clone();
+        let t = std::thread::spawn(move || {
+            let w = Tensor::s8(vec![1i8; 256 * 256], vec![256, 256]);
+            let a = Tensor::s8(vec![1i8; 256], vec![256]);
+            h2.execute("gemv_w8a8_256x256", vec![w, a])
+        });
+        let out = t.join().unwrap().unwrap();
+        assert_eq!(out[0].as_s32().unwrap(), vec![256i32; 256].as_slice());
+        h.shutdown();
+    }
+}

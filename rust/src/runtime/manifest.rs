@@ -1,0 +1,212 @@
+//! Artifact manifest (`artifacts/manifest.json`) — written by
+//! `python/compile/aot.py`, read here with the in-repo JSON parser.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+
+/// Element dtype of a tensor crossing the AOT boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    S8,
+    U8,
+    S32,
+    F32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        Ok(match s {
+            "s8" => DType::S8,
+            "u8" => DType::U8,
+            "s32" => DType::S32,
+            "f32" => DType::F32,
+            other => bail!("unknown dtype {other:?}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DType::S8 => "s8",
+            DType::U8 => "u8",
+            DType::S32 => "s32",
+            DType::F32 => "f32",
+        }
+    }
+}
+
+/// Shape+dtype of one artifact input or output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT artifact entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub variant: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// free-form integer metadata (z, k, row_tile, hidden, ...)
+    pub meta: HashMap<String, i64>,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: usize,
+    pub vl: usize,
+    pub artifacts: Vec<ArtifactMeta>,
+    index: HashMap<String, usize>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest JSON: {e}"))?;
+        let version = j.get("version").and_then(Json::as_usize).unwrap_or(0);
+        let vl = j.get("vl").and_then(Json::as_usize).unwrap_or(16);
+        let mut artifacts = Vec::new();
+        for a in j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing artifacts[]"))?
+        {
+            artifacts.push(parse_artifact(a)?);
+        }
+        let index = artifacts
+            .iter()
+            .enumerate()
+            .map(|(i, a)| (a.name.clone(), i))
+            .collect();
+        Ok(Manifest { version, vl, artifacts, index })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.index.get(name).map(|&i| &self.artifacts[i])
+    }
+
+    /// All artifacts of a given kind (e.g. `"gemv"`, `"lstm_step"`).
+    pub fn of_kind<'a>(&'a self, kind: &'a str) -> impl Iterator<Item = &'a ArtifactMeta> {
+        self.artifacts.iter().filter(move |a| a.kind == kind)
+    }
+}
+
+fn parse_specs(j: Option<&Json>, what: &str) -> Result<Vec<TensorSpec>> {
+    let arr = j
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("artifact missing {what}[]"))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for (i, s) in arr.iter().enumerate() {
+        let dtype = DType::parse(
+            s.get("dtype")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("{what}[{i}] missing dtype"))?,
+        )?;
+        let shape = s
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("{what}[{i}] missing shape"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let name = s
+            .get("name")
+            .and_then(Json::as_str)
+            .unwrap_or(&format!("{what}{i}"))
+            .to_string();
+        out.push(TensorSpec { name, dtype, shape });
+    }
+    Ok(out)
+}
+
+fn parse_artifact(a: &Json) -> Result<ArtifactMeta> {
+    let gets = |k: &str| -> Result<String> {
+        Ok(a.get(k)
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("artifact missing {k}"))?
+            .to_string())
+    };
+    let mut meta = HashMap::new();
+    if let Some(Json::Obj(m)) = a.get("meta") {
+        for (k, v) in m {
+            if let Some(n) = v.as_f64() {
+                meta.insert(k.clone(), n as i64);
+            }
+        }
+    }
+    Ok(ArtifactMeta {
+        name: gets("name")?,
+        file: gets("file")?,
+        kind: gets("kind")?,
+        variant: gets("variant")?,
+        inputs: parse_specs(a.get("inputs"), "inputs")?,
+        outputs: parse_specs(a.get("outputs"), "outputs")?,
+        meta,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1, "vl": 16,
+      "artifacts": [
+        {"name": "gemv_w4a8_256x256", "file": "gemv_w4a8_256x256.hlo.txt",
+         "kind": "gemv", "variant": "w4a8",
+         "meta": {"z": 256, "k": 256, "row_tile": 8},
+         "inputs": [
+           {"name": "weights", "dtype": "u8", "shape": [256, 128]},
+           {"name": "activations", "dtype": "s8", "shape": [256]}],
+         "outputs": [{"dtype": "s32", "shape": [256]}]}
+      ]}"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.version, 1);
+        assert_eq!(m.vl, 16);
+        let a = m.get("gemv_w4a8_256x256").unwrap();
+        assert_eq!(a.kind, "gemv");
+        assert_eq!(a.meta["z"], 256);
+        assert_eq!(a.inputs[0].dtype, DType::U8);
+        assert_eq!(a.inputs[0].shape, vec![256, 128]);
+        assert_eq!(a.inputs[0].elems(), 256 * 128);
+        assert_eq!(a.outputs[0].dtype, DType::S32);
+        assert_eq!(m.of_kind("gemv").count(), 1);
+        assert!(m.get("missing").is_none());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/manifest.json");
+        if let Ok(text) = std::fs::read_to_string(path) {
+            let m = Manifest::parse(&text).unwrap();
+            assert!(m.artifacts.len() >= 30);
+            // all nine paper variants have a 256x256 gemv artifact
+            for v in crate::pack::Variant::PAPER_VARIANTS {
+                assert!(m.get(&format!("gemv_{}_256x256", v.name())).is_some(), "{v}");
+            }
+        }
+    }
+
+    #[test]
+    fn dtype_roundtrip() {
+        for d in [DType::S8, DType::U8, DType::S32, DType::F32] {
+            assert_eq!(DType::parse(d.name()).unwrap(), d);
+        }
+        assert!(DType::parse("f64").is_err());
+    }
+}

@@ -1,0 +1,153 @@
+//! PJRT runtime: load `artifacts/*.hlo.txt` (AOT-lowered by
+//! `python/compile/aot.py`), compile once on the XLA CPU client, and
+//! execute from the L3 hot path.
+//!
+//! HLO *text* is the interchange format (xla_extension 0.5.1 rejects
+//! jax ≥ 0.5 serialized protos — see /opt/xla-example/README.md); the
+//! text parser reassigns instruction ids and round-trips cleanly.
+//!
+//! PJRT objects are not `Send`, so [`Runtime`] is single-threaded; the
+//! serving engine talks to it through [`handle::RuntimeHandle`], a
+//! channel-backed executor thread (`spawn`), which is also the natural
+//! device-thread isolation for a serving system.
+
+pub mod handle;
+pub mod manifest;
+pub mod tensor;
+
+pub use handle::{spawn, RuntimeHandle};
+pub use manifest::{ArtifactMeta, DType, Manifest, TensorSpec};
+pub use tensor::Tensor;
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+/// Single-threaded PJRT runtime: manifest + lazily compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Load the manifest from an artifacts directory (does not compile
+    /// anything yet).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} (run `make artifacts`)"))?;
+        let manifest = Manifest::parse(&text)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
+        Ok(Runtime { client, dir, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch the cached) executable for an artifact.
+    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let meta = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name:?}"))?;
+        let path = self.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e}"))?,
+        );
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact with host tensors, validating shapes/dtypes
+    /// against the manifest.  Returns the output tensors (the lowered
+    /// modules always return a tuple — `return_tuple=True`).
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let meta = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name:?}"))?;
+        if inputs.len() != meta.inputs.len() {
+            bail!(
+                "{name}: expected {} inputs ({}), got {}",
+                meta.inputs.len(),
+                meta.inputs.iter().map(|i| i.name.as_str()).collect::<Vec<_>>().join(", "),
+                inputs.len()
+            );
+        }
+        for (t, spec) in inputs.iter().zip(&meta.inputs) {
+            t.check(spec).with_context(|| format!("{name}: input {:?}", spec.name))?;
+        }
+        let exe = self.executable(name)?;
+        let literals: Vec<xla::Literal> = inputs.iter().map(Tensor::to_literal).collect();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {name}: {e}"))?;
+        let parts = out.to_tuple().map_err(|e| anyhow!("untupling {name}: {e}"))?;
+        let mut tensors = Vec::with_capacity(parts.len());
+        for (i, lit) in parts.into_iter().enumerate() {
+            let spec = meta.outputs.get(i);
+            tensors.push(Tensor::from_literal(&lit, spec)?);
+        }
+        Ok(tensors)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn load_manifest_and_compile_one() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        };
+        let rt = Runtime::load(&dir).unwrap();
+        assert!(rt.manifest().artifacts.len() >= 30);
+        assert_eq!(rt.platform().to_lowercase(), "cpu");
+        let exe = rt.executable("gemv_w8a8_256x256").unwrap();
+        drop(exe);
+        // second fetch hits the cache
+        let _ = rt.executable("gemv_w8a8_256x256").unwrap();
+        assert_eq!(rt.cache.borrow().len(), 1);
+    }
+
+    #[test]
+    fn unknown_artifact_errors() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        };
+        let rt = Runtime::load(&dir).unwrap();
+        assert!(rt.executable("nope").is_err());
+        assert!(rt.execute("nope", &[]).is_err());
+    }
+}

@@ -1,0 +1,213 @@
+//! Host tensors crossing the PJRT boundary, with Literal marshalling.
+
+use super::manifest::{DType, TensorSpec};
+use anyhow::{anyhow, bail, Result};
+
+/// A host-side tensor (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub data: TensorData,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    S8(Vec<i8>),
+    U8(Vec<u8>),
+    S32(Vec<i32>),
+    F32(Vec<f32>),
+}
+
+impl Tensor {
+    pub fn s8(data: Vec<i8>, shape: Vec<usize>) -> Tensor {
+        Tensor { data: TensorData::S8(data), shape }
+    }
+
+    pub fn u8(data: Vec<u8>, shape: Vec<usize>) -> Tensor {
+        Tensor { data: TensorData::U8(data), shape }
+    }
+
+    pub fn s32(data: Vec<i32>, shape: Vec<usize>) -> Tensor {
+        Tensor { data: TensorData::S32(data), shape }
+    }
+
+    pub fn f32(data: Vec<f32>, shape: Vec<usize>) -> Tensor {
+        Tensor { data: TensorData::F32(data), shape }
+    }
+
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor::f32(vec![v], vec![])
+    }
+
+    pub fn dtype(&self) -> DType {
+        match &self.data {
+            TensorData::S8(_) => DType::S8,
+            TensorData::U8(_) => DType::U8,
+            TensorData::S32(_) => DType::S32,
+            TensorData::F32(_) => DType::F32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.data {
+            TensorData::S8(v) => v.len(),
+            TensorData::U8(v) => v.len(),
+            TensorData::S32(v) => v.len(),
+            TensorData::F32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            other => bail!("expected f32 tensor, got {:?}", dt(other)),
+        }
+    }
+
+    pub fn as_s32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::S32(v) => Ok(v),
+            other => bail!("expected s32 tensor, got {:?}", dt(other)),
+        }
+    }
+
+    pub fn as_s8(&self) -> Result<&[i8]> {
+        match &self.data {
+            TensorData::S8(v) => Ok(v),
+            other => bail!("expected s8 tensor, got {:?}", dt(other)),
+        }
+    }
+
+    pub fn as_u8(&self) -> Result<&[u8]> {
+        match &self.data {
+            TensorData::U8(v) => Ok(v),
+            other => bail!("expected u8 tensor, got {:?}", dt(other)),
+        }
+    }
+
+    /// Validate against a manifest spec.
+    pub fn check(&self, spec: &TensorSpec) -> Result<()> {
+        if self.dtype() != spec.dtype {
+            bail!("dtype {} != manifest {}", self.dtype().name(), spec.dtype.name());
+        }
+        if self.shape != spec.shape {
+            bail!("shape {:?} != manifest {:?}", self.shape, spec.shape);
+        }
+        if self.len() != spec.elems() {
+            bail!("element count {} != shape product {}", self.len(), spec.elems());
+        }
+        Ok(())
+    }
+
+    /// To an XLA literal with the tensor's dims.  Built from raw bytes
+    /// (the crate's `NativeType` path has no i8/u8 support).
+    pub fn to_literal(&self) -> xla::Literal {
+        let (ty, bytes): (xla::ElementType, &[u8]) = match &self.data {
+            TensorData::S8(v) => (xla::ElementType::S8, unsafe {
+                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len())
+            }),
+            TensorData::U8(v) => (xla::ElementType::U8, v.as_slice()),
+            TensorData::S32(v) => (xla::ElementType::S32, unsafe {
+                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+            }),
+            TensorData::F32(v) => (xla::ElementType::F32, unsafe {
+                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+            }),
+        };
+        xla::Literal::create_from_shape_and_untyped_data(ty, &self.shape, bytes)
+            .expect("literal from host bytes")
+    }
+
+    /// From an XLA literal; `spec` (when available) provides the shape
+    /// (literals flatten fine with `to_vec`).
+    pub fn from_literal(lit: &xla::Literal, spec: Option<&TensorSpec>) -> Result<Tensor> {
+        let ty = lit.ty().map_err(|e| anyhow!("literal dtype: {e}"))?;
+        let shape = match spec {
+            Some(s) => s.shape.clone(),
+            None => vec![lit.element_count()],
+        };
+        Ok(match ty {
+            xla::ElementType::S8 => {
+                Tensor::s8(lit.to_vec::<i8>().map_err(|e| anyhow!("{e}"))?, shape)
+            }
+            xla::ElementType::U8 => {
+                Tensor::u8(lit.to_vec::<u8>().map_err(|e| anyhow!("{e}"))?, shape)
+            }
+            xla::ElementType::S32 => {
+                Tensor::s32(lit.to_vec::<i32>().map_err(|e| anyhow!("{e}"))?, shape)
+            }
+            xla::ElementType::F32 => {
+                Tensor::f32(lit.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?, shape)
+            }
+            other => bail!("unsupported literal dtype {other:?}"),
+        })
+    }
+}
+
+fn dt(d: &TensorData) -> &'static str {
+    match d {
+        TensorData::S8(_) => "s8",
+        TensorData::U8(_) => "u8",
+        TensorData::S32(_) => "s32",
+        TensorData::F32(_) => "f32",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_and_accessors() {
+        let t = Tensor::s8(vec![1, -2], vec![2]);
+        assert_eq!(t.dtype(), DType::S8);
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.as_s8().unwrap(), &[1, -2]);
+        assert!(t.as_f32().is_err());
+        assert!(!t.is_empty());
+    }
+
+    #[test]
+    fn check_against_spec() {
+        let spec = TensorSpec { name: "w".into(), dtype: DType::U8, shape: vec![2, 3] };
+        let ok = Tensor::u8(vec![0; 6], vec![2, 3]);
+        assert!(ok.check(&spec).is_ok());
+        let bad_dtype = Tensor::s8(vec![0; 6], vec![2, 3]);
+        assert!(bad_dtype.check(&spec).is_err());
+        let bad_shape = Tensor::u8(vec![0; 6], vec![3, 2]);
+        assert!(bad_shape.check(&spec).is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let t = Tensor::f32(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
+        let lit = t.to_literal();
+        assert_eq!(lit.element_count(), 4);
+        let spec = TensorSpec { name: "x".into(), dtype: DType::F32, shape: vec![2, 2] };
+        let back = Tensor::from_literal(&lit, Some(&spec)).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn literal_roundtrip_integers() {
+        for t in [
+            Tensor::s8(vec![-8, 7, 0], vec![3]),
+            Tensor::u8(vec![0, 255, 16], vec![3]),
+            Tensor::s32(vec![i32::MIN, 0, i32::MAX], vec![3]),
+        ] {
+            let back = Tensor::from_literal(&t.to_literal(), None).unwrap();
+            assert_eq!(back.data, t.data);
+        }
+    }
+
+    #[test]
+    fn scalar_literal() {
+        let t = Tensor::scalar_f32(0.5);
+        let lit = t.to_literal();
+        assert_eq!(lit.element_count(), 1);
+    }
+}

@@ -1,0 +1,321 @@
+//! Set-associative LRU cache-hierarchy simulator — the stand-in for the
+//! paper's gem5 memory system (DESIGN.md substitution table).  Every
+//! LLC metric in Figs. 6 and 7 (accesses, misses, miss rate, miss
+//! latency) is read off this model.
+
+/// Configuration of one cache level.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CacheConfig {
+    pub name: &'static str,
+    /// total capacity in bytes
+    pub size: usize,
+    /// line size in bytes
+    pub line: usize,
+    /// associativity (ways per set)
+    pub assoc: usize,
+    /// latency of a hit in this level, in cycles
+    pub hit_latency: u64,
+}
+
+impl CacheConfig {
+    pub fn sets(&self) -> usize {
+        (self.size / self.line / self.assoc).max(1)
+    }
+}
+
+/// Running statistics for one level.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub accesses: u64,
+    pub misses: u64,
+    /// total cycles spent below this level on its misses
+    pub miss_latency_total: u64,
+}
+
+impl CacheStats {
+    pub fn miss_rate(&self) -> f64 {
+        if self.accesses == 0 {
+            0.0
+        } else {
+            self.misses as f64 / self.accesses as f64
+        }
+    }
+
+    /// average additional latency per miss
+    pub fn avg_miss_latency(&self) -> f64 {
+        if self.misses == 0 {
+            0.0
+        } else {
+            self.miss_latency_total as f64 / self.misses as f64
+        }
+    }
+}
+
+/// One set-associative LRU cache level.  Tags are stored per set in MRU
+/// order (index 0 = most recent).
+struct CacheLevel {
+    cfg: CacheConfig,
+    sets: Vec<Vec<u64>>,
+    stats: CacheStats,
+    set_mask: u64,
+    line_shift: u32,
+}
+
+impl CacheLevel {
+    fn new(cfg: CacheConfig) -> Self {
+        let sets = cfg.sets();
+        assert!(sets.is_power_of_two(), "{}: set count must be a power of two", cfg.name);
+        assert!(cfg.line.is_power_of_two());
+        CacheLevel {
+            set_mask: (sets - 1) as u64,
+            line_shift: cfg.line.trailing_zeros(),
+            sets: vec![Vec::with_capacity(cfg.assoc); sets],
+            cfg,
+            stats: CacheStats::default(),
+        }
+    }
+
+    /// Access a line address; returns true on hit.  Misses fill (LRU
+    /// eviction).
+    fn access(&mut self, addr: u64) -> bool {
+        let tag = addr >> self.line_shift;
+        let set = &mut self.sets[(tag & self.set_mask) as usize];
+        self.stats.accesses += 1;
+        if let Some(pos) = set.iter().position(|&t| t == tag) {
+            // MRU update
+            let t = set.remove(pos);
+            set.insert(0, t);
+            true
+        } else {
+            self.stats.misses += 1;
+            if set.len() == self.cfg.assoc {
+                set.pop();
+            }
+            set.insert(0, tag);
+            false
+        }
+    }
+}
+
+/// A multi-level hierarchy with a flat DRAM behind the last level.
+pub struct Hierarchy {
+    levels: Vec<CacheLevel>,
+    /// DRAM access latency in cycles
+    pub mem_latency: u64,
+}
+
+impl Hierarchy {
+    pub fn new(configs: Vec<CacheConfig>, mem_latency: u64) -> Self {
+        assert!(!configs.is_empty(), "need at least one cache level");
+        Hierarchy {
+            levels: configs.into_iter().map(CacheLevel::new).collect(),
+            mem_latency,
+        }
+    }
+
+    /// Number of levels (the last one is the LLC).
+    pub fn depth(&self) -> usize {
+        self.levels.len()
+    }
+
+    pub fn line_size(&self) -> usize {
+        self.levels[0].cfg.line
+    }
+
+    /// Simulate one line-granular access; returns its total latency in
+    /// cycles.  Each level is probed in order; on a miss the next level
+    /// is consulted; DRAM always hits.
+    pub fn access(&mut self, addr: u64) -> u64 {
+        let mut latency = 0;
+        let n = self.levels.len();
+        for i in 0..n {
+            latency += self.levels[i].cfg.hit_latency;
+            if self.levels[i].access(addr) {
+                return latency;
+            }
+        }
+        latency += self.mem_latency;
+        // attribute the below-LLC latency to the LLC's miss accounting
+        let llc = self.levels.last_mut().unwrap();
+        llc.stats.miss_latency_total += self.mem_latency;
+        latency
+    }
+
+    /// Stats of level `i` (0 = L1).
+    pub fn level_stats(&self, i: usize) -> CacheStats {
+        self.levels[i].stats
+    }
+
+    /// Stats of the last-level cache — the paper's Fig. 6 metrics.
+    pub fn llc_stats(&self) -> CacheStats {
+        self.levels.last().unwrap().stats
+    }
+
+    pub fn level_config(&self, i: usize) -> &CacheConfig {
+        &self.levels[i].cfg
+    }
+
+    pub fn reset_stats(&mut self) {
+        for l in &mut self.levels {
+            l.stats = CacheStats::default();
+        }
+    }
+}
+
+/// gem5 Table 1 configuration: modified ex5_big, 128KB L1D, 2MB L2
+/// (LLC), LPDDR3-class memory.
+pub fn gem5_ex5_big() -> Hierarchy {
+    Hierarchy::new(
+        vec![
+            CacheConfig { name: "L1D", size: 128 << 10, line: 64, assoc: 2, hit_latency: 2 },
+            CacheConfig { name: "L2", size: 2 << 20, line: 64, assoc: 16, hit_latency: 12 },
+        ],
+        140,
+    )
+}
+
+/// Table 1 variant with the optional 8MB L3 ("where employed").
+pub fn gem5_ex5_big_l3() -> Hierarchy {
+    Hierarchy::new(
+        vec![
+            CacheConfig { name: "L1D", size: 128 << 10, line: 64, assoc: 2, hit_latency: 2 },
+            CacheConfig { name: "L2", size: 2 << 20, line: 64, assoc: 16, hit_latency: 12 },
+            CacheConfig { name: "L3", size: 8 << 20, line: 64, assoc: 16, hit_latency: 30 },
+        ],
+        140,
+    )
+}
+
+/// Custom L2 size (Fig. 7 sweep), keeping the Table 1 L1.
+pub fn with_l2_size(l2_bytes: usize) -> Hierarchy {
+    Hierarchy::new(
+        vec![
+            CacheConfig { name: "L1D", size: 128 << 10, line: 64, assoc: 2, hit_latency: 2 },
+            CacheConfig { name: "L2", size: l2_bytes, line: 64, assoc: 16, hit_latency: 12 },
+        ],
+        140,
+    )
+}
+
+/// L1-only hierarchy (Fig. 7d: "L2 and L3 removed").
+pub fn l1_only() -> Hierarchy {
+    Hierarchy::new(
+        vec![CacheConfig { name: "L1D", size: 128 << 10, line: 64, assoc: 2, hit_latency: 2 }],
+        140,
+    )
+}
+
+/// Raspberry Pi 4 (Table 2): Cortex-A72, 32KB L1D, 1MB shared L2.
+pub fn rpi4_a72() -> Hierarchy {
+    Hierarchy::new(
+        vec![
+            CacheConfig { name: "L1D", size: 32 << 10, line: 64, assoc: 2, hit_latency: 2 },
+            CacheConfig { name: "L2", size: 1 << 20, line: 64, assoc: 16, hit_latency: 15 },
+        ],
+        160,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Hierarchy {
+        Hierarchy::new(
+            vec![
+                CacheConfig { name: "L1", size: 256, line: 64, assoc: 2, hit_latency: 1 },
+                CacheConfig { name: "L2", size: 1024, line: 64, assoc: 2, hit_latency: 10 },
+            ],
+            100,
+        )
+    }
+
+    #[test]
+    fn first_access_misses_everywhere() {
+        let mut h = tiny();
+        let lat = h.access(0);
+        assert_eq!(lat, 1 + 10 + 100);
+        assert_eq!(h.level_stats(0).misses, 1);
+        assert_eq!(h.llc_stats().misses, 1);
+        assert_eq!(h.llc_stats().miss_latency_total, 100);
+    }
+
+    #[test]
+    fn second_access_hits_l1() {
+        let mut h = tiny();
+        h.access(0);
+        let lat = h.access(0);
+        assert_eq!(lat, 1);
+        assert_eq!(h.level_stats(0).accesses, 2);
+        assert_eq!(h.level_stats(0).misses, 1);
+        // L2 only saw the first (missing) access
+        assert_eq!(h.llc_stats().accesses, 1);
+    }
+
+    #[test]
+    fn same_line_is_one_entry() {
+        let mut h = tiny();
+        h.access(0);
+        assert_eq!(h.access(63), 1); // same 64B line
+        assert_eq!(h.access(64), 1 + 10 + 100); // next line
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        // L1: 256B/64B/2-way = 2 sets; addresses mapping to set 0:
+        // lines 0, 2, 4 (line index mod 2 == 0)
+        let mut h = tiny();
+        h.access(0); // line 0 -> set 0
+        h.access(128); // line 2 -> set 0
+        h.access(256); // line 4 -> set 0, evicts line 0 (LRU)
+        assert_eq!(h.level_stats(0).misses, 3);
+        h.access(128); // still resident (MRU before line 4 arrived)
+        assert_eq!(h.level_stats(0).misses, 3);
+        h.access(0); // was evicted -> L1 miss (but L2 hit)
+        assert_eq!(h.level_stats(0).misses, 4);
+        assert_eq!(h.llc_stats().misses, 3); // L2 held it
+    }
+
+    #[test]
+    fn misses_bounded_by_accesses() {
+        let mut h = tiny();
+        let mut s: u64 = 9;
+        for _ in 0..10_000 {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            h.access(s % 65536);
+        }
+        for lvl in 0..h.depth() {
+            let st = h.level_stats(lvl);
+            assert!(st.misses <= st.accesses);
+        }
+        let llc = h.llc_stats();
+        assert!(llc.miss_rate() > 0.0 && llc.miss_rate() <= 1.0);
+        assert!(llc.avg_miss_latency() > 0.0);
+    }
+
+    #[test]
+    fn working_set_within_capacity_converges_to_hits() {
+        let mut h = tiny(); // L2 = 1KB
+        // stream 512B (8 lines) twice: second pass must fully hit L2
+        for pass in 0..2 {
+            for line in 0..8u64 {
+                h.access(line * 64);
+            }
+            if pass == 0 {
+                assert_eq!(h.llc_stats().misses, 8);
+            }
+        }
+        assert_eq!(h.llc_stats().misses, 8, "no new LLC misses on re-stream");
+    }
+
+    #[test]
+    fn presets_are_consistent() {
+        assert_eq!(gem5_ex5_big().depth(), 2);
+        assert_eq!(gem5_ex5_big_l3().depth(), 3);
+        assert_eq!(l1_only().depth(), 1);
+        assert_eq!(rpi4_a72().depth(), 2);
+        assert_eq!(with_l2_size(8 << 20).level_config(1).size, 8 << 20);
+    }
+}

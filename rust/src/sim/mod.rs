@@ -1,0 +1,93 @@
+//! Cache-hierarchy simulation — the gem5 stand-in (DESIGN.md §2).
+//!
+//! * [`cache`] — set-associative LRU multi-level hierarchy with the
+//!   paper's Table 1 / Table 2 presets;
+//! * [`trace`] — per-kernel memory-trace generators replayed against it.
+//!
+//! The cost model (`crate::costmodel`) combines these cache statistics
+//! with per-method instruction counts into cycles/IPC — regenerating
+//! Figs. 4–8 and 12–13.
+
+pub mod cache;
+pub mod trace;
+
+pub use cache::{CacheConfig, CacheStats, Hierarchy};
+pub use trace::{replay_gemv, replay_gemv_at, GemvTraffic};
+
+/// Named hierarchy presets (CLI `--cache` flag and Fig. 7 sweep).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CachePreset {
+    /// Table 1: 128KB L1 + 2MB L2 (default)
+    Gem5Ex5Big,
+    /// Table 1 with the optional 8MB L3
+    Gem5Ex5BigL3,
+    /// Fig. 7a: 1MB L2
+    L21M,
+    /// Fig. 7c: 8MB L2
+    L28M,
+    /// Fig. 7d: L1 only
+    L1Only,
+    /// Table 2: Raspberry Pi 4 (Cortex-A72)
+    Rpi4,
+}
+
+impl CachePreset {
+    pub fn build(self) -> Hierarchy {
+        match self {
+            CachePreset::Gem5Ex5Big => cache::gem5_ex5_big(),
+            CachePreset::Gem5Ex5BigL3 => cache::gem5_ex5_big_l3(),
+            CachePreset::L21M => cache::with_l2_size(1 << 20),
+            CachePreset::L28M => cache::with_l2_size(8 << 20),
+            CachePreset::L1Only => cache::l1_only(),
+            CachePreset::Rpi4 => cache::rpi4_a72(),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "gem5" | "gem5-ex5-big" | "default" => CachePreset::Gem5Ex5Big,
+            "gem5-l3" | "l3" => CachePreset::Gem5Ex5BigL3,
+            "l2-1m" => CachePreset::L21M,
+            "l2-8m" => CachePreset::L28M,
+            "l1-only" => CachePreset::L1Only,
+            "rpi4" => CachePreset::Rpi4,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CachePreset::Gem5Ex5Big => "gem5-ex5-big (2MB L2)",
+            CachePreset::Gem5Ex5BigL3 => "gem5-ex5-big + 8MB L3",
+            CachePreset::L21M => "1MB L2",
+            CachePreset::L28M => "8MB L2",
+            CachePreset::L1Only => "L1 only",
+            CachePreset::Rpi4 => "RPi4 Cortex-A72 (1MB L2)",
+        }
+    }
+
+    pub const ALL: [CachePreset; 6] = [
+        CachePreset::Gem5Ex5Big,
+        CachePreset::Gem5Ex5BigL3,
+        CachePreset::L21M,
+        CachePreset::L28M,
+        CachePreset::L1Only,
+        CachePreset::Rpi4,
+    ];
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preset_parse_roundtrip() {
+        assert_eq!(CachePreset::parse("gem5"), Some(CachePreset::Gem5Ex5Big));
+        assert_eq!(CachePreset::parse("rpi4"), Some(CachePreset::Rpi4));
+        assert_eq!(CachePreset::parse("bogus"), None);
+        for p in CachePreset::ALL {
+            assert!(!p.name().is_empty());
+            let _ = p.build();
+        }
+    }
+}

@@ -1,0 +1,163 @@
+//! Criterion-less benchmark harness (criterion is unavailable offline —
+//! DESIGN.md §7): warmup + timed iterations, robust statistics, and the
+//! fixed-width table printer the figure harnesses share.
+
+use std::time::Instant;
+
+/// Result of one measurement: nanoseconds per iteration.
+#[derive(Debug, Clone, Copy)]
+pub struct Measurement {
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    /// median absolute deviation (robust spread)
+    pub mad_ns: f64,
+    pub iters: usize,
+}
+
+impl Measurement {
+    pub fn micros(&self) -> f64 {
+        self.median_ns / 1e3
+    }
+
+    pub fn millis(&self) -> f64 {
+        self.median_ns / 1e6
+    }
+}
+
+/// Benchmark a closure: `warmup` untimed runs, then time per-iteration
+/// until `min_total_ms` of samples or `max_iters`, whichever first.
+pub fn bench<F: FnMut()>(mut f: F, warmup: usize, min_total_ms: u64, max_iters: usize) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<f64> = Vec::new();
+    let budget = std::time::Duration::from_millis(min_total_ms);
+    let start = Instant::now();
+    while (start.elapsed() < budget && samples.len() < max_iters) || samples.len() < 3 {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    summarize(&mut samples)
+}
+
+fn summarize(samples: &mut [f64]) -> Measurement {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[samples.len() / 2];
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let mut devs: Vec<f64> = samples.iter().map(|s| (s - median).abs()).collect();
+    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Measurement {
+        median_ns: median,
+        mean_ns: mean,
+        mad_ns: devs[devs.len() / 2],
+        iters: samples.len(),
+    }
+}
+
+/// Fixed-width table printer used by all figure harnesses.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(headers: Vec<S>) -> Self {
+        Table { headers: headers.into_iter().map(Into::into).collect(), rows: Vec::new() }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                if i > 0 {
+                    line.push_str("  ");
+                }
+                line.push_str(&format!("{:>w$}", c, w = widths[i]));
+            }
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    /// CSV form (for EXPERIMENTS.md extraction).
+    pub fn to_csv(&self) -> String {
+        let mut out = self.headers.join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_sane_stats() {
+        let mut x = 0u64;
+        let m = bench(
+            || {
+                for i in 0..1000 {
+                    x = x.wrapping_add(i);
+                }
+                std::hint::black_box(x);
+            },
+            2,
+            5,
+            10_000,
+        );
+        assert!(m.iters >= 3);
+        assert!(m.median_ns > 0.0);
+        assert!(m.mad_ns >= 0.0);
+        assert!(m.mean_ns > 0.0);
+    }
+
+    #[test]
+    fn table_render_and_csv() {
+        let mut t = Table::new(vec!["k", "speedup"]);
+        t.row(vec!["256", "1.20"]);
+        t.row(vec!["4096", "2.44"]);
+        let s = t.render();
+        assert!(s.contains("speedup"));
+        assert!(s.contains("2.44"));
+        let csv = t.to_csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.starts_with("k,speedup"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_bad_rows() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["only-one"]);
+    }
+}

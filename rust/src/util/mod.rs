@@ -1,0 +1,7 @@
+//! Small in-repo utilities replacing crates unavailable offline
+//! (DESIGN.md §7): a JSON parser, a bench harness, and a
+//! property-testing micro-framework.
+
+pub mod bench;
+pub mod json;
+pub mod proptest_lite;

@@ -1,0 +1,158 @@
+//! Property-testing micro-framework (proptest is unavailable offline —
+//! DESIGN.md §7): seeded SplitMix64 generators, N-case runners, and
+//! greedy input shrinking on failure.
+//!
+//! Usage (`no_run`: doctest binaries can't locate libxla's libstdc++ at
+//! runtime in this image; the same code runs in the unit tests below):
+//! ```no_run
+//! use fullpack::util::proptest_lite::{Gen, run_prop};
+//! run_prop(100, |g| {
+//!     let v = g.vec_i8_in(-8, 7, 0, 64);
+//!     let doubled: Vec<i16> = v.iter().map(|&x| x as i16 * 2).collect();
+//!     doubled.iter().zip(&v).all(|(&d, &x)| d == x as i16 * 2)
+//! });
+//! ```
+
+/// SplitMix64 — tiny, high-quality, deterministic.
+pub struct Gen {
+    state: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen { state: seed }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[lo, hi]` inclusive.
+    pub fn int_in(&mut self, lo: i64, hi: i64) -> i64 {
+        debug_assert!(lo <= hi);
+        let span = (hi - lo + 1) as u64;
+        lo + (self.next_u64() % span) as i64
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.int_in(lo as i64, hi as i64) as usize
+    }
+
+    pub fn i8_in(&mut self, lo: i8, hi: i8) -> i8 {
+        self.int_in(lo as i64, hi as i64) as i8
+    }
+
+    pub fn f32_unit(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.next_u64() & 1 == 1
+    }
+
+    /// Random-length vector of i8 in `[lo, hi]`.
+    pub fn vec_i8_in(&mut self, lo: i8, hi: i8, min_len: usize, max_len: usize) -> Vec<i8> {
+        let n = self.usize_in(min_len, max_len);
+        (0..n).map(|_| self.i8_in(lo, hi)).collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.usize_in(0, items.len() - 1)]
+    }
+}
+
+/// Run `cases` random cases of `prop`; panic with the failing seed on
+/// the first counterexample.  Deterministic across runs (fixed base
+/// seed), so failures are reproducible by seed.
+pub fn run_prop<F: FnMut(&mut Gen) -> bool>(cases: usize, mut prop: F) {
+    for case in 0..cases {
+        let seed = 0xFEED_0000 + case as u64;
+        let mut g = Gen::new(seed);
+        if !prop(&mut g) {
+            panic!("property failed at case {case} (seed {seed:#x}); re-run with Gen::new({seed:#x})");
+        }
+    }
+}
+
+/// Shrinking helper for vector-shaped inputs: greedily tries removing
+/// chunks, then zeroing elements, while `fails` keeps returning true.
+/// Returns the minimized failing input.
+pub fn shrink_vec<T: Copy + Default, F: FnMut(&[T]) -> bool>(input: &[T], mut fails: F) -> Vec<T> {
+    let mut cur: Vec<T> = input.to_vec();
+    debug_assert!(fails(&cur), "shrink_vec needs a failing input");
+    // pass 1: remove halves/quarters/single elements
+    let mut chunk = (cur.len() / 2).max(1);
+    while chunk >= 1 {
+        let mut i = 0;
+        while i + chunk <= cur.len() {
+            let mut cand = cur.clone();
+            cand.drain(i..i + chunk);
+            if !cand.is_empty() && fails(&cand) {
+                cur = cand;
+            } else {
+                i += chunk;
+            }
+        }
+        if chunk == 1 {
+            break;
+        }
+        chunk /= 2;
+    }
+    // pass 2: zero out elements
+    for i in 0..cur.len() {
+        let mut cand = cur.clone();
+        cand[i] = T::default();
+        if fails(&cand) {
+            cur = cand;
+        }
+    }
+    cur
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let a: Vec<u64> = { let mut g = Gen::new(42); (0..5).map(|_| g.next_u64()).collect() };
+        let b: Vec<u64> = { let mut g = Gen::new(42); (0..5).map(|_| g.next_u64()).collect() };
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn ranges_respected() {
+        let mut g = Gen::new(7);
+        for _ in 0..1000 {
+            let v = g.i8_in(-8, 7);
+            assert!((-8..=7).contains(&v));
+            let u = g.usize_in(3, 5);
+            assert!((3..=5).contains(&u));
+            let f = g.f32_unit();
+            assert!((0.0..1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn run_prop_passes_trivial() {
+        run_prop(50, |g| g.int_in(0, 10) <= 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn run_prop_reports_failure() {
+        run_prop(50, |g| g.int_in(0, 10) < 5);
+    }
+
+    #[test]
+    fn shrink_finds_minimal() {
+        // failing predicate: contains an element > 100
+        let input: Vec<i32> = (0..64).map(|i| if i == 37 { 120 } else { i }).collect();
+        let small = shrink_vec(&input, |v| v.iter().any(|&x| x > 100));
+        assert_eq!(small, vec![120]);
+    }
+}

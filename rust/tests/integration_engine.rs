@@ -1,0 +1,135 @@
+//! Engine-level integration: the whole L3 stack (batcher → router →
+//! workers → model → kernels) under concurrent load, failure injection,
+//! and policy variations.
+
+use fullpack::coordinator::{
+    Batcher, BatcherConfig, Engine, EngineConfig, RouterConfig,
+};
+use fullpack::models::{DeepSpeech, DeepSpeechConfig};
+use fullpack::pack::Variant;
+
+fn frames(cfg: DeepSpeechConfig) -> Vec<f32> {
+    (0..cfg.time_steps * cfg.n_input).map(|i| (i as f32 * 0.013).sin()).collect()
+}
+
+fn engine_with(variant: &str, workers: usize, max_queue: usize) -> Engine {
+    let e = Engine::new(EngineConfig {
+        workers,
+        batcher: BatcherConfig {
+            max_batch: 4,
+            max_wait: std::time::Duration::from_millis(1),
+            max_queue,
+        },
+        router: RouterConfig::default(),
+    });
+    e.register_model(
+        "ds",
+        DeepSpeech::new(DeepSpeechConfig::TINY, Variant::parse(variant).unwrap(), 11),
+    );
+    e
+}
+
+#[test]
+fn sustained_concurrent_load_all_variants() {
+    for variant in ["w4a8", "w8a4", "w4a4", "w2a8", "w8a2", "w2a2", "w1a8", "w8a1", "w1a1"] {
+        let e = engine_with(variant, 3, 256);
+        let f = frames(DeepSpeechConfig::TINY);
+        let rxs: Vec<_> = (0..24).map(|_| e.submit("ds", f.clone()).unwrap()).collect();
+        for rx in rxs {
+            let r = rx.recv().unwrap().unwrap();
+            assert!(r.logits.iter().all(|x| x.is_finite()), "{variant}");
+        }
+        assert_eq!(e.metrics().completed.load(std::sync::atomic::Ordering::Relaxed), 24);
+        e.shutdown();
+    }
+}
+
+#[test]
+fn multiple_models_coexist() {
+    let e = engine_with("w4a8", 2, 64);
+    e.register_model(
+        "ds-w1a1",
+        DeepSpeech::new(DeepSpeechConfig::TINY, Variant::parse("w1a1").unwrap(), 11),
+    );
+    let f = frames(DeepSpeechConfig::TINY);
+    let a = e.infer("ds", f.clone()).unwrap();
+    let b = e.infer("ds-w1a1", f).unwrap();
+    assert_ne!(a.logits, b.logits, "different quantization, different outputs");
+}
+
+#[test]
+fn model_hot_swap() {
+    let e = engine_with("w4a8", 1, 64);
+    let f = frames(DeepSpeechConfig::TINY);
+    let before = e.infer("ds", f.clone()).unwrap().logits;
+    // replace the model under the same name (new seed)
+    e.register_model(
+        "ds",
+        DeepSpeech::new(DeepSpeechConfig::TINY, Variant::parse("w4a8").unwrap(), 99),
+    );
+    let after = e.infer("ds", f).unwrap().logits;
+    assert_ne!(before, after, "hot-swapped weights take effect");
+}
+
+#[test]
+fn backpressure_rejects_cleanly_and_recovers() {
+    // one worker, tiny queue: flood and expect some rejections but no
+    // deadlock and full recovery afterwards
+    let e = engine_with("w4a8", 1, 4);
+    let f = frames(DeepSpeechConfig::TINY);
+    let mut accepted = Vec::new();
+    let mut rejected = 0;
+    for _ in 0..64 {
+        match e.submit("ds", f.clone()) {
+            Ok(rx) => accepted.push(rx),
+            Err(_) => rejected += 1,
+        }
+    }
+    for rx in accepted {
+        rx.recv().unwrap().unwrap();
+    }
+    // engine still serves after the flood
+    assert!(e.infer("ds", f).is_ok());
+    assert!(rejected > 0 || e.metrics().completed.load(std::sync::atomic::Ordering::Relaxed) >= 64);
+}
+
+#[test]
+fn errors_do_not_poison_workers() {
+    let e = engine_with("w4a8", 1, 64);
+    let f = frames(DeepSpeechConfig::TINY);
+    for _ in 0..3 {
+        assert!(e.infer("missing-model", f.clone()).is_err());
+        assert!(e.infer("ds", vec![1.0; 7]).is_err()); // bad shape
+    }
+    let ok = e.infer("ds", f).unwrap();
+    assert!(!ok.logits.is_empty());
+    assert_eq!(e.metrics().errors.load(std::sync::atomic::Ordering::Relaxed), 6);
+}
+
+#[test]
+fn router_counts_reflect_topology() {
+    let e = engine_with("w2a2", 2, 64);
+    let f = frames(DeepSpeechConfig::TINY);
+    for _ in 0..4 {
+        e.infer("ds", f.clone()).unwrap();
+    }
+    let (gemv, gemm) = e.router().counts();
+    // per request: 1 LSTM layer -> gemv path, 5 FC layers -> gemm path
+    assert_eq!(gemv, 4);
+    assert_eq!(gemm, 20);
+}
+
+#[test]
+fn batcher_generic_over_payload() {
+    // the batcher is reusable for arbitrary work items
+    let mut b: Batcher<String> = Batcher::new(BatcherConfig {
+        max_batch: 2,
+        max_wait: std::time::Duration::from_secs(10),
+        max_queue: 8,
+    });
+    b.push("a".into()).unwrap();
+    b.push("b".into()).unwrap();
+    b.push("c".into()).unwrap();
+    let (batch, _) = b.pop_batch(false).unwrap();
+    assert_eq!(batch, vec!["a".to_string(), "b".to_string()]);
+}

@@ -1,0 +1,156 @@
+//! Cross-language integration: the Rust packers + native kernels must
+//! agree bit-for-bit with the AOT-lowered Pallas kernels executed via
+//! PJRT — the strongest three-layer consistency check in the repo.
+//!
+//! Requires `make artifacts`; every test skips gracefully otherwise.
+
+use fullpack::kernels::{gemv, pack_activations, ActVec};
+use fullpack::pack::{BitWidth, PackedMatrix, Variant};
+use fullpack::runtime::{Runtime, Tensor};
+use fullpack::util::proptest_lite::Gen;
+
+fn runtime() -> Option<Runtime> {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::load(dir).expect("load runtime"))
+}
+
+fn rand_in(g: &mut Gen, bits: BitWidth, n: usize) -> Vec<i8> {
+    let (lo, hi) = bits.value_range();
+    (0..n).map(|_| g.i8_in(lo, hi)).collect()
+}
+
+#[test]
+fn all_nine_variants_native_equals_pjrt() {
+    let Some(rt) = runtime() else { return };
+    let mut g = Gen::new(0xC0FFEE);
+    let (z, k) = (256usize, 256usize);
+    for variant in Variant::PAPER_VARIANTS {
+        let name = format!("gemv_{}_{z}x{k}", variant.name());
+        let meta = rt.manifest().get(&name).unwrap_or_else(|| panic!("{name} missing"));
+
+        let w = rand_in(&mut g, variant.w, z * k);
+        let a = rand_in(&mut g, variant.a, k);
+        let wp = PackedMatrix::from_i8(&w, z, k, variant.w).expect("pack weights");
+
+        // native
+        let packed_a;
+        let act = if variant.a.is_sub_byte() {
+            packed_a = pack_activations(&a, variant.a).unwrap();
+            ActVec::Packed { bytes: &packed_a, bits: variant.a }
+        } else {
+            ActVec::I8(&a)
+        };
+        let mut native = vec![0i32; z];
+        gemv(&wp, act, &mut native).unwrap();
+
+        // PJRT (same packed bytes — the layouts must be identical)
+        let w_tensor = if variant.w.is_sub_byte() {
+            Tensor::u8(wp.bytes().to_vec(), meta.inputs[0].shape.clone())
+        } else {
+            Tensor::s8(w.clone(), meta.inputs[0].shape.clone())
+        };
+        let a_tensor = if variant.a.is_sub_byte() {
+            Tensor::u8(pack_activations(&a, variant.a).unwrap(), meta.inputs[1].shape.clone())
+        } else {
+            Tensor::s8(a.clone(), meta.inputs[1].shape.clone())
+        };
+        let out = rt.execute(&name, &[w_tensor, a_tensor]).expect("pjrt exec");
+        assert_eq!(out[0].as_s32().unwrap(), native.as_slice(), "{variant} PJRT != native");
+    }
+}
+
+#[test]
+fn w8a8_and_f32_baseline_artifacts() {
+    let Some(rt) = runtime() else { return };
+    let mut g = Gen::new(0xBEEF);
+    let (z, k) = (256usize, 256usize);
+    // w8a8
+    let w = rand_in(&mut g, BitWidth::B8, z * k);
+    let a = rand_in(&mut g, BitWidth::B8, k);
+    let wp = PackedMatrix::from_i8(&w, z, k, BitWidth::B8).unwrap();
+    let mut native = vec![0i32; z];
+    gemv(&wp, ActVec::I8(&a), &mut native).unwrap();
+    let out = rt
+        .execute(
+            "gemv_w8a8_256x256",
+            &[Tensor::s8(w, vec![z, k]), Tensor::s8(a, vec![k])],
+        )
+        .unwrap();
+    assert_eq!(out[0].as_s32().unwrap(), native.as_slice());
+
+    // f32
+    let wf: Vec<f32> = (0..z * k).map(|i| ((i % 37) as f32 - 18.0) * 0.03).collect();
+    let af: Vec<f32> = (0..k).map(|i| ((i % 11) as f32 - 5.0) * 0.1).collect();
+    let out = rt
+        .execute(
+            "gemv_f32_256x256",
+            &[Tensor::f32(wf.clone(), vec![z, k]), Tensor::f32(af.clone(), vec![k])],
+        )
+        .unwrap();
+    let got = out[0].as_f32().unwrap();
+    for r in 0..z {
+        let expect: f32 = wf[r * k..(r + 1) * k].iter().zip(&af).map(|(x, y)| x * y).sum();
+        assert!((got[r] - expect).abs() < 1e-2, "row {r}: {} vs {expect}", got[r]);
+    }
+}
+
+#[test]
+fn lstm_step_artifact_runs_and_is_stable() {
+    let Some(rt) = runtime() else { return };
+    let name = "lstm_step_w4a8_tiny";
+    let meta = rt.manifest().get(name).expect("tiny lstm artifact").clone();
+    let hidden = meta.meta["hidden"] as usize;
+    let mut g = Gen::new(0xDADA);
+
+    let w = rand_in(&mut g, BitWidth::B4, 4 * hidden * hidden);
+    let wp = PackedMatrix::from_i8(&w, 4 * hidden, hidden, BitWidth::B4).unwrap();
+    let x = rand_in(&mut g, BitWidth::B8, hidden);
+    let h = vec![0i8; hidden];
+    let c = vec![0.0f32; hidden];
+    let bias = vec![0.0f32; 4 * hidden];
+
+    let inputs = vec![
+        Tensor::u8(wp.bytes().to_vec(), meta.inputs[0].shape.clone()),
+        Tensor::u8(wp.bytes().to_vec(), meta.inputs[1].shape.clone()),
+        Tensor::f32(bias, meta.inputs[2].shape.clone()),
+        Tensor::s8(x, meta.inputs[3].shape.clone()),
+        Tensor::s8(h, meta.inputs[4].shape.clone()),
+        Tensor::f32(c, meta.inputs[5].shape.clone()),
+        Tensor::scalar_f32(0.05),
+        Tensor::scalar_f32(1.0 / 127.0),
+        Tensor::scalar_f32(0.02),
+    ];
+    let out1 = rt.execute(name, &inputs).expect("lstm step");
+    assert_eq!(out1.len(), 3); // h_packed, c, h_f32
+    let h_f32 = out1[2].as_f32().unwrap();
+    assert_eq!(h_f32.len(), hidden);
+    assert!(h_f32.iter().all(|v| v.is_finite() && v.abs() <= 1.0), "tanh-bounded");
+    // determinism
+    let out2 = rt.execute(name, &inputs).expect("lstm step 2");
+    assert_eq!(out1[2], out2[2]);
+    // cell state evolves from zero given nonzero input
+    let c_next = out1[1].as_f32().unwrap();
+    assert!(c_next.iter().any(|&v| v != 0.0));
+}
+
+#[test]
+fn deepspeech_tiny_artifact_forward() {
+    let Some(rt) = runtime() else { return };
+    for variant in ["w4a8", "w1a1", "f32"] {
+        let name = format!("deepspeech_tiny_{variant}");
+        let meta = rt.manifest().get(&name).expect("tiny e2e artifact").clone();
+        let t = meta.meta["time_steps"] as usize;
+        let n_in = meta.meta["n_input"] as usize;
+        let frames: Vec<f32> = (0..t * n_in).map(|i| (i as f32 * 0.01).sin()).collect();
+        let out = rt
+            .execute(&name, &[Tensor::f32(frames, vec![t, n_in])])
+            .expect("tiny forward");
+        let logits = out[0].as_f32().unwrap();
+        assert_eq!(logits.len(), t * meta.meta["n_output"] as usize);
+        assert!(logits.iter().all(|v| v.is_finite()), "{name}");
+    }
+}

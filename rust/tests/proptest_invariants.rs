@@ -1,0 +1,191 @@
+//! Property-based invariants (proptest_lite — DESIGN.md §7) across the
+//! coordinator substrates: packing, kernels, quantization, the cache
+//! simulator, the batcher and the router.
+
+use fullpack::coordinator::{Batcher, BatcherConfig};
+use fullpack::kernels::{gemv, pack_activations, ActVec};
+use fullpack::pack::{pack, unpack, BitWidth, PackedMatrix, Variant};
+use fullpack::quant::{dequantize, quantize};
+use fullpack::sim::{replay_gemv, CachePreset, GemvTraffic};
+use fullpack::util::proptest_lite::{run_prop, Gen};
+
+const SUB_BITS: [BitWidth; 3] = [BitWidth::B4, BitWidth::B2, BitWidth::B1];
+
+#[test]
+fn prop_pack_roundtrip_arbitrary_lengths() {
+    run_prop(200, |g| {
+        let bits = *g.pick(&SUB_BITS);
+        let (lo, hi) = bits.value_range();
+        let x = g.vec_i8_in(lo, hi, 0, 700);
+        let packed = pack(&x, bits).unwrap();
+        unpack(&packed, bits, x.len()).unwrap() == x
+    });
+}
+
+#[test]
+fn prop_pack_density_exact() {
+    // zero spacer bits: every packed byte carries exactly 8/bits values
+    run_prop(100, |g| {
+        let bits = *g.pick(&SUB_BITS);
+        let (lo, hi) = bits.value_range();
+        let x = g.vec_i8_in(lo, hi, 1, 500);
+        let packed = pack(&x, bits).unwrap();
+        packed.len() == bits.padded_len(x.len()) / bits.elems_per_byte()
+    });
+}
+
+#[test]
+fn prop_gemv_matches_oracle_every_variant() {
+    run_prop(60, |g| {
+        let variant = Variant::PAPER_VARIANTS[g.usize_in(0, 8)];
+        let z = g.usize_in(1, 24);
+        let k = g.usize_in(1, 300);
+        let kp = variant.padded_depth(k);
+        let (wlo, whi) = variant.w.value_range();
+        let (alo, ahi) = variant.a.value_range();
+        let mut w = vec![0i8; z * kp];
+        for r in 0..z {
+            for c in 0..k {
+                w[r * kp + c] = g.i8_in(wlo, whi);
+            }
+        }
+        let mut a = vec![0i8; kp];
+        for c in 0..k {
+            a[c] = g.i8_in(alo, ahi);
+        }
+        let wp = PackedMatrix::from_i8(&w, z, kp, variant.w).unwrap();
+        let packed_a;
+        let act = if variant.a.is_sub_byte() {
+            packed_a = pack_activations(&a, variant.a).unwrap();
+            ActVec::Packed { bytes: &packed_a, bits: variant.a }
+        } else {
+            ActVec::I8(&a)
+        };
+        let mut out = vec![0i32; z];
+        gemv(&wp, act, &mut out).unwrap();
+        (0..z).all(|r| {
+            let oracle: i32 =
+                w[r * kp..(r + 1) * kp].iter().zip(&a).map(|(&x, &y)| x as i32 * y as i32).sum();
+            out[r] == oracle
+        })
+    });
+}
+
+#[test]
+fn prop_gemv_transpose_symmetry_w8a8() {
+    // gemv(W, a)[r] == gemv(W^T rowwise trick): dot products commute
+    run_prop(50, |g| {
+        let n = g.usize_in(1, 64);
+        let w = g.vec_i8_in(-128, 127, n * n, n * n);
+        let a = g.vec_i8_in(-128, 127, n, n);
+        let wp = PackedMatrix::from_i8(&w, n, n, BitWidth::B8).unwrap();
+        let mut wt = vec![0i8; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                wt[j * n + i] = w[i * n + j];
+            }
+        }
+        let wtp = PackedMatrix::from_i8(&wt, n, n, BitWidth::B8).unwrap();
+        let mut y1 = vec![0i32; n];
+        let mut y2 = vec![0i32; n];
+        gemv(&wp, ActVec::I8(&a), &mut y1).unwrap();
+        gemv(&wtp, ActVec::I8(&a), &mut y2).unwrap();
+        // y1 . a-ones == sum over matrix == y2 . a-ones when a == 1?  Use
+        // the weaker but always-true invariant: sum_r y1[r]*1 with unit
+        // acts equals total matrix sum both ways.
+        let ones = vec![1i8; n];
+        let mut s1 = vec![0i32; n];
+        let mut s2 = vec![0i32; n];
+        gemv(&wp, ActVec::I8(&ones), &mut s1).unwrap();
+        gemv(&wtp, ActVec::I8(&ones), &mut s2).unwrap();
+        s1.iter().map(|&v| v as i64).sum::<i64>() == s2.iter().map(|&v| v as i64).sum::<i64>()
+    });
+}
+
+#[test]
+fn prop_quantize_bounded_error() {
+    run_prop(100, |g| {
+        let bits = *g.pick(&[BitWidth::B8, BitWidth::B4, BitWidth::B2]);
+        let n = g.usize_in(1, 200);
+        let x: Vec<f32> = (0..n).map(|_| (g.f32_unit() - 0.5) * 20.0).collect();
+        let q = quantize(&x, bits);
+        let (lo, hi) = bits.value_range();
+        if !q.values.iter().all(|&v| v >= lo && v <= hi) {
+            return false;
+        }
+        let deq = dequantize(&q.values, q.scale);
+        x.iter().zip(&deq).all(|(a, b)| (a - b).abs() <= q.scale * 0.5 + 1e-5)
+    });
+}
+
+#[test]
+fn prop_cache_sim_invariants() {
+    // misses <= accesses at every level; inner-level accesses >= outer;
+    // deterministic replay
+    run_prop(40, |g| {
+        let z = g.usize_in(1, 64);
+        let k = g.usize_in(1, 2048);
+        let t = GemvTraffic {
+            z,
+            w_bytes_per_row: k.max(1),
+            a_bytes: k.max(1),
+            batch: g.usize_in(1, 4),
+            out_elem_bytes: 4,
+        };
+        let mut h1 = CachePreset::Gem5Ex5Big.build();
+        let lat1 = replay_gemv(&mut h1, &t);
+        let mut h2 = CachePreset::Gem5Ex5Big.build();
+        let lat2 = replay_gemv(&mut h2, &t);
+        if lat1 != lat2 {
+            return false;
+        }
+        let l1 = h1.level_stats(0);
+        let llc = h1.llc_stats();
+        l1.misses <= l1.accesses && llc.misses <= llc.accesses && llc.accesses <= l1.accesses
+            // LLC sees exactly the L1 misses in a 2-level inclusive
+            // hierarchy
+            && llc.accesses == l1.misses
+    });
+}
+
+#[test]
+fn prop_working_set_fits_no_steady_misses() {
+    // if total bytes fit the LLC, a second identical replay misses ~never
+    run_prop(30, |g| {
+        let z = g.usize_in(1, 32);
+        let k = g.usize_in(64, 4096);
+        let t = GemvTraffic { z, w_bytes_per_row: k, a_bytes: k, batch: 1, out_elem_bytes: 4 };
+        if t.weight_bytes() + t.a_bytes > (1 << 20) {
+            return true; // only test the fits case
+        }
+        let mut h = CachePreset::Gem5Ex5Big.build();
+        replay_gemv(&mut h, &t);
+        let cold = h.llc_stats().misses;
+        replay_gemv(&mut h, &t);
+        h.llc_stats().misses == cold
+    });
+}
+
+#[test]
+fn prop_batcher_fifo_and_lossless() {
+    run_prop(60, |g| {
+        let max_batch = g.usize_in(1, 8);
+        let n = g.usize_in(0, 40);
+        let mut b = Batcher::new(BatcherConfig {
+            max_batch,
+            max_wait: std::time::Duration::from_secs(100),
+            max_queue: 1024,
+        });
+        for i in 0..n {
+            b.push(i).unwrap();
+        }
+        let mut drained = Vec::new();
+        while let Some((batch, _)) = b.pop_batch(true) {
+            if batch.len() > max_batch {
+                return false;
+            }
+            drained.extend(batch);
+        }
+        drained == (0..n).collect::<Vec<_>>()
+    });
+}
