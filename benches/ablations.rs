@@ -3,33 +3,30 @@
 //! 1. **Extraction schedule** — FullPack's stride-16 two-shift layout vs
 //!    the naive adjacent layout (Alg. 1) at equal memory density: shows
 //!    the packing *co-design* is what pays, not density alone.
-//! 2. **ULPPACK local accumulation** — its spacer-lane kernel at the
-//!    same bit-width: memory density vs FullPack.
+//! 2. **Batched GEMM extension** — FullPack's one-extraction-per-block
+//!    GEMM vs repeated GEMV at the same bit-width.
 //! 3. **Batcher policy** — serving-engine throughput with batching
 //!    enabled vs per-request dispatch (max_batch = 1).
 //! 4. **Router policy** — FullPack disabled (everything on Ruy) vs the
 //!    paper's §4.6 split.
 //!
+//! Kernels are selected by registry name through `Plan`s — no kernel
+//! function is named here (DESIGN.md §3).
+//!
 //! Run: `cargo bench --bench ablations` (QUICK=1 shortens sampling)
 
 use fullpack::coordinator::{BatcherConfig, Engine, EngineConfig, RouterConfig};
-use fullpack::kernels::{gemv, naive::gemv_naive_wsub_a8, ActVec};
+use fullpack::kernels::testutil::rngvals;
+use fullpack::kernels::{LayerShape, PlanBuilder, SelectPolicy};
 use fullpack::models::{DeepSpeech, DeepSpeechConfig};
-use fullpack::pack::{pack_naive, BitWidth, PackedMatrix, Variant};
+use fullpack::pack::{BitWidth, Variant};
 use fullpack::util::bench::{bench, Table};
 
-fn vals(bits: BitWidth, n: usize, seed: u64) -> Vec<i8> {
-    let (lo, hi) = bits.value_range();
-    let span = (hi as i16 - lo as i16 + 1) as u64;
-    let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
-    (0..n)
-        .map(|_| {
-            s ^= s << 13;
-            s ^= s >> 7;
-            s ^= s << 17;
-            (lo as i16 + (s % span) as i16) as i8
-        })
-        .collect()
+fn explicit_plan(z: usize, k: usize, variant: Variant, kernel: &str) -> fullpack::kernels::Plan {
+    PlanBuilder::new(LayerShape { z, k, batch: 1 }, variant)
+        .policy(SelectPolicy::Explicit(kernel.to_string()))
+        .build()
+        .expect("registry kernel")
 }
 
 fn main() {
@@ -41,21 +38,18 @@ fn main() {
     let mut t = Table::new(vec!["bits", "fullpack us", "naive us", "co-design gain"]);
     for bits in [BitWidth::B4, BitWidth::B2, BitWidth::B1] {
         let (z, k) = (1024usize, 2048usize);
-        let w = vals(bits, z * k, 1);
-        let a = vals(BitWidth::B8, k, 2);
-        let wp = PackedMatrix::from_i8(&w, z, k, bits).unwrap();
-        let mut naive_packed = Vec::new();
-        for r in 0..z {
-            naive_packed.extend(pack_naive(&w[r * k..(r + 1) * k], bits).unwrap());
-        }
+        let variant = Variant::new(bits, BitWidth::B8);
+        let w = rngvals(bits, z * k, 1);
+        let a = rngvals(BitWidth::B8, k, 2);
+        let full_plan =
+            explicit_plan(z, k, variant, &format!("fullpack-w{}a8", bits.bits()));
+        let naive_plan =
+            explicit_plan(z, k, variant, &format!("naive-w{}a8", bits.bits()));
+        let wf = full_plan.prepare_weights(&w).unwrap();
+        let wn = naive_plan.prepare_weights(&w).unwrap();
         let mut out = vec![0i32; z];
-        let mf = bench(|| gemv(&wp, ActVec::I8(&a), &mut out).unwrap(), 2, ms, 100_000);
-        let mn = bench(
-            || gemv_naive_wsub_a8(&naive_packed, z, k, bits, &a, &mut out),
-            2,
-            ms,
-            100_000,
-        );
+        let mf = bench(|| full_plan.execute(&wf, &a, &mut out).unwrap(), 2, ms, 100_000);
+        let mn = bench(|| naive_plan.execute(&wn, &a, &mut out).unwrap(), 2, ms, 100_000);
         t.row(vec![
             format!("{}", bits.bits()),
             format!("{:.1}", mf.micros()),
@@ -70,25 +64,22 @@ fn main() {
     let mut t = Table::new(vec!["batch", "repeated-gemv us", "batched-gemm us", "gain"]);
     {
         let (z, k) = (1024usize, 2048usize);
-        let w = vals(BitWidth::B4, z * k, 3);
-        let wp = PackedMatrix::from_i8(&w, z, k, BitWidth::B4).unwrap();
+        let variant = Variant::parse("w4a8").unwrap();
+        let plan = explicit_plan(z, k, variant, "fullpack-w4a8");
+        let w = rngvals(BitWidth::B4, z * k, 3);
+        let wts = plan.prepare_weights(&w).unwrap();
         for batch in [2usize, 4, 16] {
-            let cols: Vec<Vec<i8>> = (0..batch).map(|c| vals(BitWidth::B8, k, 10 + c as u64)).collect();
-            let col_refs: Vec<&[i8]> = cols.iter().map(|c| c.as_slice()).collect();
+            let cols: Vec<Vec<i8>> =
+                (0..batch).map(|c| rngvals(BitWidth::B8, k, 10 + c as u64)).collect();
+            let flat: Vec<i8> = cols.concat();
             let mut out = vec![0i32; z * batch];
-            let mg = bench(
-                || {
-                    fullpack::kernels::fullpack_gemm::gemm_fullpack_dyn(&wp, &col_refs, &mut out)
-                        .unwrap()
-                },
-                2,
-                ms,
-                100_000,
-            );
+            // Plan::execute_batch routes to the kernel's batched GEMM
+            // override (one weight extraction feeds all columns)
+            let mg = bench(|| plan.execute_batch(&wts, &flat, batch, &mut out).unwrap(), 2, ms, 100_000);
             let mr = bench(
                 || {
                     for (c, col) in cols.iter().enumerate() {
-                        gemv(&wp, ActVec::I8(col), &mut out[c * z..(c + 1) * z]).unwrap();
+                        plan.execute(&wts, col, &mut out[c * z..(c + 1) * z]).unwrap();
                     }
                 },
                 2,

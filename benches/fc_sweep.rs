@@ -14,8 +14,10 @@ fn main() {
     let sizes: &[usize] =
         if quick { &[256, 1024, 4096] } else { &[128, 256, 512, 1024, 2048, 4096] };
     let ms = if quick { 10 } else { 40 };
+    // registry names — the shared modeled/measured namespace
     let methods = [
-        "w4a8", "w8a4", "w4a4", "w2a2", "w1a1", "xnn-w8a8", "tflite-w8a8", "gemmlowp-w8a8",
+        "fullpack-w4a8", "fullpack-w8a4", "fullpack-w4a4", "fullpack-w2a2", "fullpack-w1a1",
+        "xnn-w8a8", "tflite-w8a8", "gemmlowp-w8a8",
         "ruy-f32", "eigen-f32", "ulppack-w2a2", "ulppack-w1a1",
     ];
     println!("measured GEMV sweep (speedup = T_ruy-w8a8 / T_method), host CPU\n");

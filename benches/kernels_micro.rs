@@ -5,6 +5,7 @@
 //!
 //! Run: `cargo bench --bench kernels_micro` (QUICK=1 for less sampling)
 
+use fullpack::costmodel::Method;
 use fullpack::figures::ondevice::measure_method;
 use fullpack::models::FcShape;
 use fullpack::util::bench::Table;
@@ -13,9 +14,11 @@ fn main() {
     let quick = std::env::var("QUICK").is_ok();
     let ms = if quick { 8 } else { 60 };
     let shapes = [(256usize, 256usize), (2048, 2048), (8192, 4096)];
+    // registry names — the shared modeled/measured namespace
     let methods = [
         "ruy-w8a8", "xnn-w8a8", "tflite-w8a8", "gemmlowp-w8a8",
-        "w4a8", "w8a4", "w4a4", "w2a8", "w8a2", "w2a2", "w1a8", "w8a1", "w1a1",
+        "fullpack-w4a8", "fullpack-w8a4", "fullpack-w4a4", "fullpack-w2a8", "fullpack-w8a2",
+        "fullpack-w2a2", "fullpack-w1a8", "fullpack-w8a1", "fullpack-w1a1",
         "ruy-f32", "eigen-f32", "tflite-f32", "ulppack-w2a2", "ulppack-w1a1",
     ];
     for (z, k) in shapes {
@@ -25,15 +28,11 @@ fn main() {
         let base = measure_method(&fc, "ruy-w8a8", 3, ms).median_ns;
         for m in methods {
             let r = measure_method(&fc, m, 3, ms);
-            let wbytes: f64 = match m {
-                m if m.ends_with("f32") => (4 * z * k) as f64,
-                m if m.starts_with("ulppack") => (z * k) as f64,
-                m if m.starts_with('w') => {
-                    let wb: usize = m[1..2].parse().unwrap();
-                    (z * k * wb) as f64 / 8.0
-                }
-                _ => (z * k) as f64,
-            };
+            // weight bytes from the cost model — same namespace, no
+            // per-name parsing
+            let wbytes = Method::from_registry(m)
+                .map(|mm| (z * mm.weight_bytes_per_row(k)) as f64)
+                .unwrap_or((z * k) as f64);
             t.row(vec![
                 m.to_string(),
                 format!("{:.1}", r.micros()),

@@ -13,9 +13,10 @@
 use fullpack::coordinator::{BatcherConfig, Engine, EngineConfig, RouterConfig};
 use fullpack::models::{DeepSpeech, DeepSpeechConfig};
 use fullpack::pack::Variant;
+use fullpack::util::error::{anyhow, Result};
 use std::collections::BTreeMap;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let tiny = std::env::args().any(|a| a == "--tiny");
     let cfg = if tiny { DeepSpeechConfig::TINY } else { DeepSpeechConfig::FULL };
     let requests = if tiny { 8 } else { 12 };
@@ -43,11 +44,11 @@ fn main() -> anyhow::Result<()> {
         engine.infer("deepspeech", frames.clone())?;
         let rxs: Vec<_> = (0..requests)
             .map(|_| engine.submit("deepspeech", frames.clone()))
-            .collect::<anyhow::Result<_>>()?;
+            .collect::<Result<_>>()?;
         let mut layer_ns: BTreeMap<&'static str, f64> = BTreeMap::new();
         let mut best_total = f64::INFINITY;
         for rx in rxs {
-            let resp = rx.recv().map_err(|_| anyhow::anyhow!("dropped"))??;
+            let resp = rx.recv().map_err(|_| anyhow!("dropped"))??;
             let total: u128 = resp.layer_times.iter().map(|(_, t)| t).sum();
             if (total as f64) < best_total {
                 best_total = total as f64;

@@ -1,6 +1,7 @@
-//! Kernel matrix: run all nine FullPack GEMV variants (§3.2) plus the
-//! baselines on one layer shape — measured wall clock, correctness
-//! cross-checked against the scalar oracle, footprint reported.
+//! Kernel matrix: run every registered GEMV backend on one layer shape —
+//! measured wall clock, correctness cross-checked against the scalar
+//! oracle, footprint reported.  Fully registry-driven: add a backend to
+//! `kernels::KernelRegistry` and it appears here with no edits.
 //!
 //! ```sh
 //! cargo run --release --example kernel_matrix           # 2048x2048
@@ -8,98 +9,71 @@
 //! ```
 
 use fullpack::figures::ondevice::measure_method;
-use fullpack::kernels::{self, ActVec};
+use fullpack::kernels::testutil::{oracle_gemv, pad_rows, rngvals};
+use fullpack::kernels::{KernelRegistry, LayerShape, PlanBuilder, SelectPolicy};
 use fullpack::models::FcShape;
-use fullpack::pack::{pack, PackedMatrix, Variant};
 use fullpack::util::bench::Table;
 
-fn vals(bits: fullpack::pack::BitWidth, n: usize, seed: u64) -> Vec<i8> {
-    let (lo, hi) = bits.value_range();
-    let span = (hi as i16 - lo as i16 + 1) as u64;
-    let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
-    (0..n)
-        .map(|_| {
-            s ^= s << 13;
-            s ^= s >> 7;
-            s ^= s << 17;
-            (lo as i16 + (s % span) as i16) as i8
-        })
-        .collect()
-}
-
-fn main() -> anyhow::Result<()> {
+fn main() -> fullpack::util::error::Result<()> {
     let args: Vec<usize> =
         std::env::args().skip(1).filter_map(|a| a.parse().ok()).collect();
     let z = args.first().copied().unwrap_or(2048);
     let k = args.get(1).copied().unwrap_or(2048);
     println!("kernel matrix on a {z}x{k} layer (median of repeated runs)\n");
 
-    let mut t = Table::new(vec!["kernel", "us/call", "GB/s (wts)", "footprint", "exact"]);
+    let reg = KernelRegistry::global();
     let fc = FcShape { name: "custom", z, k };
-
-    // baseline first
     let base = measure_method(&fc, "ruy-w8a8", 3, 40);
-    t.row(vec![
-        "ruy-w8a8 (baseline)".to_string(),
-        format!("{:.1}", base.micros()),
-        format!("{:.2}", (z * k) as f64 / base.median_ns),
-        format!("{:.2} MB", (z * k) as f64 / 1e6),
-        "-".into(),
-    ]);
 
-    for v in Variant::PAPER_VARIANTS {
-        // correctness: native kernel vs oracle on this exact shape
-        let kp = v.padded_depth(k);
-        let mut w = vals(v.w, z * k, 3);
-        let mut padded = vec![0i8; z * kp];
-        for r in 0..z {
-            padded[r * kp..r * kp + k].copy_from_slice(&w[r * k..(r + 1) * k]);
-        }
-        w = padded;
-        let mut a = vals(v.a, k, 4);
-        a.resize(kp, 0);
-        let wp = PackedMatrix::from_i8(&w, z, kp, v.w)?;
-        let ap = v.a.is_sub_byte().then(|| pack(&a, v.a).unwrap());
+    let mut t = Table::new(vec!["kernel", "us/call", "wt GB/s", "footprint", "exact", "vs ruy"]);
+    for kernel in reg.iter() {
+        let name = kernel.name();
+        let method = kernel.cost_method().expect("builtin kernels are modeled");
+        let variant = method.data_variant();
+
+        // correctness on this exact shape: plan-driven run vs oracle
+        let plan = PlanBuilder::new(LayerShape { z, k, batch: 1 }, variant)
+            .policy(SelectPolicy::Explicit(name.to_string()))
+            .build()?;
+        let w = rngvals(variant.w, z * k, 3);
+        let a = rngvals(variant.a, k, 4);
+        let weights = plan.prepare_weights(&w)?;
         let mut out = vec![0i32; z];
-        let act = match &ap {
-            Some(bytes) => ActVec::Packed { bytes, bits: v.a },
-            None => ActVec::I8(&a),
-        };
-        kernels::gemv(&wp, act, &mut out)?;
-        let exact = (0..z).all(|r| {
-            let oracle: i32 =
-                w[r * kp..(r + 1) * kp].iter().zip(&a).map(|(&x, &y)| x as i32 * y as i32).sum();
-            oracle == out[r]
-        });
+        plan.execute(&weights, &a, &mut out)?;
+        let kp = weights.k_padded();
+        let wp = pad_rows(&w, z, k, kp);
+        let mut ap = a.clone();
+        ap.resize(kp, 0);
+        let oracle = oracle_gemv(&wp, &ap, z, kp);
+        // integer kernels are bit-exact; f32 stand-ins round once the
+        // accumulator leaves f32's 2^24 exact-integer range
+        let f32_kernel = name.ends_with("-f32");
+        let exact = out == oracle;
+        if f32_kernel {
+            let max_rel = out
+                .iter()
+                .zip(&oracle)
+                .map(|(&x, &y)| (x as f64 - y as f64).abs() / (y as f64).abs().max(1.0))
+                .fold(0.0, f64::max);
+            assert!(max_rel < 1e-4, "kernel {name} relative error {max_rel}");
+        } else {
+            assert!(exact, "kernel {name} diverged from oracle");
+        }
 
-        let m = measure_method(&fc, &v.name(), 3, 40);
+        let m = if name == "ruy-w8a8" { base } else { measure_method(&fc, name, 3, 40) };
         t.row(vec![
-            format!("fullpack-{}", v.name()),
+            name.to_string(),
             format!("{:.1}", m.micros()),
-            format!("{:.2}", wp.footprint() as f64 / m.median_ns),
-            format!("{:.2} MB", wp.footprint() as f64 / 1e6),
-            if exact { "yes".into() } else { "NO".to_string() },
-        ]);
-        assert!(exact, "kernel {} diverged from oracle", v);
-    }
-
-    for m in ["xnn-w8a8", "tflite-w8a8", "ruy-f32", "ulppack-w2a2", "ulppack-w1a1"] {
-        let r = measure_method(&fc, m, 3, 40);
-        let bytes = match m {
-            "ruy-f32" => 4 * z * k,
-            _ => z * k,
-        };
-        t.row(vec![
-            m.to_string(),
-            format!("{:.1}", r.micros()),
-            format!("{:.2}", bytes as f64 / r.median_ns),
-            format!("{:.2} MB", bytes as f64 / 1e6),
-            "-".into(),
+            format!("{:.2}", weights.footprint() as f64 / m.median_ns),
+            format!("{:.2} MB", weights.footprint() as f64 / 1e6),
+            if f32_kernel { "~".into() } else if exact { "yes".into() } else { "NO".to_string() },
+            format!("{:.2}x", base.median_ns / m.median_ns),
         ]);
     }
     t.print();
+
     println!("\nspeedups vs ruy-w8a8:");
-    for v in ["w4a8", "w4a4", "w2a2", "w1a1"] {
+    for v in ["fullpack-w4a8", "fullpack-w4a4", "fullpack-w2a2", "fullpack-w1a1"] {
         let m = measure_method(&fc, v, 3, 40);
         println!("  {v}: {:.2}x", base.median_ns / m.median_ns);
     }

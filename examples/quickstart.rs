@@ -1,19 +1,18 @@
-//! Quickstart: quantize an f32 weight matrix to 4 bits, pack it with the
-//! FullPack layout, run a GEMV three ways — native Rust kernel, scalar
-//! oracle, and the AOT-compiled Pallas kernel via PJRT — and check all
-//! three agree.
+//! Quickstart: quantize an f32 weight matrix to 4 bits, build an
+//! execution plan from the kernel registry, run a GEMV three ways —
+//! plan-selected native kernel, scalar oracle, and (with `--features
+//! pjrt`) the AOT-compiled Pallas kernel via PJRT — and check all agree.
 //!
 //! ```sh
-//! make artifacts            # once (python, build-time only)
 //! cargo run --release --example quickstart
+//! make artifacts && cargo run --release --features pjrt --example quickstart
 //! ```
 
-use fullpack::kernels::{self, ActVec};
-use fullpack::pack::{BitWidth, PackedMatrix, Variant};
+use fullpack::kernels::{LayerShape, PlanBuilder};
+use fullpack::pack::{BitWidth, Variant};
 use fullpack::quant::{quantize_per_row, requantize_vec};
-use fullpack::runtime::{Runtime, Tensor};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> fullpack::util::error::Result<()> {
     let variant = Variant::parse("w4a8")?;
     let (z, k) = (256usize, 256usize);
 
@@ -23,22 +22,27 @@ fn main() -> anyhow::Result<()> {
     let (w_q, w_scales) = quantize_per_row(&w_f32, z, k, BitWidth::B4);
     let a_q: Vec<i8> = a_f32.iter().map(|&v| (v * 127.0).round() as i8).collect();
 
-    // 2. pack the weights — zero spacer bits, stride-16 layout (Fig. 2)
-    let wp = PackedMatrix::from_i8(&w_q, z, k, BitWidth::B4)?;
+    // 2. bind a plan: shape + variant -> kernel (paper rule picks the
+    //    FullPack GEMV for a single-batch sub-byte layer), then pack
+    //    the weights into that kernel's layout (Fig. 2 stride-16)
+    let plan = PlanBuilder::new(LayerShape { z, k, batch: 1 }, variant).build()?;
+    let weights = plan.prepare_weights(&w_q)?;
     println!(
-        "packed {}x{} 4-bit weights: {} bytes ({}x smaller than int8)",
+        "plan selected {} -> {} | packed {}x{} 4-bit weights: {} bytes ({}x smaller than int8)",
+        variant.name(),
+        plan.kernel_name(),
         z,
         k,
-        wp.footprint(),
-        z * k / wp.footprint()
+        weights.footprint(),
+        z * k / weights.footprint()
     );
 
-    // 3. native FullPack GEMV
+    // 3. plan-driven GEMV
     let mut acc = vec![0i32; z];
-    kernels::gemv(&wp, ActVec::I8(&a_q), &mut acc)?;
+    plan.execute(&weights, &a_q, &mut acc)?;
 
     // 4. scalar oracle (unpack + plain dot)
-    let w_back = wp.unpack_all();
+    let w_back = weights.as_packed().expect("fullpack layout").unpack_all();
     let oracle: Vec<i32> = (0..z)
         .map(|r| {
             w_back[r * k..(r + 1) * k]
@@ -52,21 +56,28 @@ fn main() -> anyhow::Result<()> {
     println!("native kernel matches the scalar oracle ({} outputs)", z);
 
     // 5. same computation through the AOT Pallas kernel (PJRT)
-    match Runtime::load("artifacts") {
-        Ok(rt) => {
-            let name = format!("gemv_{}_256x256", variant.name());
-            let out = rt.execute(
-                &name,
-                &[
-                    Tensor::u8(wp.bytes().to_vec(), vec![z, wp.bytes_per_row()]),
-                    Tensor::s8(a_q.clone(), vec![k]),
-                ],
-            )?;
-            assert_eq!(out[0].as_s32()?, acc.as_slice(), "PJRT == native");
-            println!("AOT Pallas kernel (PJRT) matches the native kernel bit-for-bit");
+    #[cfg(feature = "pjrt")]
+    {
+        use fullpack::runtime::{Runtime, Tensor};
+        match Runtime::load("artifacts") {
+            Ok(rt) => {
+                let wp = weights.as_packed().expect("fullpack layout");
+                let name = format!("gemv_{}_256x256", variant.name());
+                let out = rt.execute(
+                    &name,
+                    &[
+                        Tensor::u8(wp.bytes().to_vec(), vec![z, wp.bytes_per_row()]),
+                        Tensor::s8(a_q.clone(), vec![k]),
+                    ],
+                )?;
+                assert_eq!(out[0].as_s32()?, acc.as_slice(), "PJRT == native");
+                println!("AOT Pallas kernel (PJRT) matches the native kernel bit-for-bit");
+            }
+            Err(e) => println!("skipping PJRT check (run `make artifacts`): {e}"),
         }
-        Err(e) => println!("skipping PJRT check (run `make artifacts`): {e}"),
     }
+    #[cfg(not(feature = "pjrt"))]
+    println!("PJRT check skipped (rebuild with --features pjrt)");
 
     // 6. requantize the accumulators back to f32
     let bias = vec![0.0f32; z];

@@ -3,9 +3,10 @@
 //! ```text
 //! fullpack simulate <fig4|fig5|fig6|fig7|fig8|fig10|fig12|fig13|all> [--quick] [--csv DIR]
 //! fullpack simulate --show-config [--preset NAME]
-//! fullpack bench <fig11|deepspeech> [--variant V] [--ms N]
-//! fullpack serve [--variant V] [--requests N] [--workers N] [--tiny]
+//! fullpack bench <fig11|deepspeech> [--variant V] [--kernel NAME] [--ms N]
+//! fullpack serve [--variant V] [--kernel NAME] [--requests N] [--workers N] [--tiny]
 //! fullpack models show deepspeech
+//! fullpack kernels list
 //! fullpack artifact run <name> [--dir artifacts]
 //! fullpack artifact list [--dir artifacts]
 //! ```
@@ -76,12 +77,13 @@ USAGE:
                     [--quick] [--csv DIR]      regenerate a paper figure
   fullpack simulate --show-config [--preset P] print a cache preset
   fullpack bench fig11 [--ms N]                measured CNN-FC sweep (RPi substitution)
-  fullpack bench deepspeech [--variant V] [--breakdown] [--tiny]
+  fullpack bench deepspeech [--variant V] [--kernel NAME] [--breakdown] [--tiny]
                                                measured end-to-end DeepSpeech
-  fullpack serve [--config F.json] [--variant V] [--requests N]
+  fullpack serve [--config F.json] [--variant V] [--kernel NAME] [--requests N]
                  [--workers N] [--tiny]
                                                serving-engine demo (latency/throughput)
   fullpack models show deepspeech              print the Fig. 9 topology
+  fullpack kernels list                        print the kernel registry table
   fullpack artifact list [--dir D]             list AOT artifacts
   fullpack artifact run <name> [--dir D]       execute one artifact via PJRT
 ";

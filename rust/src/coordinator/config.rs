@@ -17,8 +17,8 @@
 use super::{BatcherConfig, EngineConfig, RouterConfig};
 use crate::models::DeepSpeechConfig;
 use crate::pack::Variant;
+use crate::util::error::{anyhow, bail, Result};
 use crate::util::json::Json;
-use anyhow::{anyhow, bail, Result};
 use std::time::Duration;
 
 /// One model roster entry.

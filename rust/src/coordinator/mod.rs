@@ -15,11 +15,11 @@ pub mod router;
 pub use batcher::{Batcher, BatcherConfig, FlushReason};
 pub use config::{FileConfig, ModelSpec};
 pub use metrics::Metrics;
-pub use request::{OpDesc, Path, Request, RequestId, Response};
+pub use request::{OpDesc, Request, RequestId, Response};
 pub use router::{Router, RouterConfig};
 
 use crate::models::DeepSpeech;
-use anyhow::{anyhow, Result};
+use crate::util::error::{anyhow, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed};
 use std::sync::{mpsc, Arc, Condvar, Mutex, RwLock};
@@ -197,19 +197,17 @@ fn process(s: &Shared, req: &Request) -> Result<Response> {
             expected
         ));
     }
-    // route per layer (stats only — the model's forward applies the
-    // identical policy internally, mirroring the paper's §4.6 split)
+    // route per layer (stats — the model's own plans apply the identical
+    // policy, mirroring the paper's §4.6 split); a routing failure is a
+    // real error, not a silently skipped counter
     for layer in &model.layers {
         let batch = match layer.kind {
             crate::models::LayerKind::FcBatch => model.config.time_steps,
             crate::models::LayerKind::LstmStep => 1,
         };
-        s.router.route(&OpDesc {
-            batch,
-            z: layer.z,
-            k: layer.k,
-            sub_byte: model.variant.w.is_sub_byte() || model.variant.a.is_sub_byte(),
-        });
+        s.router
+            .classify(&OpDesc { batch, z: layer.z, k: layer.k, variant: model.variant })
+            .map_err(|e| anyhow!("routing layer {}: {e}", layer.name))?;
     }
     let t0 = Instant::now();
     let (logits, layer_times) = model.forward_timed(&req.frames);

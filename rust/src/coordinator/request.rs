@@ -34,23 +34,13 @@ pub struct Response {
 }
 
 /// What kind of linear-algebra call a layer needs — the router's input
-/// (paper §4.6: GEMV single-batch vs GEMM multi-batch).
+/// (paper §4.6: GEMV single-batch vs GEMM multi-batch).  The router
+/// turns one of these into an executable `kernels::Plan`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct OpDesc {
     pub batch: usize,
     pub z: usize,
     pub k: usize,
-    /// weight/activation bit-widths are sub-byte?
-    pub sub_byte: bool,
-}
-
-/// The execution path the router chose.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Path {
-    /// single-batch sub-byte → FullPack GEMV kernels
-    FullPackGemv,
-    /// multi-batch (or 8-bit single-batch) → Ruy-like W8A8 GEMM
-    RuyGemm,
-    /// FP32 fallback
-    F32,
+    /// weight/activation quantization of the layer's data
+    pub variant: crate::pack::Variant,
 }

@@ -1,10 +1,15 @@
-//! Path router — the paper's §4.6 execution policy as a first-class
+//! Plan router — the paper's §4.6 execution policy as a first-class
 //! component: single-batch sub-byte ops take the FullPack GEMV kernels;
 //! multi-batch ops take the Ruy-like W8A8 GEMM path ("FullPack does not
-//! support GEMM, so we used Ruy-W8A8 for the GEMM operations"); pure
-//! f32 models fall through to the FP32 kernels.
+//! support GEMM, so we used Ruy-W8A8 for the GEMM operations").
+//!
+//! The router no longer names paths or kernels itself: it binds the
+//! policy knobs to a `kernels::PlanBuilder` and emits executable
+//! [`Plan`]s, so every backend decision flows through the
+//! `KernelRegistry` (DESIGN.md §3).
 
-use super::request::{OpDesc, Path};
+use super::request::OpDesc;
+use crate::kernels::{KernelError, LayerShape, Plan, PlanBuilder, SelectPolicy};
 
 /// Routing policy knobs.
 #[derive(Debug, Clone, Copy)]
@@ -34,20 +39,41 @@ impl Router {
         Router { config, ..Default::default() }
     }
 
-    /// Choose the execution path for one op.
-    pub fn route(&self, op: &OpDesc) -> Path {
-        use std::sync::atomic::Ordering::Relaxed;
-        if !op.sub_byte {
-            self.gemm_routed.fetch_add(1, Relaxed);
-            return Path::RuyGemm;
-        }
-        if self.config.disable_fullpack || op.batch > self.config.gemv_max_batch {
-            self.gemm_routed.fetch_add(1, Relaxed);
-            Path::RuyGemm
+    fn builder(&self, op: &OpDesc) -> PlanBuilder {
+        let policy = if self.config.disable_fullpack {
+            SelectPolicy::Explicit("ruy-w8a8".into())
         } else {
+            SelectPolicy::PaperRule
+        };
+        PlanBuilder::new(LayerShape { z: op.z, k: op.k, batch: op.batch }, op.variant)
+            .gemv_max_batch(self.config.gemv_max_batch)
+            .policy(policy)
+    }
+
+    fn count(&self, kernel_name: &str) {
+        use std::sync::atomic::Ordering::Relaxed;
+        if kernel_name.starts_with("fullpack-") {
             self.gemv_routed.fetch_add(1, Relaxed);
-            Path::FullPackGemv
+        } else {
+            self.gemm_routed.fetch_add(1, Relaxed);
         }
+    }
+
+    /// Bind the §4.6 policy to one op: emit an executable plan.
+    pub fn plan(&self, op: &OpDesc) -> Result<Plan, KernelError> {
+        let plan = self.builder(op).build()?;
+        self.count(plan.kernel_name());
+        Ok(plan)
+    }
+
+    /// Policy decision only: the registry kernel name this op routes to,
+    /// with counters updated but no plan (scratch, Arc) constructed —
+    /// the cheap per-request stats path.
+    pub fn classify(&self, op: &OpDesc) -> Result<&'static str, KernelError> {
+        let (kernel, _) = self.builder(op).select()?;
+        let name = kernel.name();
+        self.count(name);
+        Ok(name)
     }
 
     pub fn counts(&self) -> (u64, u64) {
@@ -59,20 +85,21 @@ impl Router {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::pack::Variant;
 
-    fn op(batch: usize, sub_byte: bool) -> OpDesc {
-        OpDesc { batch, z: 2048, k: 2048, sub_byte }
+    fn op(batch: usize, variant: &str) -> OpDesc {
+        OpDesc { batch, z: 2048, k: 2048, variant: Variant::parse(variant).unwrap() }
     }
 
     #[test]
     fn paper_policy() {
         let r = Router::default();
         // single-batch sub-byte LSTM step -> FullPack
-        assert_eq!(r.route(&op(1, true)), Path::FullPackGemv);
+        assert_eq!(r.plan(&op(1, "w4a8")).unwrap().kernel_name(), "fullpack-w4a8");
         // batch-16 FC -> Ruy GEMM even when quantized sub-byte
-        assert_eq!(r.route(&op(16, true)), Path::RuyGemm);
+        assert_eq!(r.plan(&op(16, "w4a8")).unwrap().kernel_name(), "ruy-w8a8");
         // 8-bit ops always take the baseline
-        assert_eq!(r.route(&op(1, false)), Path::RuyGemm);
+        assert_eq!(r.plan(&op(1, "w8a8")).unwrap().kernel_name(), "ruy-w8a8");
         let (gemv, gemm) = r.counts();
         assert_eq!((gemv, gemm), (1, 2));
     }
@@ -80,13 +107,22 @@ mod tests {
     #[test]
     fn ablation_switch() {
         let r = Router::new(RouterConfig { disable_fullpack: true, ..Default::default() });
-        assert_eq!(r.route(&op(1, true)), Path::RuyGemm);
+        assert_eq!(r.plan(&op(1, "w4a8")).unwrap().kernel_name(), "ruy-w8a8");
     }
 
     #[test]
     fn batch_threshold() {
         let r = Router::new(RouterConfig { gemv_max_batch: 4, ..Default::default() });
-        assert_eq!(r.route(&op(4, true)), Path::FullPackGemv);
-        assert_eq!(r.route(&op(5, true)), Path::RuyGemm);
+        assert_eq!(r.plan(&op(4, "w2a2")).unwrap().kernel_name(), "fullpack-w2a2");
+        assert_eq!(r.plan(&op(5, "w2a2")).unwrap().kernel_name(), "ruy-w8a8");
+    }
+
+    #[test]
+    fn classify_matches_plan() {
+        let r = Router::default();
+        assert_eq!(r.classify(&op(1, "w4a8")).unwrap(), "fullpack-w4a8");
+        assert_eq!(r.classify(&op(16, "w4a8")).unwrap(), "ruy-w8a8");
+        let (gemv, gemm) = r.counts();
+        assert_eq!((gemv, gemm), (1, 1));
     }
 }

@@ -1,7 +1,13 @@
 //! Per-method traffic and instruction-mix models for every method the
 //! paper compares (§4.1), plus the naive Alg. 1 strawman as an ablation.
+//!
+//! Modeled and measured methods share **one namespace**: every variant
+//! of [`Method`] names the registry kernel it models
+//! ([`Method::registry_name`]), and a registry name resolves back to a
+//! `Method` through the kernel's own `cost_method`
+//! ([`Method::from_registry`]).
 
-use crate::pack::Variant;
+use crate::pack::{BitWidth, Variant};
 use crate::sim::GemvTraffic;
 
 /// One of the compared execution methods.
@@ -44,6 +50,44 @@ impl Method {
             Method::XnnF32 => "XNNPack-FP32".into(),
             Method::TfliteF32 => "TFLite-FP32".into(),
             Method::EigenF32 => "Eigen-FP32".into(),
+        }
+    }
+
+    /// The `kernels::KernelRegistry` name this method models — the
+    /// shared modeled/measured namespace.
+    pub fn registry_name(&self) -> String {
+        match self {
+            Method::FullPack(v) => format!("fullpack-{}", v.name()),
+            Method::Naive(v) => format!("naive-{}", v.name()),
+            Method::Ulppack { bits } => format!("ulppack-w{bits}a{bits}"),
+            Method::RuyW8A8 => "ruy-w8a8".into(),
+            Method::XnnW8A8 => "xnn-w8a8".into(),
+            Method::TfliteW8A8 => "tflite-w8a8".into(),
+            Method::GemmlowpW8A8 => "gemmlowp-w8a8".into(),
+            Method::RuyF32 => "ruy-f32".into(),
+            Method::XnnF32 => "xnn-f32".into(),
+            Method::TfliteF32 => "tflite-f32".into(),
+            Method::EigenF32 => "eigen-f32".into(),
+        }
+    }
+
+    /// Resolve a registry kernel name to its modeled method, via the
+    /// registered kernel's own `cost_method` (i.e. *derived from the
+    /// registry*, not a second hard-coded table).
+    pub fn from_registry(name: &str) -> Option<Method> {
+        crate::kernels::KernelRegistry::global().get(name).and_then(|k| k.cost_method())
+    }
+
+    /// The quantization variant of the data this method consumes (int8
+    /// for the W8A8 and FP32 stand-ins, which take int8-valued inputs).
+    pub fn data_variant(&self) -> Variant {
+        match self {
+            Method::FullPack(v) | Method::Naive(v) => *v,
+            Method::Ulppack { bits } => {
+                let b = BitWidth::from_u8(*bits).unwrap_or(BitWidth::B8);
+                Variant::new(b, b)
+            }
+            _ => Variant::new(BitWidth::B8, BitWidth::B8),
         }
     }
 
@@ -333,6 +377,23 @@ mod tests {
         // 2048x2048: 4MB at W8A8 (spills 2MB L2), 2MB at W4A8 (fits-ish)
         assert_eq!(weight_footprint(Method::RuyW8A8, 2048, 2048), 4 << 20);
         assert_eq!(weight_footprint(Method::fullpack("w4a8"), 2048, 2048), 2 << 20);
+    }
+
+    #[test]
+    fn registry_namespace_roundtrip() {
+        for m in all_methods() {
+            let name = m.registry_name();
+            if let Some(back) = Method::from_registry(&name) {
+                assert_eq!(back, m, "{name} resolved to a different method");
+            } else {
+                // the only modeled methods without a registered kernel
+                assert!(matches!(m, Method::XnnF32 | Method::Ulppack { bits: 3 }), "{name}");
+            }
+        }
+        assert_eq!(Method::from_registry("fullpack-w4a8"), Some(Method::fullpack("w4a8")));
+        assert_eq!(Method::from_registry("nope"), None);
+        assert_eq!(Method::fullpack("w2a2").data_variant(), Variant::parse("w2a2").unwrap());
+        assert_eq!(Method::RuyW8A8.data_variant(), Variant::parse("w8a8").unwrap());
     }
 
     #[test]

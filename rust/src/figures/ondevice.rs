@@ -1,120 +1,65 @@
 //! Fig. 11 — the on-device study: FullPack vs rivals on the FC layers
 //! of eleven well-known CNNs, *measured* on the host with the native
 //! Rust kernels (the Raspberry Pi 4 substitution, DESIGN.md §2).
+//!
+//! Methods are named by their `kernels::KernelRegistry` entry — the
+//! same namespace the cost model uses — and every measurement runs
+//! through a `Plan`, so no kernel function is named here.
 
-use crate::kernels::{self, baseline, ActVec};
+use crate::kernels::testutil::rngvals;
+use crate::kernels::{KernelRegistry, LayerShape, PlanBuilder, SelectPolicy};
 use crate::models::{FcShape, CNN_FC_ZOO};
-use crate::pack::{pack, BitWidth, PackedMatrix, Variant};
 use crate::util::bench::{bench, Measurement, Table};
 
-fn vals(bits: BitWidth, n: usize, seed: u64) -> Vec<i8> {
-    let (lo, hi) = bits.value_range();
-    let span = (hi as i16 - lo as i16 + 1) as u64;
-    let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
-    (0..n)
-        .map(|_| {
-            s ^= s << 13;
-            s ^= s >> 7;
-            s ^= s << 17;
-            (lo as i16 + (s % span) as i16) as i8
-        })
-        .collect()
-}
-
-/// Measured nanoseconds of one method on one FC shape.
+/// Measured nanoseconds of one inference of `method` (a registry kernel
+/// name) on one FC shape.  Methods whose protocol is a batched call per
+/// inference (ULPPACK's batch-8 GEMM, §4.1) loop accordingly.
+///
+/// Each timed call includes that method's own per-call activation
+/// handling (FullPack packs into reused scratch; ULPPACK repacks spacer
+/// lanes; the f32 stand-ins widen the int8 activations into reused
+/// thread-local buffers) — O(k) work against the O(z·k) kernel, and no
+/// steady-state allocation except ULPPACK's per-inference repack.
+/// Weights are always prepared once, outside the timed region.
 pub fn measure_method(fc: &FcShape, method: &str, warmup: usize, ms: u64) -> Measurement {
-    let z = fc.z;
-    let k = fc.k;
-    match method {
-        "ruy-w8a8" | "xnn-w8a8" | "tflite-w8a8" | "gemmlowp-w8a8" => {
-            let w = vals(BitWidth::B8, z * k, 1);
-            let a = vals(BitWidth::B8, k, 2);
-            let wp = PackedMatrix::from_i8(&w, z, k, BitWidth::B8).unwrap();
-            let mut out = vec![0i32; z];
-            let mut scratch = Vec::new();
-            bench(
-                || match method {
-                    "ruy-w8a8" => baseline::gemv_ruy_i8(&wp, &a, &mut out),
-                    "xnn-w8a8" => baseline::gemv_xnn_i8(&wp, &a, &mut out),
-                    "tflite-w8a8" => baseline::gemv_tflite_i8(&wp, &a, &mut out),
-                    _ => baseline::gemv_gemmlowp_i8(&wp, &a, &mut out, &mut scratch),
-                },
-                warmup,
-                ms,
-                100_000,
-            )
-        }
-        "ruy-f32" | "eigen-f32" | "tflite-f32" => {
-            let w: Vec<f32> = vals(BitWidth::B8, z * k, 3).iter().map(|&v| v as f32).collect();
-            let a: Vec<f32> = vals(BitWidth::B8, k, 4).iter().map(|&v| v as f32).collect();
-            let mut out = vec![0f32; z];
-            bench(
-                || match method {
-                    "ruy-f32" => baseline::gemv_ruy_f32(&w, z, k, &a, &mut out),
-                    "eigen-f32" => baseline::gemv_eigen_f32(&w, z, k, &a, &mut out),
-                    _ => baseline::gemv_tflite_f32(&w, z, k, &a, &mut out),
-                },
-                warmup,
-                ms,
-                100_000,
-            )
-        }
-        "ulppack-w2a2" | "ulppack-w1a1" => {
-            let bits = if method.ends_with("2a2") { BitWidth::B2 } else { BitWidth::B1 };
-            let w = vals(bits, z * k, 5);
-            let a = vals(bits, k, 6);
-            let wm = crate::pack::UlppackMatrix::from_i8(&w, z, k, bits).unwrap();
-            let (a_rev, a_sum) = kernels::ulppack::prepare_acts(&a, bits);
-            let mut out = vec![0i32; z];
-            bench(
-                || {
-                    // ULPPACK— protocol: batch-8 GEMM per inference (§4.1)
-                    for _ in 0..8 {
-                        kernels::ulppack::gemv_ulppack(&wm, &a_rev, a_sum, k, &mut out);
-                    }
-                },
-                warmup,
-                ms,
-                100_000,
-            )
-        }
-        fullpack => {
-            let variant = Variant::parse(fullpack).expect("variant name like w4a8");
-            let kp = variant.padded_depth(k);
-            let mut w = vals(variant.w, z * k, 7);
-            let mut padded = vec![0i8; z * kp];
-            for r in 0..z {
-                padded[r * kp..r * kp + k].copy_from_slice(&w[r * k..(r + 1) * k]);
+    let kernel = KernelRegistry::global()
+        .get(method)
+        .unwrap_or_else(|| panic!("unknown registry kernel {method:?}"));
+    let cost = kernel.cost_method();
+    // the registry namespace tells us the data variant and the
+    // calls-per-inference protocol
+    let variant = cost.map(|m| m.data_variant()).unwrap_or_else(|| {
+        crate::pack::Variant::new(crate::pack::BitWidth::B8, crate::pack::BitWidth::B8)
+    });
+    let calls = cost.map_or(1, |m| m.batch());
+    let (z, k) = (fc.z, fc.k);
+    let plan = PlanBuilder::new(LayerShape { z, k, batch: 1 }, variant)
+        .policy(SelectPolicy::Explicit(method.to_string()))
+        .build()
+        .expect("plan for registry kernel");
+    let w = rngvals(variant.w, z * k, 1);
+    let a = rngvals(variant.a, k, 2);
+    let weights = plan.prepare_weights(&w).expect("prepare weights");
+    let mut out = vec![0i32; z];
+    bench(
+        || {
+            for _ in 0..calls {
+                plan.execute(&weights, &a, &mut out).unwrap();
             }
-            w = padded;
-            let mut a = vals(variant.a, k, 8);
-            a.resize(kp, 0);
-            let wp = PackedMatrix::from_i8(&w, z, kp, variant.w).unwrap();
-            let ap = variant.a.is_sub_byte().then(|| pack(&a, variant.a).unwrap());
-            let mut out = vec![0i32; z];
-            bench(
-                || {
-                    let act = match &ap {
-                        Some(bytes) => ActVec::Packed { bytes, bits: variant.a },
-                        None => ActVec::I8(&a),
-                    };
-                    kernels::gemv(&wp, act, &mut out).unwrap();
-                },
-                warmup,
-                ms,
-                100_000,
-            )
-        }
-    }
+        },
+        warmup,
+        ms,
+        100_000,
+    )
 }
 
-/// Methods measured in the Fig. 11 lineup.
+/// Methods measured in the Fig. 11 lineup (registry names).
 pub const FIG11_METHODS: [&str; 10] = [
     "ruy-w8a8",
-    "w4a4",
-    "w2a2",
-    "w1a1",
-    "w4a8",
+    "fullpack-w4a4",
+    "fullpack-w2a2",
+    "fullpack-w1a1",
+    "fullpack-w4a8",
     "xnn-w8a8",
     "tflite-w8a8",
     "ruy-f32",
@@ -152,6 +97,7 @@ pub fn fig11(warmup: usize, ms: u64) -> (Table, Vec<(String, f64)>) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::costmodel::Method;
 
     #[test]
     fn measure_each_method_once() {
@@ -163,12 +109,29 @@ mod tests {
     }
 
     #[test]
+    fn every_registry_kernel_is_measurable() {
+        // the measured and modeled namespaces stay closed over the
+        // registry: any registered name can be handed to measure_method
+        let fc = FcShape { name: "tiny", k: 128, z: 16 };
+        for name in KernelRegistry::global().names() {
+            let r = measure_method(&fc, name, 0, 1);
+            assert!(r.median_ns > 0.0, "{name}");
+        }
+    }
+
+    #[test]
+    fn ulppack_protocol_batches_per_inference() {
+        assert_eq!(Method::from_registry("ulppack-w2a2").unwrap().batch(), 8);
+        assert_eq!(Method::from_registry("ruy-w8a8").unwrap().batch(), 1);
+    }
+
+    #[test]
     fn fullpack_w4a8_not_catastrophically_slow() {
         // measured sanity: within 4x of the i8 baseline even on a small,
         // cache-resident shape (the compute-bound regime)
         let fc = FcShape { name: "t", k: 1024, z: 256 };
         let base = measure_method(&fc, "ruy-w8a8", 2, 10).median_ns;
-        let fp = measure_method(&fc, "w4a8", 2, 10).median_ns;
+        let fp = measure_method(&fc, "fullpack-w4a8", 2, 10).median_ns;
         assert!(fp < base * 4.0, "w4a8 {fp}ns vs ruy {base}ns");
     }
 }

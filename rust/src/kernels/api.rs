@@ -1,0 +1,167 @@
+//! The pluggable kernel API (DESIGN.md §3) — one object-safe trait every
+//! GEMV backend implements, plus the [`Weights`] container that lets
+//! each backend own its storage layout.
+//!
+//! The paper's contribution is a *family* of kernels (nine FullPack
+//! variants plus the Ruy/XNNPack/GEMMLOWP/ULPPACK rivals); this trait is
+//! the single seam they all plug into, so that adding a backend (e.g. a
+//! DeepGEMM-style lookup-table kernel, Ganji et al. 2023) is one
+//! registry entry instead of an N-file edit.
+//!
+//! Dispatch flow:
+//!
+//! ```text
+//!   caller                 kernels::plan            kernels::registry
+//!   ──────                 ─────────────            ─────────────────
+//!   PlanBuilder ──policy──▶ select kernel ──name──▶ KernelRegistry
+//!        │                                              │
+//!        ▼                                              ▼
+//!   Plan::prepare_weights ────────────────────▶ GemvKernel::prepare
+//!   Plan::execute ─(pad/pack acts, shard rows)─▶ GemvKernel::gemv_at
+//! ```
+
+use super::{ActVec, KernelError};
+use crate::costmodel::Method;
+use crate::pack::{BitWidth, PackedMatrix, UlppackMatrix, Variant};
+
+/// A weight matrix in one backend's own storage layout, produced by
+/// [`GemvKernel::prepare`] and consumed by [`GemvKernel::gemv_at`].
+#[derive(Debug, Clone)]
+pub enum Weights {
+    /// FullPack stride-16 layout (sub-byte widths) or plain row-major
+    /// int8 (`BitWidth::B8`).
+    Packed(PackedMatrix),
+    /// ULPPACK spacer-lane layout (two values per u16 lane).
+    Ulppack(UlppackMatrix),
+    /// Naive adjacent packing (paper Alg. 1).
+    Naive { bytes: Vec<u8>, rows: usize, k: usize, bits: BitWidth },
+    /// Dequantized f32 rows (the FP32 baselines).
+    F32 { data: Vec<f32>, rows: usize, k: usize },
+}
+
+impl Weights {
+    /// Output rows of the stored matrix.
+    pub fn rows(&self) -> usize {
+        match self {
+            Weights::Packed(m) => m.rows(),
+            Weights::Ulppack(m) => m.rows(),
+            Weights::Naive { rows, .. } | Weights::F32 { rows, .. } => *rows,
+        }
+    }
+
+    /// Logical (unpadded) depth.
+    pub fn k(&self) -> usize {
+        match self {
+            Weights::Packed(m) => m.k(),
+            Weights::Ulppack(m) => m.k(),
+            Weights::Naive { k, .. } | Weights::F32 { k, .. } => *k,
+        }
+    }
+
+    /// Depth an int8 activation vector must cover for this layout
+    /// (group-padded for FullPack, logical otherwise).
+    pub fn k_padded(&self) -> usize {
+        match self {
+            Weights::Packed(m) => m.k_padded(),
+            _ => self.k(),
+        }
+    }
+
+    /// Storage bytes — the paper's memory-capacity metric.
+    pub fn footprint(&self) -> usize {
+        match self {
+            Weights::Packed(m) => m.footprint(),
+            Weights::Ulppack(m) => m.footprint(),
+            Weights::Naive { bytes, .. } => bytes.len(),
+            Weights::F32 { data, .. } => data.len() * 4,
+        }
+    }
+
+    /// Downcast to the FullPack/int8 container (PJRT upload, oracle
+    /// unpacking).
+    pub fn as_packed(&self) -> Option<&PackedMatrix> {
+        match self {
+            Weights::Packed(m) => Some(m),
+            _ => None,
+        }
+    }
+}
+
+/// An object-safe GEMV backend.  Implementations are registered in
+/// [`super::KernelRegistry`] under a unique name; each registry entry is
+/// one (kernel family × variant) pair, e.g. `fullpack-w4a8`.
+pub trait GemvKernel: Send + Sync {
+    /// Unique registry name (`fullpack-w4a8`, `ruy-w8a8`, ...).
+    fn name(&self) -> &'static str;
+
+    /// Can this kernel execute a layer whose data is quantized as `v`?
+    fn supports(&self, v: Variant) -> bool;
+
+    /// Pack a row-major `rows × k` int8 matrix into this kernel's
+    /// preferred layout (depth padding included where the layout needs
+    /// it).
+    fn prepare(&self, w: &[i8], rows: usize, k: usize) -> Result<Weights, KernelError>;
+
+    /// GEMV over the row range `[row0, row0 + out.len())` — the
+    /// zero-copy sharding entry the row-parallel decorator uses.
+    fn gemv_at(
+        &self,
+        w: &Weights,
+        a: ActVec<'_>,
+        out: &mut [i32],
+        row0: usize,
+    ) -> Result<(), KernelError>;
+
+    /// The analytic cost-model method this kernel is modeled as
+    /// (`None` for kernels the model does not cover).  This is the
+    /// bridge that keeps modeled and measured methods in one namespace.
+    fn cost_method(&self) -> Option<Method>;
+
+    /// Does this kernel consume FullPack-packed sub-byte activation
+    /// bytes (`ActVec::Packed`)?  Kernels returning `false` take plain
+    /// `ActVec::I8` and perform any layout conversion themselves.
+    fn packs_activations(&self) -> bool {
+        false
+    }
+
+    /// Batched GEMM as repeated GEMV (`out[c*z..]` per column).
+    /// Backends with a real batched kernel (FullPack's GEMM extension)
+    /// override this.
+    fn gemm(&self, w: &Weights, cols: &[&[i8]], out: &mut [i32]) -> Result<(), KernelError> {
+        let z = w.rows();
+        if out.len() != z * cols.len() {
+            return Err(KernelError::Shape(format!(
+                "out len {} != rows*batch {}",
+                out.len(),
+                z * cols.len()
+            )));
+        }
+        for (c, col) in cols.iter().enumerate() {
+            self.gemv_at(w, ActVec::I8(col), &mut out[c * z..(c + 1) * z], 0)?;
+        }
+        Ok(())
+    }
+}
+
+/// Shared bounds check for `gemv_at` implementations.
+pub(crate) fn check_rows(w: &Weights, out: &[i32], row0: usize) -> Result<(), KernelError> {
+    if row0 + out.len() > w.rows() {
+        return Err(KernelError::Shape(format!(
+            "row range {row0}..{} exceeds rows {}",
+            row0 + out.len(),
+            w.rows()
+        )));
+    }
+    Ok(())
+}
+
+/// Shared layout-mismatch error.
+pub(crate) fn wrong_layout(kernel: &str, w: &Weights) -> KernelError {
+    let got = match w {
+        Weights::Packed(_) => "packed",
+        Weights::Ulppack(_) => "ulppack",
+        Weights::Naive { .. } => "naive",
+        Weights::F32 { .. } => "f32",
+    };
+    KernelError::Shape(format!("kernel {kernel} got weights in {got} layout"))
+}

@@ -41,8 +41,13 @@ pub fn gemv_ruy_i8_at(wp: &PackedMatrix, a: &[i8], out: &mut [i32], row0: usize)
 /// fewer loop-bookkeeping instructions per MAC (the paper's Fig. 12
 /// shows XNNPack at ~0.68× of Ruy's instruction count).
 pub fn gemv_xnn_i8(wp: &PackedMatrix, a: &[i8], out: &mut [i32]) {
+    gemv_xnn_i8_at(wp, a, out, 0)
+}
+
+/// [`gemv_xnn_i8`] over the row range `[row0, row0 + out.len())`.
+pub fn gemv_xnn_i8_at(wp: &PackedMatrix, a: &[i8], out: &mut [i32], row0: usize) {
     debug_assert!(!wp.bits().is_sub_byte());
-    let z = wp.rows();
+    let z = out.len();
     let k = wp.k();
     let blocks = k / (2 * VL);
     let load = |src: &[i8]| -> [i8; VL] {
@@ -52,7 +57,12 @@ pub fn gemv_xnn_i8(wp: &PackedMatrix, a: &[i8], out: &mut [i32]) {
     };
     let mut r = 0;
     while r + 4 <= z {
-        let rows = [wp.row_i8(r), wp.row_i8(r + 1), wp.row_i8(r + 2), wp.row_i8(r + 3)];
+        let rows = [
+            wp.row_i8(row0 + r),
+            wp.row_i8(row0 + r + 1),
+            wp.row_i8(row0 + r + 2),
+            wp.row_i8(row0 + r + 3),
+        ];
         let mut acc = [[0i32; VL]; 4];
         for c in 0..blocks {
             let base = c * 2 * VL;
@@ -77,7 +87,7 @@ pub fn gemv_xnn_i8(wp: &PackedMatrix, a: &[i8], out: &mut [i32]) {
         r += 4;
     }
     if r < z {
-        gemv_ruy_i8_rows(wp, a, &mut out[r..], r);
+        gemv_ruy_i8_rows(wp, a, &mut out[r..], row0 + r);
     }
 }
 
@@ -91,9 +101,14 @@ fn gemv_ruy_i8_rows(wp: &PackedMatrix, a: &[i8], out: &mut [i32], first: usize) 
 /// TFLite-default-like W8A8: plain scalar loop (C++ w/ intrinsics but no
 /// hand blocking — consistently slower than Ruy in the paper's Fig. 4).
 pub fn gemv_tflite_i8(wp: &PackedMatrix, a: &[i8], out: &mut [i32]) {
+    gemv_tflite_i8_at(wp, a, out, 0)
+}
+
+/// [`gemv_tflite_i8`] over the row range `[row0, row0 + out.len())`.
+pub fn gemv_tflite_i8_at(wp: &PackedMatrix, a: &[i8], out: &mut [i32], row0: usize) {
     debug_assert!(!wp.bits().is_sub_byte());
     for (r, o) in out.iter_mut().enumerate() {
-        let row = wp.row_i8(r);
+        let row = wp.row_i8(row0 + r);
         let mut sum = 0i32;
         for i in 0..row.len() {
             sum += row[i] as i32 * a[i] as i32;
@@ -106,6 +121,17 @@ pub fn gemv_tflite_i8(wp: &PackedMatrix, a: &[i8], out: &mut [i32]) {
 /// (gemmlowp's packing stage) — same arithmetic, one more sweep over the
 /// weight bytes per call.
 pub fn gemv_gemmlowp_i8(wp: &PackedMatrix, a: &[i8], out: &mut [i32], scratch: &mut Vec<i8>) {
+    gemv_gemmlowp_i8_at(wp, a, out, scratch, 0)
+}
+
+/// [`gemv_gemmlowp_i8`] over the row range `[row0, row0 + out.len())`.
+pub fn gemv_gemmlowp_i8_at(
+    wp: &PackedMatrix,
+    a: &[i8],
+    out: &mut [i32],
+    scratch: &mut Vec<i8>,
+    row0: usize,
+) {
     debug_assert!(!wp.bits().is_sub_byte());
     let k = wp.k();
     scratch.clear();
@@ -113,7 +139,7 @@ pub fn gemv_gemmlowp_i8(wp: &PackedMatrix, a: &[i8], out: &mut [i32], scratch: &
     for (r, o) in out.iter_mut().enumerate() {
         // packing stage: copy the row into the packed buffer
         scratch.clear();
-        scratch.extend_from_slice(wp.row_i8(r));
+        scratch.extend_from_slice(wp.row_i8(row0 + r));
         let mut acc = [0i32; VL];
         let chunks = k / VL;
         for c in 0..chunks {

@@ -8,25 +8,61 @@
 //! * [`baseline`] — Ruy/XNNPack/TFLite/GEMMLOWP-like i8 and f32 rivals;
 //! * [`ulppack`]  — the ULPPACK spacer-lane comparator (Won et al. 2022);
 //! * [`naive`]    — the Alg. 1 strawman over adjacent packing.
+//!
+//! Every implementation is reachable through the pluggable kernel API
+//! (DESIGN.md §3): [`api::GemvKernel`] is the object-safe trait,
+//! [`registry::KernelRegistry`] enumerates the built-in backends by
+//! name, and [`plan::Plan`] binds a layer shape + variant + thread
+//! budget to a selected kernel.  Call sites outside this module select
+//! kernels by *name or policy*, never by concrete function.
 
+pub mod api;
 pub mod baseline;
 pub mod fullpack;
 pub mod fullpack_gemm;
 pub mod naive;
 pub mod parallel;
+pub mod plan;
+pub mod registry;
+pub mod testutil;
 pub mod ulppack;
 
-use crate::pack::{BitWidth, PackError, PackedMatrix, Variant};
-use thiserror::Error;
+pub use api::{GemvKernel, Weights};
+pub use plan::{LayerShape, Plan, PlanBuilder, PlanScratch, SelectPolicy};
+pub use registry::{KernelRegistry, RowParallel};
 
-#[derive(Debug, Error)]
+use crate::pack::{BitWidth, PackError, PackedMatrix, Variant};
+
+#[derive(Debug)]
 pub enum KernelError {
-    #[error("operand shape mismatch: {0}")]
     Shape(String),
-    #[error(transparent)]
-    Pack(#[from] PackError),
-    #[error("variant {0} not supported by this kernel")]
+    Pack(PackError),
     Unsupported(String),
+}
+
+impl std::fmt::Display for KernelError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            KernelError::Shape(s) => write!(f, "operand shape mismatch: {s}"),
+            KernelError::Pack(e) => write!(f, "{e}"),
+            KernelError::Unsupported(v) => write!(f, "variant {v} not supported by this kernel"),
+        }
+    }
+}
+
+impl std::error::Error for KernelError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            KernelError::Pack(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<PackError> for KernelError {
+    fn from(e: PackError) -> KernelError {
+        KernelError::Pack(e)
+    }
 }
 
 /// An activation vector for the FullPack GEMV dispatcher: plain int8 or
@@ -141,39 +177,6 @@ pub fn gemm(
         gemv(w, *a, &mut out[b * z..(b + 1) * z])?;
     }
     Ok(())
-}
-
-#[cfg(test)]
-pub(crate) mod testutil {
-    use crate::pack::BitWidth;
-
-    /// Deterministic xorshift values in the width's signed range.
-    pub fn rngvals(bits: BitWidth, n: usize, seed: u64) -> Vec<i8> {
-        let (lo, hi) = bits.value_range();
-        let span = (hi as i16 - lo as i16 + 1) as u64;
-        let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
-        (0..n)
-            .map(|_| {
-                s ^= s << 13;
-                s ^= s >> 7;
-                s ^= s << 17;
-                (lo as i16 + (s % span) as i16) as i8
-            })
-            .collect()
-    }
-
-    /// int32 oracle GEMV on unpacked operands.
-    pub fn oracle_gemv(w: &[i8], a: &[i8], z: usize, k: usize) -> Vec<i32> {
-        (0..z)
-            .map(|r| {
-                w[r * k..(r + 1) * k]
-                    .iter()
-                    .zip(a)
-                    .map(|(&wv, &av)| wv as i32 * av as i32)
-                    .sum()
-            })
-            .collect()
-    }
 }
 
 #[cfg(test)]

@@ -8,15 +8,60 @@
 //! row-independent by construction, §3.1), so results are bit-identical
 //! to the serial kernel.
 
-use super::{gemv, ActVec, KernelError};
+use super::{ActVec, KernelError};
 
 use crate::pack::PackedMatrix;
 
 /// Minimum rows per shard — below this the spawn overhead dominates.
 pub const MIN_ROWS_PER_SHARD: usize = 256;
 
+/// Shard the rows `[row0, row0 + out.len())` across up to `threads`
+/// scoped workers, calling `f(chunk, abs_row0)` per shard.  The generic
+/// engine behind [`gemv_parallel`] and the kernel-API `RowParallel`
+/// decorator: any row-independent GEMV backend can be sharded this way.
+pub fn shard_rows<F>(
+    out: &mut [i32],
+    row0: usize,
+    threads: usize,
+    f: F,
+) -> Result<(), KernelError>
+where
+    F: Fn(&mut [i32], usize) -> Result<(), KernelError> + Sync,
+{
+    let z = out.len();
+    // clamp the *quotient*, not the constant: small outputs collapse to
+    // one shard instead of multiplying by a no-op `.max(1)`
+    let shards = threads.min((z / MIN_ROWS_PER_SHARD).max(1));
+    if shards <= 1 {
+        return f(out, row0);
+    }
+    let rows_per = z.div_ceil(shards);
+    let results: Vec<Result<(), KernelError>> = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(shards);
+        let mut rest = &mut *out;
+        let f = &f;
+        for s in 0..shards {
+            let lo = s * rows_per;
+            let hi = ((s + 1) * rows_per).min(z);
+            if lo >= hi {
+                break;
+            }
+            let (chunk, tail) = rest.split_at_mut(hi - lo);
+            rest = tail;
+            // zero-copy: each shard borrows the shared operands and runs
+            // the serial kernel over its row range
+            handles.push(scope.spawn(move || f(chunk, row0 + lo)));
+        }
+        handles.into_iter().map(|h| h.join().expect("shard panicked")).collect()
+    });
+    for r in results {
+        r?;
+    }
+    Ok(())
+}
+
 /// Row-sharded GEMV.  `threads = 1` (or small matrices) falls back to
-/// the serial kernel.  Output is bit-identical to [`gemv`].
+/// the serial kernel.  Output is bit-identical to [`super::gemv`].
 pub fn gemv_parallel(
     wp: &PackedMatrix,
     a: ActVec<'_>,
@@ -27,32 +72,7 @@ pub fn gemv_parallel(
     if out.len() != z {
         return Err(KernelError::Shape(format!("out len {} != rows {z}", out.len())));
     }
-    let shards = threads.min(z / MIN_ROWS_PER_SHARD.max(1)).max(1);
-    if shards <= 1 {
-        return gemv(wp, a, out);
-    }
-    let rows_per = z.div_ceil(shards);
-    let results: Vec<Result<(), KernelError>> = std::thread::scope(|scope| {
-        let mut handles = Vec::with_capacity(shards);
-        let mut rest = &mut *out;
-        for s in 0..shards {
-            let lo = s * rows_per;
-            let hi = ((s + 1) * rows_per).min(z);
-            if lo >= hi {
-                break;
-            }
-            let (chunk, tail) = rest.split_at_mut(hi - lo);
-            rest = tail;
-            // zero-copy: each shard borrows the shared packed matrix and
-            // runs the serial kernel over its row range
-            handles.push(scope.spawn(move || super::gemv_at(wp, a, chunk, lo)));
-        }
-        handles.into_iter().map(|h| h.join().expect("shard panicked")).collect()
-    });
-    for r in results {
-        r?;
-    }
-    Ok(())
+    shard_rows(out, 0, threads, |chunk, lo| super::gemv_at(wp, a, chunk, lo))
 }
 
 #[cfg(test)]

@@ -1,0 +1,468 @@
+//! Execution plans (DESIGN.md §3): a [`Plan`] binds one layer shape +
+//! data variant + thread budget to a kernel chosen from the
+//! [`KernelRegistry`], with preallocated packing scratch for the
+//! activation hot path.  All kernel selection in the repo flows through
+//! here — the coordinator's router, the models, the figure harnesses,
+//! the benches and the CLI all build plans instead of naming kernel
+//! functions.
+//!
+//! Three selection policies:
+//!
+//! * [`SelectPolicy::PaperRule`] — the paper's §4.6 split: single-batch
+//!   sub-byte ops take the FullPack GEMV kernel of the data's variant;
+//!   batched or 8-bit ops take the Ruy-like W8A8 path (sub-byte values
+//!   widened to int8, exactly the paper's "FullPack does not support
+//!   GEMM" fallback).
+//! * [`SelectPolicy::Explicit`] — a registry name (`--kernel` flags,
+//!   benches, ablations).
+//! * [`SelectPolicy::CostModel`] — argmin of modeled cycles over every
+//!   candidate backend via `costmodel::simulate_gemv`.
+
+use super::api::{GemvKernel, Weights};
+use super::registry::{fullpack_kernel_name, KernelRegistry};
+use super::{parallel, ActVec, KernelError};
+use crate::costmodel::{simulate_gemv, CoreModel};
+use crate::pack::{pack_into, BitWidth, Variant};
+use crate::sim::CachePreset;
+use std::sync::{Arc, Mutex};
+
+const W8A8: Variant = Variant::new(BitWidth::B8, BitWidth::B8);
+
+/// The layer shape a plan is bound to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerShape {
+    /// output rows
+    pub z: usize,
+    /// logical input depth
+    pub k: usize,
+    /// columns per call (1 = GEMV)
+    pub batch: usize,
+}
+
+/// How the builder picks a kernel.
+#[derive(Debug, Clone)]
+pub enum SelectPolicy {
+    /// paper §4.6: single-batch sub-byte → FullPack; else Ruy-W8A8
+    PaperRule,
+    /// a registry name, verbatim
+    Explicit(String),
+    /// argmin modeled cycles (`costmodel::simulate_gemv`) over all
+    /// candidates; `calls` = steady-state warm-up calls for residency
+    CostModel { preset: CachePreset, calls: usize },
+}
+
+impl SelectPolicy {
+    /// Cost-model policy with the gem5 ex5_big defaults.
+    pub fn cost_model() -> SelectPolicy {
+        SelectPolicy::CostModel { preset: CachePreset::Gem5Ex5Big, calls: 3 }
+    }
+}
+
+/// Builder: shape + variant + knobs → [`Plan`].
+pub struct PlanBuilder {
+    shape: LayerShape,
+    variant: Variant,
+    threads: usize,
+    policy: SelectPolicy,
+    gemv_max_batch: usize,
+}
+
+impl PlanBuilder {
+    pub fn new(shape: LayerShape, variant: Variant) -> PlanBuilder {
+        PlanBuilder { shape, variant, threads: 1, policy: SelectPolicy::PaperRule, gemv_max_batch: 1 }
+    }
+
+    /// Intra-op row-parallelism budget (1 = serial).
+    pub fn threads(mut self, t: usize) -> PlanBuilder {
+        self.threads = t.max(1);
+        self
+    }
+
+    pub fn policy(mut self, p: SelectPolicy) -> PlanBuilder {
+        self.policy = p;
+        self
+    }
+
+    /// Largest batch still routed to the GEMV path under `PaperRule`
+    /// (paper: 1).
+    pub fn gemv_max_batch(mut self, n: usize) -> PlanBuilder {
+        self.gemv_max_batch = n;
+        self
+    }
+
+    /// Select against the global registry.
+    pub fn build(self) -> Result<Plan, KernelError> {
+        self.build_in(KernelRegistry::global())
+    }
+
+    /// Select against a caller-supplied registry (custom backends).
+    pub fn build_in(self, reg: &KernelRegistry) -> Result<Plan, KernelError> {
+        let (shape, variant, threads) = (self.shape, self.variant, self.threads);
+        let (kernel, exec_variant) = self.select_in(reg)?;
+        Ok(Plan {
+            shape,
+            variant,
+            exec_variant,
+            threads,
+            kernel,
+            scratch: Mutex::new(PlanScratch::default()),
+        })
+    }
+
+    /// Run the selection policy only (no plan construction): the chosen
+    /// kernel and the variant it will execute — the cheap path for
+    /// callers that just need the routing decision.
+    pub fn select(self) -> Result<(Arc<dyn GemvKernel>, Variant), KernelError> {
+        self.select_in(KernelRegistry::global())
+    }
+
+    /// [`PlanBuilder::select`] against a caller-supplied registry.
+    pub fn select_in(
+        self,
+        reg: &KernelRegistry,
+    ) -> Result<(Arc<dyn GemvKernel>, Variant), KernelError> {
+        let LayerShape { z, k, batch } = self.shape;
+        let lookup = |name: &str| -> Result<Arc<dyn GemvKernel>, KernelError> {
+            reg.get(name)
+                .cloned()
+                .ok_or_else(|| KernelError::Unsupported(format!("unknown kernel {name:?}")))
+        };
+        // a kernel can run the variant natively, or run it widened to
+        // int8 (the paper's Ruy fallback for sub-byte data)
+        let exec_for = |kern: &Arc<dyn GemvKernel>| -> Option<Variant> {
+            if kern.supports(self.variant) {
+                Some(self.variant)
+            } else if kern.supports(W8A8) {
+                Some(W8A8)
+            } else {
+                None
+            }
+        };
+        let (kernel, exec_variant) = match &self.policy {
+            SelectPolicy::Explicit(name) => {
+                let kern = lookup(name)?;
+                let ev = exec_for(&kern).ok_or_else(|| {
+                    KernelError::Unsupported(format!("{} cannot run {}", kern.name(), self.variant))
+                })?;
+                (kern, ev)
+            }
+            SelectPolicy::PaperRule => {
+                let sub = self.variant.w.is_sub_byte() || self.variant.a.is_sub_byte();
+                if sub && batch <= self.gemv_max_batch {
+                    (lookup(fullpack_kernel_name(self.variant))?, self.variant)
+                } else {
+                    (lookup("ruy-w8a8")?, W8A8)
+                }
+            }
+            SelectPolicy::CostModel { preset, calls } => {
+                let core = CoreModel::ex5_big();
+                let mut best: Option<(f64, Arc<dyn GemvKernel>, Variant)> = None;
+                for kern in reg.iter() {
+                    let Some(ev) = exec_for(kern) else { continue };
+                    let Some(method) = kern.cost_method() else { continue };
+                    let cycles = simulate_gemv(method, z, k, *preset, &core, *calls).cycles;
+                    let better = match &best {
+                        None => true,
+                        Some((c, _, _)) => cycles < *c,
+                    };
+                    if better {
+                        best = Some((cycles, kern.clone(), ev));
+                    }
+                }
+                let (_, kern, ev) = best.ok_or_else(|| {
+                    KernelError::Unsupported(format!("no registered kernel runs {}", self.variant))
+                })?;
+                (kern, ev)
+            }
+        };
+        Ok((kernel, exec_variant))
+    }
+}
+
+/// Reusable activation pad/pack buffers.  Every plan owns one behind a
+/// `try_lock`; hot loops that share a plan across threads (the serving
+/// engine's LSTM scan) pass their own via [`Plan::execute_in`] so the
+/// steady state never allocates.
+#[derive(Default)]
+pub struct PlanScratch {
+    padded: Vec<i8>,
+    packed: Vec<u8>,
+}
+
+/// A bound execution plan: shape + variant + thread budget + the chosen
+/// kernel, with reusable activation-packing scratch.
+pub struct Plan {
+    pub shape: LayerShape,
+    /// the data's quantization variant
+    pub variant: Variant,
+    /// what the kernel actually runs (`w8a8` when sub-byte data is
+    /// widened onto the int8 fallback path)
+    pub exec_variant: Variant,
+    pub threads: usize,
+    kernel: Arc<dyn GemvKernel>,
+    scratch: Mutex<PlanScratch>,
+}
+
+impl std::fmt::Debug for Plan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Plan")
+            .field("kernel", &self.kernel.name())
+            .field("shape", &self.shape)
+            .field("variant", &self.variant)
+            .field("exec_variant", &self.exec_variant)
+            .field("threads", &self.threads)
+            .finish()
+    }
+}
+
+impl Plan {
+    /// Registry name of the chosen kernel.
+    pub fn kernel_name(&self) -> &'static str {
+        self.kernel.name()
+    }
+
+    pub fn kernel(&self) -> &Arc<dyn GemvKernel> {
+        &self.kernel
+    }
+
+    /// Did selection land on the FullPack GEMV family?
+    pub fn is_fullpack(&self) -> bool {
+        self.kernel.name().starts_with("fullpack-")
+    }
+
+    /// Pack a row-major `z × k` int8 weight matrix into the chosen
+    /// kernel's layout.
+    pub fn prepare_weights(&self, w: &[i8]) -> Result<Weights, KernelError> {
+        self.kernel.prepare(w, self.shape.z, self.shape.k)
+    }
+
+    /// One GEMV with the plan's thread budget.  `a` is the logical-depth
+    /// int8 activation vector; padding and sub-byte packing happen in
+    /// the plan's scratch.
+    pub fn execute(&self, w: &Weights, a: &[i8], out: &mut [i32]) -> Result<(), KernelError> {
+        self.execute_with_threads(w, a, out, self.threads)
+    }
+
+    /// Borrow the plan's preallocated scratch, or a fresh local one
+    /// when a concurrent call holds it — contenders never serialize
+    /// behind each other's kernel execution.
+    fn with_scratch<R>(&self, f: impl FnOnce(&mut PlanScratch) -> R) -> R {
+        match self.scratch.try_lock() {
+            Ok(mut guard) => f(&mut guard),
+            Err(_) => f(&mut PlanScratch::default()),
+        }
+    }
+
+    /// [`Plan::execute`] with an explicit thread budget (the serving
+    /// engine's per-request intra-op knob).
+    pub fn execute_with_threads(
+        &self,
+        w: &Weights,
+        a: &[i8],
+        out: &mut [i32],
+        threads: usize,
+    ) -> Result<(), KernelError> {
+        self.with_scratch(|scratch| self.execute_in(w, a, out, threads, scratch))
+    }
+
+    /// [`Plan::execute`] with caller-owned scratch — the allocation-free
+    /// path for hot loops that share one plan across threads (each
+    /// caller keeps its own [`PlanScratch`]).
+    pub fn execute_in(
+        &self,
+        w: &Weights,
+        a: &[i8],
+        out: &mut [i32],
+        threads: usize,
+        scratch: &mut PlanScratch,
+    ) -> Result<(), KernelError> {
+        if out.len() != w.rows() {
+            return Err(KernelError::Shape(format!(
+                "out len {} != rows {}",
+                out.len(),
+                w.rows()
+            )));
+        }
+        // short activations would be silently zero-padded into a wrong
+        // dot product; callers may pass pre-padded vectors (>= k)
+        if a.len() < self.shape.k {
+            return Err(KernelError::Shape(format!(
+                "activation len {} < layer depth {}",
+                a.len(),
+                self.shape.k
+            )));
+        }
+        let kp = w.k_padded();
+        let act = if self.kernel.packs_activations() {
+            scratch.padded.clear();
+            scratch.padded.extend_from_slice(a);
+            scratch.padded.resize(kp.max(a.len()), 0);
+            pack_into(&scratch.padded[..kp], self.exec_variant.a, &mut scratch.packed);
+            ActVec::Packed { bytes: &scratch.packed, bits: self.exec_variant.a }
+        } else if kp > a.len() {
+            scratch.padded.clear();
+            scratch.padded.extend_from_slice(a);
+            scratch.padded.resize(kp, 0);
+            ActVec::I8(&scratch.padded)
+        } else {
+            ActVec::I8(a)
+        };
+        let kernel = &*self.kernel;
+        if threads > 1 {
+            parallel::shard_rows(out, 0, threads, |chunk, lo| kernel.gemv_at(w, act, chunk, lo))
+        } else {
+            kernel.gemv_at(w, act, out, 0)
+        }
+    }
+
+    /// Batched execution: `a` holds `batch` row-major columns of depth
+    /// `k`; `out[c*z..(c+1)*z]` receives column `c`.  FullPack kernels
+    /// take their batched-GEMM extension; everything else runs repeated
+    /// GEMV (the paper's protocol).
+    pub fn execute_batch(
+        &self,
+        w: &Weights,
+        a: &[i8],
+        batch: usize,
+        out: &mut [i32],
+    ) -> Result<(), KernelError> {
+        let k = self.shape.k;
+        if a.len() != batch * k {
+            return Err(KernelError::Shape(format!(
+                "activations len {} != batch*k {}",
+                a.len(),
+                batch * k
+            )));
+        }
+        let kp = w.k_padded();
+        if kp > k {
+            self.with_scratch(|scratch| {
+                scratch.padded.clear();
+                scratch.padded.resize(batch * kp, 0);
+                for b in 0..batch {
+                    scratch.padded[b * kp..b * kp + k].copy_from_slice(&a[b * k..(b + 1) * k]);
+                }
+                let padded = &scratch.padded;
+                let cols: Vec<&[i8]> = (0..batch).map(|b| &padded[b * kp..(b + 1) * kp]).collect();
+                self.kernel.gemm(w, &cols, out)
+            })
+        } else {
+            let cols: Vec<&[i8]> = (0..batch).map(|b| &a[b * k..(b + 1) * k]).collect();
+            self.kernel.gemm(w, &cols, out)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::testutil::{oracle_gemv, pad_rows, rngvals};
+
+    fn shape(z: usize, k: usize, batch: usize) -> LayerShape {
+        LayerShape { z, k, batch }
+    }
+
+    #[test]
+    fn paper_rule_reproduces_router_decisions() {
+        let w4a8 = Variant::parse("w4a8").unwrap();
+        let w8a8 = Variant::parse("w8a8").unwrap();
+        // single-batch sub-byte LSTM step -> FullPack GEMV
+        let p = PlanBuilder::new(shape(2048, 2048, 1), w4a8).build().unwrap();
+        assert_eq!(p.kernel_name(), "fullpack-w4a8");
+        assert!(p.is_fullpack());
+        // batch-16 FC -> Ruy GEMM even when quantized sub-byte
+        let p = PlanBuilder::new(shape(2048, 2048, 16), w4a8).build().unwrap();
+        assert_eq!(p.kernel_name(), "ruy-w8a8");
+        assert_eq!(p.exec_variant, W8A8);
+        // 8-bit ops always take the baseline
+        let p = PlanBuilder::new(shape(2048, 2048, 1), w8a8).build().unwrap();
+        assert_eq!(p.kernel_name(), "ruy-w8a8");
+        // raised batch threshold keeps the GEMV path
+        let p = PlanBuilder::new(shape(2048, 2048, 4), w4a8).gemv_max_batch(4).build().unwrap();
+        assert_eq!(p.kernel_name(), "fullpack-w4a8");
+    }
+
+    #[test]
+    fn cost_model_picks_fullpack_at_the_boundary() {
+        // paper §4.4 regime: 2048x2048, packed weights fit the 2MB LLC,
+        // W8A8 does not — the model must prefer fullpack-w4a8 over
+        // ruy-w8a8 (and every other W8A8/FP32 candidate)
+        let v = Variant::parse("w4a8").unwrap();
+        let p = PlanBuilder::new(shape(2048, 2048, 1), v)
+            .policy(SelectPolicy::cost_model())
+            .build()
+            .unwrap();
+        assert_eq!(p.kernel_name(), "fullpack-w4a8");
+    }
+
+    #[test]
+    fn explicit_policy_and_errors() {
+        let v = Variant::parse("w2a2").unwrap();
+        let p = PlanBuilder::new(shape(64, 128, 1), v)
+            .policy(SelectPolicy::Explicit("ulppack-w2a2".into()))
+            .build()
+            .unwrap();
+        assert_eq!(p.kernel_name(), "ulppack-w2a2");
+        assert!(PlanBuilder::new(shape(64, 128, 1), v)
+            .policy(SelectPolicy::Explicit("no-such-kernel".into()))
+            .build()
+            .is_err());
+        // naive-w4a8 cannot run w2a2 natively nor widened
+        assert!(PlanBuilder::new(shape(64, 128, 1), v)
+            .policy(SelectPolicy::Explicit("naive-w4a8".into()))
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn execute_pads_and_packs_unaligned_depths() {
+        for vname in ["w4a8", "w4a4", "w2a2", "w8a4"] {
+            let v = Variant::parse(vname).unwrap();
+            for k in [1usize, 17, 127, 129] {
+                let z = 8;
+                let plan = PlanBuilder::new(shape(z, k, 1), v).build().unwrap();
+                let w = rngvals(v.w, z * k, 7 + k as u64);
+                let a = rngvals(v.a, k, 9 + k as u64);
+                let wts = plan.prepare_weights(&w).unwrap();
+                let mut out = vec![0i32; z];
+                plan.execute(&wts, &a, &mut out).unwrap();
+                let kp = v.padded_depth(k);
+                let wp = pad_rows(&w, z, k, kp);
+                let mut ap = a.clone();
+                ap.resize(kp, 0);
+                assert_eq!(out, oracle_gemv(&wp, &ap, z, kp), "{vname} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn execute_batch_matches_per_column() {
+        let v = Variant::parse("w4a8").unwrap();
+        let (z, k, batch) = (16usize, 64usize, 3usize);
+        let plan = PlanBuilder::new(shape(z, k, 1), v).build().unwrap();
+        let w = rngvals(v.w, z * k, 21);
+        let a = rngvals(v.a, batch * k, 22);
+        let wts = plan.prepare_weights(&w).unwrap();
+        let mut out = vec![0i32; batch * z];
+        plan.execute_batch(&wts, &a, batch, &mut out).unwrap();
+        for b in 0..batch {
+            let col = &a[b * k..(b + 1) * k];
+            assert_eq!(&out[b * z..(b + 1) * z], oracle_gemv(&w, col, z, k).as_slice(), "col {b}");
+        }
+    }
+
+    #[test]
+    fn threads_do_not_change_results() {
+        let v = Variant::parse("w2a2").unwrap();
+        let (z, k) = (1024usize, 256usize);
+        let plan = PlanBuilder::new(shape(z, k, 1), v).threads(4).build().unwrap();
+        let w = rngvals(v.w, z * k, 31);
+        let a = rngvals(v.a, k, 32);
+        let wts = plan.prepare_weights(&w).unwrap();
+        let mut par = vec![0i32; z];
+        plan.execute(&wts, &a, &mut par).unwrap();
+        let mut serial = vec![0i32; z];
+        plan.execute_with_threads(&wts, &a, &mut serial, 1).unwrap();
+        assert_eq!(par, serial);
+    }
+}

@@ -1,0 +1,619 @@
+//! The kernel registry (DESIGN.md §4): every GEMV backend in the repo,
+//! registered by name behind the [`GemvKernel`] trait.  Each entry is
+//! one (kernel family × variant) pair — `fullpack-w4a8`, `ruy-w8a8`,
+//! `ulppack-w2a2`, ... — so selection policies, the cost model and the
+//! figure harnesses all share one method namespace.
+//!
+//! Built-in entries:
+//!
+//! | name              | family   | layout    | modeled as            |
+//! |-------------------|----------|-----------|-----------------------|
+//! | `fullpack-wXaY`   | FullPack | stride-16 | `Method::FullPack`    |
+//! | `naive-wXa8`      | Alg. 1   | adjacent  | `Method::Naive`       |
+//! | `ulppack-wXaX`    | ULPPACK  | spacer    | `Method::Ulppack`     |
+//! | `ruy-w8a8` &co.   | int8     | row-major | `Method::*W8A8`       |
+//! | `ruy-f32` &co.    | FP32     | f32 rows  | `Method::*F32`        |
+//!
+//! [`RowParallel`] is the row-sharding decorator: it wraps any entry and
+//! implements the same trait, so intra-op parallelism composes with
+//! every backend.
+
+use super::api::{check_rows, wrong_layout, GemvKernel, Weights};
+use super::{baseline, fullpack_gemm, naive, parallel, ulppack, ActVec, KernelError};
+use crate::costmodel::Method;
+use crate::pack::{pad_rows, BitWidth, PackedMatrix, UlppackMatrix, Variant};
+use std::cell::RefCell;
+use std::sync::{Arc, OnceLock};
+
+/// Reused per-thread adapter buffers: per-call conversions (gemmlowp's
+/// pack-to-temp pass, the f32 stand-ins' int8→f32 widening) must not
+/// heap-allocate inside timed regions, or the measured figures would
+/// charge the rivals for allocator time FullPack's path doesn't pay.
+#[derive(Default)]
+struct AdapterBufs {
+    gemmlowp: Vec<i8>,
+    f32_acts: Vec<f32>,
+    f32_out: Vec<f32>,
+}
+
+thread_local! {
+    static ADAPTER_BUFS: RefCell<AdapterBufs> = RefCell::new(AdapterBufs::default());
+}
+
+/// Registry name of the FullPack kernel for a variant.
+pub fn fullpack_kernel_name(v: Variant) -> &'static str {
+    match (v.w, v.a) {
+        (BitWidth::B8, BitWidth::B4) => "fullpack-w8a4",
+        (BitWidth::B4, BitWidth::B8) => "fullpack-w4a8",
+        (BitWidth::B4, BitWidth::B4) => "fullpack-w4a4",
+        (BitWidth::B2, BitWidth::B8) => "fullpack-w2a8",
+        (BitWidth::B8, BitWidth::B2) => "fullpack-w8a2",
+        (BitWidth::B2, BitWidth::B2) => "fullpack-w2a2",
+        (BitWidth::B1, BitWidth::B8) => "fullpack-w1a8",
+        (BitWidth::B8, BitWidth::B1) => "fullpack-w8a1",
+        (BitWidth::B1, BitWidth::B1) => "fullpack-w1a1",
+        (BitWidth::B8, BitWidth::B8) => "fullpack-w8a8",
+        _ => "fullpack-unsupported",
+    }
+}
+
+/// The nine paper FullPack variants (§3.2), one registry entry each.
+struct FullPackKernel {
+    variant: Variant,
+}
+
+impl GemvKernel for FullPackKernel {
+    fn name(&self) -> &'static str {
+        fullpack_kernel_name(self.variant)
+    }
+
+    fn supports(&self, v: Variant) -> bool {
+        v == self.variant
+    }
+
+    fn prepare(&self, w: &[i8], rows: usize, k: usize) -> Result<Weights, KernelError> {
+        let kp = self.variant.padded_depth(k);
+        let padded = pad_rows(w, rows, k, kp);
+        Ok(Weights::Packed(PackedMatrix::from_i8(&padded, rows, kp, self.variant.w)?))
+    }
+
+    fn gemv_at(
+        &self,
+        w: &Weights,
+        a: ActVec<'_>,
+        out: &mut [i32],
+        row0: usize,
+    ) -> Result<(), KernelError> {
+        match w {
+            Weights::Packed(wp) => super::gemv_at(wp, a, out, row0),
+            other => Err(wrong_layout(self.name(), other)),
+        }
+    }
+
+    fn cost_method(&self) -> Option<Method> {
+        Some(Method::FullPack(self.variant))
+    }
+
+    fn packs_activations(&self) -> bool {
+        self.variant.a.is_sub_byte()
+    }
+
+    fn gemm(&self, w: &Weights, cols: &[&[i8]], out: &mut [i32]) -> Result<(), KernelError> {
+        let z = w.rows();
+        if out.len() != z * cols.len() {
+            return Err(KernelError::Shape(format!(
+                "out len {} != rows*batch {}",
+                out.len(),
+                z * cols.len()
+            )));
+        }
+        match w {
+            // the batched-GEMM extension: extract each weight block once,
+            // reuse across all columns
+            Weights::Packed(wp) if wp.bits().is_sub_byte() => {
+                fullpack_gemm::gemm_fullpack_dyn(wp, cols, out)
+            }
+            Weights::Packed(_) => {
+                for (c, col) in cols.iter().enumerate() {
+                    self.gemv_at(w, ActVec::I8(col), &mut out[c * z..(c + 1) * z], 0)?;
+                }
+                Ok(())
+            }
+            other => Err(wrong_layout(self.name(), other)),
+        }
+    }
+}
+
+/// Which W8A8 rival inner-loop structure an [`I8Baseline`] mirrors.
+enum I8Flavor {
+    Ruy,
+    Xnn,
+    Tflite,
+    Gemmlowp,
+}
+
+struct I8Baseline {
+    flavor: I8Flavor,
+}
+
+impl I8Baseline {
+    fn operands<'w>(
+        &self,
+        w: &'w Weights,
+        a: ActVec<'_>,
+        out: &[i32],
+        row0: usize,
+    ) -> Result<&'w PackedMatrix, KernelError> {
+        let Weights::Packed(wp) = w else { return Err(wrong_layout(self.name(), w)) };
+        if wp.bits().is_sub_byte() {
+            return Err(wrong_layout(self.name(), w));
+        }
+        check_rows(w, out, row0)?;
+        if a.elems() < wp.k() {
+            return Err(KernelError::Shape(format!(
+                "activation elems {} < depth {}",
+                a.elems(),
+                wp.k()
+            )));
+        }
+        Ok(wp)
+    }
+}
+
+impl GemvKernel for I8Baseline {
+    fn name(&self) -> &'static str {
+        match self.flavor {
+            I8Flavor::Ruy => "ruy-w8a8",
+            I8Flavor::Xnn => "xnn-w8a8",
+            I8Flavor::Tflite => "tflite-w8a8",
+            I8Flavor::Gemmlowp => "gemmlowp-w8a8",
+        }
+    }
+
+    fn supports(&self, v: Variant) -> bool {
+        !v.w.is_sub_byte() && !v.a.is_sub_byte()
+    }
+
+    fn prepare(&self, w: &[i8], rows: usize, k: usize) -> Result<Weights, KernelError> {
+        Ok(Weights::Packed(PackedMatrix::from_i8(w, rows, k, BitWidth::B8)?))
+    }
+
+    fn gemv_at(
+        &self,
+        w: &Weights,
+        a: ActVec<'_>,
+        out: &mut [i32],
+        row0: usize,
+    ) -> Result<(), KernelError> {
+        let wp = self.operands(w, a, out, row0)?;
+        let ActVec::I8(av) = a else {
+            return Err(KernelError::Unsupported(format!("{}: packed activations", self.name())));
+        };
+        match self.flavor {
+            I8Flavor::Ruy => baseline::gemv_ruy_i8_at(wp, av, out, row0),
+            I8Flavor::Xnn => baseline::gemv_xnn_i8_at(wp, av, out, row0),
+            I8Flavor::Tflite => baseline::gemv_tflite_i8_at(wp, av, out, row0),
+            I8Flavor::Gemmlowp => ADAPTER_BUFS.with(|b| {
+                // the pack-to-temp stage is gemmlowp's own extra pass;
+                // its temp buffer is reused across calls
+                baseline::gemv_gemmlowp_i8_at(wp, av, out, &mut b.borrow_mut().gemmlowp, row0)
+            }),
+        }
+        Ok(())
+    }
+
+    fn cost_method(&self) -> Option<Method> {
+        Some(match self.flavor {
+            I8Flavor::Ruy => Method::RuyW8A8,
+            I8Flavor::Xnn => Method::XnnW8A8,
+            I8Flavor::Tflite => Method::TfliteW8A8,
+            I8Flavor::Gemmlowp => Method::GemmlowpW8A8,
+        })
+    }
+}
+
+/// FP32 rival flavor.
+enum F32Flavor {
+    Ruy,
+    Eigen,
+    Tflite,
+}
+
+struct F32Baseline {
+    flavor: F32Flavor,
+}
+
+impl GemvKernel for F32Baseline {
+    fn name(&self) -> &'static str {
+        match self.flavor {
+            F32Flavor::Ruy => "ruy-f32",
+            F32Flavor::Eigen => "eigen-f32",
+            F32Flavor::Tflite => "tflite-f32",
+        }
+    }
+
+    fn supports(&self, v: Variant) -> bool {
+        // the FP32 baselines stand in for the unquantized model: int8
+        // values pass through losslessly (f32 holds ±2^24 exactly)
+        !v.w.is_sub_byte() && !v.a.is_sub_byte()
+    }
+
+    fn prepare(&self, w: &[i8], rows: usize, k: usize) -> Result<Weights, KernelError> {
+        debug_assert_eq!(w.len(), rows * k);
+        Ok(Weights::F32 { data: w.iter().map(|&v| v as f32).collect(), rows, k })
+    }
+
+    fn gemv_at(
+        &self,
+        w: &Weights,
+        a: ActVec<'_>,
+        out: &mut [i32],
+        row0: usize,
+    ) -> Result<(), KernelError> {
+        let Weights::F32 { data, k, .. } = w else { return Err(wrong_layout(self.name(), w)) };
+        check_rows(w, out, row0)?;
+        let ActVec::I8(av) = a else {
+            return Err(KernelError::Unsupported(format!("{}: packed activations", self.name())));
+        };
+        if av.len() < *k {
+            return Err(KernelError::Shape(format!(
+                "activation elems {} < depth {k}",
+                av.len()
+            )));
+        }
+        let z = out.len();
+        let rows = &data[row0 * k..(row0 + z) * k];
+        ADAPTER_BUFS.with(|b| {
+            let mut b = b.borrow_mut();
+            let bufs = &mut *b;
+            bufs.f32_acts.clear();
+            bufs.f32_acts.extend(av[..*k].iter().map(|&v| v as f32));
+            bufs.f32_out.clear();
+            bufs.f32_out.resize(z, 0.0);
+            match self.flavor {
+                F32Flavor::Ruy => baseline::gemv_ruy_f32(rows, z, *k, &bufs.f32_acts, &mut bufs.f32_out),
+                F32Flavor::Eigen => {
+                    baseline::gemv_eigen_f32(rows, z, *k, &bufs.f32_acts, &mut bufs.f32_out)
+                }
+                F32Flavor::Tflite => {
+                    baseline::gemv_tflite_f32(rows, z, *k, &bufs.f32_acts, &mut bufs.f32_out)
+                }
+            }
+            for (o, v) in out.iter_mut().zip(&bufs.f32_out) {
+                *o = v.round() as i32;
+            }
+        });
+        Ok(())
+    }
+
+    fn cost_method(&self) -> Option<Method> {
+        Some(match self.flavor {
+            F32Flavor::Ruy => Method::RuyF32,
+            F32Flavor::Eigen => Method::EigenF32,
+            F32Flavor::Tflite => Method::TfliteF32,
+        })
+    }
+}
+
+/// The Alg. 1 strawman: adjacent packing, scalar extraction.
+struct NaiveKernel {
+    bits: BitWidth,
+}
+
+impl NaiveKernel {
+    fn variant(&self) -> Variant {
+        Variant::new(self.bits, BitWidth::B8)
+    }
+}
+
+impl GemvKernel for NaiveKernel {
+    fn name(&self) -> &'static str {
+        match self.bits {
+            BitWidth::B4 => "naive-w4a8",
+            BitWidth::B2 => "naive-w2a8",
+            BitWidth::B1 => "naive-w1a8",
+            BitWidth::B8 => "naive-w8a8",
+        }
+    }
+
+    fn supports(&self, v: Variant) -> bool {
+        v == self.variant()
+    }
+
+    fn prepare(&self, w: &[i8], rows: usize, k: usize) -> Result<Weights, KernelError> {
+        debug_assert_eq!(w.len(), rows * k);
+        let mut bytes = Vec::new();
+        for r in 0..rows {
+            bytes.extend(crate::pack::pack_naive(&w[r * k..(r + 1) * k], self.bits)?);
+        }
+        Ok(Weights::Naive { bytes, rows, k, bits: self.bits })
+    }
+
+    fn gemv_at(
+        &self,
+        w: &Weights,
+        a: ActVec<'_>,
+        out: &mut [i32],
+        row0: usize,
+    ) -> Result<(), KernelError> {
+        let Weights::Naive { bytes, k, bits, .. } = w else {
+            return Err(wrong_layout(self.name(), w));
+        };
+        check_rows(w, out, row0)?;
+        let ActVec::I8(av) = a else {
+            return Err(KernelError::Unsupported(format!("{}: packed activations", self.name())));
+        };
+        if av.len() < *k {
+            return Err(KernelError::Shape(format!(
+                "activation elems {} < depth {k}",
+                av.len()
+            )));
+        }
+        let bpr = k.div_ceil(bits.elems_per_byte());
+        let rows = &bytes[row0 * bpr..(row0 + out.len()) * bpr];
+        naive::gemv_naive_wsub_a8(rows, out.len(), *k, *bits, av, out);
+        Ok(())
+    }
+
+    fn cost_method(&self) -> Option<Method> {
+        Some(Method::Naive(self.variant()))
+    }
+}
+
+/// The ULPPACK comparator: spacer-lane layout, local accumulation.
+struct UlppackKernel {
+    bits: BitWidth,
+}
+
+impl GemvKernel for UlppackKernel {
+    fn name(&self) -> &'static str {
+        match self.bits {
+            BitWidth::B4 => "ulppack-w4a4",
+            BitWidth::B2 => "ulppack-w2a2",
+            BitWidth::B1 => "ulppack-w1a1",
+            BitWidth::B8 => "ulppack-w8a8",
+        }
+    }
+
+    fn supports(&self, v: Variant) -> bool {
+        v == Variant::new(self.bits, self.bits)
+    }
+
+    fn prepare(&self, w: &[i8], rows: usize, k: usize) -> Result<Weights, KernelError> {
+        Ok(Weights::Ulppack(UlppackMatrix::from_i8(w, rows, k, self.bits)?))
+    }
+
+    fn gemv_at(
+        &self,
+        w: &Weights,
+        a: ActVec<'_>,
+        out: &mut [i32],
+        row0: usize,
+    ) -> Result<(), KernelError> {
+        let Weights::Ulppack(wm) = w else { return Err(wrong_layout(self.name(), w)) };
+        check_rows(w, out, row0)?;
+        let ActVec::I8(av) = a else {
+            return Err(KernelError::Unsupported(format!("{}: packed activations", self.name())));
+        };
+        let k = wm.k();
+        if av.len() < k {
+            return Err(KernelError::Shape(format!(
+                "activation elems {} < depth {k}",
+                av.len()
+            )));
+        }
+        // spacer-lane repack of the activations — part of the method's
+        // own per-call protocol (k elements, amortized over z·k MACs)
+        let (a_rev, a_sum) = ulppack::prepare_acts(&av[..k], wm.bits());
+        ulppack::gemv_ulppack_at(wm, &a_rev, a_sum, k, out, row0);
+        Ok(())
+    }
+
+    fn cost_method(&self) -> Option<Method> {
+        Some(Method::Ulppack { bits: self.bits.bits() as u8 })
+    }
+}
+
+/// Row-parallel decorator: shards output rows of *any* kernel across a
+/// scoped thread pool (`kernels::parallel`), bit-identical to the serial
+/// call.  Wrap any registry entry:
+///
+/// ```ignore
+/// let par = RowParallel::new(registry.get("fullpack-w4a8").unwrap().clone(), 4);
+/// ```
+pub struct RowParallel {
+    inner: Arc<dyn GemvKernel>,
+    pub threads: usize,
+}
+
+impl RowParallel {
+    pub fn new(inner: Arc<dyn GemvKernel>, threads: usize) -> RowParallel {
+        RowParallel { inner, threads }
+    }
+}
+
+impl GemvKernel for RowParallel {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn supports(&self, v: Variant) -> bool {
+        self.inner.supports(v)
+    }
+
+    fn prepare(&self, w: &[i8], rows: usize, k: usize) -> Result<Weights, KernelError> {
+        self.inner.prepare(w, rows, k)
+    }
+
+    fn gemv_at(
+        &self,
+        w: &Weights,
+        a: ActVec<'_>,
+        out: &mut [i32],
+        row0: usize,
+    ) -> Result<(), KernelError> {
+        check_rows(w, out, row0)?;
+        let inner = &*self.inner;
+        parallel::shard_rows(out, row0, self.threads, |chunk, lo| {
+            inner.gemv_at(w, a, chunk, lo)
+        })
+    }
+
+    fn cost_method(&self) -> Option<Method> {
+        self.inner.cost_method()
+    }
+
+    fn packs_activations(&self) -> bool {
+        self.inner.packs_activations()
+    }
+
+    fn gemm(&self, w: &Weights, cols: &[&[i8]], out: &mut [i32]) -> Result<(), KernelError> {
+        self.inner.gemm(w, cols, out)
+    }
+}
+
+/// The kernel registry: name → backend.  `global()` holds the built-in
+/// set; build a local one with `with_builtins()` + `register()` to add
+/// custom backends.
+pub struct KernelRegistry {
+    entries: Vec<Arc<dyn GemvKernel>>,
+}
+
+impl KernelRegistry {
+    /// An empty registry (custom setups, tests).
+    pub fn empty() -> KernelRegistry {
+        KernelRegistry { entries: Vec::new() }
+    }
+
+    /// Every built-in backend: nine FullPack variants, the naive Alg. 1
+    /// strawman, ULPPACK, the W8A8 rivals and the FP32 rivals.
+    pub fn with_builtins() -> KernelRegistry {
+        let mut reg = KernelRegistry::empty();
+        for v in Variant::PAPER_VARIANTS {
+            reg.register(Arc::new(FullPackKernel { variant: v }));
+        }
+        for flavor in [I8Flavor::Ruy, I8Flavor::Xnn, I8Flavor::Tflite, I8Flavor::Gemmlowp] {
+            reg.register(Arc::new(I8Baseline { flavor }));
+        }
+        for flavor in [F32Flavor::Ruy, F32Flavor::Eigen, F32Flavor::Tflite] {
+            reg.register(Arc::new(F32Baseline { flavor }));
+        }
+        for bits in [BitWidth::B4, BitWidth::B2, BitWidth::B1] {
+            reg.register(Arc::new(NaiveKernel { bits }));
+            reg.register(Arc::new(UlppackKernel { bits }));
+        }
+        reg
+    }
+
+    /// The process-wide registry of built-ins.
+    pub fn global() -> &'static KernelRegistry {
+        static REG: OnceLock<KernelRegistry> = OnceLock::new();
+        REG.get_or_init(KernelRegistry::with_builtins)
+    }
+
+    /// Add (or replace, by name) a backend.
+    pub fn register(&mut self, kernel: Arc<dyn GemvKernel>) {
+        if let Some(slot) = self.entries.iter_mut().find(|e| e.name() == kernel.name()) {
+            *slot = kernel;
+        } else {
+            self.entries.push(kernel);
+        }
+    }
+
+    /// Look a backend up by registry name.
+    pub fn get(&self, name: &str) -> Option<&Arc<dyn GemvKernel>> {
+        self.entries.iter().find(|e| e.name() == name)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Arc<dyn GemvKernel>> {
+        self.entries.iter()
+    }
+
+    /// Registered names, in registration order.
+    pub fn names(&self) -> Vec<&'static str> {
+        self.entries.iter().map(|e| e.name()).collect()
+    }
+
+    /// Backends that can natively execute variant `v`.
+    pub fn supporting(&self, v: Variant) -> Vec<&Arc<dyn GemvKernel>> {
+        self.entries.iter().filter(|e| e.supports(v)).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::testutil::{oracle_gemv, rngvals};
+
+    #[test]
+    fn builtin_roster_complete() {
+        let reg = KernelRegistry::global();
+        // 9 fullpack + 4 i8 + 3 f32 + 3 naive + 3 ulppack
+        assert_eq!(reg.len(), 22);
+        for name in ["fullpack-w4a8", "ruy-w8a8", "xnn-w8a8", "ulppack-w2a2", "naive-w4a8", "eigen-f32"]
+        {
+            assert!(reg.get(name).is_some(), "{name} missing");
+        }
+        // names are unique
+        let mut names = reg.names();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), reg.len());
+    }
+
+    #[test]
+    fn supporting_partitions_variants() {
+        let reg = KernelRegistry::global();
+        let w4a8 = Variant::parse("w4a8").unwrap();
+        let names: Vec<_> = reg.supporting(w4a8).iter().map(|k| k.name()).collect();
+        assert!(names.contains(&"fullpack-w4a8"));
+        assert!(names.contains(&"naive-w4a8"));
+        assert!(!names.contains(&"ruy-w8a8"));
+        let w8a8 = Variant::parse("w8a8").unwrap();
+        let names8: Vec<_> = reg.supporting(w8a8).iter().map(|k| k.name()).collect();
+        assert!(names8.contains(&"ruy-w8a8") && names8.contains(&"ruy-f32"));
+    }
+
+    #[test]
+    fn register_replaces_by_name() {
+        let mut reg = KernelRegistry::with_builtins();
+        let n = reg.len();
+        reg.register(Arc::new(I8Baseline { flavor: I8Flavor::Ruy }));
+        assert_eq!(reg.len(), n);
+    }
+
+    #[test]
+    fn row_parallel_decorator_is_bit_identical() {
+        let reg = KernelRegistry::global();
+        let base = reg.get("ruy-w8a8").unwrap();
+        let (z, k) = (1024usize, 64usize);
+        let w = rngvals(BitWidth::B8, z * k, 5);
+        let a = rngvals(BitWidth::B8, k, 6);
+        let wp = base.prepare(&w, z, k).unwrap();
+        let mut serial = vec![0i32; z];
+        base.gemv_at(&wp, ActVec::I8(&a), &mut serial, 0).unwrap();
+        for threads in [2usize, 4] {
+            let par = RowParallel::new(base.clone(), threads);
+            let mut out = vec![0i32; z];
+            par.gemv_at(&wp, ActVec::I8(&a), &mut out, 0).unwrap();
+            assert_eq!(out, serial, "threads={threads}");
+        }
+        assert_eq!(serial, oracle_gemv(&w, &a, z, k));
+    }
+
+    #[test]
+    fn cost_methods_share_registry_namespace() {
+        for kernel in KernelRegistry::global().iter() {
+            let m = kernel.cost_method().expect("every builtin is modeled");
+            assert_eq!(m.registry_name(), kernel.name(), "namespace drift");
+        }
+    }
+}

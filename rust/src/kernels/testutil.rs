@@ -1,0 +1,38 @@
+//! Shared test/benchmark support: deterministic operand generation and
+//! the scalar int32 oracle every kernel is checked against.  Public
+//! (not `cfg(test)`) so the integration conformance suite, examples and
+//! benches reuse one generator instead of five copies.
+
+use crate::pack::BitWidth;
+
+/// Deterministic xorshift values in the width's signed range.
+pub fn rngvals(bits: BitWidth, n: usize, seed: u64) -> Vec<i8> {
+    let (lo, hi) = bits.value_range();
+    let span = (hi as i16 - lo as i16 + 1) as u64;
+    let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+    (0..n)
+        .map(|_| {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            (lo as i16 + (s % span) as i16) as i8
+        })
+        .collect()
+}
+
+/// int32 oracle GEMV on unpacked operands.
+pub fn oracle_gemv(w: &[i8], a: &[i8], z: usize, k: usize) -> Vec<i32> {
+    (0..z)
+        .map(|r| {
+            w[r * k..(r + 1) * k]
+                .iter()
+                .zip(a)
+                .map(|(&wv, &av)| wv as i32 * av as i32)
+                .sum()
+        })
+        .collect()
+}
+
+/// Re-export of the layout helper tests share with production packing
+/// (`pack::pad_rows`).
+pub use crate::pack::pad_rows;

@@ -58,15 +58,29 @@ pub fn gemv_ulppack(
     k: usize,
     out: &mut [i32],
 ) {
+    debug_assert_eq!(out.len(), w.rows());
+    gemv_ulppack_at(w, a_rev, a_sum, k, out, 0)
+}
+
+/// [`gemv_ulppack`] over the row range `[row0, row0 + out.len())` — the
+/// sharding entry used by the kernel-API adapter.
+pub fn gemv_ulppack_at(
+    w: &UlppackMatrix,
+    a_rev: &[u16],
+    a_sum: i32,
+    k: usize,
+    out: &mut [i32],
+    row0: usize,
+) {
     let bits = w.bits();
     let s_max = max_local_steps(bits);
     let zp = w.zero_point as i32;
     let lanes = k.div_ceil(2);
     debug_assert!(a_rev.len() >= lanes);
-    debug_assert_eq!(out.len(), w.rows());
+    debug_assert!(row0 + out.len() <= w.rows());
 
     for (r, o) in out.iter_mut().enumerate() {
-        let row = w.row(r);
+        let row = w.row(row0 + r);
         let mut mid_total: i64 = 0;
         let mut w_sum: i32 = 0;
         let mut lane = 0usize;

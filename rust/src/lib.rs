@@ -4,17 +4,23 @@
 //! Utilization for Sub-Byte Quantized Inference on General Purpose
 //! CPUs"* (Katebi, Asadi, Goudarzi; 2022).
 //!
-//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
-//! paper-vs-measured experiment log.
+//! See `DESIGN.md` for the system inventory (and §3/§4 for the kernel
+//! API + registry architecture); `EXPERIMENTS.md` logs paper-vs-measured
+//! results.
+//!
+//! The `runtime` module (PJRT execution of AOT artifacts) needs the
+//! heavyweight `xla` bindings and is gated behind the `pjrt` feature so
+//! the default build is self-contained.
 
 pub mod cli;
 pub mod coordinator;
-pub mod figures;
 pub mod costmodel;
+pub mod figures;
 pub mod kernels;
 pub mod models;
 pub mod pack;
 pub mod quant;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
-pub mod util;
 pub mod sim;
+pub mod util;

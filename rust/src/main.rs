@@ -1,15 +1,17 @@
 //! `fullpack` — leader entrypoint: figure regeneration, measured
 //! benches, the serving-engine demo, and PJRT artifact execution.
 
-use anyhow::{anyhow, bail, Result};
 use fullpack::cli::{Args, USAGE};
 use fullpack::coordinator::{BatcherConfig, Engine, EngineConfig, RouterConfig};
 use fullpack::costmodel::Method;
 use fullpack::figures::{e2e, ondevice, sweeps, SIZES, SIZES_QUICK};
+use fullpack::kernels::KernelRegistry;
 use fullpack::models::{DeepSpeech, DeepSpeechConfig};
 use fullpack::pack::Variant;
+#[cfg(feature = "pjrt")]
 use fullpack::runtime::{Runtime, Tensor};
 use fullpack::sim::CachePreset;
+use fullpack::util::error::{anyhow, bail, Result};
 
 fn main() {
     let args = match Args::parse(std::env::args().skip(1)) {
@@ -28,6 +30,7 @@ fn main() {
         "bench" => cmd_bench(&args),
         "serve" => cmd_serve(&args),
         "models" => cmd_models(&args),
+        "kernels" => cmd_kernels(&args),
         "artifact" => cmd_artifact(&args),
         other => Err(anyhow!("unknown command {other:?}\n\n{USAGE}")),
     };
@@ -139,6 +142,11 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 .map_err(|e| anyhow!("bad variant: {e}"))?;
             let cfg = if args.flag("tiny") { DeepSpeechConfig::TINY } else { DeepSpeechConfig::FULL };
             let mut model = DeepSpeech::new(cfg, variant, 7);
+            if let Some(kernel) = args.opt("kernel") {
+                // explicit registry selection overrides the paper rule
+                model = model.with_lstm_kernel(kernel).map_err(|e| anyhow!("--kernel: {e}"))?;
+            }
+            println!("lstm kernel: {}", model.lstm_kernel_name());
             model.intra_op_threads =
                 args.opt_usize("intra-threads", 1).map_err(|e| anyhow!(e))?;
             let frames: Vec<f32> =
@@ -204,9 +212,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut first = None;
     for spec in &roster {
         let mut model = DeepSpeech::new(spec.config, spec.variant, spec.seed);
+        if let Some(kernel) = args.opt("kernel") {
+            model = model.with_lstm_kernel(kernel).map_err(|e| anyhow!("--kernel: {e}"))?;
+        }
         model.intra_op_threads = intra;
+        println!(
+            "registered {} ({}, hidden {}, lstm kernel {})",
+            spec.name,
+            spec.variant,
+            spec.config.n_hidden,
+            model.lstm_kernel_name()
+        );
         engine.register_model(&spec.name, model);
-        println!("registered {} ({}, hidden {})", spec.name, spec.variant, spec.config.n_hidden);
         first.get_or_insert((spec.name.clone(), spec.config));
     }
     let (target, cfg) = first.ok_or_else(|| anyhow!("config has no models"))?;
@@ -245,6 +262,49 @@ fn cmd_models(args: &Args) -> Result<()> {
     }
 }
 
+fn cmd_kernels(args: &Args) -> Result<()> {
+    match args.pos(1) {
+        Some("list") | None => {
+            let reg = KernelRegistry::global();
+            let mut t = fullpack::util::bench::Table::new(vec![
+                "kernel",
+                "native variants",
+                "modeled as",
+                "packed acts",
+            ]);
+            for kernel in reg.iter() {
+                let mut variants: Vec<String> = Variant::PAPER_VARIANTS
+                    .iter()
+                    .chain(std::iter::once(&Variant::parse("w8a8").unwrap()))
+                    .filter(|v| kernel.supports(**v))
+                    .map(|v| v.name())
+                    .collect();
+                variants.sort();
+                t.row(vec![
+                    kernel.name().to_string(),
+                    variants.join(","),
+                    kernel.cost_method().map_or("-".into(), |m| m.label()),
+                    if kernel.packs_activations() { "yes".into() } else { "no".to_string() },
+                ]);
+            }
+            println!("{} registered kernels:\n", reg.len());
+            t.print();
+            println!("\nselect one with `bench deepspeech --kernel NAME` or `serve --kernel NAME`");
+            Ok(())
+        }
+        _ => bail!("kernels expects: list"),
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_artifact(_args: &Args) -> Result<()> {
+    bail!(
+        "this build has no PJRT runtime: rebuild with `--features pjrt` \
+         (requires the xla bindings; see Cargo.toml)"
+    )
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_artifact(args: &Args) -> Result<()> {
     let dir = args.opt_or("dir", "artifacts");
     let rt = Runtime::load(dir)?;

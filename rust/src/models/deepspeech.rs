@@ -6,9 +6,16 @@
 //! timing depends on shapes and the GEMV/GEMM split, not weight values)
 //! and generated deterministically from a seed so Rust and Python twins
 //! agree on shapes.
+//!
+//! Kernel selection is entirely plan-driven (DESIGN.md §3): every layer
+//! holds a `kernels::Plan` built from the §4.6 paper rule (or an
+//! explicit registry name via [`DeepSpeech::with_lstm_kernel`]); no
+//! kernel function is named here.
 
-use crate::kernels::{self, ActVec};
-use crate::pack::{BitWidth, PackedMatrix, Variant};
+use crate::kernels::{
+    KernelError, LayerShape, Plan, PlanBuilder, PlanScratch, SelectPolicy, Weights,
+};
+use crate::pack::{BitWidth, Variant};
 use crate::quant::requantize_vec;
 
 /// Shape configuration (defaults = Mozilla DeepSpeech v0.9).
@@ -54,17 +61,22 @@ pub struct Layer {
 }
 
 /// The assembled model: quantized weights packed per the chosen variant
-/// for the LSTM, W8A8 for the FC stack.
+/// for the LSTM, W8A8 for the FC stack, with one execution plan per
+/// layer shape.
 pub struct DeepSpeech {
     pub config: DeepSpeechConfig,
     pub variant: Variant,
     pub layers: Vec<Layer>,
     /// FC weights, always W8A8 (paper routes GEMM to Ruy)
-    pub fc_weights: Vec<PackedMatrix>,
+    pub fc_weights: Vec<Weights>,
     pub fc_biases: Vec<Vec<f32>>,
-    /// LSTM gate weights `[wx, wh]`, packed per `variant.w`
-    pub lstm_wx: PackedMatrix,
-    pub lstm_wh: PackedMatrix,
+    /// one plan per FC layer (batched → the Ruy path under `PaperRule`)
+    fc_plans: Vec<Plan>,
+    /// LSTM gate weights `[wx, wh]`, in the LSTM plan's kernel layout
+    pub lstm_wx: Weights,
+    pub lstm_wh: Weights,
+    /// shared plan for both gate GEMVs (same `4H × H` shape)
+    lstm_plan: Plan,
     pub lstm_bias: Vec<f32>,
     pub s_x: f32,
     pub s_h: f32,
@@ -72,6 +84,7 @@ pub struct DeepSpeech {
     /// intra-op row-parallelism for the LSTM gate GEMVs (1 = serial;
     /// results are bit-identical either way — `kernels::parallel`)
     pub intra_op_threads: usize,
+    seed: u64,
 }
 
 fn xorshift_vals(bits: BitWidth, n: usize, seed: u64) -> Vec<i8> {
@@ -101,30 +114,39 @@ impl DeepSpeech {
             Layer { name: "fc5", kind: LayerKind::FcBatch, z: h, k: h },
             Layer { name: "fc6", kind: LayerKind::FcBatch, z: config.n_output, k: h },
         ];
+        let w8a8 = Variant::new(BitWidth::B8, BitWidth::B8);
         let mut fc_weights = Vec::new();
         let mut fc_biases = Vec::new();
+        let mut fc_plans = Vec::new();
         for (i, l) in layers.iter().enumerate() {
             if l.kind == LayerKind::FcBatch {
+                // batch = time_steps → PaperRule selects the Ruy path
+                let plan = PlanBuilder::new(
+                    LayerShape { z: l.z, k: l.k, batch: config.time_steps },
+                    w8a8,
+                )
+                .build()
+                .expect("fc plan");
                 let w = xorshift_vals(BitWidth::B8, l.z * l.k, seed + i as u64);
-                fc_weights.push(PackedMatrix::from_i8(&w, l.z, l.k, BitWidth::B8).unwrap());
+                fc_weights.push(plan.prepare_weights(&w).expect("fc weights"));
                 fc_biases.push(vec![0.01; l.z]);
+                fc_plans.push(plan);
             }
         }
-        let kp = variant.padded_depth(h);
-        let mk = |s| {
-            let mut w = xorshift_vals(variant.w, config.gate_dim() * h, s);
-            if kp != h {
-                // zero-pad each row to the group-aligned depth
-                let mut padded = vec![0i8; config.gate_dim() * kp];
-                for r in 0..config.gate_dim() {
-                    padded[r * kp..r * kp + h].copy_from_slice(&w[r * h..(r + 1) * h]);
-                }
-                w = padded;
-            }
-            PackedMatrix::from_i8(&w, config.gate_dim(), kp, variant.w).unwrap()
-        };
-        let lstm_wx = mk(seed + 100);
-        let lstm_wh = mk(seed + 101);
+        // single-batch gate GEMVs → PaperRule selects FullPack for
+        // sub-byte variants, Ruy for w8a8 (the paper's §4.6 split)
+        let lstm_plan = PlanBuilder::new(
+            LayerShape { z: config.gate_dim(), k: h, batch: 1 },
+            variant,
+        )
+        .build()
+        .expect("lstm plan");
+        let lstm_wx = lstm_plan
+            .prepare_weights(&xorshift_vals(variant.w, config.gate_dim() * h, seed + 100))
+            .expect("lstm wx");
+        let lstm_wh = lstm_plan
+            .prepare_weights(&xorshift_vals(variant.w, config.gate_dim() * h, seed + 101))
+            .expect("lstm wh");
         let mut lstm_bias = vec![0.0f32; config.gate_dim()];
         lstm_bias[h..2 * h].fill(1.0); // forget-gate bias 1
         let (_, ahi) = variant.a.value_range();
@@ -135,13 +157,40 @@ impl DeepSpeech {
             layers,
             fc_weights,
             fc_biases,
+            fc_plans,
             lstm_wx,
             lstm_wh,
+            lstm_plan,
             lstm_bias,
             s_x: 0.05,
             s_h: if ahi > 0 { 1.0 / ahi as f32 } else { 1.0 },
             s_w: 0.02,
+            seed,
         }
+    }
+
+    /// Re-bind the LSTM gate GEMVs to an explicit registry kernel
+    /// (CLI `--kernel`): rebuilds the plan and re-packs the gate
+    /// weights into the new kernel's layout.
+    pub fn with_lstm_kernel(mut self, name: &str) -> Result<DeepSpeech, KernelError> {
+        let h = self.config.n_hidden;
+        let plan = PlanBuilder::new(
+            LayerShape { z: self.config.gate_dim(), k: h, batch: 1 },
+            self.variant,
+        )
+        .policy(SelectPolicy::Explicit(name.to_string()))
+        .build()?;
+        self.lstm_wx = plan
+            .prepare_weights(&xorshift_vals(self.variant.w, self.config.gate_dim() * h, self.seed + 100))?;
+        self.lstm_wh = plan
+            .prepare_weights(&xorshift_vals(self.variant.w, self.config.gate_dim() * h, self.seed + 101))?;
+        self.lstm_plan = plan;
+        Ok(self)
+    }
+
+    /// Registry name of the kernel serving the LSTM gate GEMVs.
+    pub fn lstm_kernel_name(&self) -> &'static str {
+        self.lstm_plan.kernel_name()
     }
 
     /// Quantize an f32 vector to the variant's activation width.
@@ -152,10 +201,11 @@ impl DeepSpeech {
             .collect()
     }
 
-    /// One LSTM step over the native kernels (the FullPack hot path).
-    /// `x` is the quantized input (padded to the gate matrices' depth),
-    /// `h_q` the quantized previous hidden state, `c` the f32 cell.
-    /// Returns `(h_f32, c_next)`.
+    /// One LSTM step over the plan-selected kernel (the FullPack hot
+    /// path).  `x_q` is the quantized input, `h_q` the quantized
+    /// previous hidden state (both of logical depth `n_hidden`; the
+    /// plan's scratch pads/packs them), `c` the f32 cell.  Returns
+    /// `(h_f32, c_next)`.
     pub fn lstm_step(
         &self,
         x_q: &[i8],
@@ -165,26 +215,18 @@ impl DeepSpeech {
     ) -> (Vec<f32>, Vec<f32>) {
         let hdim = self.config.n_hidden;
         let gd = self.config.gate_dim();
-        let kp = self.lstm_wx.k_padded();
-        debug_assert_eq!(x_q.len(), kp);
-        debug_assert_eq!(h_q.len(), kp);
 
         let threads = self.intra_op_threads.max(1);
-        let run = |w: &PackedMatrix, a: &[i8], out: &mut [i32], buf: &mut Vec<u8>| {
-            if self.variant.a.is_sub_byte() {
-                buf.clear();
-                buf.extend(crate::pack::pack_unchecked(a, self.variant.a));
-                let act = ActVec::Packed { bytes: buf, bits: self.variant.a };
-                kernels::parallel::gemv_parallel(w, act, out, threads).expect("lstm gemv");
-            } else {
-                kernels::parallel::gemv_parallel(w, ActVec::I8(a), out, threads)
-                    .expect("lstm gemv");
-            }
-        };
         scratch.acc_x.resize(gd, 0);
         scratch.acc_h.resize(gd, 0);
-        run(&self.lstm_wx, x_q, &mut scratch.acc_x, &mut scratch.pack_buf);
-        run(&self.lstm_wh, h_q, &mut scratch.acc_h, &mut scratch.pack_buf);
+        // per-request scratch: concurrent requests sharing this model
+        // never contend on (or reallocate) the plan's internal buffers
+        self.lstm_plan
+            .execute_in(&self.lstm_wx, x_q, &mut scratch.acc_x, threads, &mut scratch.pack)
+            .expect("lstm gemv");
+        self.lstm_plan
+            .execute_in(&self.lstm_wh, h_q, &mut scratch.acc_h, threads, &mut scratch.pack)
+            .expect("lstm gemv");
 
         let gates_x = requantize_vec(&scratch.acc_x, self.s_w, self.s_x, &self.lstm_bias);
         let sig = |v: f32| 1.0 / (1.0 + (-v).exp());
@@ -228,19 +270,15 @@ impl DeepSpeech {
         // LSTM scan — single-batch steps (FullPack path)
         let start = std::time::Instant::now();
         let hdim = cfg.n_hidden;
-        let kp = self.lstm_wx.k_padded();
-        let mut h_q = vec![0i8; kp];
+        let mut h_q = vec![0i8; hdim];
         let mut c = vec![0.0f32; hdim];
         let mut hs = vec![0.0f32; t * hdim];
         let mut scratch = LstmScratch::default();
         for step in 0..t {
             let x = &cur[step * hdim..(step + 1) * hdim];
-            let mut x_q = self.quant_act(x, self.s_x);
-            x_q.resize(kp, 0);
+            let x_q = self.quant_act(x, self.s_x);
             let (h_f, c_n) = self.lstm_step(&x_q, &h_q, &c, &mut scratch);
-            let mut hq = self.quant_act(&h_f, self.s_h);
-            hq.resize(kp, 0);
-            h_q = hq;
+            h_q = self.quant_act(&h_f, self.s_h);
             c = c_n;
             hs[step * hdim..(step + 1) * hdim].copy_from_slice(&h_f);
         }
@@ -278,7 +316,7 @@ impl DeepSpeech {
             .map(|&v| (v / s_act).round().clamp(-128.0, 127.0) as i8)
             .collect();
         let mut acc = vec![0i32; batch * z];
-        crate::kernels::baseline::gemm_ruy_i8(w, &xq, batch, &mut acc);
+        self.fc_plans[idx].execute_batch(w, &xq, batch, &mut acc).expect("fc gemm");
         let s = s_act * self.s_w;
         let bias = &self.fc_biases[idx];
         let mut out = vec![0.0f32; batch * z];
@@ -304,7 +342,8 @@ impl DeepSpeech {
 pub struct LstmScratch {
     acc_x: Vec<i32>,
     acc_h: Vec<i32>,
-    pack_buf: Vec<u8>,
+    /// activation pad/pack scratch handed to `Plan::execute_in`
+    pack: PlanScratch,
 }
 
 #[cfg(test)]
@@ -338,6 +377,25 @@ mod tests {
     }
 
     #[test]
+    fn explicit_lstm_kernel_is_bit_identical() {
+        // same math, different backend layout: the naive Alg. 1 kernel
+        // must reproduce the FullPack logits exactly
+        let cfg = DeepSpeechConfig::TINY;
+        let frames: Vec<f32> = (0..cfg.time_steps * cfg.n_input)
+            .map(|i| (i as f32 * 0.01).sin())
+            .collect();
+        let v = Variant::parse("w4a8").unwrap();
+        let m = DeepSpeech::new(cfg, v, 7);
+        assert_eq!(m.lstm_kernel_name(), "fullpack-w4a8");
+        let base = m.forward_timed(&frames).0;
+        let naive = DeepSpeech::new(cfg, v, 7).with_lstm_kernel("naive-w4a8").unwrap();
+        assert_eq!(naive.lstm_kernel_name(), "naive-w4a8");
+        assert_eq!(naive.forward_timed(&frames).0, base);
+        // a kernel that cannot run the variant is a build-time error
+        assert!(DeepSpeech::new(cfg, v, 7).with_lstm_kernel("ulppack-w2a2").is_err());
+    }
+
+    #[test]
     fn footprint_shrinks_with_bits() {
         let cfg = DeepSpeechConfig::TINY;
         let f8 = DeepSpeech::new(cfg, Variant::parse("w8a8").unwrap(), 1).weight_footprint();
@@ -359,7 +417,7 @@ mod tests {
         let mut scratch = LstmScratch::default();
         let (h, c2) = m.lstm_step(&x_q, &h_q, &c, &mut scratch);
         // oracle for gate 0 lane 0
-        let wx = m.lstm_wx.unpack_all();
+        let wx = m.lstm_wx.as_packed().unwrap().unpack_all();
         let acc: i32 = wx[..kp].iter().map(|&w| w as i32).sum();
         let gate0 = acc as f32 * (m.s_w * m.s_x) + m.lstm_bias[0];
         let sig = |v: f32| 1.0 / (1.0 + (-v).exp());

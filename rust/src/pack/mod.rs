@@ -15,22 +15,31 @@ mod matrix;
 pub mod serialize;
 pub use matrix::{PackedMatrix, UlppackMatrix};
 
-use thiserror::Error;
-
 /// Vector lane count: 16 int8 lanes of a 128-bit NEON register.  Kept at
 /// 16 on every target so layouts are interchangeable with the Pallas
 /// kernels and the AOT artifacts.
 pub const VL: usize = 16;
 
-#[derive(Debug, Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum PackError {
-    #[error("value {0} out of range [{1}, {2}] for {3}-bit packing")]
     OutOfRange(i8, i8, i8, u8),
-    #[error("unsupported bit-width {0} (expected 8, 4, 2 or 1)")]
     BadBits(u8),
-    #[error("packed length {0} is not a multiple of VL={VL}")]
     BadPackedLen(usize),
 }
+
+impl std::fmt::Display for PackError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PackError::OutOfRange(v, lo, hi, b) => {
+                write!(f, "value {v} out of range [{lo}, {hi}] for {b}-bit packing")
+            }
+            PackError::BadBits(b) => write!(f, "unsupported bit-width {b} (expected 8, 4, 2 or 1)"),
+            PackError::BadPackedLen(n) => write!(f, "packed length {n} is not a multiple of VL={VL}"),
+        }
+    }
+}
+
+impl std::error::Error for PackError {}
 
 /// Supported element bit-widths.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -179,18 +188,42 @@ pub fn pack(x: &[i8], bits: BitWidth) -> Result<Vec<u8>, PackError> {
 /// `pack` without the range check — values are masked; caller guarantees
 /// range (the kernels' internal path).
 pub fn pack_unchecked(x: &[i8], bits: BitWidth) -> Vec<u8> {
+    let mut out = Vec::new();
+    pack_into(x, bits, &mut out);
+    out
+}
+
+/// [`pack_unchecked`] into a caller-owned buffer (cleared and resized) —
+/// the allocation-free path for per-call activation packing in the
+/// serving hot loop (`kernels::Plan` scratch).
+pub fn pack_into(x: &[i8], bits: BitWidth, out: &mut Vec<u8>) {
     let b = bits.bits();
     let e = bits.elems_per_byte();
     let g = bits.group_size();
     let np = bits.padded_len(x.len());
     let mask = ((1u16 << b) - 1) as u8;
-    let mut out = vec![0u8; np / e];
+    out.clear();
+    out.resize(np / e, 0);
     for (i, &v) in x.iter().enumerate() {
         let grp = i / g;
         let within = i % g;
         let k = within / VL;
         let j = within % VL;
         out[grp * VL + j] |= ((v as u8) & mask) << (k * b);
+    }
+}
+
+/// Zero-pad each row of a row-major `rows × k` matrix to depth `kp` —
+/// the layout step before packing a matrix whose depth is not
+/// group-aligned (see [`Variant::padded_depth`]).
+pub fn pad_rows(w: &[i8], rows: usize, k: usize, kp: usize) -> Vec<i8> {
+    debug_assert_eq!(w.len(), rows * k);
+    if kp == k {
+        return w.to_vec();
+    }
+    let mut out = vec![0i8; rows * kp];
+    for r in 0..rows {
+        out[r * kp..r * kp + k].copy_from_slice(&w[r * k..(r + 1) * k]);
     }
     out
 }

@@ -5,7 +5,7 @@
 //! isolation a production engine uses for an accelerator context.
 
 use super::{Runtime, Tensor};
-use anyhow::{anyhow, Result};
+use crate::util::error::{anyhow, Result};
 use std::path::PathBuf;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};

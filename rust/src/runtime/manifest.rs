@@ -2,7 +2,7 @@
 //! `python/compile/aot.py`, read here with the in-repo JSON parser.
 
 use crate::util::json::Json;
-use anyhow::{anyhow, bail, Result};
+use crate::util::error::{anyhow, bail, Result};
 use std::collections::HashMap;
 
 /// Element dtype of a tensor crossing the AOT boundary.

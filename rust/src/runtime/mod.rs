@@ -19,7 +19,7 @@ pub use handle::{spawn, RuntimeHandle};
 pub use manifest::{ArtifactMeta, DType, Manifest, TensorSpec};
 pub use tensor::Tensor;
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::util::error::{anyhow, bail, Context, Result};
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};

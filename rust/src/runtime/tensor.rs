@@ -1,7 +1,7 @@
 //! Host tensors crossing the PJRT boundary, with Literal marshalling.
 
 use super::manifest::{DType, TensorSpec};
-use anyhow::{anyhow, bail, Result};
+use crate::util::error::{anyhow, bail, Result};
 
 /// A host-side tensor (row-major).
 #[derive(Debug, Clone, PartialEq)]

@@ -1,0 +1,118 @@
+//! Minimal `anyhow` stand-in (the crate is unavailable offline —
+//! DESIGN.md §7): a string-backed error with context chaining, the
+//! `anyhow!` / `bail!` macros, and a defaulted `Result` alias.  The
+//! surface mirrors the `anyhow` subset this repo uses so call sites
+//! read identically.
+
+use std::fmt;
+
+/// A boxed, human-readable error.  Like `anyhow::Error` it deliberately
+/// does **not** implement `std::error::Error`, which is what allows the
+/// blanket `From<E: Error>` conversion below to coexist with the
+/// reflexive `From<Error>`.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build from anything displayable (the `anyhow!` macro's backend).
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prepend a context layer: `outer: inner`.
+    pub fn context(self, c: impl fmt::Display) -> Error {
+        Error { msg: format!("{c}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `Result` defaulting to [`Error`], as `anyhow::Result` does.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string, a displayable value, or
+/// a format string with arguments — the three `anyhow!` forms.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => { $crate::util::error::Error::msg(format!($msg)) };
+    ($err:expr $(,)?) => { $crate::util::error::Error::msg($err) };
+    ($fmt:expr, $($arg:tt)*) => { $crate::util::error::Error::msg(format!($fmt, $($arg)*)) };
+}
+
+/// Early-return an `Err` built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => { return Err($crate::anyhow!($($t)*).into()) };
+}
+
+pub use crate::{anyhow, bail};
+
+/// Context-chaining on fallible values (`anyhow::Context` subset).
+pub trait Context<T> {
+    fn context(self, c: impl fmt::Display) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context(self, c: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| e.into().context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/no/such/file/at/all")
+            .with_context(|| "reading config".to_string())?;
+        Ok(s)
+    }
+
+    #[test]
+    fn macro_and_context_chain() {
+        let e = anyhow!("bad value {}", 7);
+        assert_eq!(e.to_string(), "bad value 7");
+        let chained = io_fail().unwrap_err().to_string();
+        assert!(chained.starts_with("reading config: "), "{chained}");
+    }
+
+    #[test]
+    fn bail_early_returns() {
+        fn f(x: i32) -> Result<i32> {
+            if x < 0 {
+                bail!("negative: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(-1).unwrap_err().to_string(), "negative: -1");
+    }
+
+    #[test]
+    fn converts_std_errors() {
+        let r: Result<i32> = "xyz".parse::<i32>().map_err(Into::into);
+        assert!(r.is_err());
+    }
+}

@@ -4,21 +4,29 @@
 //! booleans and null.
 
 use std::collections::BTreeMap;
-use thiserror::Error;
 
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum JsonError {
-    #[error("unexpected end of input at byte {0}")]
     Eof(usize),
-    #[error("unexpected character {0:?} at byte {1}")]
     Unexpected(char, usize),
-    #[error("invalid number at byte {0}")]
     BadNumber(usize),
-    #[error("invalid escape at byte {0}")]
     BadEscape(usize),
-    #[error("trailing data at byte {0}")]
     Trailing(usize),
 }
+
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            JsonError::Eof(i) => write!(f, "unexpected end of input at byte {i}"),
+            JsonError::Unexpected(c, i) => write!(f, "unexpected character {c:?} at byte {i}"),
+            JsonError::BadNumber(i) => write!(f, "invalid number at byte {i}"),
+            JsonError::BadEscape(i) => write!(f, "invalid escape at byte {i}"),
+            JsonError::Trailing(i) => write!(f, "trailing data at byte {i}"),
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]

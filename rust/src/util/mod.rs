@@ -1,7 +1,8 @@
 //! Small in-repo utilities replacing crates unavailable offline
-//! (DESIGN.md §7): a JSON parser, a bench harness, and a
+//! (DESIGN.md §7): a JSON parser, a bench harness, an error type, and a
 //! property-testing micro-framework.
 
 pub mod bench;
+pub mod error;
 pub mod json;
 pub mod proptest_lite;

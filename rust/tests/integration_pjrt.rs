@@ -2,7 +2,10 @@
 //! agree bit-for-bit with the AOT-lowered Pallas kernels executed via
 //! PJRT — the strongest three-layer consistency check in the repo.
 //!
-//! Requires `make artifacts`; every test skips gracefully otherwise.
+//! Requires `make artifacts` and a build with `--features pjrt`; every
+//! test skips gracefully when artifacts are missing, and the whole file
+//! is compiled out without the feature.
+#![cfg(feature = "pjrt")]
 
 use fullpack::kernels::{gemv, pack_activations, ActVec};
 use fullpack::pack::{BitWidth, PackedMatrix, Variant};

@@ -1,0 +1,157 @@
+//! Registry conformance suite: every registered kernel, on every paper
+//! variant it supports (plus W8A8), across unaligned depths, must match
+//! the scalar oracle when driven through the `Plan` API — the contract
+//! that makes "add a backend" safe as one registry entry.
+//!
+//! Also proves the Router→Plan redesign is behavior-preserving: the new
+//! plan selection reproduces the old two-way path decisions (FullPack
+//! GEMV vs Ruy GEMM) for the paper's §4.6 policy.
+
+use fullpack::coordinator::{OpDesc, Router, RouterConfig};
+use fullpack::kernels::testutil::{oracle_gemv, pad_rows, rngvals};
+use fullpack::kernels::{KernelRegistry, LayerShape, PlanBuilder, SelectPolicy};
+use fullpack::pack::Variant;
+
+const DEPTHS: [usize; 4] = [1, 17, 127, 129];
+
+fn variants_under_test() -> Vec<Variant> {
+    let mut v = Variant::PAPER_VARIANTS.to_vec();
+    v.push(Variant::parse("w8a8").unwrap());
+    v
+}
+
+/// Run `kernel` on a `z × k` layer of `variant` data through a Plan and
+/// compare with the oracle.  `exact` distinguishes integer kernels from
+/// the f32 stand-ins (exact only inside f32's 2^24 integer range — the
+/// small shapes here stay inside it).
+fn check(kernel: &str, variant: Variant, z: usize, k: usize, seed: u64) {
+    let plan = PlanBuilder::new(LayerShape { z, k, batch: 1 }, variant)
+        .policy(SelectPolicy::Explicit(kernel.to_string()))
+        .build()
+        .unwrap_or_else(|e| panic!("{kernel} {variant} k={k}: {e}"));
+    let w = rngvals(variant.w, z * k, seed);
+    let a = rngvals(variant.a, k, seed + 1);
+    let weights = plan.prepare_weights(&w).expect("prepare");
+    let mut out = vec![0i32; z];
+    plan.execute(&weights, &a, &mut out).expect("execute");
+    let kp = weights.k_padded();
+    let wp = pad_rows(&w, z, k, kp);
+    let mut ap = a.clone();
+    ap.resize(kp, 0);
+    assert_eq!(out, oracle_gemv(&wp, &ap, z, kp), "{kernel} {variant} z={z} k={k}");
+}
+
+#[test]
+fn every_kernel_matches_oracle_on_supported_variants() {
+    let reg = KernelRegistry::global();
+    let mut covered = 0usize;
+    for kernel in reg.iter() {
+        for variant in variants_under_test() {
+            if !kernel.supports(variant) {
+                continue;
+            }
+            for (i, k) in DEPTHS.iter().enumerate() {
+                check(kernel.name(), variant, 8, *k, 1000 + i as u64);
+            }
+            covered += 1;
+        }
+    }
+    // floor: 9 fullpack + 3 naive + 3 ulppack + (4 i8 + 3 f32) × w8a8;
+    // new backends only grow the count
+    assert!(covered >= 22, "kernel×variant coverage shrank: {covered}");
+}
+
+#[test]
+fn every_paper_variant_has_a_native_kernel() {
+    let reg = KernelRegistry::global();
+    for v in Variant::PAPER_VARIANTS {
+        let names: Vec<_> = reg.supporting(v).iter().map(|k| k.name()).collect();
+        assert!(
+            names.iter().any(|n| n.starts_with("fullpack-")),
+            "{v}: no FullPack kernel ({names:?})"
+        );
+    }
+}
+
+#[test]
+fn larger_shapes_and_row_parallel_agree() {
+    // deeper/wider layers + the plan's thread budget: sharded execution
+    // must stay bit-identical across every paper variant
+    for v in Variant::PAPER_VARIANTS {
+        let (z, k) = (1024usize, 160usize);
+        let plan = PlanBuilder::new(LayerShape { z, k, batch: 1 }, v)
+            .threads(4)
+            .build()
+            .unwrap();
+        assert!(plan.is_fullpack(), "{v}");
+        let w = rngvals(v.w, z * k, 77);
+        let a = rngvals(v.a, k, 78);
+        let wts = plan.prepare_weights(&w).unwrap();
+        let mut out = vec![0i32; z];
+        plan.execute(&wts, &a, &mut out).unwrap();
+        let kp = wts.k_padded();
+        let wp = pad_rows(&w, z, k, kp);
+        let mut ap = a.clone();
+        ap.resize(kp, 0);
+        assert_eq!(out, oracle_gemv(&wp, &ap, z, kp), "{v}");
+    }
+}
+
+/// The old `Router::route` truth table (paper §4.6), replayed against
+/// the Plan-emitting router: the old FullPack-GEMV path ⇔ a
+/// `fullpack-*` kernel, the old Ruy-GEMM path ⇔ `ruy-w8a8`.
+#[test]
+fn router_plans_reproduce_old_path_decisions() {
+    let cases: &[(usize, &str, bool)] = &[
+        // (batch, variant, expected old Path == FullPackGemv)
+        (1, "w4a8", true),   // single-batch sub-byte LSTM step
+        (1, "w2a2", true),
+        (1, "w1a1", true),
+        (16, "w4a8", false), // batch-16 FC → Ruy GEMM
+        (2, "w1a8", false),
+        (1, "w8a8", false),  // 8-bit always on the baseline
+        (16, "w8a8", false),
+    ];
+    let r = Router::new(RouterConfig::default());
+    for &(batch, vname, fullpack) in cases {
+        let plan = r
+            .plan(&OpDesc { batch, z: 2048, k: 2048, variant: Variant::parse(vname).unwrap() })
+            .unwrap();
+        if fullpack {
+            assert_eq!(plan.kernel_name(), format!("fullpack-{vname}"), "batch={batch}");
+        } else {
+            assert_eq!(plan.kernel_name(), "ruy-w8a8", "{vname} batch={batch}");
+            assert_eq!(plan.exec_variant, Variant::parse("w8a8").unwrap());
+        }
+    }
+    let (gemv, gemm) = r.counts();
+    assert_eq!((gemv, gemm), (3, 4));
+
+    // the ablation switch forces the baseline path, as the old router did
+    let off = Router::new(RouterConfig { disable_fullpack: true, ..Default::default() });
+    let plan = off
+        .plan(&OpDesc { batch: 1, z: 64, k: 64, variant: Variant::parse("w4a8").unwrap() })
+        .unwrap();
+    assert_eq!(plan.kernel_name(), "ruy-w8a8");
+}
+
+#[test]
+fn widened_fallback_is_numerically_consistent() {
+    // sub-byte data on the Ruy fallback (batch path) must equal the
+    // FullPack GEMV on the same data — the §4.6 split cannot change
+    // results, only speed
+    let v = Variant::parse("w4a8").unwrap();
+    let (z, k) = (32usize, 96usize);
+    let w = rngvals(v.w, z * k, 5);
+    let a = rngvals(v.a, k, 6);
+    let gemv_plan = PlanBuilder::new(LayerShape { z, k, batch: 1 }, v).build().unwrap();
+    let ruy_plan = PlanBuilder::new(LayerShape { z, k, batch: 2 }, v).build().unwrap();
+    assert_eq!(ruy_plan.kernel_name(), "ruy-w8a8");
+    let mut out_fp = vec![0i32; z];
+    let wf = gemv_plan.prepare_weights(&w).unwrap();
+    gemv_plan.execute(&wf, &a, &mut out_fp).unwrap();
+    let wr = ruy_plan.prepare_weights(&w).unwrap();
+    let mut out_ruy = vec![0i32; z];
+    ruy_plan.execute(&wr, &a, &mut out_ruy).unwrap();
+    assert_eq!(out_fp, out_ruy);
+}
