@@ -1,0 +1,63 @@
+//! Bench: the SWAR fast-path tier vs the staged scalar kernels
+//! (DESIGN.md §8) across LLC-relevant shapes, for every variant the
+//! tier implements.  Writes the measured records to
+//! `BENCH_kernels.json` (schema `bench-kernels/v1`) — the file
+//! EXPERIMENTS.md's "measured" column is populated from.  Running this
+//! bench on a real host replaces the committed cost-model placeholder
+//! with measured numbers.
+//!
+//! Run: `cargo bench --bench swar_vs_scalar` (QUICK=1 for less
+//! sampling; BENCH_OUT=path to redirect the JSON).
+
+use fullpack::figures::ondevice::measure_method;
+use fullpack::models::FcShape;
+use fullpack::util::bench::{write_bench_json, BenchRecord, Table};
+
+/// (staged scalar baseline, SWAR tier) pairs, matched per variant.
+const PAIRS: [(&str, &str, &str); 4] = [
+    ("fullpack-w4a8", "fullpack-w4a8-swar", "w4a8"),
+    ("fullpack-w2a8", "fullpack-w2a8-swar", "w2a8"),
+    ("fullpack-w1a8", "fullpack-w1a8-swar", "w1a8"),
+    ("ruy-w8a8", "fullpack-w8a8-swar", "w8a8"),
+];
+
+fn main() {
+    let quick = std::env::var("QUICK").is_ok();
+    let ms = if quick { 8 } else { 60 };
+    let shapes: [(usize, usize); 4] = [(256, 256), (1024, 1024), (2048, 2048), (4096, 4096)];
+    let mut records: Vec<BenchRecord> = Vec::new();
+    for (z, k) in shapes {
+        println!("\n== {z}x{k} ==");
+        let mut t = Table::new(vec!["variant", "scalar us", "swar us", "swar speedup"]);
+        for (scalar, swar, variant) in PAIRS {
+            let fc = FcShape { name: "swar-sweep", z, k };
+            let base = measure_method(&fc, scalar, 3, ms);
+            let fast = measure_method(&fc, swar, 3, ms);
+            for (name, m) in [(scalar, &base), (swar, &fast)] {
+                records.push(BenchRecord {
+                    kernel: name.to_string(),
+                    variant: variant.to_string(),
+                    z,
+                    k,
+                    median_ns: m.median_ns,
+                    iters: m.iters,
+                });
+            }
+            t.row(vec![
+                variant.to_string(),
+                format!("{:.1}", base.micros()),
+                format!("{:.1}", fast.micros()),
+                format!("{:.2}x", base.median_ns / fast.median_ns),
+            ]);
+        }
+        t.print();
+    }
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_kernels.json".to_string());
+    let host = format!("{}-{}", std::env::consts::ARCH, std::env::consts::OS);
+    let note = "measured by benches/swar_vs_scalar.rs; \
+                ns_per_elem = median_ns / (z*k); see EXPERIMENTS.md";
+    match write_bench_json(&out, "measured", &host, note, &records) {
+        Ok(()) => println!("\nwrote {} records to {out}", records.len()),
+        Err(e) => eprintln!("\nfailed to write {out}: {e}"),
+    }
+}

@@ -10,7 +10,7 @@
 
 use fullpack::figures::ondevice::measure_method;
 use fullpack::kernels::testutil::{oracle_gemv, pad_rows, rngvals};
-use fullpack::kernels::{KernelRegistry, LayerShape, PlanBuilder, SelectPolicy};
+use fullpack::kernels::{GemvKernel, KernelRegistry, LayerShape, PlanBuilder, SelectPolicy};
 use fullpack::models::FcShape;
 use fullpack::util::bench::Table;
 

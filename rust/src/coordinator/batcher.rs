@@ -8,6 +8,7 @@
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
+/// Batching policy knobs.
 #[derive(Debug, Clone, Copy)]
 pub struct BatcherConfig {
     /// flush as soon as this many requests are waiting
@@ -45,12 +46,16 @@ pub struct Batcher<T> {
 /// Why `pop_batch` returned a batch (for tests/metrics).
 #[derive(Debug, PartialEq, Eq, Clone, Copy)]
 pub enum FlushReason {
+    /// the batch reached `max_batch`
     Full,
+    /// the oldest entry waited past `max_wait`
     Deadline,
+    /// a forced drain (shutdown)
     Drained,
 }
 
 impl<T> Batcher<T> {
+    /// An empty batcher with the given policy.
     pub fn new(cfg: BatcherConfig) -> Self {
         Batcher { cfg, queue: VecDeque::new() }
     }
@@ -64,10 +69,12 @@ impl<T> Batcher<T> {
         Ok(())
     }
 
+    /// Queued (not yet popped) items.
     pub fn len(&self) -> usize {
         self.queue.len()
     }
 
+    /// Is the queue empty?
     pub fn is_empty(&self) -> bool {
         self.queue.is_empty()
     }

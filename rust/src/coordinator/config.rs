@@ -24,20 +24,27 @@ use std::time::Duration;
 /// One model roster entry.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModelSpec {
+    /// the name requests address the model by
     pub name: String,
+    /// weight/activation quantization of the model's layers
     pub variant: Variant,
+    /// topology preset (`full` or `tiny`)
     pub config: DeepSpeechConfig,
+    /// deterministic weight-generation seed
     pub seed: u64,
 }
 
 /// Parsed config file: engine knobs + model roster.
 #[derive(Debug, Clone)]
 pub struct FileConfig {
+    /// worker/batcher/router knobs
     pub engine: EngineConfig,
+    /// models to register at startup
     pub models: Vec<ModelSpec>,
 }
 
 impl FileConfig {
+    /// Parse a config document (see the module example for the schema).
     pub fn parse(text: &str) -> Result<FileConfig> {
         let j = Json::parse(text).map_err(|e| anyhow!("config JSON: {e}"))?;
         let usize_at = |node: &Json, key: &str, default: usize| -> usize {
@@ -63,6 +70,7 @@ impl FileConfig {
             engine.router = RouterConfig {
                 gemv_max_batch: usize_at(r, "gemv_max_batch", defaults.router.gemv_max_batch),
                 disable_fullpack: matches!(r.get("disable_fullpack"), Some(Json::Bool(true))),
+                prefer_swar: matches!(r.get("prefer_swar"), Some(Json::Bool(true))),
             };
         }
 
@@ -90,6 +98,7 @@ impl FileConfig {
         Ok(FileConfig { engine, models })
     }
 
+    /// Read and [`FileConfig::parse`] a config file.
     pub fn load(path: &str) -> Result<FileConfig> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| anyhow!("reading config {path:?}: {e}"))?;
@@ -107,7 +116,7 @@ mod tests {
             r#"{
               "workers": 4,
               "batcher": {"max_batch": 8, "max_wait_ms": 5, "max_queue": 32},
-              "router": {"gemv_max_batch": 2, "disable_fullpack": true},
+              "router": {"gemv_max_batch": 2, "disable_fullpack": true, "prefer_swar": true},
               "models": [
                 {"name": "ds", "variant": "w2a2", "size": "tiny", "seed": 3},
                 {"name": "ds-full", "variant": "w4a8"}
@@ -120,6 +129,7 @@ mod tests {
         assert_eq!(cfg.engine.batcher.max_wait, Duration::from_millis(5));
         assert_eq!(cfg.engine.router.gemv_max_batch, 2);
         assert!(cfg.engine.router.disable_fullpack);
+        assert!(cfg.engine.router.prefer_swar);
         assert_eq!(cfg.models.len(), 2);
         assert_eq!(cfg.models[0].variant, Variant::parse("w2a2").unwrap());
         assert_eq!(cfg.models[0].config, DeepSpeechConfig::TINY);

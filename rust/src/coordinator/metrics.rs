@@ -13,8 +13,11 @@ const BUCKETS_US: [u64; 17] = [
 /// Engine-wide metrics; cheap to update from worker threads.
 #[derive(Debug)]
 pub struct Metrics {
+    /// requests accepted
     pub requests: AtomicU64,
+    /// requests served to completion
     pub completed: AtomicU64,
+    /// requests that failed
     pub errors: AtomicU64,
     latency_buckets: [AtomicU64; 17],
     latency_sum_us: AtomicU64,
@@ -35,6 +38,7 @@ impl Default for Metrics {
 }
 
 impl Metrics {
+    /// Record the first-request timestamp (throughput denominator).
     pub fn mark_started(&self) {
         let mut s = self.started.lock().unwrap();
         if s.is_none() {
@@ -42,6 +46,7 @@ impl Metrics {
         }
     }
 
+    /// Count one completed request with its end-to-end latency.
     pub fn observe_latency_us(&self, us: u64) {
         self.completed.fetch_add(1, Relaxed);
         self.latency_sum_us.fetch_add(us, Relaxed);
@@ -67,6 +72,7 @@ impl Metrics {
         BUCKETS_US[BUCKETS_US.len() - 1]
     }
 
+    /// Mean end-to-end latency over completed requests.
     pub fn mean_latency_us(&self) -> f64 {
         let n = self.completed.load(Relaxed);
         if n == 0 {
@@ -92,6 +98,7 @@ impl Metrics {
         }
     }
 
+    /// One-line human-readable snapshot of every counter.
     pub fn summary(&self) -> String {
         let q = |v: u64| {
             if v == u64::MAX {

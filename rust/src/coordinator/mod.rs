@@ -5,6 +5,7 @@
 //!
 //! Python never appears here: models execute on the native Rust kernels
 //! or through AOT-compiled PJRT artifacts (`crate::runtime`).
+#![warn(missing_docs)]
 
 pub mod batcher;
 pub mod config;
@@ -28,8 +29,11 @@ use std::time::Instant;
 /// Engine configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct EngineConfig {
+    /// worker threads draining the batcher
     pub workers: usize,
+    /// dynamic-batching policy
     pub batcher: BatcherConfig,
+    /// per-layer kernel routing policy
     pub router: RouterConfig,
 }
 
@@ -62,6 +66,7 @@ pub struct Engine {
 }
 
 impl Engine {
+    /// Start an engine: spawns the worker pool immediately.
     pub fn new(config: EngineConfig) -> Engine {
         let shared = Arc::new(Shared {
             batcher: Mutex::new(Batcher::new(config.batcher)),
@@ -92,6 +97,7 @@ impl Engine {
             .insert(name.to_string(), Arc::new(model));
     }
 
+    /// Look up a registered model by name.
     pub fn model(&self, name: &str) -> Option<Arc<DeepSpeech>> {
         self.shared.models.read().unwrap().get(name).cloned()
     }
@@ -122,10 +128,12 @@ impl Engine {
             .map_err(|_| anyhow!("engine dropped request"))?
     }
 
+    /// Engine-wide counters and latency histogram.
     pub fn metrics(&self) -> &Metrics {
         &self.shared.metrics
     }
 
+    /// The per-layer routing policy (and its path counters).
     pub fn router(&self) -> &Router {
         &self.shared.router
     }

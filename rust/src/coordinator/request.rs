@@ -9,7 +9,9 @@ pub type RequestId = u64;
 /// model (the DeepSpeech-style workload of §4.6).
 #[derive(Debug, Clone)]
 pub struct Request {
+    /// engine-assigned unique id
     pub id: RequestId,
+    /// registered model to run
     pub model: String,
     /// `time_steps × n_input` row-major f32 feature frames
     pub frames: Vec<f32>,
@@ -23,9 +25,11 @@ pub type LayerTiming = (&'static str, u128);
 /// The response: logits plus the per-layer breakdown (paper Fig. 10).
 #[derive(Debug, Clone)]
 pub struct Response {
+    /// id of the request this answers
     pub id: RequestId,
     /// `time_steps × n_output` logits
     pub logits: Vec<f32>,
+    /// per-layer timing breakdown (paper Fig. 10)
     pub layer_times: Vec<LayerTiming>,
     /// queueing delay before a worker picked the request up
     pub queue_ns: u128,
@@ -38,8 +42,11 @@ pub struct Response {
 /// turns one of these into an executable `kernels::Plan`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct OpDesc {
+    /// columns per call (1 = GEMV)
     pub batch: usize,
+    /// output rows
     pub z: usize,
+    /// input depth
     pub k: usize,
     /// weight/activation quantization of the layer's data
     pub variant: crate::pack::Variant,

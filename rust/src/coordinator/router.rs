@@ -9,7 +9,7 @@
 //! `KernelRegistry` (DESIGN.md §3).
 
 use super::request::OpDesc;
-use crate::kernels::{KernelError, LayerShape, Plan, PlanBuilder, SelectPolicy};
+use crate::kernels::{GemvKernel, KernelError, LayerShape, Plan, PlanBuilder, SelectPolicy};
 
 /// Routing policy knobs.
 #[derive(Debug, Clone, Copy)]
@@ -18,23 +18,33 @@ pub struct RouterConfig {
     pub gemv_max_batch: usize,
     /// force everything onto the baseline path (ablation switch)
     pub disable_fullpack: bool,
+    /// route *sub-byte* GEMV ops to the `-swar` kernel tier when the
+    /// variant has one and the depth permits (hosts without trustworthy
+    /// auto-vectorization, DESIGN.md §8).  8-bit ops keep the paper's
+    /// Ruy path regardless — `fullpack-w8a8-swar` is reachable only via
+    /// `SelectPolicy::Explicit` or `CostModel`.
+    pub prefer_swar: bool,
 }
 
 impl Default for RouterConfig {
     fn default() -> Self {
-        RouterConfig { gemv_max_batch: 1, disable_fullpack: false }
+        RouterConfig { gemv_max_batch: 1, disable_fullpack: false, prefer_swar: false }
     }
 }
 
 /// Stateless router (kept as a struct for config + stats).
 #[derive(Debug, Default)]
 pub struct Router {
+    /// the policy knobs this router binds to every plan
     pub config: RouterConfig,
+    /// ops routed to the FullPack GEMV path (incl. the SWAR tier)
     pub gemv_routed: std::sync::atomic::AtomicU64,
+    /// ops routed to the baseline GEMM path
     pub gemm_routed: std::sync::atomic::AtomicU64,
 }
 
 impl Router {
+    /// A router with the given policy knobs and zeroed counters.
     pub fn new(config: RouterConfig) -> Self {
         Router { config, ..Default::default() }
     }
@@ -47,6 +57,7 @@ impl Router {
         };
         PlanBuilder::new(LayerShape { z: op.z, k: op.k, batch: op.batch }, op.variant)
             .gemv_max_batch(self.config.gemv_max_batch)
+            .prefer_swar(self.config.prefer_swar)
             .policy(policy)
     }
 
@@ -76,6 +87,7 @@ impl Router {
         Ok(name)
     }
 
+    /// `(gemv_routed, gemm_routed)` counter snapshot.
     pub fn counts(&self) -> (u64, u64) {
         use std::sync::atomic::Ordering::Relaxed;
         (self.gemv_routed.load(Relaxed), self.gemm_routed.load(Relaxed))
@@ -108,6 +120,19 @@ mod tests {
     fn ablation_switch() {
         let r = Router::new(RouterConfig { disable_fullpack: true, ..Default::default() });
         assert_eq!(r.plan(&op(1, "w4a8")).unwrap().kernel_name(), "ruy-w8a8");
+    }
+
+    #[test]
+    fn prefer_swar_routes_gemv_to_the_tier() {
+        let r = Router::new(RouterConfig { prefer_swar: true, ..Default::default() });
+        // deep single-batch sub-byte op with a SWAR backend -> the tier
+        assert_eq!(r.plan(&op(1, "w4a8")).unwrap().kernel_name(), "fullpack-w4a8-swar");
+        // still counted as the GEMV path
+        assert_eq!(r.counts().0, 1);
+        // variants without a SWAR backend keep the staged kernel
+        assert_eq!(r.plan(&op(1, "w2a2")).unwrap().kernel_name(), "fullpack-w2a2");
+        // batches still take the baseline GEMM path
+        assert_eq!(r.plan(&op(16, "w4a8")).unwrap().kernel_name(), "ruy-w8a8");
     }
 
     #[test]

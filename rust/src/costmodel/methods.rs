@@ -15,6 +15,9 @@ use crate::sim::GemvTraffic;
 pub enum Method {
     /// our kernels, any of the nine W/A variants
     FullPack(Variant),
+    /// the u64 SWAR fast-path tier over the same layout (DESIGN.md §8):
+    /// vectorizer-independent bit-plane inner loops, `wXa8` variants
+    FullPackSwar(Variant),
     /// Alg. 1 adjacent packing with scalar extraction (ablation)
     Naive(Variant),
     /// ULPPACK— (Won et al. 2022): spacer-lane GEMM, batch 8 per the
@@ -36,10 +39,16 @@ impl Method {
         Method::FullPack(Variant::parse(v).expect("valid variant"))
     }
 
+    /// Convenience constructor: `Method::fullpack_swar("w4a8")`.
+    pub fn fullpack_swar(v: &str) -> Method {
+        Method::FullPackSwar(Variant::parse(v).expect("valid variant"))
+    }
+
     /// Display name matching the paper's legend.
     pub fn label(&self) -> String {
         match self {
             Method::FullPack(v) => format!("FullPack-{}", v.name().to_uppercase()),
+            Method::FullPackSwar(v) => format!("FullPack-SWAR-{}", v.name().to_uppercase()),
             Method::Naive(v) => format!("Naive-{}", v.name().to_uppercase()),
             Method::Ulppack { bits } => format!("ULPPACK-W{bits}A{bits}"),
             Method::RuyW8A8 => "Ruy-W8A8".into(),
@@ -58,6 +67,7 @@ impl Method {
     pub fn registry_name(&self) -> String {
         match self {
             Method::FullPack(v) => format!("fullpack-{}", v.name()),
+            Method::FullPackSwar(v) => format!("fullpack-{}-swar", v.name()),
             Method::Naive(v) => format!("naive-{}", v.name()),
             Method::Ulppack { bits } => format!("ulppack-w{bits}a{bits}"),
             Method::RuyW8A8 => "ruy-w8a8".into(),
@@ -82,7 +92,7 @@ impl Method {
     /// for the W8A8 and FP32 stand-ins, which take int8-valued inputs).
     pub fn data_variant(&self) -> Variant {
         match self {
-            Method::FullPack(v) | Method::Naive(v) => *v,
+            Method::FullPack(v) | Method::FullPackSwar(v) | Method::Naive(v) => *v,
             Method::Ulppack { bits } => {
                 let b = BitWidth::from_u8(*bits).unwrap_or(BitWidth::B8);
                 Variant::new(b, b)
@@ -114,6 +124,11 @@ impl Method {
     pub fn weight_bytes_per_row(&self, k: usize) -> usize {
         match self {
             Method::FullPack(v) | Method::Naive(v) => v.w.packed_bytes(v.padded_depth(k)),
+            // the SWAR tier also streams its 8-byte per-row weight-sum
+            // side table (Weights::SwarPacked, DESIGN.md §8)
+            Method::FullPackSwar(v) => {
+                v.w.packed_bytes(v.padded_depth(k)) + if v.w.is_sub_byte() { 8 } else { 0 }
+            }
             Method::Ulppack { .. } => k, // 1 byte/value in a u16 half-lane
             Method::RuyW8A8 | Method::XnnW8A8 | Method::TfliteW8A8 | Method::GemmlowpW8A8 => k,
             Method::RuyF32 | Method::XnnF32 | Method::TfliteF32 | Method::EigenF32 => 4 * k,
@@ -123,7 +138,9 @@ impl Method {
     /// Bytes of one activation vector of logical depth `k`.
     pub fn act_bytes(&self, k: usize) -> usize {
         match self {
-            Method::FullPack(v) | Method::Naive(v) => v.a.packed_bytes(v.padded_depth(k)),
+            Method::FullPack(v) | Method::FullPackSwar(v) | Method::Naive(v) => {
+                v.a.packed_bytes(v.padded_depth(k))
+            }
             Method::Ulppack { .. } => k,
             Method::RuyW8A8 | Method::XnnW8A8 | Method::TfliteW8A8 | Method::GemmlowpW8A8 => k,
             Method::RuyF32 | Method::XnnF32 | Method::TfliteF32 | Method::EigenF32 => 4 * k,
@@ -199,6 +216,37 @@ impl Method {
                     (false, false) => per16(kf, 2.0, 2.0, 0.0, 0.75), // = Ruy
                 }
             }
+            Method::FullPackSwar(v) => {
+                if v.w.is_sub_byte() {
+                    // per 8-byte chunk (8·E elements): one u64 weight
+                    // load + E u64 activation loads (counted as half a
+                    // 16-byte vector load each), one mask-expand
+                    // multiply per bit-plane (B·E = 8 planes), ~9
+                    // shift/and/select/accumulate ops per plane, E
+                    // bias XORs, chunk bookkeeping + amortized flush
+                    let e = v.w.elems_per_byte() as f64;
+                    let kp = v.padded_depth(k) as f64;
+                    let chunks = kp / (8.0 * e);
+                    InstrMix {
+                        loads: chunks * 0.5 * (1.0 + e),
+                        stores: 0.0,
+                        macs: chunks * 8.0,
+                        alus: chunks * (8.0 * 9.0 + e),
+                        scalar: chunks * 3.0,
+                    }
+                } else {
+                    // w8a8: u64 loads of both operands, 8 scalar
+                    // extract+MAC pairs per chunk, interleaved acc
+                    let chunks = kf / 8.0;
+                    InstrMix {
+                        loads: chunks,
+                        stores: 0.0,
+                        macs: chunks * 8.0,
+                        alus: chunks * 16.0,
+                        scalar: chunks * 4.0,
+                    }
+                }
+            }
             Method::Naive(v) => {
                 // Alg. 1: scalar extraction — per element ~1.5 shift, 1
                 // scalar MAC, 1.5 loads amortized, heavy bookkeeping
@@ -243,6 +291,28 @@ impl Method {
         };
         let overhead_scale = self.batch() as f64;
         per_row.add(&row_overhead.scale(overhead_scale)).scale(zf)
+    }
+
+    /// Does this method's inner loop depend on the compiler turning
+    /// staged 16-lane array code into real SIMD?  The SWAR tier (plain
+    /// 64-bit register ops) and the naive strawman (scalar by
+    /// construction) run at their modeled cost on any core; everything
+    /// else degrades by `CoreModel::autovec_eff` (DESIGN.md §8).
+    pub fn simd_staged(&self) -> bool {
+        !matches!(self, Method::FullPackSwar(_) | Method::Naive(_))
+    }
+
+    /// [`Method::instr_mix`] adjusted for the core's auto-vectorization
+    /// effectiveness: on `autovec_eff = 1` cores (the paper's NEON
+    /// assembly regime) this is the plain mix; below 1, lane-staged
+    /// methods pay up to the full 16-lane serialization.
+    pub fn instr_mix_on(&self, z: usize, k: usize, core: &crate::costmodel::CoreModel) -> InstrMix {
+        let mix = self.instr_mix(z, k);
+        if self.simd_staged() {
+            core.degrade_staged(mix)
+        } else {
+            mix
+        }
     }
 }
 
@@ -401,5 +471,48 @@ mod tests {
         let lineup = Method::fig4_lineup();
         assert_eq!(lineup.len(), 12);
         assert_eq!(lineup[0], Method::RuyW8A8);
+    }
+
+    #[test]
+    fn swar_methods_share_registry_namespace() {
+        for v in ["w4a8", "w2a8", "w1a8", "w8a8"] {
+            let m = Method::fullpack_swar(v);
+            let name = m.registry_name();
+            assert_eq!(Method::from_registry(&name), Some(m), "{name}");
+            assert_eq!(m.data_variant(), Variant::parse(v).unwrap());
+            assert_eq!(m.batch(), 1);
+        }
+        assert_eq!(Method::fullpack_swar("w4a8").label(), "FullPack-SWAR-W4A8");
+        assert_eq!(Method::fullpack_swar("w1a8").registry_name(), "fullpack-w1a8-swar");
+    }
+
+    #[test]
+    fn swar_shares_layout_traffic_but_not_staging() {
+        // same packed layout plus the 8-byte per-row weight-sum side
+        // table (Weights::SwarPacked carries it; the kernel reads one
+        // i64 per row)
+        for v in ["w4a8", "w2a8", "w1a8"] {
+            assert_eq!(
+                Method::fullpack_swar(v).weight_bytes_per_row(2048),
+                Method::fullpack(v).weight_bytes_per_row(2048) + 8,
+                "{v}"
+            );
+            assert_eq!(
+                Method::fullpack_swar(v).act_bytes(2048),
+                Method::fullpack(v).act_bytes(2048),
+                "{v}"
+            );
+        }
+        // the w8a8 entry reuses plain Weights::Packed — no side table
+        assert_eq!(
+            Method::fullpack_swar("w8a8").weight_bytes_per_row(2048),
+            Method::RuyW8A8.weight_bytes_per_row(2048)
+        );
+        // the tier is vectorizer-independent; everything staged is not
+        assert!(!Method::fullpack_swar("w4a8").simd_staged());
+        assert!(!Method::Naive(Variant::parse("w4a8").unwrap()).simd_staged());
+        assert!(Method::fullpack("w4a8").simd_staged());
+        assert!(Method::RuyW8A8.simd_staged());
+        assert!(Method::Ulppack { bits: 2 }.simd_staged());
     }
 }

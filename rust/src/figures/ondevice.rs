@@ -7,7 +7,7 @@
 //! through a `Plan`, so no kernel function is named here.
 
 use crate::kernels::testutil::rngvals;
-use crate::kernels::{KernelRegistry, LayerShape, PlanBuilder, SelectPolicy};
+use crate::kernels::{GemvKernel, KernelRegistry, LayerShape, PlanBuilder, SelectPolicy};
 use crate::models::{FcShape, CNN_FC_ZOO};
 use crate::util::bench::{bench, Measurement, Table};
 

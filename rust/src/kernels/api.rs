@@ -20,6 +20,8 @@
 //!   Plan::execute ─(pad/pack acts, shard rows)─▶ GemvKernel::gemv_at
 //! ```
 
+#![warn(missing_docs)]
+
 use super::{ActVec, KernelError};
 use crate::costmodel::Method;
 use crate::pack::{BitWidth, PackedMatrix, UlppackMatrix, Variant};
@@ -31,19 +33,44 @@ pub enum Weights {
     /// FullPack stride-16 layout (sub-byte widths) or plain row-major
     /// int8 (`BitWidth::B8`).
     Packed(PackedMatrix),
+    /// FullPack stride-16 layout plus cached per-row weight sums — the
+    /// SWAR tier's bias-correction side table (DESIGN.md §8).
+    SwarPacked {
+        /// the packed matrix, identical layout to [`Weights::Packed`]
+        m: PackedMatrix,
+        /// `Σ w` per row (padding contributes zero), used to unbias
+        /// the `a + 128` accumulation in one subtract per row
+        row_sums: Vec<i64>,
+    },
+    /// Naive adjacent packing (paper Alg. 1).
+    Naive {
+        /// adjacently packed row-major bytes
+        bytes: Vec<u8>,
+        /// output rows
+        rows: usize,
+        /// logical depth
+        k: usize,
+        /// element bit-width
+        bits: BitWidth,
+    },
     /// ULPPACK spacer-lane layout (two values per u16 lane).
     Ulppack(UlppackMatrix),
-    /// Naive adjacent packing (paper Alg. 1).
-    Naive { bytes: Vec<u8>, rows: usize, k: usize, bits: BitWidth },
     /// Dequantized f32 rows (the FP32 baselines).
-    F32 { data: Vec<f32>, rows: usize, k: usize },
+    F32 {
+        /// row-major f32 weights
+        data: Vec<f32>,
+        /// output rows
+        rows: usize,
+        /// logical depth
+        k: usize,
+    },
 }
 
 impl Weights {
     /// Output rows of the stored matrix.
     pub fn rows(&self) -> usize {
         match self {
-            Weights::Packed(m) => m.rows(),
+            Weights::Packed(m) | Weights::SwarPacked { m, .. } => m.rows(),
             Weights::Ulppack(m) => m.rows(),
             Weights::Naive { rows, .. } | Weights::F32 { rows, .. } => *rows,
         }
@@ -52,7 +79,7 @@ impl Weights {
     /// Logical (unpadded) depth.
     pub fn k(&self) -> usize {
         match self {
-            Weights::Packed(m) => m.k(),
+            Weights::Packed(m) | Weights::SwarPacked { m, .. } => m.k(),
             Weights::Ulppack(m) => m.k(),
             Weights::Naive { k, .. } | Weights::F32 { k, .. } => *k,
         }
@@ -62,7 +89,7 @@ impl Weights {
     /// (group-padded for FullPack, logical otherwise).
     pub fn k_padded(&self) -> usize {
         match self {
-            Weights::Packed(m) => m.k_padded(),
+            Weights::Packed(m) | Weights::SwarPacked { m, .. } => m.k_padded(),
             _ => self.k(),
         }
     }
@@ -71,6 +98,8 @@ impl Weights {
     pub fn footprint(&self) -> usize {
         match self {
             Weights::Packed(m) => m.footprint(),
+            // the row-sum side table is part of the layout's cost
+            Weights::SwarPacked { m, row_sums } => m.footprint() + row_sums.len() * 8,
             Weights::Ulppack(m) => m.footprint(),
             Weights::Naive { bytes, .. } => bytes.len(),
             Weights::F32 { data, .. } => data.len() * 4,
@@ -78,10 +107,11 @@ impl Weights {
     }
 
     /// Downcast to the FullPack/int8 container (PJRT upload, oracle
-    /// unpacking).
+    /// unpacking).  The SWAR layout shares the packed container, so it
+    /// downcasts too (the side table is derived data).
     pub fn as_packed(&self) -> Option<&PackedMatrix> {
         match self {
-            Weights::Packed(m) => Some(m),
+            Weights::Packed(m) | Weights::SwarPacked { m, .. } => Some(m),
             _ => None,
         }
     }
@@ -159,6 +189,7 @@ pub(crate) fn check_rows(w: &Weights, out: &[i32], row0: usize) -> Result<(), Ke
 pub(crate) fn wrong_layout(kernel: &str, w: &Weights) -> KernelError {
     let got = match w {
         Weights::Packed(_) => "packed",
+        Weights::SwarPacked { .. } => "swar-packed",
         Weights::Ulppack(_) => "ulppack",
         Weights::Naive { .. } => "naive",
         Weights::F32 { .. } => "f32",

@@ -24,9 +24,10 @@
 use crate::pack::{PackedMatrix, VL};
 
 /// Extract sub-vector element `k` from a packed byte: the two-shift
-/// mask+sign-extend schedule.  `B` is the element bit-width.
+/// mask+sign-extend schedule.  `B` is the element bit-width.  Shared
+/// with the SWAR tier's scalar tail fallback (`kernels::swar`).
 #[inline(always)]
-fn extract<const B: usize>(byte: i8, k: usize) -> i8 {
+pub(crate) fn extract<const B: usize>(byte: i8, k: usize) -> i8 {
     let lsl = 8 - (k + 1) * B; // 0 for the top sub-vector (single ASR)
     ((byte << lsl) as i8) >> (8 - B)
 }

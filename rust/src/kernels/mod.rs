@@ -24,12 +24,14 @@ pub mod naive;
 pub mod parallel;
 pub mod plan;
 pub mod registry;
+pub mod swar;
 pub mod testutil;
 pub mod ulppack;
 
 pub use api::{GemvKernel, Weights};
 pub use plan::{LayerShape, Plan, PlanBuilder, PlanScratch, SelectPolicy};
 pub use registry::{KernelRegistry, RowParallel};
+pub use swar::{swar_kernel_name, SwarKernel, SWAR_MIN_DEPTH};
 
 use crate::pack::{BitWidth, PackError, PackedMatrix, Variant};
 

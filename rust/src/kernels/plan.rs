@@ -18,8 +18,11 @@
 //! * [`SelectPolicy::CostModel`] — argmin of modeled cycles over every
 //!   candidate backend via `costmodel::simulate_gemv`.
 
+#![warn(missing_docs)]
+
 use super::api::{GemvKernel, Weights};
 use super::registry::{fullpack_kernel_name, KernelRegistry};
+use super::swar::{swar_kernel_name, SWAR_MIN_DEPTH};
 use super::{parallel, ActVec, KernelError};
 use crate::costmodel::{simulate_gemv, CoreModel};
 use crate::pack::{pack_into, BitWidth, Variant};
@@ -42,34 +45,93 @@ pub struct LayerShape {
 /// How the builder picks a kernel.
 #[derive(Debug, Clone)]
 pub enum SelectPolicy {
-    /// paper §4.6: single-batch sub-byte → FullPack; else Ruy-W8A8
+    /// paper §4.6: single-batch sub-byte → FullPack; else Ruy-W8A8.
+    /// With [`PlanBuilder::prefer_swar`] set, the FullPack branch takes
+    /// the `-swar` tier when the variant has one and the depth clears
+    /// [`SWAR_MIN_DEPTH`] (alignment is free: the packed layout is
+    /// always a whole number of 8-byte chunks).
     PaperRule,
     /// a registry name, verbatim
     Explicit(String),
     /// argmin modeled cycles (`costmodel::simulate_gemv`) over all
-    /// candidates; `calls` = steady-state warm-up calls for residency
-    CostModel { preset: CachePreset, calls: usize },
+    /// candidates; `calls` = steady-state warm-up calls for residency,
+    /// `core` = the pipeline model costs are computed on (the SWAR tier
+    /// wins only on cores whose `autovec_eff` marks the staged 16-lane
+    /// loops as imperfectly vectorized)
+    CostModel {
+        /// cache hierarchy preset replayed for the stall model
+        preset: CachePreset,
+        /// steady-state warm-up calls before the measured call
+        calls: usize,
+        /// pipeline/throughput model of the target core
+        core: CoreModel,
+    },
 }
 
 impl SelectPolicy {
-    /// Cost-model policy with the gem5 ex5_big defaults.
+    /// Cost-model policy with the gem5 ex5_big defaults (the paper's
+    /// simulated core: staged loops compile to perfect NEON).
     pub fn cost_model() -> SelectPolicy {
-        SelectPolicy::CostModel { preset: CachePreset::Gem5Ex5Big, calls: 3 }
+        SelectPolicy::CostModel {
+            preset: CachePreset::Gem5Ex5Big,
+            calls: 3,
+            core: CoreModel::ex5_big(),
+        }
+    }
+
+    /// Cost-model policy for a portable host whose auto-vectorizer
+    /// cannot be trusted with the staged lane loops — the regime the
+    /// SWAR tier exists for (DESIGN.md §8).
+    pub fn cost_model_portable() -> SelectPolicy {
+        SelectPolicy::CostModel {
+            preset: CachePreset::Gem5Ex5Big,
+            calls: 3,
+            core: CoreModel::portable(),
+        }
     }
 }
 
 /// Builder: shape + variant + knobs → [`Plan`].
+///
+/// ```
+/// use fullpack::kernels::{LayerShape, PlanBuilder};
+/// use fullpack::pack::Variant;
+///
+/// let shape = LayerShape { z: 8, k: 64, batch: 1 };
+/// let plan = PlanBuilder::new(shape, Variant::parse("w4a8").unwrap())
+///     .threads(2)
+///     .build()
+///     .unwrap();
+/// assert_eq!(plan.kernel_name(), "fullpack-w4a8");
+///
+/// let w = vec![1i8; 8 * 64];
+/// let a = vec![1i8; 64];
+/// let weights = plan.prepare_weights(&w).unwrap();
+/// let mut out = vec![0i32; 8];
+/// plan.execute(&weights, &a, &mut out).unwrap();
+/// assert!(out.iter().all(|&y| y == 64));
+/// ```
 pub struct PlanBuilder {
     shape: LayerShape,
     variant: Variant,
     threads: usize,
     policy: SelectPolicy,
     gemv_max_batch: usize,
+    prefer_swar: bool,
 }
 
 impl PlanBuilder {
+    /// Start a builder with the default policy ([`SelectPolicy::PaperRule`]),
+    /// serial execution and the paper's batch threshold of 1.
     pub fn new(shape: LayerShape, variant: Variant) -> PlanBuilder {
-        PlanBuilder { shape, variant, threads: 1, policy: SelectPolicy::PaperRule, gemv_max_batch: 1 }
+        PlanBuilder {
+            shape,
+            variant,
+            threads: 1,
+            policy: SelectPolicy::PaperRule,
+            gemv_max_batch: 1,
+            prefer_swar: false,
+        }
     }
 
     /// Intra-op row-parallelism budget (1 = serial).
@@ -78,6 +140,7 @@ impl PlanBuilder {
         self
     }
 
+    /// Replace the selection policy (default: [`SelectPolicy::PaperRule`]).
     pub fn policy(mut self, p: SelectPolicy) -> PlanBuilder {
         self.policy = p;
         self
@@ -87,6 +150,18 @@ impl PlanBuilder {
     /// (paper: 1).
     pub fn gemv_max_batch(mut self, n: usize) -> PlanBuilder {
         self.gemv_max_batch = n;
+        self
+    }
+
+    /// Under `PaperRule`, take the registered `-swar` tier instead of
+    /// the staged scalar kernel when the variant has one and the padded
+    /// depth is at least [`SWAR_MIN_DEPTH`] (default: off, preserving
+    /// the paper's kernel choice).  Only the *sub-byte* GEMV branch is
+    /// affected: 8-bit ops keep the paper's Ruy path, so
+    /// `fullpack-w8a8-swar` is reachable only via
+    /// [`SelectPolicy::Explicit`] or [`SelectPolicy::CostModel`].
+    pub fn prefer_swar(mut self, yes: bool) -> PlanBuilder {
+        self.prefer_swar = yes;
         self
     }
 
@@ -149,18 +224,25 @@ impl PlanBuilder {
             SelectPolicy::PaperRule => {
                 let sub = self.variant.w.is_sub_byte() || self.variant.a.is_sub_byte();
                 if sub && batch <= self.gemv_max_batch {
-                    (lookup(fullpack_kernel_name(self.variant))?, self.variant)
+                    let mut name = fullpack_kernel_name(self.variant);
+                    if self.prefer_swar && self.variant.padded_depth(k) >= SWAR_MIN_DEPTH {
+                        if let Some(sw) = swar_kernel_name(self.variant) {
+                            if reg.get(sw).is_some() {
+                                name = sw;
+                            }
+                        }
+                    }
+                    (lookup(name)?, self.variant)
                 } else {
                     (lookup("ruy-w8a8")?, W8A8)
                 }
             }
-            SelectPolicy::CostModel { preset, calls } => {
-                let core = CoreModel::ex5_big();
+            SelectPolicy::CostModel { preset, calls, core } => {
                 let mut best: Option<(f64, Arc<dyn GemvKernel>, Variant)> = None;
                 for kern in reg.iter() {
                     let Some(ev) = exec_for(kern) else { continue };
                     let Some(method) = kern.cost_method() else { continue };
-                    let cycles = simulate_gemv(method, z, k, *preset, &core, *calls).cycles;
+                    let cycles = simulate_gemv(method, z, k, *preset, core, *calls).cycles;
                     let better = match &best {
                         None => true,
                         Some((c, _, _)) => cycles < *c,
@@ -192,12 +274,14 @@ pub struct PlanScratch {
 /// A bound execution plan: shape + variant + thread budget + the chosen
 /// kernel, with reusable activation-packing scratch.
 pub struct Plan {
+    /// the layer shape the plan is bound to
     pub shape: LayerShape,
     /// the data's quantization variant
     pub variant: Variant,
     /// what the kernel actually runs (`w8a8` when sub-byte data is
     /// widened onto the int8 fallback path)
     pub exec_variant: Variant,
+    /// default intra-op thread budget for [`Plan::execute`]
     pub threads: usize,
     kernel: Arc<dyn GemvKernel>,
     scratch: Mutex<PlanScratch>,
@@ -221,6 +305,7 @@ impl Plan {
         self.kernel.name()
     }
 
+    /// The selected backend (e.g. to wrap in `RowParallel`).
     pub fn kernel(&self) -> &Arc<dyn GemvKernel> {
         &self.kernel
     }
@@ -386,13 +471,69 @@ mod tests {
     fn cost_model_picks_fullpack_at_the_boundary() {
         // paper §4.4 regime: 2048x2048, packed weights fit the 2MB LLC,
         // W8A8 does not — the model must prefer fullpack-w4a8 over
-        // ruy-w8a8 (and every other W8A8/FP32 candidate)
+        // ruy-w8a8 (and every other W8A8/FP32 candidate).  On the ex5
+        // core the staged loops compile to perfect NEON, so the scalar
+        // tier beats its own SWAR sibling too.
         let v = Variant::parse("w4a8").unwrap();
         let p = PlanBuilder::new(shape(2048, 2048, 1), v)
             .policy(SelectPolicy::cost_model())
             .build()
             .unwrap();
         assert_eq!(p.kernel_name(), "fullpack-w4a8");
+    }
+
+    #[test]
+    fn portable_cost_model_selects_the_swar_tier() {
+        // on a core whose auto-vectorizer cannot be trusted with the
+        // staged lane loops, the vectorization-independent SWAR tier
+        // wins for the low bit-widths (DESIGN.md §8)
+        let v = Variant::parse("w1a8").unwrap();
+        let p = PlanBuilder::new(shape(2048, 2048, 1), v)
+            .policy(SelectPolicy::cost_model_portable())
+            .build()
+            .unwrap();
+        assert_eq!(p.kernel_name(), "fullpack-w1a8-swar");
+    }
+
+    #[test]
+    fn paper_rule_prefer_swar_gates_on_depth_and_tier() {
+        let w4a8 = Variant::parse("w4a8").unwrap();
+        // deep layer + opt-in -> the SWAR tier
+        let p = PlanBuilder::new(shape(256, 2048, 1), w4a8).prefer_swar(true).build().unwrap();
+        assert_eq!(p.kernel_name(), "fullpack-w4a8-swar");
+        assert!(p.is_fullpack());
+        // below SWAR_MIN_DEPTH the flush/bias overhead dominates ->
+        // stay on the staged kernel (k=1 pads to one 32-element group)
+        let p = PlanBuilder::new(shape(256, 1, 1), w4a8).prefer_swar(true).build().unwrap();
+        assert_eq!(p.kernel_name(), "fullpack-w4a8");
+        // variants without a SWAR backend keep the scalar kernel
+        let w4a4 = Variant::parse("w4a4").unwrap();
+        let p = PlanBuilder::new(shape(256, 2048, 1), w4a4).prefer_swar(true).build().unwrap();
+        assert_eq!(p.kernel_name(), "fullpack-w4a4");
+        // default stays the paper's kernel choice
+        let p = PlanBuilder::new(shape(256, 2048, 1), w4a8).build().unwrap();
+        assert_eq!(p.kernel_name(), "fullpack-w4a8");
+    }
+
+    #[test]
+    fn prefer_swar_plans_execute_correctly() {
+        for (vname, k) in [("w4a8", 129usize), ("w2a8", 200), ("w1a8", 501)] {
+            let v = Variant::parse(vname).unwrap();
+            let z = 16;
+            let plan =
+                PlanBuilder::new(shape(z, k, 1), v).prefer_swar(true).build().unwrap();
+            assert!(plan.kernel_name().ends_with("-swar"), "{vname}");
+            let w = rngvals(v.w, z * k, 41 + k as u64);
+            let a = rngvals(v.a, k, 43 + k as u64);
+            let wts = plan.prepare_weights(&w).unwrap();
+            let mut out = vec![0i32; z];
+            plan.execute(&wts, &a, &mut out).unwrap();
+            let kp = v.padded_depth(k);
+            let wp = pad_rows(&w, z, k, kp);
+            let mut ap = a.clone();
+            ap.resize(kp, 0);
+            assert_eq!(out, oracle_gemv(&wp, &ap, z, kp), "{vname} k={k}");
+        }
     }
 
     #[test]

@@ -9,6 +9,7 @@
 //! | name              | family   | layout    | modeled as            |
 //! |-------------------|----------|-----------|-----------------------|
 //! | `fullpack-wXaY`   | FullPack | stride-16 | `Method::FullPack`    |
+//! | `fullpack-wXa8-swar` | SWAR tier | stride-16 + row sums | `Method::FullPackSwar` |
 //! | `naive-wXa8`      | Alg. 1   | adjacent  | `Method::Naive`       |
 //! | `ulppack-wXaX`    | ULPPACK  | spacer    | `Method::Ulppack`     |
 //! | `ruy-w8a8` &co.   | int8     | row-major | `Method::*W8A8`       |
@@ -17,8 +18,10 @@
 //! [`RowParallel`] is the row-sharding decorator: it wraps any entry and
 //! implements the same trait, so intra-op parallelism composes with
 //! every backend.
+#![warn(missing_docs)]
 
 use super::api::{check_rows, wrong_layout, GemvKernel, Weights};
+use super::swar::{SwarKernel, SWAR_VARIANTS};
 use super::{baseline, fullpack_gemm, naive, parallel, ulppack, ActVec, KernelError};
 use crate::costmodel::Method;
 use crate::pack::{pad_rows, BitWidth, PackedMatrix, UlppackMatrix, Variant};
@@ -418,15 +421,21 @@ impl GemvKernel for UlppackKernel {
 /// scoped thread pool (`kernels::parallel`), bit-identical to the serial
 /// call.  Wrap any registry entry:
 ///
-/// ```ignore
-/// let par = RowParallel::new(registry.get("fullpack-w4a8").unwrap().clone(), 4);
+/// ```
+/// use fullpack::kernels::{GemvKernel, KernelRegistry, RowParallel};
+///
+/// let reg = KernelRegistry::global();
+/// let par = RowParallel::new(reg.get("fullpack-w4a8-swar").unwrap().clone(), 4);
+/// assert_eq!(par.name(), "fullpack-w4a8-swar");
 /// ```
 pub struct RowParallel {
     inner: Arc<dyn GemvKernel>,
+    /// shard budget handed to `parallel::shard_rows` per call
     pub threads: usize,
 }
 
 impl RowParallel {
+    /// Wrap `inner` with a row-sharding budget of `threads`.
     pub fn new(inner: Arc<dyn GemvKernel>, threads: usize) -> RowParallel {
         RowParallel { inner, threads }
     }
@@ -485,12 +494,17 @@ impl KernelRegistry {
         KernelRegistry { entries: Vec::new() }
     }
 
-    /// Every built-in backend: nine FullPack variants, the naive Alg. 1
-    /// strawman, ULPPACK, the W8A8 rivals and the FP32 rivals.
+    /// Every built-in backend: nine FullPack variants, the SWAR fast
+    /// path (DESIGN.md §8), the naive Alg. 1 strawman, ULPPACK, the
+    /// W8A8 rivals and the FP32 rivals.
     pub fn with_builtins() -> KernelRegistry {
         let mut reg = KernelRegistry::empty();
         for v in Variant::PAPER_VARIANTS {
             reg.register(Arc::new(FullPackKernel { variant: v }));
+        }
+        for v in SWAR_VARIANTS {
+            let kernel = SwarKernel::new(v).expect("SWAR_VARIANTS are implemented");
+            reg.register(Arc::new(kernel));
         }
         for flavor in [I8Flavor::Ruy, I8Flavor::Xnn, I8Flavor::Tflite, I8Flavor::Gemmlowp] {
             reg.register(Arc::new(I8Baseline { flavor }));
@@ -521,10 +535,21 @@ impl KernelRegistry {
     }
 
     /// Look a backend up by registry name.
+    ///
+    /// ```
+    /// use fullpack::kernels::{GemvKernel, KernelRegistry};
+    ///
+    /// let reg = KernelRegistry::global();
+    /// let kernel = reg.get("fullpack-w4a8").unwrap();
+    /// assert_eq!(kernel.name(), "fullpack-w4a8");
+    /// assert!(reg.get("fullpack-w4a8-swar").is_some());
+    /// assert!(reg.get("no-such-backend").is_none());
+    /// ```
     pub fn get(&self, name: &str) -> Option<&Arc<dyn GemvKernel>> {
         self.entries.iter().find(|e| e.name() == name)
     }
 
+    /// Iterate every registered backend, in registration order.
     pub fn iter(&self) -> impl Iterator<Item = &Arc<dyn GemvKernel>> {
         self.entries.iter()
     }
@@ -539,10 +564,12 @@ impl KernelRegistry {
         self.entries.iter().filter(|e| e.supports(v)).collect()
     }
 
+    /// Number of registered backends.
     pub fn len(&self) -> usize {
         self.entries.len()
     }
 
+    /// Is the registry empty (only possible for [`KernelRegistry::empty`])?
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }
@@ -556,10 +583,20 @@ mod tests {
     #[test]
     fn builtin_roster_complete() {
         let reg = KernelRegistry::global();
-        // 9 fullpack + 4 i8 + 3 f32 + 3 naive + 3 ulppack
-        assert_eq!(reg.len(), 22);
-        for name in ["fullpack-w4a8", "ruy-w8a8", "xnn-w8a8", "ulppack-w2a2", "naive-w4a8", "eigen-f32"]
-        {
+        // 9 fullpack + 4 swar + 4 i8 + 3 f32 + 3 naive + 3 ulppack
+        assert_eq!(reg.len(), 26);
+        for name in [
+            "fullpack-w4a8",
+            "fullpack-w4a8-swar",
+            "fullpack-w2a8-swar",
+            "fullpack-w1a8-swar",
+            "fullpack-w8a8-swar",
+            "ruy-w8a8",
+            "xnn-w8a8",
+            "ulppack-w2a2",
+            "naive-w4a8",
+            "eigen-f32",
+        ] {
             assert!(reg.get(name).is_some(), "{name} missing");
         }
         // names are unique

@@ -1,0 +1,432 @@
+//! The SWAR fast-path kernel tier (DESIGN.md §8): u64-lane FullPack
+//! GEMV inner loops that load **8 packed bytes per iteration** and
+//! multiply-accumulate inside 64-bit general-purpose registers — no
+//! reliance on the auto-vectorizer at all.
+//!
+//! The staged 16-lane loops in [`super::fullpack`] mirror the paper's
+//! NEON assembly and run at full speed only when LLVM's SLP vectorizer
+//! turns them into real SIMD.  This tier is the portable insurance: a
+//! bit-plane decomposition that works on any 64-bit core.
+//!
+//! Per 8-byte chunk of a packed row (`w64 = load_le_u64`), for each
+//! sub-vector `k` and bit position `p`:
+//!
+//! ```text
+//!   m    ← (w64 >> (k·b + p)) & 0x0101..01     one 0x01 per set bit
+//!   mask ← m · 0xFF                            0xFF per selected byte
+//!   sel  ← (a64 ^ 0x8080..80) & mask           biased acts, selected
+//!   acc  ← acc + lane-split(sel) << p          weighted u16-lane adds
+//! ```
+//!
+//! Activations are biased to unsigned (`a + 128`) so selected bytes
+//! accumulate without sign handling; the bias is removed once per row
+//! with the precomputed weight row sum: `Σ(a+128)·w = Σa·w + 128·Σw`.
+//! Negative-weight planes (the top bit of each two's-complement
+//! sub-element) accumulate separately and subtract at the end.
+//!
+//! **Overflow-safe accumulator splitting**: selected bytes land in four
+//! u16 lanes per u64 (even/odd byte split), and the lanes are reduced
+//! into an `i64` every [`flush_period`] chunks — the largest interval
+//! for which a lane provably stays below 2^16 even for all-min weights
+//! against all-max activations.
+//!
+//! Depths that are not a multiple of the 8-byte chunk fall back to the
+//! scalar two-shift extraction per byte (only reachable for the int8
+//! `w8a8` rows; FullPack sub-byte rows are 16-byte multiples by
+//! construction).
+#![warn(missing_docs)]
+
+use super::api::{check_rows, wrong_layout, GemvKernel, Weights};
+use super::fullpack::extract;
+use super::{ActVec, KernelError};
+use crate::costmodel::Method;
+use crate::pack::{pad_rows, BitWidth, PackedMatrix, Variant, VL};
+
+const ONES: u64 = 0x0101_0101_0101_0101;
+const LO16: u64 = 0x00FF_00FF_00FF_00FF;
+const SIGN: u64 = 0x8080_8080_8080_8080;
+
+/// Minimum padded depth at which the planner prefers the SWAR tier:
+/// below one full packed group the flush/bias bookkeeping dominates.
+pub const SWAR_MIN_DEPTH: usize = 64;
+
+/// The variants the SWAR tier implements (int8 activations only — the
+/// bit-plane trick decomposes the *weights*; packed sub-byte
+/// activations would need a second decomposition that costs more than
+/// it saves).
+pub const SWAR_VARIANTS: [Variant; 4] = [
+    Variant::new(BitWidth::B4, BitWidth::B8),
+    Variant::new(BitWidth::B2, BitWidth::B8),
+    Variant::new(BitWidth::B1, BitWidth::B8),
+    Variant::new(BitWidth::B8, BitWidth::B8),
+];
+
+/// 8-byte chunks a u16 lane can absorb before it could overflow: the
+/// worst per-chunk lane gain is `E · 2^(b-1) · 255` (all-min weights ×
+/// all-max biased activations on the negative plane).
+const fn flush_period(b: usize) -> usize {
+    65535 / ((8 / b) * (1 << (b - 1)) * 255)
+}
+
+/// Reduce four u16 lanes of a split accumulator into one integer.
+#[inline(always)]
+fn hsum16(x: u64) -> i64 {
+    ((x & 0xFFFF) + ((x >> 16) & 0xFFFF) + ((x >> 32) & 0xFFFF) + (x >> 48)) as i64
+}
+
+/// Reinterpret an int8 slice as raw bytes (layout-identical).
+#[inline(always)]
+fn as_u8(a: &[i8]) -> &[u8] {
+    // SAFETY: i8 and u8 have identical size/alignment.
+    unsafe { std::slice::from_raw_parts(a.as_ptr() as *const u8, a.len()) }
+}
+
+#[inline(always)]
+fn load_u64(bytes: &[u8]) -> u64 {
+    u64::from_le_bytes(bytes[..8].try_into().expect("8-byte chunk"))
+}
+
+/// W sub-byte (`B` bits) × A int8, u64 SWAR loop — the fast-path twin
+/// of [`super::fullpack::gemv_wsub_a8`].  `row_sums[r]` must hold the
+/// integer sum of row `r`'s weights (padding contributes zero).
+pub fn gemv_swar_wsub_a8<const B: usize>(
+    wp: &PackedMatrix,
+    row_sums: &[i64],
+    a: &[i8],
+    out: &mut [i32],
+) {
+    gemv_swar_wsub_a8_at::<B>(wp, row_sums, a, out, 0)
+}
+
+/// [`gemv_swar_wsub_a8`] over the row range `[row0, row0 + out.len())`
+/// — the zero-copy sharding entry `RowParallel` composes over.
+pub fn gemv_swar_wsub_a8_at<const B: usize>(
+    wp: &PackedMatrix,
+    row_sums: &[i64],
+    a: &[i8],
+    out: &mut [i32],
+    row0: usize,
+) {
+    let e = 8 / B;
+    debug_assert_eq!(wp.bits().bits(), B);
+    debug_assert!(a.len() >= wp.k_padded());
+    debug_assert!(row_sums.len() >= row0 + out.len());
+    let au8 = as_u8(a);
+    let flush_every = flush_period(B);
+    for (r, o) in out.iter_mut().enumerate() {
+        let row = wp.row(row0 + r);
+        // positive-plane and negative-plane split accumulators
+        // (even/odd byte lanes), flushed into i64 before u16 overflow
+        let (mut pe, mut po, mut ne, mut no) = (0u64, 0u64, 0u64, 0u64);
+        let (mut s_pos, mut s_neg) = (0i64, 0i64);
+        let mut pending = 0usize;
+        let chunks = row.chunks_exact(8);
+        let tail = chunks.remainder();
+        for (c, chunk) in chunks.enumerate() {
+            let w64 = load_u64(chunk);
+            // chunk c is half (c % 2) of packed group (c / 2)
+            let base = (c / 2) * e * VL + (c % 2) * 8;
+            for k in 0..e {
+                let au = load_u64(&au8[base + k * VL..]) ^ SIGN;
+                // positive planes: bit p contributes +2^p
+                for p in 0..B - 1 {
+                    let m = (w64 >> (k * B + p)) & ONES;
+                    let sel = au & (m * 0xFF);
+                    pe += (sel & LO16) << p;
+                    po += ((sel >> 8) & LO16) << p;
+                }
+                // top plane: two's-complement sign bit contributes -2^(B-1)
+                let m = (w64 >> (k * B + B - 1)) & ONES;
+                let sel = au & (m * 0xFF);
+                ne += (sel & LO16) << (B - 1);
+                no += ((sel >> 8) & LO16) << (B - 1);
+            }
+            pending += 1;
+            if pending == flush_every {
+                s_pos += hsum16(pe) + hsum16(po);
+                s_neg += hsum16(ne) + hsum16(no);
+                (pe, po, ne, no) = (0, 0, 0, 0);
+                pending = 0;
+            }
+        }
+        if pending > 0 {
+            s_pos += hsum16(pe) + hsum16(po);
+            s_neg += hsum16(ne) + hsum16(no);
+        }
+        // scalar tail fallback (unreachable for FullPack-packed rows,
+        // whose byte count is a multiple of VL = 16; kept so adopted
+        // layouts with odd row strides stay correct)
+        let mut tail_sum = 0i64;
+        let off = row.len() - tail.len();
+        for (t, &byte) in tail.iter().enumerate() {
+            let i = off + t;
+            let (g, j) = (i / VL, i % VL);
+            for k in 0..e {
+                let w = extract::<B>(byte as i8, k) as i64;
+                tail_sum += w * (a[g * e * VL + k * VL + j] as i64 + 128);
+            }
+        }
+        // unbias: Σ(a+128)·w = Σa·w + 128·Σw
+        *o = ((s_pos - s_neg + tail_sum) - 128 * row_sums[row0 + r]) as i32;
+    }
+}
+
+/// W int8 × A int8 with u64 loads: eight weight and eight activation
+/// bytes per iteration, four interleaved accumulators, scalar tail for
+/// `k % 8 != 0`.  The paper's full-utilization story is about sub-byte
+/// data — int8 already fills every lane — so this entry is a load-width
+/// optimization only, registered for completeness as the tier's
+/// ULPPACK/Ruy-class rival.
+pub fn gemv_swar_w8a8_at(wp: &PackedMatrix, a: &[i8], out: &mut [i32], row0: usize) {
+    debug_assert!(!wp.bits().is_sub_byte());
+    debug_assert!(a.len() >= wp.k());
+    let au8 = as_u8(a);
+    for (r, o) in out.iter_mut().enumerate() {
+        let row = wp.row(row0 + r);
+        let mut acc = [0i32; 4];
+        let chunks = row.len() / 8;
+        for c in 0..chunks {
+            let w64 = load_u64(&row[c * 8..]);
+            let a64 = load_u64(&au8[c * 8..]);
+            for lane in 0..8 {
+                let wv = ((w64 >> (8 * lane)) as u8) as i8 as i32;
+                let av = ((a64 >> (8 * lane)) as u8) as i8 as i32;
+                acc[lane & 3] += wv * av;
+            }
+        }
+        let mut sum: i32 = acc.iter().sum();
+        for i in chunks * 8..row.len() {
+            sum += (row[i] as i8) as i32 * a[i] as i32;
+        }
+        *o = sum;
+    }
+}
+
+/// Registry name of the SWAR-tier kernel for a variant, if the tier
+/// implements it (see [`SWAR_VARIANTS`]).
+pub fn swar_kernel_name(v: Variant) -> Option<&'static str> {
+    match (v.w, v.a) {
+        (BitWidth::B4, BitWidth::B8) => Some("fullpack-w4a8-swar"),
+        (BitWidth::B2, BitWidth::B8) => Some("fullpack-w2a8-swar"),
+        (BitWidth::B1, BitWidth::B8) => Some("fullpack-w1a8-swar"),
+        (BitWidth::B8, BitWidth::B8) => Some("fullpack-w8a8-swar"),
+        _ => None,
+    }
+}
+
+/// The SWAR tier as a first-class registry backend: same packed layout
+/// and padding contract as the scalar FullPack kernels, plus cached
+/// per-row weight sums for the bias correction.
+pub struct SwarKernel {
+    variant: Variant,
+    name: &'static str,
+}
+
+impl SwarKernel {
+    /// Backend for `variant`, or `None` when the tier does not
+    /// implement it (sub-byte activations).
+    pub fn new(variant: Variant) -> Option<SwarKernel> {
+        swar_kernel_name(variant).map(|name| SwarKernel { variant, name })
+    }
+}
+
+impl GemvKernel for SwarKernel {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn supports(&self, v: Variant) -> bool {
+        v == self.variant
+    }
+
+    fn prepare(&self, w: &[i8], rows: usize, k: usize) -> Result<Weights, KernelError> {
+        let kp = self.variant.padded_depth(k);
+        let padded = pad_rows(w, rows, k, kp);
+        let m = PackedMatrix::from_i8(&padded, rows, kp, self.variant.w)?;
+        if self.variant.w.is_sub_byte() {
+            let row_sums = (0..rows)
+                .map(|r| w[r * k..(r + 1) * k].iter().map(|&v| v as i64).sum())
+                .collect();
+            Ok(Weights::SwarPacked { m, row_sums })
+        } else {
+            Ok(Weights::Packed(m))
+        }
+    }
+
+    fn gemv_at(
+        &self,
+        w: &Weights,
+        a: ActVec<'_>,
+        out: &mut [i32],
+        row0: usize,
+    ) -> Result<(), KernelError> {
+        check_rows(w, out, row0)?;
+        let ActVec::I8(av) = a else {
+            return Err(KernelError::Unsupported(format!("{}: packed activations", self.name)));
+        };
+        if av.len() < w.k_padded() {
+            return Err(KernelError::Shape(format!(
+                "activation elems {} < padded depth {}",
+                av.len(),
+                w.k_padded()
+            )));
+        }
+        match w {
+            Weights::SwarPacked { m, row_sums } => match m.bits() {
+                BitWidth::B4 => gemv_swar_wsub_a8_at::<4>(m, row_sums, av, out, row0),
+                BitWidth::B2 => gemv_swar_wsub_a8_at::<2>(m, row_sums, av, out, row0),
+                BitWidth::B1 => gemv_swar_wsub_a8_at::<1>(m, row_sums, av, out, row0),
+                BitWidth::B8 => return Err(wrong_layout(self.name, w)),
+            },
+            // only the tier's own w8a8 entry runs plain int8 weights —
+            // a sub-byte SWAR kernel handed another backend's B8 layout
+            // must reject it like every other cross-kernel mismatch
+            Weights::Packed(m)
+                if !self.variant.w.is_sub_byte() && !m.bits().is_sub_byte() =>
+            {
+                gemv_swar_w8a8_at(m, av, out, row0)
+            }
+            other => return Err(wrong_layout(self.name, other)),
+        }
+        Ok(())
+    }
+
+    fn cost_method(&self) -> Option<Method> {
+        Some(Method::FullPackSwar(self.variant))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::testutil::{oracle_gemv, rngvals};
+
+    fn run_sub<const B: usize>(bits: BitWidth, z: usize, k: usize, seed: u64) {
+        let kp = bits.padded_len(k);
+        let mut w = rngvals(bits, z * k, seed);
+        let mut a = rngvals(BitWidth::B8, k, seed + 1);
+        let mut wfull = vec![0i8; z * kp];
+        for r in 0..z {
+            wfull[r * kp..r * kp + k].copy_from_slice(&w[r * k..(r + 1) * k]);
+        }
+        w = wfull;
+        a.resize(kp, 0);
+        let wp = PackedMatrix::from_i8(&w, z, kp, bits).unwrap();
+        let sums: Vec<i64> =
+            (0..z).map(|r| w[r * kp..(r + 1) * kp].iter().map(|&v| v as i64).sum()).collect();
+        let mut out = vec![0i32; z];
+        gemv_swar_wsub_a8::<B>(&wp, &sums, &a, &mut out);
+        assert_eq!(out, oracle_gemv(&w, &a, z, kp), "b={B} z={z} k={k}");
+    }
+
+    #[test]
+    fn swar_matches_oracle_across_depths() {
+        for k in [1usize, 7, 8, 9, 16, 31, 63, 64, 65, 127, 129, 500, 1024] {
+            run_sub::<4>(BitWidth::B4, 6, k, 100 + k as u64);
+            run_sub::<2>(BitWidth::B2, 6, k, 200 + k as u64);
+            run_sub::<1>(BitWidth::B1, 6, k, 300 + k as u64);
+        }
+    }
+
+    #[test]
+    fn swar_extremes_exercise_flush_bound() {
+        // all-min weights × all-max activations for many flush periods:
+        // the worst-case u16-lane gain the flush interval is sized for
+        for (bits, b) in [(BitWidth::B4, 4usize), (BitWidth::B2, 2), (BitWidth::B1, 1)] {
+            let k = 8192usize;
+            let (wlo, whi) = bits.value_range();
+            for (wv, av) in [(wlo, 127i8), (whi, -128i8), (wlo, -128), (whi, 127)] {
+                let z = 2;
+                let w = vec![wv; z * k];
+                let a = vec![av; k];
+                let wp = PackedMatrix::from_i8(&w, z, k, bits).unwrap();
+                let sums = vec![(wv as i64) * k as i64; z];
+                let mut out = vec![0i32; z];
+                match b {
+                    4 => gemv_swar_wsub_a8::<4>(&wp, &sums, &a, &mut out),
+                    2 => gemv_swar_wsub_a8::<2>(&wp, &sums, &a, &mut out),
+                    _ => gemv_swar_wsub_a8::<1>(&wp, &sums, &a, &mut out),
+                }
+                assert_eq!(out, oracle_gemv(&w, &a, z, k), "{bits:?} w={wv} a={av}");
+            }
+        }
+    }
+
+    #[test]
+    fn swar_w8a8_tail_fallback() {
+        // depths not divisible by the 8-byte chunk take the scalar tail
+        for k in [1usize, 7, 9, 15, 63, 65, 127, 129] {
+            let z = 5;
+            let w = rngvals(BitWidth::B8, z * k, 7 + k as u64);
+            let a = rngvals(BitWidth::B8, k, 8 + k as u64);
+            let wp = PackedMatrix::from_i8(&w, z, k, BitWidth::B8).unwrap();
+            let mut out = vec![0i32; z];
+            gemv_swar_w8a8_at(&wp, &a, &mut out, 0);
+            assert_eq!(out, oracle_gemv(&w, &a, z, k), "k={k}");
+        }
+    }
+
+    #[test]
+    fn swar_kernel_prepare_and_row_ranges() {
+        let kernel = SwarKernel::new(Variant::parse("w4a8").unwrap()).unwrap();
+        let (z, k) = (16usize, 100usize);
+        let w = rngvals(BitWidth::B4, z * k, 21);
+        let a = {
+            let mut a = rngvals(BitWidth::B8, k, 22);
+            a.resize(BitWidth::B4.padded_len(k), 0);
+            a
+        };
+        let wts = kernel.prepare(&w, z, k).unwrap();
+        assert_eq!(wts.rows(), z);
+        assert_eq!(wts.k(), k);
+        let mut full = vec![0i32; z];
+        kernel.gemv_at(&wts, ActVec::I8(&a), &mut full, 0).unwrap();
+        // sharded row ranges agree with the full call
+        let mut lo = vec![0i32; 7];
+        let mut hi = vec![0i32; 9];
+        kernel.gemv_at(&wts, ActVec::I8(&a), &mut lo, 0).unwrap();
+        kernel.gemv_at(&wts, ActVec::I8(&a), &mut hi, 7).unwrap();
+        assert_eq!(&full[..7], lo.as_slice());
+        assert_eq!(&full[7..], hi.as_slice());
+    }
+
+    #[test]
+    fn sub_byte_swar_rejects_foreign_b8_layout() {
+        // a w4a8 SWAR kernel handed another backend's plain int8 layout
+        // must error, while the tier's own w8a8 entry accepts it
+        let b8 = PackedMatrix::from_i8(&vec![1i8; 8 * 64], 8, 64, BitWidth::B8).unwrap();
+        let w = Weights::Packed(b8);
+        let a = vec![1i8; 64];
+        let mut out = vec![0i32; 8];
+        let k4 = SwarKernel::new(Variant::parse("w4a8").unwrap()).unwrap();
+        assert!(k4.gemv_at(&w, ActVec::I8(&a), &mut out, 0).is_err());
+        let k8 = SwarKernel::new(Variant::parse("w8a8").unwrap()).unwrap();
+        k8.gemv_at(&w, ActVec::I8(&a), &mut out, 0).unwrap();
+        assert!(out.iter().all(|&y| y == 64));
+    }
+
+    #[test]
+    fn swar_names_and_variants() {
+        assert_eq!(SWAR_VARIANTS.len(), 4);
+        for v in SWAR_VARIANTS {
+            let kernel = SwarKernel::new(v).unwrap();
+            assert_eq!(Some(kernel.name()), swar_kernel_name(v));
+            assert!(kernel.name().ends_with("-swar"));
+            assert!(kernel.supports(v));
+        }
+        assert!(SwarKernel::new(Variant::parse("w4a4").unwrap()).is_none());
+        assert!(swar_kernel_name(Variant::parse("w8a4").unwrap()).is_none());
+    }
+
+    #[test]
+    fn flush_periods_are_overflow_safe() {
+        for b in [4usize, 2, 1] {
+            let e = 8 / b;
+            let worst = e * (1usize << (b - 1)) * 255;
+            let period = flush_period(b);
+            assert!(period >= 1, "b={b}");
+            assert!(period * worst <= 65535, "b={b} period={period}");
+            assert!((period + 1) * worst > 65535, "b={b}: period not maximal");
+        }
+    }
+}

@@ -4,9 +4,10 @@
 //! Utilization for Sub-Byte Quantized Inference on General Purpose
 //! CPUs"* (Katebi, Asadi, Goudarzi; 2022).
 //!
-//! See `DESIGN.md` for the system inventory (and §3/§4 for the kernel
-//! API + registry architecture); `EXPERIMENTS.md` logs paper-vs-measured
-//! results.
+//! See `README.md` for the quickstart, `DESIGN.md` for the system
+//! inventory (§3/§4 kernel API + registry, §8 the SWAR fast-path
+//! tier); `EXPERIMENTS.md` logs paper-vs-measured results and the
+//! `BENCH_kernels.json` perf trajectory.
 //!
 //! The `runtime` module (PJRT execution of AOT artifacts) needs the
 //! heavyweight `xla` bindings and is gated behind the `pjrt` feature so

@@ -5,7 +5,7 @@ use fullpack::cli::{Args, USAGE};
 use fullpack::coordinator::{BatcherConfig, Engine, EngineConfig, RouterConfig};
 use fullpack::costmodel::Method;
 use fullpack::figures::{e2e, ondevice, sweeps, SIZES, SIZES_QUICK};
-use fullpack::kernels::KernelRegistry;
+use fullpack::kernels::{GemvKernel, KernelRegistry};
 use fullpack::models::{DeepSpeech, DeepSpeechConfig};
 use fullpack::pack::Variant;
 #[cfg(feature = "pjrt")]

@@ -1,6 +1,8 @@
 //! Criterion-less benchmark harness (criterion is unavailable offline —
-//! DESIGN.md §7): warmup + timed iterations, robust statistics, and the
-//! fixed-width table printer the figure harnesses share.
+//! DESIGN.md §7): warmup + timed iterations, robust statistics, the
+//! fixed-width table printer the figure harnesses share, and the
+//! `BENCH_kernels.json` emitter that records the repo's measured perf
+//! trajectory (EXPERIMENTS.md reads its "measured" column from it).
 
 use std::time::Instant;
 
@@ -117,9 +119,95 @@ impl Table {
     }
 }
 
+/// One kernel measurement destined for `BENCH_kernels.json`: method ×
+/// variant × shape → time.  `ns_per_elem` is the headline metric the
+/// perf trajectory tracks (EXPERIMENTS.md).
+#[derive(Debug, Clone)]
+pub struct BenchRecord {
+    /// registry kernel name (`fullpack-w4a8-swar`, ...)
+    pub kernel: String,
+    /// data variant the kernel ran (`w4a8`, ...)
+    pub variant: String,
+    /// output rows
+    pub z: usize,
+    /// logical depth
+    pub k: usize,
+    /// median wall-clock nanoseconds of one call
+    pub median_ns: f64,
+    /// timed iterations behind the median (0 = modeled, not measured)
+    pub iters: usize,
+}
+
+impl BenchRecord {
+    /// Nanoseconds per logical matrix element — the shape-normalized
+    /// metric `BENCH_kernels.json` records.
+    pub fn ns_per_elem(&self) -> f64 {
+        self.median_ns / (self.z * self.k) as f64
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render the `BENCH_kernels.json` document (schema `bench-kernels/v1`).
+/// `source` says how the numbers were obtained (`"measured"` from a
+/// bench run, `"costmodel-portable"` for modeled placeholders); `host`
+/// and `note` are free-form provenance.
+pub fn bench_records_json(source: &str, host: &str, note: &str, records: &[BenchRecord]) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"schema\": \"bench-kernels/v1\",\n");
+    out.push_str(&format!("  \"source\": \"{}\",\n", json_escape(source)));
+    out.push_str(&format!("  \"host\": \"{}\",\n", json_escape(host)));
+    out.push_str(&format!("  \"note\": \"{}\",\n", json_escape(note)));
+    out.push_str("  \"records\": [\n");
+    for (i, r) in records.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"kernel\": \"{}\", \"variant\": \"{}\", \"z\": {}, \"k\": {}, \
+             \"median_ns\": {:.1}, \"ns_per_elem\": {:.6}, \"iters\": {}}}{}\n",
+            json_escape(&r.kernel),
+            json_escape(&r.variant),
+            r.z,
+            r.k,
+            r.median_ns,
+            r.ns_per_elem(),
+            r.iters,
+            if i + 1 < records.len() { "," } else { "" },
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// Write [`bench_records_json`] to `path` (the repo convention is
+/// `BENCH_kernels.json` at the repository root).
+pub fn write_bench_json(
+    path: &str,
+    source: &str,
+    host: &str,
+    note: &str,
+    records: &[BenchRecord],
+) -> std::io::Result<()> {
+    std::fs::write(path, bench_records_json(source, host, note, records))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::json::Json;
 
     #[test]
     fn bench_returns_sane_stats() {
@@ -159,5 +247,60 @@ mod tests {
     fn table_rejects_bad_rows() {
         let mut t = Table::new(vec!["a", "b"]);
         t.row(vec!["only-one"]);
+    }
+
+    #[test]
+    fn bench_json_roundtrips_through_the_parser() {
+        let records = vec![
+            BenchRecord {
+                kernel: "fullpack-w4a8".into(),
+                variant: "w4a8".into(),
+                z: 2048,
+                k: 2048,
+                median_ns: 1.5e6,
+                iters: 40,
+            },
+            BenchRecord {
+                kernel: "fullpack-w4a8-swar".into(),
+                variant: "w4a8".into(),
+                z: 2048,
+                k: 2048,
+                median_ns: 7.5e5,
+                iters: 80,
+            },
+        ];
+        let text = bench_records_json("measured", "test-host", "a \"note\"", &records);
+        let j = Json::parse(&text).expect("emitted JSON parses");
+        assert_eq!(j.get("schema").unwrap().as_str(), Some("bench-kernels/v1"));
+        assert_eq!(j.get("source").unwrap().as_str(), Some("measured"));
+        assert_eq!(j.get("note").unwrap().as_str(), Some("a \"note\""));
+        let recs = j.get("records").unwrap().as_arr().unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[1].get("kernel").unwrap().as_str(), Some("fullpack-w4a8-swar"));
+        assert_eq!(recs[0].get("z").unwrap().as_usize(), Some(2048));
+        let npe = recs[0].get("ns_per_elem").unwrap().as_f64().unwrap();
+        assert!((npe - 1.5e6 / (2048.0 * 2048.0)).abs() < 1e-6);
+        // the headline ratio is recomputable from the records
+        let r0 = recs[0].get("median_ns").unwrap().as_f64().unwrap();
+        let r1 = recs[1].get("median_ns").unwrap().as_f64().unwrap();
+        assert!((r0 / r1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bench_json_writes_to_disk() {
+        let path = std::env::temp_dir().join("fullpack_bench_test.json");
+        let path = path.to_str().unwrap().to_string();
+        let rec = vec![BenchRecord {
+            kernel: "ruy-w8a8".into(),
+            variant: "w8a8".into(),
+            z: 16,
+            k: 16,
+            median_ns: 100.0,
+            iters: 3,
+        }];
+        write_bench_json(&path, "measured", "h", "", &rec).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(Json::parse(&text).is_ok());
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -9,10 +9,16 @@
 
 use fullpack::coordinator::{OpDesc, Router, RouterConfig};
 use fullpack::kernels::testutil::{oracle_gemv, pad_rows, rngvals};
-use fullpack::kernels::{KernelRegistry, LayerShape, PlanBuilder, SelectPolicy};
+use fullpack::kernels::{
+    ActVec, GemvKernel, KernelRegistry, LayerShape, PlanBuilder, RowParallel, SelectPolicy,
+};
 use fullpack::pack::Variant;
 
 const DEPTHS: [usize; 4] = [1, 17, 127, 129];
+
+/// SWAR-tier depth sweep: chunk-aligned and unaligned, below/above one
+/// packed group, plus the `w8a8` scalar-tail depths (`k % 8 != 0`).
+const SWAR_DEPTHS: [usize; 9] = [1, 7, 8, 9, 63, 64, 65, 127, 129];
 
 fn variants_under_test() -> Vec<Variant> {
     let mut v = Variant::PAPER_VARIANTS.to_vec();
@@ -56,9 +62,103 @@ fn every_kernel_matches_oracle_on_supported_variants() {
             covered += 1;
         }
     }
-    // floor: 9 fullpack + 3 naive + 3 ulppack + (4 i8 + 3 f32) × w8a8;
-    // new backends only grow the count
-    assert!(covered >= 22, "kernel×variant coverage shrank: {covered}");
+    // floor: 9 fullpack + 4 swar + 3 naive + 3 ulppack + (4 i8 + 3 f32)
+    // × w8a8; new backends only grow the count
+    assert!(covered >= 26, "kernel×variant coverage shrank: {covered}");
+}
+
+/// Every `*-swar` backend is bit-exact with the scalar oracle across
+/// its supported variants at chunk-aligned and unaligned depths,
+/// including the `w8a8` tail-fallback path (`k % 8 != 0`).
+#[test]
+fn swar_backends_match_oracle_at_unaligned_depths() {
+    let reg = KernelRegistry::global();
+    let mut found = 0usize;
+    for kernel in reg.iter().filter(|k| k.name().ends_with("-swar")) {
+        for variant in variants_under_test() {
+            if !kernel.supports(variant) {
+                continue;
+            }
+            for (i, k) in SWAR_DEPTHS.iter().enumerate() {
+                check(kernel.name(), variant, 8, *k, 5000 + i as u64);
+            }
+            found += 1;
+        }
+    }
+    assert!(found >= 4, "SWAR backend coverage shrank: {found}");
+}
+
+/// The SWAR tier agrees bit-for-bit with its staged scalar sibling (not
+/// just the oracle) — the two tiers are interchangeable per plan.
+#[test]
+fn swar_and_scalar_tiers_agree_exactly() {
+    for (scalar, swar, vname) in [
+        ("fullpack-w4a8", "fullpack-w4a8-swar", "w4a8"),
+        ("fullpack-w2a8", "fullpack-w2a8-swar", "w2a8"),
+        ("fullpack-w1a8", "fullpack-w1a8-swar", "w1a8"),
+        ("ruy-w8a8", "fullpack-w8a8-swar", "w8a8"),
+    ] {
+        let v = Variant::parse(vname).unwrap();
+        for k in [9usize, 64, 129] {
+            let z = 16;
+            let w = rngvals(v.w, z * k, 61 + k as u64);
+            let a = rngvals(v.a, k, 62 + k as u64);
+            let run = |name: &str| -> Vec<i32> {
+                let plan = PlanBuilder::new(LayerShape { z, k, batch: 1 }, v)
+                    .policy(SelectPolicy::Explicit(name.to_string()))
+                    .build()
+                    .unwrap();
+                let wts = plan.prepare_weights(&w).unwrap();
+                let mut out = vec![0i32; z];
+                plan.execute(&wts, &a, &mut out).unwrap();
+                out
+            };
+            assert_eq!(run(scalar), run(swar), "{vname} k={k}");
+        }
+    }
+}
+
+/// `RowParallel` composes over the SWAR tier: sharded execution is
+/// bit-identical to the serial call and to the oracle.
+#[test]
+fn row_parallel_composes_over_swar() {
+    let reg = KernelRegistry::global();
+    let base = reg.get("fullpack-w4a8-swar").unwrap();
+    let (z, k) = (1024usize, 160usize);
+    let v = Variant::parse("w4a8").unwrap();
+    let w = rngvals(v.w, z * k, 81);
+    let mut a = rngvals(v.a, k, 82);
+    a.resize(v.padded_depth(k), 0);
+    let wts = base.prepare(&w, z, k).unwrap();
+    let mut serial = vec![0i32; z];
+    base.gemv_at(&wts, ActVec::I8(&a), &mut serial, 0).unwrap();
+    for threads in [2usize, 4] {
+        let par = RowParallel::new(base.clone(), threads);
+        let mut out = vec![0i32; z];
+        par.gemv_at(&wts, ActVec::I8(&a), &mut out, 0).unwrap();
+        assert_eq!(out, serial, "threads={threads}");
+    }
+    let kp = v.padded_depth(k);
+    let wp = pad_rows(&w, z, k, kp);
+    assert_eq!(serial, oracle_gemv(&wp, &a, z, kp));
+}
+
+/// The serving router's `prefer_swar` knob routes deep GEMV ops to the
+/// tier while batched/8-bit ops keep the baseline path.
+#[test]
+fn router_prefer_swar_routes_to_the_tier() {
+    let r = Router::new(RouterConfig { prefer_swar: true, ..Default::default() });
+    let op = |batch: usize, v: &str| OpDesc {
+        batch,
+        z: 2048,
+        k: 2048,
+        variant: Variant::parse(v).unwrap(),
+    };
+    assert_eq!(r.plan(&op(1, "w1a8")).unwrap().kernel_name(), "fullpack-w1a8-swar");
+    assert_eq!(r.plan(&op(16, "w1a8")).unwrap().kernel_name(), "ruy-w8a8");
+    assert_eq!(r.plan(&op(1, "w4a4")).unwrap().kernel_name(), "fullpack-w4a4");
+    let (gemv, gemm) = r.counts();
+    assert_eq!((gemv, gemm), (2, 1));
 }
 
 #[test]
