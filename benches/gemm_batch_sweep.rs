@@ -1,0 +1,122 @@
+//! Bench: the GEMM tier's batch sweep (DESIGN.md §9) — one batched
+//! `fullpack-*-gemm` call vs `batch` repeated FullPack GEMVs vs the
+//! paper's Ruy-like W8A8 GEMM protocol, across flush sizes.  The
+//! crossover batch (first size where the batched call wins) feeds the
+//! EXPERIMENTS.md GEMM-vs-repeated-GEMV table; the raw records go to
+//! `BENCH_gemm.json` (schema `bench-gemm/v1`).  Running this bench on a
+//! real host replaces the committed cost-model placeholder with
+//! measured numbers.
+//!
+//! Run: `cargo bench --bench gemm_batch_sweep` (QUICK=1 for less
+//! sampling; BENCH_OUT=path to redirect the JSON).
+
+use fullpack::kernels::testutil::rngvals;
+use fullpack::kernels::{LayerShape, PlanBuilder, SelectPolicy};
+use fullpack::pack::{BitWidth, Variant};
+use fullpack::util::bench::{bench, write_gemm_bench_json, GemmBenchRecord, Table};
+
+const VARIANTS: [&str; 3] = ["w4a8", "w2a8", "w1a8"];
+const BATCHES: [usize; 6] = [1, 2, 4, 8, 16, 32];
+
+fn main() {
+    let quick = std::env::var("QUICK").is_ok();
+    let ms = if quick { 8 } else { 50 };
+    let (z, k) = (1024usize, 2048usize);
+    let mut records: Vec<GemmBenchRecord> = Vec::new();
+    for vname in VARIANTS {
+        let v = Variant::parse(vname).unwrap();
+        println!("\n== {vname} {z}x{k} ==");
+        let mut t = Table::new(vec![
+            "batch",
+            "gemm us",
+            "repeated us",
+            "ruy-like us",
+            "gemm/col gain",
+        ]);
+        // one weight matrix, three execution protocols
+        let w = rngvals(v.w, z * k, 3);
+        let gemm_plan = PlanBuilder::new(LayerShape { z, k, batch: 2 }, v)
+            .prefer_gemm(true)
+            .build()
+            .unwrap();
+        assert_eq!(gemm_plan.kernel_name(), format!("fullpack-{vname}-gemm"));
+        let gemv_plan = PlanBuilder::new(LayerShape { z, k, batch: 1 }, v).build().unwrap();
+        let ruy_plan = PlanBuilder::new(LayerShape { z, k, batch: 2 }, v)
+            .policy(SelectPolicy::Explicit("ruy-like-w8a8-gemm".into()))
+            .build()
+            .unwrap();
+        let wg = gemm_plan.prepare_weights(&w).unwrap();
+        let wv = gemv_plan.prepare_weights(&w).unwrap();
+        let wr = ruy_plan.prepare_weights(&w).unwrap();
+        let mut crossover: Option<usize> = None;
+        for batch in BATCHES {
+            let flat: Vec<i8> = (0..batch)
+                .flat_map(|c| rngvals(BitWidth::B8, k, 10 + c as u64))
+                .collect();
+            let mut out = vec![0i32; z * batch];
+            let mg = bench(
+                || gemm_plan.execute_batch(&wg, &flat, batch, &mut out).unwrap(),
+                2,
+                ms,
+                100_000,
+            );
+            let mr = bench(
+                || {
+                    for c in 0..batch {
+                        gemv_plan
+                            .execute(&wv, &flat[c * k..(c + 1) * k], &mut out[c * z..(c + 1) * z])
+                            .unwrap();
+                    }
+                },
+                2,
+                ms,
+                100_000,
+            );
+            let mruy = bench(
+                || ruy_plan.execute_batch(&wr, &flat, batch, &mut out).unwrap(),
+                2,
+                ms,
+                100_000,
+            );
+            for (name, m) in [
+                (format!("fullpack-{vname}-gemm"), &mg),
+                (format!("repeated:fullpack-{vname}"), &mr),
+                ("ruy-like-w8a8-gemm".to_string(), &mruy),
+            ] {
+                records.push(GemmBenchRecord {
+                    kernel: name,
+                    variant: vname.to_string(),
+                    z,
+                    k,
+                    batch,
+                    median_ns: m.median_ns,
+                    iters: m.iters,
+                });
+            }
+            if crossover.is_none() && batch >= 2 && mg.median_ns < mr.median_ns {
+                crossover = Some(batch);
+            }
+            t.row(vec![
+                batch.to_string(),
+                format!("{:.1}", mg.micros()),
+                format!("{:.1}", mr.micros()),
+                format!("{:.1}", mruy.micros()),
+                format!("{:.2}x", mr.median_ns / mg.median_ns),
+            ]);
+        }
+        t.print();
+        match crossover {
+            Some(b) => println!("crossover: batched GEMM wins from batch {b}"),
+            None => println!("crossover: repeated GEMV stayed ahead up to batch 32"),
+        }
+    }
+    let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_gemm.json".to_string());
+    let host = format!("{}-{}", std::env::consts::ARCH, std::env::consts::OS);
+    let note = "measured by benches/gemm_batch_sweep.rs; ns_per_col = median_ns / batch; \
+                repeated:* rows time `batch` back-to-back GEMV calls on the same weights; \
+                see EXPERIMENTS.md";
+    match write_gemm_bench_json(&out, "measured", &host, note, &records) {
+        Ok(()) => println!("\nwrote {} records to {out}", records.len()),
+        Err(e) => eprintln!("\nfailed to write {out}: {e}"),
+    }
+}

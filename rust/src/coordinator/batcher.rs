@@ -208,4 +208,73 @@ mod tests {
         let d = b.time_to_deadline().unwrap();
         assert!(d <= Duration::from_millis(50));
     }
+
+    #[test]
+    fn full_takes_precedence_over_deadline() {
+        // a batch that is both full AND past its deadline reports Full —
+        // metrics must attribute the flush to capacity, not latency
+        let mut b = Batcher::new(cfg(2, 1, 100));
+        b.push(1).unwrap();
+        b.push(2).unwrap();
+        std::thread::sleep(Duration::from_millis(3));
+        let (_, reason) = b.pop_batch(false).unwrap();
+        assert_eq!(reason, FlushReason::Full);
+    }
+
+    #[test]
+    fn drained_reported_only_for_forced_early_flushes() {
+        // force=true on a partial, non-expired batch -> Drained; the
+        // same force on an expired batch still reports Deadline
+        let mut b = Batcher::new(cfg(16, 10_000, 100));
+        b.push(1).unwrap();
+        assert_eq!(b.pop_batch(true).unwrap().1, FlushReason::Drained);
+        let mut b = Batcher::new(cfg(16, 1, 100));
+        b.push(1).unwrap();
+        std::thread::sleep(Duration::from_millis(3));
+        assert_eq!(b.pop_batch(true).unwrap().1, FlushReason::Deadline);
+    }
+
+    #[test]
+    fn shutdown_drain_empties_in_order_across_flushes() {
+        // the worker's shutdown path: repeated forced pops drain the
+        // whole queue FIFO in max_batch-sized chunks, then yield None
+        let mut b = Batcher::new(cfg(3, 10_000, 100));
+        for i in 0..7 {
+            b.push(i).unwrap();
+        }
+        let mut drained = Vec::new();
+        while let Some((batch, reason)) = b.pop_batch(true) {
+            assert!(batch.len() <= 3);
+            assert!(matches!(reason, FlushReason::Full | FlushReason::Drained));
+            drained.extend(batch);
+        }
+        assert_eq!(drained, (0..7).collect::<Vec<_>>());
+        assert!(b.is_empty());
+        assert!(b.pop_batch(true).is_none());
+    }
+
+    #[test]
+    fn backpressure_recovers_after_drain() {
+        // a rejected push leaves the queue intact; capacity freed by a
+        // flush is immediately reusable
+        let mut b = Batcher::new(cfg(2, 10_000, 2));
+        b.push(1).unwrap();
+        b.push(2).unwrap();
+        assert_eq!(b.push(3), Err(3));
+        assert_eq!(b.len(), 2);
+        let (batch, _) = b.pop_batch(false).unwrap(); // full -> flushes
+        assert_eq!(batch, vec![1, 2]);
+        b.push(4).unwrap();
+        assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn expired_deadline_saturates_to_zero() {
+        let mut b = Batcher::new(cfg(16, 1, 10));
+        b.push(0).unwrap();
+        std::thread::sleep(Duration::from_millis(3));
+        // saturating_sub: an expired deadline reports zero, not a panic
+        assert_eq!(b.time_to_deadline().unwrap(), Duration::ZERO);
+        assert!(b.ready());
+    }
 }

@@ -7,7 +7,7 @@
 //! {
 //!   "workers": 4,
 //!   "batcher": { "max_batch": 16, "max_wait_ms": 2, "max_queue": 1024 },
-//!   "router":  { "gemv_max_batch": 1, "disable_fullpack": false },
+//!   "router":  { "gemv_max_batch": 1, "disable_fullpack": false, "prefer_gemm": false },
 //!   "models": [
 //!     { "name": "deepspeech", "variant": "w4a8", "size": "full", "seed": 7 }
 //!   ]
@@ -71,6 +71,7 @@ impl FileConfig {
                 gemv_max_batch: usize_at(r, "gemv_max_batch", defaults.router.gemv_max_batch),
                 disable_fullpack: matches!(r.get("disable_fullpack"), Some(Json::Bool(true))),
                 prefer_swar: matches!(r.get("prefer_swar"), Some(Json::Bool(true))),
+                prefer_gemm: matches!(r.get("prefer_gemm"), Some(Json::Bool(true))),
             };
         }
 
@@ -116,7 +117,8 @@ mod tests {
             r#"{
               "workers": 4,
               "batcher": {"max_batch": 8, "max_wait_ms": 5, "max_queue": 32},
-              "router": {"gemv_max_batch": 2, "disable_fullpack": true, "prefer_swar": true},
+              "router": {"gemv_max_batch": 2, "disable_fullpack": true, "prefer_swar": true,
+                         "prefer_gemm": true},
               "models": [
                 {"name": "ds", "variant": "w2a2", "size": "tiny", "seed": 3},
                 {"name": "ds-full", "variant": "w4a8"}
@@ -130,6 +132,7 @@ mod tests {
         assert_eq!(cfg.engine.router.gemv_max_batch, 2);
         assert!(cfg.engine.router.disable_fullpack);
         assert!(cfg.engine.router.prefer_swar);
+        assert!(cfg.engine.router.prefer_gemm);
         assert_eq!(cfg.models.len(), 2);
         assert_eq!(cfg.models[0].variant, Variant::parse("w2a2").unwrap());
         assert_eq!(cfg.models[0].config, DeepSpeechConfig::TINY);

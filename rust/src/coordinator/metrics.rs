@@ -19,6 +19,16 @@ pub struct Metrics {
     pub completed: AtomicU64,
     /// requests that failed
     pub errors: AtomicU64,
+    /// multi-request GEMM dispatches: flushed batches of ≥2 same-model
+    /// requests executed as one batched forward (single
+    /// `GemmKernel::gemm` call per FC layer)
+    pub batched_dispatches: AtomicU64,
+    /// requests served through a multi-request GEMM dispatch
+    pub batched_requests: AtomicU64,
+    /// requests served individually (singleton flushes, per-request
+    /// errors); `batched_requests + singleton_requests` equals the
+    /// total requests handed to workers
+    pub singleton_requests: AtomicU64,
     latency_buckets: [AtomicU64; 17],
     latency_sum_us: AtomicU64,
     started: Mutex<Option<Instant>>,
@@ -30,6 +40,9 @@ impl Default for Metrics {
             requests: AtomicU64::new(0),
             completed: AtomicU64::new(0),
             errors: AtomicU64::new(0),
+            batched_dispatches: AtomicU64::new(0),
+            batched_requests: AtomicU64::new(0),
+            singleton_requests: AtomicU64::new(0),
             latency_buckets: Default::default(),
             latency_sum_us: AtomicU64::new(0),
             started: Mutex::new(None),
@@ -110,15 +123,25 @@ impl Metrics {
             }
         };
         format!(
-            "requests={} completed={} errors={} mean={:.0}us p50<={} p95<={} rps={:.1}",
+            "requests={} completed={} errors={} batched={}/{} singleton={} \
+             mean={:.0}us p50<={} p95<={} rps={:.1}",
             self.requests.load(Relaxed),
             self.completed.load(Relaxed),
             self.errors.load(Relaxed),
+            self.batched_requests.load(Relaxed),
+            self.batched_dispatches.load(Relaxed),
+            self.singleton_requests.load(Relaxed),
             self.mean_latency_us(),
             q(self.latency_quantile_us(0.5)),
             q(self.latency_quantile_us(0.95)),
             self.throughput_rps(),
         )
+    }
+
+    /// `(batched_requests, singleton_requests)` — the dispatch-path
+    /// split; their sum equals the requests handed to workers.
+    pub fn dispatch_counts(&self) -> (u64, u64) {
+        (self.batched_requests.load(Relaxed), self.singleton_requests.load(Relaxed))
     }
 }
 
@@ -146,6 +169,18 @@ mod tests {
         assert_eq!(m.latency_quantile_us(0.99), 0);
         assert_eq!(m.mean_latency_us(), 0.0);
         assert_eq!(m.throughput_rps(), 0.0);
+    }
+
+    #[test]
+    fn dispatch_counts_and_summary() {
+        let m = Metrics::default();
+        m.batched_dispatches.fetch_add(1, Relaxed);
+        m.batched_requests.fetch_add(3, Relaxed);
+        m.singleton_requests.fetch_add(2, Relaxed);
+        assert_eq!(m.dispatch_counts(), (3, 2));
+        let s = m.summary();
+        assert!(s.contains("batched=3/1"), "{s}");
+        assert!(s.contains("singleton=2"), "{s}");
     }
 
     #[test]

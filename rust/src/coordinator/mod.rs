@@ -1,7 +1,14 @@
 //! L3 serving engine — the coordinator: request queue → dynamic batcher
 //! → worker pool → per-layer routed execution (FullPack GEMV for
-//! single-batch LSTM steps, Ruy-like GEMM for the batched FC stack),
-//! with metrics and graceful shutdown.
+//! single-batch LSTM steps, GEMM-tier backends for the batched FC
+//! stack), with metrics and graceful shutdown.
+//!
+//! When the batcher flushes ≥2 requests for the same model, the worker
+//! executes them as **one** batched forward — each FC layer becomes a
+//! single `GemmKernel::gemm` call over `n · time_steps` columns, and
+//! per-request outputs are scattered back to their reply channels
+//! (DESIGN.md §9).  [`Metrics`] records the batched-vs-singleton
+//! dispatch split.
 //!
 //! Python never appears here: models execute on the native Rust kernels
 //! or through AOT-compiled PJRT artifacts (`crate::runtime`).
@@ -178,50 +185,144 @@ fn worker_loop(s: Arc<Shared>) {
             }
         };
         let Some(batch) = batch else { return };
-        for (req, reply) in batch {
-            let result = process(&s, &req);
-            if result.is_err() {
+        dispatch_flush(&s, batch);
+    }
+}
+
+/// Serve one flushed batch: same-model runs of ≥2 valid requests are
+/// executed as a single batched forward (one `GemmKernel::gemm` call
+/// per FC layer — the batcher's throughput win); everything else takes
+/// the per-request path.  Every request is counted exactly once as
+/// batched or singleton.
+fn dispatch_flush(s: &Arc<Shared>, batch: Vec<(Request, Reply)>) {
+    // group by model, preserving arrival order within each group
+    let mut groups: Vec<(String, Vec<(Request, Reply)>)> = Vec::new();
+    for (req, reply) in batch {
+        match groups.iter_mut().find(|(m, _)| *m == req.model) {
+            Some((_, v)) => v.push((req, reply)),
+            None => groups.push((req.model.clone(), vec![(req, reply)])),
+        }
+    }
+    for (name, items) in groups {
+        let model = s.models.read().unwrap().get(&name).cloned();
+        let Some(model) = model else {
+            for (req, reply) in items {
+                s.metrics.singleton_requests.fetch_add(1, Relaxed);
                 s.metrics.errors.fetch_add(1, Relaxed);
+                let _ = reply.send(Err(anyhow!("unknown model {:?}", req.model)));
             }
-            let _ = reply.send(result);
+            continue;
+        };
+        // shape-validate up front; invalid requests error individually
+        // and never poison the group's GEMM
+        let expected = model.config.time_steps * model.config.n_input;
+        let (valid, invalid): (Vec<_>, Vec<_>) =
+            items.into_iter().partition(|(req, _)| req.frames.len() == expected);
+        for (req, reply) in invalid {
+            s.metrics.singleton_requests.fetch_add(1, Relaxed);
+            s.metrics.errors.fetch_add(1, Relaxed);
+            let _ = reply.send(Err(anyhow!(
+                "frames len {} != time_steps*n_input {expected}",
+                req.frames.len()
+            )));
+        }
+        if valid.len() >= 2 {
+            process_group(s, &model, valid);
+        } else {
+            for (req, reply) in valid {
+                s.metrics.singleton_requests.fetch_add(1, Relaxed);
+                let result = process_one(s, &model, &req);
+                if result.is_err() {
+                    s.metrics.errors.fetch_add(1, Relaxed);
+                }
+                let _ = reply.send(result);
+            }
         }
     }
 }
 
-fn process(s: &Shared, req: &Request) -> Result<Response> {
-    let model = s
-        .models
-        .read()
-        .unwrap()
-        .get(&req.model)
-        .cloned()
-        .ok_or_else(|| anyhow!("unknown model {:?}", req.model))?;
-    let queue_ns = req.arrived.elapsed().as_nanos();
-    let expected = model.config.time_steps * model.config.n_input;
-    if req.frames.len() != expected {
-        return Err(anyhow!(
-            "frames len {} != time_steps*n_input {}",
-            req.frames.len(),
-            expected
-        ));
-    }
-    // route per layer (stats — the model's own plans apply the identical
-    // policy, mirroring the paper's §4.6 split); a routing failure is a
-    // real error, not a silently skipped counter
+/// Route-classify every layer of one dispatch (stats — the model's own
+/// plans apply the identical policy, mirroring the paper's §4.6 split);
+/// a routing failure is a real error, not a silently skipped counter.
+/// `group` is the number of requests sharing the dispatch: the FC
+/// layers flush as one `group · time_steps`-column GEMM, while each
+/// request's LSTM scan stays a single-batch GEMV stream.
+fn classify_layers(s: &Shared, model: &DeepSpeech, group: usize) -> Result<()> {
+    // FC layers hold W8A8 weights regardless of the model variant (the
+    // paper's protocol, hard-built in DeepSpeech::new) — classify them
+    // as what they actually execute, so the stats can never advertise
+    // a backend the model's own plans did not run
+    let w8a8 = crate::pack::Variant::new(crate::pack::BitWidth::B8, crate::pack::BitWidth::B8);
     for layer in &model.layers {
-        let batch = match layer.kind {
-            crate::models::LayerKind::FcBatch => model.config.time_steps,
-            crate::models::LayerKind::LstmStep => 1,
-        };
-        s.router
-            .classify(&OpDesc { batch, z: layer.z, k: layer.k, variant: model.variant })
-            .map_err(|e| anyhow!("routing layer {}: {e}", layer.name))?;
+        match layer.kind {
+            crate::models::LayerKind::FcBatch => {
+                let op = OpDesc {
+                    batch: group * model.config.time_steps,
+                    z: layer.z,
+                    k: layer.k,
+                    variant: w8a8,
+                };
+                s.router
+                    .classify(&op)
+                    .map_err(|e| anyhow!("routing layer {}: {e}", layer.name))?;
+            }
+            crate::models::LayerKind::LstmStep => {
+                let op =
+                    OpDesc { batch: 1, z: layer.z, k: layer.k, variant: model.variant };
+                for _ in 0..group {
+                    s.router
+                        .classify(&op)
+                        .map_err(|e| anyhow!("routing layer {}: {e}", layer.name))?;
+                }
+            }
+        }
     }
+    Ok(())
+}
+
+/// The per-request path (model already resolved and shape-validated).
+fn process_one(s: &Shared, model: &DeepSpeech, req: &Request) -> Result<Response> {
+    let queue_ns = req.arrived.elapsed().as_nanos();
+    classify_layers(s, model, 1)?;
     let t0 = Instant::now();
     let (logits, layer_times) = model.forward_timed(&req.frames);
     let total_ns = queue_ns + t0.elapsed().as_nanos();
     s.metrics.observe_latency_us((total_ns / 1_000) as u64);
     Ok(Response { id: req.id, logits, layer_times, queue_ns, total_ns })
+}
+
+/// The multi-request path: one batched forward for the whole group,
+/// per-request outputs scattered back to their reply channels.
+fn process_group(s: &Shared, model: &DeepSpeech, items: Vec<(Request, Reply)>) {
+    let n = items.len();
+    if let Err(e) = classify_layers(s, model, n) {
+        // no GEMM was dispatched: these count as per-request errors on
+        // the singleton side, keeping batched_requests true to its
+        // "served through a batched dispatch" meaning
+        let msg = e.to_string();
+        s.metrics.singleton_requests.fetch_add(n as u64, Relaxed);
+        s.metrics.errors.fetch_add(n as u64, Relaxed);
+        for (_, reply) in items {
+            let _ = reply.send(Err(anyhow!("{msg}")));
+        }
+        return;
+    }
+    s.metrics.batched_requests.fetch_add(n as u64, Relaxed);
+    let queue_ns: Vec<u128> = items.iter().map(|(r, _)| r.arrived.elapsed().as_nanos()).collect();
+    let t0 = Instant::now();
+    let results = {
+        let frame_refs: Vec<&[f32]> = items.iter().map(|(r, _)| r.frames.as_slice()).collect();
+        model.forward_batch(&frame_refs)
+    };
+    let compute_ns = t0.elapsed().as_nanos();
+    s.metrics.batched_dispatches.fetch_add(1, Relaxed);
+    for (((req, reply), (logits, layer_times)), q) in
+        items.into_iter().zip(results).zip(queue_ns)
+    {
+        let total_ns = q + compute_ns;
+        s.metrics.observe_latency_us((total_ns / 1_000) as u64);
+        let _ = reply.send(Ok(Response { id: req.id, logits, layer_times, queue_ns: q, total_ns }));
+    }
 }
 
 #[cfg(test)]
@@ -262,6 +363,8 @@ mod tests {
         let (gemv, gemm) = e.router().counts();
         assert_eq!(gemv, 1); // the LSTM layer
         assert_eq!(gemm, 5); // the five FC layers
+        // a lone request is a singleton dispatch
+        assert_eq!(e.metrics().dispatch_counts(), (0, 1));
     }
 
     #[test]
@@ -290,6 +393,9 @@ mod tests {
         assert_eq!(ok, 16);
         assert_eq!(e.metrics().completed.load(Relaxed), 16);
         assert!(e.metrics().throughput_rps() > 0.0);
+        // every request dispatched exactly once, batched or singleton
+        let (batched, singleton) = e.metrics().dispatch_counts();
+        assert_eq!(batched + singleton, 16);
     }
 
     #[test]

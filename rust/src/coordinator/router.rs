@@ -9,7 +9,7 @@
 //! `KernelRegistry` (DESIGN.md §3).
 
 use super::request::OpDesc;
-use crate::kernels::{GemvKernel, KernelError, LayerShape, Plan, PlanBuilder, SelectPolicy};
+use crate::kernels::{KernelError, LayerShape, Plan, PlanBuilder, SelectPolicy};
 
 /// Routing policy knobs.
 #[derive(Debug, Clone, Copy)]
@@ -24,11 +24,25 @@ pub struct RouterConfig {
     /// Ruy path regardless — `fullpack-w8a8-swar` is reachable only via
     /// `SelectPolicy::Explicit` or `CostModel`.
     pub prefer_swar: bool,
+    /// route batched *sub-byte* ops to the native `fullpack-*-gemm`
+    /// backend instead of widening onto the Ruy-like W8A8 GEMM rival
+    /// (DESIGN.md §9).  Off by default, preserving the paper's "route
+    /// GEMM to Ruy" protocol.  Note the stock DeepSpeech model's FC
+    /// stack holds W8A8 weights by construction (and is classified as
+    /// such), so this knob changes execution only for sub-byte batched
+    /// ops planned through the router — not the built-in model's FC
+    /// layers.
+    pub prefer_gemm: bool,
 }
 
 impl Default for RouterConfig {
     fn default() -> Self {
-        RouterConfig { gemv_max_batch: 1, disable_fullpack: false, prefer_swar: false }
+        RouterConfig {
+            gemv_max_batch: 1,
+            disable_fullpack: false,
+            prefer_swar: false,
+            prefer_gemm: false,
+        }
     }
 }
 
@@ -58,15 +72,19 @@ impl Router {
         PlanBuilder::new(LayerShape { z: op.z, k: op.k, batch: op.batch }, op.variant)
             .gemv_max_batch(self.config.gemv_max_batch)
             .prefer_swar(self.config.prefer_swar)
+            .prefer_gemm(self.config.prefer_gemm)
             .policy(policy)
     }
 
     fn count(&self, kernel_name: &str) {
         use std::sync::atomic::Ordering::Relaxed;
-        if kernel_name.starts_with("fullpack-") {
-            self.gemv_routed.fetch_add(1, Relaxed);
-        } else {
+        // the GEMM tier (any `-gemm` backend, incl. fullpack-*-gemm)
+        // counts as the batched path; FullPack GEMV/SWAR as the GEMV
+        // path; everything else is the baseline GEMM fallback
+        if kernel_name.ends_with("-gemm") || !kernel_name.starts_with("fullpack-") {
             self.gemm_routed.fetch_add(1, Relaxed);
+        } else {
+            self.gemv_routed.fetch_add(1, Relaxed);
         }
     }
 
@@ -77,12 +95,13 @@ impl Router {
         Ok(plan)
     }
 
-    /// Policy decision only: the registry kernel name this op routes to,
-    /// with counters updated but no plan (scratch, Arc) constructed —
-    /// the cheap per-request stats path.
+    /// Policy decision only: the registry kernel name this op routes to
+    /// (the GEMM backend's for batched ops), with counters updated but
+    /// no plan (scratch, Arc) constructed — the cheap per-request stats
+    /// path.
     pub fn classify(&self, op: &OpDesc) -> Result<&'static str, KernelError> {
-        let (kernel, _) = self.builder(op).select()?;
-        let name = kernel.name();
+        let sel = self.builder(op).select()?;
+        let name = sel.name();
         self.count(name);
         Ok(name)
     }
@@ -108,12 +127,30 @@ mod tests {
         let r = Router::default();
         // single-batch sub-byte LSTM step -> FullPack
         assert_eq!(r.plan(&op(1, "w4a8")).unwrap().kernel_name(), "fullpack-w4a8");
-        // batch-16 FC -> Ruy GEMM even when quantized sub-byte
-        assert_eq!(r.plan(&op(16, "w4a8")).unwrap().kernel_name(), "ruy-w8a8");
-        // 8-bit ops always take the baseline
+        // batch-16 FC -> the Ruy-like GEMM backend even when quantized
+        // sub-byte (the paper's protocol as a first-class GEMM plan)
+        let p = r.plan(&op(16, "w4a8")).unwrap();
+        assert_eq!(p.kernel_name(), "ruy-like-w8a8-gemm");
+        assert!(p.is_batched());
+        // 8-bit single-column ops take the baseline GEMV
         assert_eq!(r.plan(&op(1, "w8a8")).unwrap().kernel_name(), "ruy-w8a8");
         let (gemv, gemm) = r.counts();
         assert_eq!((gemv, gemm), (1, 2));
+    }
+
+    #[test]
+    fn prefer_gemm_promotes_flushed_subbyte_batches() {
+        let r = Router::new(RouterConfig { prefer_gemm: true, ..Default::default() });
+        // a flushed multi-request batch on sub-byte data -> native GEMM
+        let p = r.plan(&op(16, "w4a8")).unwrap();
+        assert_eq!(p.kernel_name(), "fullpack-w4a8-gemm");
+        assert!(p.is_batched() && p.is_fullpack());
+        // counted as the batched path
+        assert_eq!(r.counts().1, 1);
+        // single-column ops are untouched by the knob
+        assert_eq!(r.plan(&op(1, "w4a8")).unwrap().kernel_name(), "fullpack-w4a8");
+        // variants without a GEMM-tier entry keep the Ruy-like rival
+        assert_eq!(r.plan(&op(16, "w4a4")).unwrap().kernel_name(), "ruy-like-w8a8-gemm");
     }
 
     #[test]
@@ -132,21 +169,21 @@ mod tests {
         // variants without a SWAR backend keep the staged kernel
         assert_eq!(r.plan(&op(1, "w2a2")).unwrap().kernel_name(), "fullpack-w2a2");
         // batches still take the baseline GEMM path
-        assert_eq!(r.plan(&op(16, "w4a8")).unwrap().kernel_name(), "ruy-w8a8");
+        assert_eq!(r.plan(&op(16, "w4a8")).unwrap().kernel_name(), "ruy-like-w8a8-gemm");
     }
 
     #[test]
     fn batch_threshold() {
         let r = Router::new(RouterConfig { gemv_max_batch: 4, ..Default::default() });
         assert_eq!(r.plan(&op(4, "w2a2")).unwrap().kernel_name(), "fullpack-w2a2");
-        assert_eq!(r.plan(&op(5, "w2a2")).unwrap().kernel_name(), "ruy-w8a8");
+        assert_eq!(r.plan(&op(5, "w2a2")).unwrap().kernel_name(), "ruy-like-w8a8-gemm");
     }
 
     #[test]
     fn classify_matches_plan() {
         let r = Router::default();
         assert_eq!(r.classify(&op(1, "w4a8")).unwrap(), "fullpack-w4a8");
-        assert_eq!(r.classify(&op(16, "w4a8")).unwrap(), "ruy-w8a8");
+        assert_eq!(r.classify(&op(16, "w4a8")).unwrap(), "ruy-like-w8a8-gemm");
         let (gemv, gemm) = r.counts();
         assert_eq!((gemv, gemm), (1, 1));
     }

@@ -18,6 +18,13 @@ pub enum Method {
     /// the u64 SWAR fast-path tier over the same layout (DESIGN.md §8):
     /// vectorizer-independent bit-plane inner loops, `wXa8` variants
     FullPackSwar(Variant),
+    /// the batched FullPack GEMM extension (DESIGN.md §9): each packed
+    /// weight block is extracted once and its lanes feed every batch
+    /// column, so extraction cost amortizes as `1/batch` — the DeepGEMM
+    /// (arXiv 2304.09049) argument.  `wXa8` sub-byte variants; batch is
+    /// supplied per call ([`Method::instr_mix_gemm`],
+    /// `costmodel::simulate_gemm`)
+    FullPackGemm(Variant),
     /// Alg. 1 adjacent packing with scalar extraction (ablation)
     Naive(Variant),
     /// ULPPACK— (Won et al. 2022): spacer-lane GEMM, batch 8 per the
@@ -44,11 +51,17 @@ impl Method {
         Method::FullPackSwar(Variant::parse(v).expect("valid variant"))
     }
 
+    /// Convenience constructor: `Method::fullpack_gemm("w4a8")`.
+    pub fn fullpack_gemm(v: &str) -> Method {
+        Method::FullPackGemm(Variant::parse(v).expect("valid variant"))
+    }
+
     /// Display name matching the paper's legend.
     pub fn label(&self) -> String {
         match self {
             Method::FullPack(v) => format!("FullPack-{}", v.name().to_uppercase()),
             Method::FullPackSwar(v) => format!("FullPack-SWAR-{}", v.name().to_uppercase()),
+            Method::FullPackGemm(v) => format!("FullPack-GEMM-{}", v.name().to_uppercase()),
             Method::Naive(v) => format!("Naive-{}", v.name().to_uppercase()),
             Method::Ulppack { bits } => format!("ULPPACK-W{bits}A{bits}"),
             Method::RuyW8A8 => "Ruy-W8A8".into(),
@@ -68,6 +81,7 @@ impl Method {
         match self {
             Method::FullPack(v) => format!("fullpack-{}", v.name()),
             Method::FullPackSwar(v) => format!("fullpack-{}-swar", v.name()),
+            Method::FullPackGemm(v) => format!("fullpack-{}-gemm", v.name()),
             Method::Naive(v) => format!("naive-{}", v.name()),
             Method::Ulppack { bits } => format!("ulppack-w{bits}a{bits}"),
             Method::RuyW8A8 => "ruy-w8a8".into(),
@@ -83,16 +97,23 @@ impl Method {
 
     /// Resolve a registry kernel name to its modeled method, via the
     /// registered kernel's own `cost_method` (i.e. *derived from the
-    /// registry*, not a second hard-coded table).
+    /// registry*, not a second hard-coded table).  Checks the GEMV
+    /// namespace first, then the GEMM tier.
     pub fn from_registry(name: &str) -> Option<Method> {
-        crate::kernels::KernelRegistry::global().get(name).and_then(|k| k.cost_method())
+        let reg = crate::kernels::KernelRegistry::global();
+        reg.get(name)
+            .and_then(|k| k.cost_method())
+            .or_else(|| reg.get_gemm(name).and_then(|g| g.cost_method()))
     }
 
     /// The quantization variant of the data this method consumes (int8
     /// for the W8A8 and FP32 stand-ins, which take int8-valued inputs).
     pub fn data_variant(&self) -> Variant {
         match self {
-            Method::FullPack(v) | Method::FullPackSwar(v) | Method::Naive(v) => *v,
+            Method::FullPack(v)
+            | Method::FullPackSwar(v)
+            | Method::FullPackGemm(v)
+            | Method::Naive(v) => *v,
             Method::Ulppack { bits } => {
                 let b = BitWidth::from_u8(*bits).unwrap_or(BitWidth::B8);
                 Variant::new(b, b)
@@ -123,7 +144,10 @@ impl Method {
     /// Bytes of weight storage per row of a depth-`k` layer.
     pub fn weight_bytes_per_row(&self, k: usize) -> usize {
         match self {
-            Method::FullPack(v) | Method::Naive(v) => v.w.packed_bytes(v.padded_depth(k)),
+            // the GEMM tier shares the GEMV tier's packed layout exactly
+            Method::FullPack(v) | Method::FullPackGemm(v) | Method::Naive(v) => {
+                v.w.packed_bytes(v.padded_depth(k))
+            }
             // the SWAR tier also streams its 8-byte per-row weight-sum
             // side table (Weights::SwarPacked, DESIGN.md §8)
             Method::FullPackSwar(v) => {
@@ -138,9 +162,10 @@ impl Method {
     /// Bytes of one activation vector of logical depth `k`.
     pub fn act_bytes(&self, k: usize) -> usize {
         match self {
-            Method::FullPack(v) | Method::FullPackSwar(v) | Method::Naive(v) => {
-                v.a.packed_bytes(v.padded_depth(k))
-            }
+            Method::FullPack(v)
+            | Method::FullPackSwar(v)
+            | Method::FullPackGemm(v)
+            | Method::Naive(v) => v.a.packed_bytes(v.padded_depth(k)),
             Method::Ulppack { .. } => k,
             Method::RuyW8A8 | Method::XnnW8A8 | Method::TfliteW8A8 | Method::GemmlowpW8A8 => k,
             Method::RuyF32 | Method::XnnF32 | Method::TfliteF32 | Method::EigenF32 => 4 * k,
@@ -168,6 +193,11 @@ impl Method {
 
     /// Instruction mix of one inference call on a `z × k` layer.
     pub fn instr_mix(&self, z: usize, k: usize) -> InstrMix {
+        // the GEMM tier's single-column degenerate case (a GEMV with
+        // per-column bookkeeping); batched calls use `instr_mix_gemm`
+        if matches!(self, Method::FullPackGemm(_)) {
+            return self.instr_mix_gemm(z, k, 1);
+        }
         let zf = z as f64;
         let kf = k as f64;
         // per-row fixed overhead: accumulator setup, 16-lane reduction,
@@ -288,9 +318,60 @@ impl Method {
             Method::XnnF32 => per16(kf, 5.0, 4.0, 0.0, 0.5),
             Method::EigenF32 => per16(kf, 5.25, 4.0, 0.0, 1.0),
             Method::TfliteF32 => per16(kf, 8.0, 4.0, 4.0, 6.0),
+            Method::FullPackGemm(_) => unreachable!("handled above"),
         };
         let overhead_scale = self.batch() as f64;
         per_row.add(&row_overhead.scale(overhead_scale)).scale(zf)
+    }
+
+    /// Instruction mix of one **batched GEMM** call (`batch` columns)
+    /// on a `z × k` layer — the extraction-amortization curve.
+    ///
+    /// For [`Method::FullPackGemm`], per packed block of `G = 16·E`
+    /// elements the weight load and the `2E−1` extraction shifts are
+    /// paid **once**, while the `E` activation loads and `2E` widening
+    /// MACs are paid per column — so per-column cost falls toward the
+    /// pure-MAC floor as batch grows.  Every other method models the
+    /// paper's protocol: `batch` back-to-back single-column calls
+    /// (`instr_mix × batch`).
+    pub fn instr_mix_gemm(&self, z: usize, k: usize, batch: usize) -> InstrMix {
+        let b = batch.max(1) as f64;
+        if let Method::FullPackGemm(v) = self {
+            let e = v.w.elems_per_byte() as f64;
+            let kp = v.padded_depth(k) as f64;
+            let blocks = kp / (16.0 * e);
+            // amortized once per block: 1 weight load, 2E−1 shifts, 2
+            // bookkeeping; per column: E act loads, 2E MACs, 1
+            // accumulator-tile op, 1 column step
+            let per_row = InstrMix {
+                loads: blocks * (1.0 + b * e),
+                stores: 0.0,
+                macs: blocks * b * 2.0 * e,
+                alus: blocks * ((2.0 * e - 1.0) + b),
+                scalar: blocks * (2.0 + b),
+            };
+            let row_overhead =
+                InstrMix { loads: 0.0, stores: 1.0, macs: 0.0, alus: 4.0, scalar: 6.0 };
+            return per_row.add(&row_overhead.scale(b)).scale(z as f64);
+        }
+        self.instr_mix(z, k).scale(b)
+    }
+
+    /// [`Method::instr_mix_gemm`] adjusted for the core's
+    /// auto-vectorization effectiveness (see [`Method::instr_mix_on`]).
+    pub fn instr_mix_gemm_on(
+        &self,
+        z: usize,
+        k: usize,
+        batch: usize,
+        core: &crate::costmodel::CoreModel,
+    ) -> InstrMix {
+        let mix = self.instr_mix_gemm(z, k, batch);
+        if self.simd_staged() {
+            core.degrade_staged(mix)
+        } else {
+            mix
+        }
     }
 
     /// Does this method's inner loop depend on the compiler turning
@@ -484,6 +565,54 @@ mod tests {
         }
         assert_eq!(Method::fullpack_swar("w4a8").label(), "FullPack-SWAR-W4A8");
         assert_eq!(Method::fullpack_swar("w1a8").registry_name(), "fullpack-w1a8-swar");
+    }
+
+    #[test]
+    fn gemm_methods_share_registry_namespace_and_layout() {
+        for v in ["w4a8", "w2a8", "w1a8"] {
+            let m = Method::fullpack_gemm(v);
+            let name = m.registry_name();
+            assert_eq!(name, format!("fullpack-{v}-gemm"));
+            // resolves through the GEMM tier of the registry
+            assert_eq!(Method::from_registry(&name), Some(m), "{name}");
+            assert_eq!(m.data_variant(), Variant::parse(v).unwrap());
+            // identical packed layout to the GEMV tier
+            assert_eq!(
+                m.weight_bytes_per_row(2048),
+                Method::fullpack(v).weight_bytes_per_row(2048)
+            );
+            assert_eq!(m.act_bytes(2048), Method::fullpack(v).act_bytes(2048));
+            // staged 16-lane code, like the GEMV tier
+            assert!(m.simd_staged());
+        }
+        assert_eq!(Method::fullpack_gemm("w4a8").label(), "FullPack-GEMM-W4A8");
+        // the rival GEMM backend is modeled as repeated Ruy
+        assert_eq!(Method::from_registry("ruy-like-w8a8-gemm"), Some(Method::RuyW8A8));
+        // the oracle is deliberately unmodeled
+        assert_eq!(Method::from_registry("naive-oracle-gemm"), None);
+    }
+
+    #[test]
+    fn gemm_mix_amortizes_extraction_only() {
+        let (z, k) = (256usize, 2048usize);
+        let m = Method::fullpack_gemm("w4a8");
+        let gemv = Method::fullpack("w4a8");
+        // single column: the GEMM mix is the GEMV mix plus per-column
+        // bookkeeping — never cheaper
+        let g1 = m.instr_mix_gemm(z, k, 1);
+        assert!(g1.total() >= gemv.instr_mix(z, k).total());
+        assert_eq!(m.instr_mix(z, k), g1, "instr_mix degenerates to batch 1");
+        // batch b: MACs scale with b exactly (no MAC is amortizable)...
+        let g8 = m.instr_mix_gemm(z, k, 8);
+        assert!((g8.macs - 8.0 * g1.macs).abs() < 1e-6);
+        // ...but loads and shifts do not (weight loads + extraction are
+        // paid once per block), so total grows sublinearly
+        assert!(g8.loads < 8.0 * g1.loads);
+        assert!(g8.alus < 8.0 * g1.alus);
+        assert!(g8.total() < 8.0 * g1.total());
+        // repeated-GEMV modeling for non-GEMM methods is exactly b calls
+        let r = Method::RuyW8A8;
+        assert_eq!(r.instr_mix_gemm(z, k, 5), r.instr_mix(z, k).scale(5.0));
     }
 
     #[test]

@@ -196,7 +196,11 @@ pub fn simulate_gemv(
 /// `autovec_eff < 1` charge lane-staged methods for imperfect
 /// vectorization while the SWAR tier keeps its flat cost.
 pub fn finish(method: Method, z: usize, k: usize, h: &Hierarchy, core: &CoreModel) -> SimResult {
-    let mix = method.instr_mix_on(z, k, core);
+    combine(method.instr_mix_on(z, k, core), h, core)
+}
+
+/// Fold an instruction mix and a replayed hierarchy into a result.
+fn combine(mix: InstrMix, h: &Hierarchy, core: &CoreModel) -> SimResult {
     let compute = core.compute_cycles(&mix);
     let stalls = core.stall_cycles(h);
     SimResult {
@@ -207,6 +211,63 @@ pub fn finish(method: Method, z: usize, k: usize, h: &Hierarchy, core: &CoreMode
         llc: h.llc_stats(),
         l1: h.level_stats(0),
     }
+}
+
+/// Simulate one **batched** execution of `method` over `batch` columns
+/// of a `z × k` layer: a [`Method::FullPackGemm`] call replays a single
+/// weight pass feeding all columns (the extract-once amortization),
+/// while every other method replays `batch` back-to-back single-column
+/// calls — the paper's "route GEMM to Ruy" protocol, which re-streams
+/// the weight matrix per column.  `calls` warm-up batched executions
+/// model steady-state residency; stats cover the last one.
+pub fn simulate_gemm(
+    method: Method,
+    z: usize,
+    k: usize,
+    batch: usize,
+    preset: CachePreset,
+    core: &CoreModel,
+    calls: usize,
+) -> SimResult {
+    let b = batch.max(1);
+    let mut h = preset.build();
+    let (t, replays) = match method {
+        Method::FullPackGemm(_) => (GemvTraffic { batch: b, ..method.traffic(z, k) }, 1),
+        // ULPPACK keeps its own per-call batch-8 protocol inside `t`
+        _ => (method.traffic(z, k), b),
+    };
+    for _ in 1..calls.max(1) {
+        for _ in 0..replays {
+            replay_gemv(&mut h, &t);
+        }
+    }
+    h.reset_stats();
+    for _ in 0..replays {
+        replay_gemv(&mut h, &t);
+    }
+    combine(method.instr_mix_gemm_on(z, k, b, core), &h, core)
+}
+
+/// The modeled GEMM-vs-repeated-GEMV crossover: the smallest batch (in
+/// `2..=max_batch`) at which the amortized [`Method::FullPackGemm`]
+/// call beats `batch` repeated [`Method::FullPack`] GEMVs on variant
+/// `v`, or `None` when repeated GEMV stays ahead across the whole
+/// range.  This is the curve behind the router's batch policy
+/// (`kernels::GEMM_MIN_BATCH`) and the EXPERIMENTS.md crossover table.
+pub fn gemm_batch_threshold(
+    v: crate::pack::Variant,
+    z: usize,
+    k: usize,
+    preset: CachePreset,
+    core: &CoreModel,
+    max_batch: usize,
+) -> Option<usize> {
+    const STEADY: usize = 3;
+    (2..=max_batch).find(|&b| {
+        let gemm = simulate_gemm(Method::FullPackGemm(v), z, k, b, preset, core, STEADY);
+        let repeated = simulate_gemm(Method::FullPack(v), z, k, b, preset, core, STEADY);
+        gemm.cycles < repeated.cycles
+    })
 }
 
 #[cfg(test)]
@@ -312,6 +373,64 @@ mod tests {
         let n = |m: Method| simulate_gemv(m, 2048, 2048, preset, &neon, STEADY).cycles;
         assert!(n(Method::fullpack("w1a8")) < n(Method::fullpack_swar("w1a8")));
         assert!(n(Method::fullpack("w4a8")) < n(Method::fullpack_swar("w4a8")));
+    }
+
+    #[test]
+    fn gemm_amortization_curve_decreases_per_column() {
+        // DESIGN.md §9: per-column cycles of the batched FullPack GEMM
+        // fall monotonically toward the pure-MAC floor as batch grows
+        let core = CoreModel::ex5_big();
+        for v in ["w4a8", "w2a8", "w1a8"] {
+            let m = Method::fullpack_gemm(v);
+            let per_col = |b: usize| {
+                simulate_gemm(m, 1024, 1024, b, CachePreset::Gem5Ex5Big, &core, STEADY).cycles
+                    / b as f64
+            };
+            let (c1, c2, c4, c16) = (per_col(1), per_col(2), per_col(4), per_col(16));
+            assert!(c2 < c1 && c4 < c2 && c16 < c4, "{v}: {c1} {c2} {c4} {c16}");
+        }
+    }
+
+    #[test]
+    fn gemm_beats_repeated_gemv_above_the_threshold() {
+        let core = CoreModel::ex5_big();
+        let preset = CachePreset::Gem5Ex5Big;
+        for vname in ["w4a8", "w2a8", "w1a8"] {
+            let v = Variant::parse(vname).unwrap();
+            // the modeled crossover sits at small batch for serving shapes
+            let th = gemm_batch_threshold(v, 2048, 2048, preset, &core, 16);
+            assert!(matches!(th, Some(b) if b <= 4), "{vname}: threshold {th:?}");
+            // and the batch-16 flush is a clear win
+            let gemm =
+                simulate_gemm(Method::FullPackGemm(v), 2048, 2048, 16, preset, &core, STEADY);
+            let repeated =
+                simulate_gemm(Method::FullPack(v), 2048, 2048, 16, preset, &core, STEADY);
+            assert!(
+                gemm.cycles < repeated.cycles,
+                "{vname}: gemm {} vs repeated {}",
+                gemm.cycles,
+                repeated.cycles
+            );
+        }
+    }
+
+    #[test]
+    fn gemm_also_beats_the_ruy_protocol_on_subbyte_data() {
+        // the router's prefer_gemm promotion: amortized sub-byte GEMM
+        // vs the paper's widened repeated-Ruy fallback at the flush size
+        let core = CoreModel::ex5_big();
+        let preset = CachePreset::Gem5Ex5Big;
+        let gemm = simulate_gemm(
+            Method::fullpack_gemm("w4a8"),
+            2048,
+            2048,
+            16,
+            preset,
+            &core,
+            STEADY,
+        );
+        let ruy = simulate_gemm(Method::RuyW8A8, 2048, 2048, 16, preset, &core, STEADY);
+        assert!(gemm.cycles < ruy.cycles, "gemm {} vs ruy {}", gemm.cycles, ruy.cycles);
     }
 
     #[test]

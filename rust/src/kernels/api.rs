@@ -173,6 +173,73 @@ pub trait GemvKernel: Send + Sync {
     }
 }
 
+/// An object-safe batched-GEMM backend — the first-class tier for the
+/// paper's explicit future-work gap ("FullPack does not support GEMM, so
+/// we used Ruy-W8A8 for the GEMM operations", Fig. 10).  Entries are
+/// registered in [`super::KernelRegistry`] under their own namespace
+/// (`fullpack-w4a8-gemm`, `ruy-like-w8a8-gemm`, ...), disjoint from the
+/// GEMV names by the `-gemm` suffix.
+///
+/// The contract mirrors [`GemvKernel`] — `prepare` owns the weight
+/// layout, `gemm` consumes it — but the execution unit is one flushed
+/// batch: `cols` holds `batch` int8 activation columns (each of length
+/// `w.k_padded()` or more) and `out[c*rows..(c+1)*rows]` receives column
+/// `c`.  The differential suite (`rust/tests/gemm_differential.rs`)
+/// pins every registered backend to `repeated GEMV ≡ naive oracle`.
+pub trait GemmKernel: Send + Sync {
+    /// Unique registry name (`fullpack-w4a8-gemm`, ...).
+    fn name(&self) -> &'static str;
+
+    /// Can this backend execute a layer whose data is quantized as `v`?
+    fn supports(&self, v: Variant) -> bool;
+
+    /// Pack a row-major `rows × k` int8 matrix into this backend's
+    /// preferred layout (depth padding included where the layout needs
+    /// it).
+    fn prepare(&self, w: &[i8], rows: usize, k: usize) -> Result<Weights, KernelError>;
+
+    /// One batched GEMM over all of `cols`: `out[c][r] = Σ_k w[r][k] ·
+    /// cols[c][k]`, batch-major output.
+    fn gemm(&self, w: &Weights, cols: &[&[i8]], out: &mut [i32]) -> Result<(), KernelError>;
+
+    /// The analytic cost-model method this backend is modeled as
+    /// (`None` for backends the model does not cover, e.g. the naive
+    /// oracle).  FullPack GEMM entries map to `Method::FullPackGemm`;
+    /// rival entries map to the GEMV method whose repeated execution
+    /// they amortize (`costmodel::simulate_gemm` models them as
+    /// `batch` back-to-back calls).
+    fn cost_method(&self) -> Option<Method> {
+        None
+    }
+}
+
+/// Shared operand validation for [`GemmKernel::gemm`] implementations:
+/// batch-major output length and per-column padded depth.
+pub(crate) fn check_gemm_shape(
+    w: &Weights,
+    cols: &[&[i8]],
+    out: &[i32],
+) -> Result<(), KernelError> {
+    let z = w.rows();
+    if out.len() != z * cols.len() {
+        return Err(KernelError::Shape(format!(
+            "out len {} != rows*batch {}",
+            out.len(),
+            z * cols.len()
+        )));
+    }
+    let kp = w.k_padded();
+    for (c, col) in cols.iter().enumerate() {
+        if col.len() < kp {
+            return Err(KernelError::Shape(format!(
+                "column {c} len {} < padded depth {kp}",
+                col.len()
+            )));
+        }
+    }
+    Ok(())
+}
+
 /// Shared bounds check for `gemv_at` implementations.
 pub(crate) fn check_rows(w: &Weights, out: &[i32], row0: usize) -> Result<(), KernelError> {
     if row0 + out.len() > w.rows() {

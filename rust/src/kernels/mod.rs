@@ -10,11 +10,13 @@
 //! * [`naive`]    — the Alg. 1 strawman over adjacent packing.
 //!
 //! Every implementation is reachable through the pluggable kernel API
-//! (DESIGN.md §3): [`api::GemvKernel`] is the object-safe trait,
+//! (DESIGN.md §3): [`api::GemvKernel`] is the object-safe GEMV trait,
+//! [`api::GemmKernel`] the batched-GEMM twin (DESIGN.md §9),
 //! [`registry::KernelRegistry`] enumerates the built-in backends by
-//! name, and [`plan::Plan`] binds a layer shape + variant + thread
-//! budget to a selected kernel.  Call sites outside this module select
-//! kernels by *name or policy*, never by concrete function.
+//! name in both namespaces, and [`plan::Plan`] binds a layer shape +
+//! variant + thread budget to a selected kernel.  Call sites outside
+//! this module select kernels by *name or policy*, never by concrete
+//! function.
 
 pub mod api;
 pub mod baseline;
@@ -28,9 +30,11 @@ pub mod swar;
 pub mod testutil;
 pub mod ulppack;
 
-pub use api::{GemvKernel, Weights};
-pub use plan::{LayerShape, Plan, PlanBuilder, PlanScratch, SelectPolicy};
-pub use registry::{KernelRegistry, RowParallel};
+pub use api::{GemmKernel, GemvKernel, Weights};
+pub use plan::{LayerShape, Plan, PlanBuilder, PlanScratch, SelectPolicy, Selection, GEMM_MIN_BATCH};
+pub use registry::{
+    fullpack_gemm_kernel_name, KernelRegistry, RowParallel, FULLPACK_GEMM_VARIANTS,
+};
 pub use swar::{swar_kernel_name, SwarKernel, SWAR_MIN_DEPTH};
 
 use crate::pack::{BitWidth, PackError, PackedMatrix, Variant};

@@ -10,26 +10,35 @@
 //!
 //! * [`SelectPolicy::PaperRule`] — the paper's §4.6 split: single-batch
 //!   sub-byte ops take the FullPack GEMV kernel of the data's variant;
-//!   batched or 8-bit ops take the Ruy-like W8A8 path (sub-byte values
-//!   widened to int8, exactly the paper's "FullPack does not support
-//!   GEMM" fallback).
+//!   batched or 8-bit ops take the W8A8 path — now a first-class GEMM
+//!   backend (`ruy-like-w8a8-gemm`, exactly the paper's "FullPack does
+//!   not support GEMM" fallback), or the native `fullpack-*-gemm` tier
+//!   when [`PlanBuilder::prefer_gemm`] is set (DESIGN.md §9).
 //! * [`SelectPolicy::Explicit`] — a registry name (`--kernel` flags,
-//!   benches, ablations).
+//!   benches, ablations), from either the GEMV or the GEMM namespace.
 //! * [`SelectPolicy::CostModel`] — argmin of modeled cycles over every
-//!   candidate backend via `costmodel::simulate_gemv`.
+//!   candidate backend via `costmodel::simulate_gemv` (batch 1) or
+//!   `costmodel::simulate_gemm` (batched plans).
 
 #![warn(missing_docs)]
 
-use super::api::{GemvKernel, Weights};
-use super::registry::{fullpack_kernel_name, KernelRegistry};
+use super::api::{GemmKernel, GemvKernel, Weights};
+use super::registry::{fullpack_gemm_kernel_name, fullpack_kernel_name, KernelRegistry};
 use super::swar::{swar_kernel_name, SWAR_MIN_DEPTH};
 use super::{parallel, ActVec, KernelError};
-use crate::costmodel::{simulate_gemv, CoreModel};
+use crate::costmodel::{simulate_gemm, simulate_gemv, CoreModel};
 use crate::pack::{pack_into, BitWidth, Variant};
 use crate::sim::CachePreset;
 use std::sync::{Arc, Mutex};
 
 const W8A8: Variant = Variant::new(BitWidth::B8, BitWidth::B8);
+
+/// Smallest flushed batch the planner promotes onto a GEMM backend:
+/// below two columns there is nothing to amortize, and the modeled
+/// extraction-amortization curve (`costmodel::gemm_batch_threshold`)
+/// confirms the crossover sits at two columns for every GEMM-tier
+/// variant at serving shapes.
+pub const GEMM_MIN_BATCH: usize = 2;
 
 /// The layer shape a plan is bound to.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -45,7 +54,10 @@ pub struct LayerShape {
 /// How the builder picks a kernel.
 #[derive(Debug, Clone)]
 pub enum SelectPolicy {
-    /// paper §4.6: single-batch sub-byte → FullPack; else Ruy-W8A8.
+    /// paper §4.6: single-batch sub-byte → FullPack; else the W8A8
+    /// path (`ruy-w8a8` for single columns, the `ruy-like-w8a8-gemm`
+    /// backend for batches ≥ [`GEMM_MIN_BATCH`] — or the native
+    /// `fullpack-*-gemm` tier under [`PlanBuilder::prefer_gemm`]).
     /// With [`PlanBuilder::prefer_swar`] set, the FullPack branch takes
     /// the `-swar` tier when the variant has one and the depth clears
     /// [`SWAR_MIN_DEPTH`] (alignment is free: the packed layout is
@@ -118,6 +130,30 @@ pub struct PlanBuilder {
     policy: SelectPolicy,
     gemv_max_batch: usize,
     prefer_swar: bool,
+    prefer_gemm: bool,
+    gemm_min_batch: usize,
+}
+
+/// What the selection policy decided for one layer: the GEMV backend,
+/// the batched-GEMM backend for batched plans (`None` for pure GEMV
+/// plans), and the variant the chosen backend actually executes.
+pub struct Selection {
+    /// the GEMV backend (for batched plans: the same-layout single-column
+    /// twin, kept for metadata — execution goes through `gemm`)
+    pub kernel: Arc<dyn GemvKernel>,
+    /// the batched-GEMM backend, when the plan is batch-first
+    pub gemm: Option<Arc<dyn GemmKernel>>,
+    /// what actually runs (`w8a8` when sub-byte data is widened onto
+    /// the int8 fallback path)
+    pub exec_variant: Variant,
+}
+
+impl Selection {
+    /// Registry name of the backend that will execute this plan — the
+    /// GEMM backend for batched plans, the GEMV kernel otherwise.
+    pub fn name(&self) -> &'static str {
+        self.gemm.as_ref().map(|g| g.name()).unwrap_or_else(|| self.kernel.name())
+    }
 }
 
 impl PlanBuilder {
@@ -131,6 +167,8 @@ impl PlanBuilder {
             policy: SelectPolicy::PaperRule,
             gemv_max_batch: 1,
             prefer_swar: false,
+            prefer_gemm: false,
+            gemm_min_batch: GEMM_MIN_BATCH,
         }
     }
 
@@ -165,6 +203,25 @@ impl PlanBuilder {
         self
     }
 
+    /// Under `PaperRule`, route batched sub-byte ops to the native
+    /// `fullpack-*-gemm` backend instead of widening onto the Ruy-like
+    /// W8A8 GEMM path (default: off, preserving the paper's protocol).
+    /// Applies when the variant has a GEMM-tier entry and the batch
+    /// clears [`PlanBuilder::gemm_min_batch`].
+    pub fn prefer_gemm(mut self, yes: bool) -> PlanBuilder {
+        self.prefer_gemm = yes;
+        self
+    }
+
+    /// Smallest batch promoted onto a GEMM backend (default:
+    /// [`GEMM_MIN_BATCH`]).  Batched plans below it still execute
+    /// correctly — as repeated GEMV through the GEMV kernel's default
+    /// `gemm` — but carry no dedicated GEMM backend.
+    pub fn gemm_min_batch(mut self, n: usize) -> PlanBuilder {
+        self.gemm_min_batch = n.max(1);
+        self
+    }
+
     /// Select against the global registry.
     pub fn build(self) -> Result<Plan, KernelError> {
         self.build_in(KernelRegistry::global())
@@ -173,29 +230,46 @@ impl PlanBuilder {
     /// Select against a caller-supplied registry (custom backends).
     pub fn build_in(self, reg: &KernelRegistry) -> Result<Plan, KernelError> {
         let (shape, variant, threads) = (self.shape, self.variant, self.threads);
-        let (kernel, exec_variant) = self.select_in(reg)?;
+        let sel = self.select_in(reg)?;
         Ok(Plan {
             shape,
             variant,
-            exec_variant,
+            exec_variant: sel.exec_variant,
             threads,
-            kernel,
+            kernel: sel.kernel,
+            gemm: sel.gemm,
             scratch: Mutex::new(PlanScratch::default()),
         })
     }
 
     /// Run the selection policy only (no plan construction): the chosen
-    /// kernel and the variant it will execute — the cheap path for
+    /// backends and the variant they will execute — the cheap path for
     /// callers that just need the routing decision.
-    pub fn select(self) -> Result<(Arc<dyn GemvKernel>, Variant), KernelError> {
+    pub fn select(self) -> Result<Selection, KernelError> {
         self.select_in(KernelRegistry::global())
     }
 
-    /// [`PlanBuilder::select`] against a caller-supplied registry.
-    pub fn select_in(
-        self,
+    /// For a batched selection, the same-layout GEMV twin of a GEMM
+    /// backend — `fullpack-wXa8` for the `fullpack-wXa8-gemm` tier,
+    /// `ruy-w8a8` for everything int8-rowed.  Only used as plan
+    /// metadata; execution goes through the GEMM backend itself.
+    fn gemv_twin(
         reg: &KernelRegistry,
-    ) -> Result<(Arc<dyn GemvKernel>, Variant), KernelError> {
+        gemm_name: &str,
+        ev: Variant,
+    ) -> Result<Arc<dyn GemvKernel>, KernelError> {
+        let name = if gemm_name.starts_with("fullpack-") {
+            fullpack_kernel_name(ev)
+        } else {
+            "ruy-w8a8"
+        };
+        reg.get(name)
+            .cloned()
+            .ok_or_else(|| KernelError::Unsupported(format!("unknown kernel {name:?}")))
+    }
+
+    /// [`PlanBuilder::select`] against a caller-supplied registry.
+    pub fn select_in(self, reg: &KernelRegistry) -> Result<Selection, KernelError> {
         let LayerShape { z, k, batch } = self.shape;
         let lookup = |name: &str| -> Result<Arc<dyn GemvKernel>, KernelError> {
             reg.get(name)
@@ -213,13 +287,41 @@ impl PlanBuilder {
                 None
             }
         };
-        let (kernel, exec_variant) = match &self.policy {
+        let gemv_only = |kernel: Arc<dyn GemvKernel>, ev: Variant| Selection {
+            kernel,
+            gemm: None,
+            exec_variant: ev,
+        };
+        let selection = match &self.policy {
             SelectPolicy::Explicit(name) => {
-                let kern = lookup(name)?;
-                let ev = exec_for(&kern).ok_or_else(|| {
-                    KernelError::Unsupported(format!("{} cannot run {}", kern.name(), self.variant))
-                })?;
-                (kern, ev)
+                // the GEMM namespace is disjoint (`-gemm` suffix); an
+                // explicit GEMM name builds a batch-first plan
+                if let Some(g) = reg.get_gemm(name) {
+                    let g = g.clone();
+                    let ev = if g.supports(self.variant) {
+                        self.variant
+                    } else if g.supports(W8A8) {
+                        W8A8
+                    } else {
+                        return Err(KernelError::Unsupported(format!(
+                            "{} cannot run {}",
+                            g.name(),
+                            self.variant
+                        )));
+                    };
+                    let kernel = Self::gemv_twin(reg, name, ev)?;
+                    Selection { kernel, gemm: Some(g), exec_variant: ev }
+                } else {
+                    let kern = lookup(name)?;
+                    let ev = exec_for(&kern).ok_or_else(|| {
+                        KernelError::Unsupported(format!(
+                            "{} cannot run {}",
+                            kern.name(),
+                            self.variant
+                        ))
+                    })?;
+                    gemv_only(kern, ev)
+                }
             }
             SelectPolicy::PaperRule => {
                 let sub = self.variant.w.is_sub_byte() || self.variant.a.is_sub_byte();
@@ -232,12 +334,94 @@ impl PlanBuilder {
                             }
                         }
                     }
-                    (lookup(name)?, self.variant)
+                    gemv_only(lookup(name)?, self.variant)
                 } else {
-                    (lookup("ruy-w8a8")?, W8A8)
+                    // batched (or 8-bit) path: a first-class GEMM plan.
+                    // `prefer_gemm` takes the native sub-byte tier; the
+                    // default is the paper's Ruy-like W8A8 protocol.
+                    if self.prefer_gemm && batch >= self.gemm_min_batch {
+                        if let Some(gname) = fullpack_gemm_kernel_name(self.variant) {
+                            if let Some(g) = reg.get_gemm(gname) {
+                                return Ok(Selection {
+                                    kernel: lookup(fullpack_kernel_name(self.variant))?,
+                                    gemm: Some(g.clone()),
+                                    exec_variant: self.variant,
+                                });
+                            }
+                        }
+                    }
+                    let kernel = lookup("ruy-w8a8")?;
+                    // single-column 8-bit ops stay pure GEMV plans; a
+                    // registry without the GEMM tier degrades gracefully
+                    // to the old repeated-GEMV behavior
+                    let gemm = if batch >= self.gemm_min_batch {
+                        reg.get_gemm("ruy-like-w8a8-gemm").cloned()
+                    } else {
+                        None
+                    };
+                    Selection { kernel, gemm, exec_variant: W8A8 }
                 }
             }
             SelectPolicy::CostModel { preset, calls, core } => {
+                if batch > 1 {
+                    // argmin modeled cycles across BOTH tiers: every
+                    // GEMM backend (one amortized call) and every GEMV
+                    // candidate modeled as `batch` repeated calls
+                    // (`simulate_gemm` handles both shapes) — a GEMM
+                    // backend wins only when the model actually scores
+                    // it below the best repeated-GEMV plan
+                    let mut best_gemm: Option<(f64, Arc<dyn GemmKernel>, Variant)> = None;
+                    for g in reg.gemm_iter() {
+                        let ev = if g.supports(self.variant) {
+                            self.variant
+                        } else if g.supports(W8A8) {
+                            W8A8
+                        } else {
+                            continue;
+                        };
+                        let Some(method) = g.cost_method() else { continue };
+                        let cycles =
+                            simulate_gemm(method, z, k, batch, *preset, core, *calls).cycles;
+                        let better = match &best_gemm {
+                            None => true,
+                            Some((c, _, _)) => cycles < *c,
+                        };
+                        if better {
+                            best_gemm = Some((cycles, g.clone(), ev));
+                        }
+                    }
+                    let mut best_gemv: Option<(f64, Arc<dyn GemvKernel>, Variant)> = None;
+                    for kern in reg.iter() {
+                        let Some(ev) = exec_for(kern) else { continue };
+                        let Some(method) = kern.cost_method() else { continue };
+                        let cycles =
+                            simulate_gemm(method, z, k, batch, *preset, core, *calls).cycles;
+                        let better = match &best_gemv {
+                            None => true,
+                            Some((c, _, _)) => cycles < *c,
+                        };
+                        if better {
+                            best_gemv = Some((cycles, kern.clone(), ev));
+                        }
+                    }
+                    let gemm_wins = match (&best_gemm, &best_gemv) {
+                        (Some((cg, _, _)), Some((cv, _, _))) => cg < cv,
+                        (Some(_), None) => true,
+                        _ => false,
+                    };
+                    if gemm_wins {
+                        let (_, g, ev) = best_gemm.expect("gemm_wins implies a candidate");
+                        let kernel = Self::gemv_twin(reg, g.name(), ev)?;
+                        return Ok(Selection { kernel, gemm: Some(g), exec_variant: ev });
+                    }
+                    if let Some((_, kern, ev)) = best_gemv {
+                        return Ok(gemv_only(kern, ev));
+                    }
+                    return Err(KernelError::Unsupported(format!(
+                        "no registered kernel runs {}",
+                        self.variant
+                    )));
+                }
                 let mut best: Option<(f64, Arc<dyn GemvKernel>, Variant)> = None;
                 for kern in reg.iter() {
                     let Some(ev) = exec_for(kern) else { continue };
@@ -254,10 +438,10 @@ impl PlanBuilder {
                 let (_, kern, ev) = best.ok_or_else(|| {
                     KernelError::Unsupported(format!("no registered kernel runs {}", self.variant))
                 })?;
-                (kern, ev)
+                gemv_only(kern, ev)
             }
         };
-        Ok((kernel, exec_variant))
+        Ok(selection)
     }
 }
 
@@ -272,7 +456,11 @@ pub struct PlanScratch {
 }
 
 /// A bound execution plan: shape + variant + thread budget + the chosen
-/// kernel, with reusable activation-packing scratch.
+/// kernel(s), with reusable activation-packing scratch.  Batched plans
+/// additionally carry a [`GemmKernel`] backend; for those, every
+/// execution path (including single-column [`Plan::execute`]) goes
+/// through the GEMM backend, and the GEMV member is the same-layout
+/// single-column twin kept for metadata.
 pub struct Plan {
     /// the layer shape the plan is bound to
     pub shape: LayerShape,
@@ -284,13 +472,15 @@ pub struct Plan {
     /// default intra-op thread budget for [`Plan::execute`]
     pub threads: usize,
     kernel: Arc<dyn GemvKernel>,
+    gemm: Option<Arc<dyn GemmKernel>>,
     scratch: Mutex<PlanScratch>,
 }
 
 impl std::fmt::Debug for Plan {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("Plan")
-            .field("kernel", &self.kernel.name())
+            .field("kernel", &self.kernel_name())
+            .field("gemm", &self.gemm_kernel_name())
             .field("shape", &self.shape)
             .field("variant", &self.variant)
             .field("exec_variant", &self.exec_variant)
@@ -300,25 +490,46 @@ impl std::fmt::Debug for Plan {
 }
 
 impl Plan {
-    /// Registry name of the chosen kernel.
+    /// Registry name of the backend that executes this plan — the GEMM
+    /// backend for batched plans, the GEMV kernel otherwise.
     pub fn kernel_name(&self) -> &'static str {
-        self.kernel.name()
+        self.gemm.as_ref().map(|g| g.name()).unwrap_or_else(|| self.kernel.name())
     }
 
-    /// The selected backend (e.g. to wrap in `RowParallel`).
+    /// The selected GEMV backend (e.g. to wrap in `RowParallel`).  For
+    /// batched plans this is the same-layout single-column twin.
     pub fn kernel(&self) -> &Arc<dyn GemvKernel> {
         &self.kernel
     }
 
-    /// Did selection land on the FullPack GEMV family?
+    /// The selected batched-GEMM backend, for batch-first plans.
+    pub fn gemm_kernel(&self) -> Option<&Arc<dyn GemmKernel>> {
+        self.gemm.as_ref()
+    }
+
+    /// Registry name of the batched-GEMM backend, for batch-first plans.
+    pub fn gemm_kernel_name(&self) -> Option<&'static str> {
+        self.gemm.as_ref().map(|g| g.name())
+    }
+
+    /// Is this a batch-first plan (a GEMM backend executes it)?
+    pub fn is_batched(&self) -> bool {
+        self.gemm.is_some()
+    }
+
+    /// Did selection land on the FullPack family (GEMV or GEMM tier)?
     pub fn is_fullpack(&self) -> bool {
-        self.kernel.name().starts_with("fullpack-")
+        self.kernel_name().starts_with("fullpack-")
     }
 
     /// Pack a row-major `z × k` int8 weight matrix into the chosen
-    /// kernel's layout.
+    /// backend's layout (the GEMM backend's for batched plans; its
+    /// layout matches the GEMV twin's by construction).
     pub fn prepare_weights(&self, w: &[i8]) -> Result<Weights, KernelError> {
-        self.kernel.prepare(w, self.shape.z, self.shape.k)
+        match &self.gemm {
+            Some(g) => g.prepare(w, self.shape.z, self.shape.k),
+            None => self.kernel.prepare(w, self.shape.z, self.shape.k),
+        }
     }
 
     /// One GEMV with the plan's thread budget.  `a` is the logical-depth
@@ -377,6 +588,20 @@ impl Plan {
                 self.shape.k
             )));
         }
+        // batch-first plans run every call — even a single column —
+        // through the GEMM backend (the GEMV twin is metadata; the
+        // thread budget is ignored, batching is the parallelism axis)
+        if let Some(g) = &self.gemm {
+            let kp = w.k_padded();
+            return if a.len() < kp {
+                scratch.padded.clear();
+                scratch.padded.extend_from_slice(a);
+                scratch.padded.resize(kp, 0);
+                g.gemm(w, &[scratch.padded.as_slice()], out)
+            } else {
+                g.gemm(w, &[a], out)
+            };
+        }
         let kp = w.k_padded();
         let act = if self.kernel.packs_activations() {
             scratch.padded.clear();
@@ -401,9 +626,11 @@ impl Plan {
     }
 
     /// Batched execution: `a` holds `batch` row-major columns of depth
-    /// `k`; `out[c*z..(c+1)*z]` receives column `c`.  FullPack kernels
-    /// take their batched-GEMM extension; everything else runs repeated
-    /// GEMV (the paper's protocol).
+    /// `k`; `out[c*z..(c+1)*z]` receives column `c`.  Batch-first plans
+    /// dispatch one [`GemmKernel::gemm`] call; GEMV plans fall back to
+    /// the kernel's own `gemm` (FullPack kernels take their batched
+    /// extension there, everything else runs repeated GEMV — the
+    /// paper's protocol).
     pub fn execute_batch(
         &self,
         w: &Weights,
@@ -429,11 +656,26 @@ impl Plan {
                 }
                 let padded = &scratch.padded;
                 let cols: Vec<&[i8]> = (0..batch).map(|b| &padded[b * kp..(b + 1) * kp]).collect();
-                self.kernel.gemm(w, &cols, out)
+                self.dispatch_gemm(w, &cols, out)
             })
         } else {
             let cols: Vec<&[i8]> = (0..batch).map(|b| &a[b * k..(b + 1) * k]).collect();
-            self.kernel.gemm(w, &cols, out)
+            self.dispatch_gemm(w, &cols, out)
+        }
+    }
+
+    /// One batched call on whichever backend owns this plan's batches:
+    /// the GEMM backend for batch-first plans, otherwise the GEMV
+    /// kernel's own `gemm` default/override.
+    fn dispatch_gemm(
+        &self,
+        w: &Weights,
+        cols: &[&[i8]],
+        out: &mut [i32],
+    ) -> Result<(), KernelError> {
+        match &self.gemm {
+            Some(g) => g.gemm(w, cols, out),
+            None => self.kernel.gemm(w, cols, out),
         }
     }
 }
@@ -455,16 +697,94 @@ mod tests {
         let p = PlanBuilder::new(shape(2048, 2048, 1), w4a8).build().unwrap();
         assert_eq!(p.kernel_name(), "fullpack-w4a8");
         assert!(p.is_fullpack());
-        // batch-16 FC -> Ruy GEMM even when quantized sub-byte
+        assert!(!p.is_batched());
+        // batch-16 FC -> the Ruy-like W8A8 GEMM backend even when
+        // quantized sub-byte (the paper's protocol, now first-class)
         let p = PlanBuilder::new(shape(2048, 2048, 16), w4a8).build().unwrap();
-        assert_eq!(p.kernel_name(), "ruy-w8a8");
+        assert_eq!(p.kernel_name(), "ruy-like-w8a8-gemm");
+        assert_eq!(p.gemm_kernel_name(), Some("ruy-like-w8a8-gemm"));
+        assert_eq!(p.kernel().name(), "ruy-w8a8"); // the GEMV twin
         assert_eq!(p.exec_variant, W8A8);
-        // 8-bit ops always take the baseline
+        assert!(p.is_batched());
+        // single-column 8-bit ops stay pure GEMV plans on the baseline
         let p = PlanBuilder::new(shape(2048, 2048, 1), w8a8).build().unwrap();
         assert_eq!(p.kernel_name(), "ruy-w8a8");
+        assert!(!p.is_batched());
         // raised batch threshold keeps the GEMV path
         let p = PlanBuilder::new(shape(2048, 2048, 4), w4a8).gemv_max_batch(4).build().unwrap();
         assert_eq!(p.kernel_name(), "fullpack-w4a8");
+    }
+
+    #[test]
+    fn prefer_gemm_promotes_subbyte_batches_to_the_gemm_tier() {
+        let w4a8 = Variant::parse("w4a8").unwrap();
+        // batched sub-byte + opt-in -> the native FullPack GEMM backend
+        let p = PlanBuilder::new(shape(256, 512, 16), w4a8).prefer_gemm(true).build().unwrap();
+        assert_eq!(p.kernel_name(), "fullpack-w4a8-gemm");
+        assert_eq!(p.kernel().name(), "fullpack-w4a8"); // same-layout twin
+        assert_eq!(p.exec_variant, w4a8);
+        assert!(p.is_fullpack() && p.is_batched());
+        // default keeps the paper's Ruy protocol
+        let p = PlanBuilder::new(shape(256, 512, 16), w4a8).build().unwrap();
+        assert_eq!(p.kernel_name(), "ruy-like-w8a8-gemm");
+        // variants without a GEMM-tier entry fall back to the rival
+        let w4a4 = Variant::parse("w4a4").unwrap();
+        let p = PlanBuilder::new(shape(256, 512, 16), w4a4).prefer_gemm(true).build().unwrap();
+        assert_eq!(p.kernel_name(), "ruy-like-w8a8-gemm");
+        // below gemm_min_batch the opt-in does not engage
+        let p = PlanBuilder::new(shape(256, 512, 16), w4a8)
+            .prefer_gemm(true)
+            .gemm_min_batch(32)
+            .build()
+            .unwrap();
+        assert_eq!(p.kernel_name(), "ruy-w8a8");
+        assert!(!p.is_batched());
+    }
+
+    #[test]
+    fn explicit_gemm_names_build_batch_first_plans() {
+        let w2a8 = Variant::parse("w2a8").unwrap();
+        let p = PlanBuilder::new(shape(16, 96, 4), w2a8)
+            .policy(SelectPolicy::Explicit("fullpack-w2a8-gemm".into()))
+            .build()
+            .unwrap();
+        assert_eq!(p.kernel_name(), "fullpack-w2a8-gemm");
+        assert!(p.is_batched());
+        // the oracle runs any wXa8 data
+        let p = PlanBuilder::new(shape(16, 96, 4), w2a8)
+            .policy(SelectPolicy::Explicit("naive-oracle-gemm".into()))
+            .build()
+            .unwrap();
+        assert_eq!(p.kernel_name(), "naive-oracle-gemm");
+        // a GEMM backend that cannot run the variant is a build error
+        let w4a4 = Variant::parse("w4a4").unwrap();
+        assert!(PlanBuilder::new(shape(16, 96, 4), w4a4)
+            .policy(SelectPolicy::Explicit("fullpack-w2a8-gemm".into()))
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn cost_model_selects_the_fullpack_gemm_tier_for_batches() {
+        // batched sub-byte at the LLC boundary: the amortized FullPack
+        // GEMM backend must beat `batch` repeated Ruy calls
+        let v = Variant::parse("w4a8").unwrap();
+        let p = PlanBuilder::new(shape(2048, 2048, 16), v)
+            .policy(SelectPolicy::cost_model())
+            .build()
+            .unwrap();
+        assert_eq!(p.kernel_name(), "fullpack-w4a8-gemm");
+        assert!(p.is_batched());
+        // a variant with no GEMM-tier entry: the cross-tier argmin
+        // keeps the repeated FullPack GEMV plan — it must NOT fall onto
+        // the modeled-worse widened Ruy GEMM backend
+        let w4a4 = Variant::parse("w4a4").unwrap();
+        let p = PlanBuilder::new(shape(2048, 2048, 16), w4a4)
+            .policy(SelectPolicy::cost_model())
+            .build()
+            .unwrap();
+        assert_eq!(p.kernel_name(), "fullpack-w4a4");
+        assert!(!p.is_batched());
     }
 
     #[test]
@@ -589,6 +909,39 @@ mod tests {
         for b in 0..batch {
             let col = &a[b * k..(b + 1) * k];
             assert_eq!(&out[b * z..(b + 1) * z], oracle_gemv(&w, col, z, k).as_slice(), "col {b}");
+        }
+    }
+
+    #[test]
+    fn batch_first_plans_execute_both_paths() {
+        // a gemm-first plan: execute_batch is one GemmKernel call, and
+        // single-column execute routes through the same backend with
+        // identical results (incl. an unaligned, padded depth)
+        for vname in ["w4a8", "w2a8", "w1a8"] {
+            let v = Variant::parse(vname).unwrap();
+            let (z, k, batch) = (16usize, 77usize, 5usize);
+            let plan = PlanBuilder::new(shape(z, k, batch), v).prefer_gemm(true).build().unwrap();
+            assert!(plan.kernel_name().ends_with("-gemm"), "{vname}");
+            let w = rngvals(v.w, z * k, 31);
+            let a = rngvals(v.a, batch * k, 32);
+            let wts = plan.prepare_weights(&w).unwrap();
+            let mut out = vec![0i32; batch * z];
+            plan.execute_batch(&wts, &a, batch, &mut out).unwrap();
+            let kp = wts.k_padded();
+            let wp = pad_rows(&w, z, k, kp);
+            for b in 0..batch {
+                let mut col = a[b * k..(b + 1) * k].to_vec();
+                col.resize(kp, 0);
+                assert_eq!(
+                    &out[b * z..(b + 1) * z],
+                    oracle_gemv(&wp, &col, z, kp).as_slice(),
+                    "{vname} col {b}"
+                );
+                // single-column execute on the same weights
+                let mut one = vec![0i32; z];
+                plan.execute(&wts, &a[b * k..(b + 1) * k], &mut one).unwrap();
+                assert_eq!(one.as_slice(), &out[b * z..(b + 1) * z], "{vname} col {b}");
+            }
         }
     }
 

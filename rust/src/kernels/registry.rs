@@ -15,12 +15,20 @@
 //! | `ruy-w8a8` &co.   | int8     | row-major | `Method::*W8A8`       |
 //! | `ruy-f32` &co.    | FP32     | f32 rows  | `Method::*F32`        |
 //!
+//! GEMM-tier entries (their own namespace, `-gemm` suffix — DESIGN.md §9):
+//!
+//! | name                  | family       | layout    | modeled as             |
+//! |-----------------------|--------------|-----------|------------------------|
+//! | `fullpack-wXa8-gemm`  | FullPack     | stride-16 | `Method::FullPackGemm` |
+//! | `ruy-like-w8a8-gemm`  | int8 rival   | row-major | repeated `RuyW8A8`     |
+//! | `naive-oracle-gemm`   | test oracle  | unpacked  | (not modeled)          |
+//!
 //! [`RowParallel`] is the row-sharding decorator: it wraps any entry and
 //! implements the same trait, so intra-op parallelism composes with
 //! every backend.
 #![warn(missing_docs)]
 
-use super::api::{check_rows, wrong_layout, GemvKernel, Weights};
+use super::api::{check_gemm_shape, check_rows, wrong_layout, GemmKernel, GemvKernel, Weights};
 use super::swar::{SwarKernel, SWAR_VARIANTS};
 use super::{baseline, fullpack_gemm, naive, parallel, ulppack, ActVec, KernelError};
 use crate::costmodel::Method;
@@ -481,22 +489,176 @@ impl GemvKernel for RowParallel {
     }
 }
 
-/// The kernel registry: name → backend.  `global()` holds the built-in
-/// set; build a local one with `with_builtins()` + `register()` to add
-/// custom backends.
+/// Registry name of the FullPack GEMM backend for a variant, if the
+/// GEMM tier implements it (sub-byte weights × int8 activations — the
+/// extract-once/MAC-many amortization needs unpacked columns).
+pub fn fullpack_gemm_kernel_name(v: Variant) -> Option<&'static str> {
+    match (v.w, v.a) {
+        (BitWidth::B4, BitWidth::B8) => Some("fullpack-w4a8-gemm"),
+        (BitWidth::B2, BitWidth::B8) => Some("fullpack-w2a8-gemm"),
+        (BitWidth::B1, BitWidth::B8) => Some("fullpack-w1a8-gemm"),
+        _ => None,
+    }
+}
+
+/// The variants the FullPack GEMM tier implements, one registry entry
+/// each (`fullpack-{w4,w2,w1}a8-gemm`).
+pub const FULLPACK_GEMM_VARIANTS: [Variant; 3] = [
+    Variant::new(BitWidth::B4, BitWidth::B8),
+    Variant::new(BitWidth::B2, BitWidth::B8),
+    Variant::new(BitWidth::B1, BitWidth::B8),
+];
+
+/// The FullPack batched-GEMM extension as a first-class backend: same
+/// stride-16 packed layout as the GEMV tier, but each weight block is
+/// extracted once and reused across every batch column
+/// (`kernels::fullpack_gemm`).
+struct FullPackGemmKernel {
+    variant: Variant,
+    name: &'static str,
+}
+
+impl FullPackGemmKernel {
+    fn new(variant: Variant) -> Option<FullPackGemmKernel> {
+        fullpack_gemm_kernel_name(variant).map(|name| FullPackGemmKernel { variant, name })
+    }
+}
+
+impl GemmKernel for FullPackGemmKernel {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn supports(&self, v: Variant) -> bool {
+        v == self.variant
+    }
+
+    fn prepare(&self, w: &[i8], rows: usize, k: usize) -> Result<Weights, KernelError> {
+        // identical layout to the GEMV tier: batched and single-column
+        // plans on the same variant can share prepared weights
+        let kp = self.variant.padded_depth(k);
+        let padded = pad_rows(w, rows, k, kp);
+        Ok(Weights::Packed(PackedMatrix::from_i8(&padded, rows, kp, self.variant.w)?))
+    }
+
+    fn gemm(&self, w: &Weights, cols: &[&[i8]], out: &mut [i32]) -> Result<(), KernelError> {
+        let Weights::Packed(wp) = w else { return Err(wrong_layout(self.name, w)) };
+        if !wp.bits().is_sub_byte() {
+            return Err(wrong_layout(self.name, w));
+        }
+        check_gemm_shape(w, cols, out)?;
+        fullpack_gemm::gemm_fullpack_dyn(wp, cols, out)
+    }
+
+    fn cost_method(&self) -> Option<Method> {
+        Some(Method::FullPackGemm(self.variant))
+    }
+}
+
+/// The paper's GEMM protocol as a named backend: Ruy-like W8A8,
+/// executed as back-to-back per-column GEMVs over a row-major int8
+/// layout — the rival every FullPack GEMM entry is measured against.
+struct RuyLikeGemmKernel;
+
+impl GemmKernel for RuyLikeGemmKernel {
+    fn name(&self) -> &'static str {
+        "ruy-like-w8a8-gemm"
+    }
+
+    fn supports(&self, v: Variant) -> bool {
+        !v.w.is_sub_byte() && !v.a.is_sub_byte()
+    }
+
+    fn prepare(&self, w: &[i8], rows: usize, k: usize) -> Result<Weights, KernelError> {
+        Ok(Weights::Packed(PackedMatrix::from_i8(w, rows, k, BitWidth::B8)?))
+    }
+
+    fn gemm(&self, w: &Weights, cols: &[&[i8]], out: &mut [i32]) -> Result<(), KernelError> {
+        let Weights::Packed(wp) = w else { return Err(wrong_layout(self.name(), w)) };
+        if wp.bits().is_sub_byte() {
+            return Err(wrong_layout(self.name(), w));
+        }
+        check_gemm_shape(w, cols, out)?;
+        let z = wp.rows();
+        for (c, col) in cols.iter().enumerate() {
+            baseline::gemv_ruy_i8_at(wp, col, &mut out[c * z..(c + 1) * z], 0);
+        }
+        Ok(())
+    }
+
+    fn cost_method(&self) -> Option<Method> {
+        // modeled as `batch` repeated Ruy GEMV calls (simulate_gemm)
+        Some(Method::RuyW8A8)
+    }
+}
+
+/// The GEMM oracle: unpacked int8 rows, scalar triple loop.  Slow by
+/// construction and excluded from cost-model selection — it exists so
+/// the differential suite has a layout-independent ground truth.
+struct NaiveGemmOracle;
+
+impl GemmKernel for NaiveGemmOracle {
+    fn name(&self) -> &'static str {
+        "naive-oracle-gemm"
+    }
+
+    fn supports(&self, v: Variant) -> bool {
+        // any weight width, int8 activation columns
+        !v.a.is_sub_byte()
+    }
+
+    fn prepare(&self, w: &[i8], rows: usize, k: usize) -> Result<Weights, KernelError> {
+        debug_assert_eq!(w.len(), rows * k);
+        // unpacked adjacent bytes (1 B/elem regardless of quantized
+        // width): the oracle trades footprint for layout transparency
+        Ok(Weights::Naive {
+            bytes: w.iter().map(|&v| v as u8).collect(),
+            rows,
+            k,
+            bits: BitWidth::B8,
+        })
+    }
+
+    fn gemm(&self, w: &Weights, cols: &[&[i8]], out: &mut [i32]) -> Result<(), KernelError> {
+        let Weights::Naive { bytes, rows, k, .. } = w else {
+            return Err(wrong_layout(self.name(), w));
+        };
+        let (rows, k) = (*rows, *k);
+        check_gemm_shape(w, cols, out)?;
+        for (c, col) in cols.iter().enumerate() {
+            for r in 0..rows {
+                out[c * rows + r] = bytes[r * k..(r + 1) * k]
+                    .iter()
+                    .zip(col.iter())
+                    .map(|(&wv, &av)| (wv as i8) as i32 * av as i32)
+                    .sum();
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The kernel registry: name → backend, in two namespaces — GEMV
+/// entries ([`GemvKernel`]) and batched GEMM entries ([`GemmKernel`],
+/// names suffixed `-gemm`).  `global()` holds the built-in set; build a
+/// local one with `with_builtins()` + `register()`/`register_gemm()` to
+/// add custom backends.
 pub struct KernelRegistry {
     entries: Vec<Arc<dyn GemvKernel>>,
+    gemm_entries: Vec<Arc<dyn GemmKernel>>,
 }
 
 impl KernelRegistry {
     /// An empty registry (custom setups, tests).
     pub fn empty() -> KernelRegistry {
-        KernelRegistry { entries: Vec::new() }
+        KernelRegistry { entries: Vec::new(), gemm_entries: Vec::new() }
     }
 
     /// Every built-in backend: nine FullPack variants, the SWAR fast
     /// path (DESIGN.md §8), the naive Alg. 1 strawman, ULPPACK, the
-    /// W8A8 rivals and the FP32 rivals.
+    /// W8A8 rivals and the FP32 rivals — plus the GEMM tier
+    /// (DESIGN.md §9): `fullpack-{w4,w2,w1}a8-gemm`, the Ruy-like W8A8
+    /// GEMM rival, and the naive oracle.
     pub fn with_builtins() -> KernelRegistry {
         let mut reg = KernelRegistry::empty();
         for v in Variant::PAPER_VARIANTS {
@@ -516,6 +678,12 @@ impl KernelRegistry {
             reg.register(Arc::new(NaiveKernel { bits }));
             reg.register(Arc::new(UlppackKernel { bits }));
         }
+        for v in FULLPACK_GEMM_VARIANTS {
+            let kernel = FullPackGemmKernel::new(v).expect("FULLPACK_GEMM_VARIANTS implemented");
+            reg.register_gemm(Arc::new(kernel));
+        }
+        reg.register_gemm(Arc::new(RuyLikeGemmKernel));
+        reg.register_gemm(Arc::new(NaiveGemmOracle));
         reg
     }
 
@@ -571,7 +739,50 @@ impl KernelRegistry {
 
     /// Is the registry empty (only possible for [`KernelRegistry::empty`])?
     pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
+        self.entries.is_empty() && self.gemm_entries.is_empty()
+    }
+
+    /// Add (or replace, by name) a batched-GEMM backend.
+    pub fn register_gemm(&mut self, kernel: Arc<dyn GemmKernel>) {
+        if let Some(slot) = self.gemm_entries.iter_mut().find(|e| e.name() == kernel.name()) {
+            *slot = kernel;
+        } else {
+            self.gemm_entries.push(kernel);
+        }
+    }
+
+    /// Look a GEMM backend up by registry name.
+    ///
+    /// ```
+    /// use fullpack::kernels::KernelRegistry;
+    ///
+    /// let reg = KernelRegistry::global();
+    /// assert!(reg.get_gemm("fullpack-w4a8-gemm").is_some());
+    /// assert!(reg.get_gemm("ruy-like-w8a8-gemm").is_some());
+    /// assert!(reg.get_gemm("fullpack-w4a8").is_none()); // GEMV namespace
+    /// ```
+    pub fn get_gemm(&self, name: &str) -> Option<&Arc<dyn GemmKernel>> {
+        self.gemm_entries.iter().find(|e| e.name() == name)
+    }
+
+    /// Iterate every registered GEMM backend, in registration order.
+    pub fn gemm_iter(&self) -> impl Iterator<Item = &Arc<dyn GemmKernel>> {
+        self.gemm_entries.iter()
+    }
+
+    /// Registered GEMM backend names, in registration order.
+    pub fn gemm_names(&self) -> Vec<&'static str> {
+        self.gemm_entries.iter().map(|e| e.name()).collect()
+    }
+
+    /// GEMM backends that can natively execute variant `v`.
+    pub fn gemm_supporting(&self, v: Variant) -> Vec<&Arc<dyn GemmKernel>> {
+        self.gemm_entries.iter().filter(|e| e.supports(v)).collect()
+    }
+
+    /// Number of registered GEMM backends.
+    pub fn gemm_len(&self) -> usize {
+        self.gemm_entries.len()
     }
 }
 
@@ -604,6 +815,81 @@ mod tests {
         names.sort_unstable();
         names.dedup();
         assert_eq!(names.len(), reg.len());
+        // the GEMM tier: 3 fullpack + ruy-like rival + naive oracle
+        assert_eq!(reg.gemm_len(), 5);
+        for name in [
+            "fullpack-w4a8-gemm",
+            "fullpack-w2a8-gemm",
+            "fullpack-w1a8-gemm",
+            "ruy-like-w8a8-gemm",
+            "naive-oracle-gemm",
+        ] {
+            assert!(reg.get_gemm(name).is_some(), "{name} missing");
+        }
+        let mut gnames = reg.gemm_names();
+        gnames.sort_unstable();
+        gnames.dedup();
+        assert_eq!(gnames.len(), reg.gemm_len());
+        // the namespaces are disjoint
+        for g in reg.gemm_names() {
+            assert!(reg.get(g).is_none(), "{g} in both namespaces");
+        }
+    }
+
+    #[test]
+    fn gemm_tier_supports_and_replaces() {
+        let reg = KernelRegistry::global();
+        let w4a8 = Variant::parse("w4a8").unwrap();
+        let names: Vec<_> = reg.gemm_supporting(w4a8).iter().map(|k| k.name()).collect();
+        assert!(names.contains(&"fullpack-w4a8-gemm"));
+        assert!(names.contains(&"naive-oracle-gemm"));
+        assert!(!names.contains(&"ruy-like-w8a8-gemm"));
+        let w8a8 = Variant::parse("w8a8").unwrap();
+        let names8: Vec<_> = reg.gemm_supporting(w8a8).iter().map(|k| k.name()).collect();
+        assert!(names8.contains(&"ruy-like-w8a8-gemm"));
+        assert!(!names8.contains(&"fullpack-w4a8-gemm"));
+        // register_gemm replaces by name
+        let mut local = KernelRegistry::with_builtins();
+        let n = local.gemm_len();
+        local.register_gemm(Arc::new(RuyLikeGemmKernel));
+        assert_eq!(local.gemm_len(), n);
+    }
+
+    #[test]
+    fn fullpack_gemm_backend_matches_per_column_oracle() {
+        let reg = KernelRegistry::global();
+        for v in FULLPACK_GEMM_VARIANTS {
+            let g = reg.get_gemm(fullpack_gemm_kernel_name(v).unwrap()).unwrap();
+            let (z, k, batch) = (8usize, 50usize, 3usize);
+            let w = rngvals(v.w, z * k, 91);
+            let wts = g.prepare(&w, z, k).unwrap();
+            let kp = wts.k_padded();
+            assert!(kp >= k);
+            let cols: Vec<Vec<i8>> = (0..batch)
+                .map(|c| {
+                    let mut col = rngvals(BitWidth::B8, k, 92 + c as u64);
+                    col.resize(kp, 0);
+                    col
+                })
+                .collect();
+            let col_refs: Vec<&[i8]> = cols.iter().map(|c| c.as_slice()).collect();
+            let mut out = vec![0i32; z * batch];
+            g.gemm(&wts, &col_refs, &mut out).unwrap();
+            let wp = crate::pack::pad_rows(&w, z, k, kp);
+            for (c, col) in cols.iter().enumerate() {
+                assert_eq!(
+                    &out[c * z..(c + 1) * z],
+                    oracle_gemv(&wp, col, z, kp).as_slice(),
+                    "{v} col {c}"
+                );
+            }
+            // shape rejection: wrong out length, short column
+            let mut bad = vec![0i32; z * batch - 1];
+            assert!(g.gemm(&wts, &col_refs, &mut bad).is_err());
+            let short = vec![0i8; kp.saturating_sub(1)];
+            let mut out1 = vec![0i32; z];
+            assert!(g.gemm(&wts, &[short.as_slice()], &mut out1).is_err());
+        }
     }
 
     #[test]

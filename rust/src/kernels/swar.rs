@@ -36,7 +36,7 @@
 //! construction).
 #![warn(missing_docs)]
 
-use super::api::{check_rows, wrong_layout, GemvKernel, Weights};
+use super::api::{check_gemm_shape, check_rows, wrong_layout, GemvKernel, Weights};
 use super::fullpack::extract;
 use super::{ActVec, KernelError};
 use crate::costmodel::Method;
@@ -294,6 +294,30 @@ impl GemvKernel for SwarKernel {
     fn cost_method(&self) -> Option<Method> {
         Some(Method::FullPackSwar(self.variant))
     }
+
+    /// Batched calls on the SWAR layout delegate to the FullPack GEMM
+    /// extension over the shared packed matrix: extracting each weight
+    /// block once and reusing it across all columns beats running the
+    /// per-column bias/flush dance `batch` times (the row-sum side
+    /// table is a GEMV-only artifact — the GEMM path extracts signed
+    /// weights directly and needs no unbiasing).
+    fn gemm(&self, w: &Weights, cols: &[&[i8]], out: &mut [i32]) -> Result<(), KernelError> {
+        check_gemm_shape(w, cols, out)?;
+        match w {
+            Weights::SwarPacked { m, .. } if m.bits().is_sub_byte() => {
+                super::fullpack_gemm::gemm_fullpack_dyn(m, cols, out)
+            }
+            // the tier's w8a8 entry (plain packed layout) and anything
+            // else keep the repeated-GEMV default
+            _ => {
+                let z = w.rows();
+                for (c, col) in cols.iter().enumerate() {
+                    self.gemv_at(w, ActVec::I8(col), &mut out[c * z..(c + 1) * z], 0)?;
+                }
+                Ok(())
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -403,6 +427,35 @@ mod tests {
         let k8 = SwarKernel::new(Variant::parse("w8a8").unwrap()).unwrap();
         k8.gemv_at(&w, ActVec::I8(&a), &mut out, 0).unwrap();
         assert!(out.iter().all(|&y| y == 64));
+    }
+
+    #[test]
+    fn swar_gemm_delegates_to_the_extract_once_extension() {
+        // batched calls on the SwarPacked layout match the per-column
+        // SWAR GEMV bit-for-bit (both equal the oracle)
+        let kernel = SwarKernel::new(Variant::parse("w2a8").unwrap()).unwrap();
+        let (z, k, batch) = (8usize, 100usize, 3usize);
+        let w = rngvals(BitWidth::B2, z * k, 51);
+        let wts = kernel.prepare(&w, z, k).unwrap();
+        let kp = wts.k_padded();
+        let cols: Vec<Vec<i8>> = (0..batch)
+            .map(|c| {
+                let mut col = rngvals(BitWidth::B8, k, 52 + c as u64);
+                col.resize(kp, 0);
+                col
+            })
+            .collect();
+        let col_refs: Vec<&[i8]> = cols.iter().map(|c| c.as_slice()).collect();
+        let mut out = vec![0i32; z * batch];
+        kernel.gemm(&wts, &col_refs, &mut out).unwrap();
+        for (c, col) in cols.iter().enumerate() {
+            let mut one = vec![0i32; z];
+            kernel.gemv_at(&wts, ActVec::I8(col), &mut one, 0).unwrap();
+            assert_eq!(&out[c * z..(c + 1) * z], one.as_slice(), "col {c}");
+        }
+        // shape rejection
+        let mut bad = vec![0i32; z * batch - 1];
+        assert!(kernel.gemm(&wts, &col_refs, &mut bad).is_err());
     }
 
     #[test]

@@ -249,53 +249,85 @@ impl DeepSpeech {
     /// Returns (logits, per-layer elapsed nanoseconds) — the per-layer
     /// breakdown is exactly what Fig. 1 / Fig. 10 plot.
     pub fn forward_timed(&self, frames: &[f32]) -> (Vec<f32>, Vec<(&'static str, u128)>) {
+        self.forward_batch(&[frames]).pop().expect("one request in, one result out")
+    }
+
+    /// Batched forward over `n` independent requests — the serving
+    /// engine's multi-request dispatch (DESIGN.md §9): all requests'
+    /// frames are stacked into `n · time_steps` columns so each FC
+    /// layer executes as **one** batched GEMM call, amortizing the
+    /// weight pass across the whole flush; the recurrent LSTM scans
+    /// stay per-request single-batch GEMVs (the FullPack path — a
+    /// recurrence cannot batch across time).  Per-request results are
+    /// bit-identical to `n` separate [`DeepSpeech::forward_timed`]
+    /// calls because batched GEMM is column-independent integer math
+    /// (pinned by `rust/tests/gemm_differential.rs`).
+    ///
+    /// Returns one `(logits, layer_times)` pair per request; the layer
+    /// times are the shared group-level measurements.
+    pub fn forward_batch(&self, frames: &[&[f32]]) -> Vec<(Vec<f32>, Vec<(&'static str, u128)>)> {
         let cfg = self.config;
         let t = cfg.time_steps;
-        assert_eq!(frames.len(), t * cfg.n_input);
+        let n = frames.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        for f in frames {
+            assert_eq!(f.len(), t * cfg.n_input, "bad frame window");
+        }
+        let cols = n * t;
         let mut times = Vec::new();
         let s_act = 0.05f32;
 
-        // FC front-end (batch GEMM, W8A8 — Ruy path)
-        let mut cur: Vec<f32> = frames.to_vec();
+        // FC front-end: one GEMM over all `cols` columns (W8A8 — the
+        // plan's GEMM backend)
+        let mut cur: Vec<f32> = Vec::with_capacity(cols * cfg.n_input);
+        for f in frames {
+            cur.extend_from_slice(f);
+        }
         let mut dim = cfg.n_input;
         let mut fc_idx = 0;
         for name in ["fc1", "fc2", "fc3"] {
             let start = std::time::Instant::now();
-            cur = self.fc_forward(fc_idx, &cur, t, dim, s_act, true);
+            cur = self.fc_forward(fc_idx, &cur, cols, dim, s_act, true);
             dim = self.fc_weights[fc_idx].rows();
             times.push((name, start.elapsed().as_nanos()));
             fc_idx += 1;
         }
 
-        // LSTM scan — single-batch steps (FullPack path)
+        // LSTM scans — per-request single-batch steps (FullPack path)
         let start = std::time::Instant::now();
         let hdim = cfg.n_hidden;
-        let mut h_q = vec![0i8; hdim];
-        let mut c = vec![0.0f32; hdim];
-        let mut hs = vec![0.0f32; t * hdim];
+        let mut hs = vec![0.0f32; cols * hdim];
         let mut scratch = LstmScratch::default();
-        for step in 0..t {
-            let x = &cur[step * hdim..(step + 1) * hdim];
-            let x_q = self.quant_act(x, self.s_x);
-            let (h_f, c_n) = self.lstm_step(&x_q, &h_q, &c, &mut scratch);
-            h_q = self.quant_act(&h_f, self.s_h);
-            c = c_n;
-            hs[step * hdim..(step + 1) * hdim].copy_from_slice(&h_f);
+        for r in 0..n {
+            let mut h_q = vec![0i8; hdim];
+            let mut c = vec![0.0f32; hdim];
+            for step in 0..t {
+                let row = (r * t + step) * hdim;
+                let x = &cur[row..row + hdim];
+                let x_q = self.quant_act(x, self.s_x);
+                let (h_f, c_n) = self.lstm_step(&x_q, &h_q, &c, &mut scratch);
+                h_q = self.quant_act(&h_f, self.s_h);
+                c = c_n;
+                hs[row..row + hdim].copy_from_slice(&h_f);
+            }
         }
         times.push(("lstm", start.elapsed().as_nanos()));
 
-        // FC back-end
+        // FC back-end: batched over all columns again
         let mut out = hs;
         let mut dim2 = hdim;
         for name in ["fc5", "fc6"] {
             let start = std::time::Instant::now();
             let relu = name == "fc5";
-            out = self.fc_forward(fc_idx, &out, t, dim2, s_act, relu);
+            out = self.fc_forward(fc_idx, &out, cols, dim2, s_act, relu);
             dim2 = self.fc_weights[fc_idx].rows();
             times.push((name, start.elapsed().as_nanos()));
             fc_idx += 1;
         }
-        (out, times)
+        let per = t * cfg.n_output;
+        (0..n).map(|r| (out[r * per..(r + 1) * per].to_vec(), times.clone())).collect()
     }
 
     fn fc_forward(
@@ -393,6 +425,35 @@ mod tests {
         assert_eq!(naive.forward_timed(&frames).0, base);
         // a kernel that cannot run the variant is a build-time error
         assert!(DeepSpeech::new(cfg, v, 7).with_lstm_kernel("ulppack-w2a2").is_err());
+    }
+
+    #[test]
+    fn forward_batch_is_bit_identical_to_per_request() {
+        // the engine's multi-request GEMM dispatch cannot change
+        // results — only amortize weight passes
+        let cfg = DeepSpeechConfig::TINY;
+        for vname in ["w4a8", "w2a2", "w8a8"] {
+            let v = Variant::parse(vname).unwrap();
+            let m = DeepSpeech::new(cfg, v, 13);
+            let reqs: Vec<Vec<f32>> = (0..3)
+                .map(|r| {
+                    (0..cfg.time_steps * cfg.n_input)
+                        .map(|i| ((i + r * 37) as f32 * 0.011).sin())
+                        .collect()
+                })
+                .collect();
+            let refs: Vec<&[f32]> = reqs.iter().map(|f| f.as_slice()).collect();
+            let batched = m.forward_batch(&refs);
+            assert_eq!(batched.len(), 3);
+            for (r, f) in reqs.iter().enumerate() {
+                let single = m.forward_timed(f).0;
+                assert_eq!(batched[r].0, single, "{vname} request {r}");
+                assert_eq!(batched[r].1.len(), 6);
+            }
+        }
+        // the empty flush is a no-op
+        let m = DeepSpeech::new(cfg, Variant::parse("w4a8").unwrap(), 13);
+        assert!(m.forward_batch(&[]).is_empty());
     }
 
     #[test]

@@ -204,6 +204,83 @@ pub fn write_bench_json(
     std::fs::write(path, bench_records_json(source, host, note, records))
 }
 
+/// One batched-GEMM measurement destined for `BENCH_gemm.json`:
+/// backend × variant × shape × batch → time for **one whole batched
+/// call**.  `ns_per_col` is the amortization metric the crossover
+/// table tracks (EXPERIMENTS.md): per-column cost falling with batch
+/// is the GEMM tier's whole argument.
+#[derive(Debug, Clone)]
+pub struct GemmBenchRecord {
+    /// registry GEMM backend name (`fullpack-w4a8-gemm`, ...), or a
+    /// labeled protocol like `repeated:fullpack-w4a8`
+    pub kernel: String,
+    /// data variant the backend ran (`w4a8`, ...)
+    pub variant: String,
+    /// output rows
+    pub z: usize,
+    /// logical depth
+    pub k: usize,
+    /// batch columns per call
+    pub batch: usize,
+    /// median wall-clock nanoseconds of one batched call
+    pub median_ns: f64,
+    /// timed iterations behind the median (0 = modeled, not measured)
+    pub iters: usize,
+}
+
+impl GemmBenchRecord {
+    /// Nanoseconds per batch column — the amortization metric.
+    pub fn ns_per_col(&self) -> f64 {
+        self.median_ns / self.batch.max(1) as f64
+    }
+}
+
+/// Render the `BENCH_gemm.json` document (schema `bench-gemm/v1`).
+/// Same provenance convention as [`bench_records_json`].
+pub fn gemm_records_json(
+    source: &str,
+    host: &str,
+    note: &str,
+    records: &[GemmBenchRecord],
+) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"schema\": \"bench-gemm/v1\",\n");
+    out.push_str(&format!("  \"source\": \"{}\",\n", json_escape(source)));
+    out.push_str(&format!("  \"host\": \"{}\",\n", json_escape(host)));
+    out.push_str(&format!("  \"note\": \"{}\",\n", json_escape(note)));
+    out.push_str("  \"records\": [\n");
+    for (i, r) in records.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"kernel\": \"{}\", \"variant\": \"{}\", \"z\": {}, \"k\": {}, \
+             \"batch\": {}, \"median_ns\": {:.1}, \"ns_per_col\": {:.1}, \"iters\": {}}}{}\n",
+            json_escape(&r.kernel),
+            json_escape(&r.variant),
+            r.z,
+            r.k,
+            r.batch,
+            r.median_ns,
+            r.ns_per_col(),
+            r.iters,
+            if i + 1 < records.len() { "," } else { "" },
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// Write [`gemm_records_json`] to `path` (the repo convention is
+/// `BENCH_gemm.json` at the repository root).
+pub fn write_gemm_bench_json(
+    path: &str,
+    source: &str,
+    host: &str,
+    note: &str,
+    records: &[GemmBenchRecord],
+) -> std::io::Result<()> {
+    std::fs::write(path, gemm_records_json(source, host, note, records))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -284,6 +361,42 @@ mod tests {
         let r0 = recs[0].get("median_ns").unwrap().as_f64().unwrap();
         let r1 = recs[1].get("median_ns").unwrap().as_f64().unwrap();
         assert!((r0 / r1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gemm_json_roundtrips_through_the_parser() {
+        let records = vec![
+            GemmBenchRecord {
+                kernel: "fullpack-w4a8-gemm".into(),
+                variant: "w4a8".into(),
+                z: 1024,
+                k: 2048,
+                batch: 16,
+                median_ns: 8.0e5,
+                iters: 20,
+            },
+            GemmBenchRecord {
+                kernel: "repeated:fullpack-w4a8".into(),
+                variant: "w4a8".into(),
+                z: 1024,
+                k: 2048,
+                batch: 16,
+                median_ns: 1.6e6,
+                iters: 20,
+            },
+        ];
+        let text = gemm_records_json("measured", "test-host", "", &records);
+        let j = Json::parse(&text).expect("emitted JSON parses");
+        assert_eq!(j.get("schema").unwrap().as_str(), Some("bench-gemm/v1"));
+        let recs = j.get("records").unwrap().as_arr().unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].get("batch").unwrap().as_usize(), Some(16));
+        let per_col = recs[0].get("ns_per_col").unwrap().as_f64().unwrap();
+        assert!((per_col - 8.0e5 / 16.0).abs() < 0.5);
+        // the crossover ratio is recomputable from the records
+        let r0 = recs[0].get("median_ns").unwrap().as_f64().unwrap();
+        let r1 = recs[1].get("median_ns").unwrap().as_f64().unwrap();
+        assert!((r1 / r0 - 2.0).abs() < 1e-9);
     }
 
     #[test]

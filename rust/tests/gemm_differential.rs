@@ -1,0 +1,268 @@
+//! Differential suite across the GEMV/GEMM boundary (DESIGN.md §9):
+//! for every registered GEMM backend, on every bit-width it can run
+//! (natively or widened), across batch sizes and unaligned depths,
+//!
+//!   `GemmKernel::gemm  ≡  repeated GemvKernel::gemv_at  ≡  naive oracle`
+//!
+//! — the contract that lets the router promote a flushed multi-request
+//! batch onto one GEMM call without changing a single output bit.
+//! Also pins the shape-error rejection paths and the `k_padded` tail
+//! handling of `gemm_fullpack`.
+
+use fullpack::kernels::fullpack_gemm::gemm_fullpack_dyn;
+use fullpack::kernels::registry::fullpack_kernel_name;
+use fullpack::kernels::testutil::{oracle_gemv, rngvals};
+use fullpack::kernels::{
+    ActVec, GemmKernel, GemvKernel, KernelRegistry, LayerShape, PlanBuilder,
+};
+use fullpack::pack::{BitWidth, PackedMatrix, Variant};
+use fullpack::util::proptest_lite::{run_prop, Gen};
+use std::sync::Arc;
+
+/// The bit-widths of the differential grid (weights; activations int8).
+const WIDTHS: [BitWidth; 4] = [BitWidth::B1, BitWidth::B2, BitWidth::B4, BitWidth::B8];
+/// Batch sizes: singleton, the promotion threshold, odd, a full flush,
+/// and one past a full flush.
+const BATCHES: [usize; 5] = [1, 2, 3, 16, 17];
+/// Depths: below/at/above the 8-byte SWAR chunk and the packed group,
+/// plus unaligned serving depths — every one exercises a distinct
+/// padding/tail configuration.
+const DEPTHS: [usize; 9] = [1, 7, 8, 9, 63, 64, 65, 127, 129];
+
+const W8A8: Variant = Variant::new(BitWidth::B8, BitWidth::B8);
+
+/// The variant a backend executes for data quantized as `v`: native,
+/// or widened onto int8 (value-preserving — sub-byte values pass
+/// through the int8 layout losslessly), or `None` if neither.
+fn exec_variant(g: &Arc<dyn GemmKernel>, v: Variant) -> Option<Variant> {
+    if g.supports(v) {
+        Some(v)
+    } else if g.supports(W8A8) {
+        Some(W8A8)
+    } else {
+        None
+    }
+}
+
+/// The same-layout GEMV reference for an exec variant: the FullPack
+/// GEMV kernel for sub-byte data, Ruy for int8.
+fn gemv_reference(ev: Variant) -> &'static Arc<dyn GemvKernel> {
+    let name = if ev.w.is_sub_byte() { fullpack_kernel_name(ev) } else { "ruy-w8a8" };
+    KernelRegistry::global().get(name).expect("reference kernel registered")
+}
+
+/// Scalar int32 ground truth over the *logical* operands — padding
+/// contributes zero in every layout, so depth-`k` logical math
+/// (`testutil::oracle_gemv`, which truncates `col` to `k`) is the
+/// oracle for all of them.
+fn logical_oracle(w: &[i8], col: &[i8], z: usize, k: usize) -> Vec<i32> {
+    oracle_gemv(w, &col[..k.min(col.len())], z, k)
+}
+
+/// One differential cell: backend × width × batch × depth.
+fn check_cell(g: &Arc<dyn GemmKernel>, bits: BitWidth, z: usize, k: usize, batch: usize, seed: u64) {
+    let v = Variant::new(bits, BitWidth::B8);
+    let Some(ev) = exec_variant(g, v) else { return };
+    let w = rngvals(bits, z * k, seed);
+    let wts = g.prepare(&w, z, k).expect("prepare");
+    let kp = wts.k_padded();
+    assert!(kp >= k, "{}: k_padded {kp} < k {k}", g.name());
+    let cols: Vec<Vec<i8>> = (0..batch)
+        .map(|c| {
+            let mut col = rngvals(BitWidth::B8, k, seed + 1 + c as u64);
+            col.resize(kp, 0);
+            col
+        })
+        .collect();
+    let col_refs: Vec<&[i8]> = cols.iter().map(|c| c.as_slice()).collect();
+    let mut out = vec![0i32; z * batch];
+    g.gemm(&wts, &col_refs, &mut out).expect("gemm");
+
+    // repeated GEMV on the reference kernel's own layout
+    let gemv = gemv_reference(ev);
+    let gw = gemv.prepare(&w, z, k).expect("gemv prepare");
+    let gkp = gw.k_padded();
+    for (c, col) in cols.iter().enumerate() {
+        let oracle = logical_oracle(&w, col, z, k);
+        let got = &out[c * z..(c + 1) * z];
+        assert_eq!(
+            got,
+            oracle.as_slice(),
+            "{} {bits:?} z={z} k={k} batch={batch} col {c}: gemm vs oracle",
+            g.name()
+        );
+        let mut acol = col.clone();
+        acol.resize(gkp.max(col.len()), 0);
+        let mut one = vec![0i32; z];
+        gemv.gemv_at(&gw, ActVec::I8(&acol), &mut one, 0).expect("gemv");
+        assert_eq!(
+            one.as_slice(),
+            got,
+            "{} {bits:?} z={z} k={k} batch={batch} col {c}: repeated gemv vs gemm",
+            g.name()
+        );
+    }
+}
+
+#[test]
+fn every_gemm_backend_matches_repeated_gemv_and_oracle() {
+    let reg = KernelRegistry::global();
+    assert!(reg.gemm_len() >= 5, "GEMM roster shrank: {}", reg.gemm_len());
+    let mut covered = 0usize;
+    for g in reg.gemm_iter() {
+        for bits in WIDTHS {
+            let v = Variant::new(bits, BitWidth::B8);
+            if exec_variant(g, v).is_none() {
+                continue;
+            }
+            for (bi, &batch) in BATCHES.iter().enumerate() {
+                for (ki, &k) in DEPTHS.iter().enumerate() {
+                    check_cell(g, bits, 8, k, batch, 9000 + (bi * 100 + ki) as u64);
+                }
+            }
+            covered += 1;
+        }
+    }
+    // floor: 3 fullpack-gemm × 1 native width + ruy-like × 4 widths
+    // (native + widened) + oracle × 4 native widths
+    assert!(covered >= 11, "backend×width coverage shrank: {covered}");
+}
+
+#[test]
+fn empty_batch_is_a_no_op_for_every_backend() {
+    let reg = KernelRegistry::global();
+    for g in reg.gemm_iter() {
+        for bits in WIDTHS {
+            let v = Variant::new(bits, BitWidth::B8);
+            if exec_variant(g, v).is_none() {
+                continue;
+            }
+            let w = rngvals(bits, 8 * 64, 3);
+            let wts = g.prepare(&w, 8, 64).unwrap();
+            let mut out = vec![];
+            g.gemm(&wts, &[], &mut out).unwrap();
+        }
+    }
+}
+
+#[test]
+fn gemm_fullpack_rejects_bad_shapes() {
+    let w = rngvals(BitWidth::B4, 8 * 32, 1);
+    let wp = PackedMatrix::from_i8(&w, 8, 32, BitWidth::B4).unwrap();
+    let a = vec![0i8; 32];
+    // wrong output length
+    let mut bad = vec![0i32; 7];
+    assert!(gemm_fullpack_dyn(&wp, &[&a], &mut bad).is_err());
+    let mut bad2 = vec![0i32; 9];
+    assert!(gemm_fullpack_dyn(&wp, &[&a], &mut bad2).is_err());
+    // column shorter than the padded depth
+    let short = vec![0i8; 31];
+    let mut out = vec![0i32; 8];
+    assert!(gemm_fullpack_dyn(&wp, &[&short], &mut out).is_err());
+    // only one bad column in a batch still rejects
+    let mut out2 = vec![0i32; 16];
+    assert!(gemm_fullpack_dyn(&wp, &[&a, &short], &mut out2).is_err());
+    // 8-bit weights are not a FullPack GEMM case
+    let w8 = PackedMatrix::from_i8(&vec![0i8; 8 * 32], 8, 32, BitWidth::B8).unwrap();
+    assert!(gemm_fullpack_dyn(&w8, &[&a], &mut out).is_err());
+}
+
+#[test]
+fn gemm_backends_reject_foreign_layouts() {
+    let reg = KernelRegistry::global();
+    // the oracle's unpacked layout is foreign to every other backend
+    let oracle = reg.get_gemm("naive-oracle-gemm").unwrap();
+    let w = rngvals(BitWidth::B4, 8 * 64, 5);
+    let foreign = oracle.prepare(&w, 8, 64).unwrap();
+    let col = vec![0i8; 64];
+    let mut out = vec![0i32; 8];
+    for name in ["fullpack-w4a8-gemm", "ruy-like-w8a8-gemm"] {
+        let g = reg.get_gemm(name).unwrap();
+        assert!(g.gemm(&foreign, &[col.as_slice()], &mut out).is_err(), "{name}");
+    }
+    // and the packed sub-byte layout is foreign to the int8 rival
+    let fp = reg.get_gemm("fullpack-w4a8-gemm").unwrap();
+    let packed = fp.prepare(&w, 8, 64).unwrap();
+    let ruy = reg.get_gemm("ruy-like-w8a8-gemm").unwrap();
+    assert!(ruy.gemm(&packed, &[col.as_slice()], &mut out).is_err());
+}
+
+#[test]
+fn k_padded_tail_is_zero_neutral() {
+    // for unaligned depths the packed tail is zero-filled; columns
+    // padded with *nonzero* garbage past the logical depth must still
+    // produce the logical result when the weight tail is zero
+    let reg = KernelRegistry::global();
+    for (vname, bits) in [("w4a8", BitWidth::B4), ("w2a8", BitWidth::B2), ("w1a8", BitWidth::B1)] {
+        let g = reg.get_gemm(&format!("fullpack-{vname}-gemm")).unwrap();
+        let (z, k) = (4usize, 65usize);
+        let w = rngvals(bits, z * k, 17);
+        let wts = g.prepare(&w, z, k).unwrap();
+        let kp = wts.k_padded();
+        assert!(kp > k, "{vname}: depth 65 must pad");
+        let mut col = rngvals(BitWidth::B8, k, 18);
+        col.resize(kp, 0);
+        let mut poisoned = col.clone();
+        for x in poisoned[k..].iter_mut() {
+            *x = 77; // garbage in the padded region
+        }
+        let mut clean_out = vec![0i32; z];
+        let mut poisoned_out = vec![0i32; z];
+        g.gemm(&wts, &[col.as_slice()], &mut clean_out).unwrap();
+        g.gemm(&wts, &[poisoned.as_slice()], &mut poisoned_out).unwrap();
+        assert_eq!(clean_out, logical_oracle(&w, &col, z, k), "{vname}");
+        assert_eq!(clean_out, poisoned_out, "{vname}: weight tail not zero-neutral");
+    }
+}
+
+#[test]
+fn router_promoted_plans_are_differentially_correct() {
+    // the end-to-end path the engine takes: a prefer_gemm plan for a
+    // flushed batch, executed through Plan::execute_batch, must equal
+    // the per-column logical oracle
+    for vname in ["w4a8", "w2a8", "w1a8"] {
+        let v = Variant::parse(vname).unwrap();
+        let (z, k, batch) = (16usize, 129usize, 5usize);
+        let plan = PlanBuilder::new(LayerShape { z, k, batch }, v)
+            .prefer_gemm(true)
+            .build()
+            .unwrap();
+        assert_eq!(plan.kernel_name(), format!("fullpack-{vname}-gemm"));
+        let w = rngvals(v.w, z * k, 23);
+        let a = rngvals(BitWidth::B8, batch * k, 24);
+        let wts = plan.prepare_weights(&w).unwrap();
+        let mut out = vec![0i32; batch * z];
+        plan.execute_batch(&wts, &a, batch, &mut out).unwrap();
+        for b in 0..batch {
+            let col = &a[b * k..(b + 1) * k];
+            assert_eq!(
+                &out[b * z..(b + 1) * z],
+                logical_oracle(&w, col, z, k).as_slice(),
+                "{vname} col {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_differential_random_shapes() {
+    // randomized extension of the grid: arbitrary (z, k, batch) cells
+    // over a random backend × width, against the logical oracle
+    let reg = KernelRegistry::global();
+    let names = reg.gemm_names();
+    run_prop(60, |g: &mut Gen| {
+        let name = *g.pick(&names);
+        let backend = reg.get_gemm(name).unwrap();
+        let bits = *g.pick(&WIDTHS);
+        let v = Variant::new(bits, BitWidth::B8);
+        if exec_variant(backend, v).is_none() {
+            return true; // cell not applicable
+        }
+        let z = g.usize_in(1, 16);
+        let k = g.usize_in(1, 200);
+        let batch = g.usize_in(1, 6);
+        let seed = g.next_u64() % 10_000;
+        check_cell(backend, bits, z, k, batch, seed);
+        true
+    });
+}

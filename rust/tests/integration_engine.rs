@@ -120,6 +120,111 @@ fn router_counts_reflect_topology() {
 }
 
 #[test]
+fn producer_threads_every_reply_exactly_once_and_dispatch_counts_sum() {
+    use std::sync::atomic::Ordering::Relaxed;
+    // N producer threads × M requests each, against one worker with a
+    // generous flush deadline so concurrent arrivals coalesce: every
+    // reply arrives exactly once, and the batched + singleton dispatch
+    // counters sum to the request total
+    let producers = 4usize;
+    let per_producer = 6usize;
+    let total = (producers * per_producer) as u64;
+    let e = Engine::new(EngineConfig {
+        workers: 1,
+        batcher: BatcherConfig {
+            max_batch: 8,
+            max_wait: std::time::Duration::from_millis(100),
+            max_queue: 256,
+        },
+        router: RouterConfig::default(),
+    });
+    e.register_model(
+        "ds",
+        DeepSpeech::new(DeepSpeechConfig::TINY, Variant::parse("w4a8").unwrap(), 11),
+    );
+    let e = std::sync::Arc::new(e);
+    let f = frames(DeepSpeechConfig::TINY);
+    let baseline = e.infer("ds", f.clone()).unwrap().logits;
+
+    let mut handles = Vec::new();
+    for p in 0..producers {
+        let e = e.clone();
+        let f = f.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut ids = Vec::new();
+            let rxs: Vec<_> = (0..per_producer)
+                .map(|_| e.submit("ds", f.clone()).expect("queue sized for the load"))
+                .collect();
+            for rx in rxs {
+                let r = rx.recv().expect("engine never drops accepted work").expect("infer ok");
+                ids.push(r.id);
+            }
+            (p, ids)
+        }));
+    }
+    let mut all_ids = Vec::new();
+    for h in handles {
+        let (_, ids) = h.join().unwrap();
+        assert_eq!(ids.len(), per_producer);
+        all_ids.extend(ids);
+    }
+    // exactly once: every accepted request answered, no id twice
+    all_ids.sort_unstable();
+    all_ids.dedup();
+    assert_eq!(all_ids.len(), producers * per_producer);
+    assert_eq!(e.metrics().completed.load(Relaxed), total + 1); // + baseline
+    // dispatch accounting: batched + singleton == total handed to workers
+    let (batched, singleton) = e.metrics().dispatch_counts();
+    assert_eq!(batched + singleton, total + 1);
+    // with 24 concurrent arrivals against one worker and a 100ms
+    // deadline, at least one flush must have coalesced ≥2 requests into
+    // a single GemmKernel::gemm dispatch
+    assert!(batched >= 2, "no multi-request GEMM dispatch (batched={batched})");
+    assert!(
+        e.metrics().batched_dispatches.load(Relaxed) >= 1,
+        "no batched dispatch recorded"
+    );
+    // batched execution is bit-identical to the singleton baseline
+    let again = e.infer("ds", f).unwrap().logits;
+    assert_eq!(again, baseline);
+}
+
+#[test]
+fn batched_dispatch_replies_match_singleton_results() {
+    use std::sync::atomic::Ordering::Relaxed;
+    // force one guaranteed multi-request flush: fill the batcher to
+    // max_batch while the single worker is still parked on the deadline
+    let e = Engine::new(EngineConfig {
+        workers: 1,
+        batcher: BatcherConfig {
+            max_batch: 4,
+            max_wait: std::time::Duration::from_millis(200),
+            max_queue: 64,
+        },
+        router: RouterConfig::default(),
+    });
+    e.register_model(
+        "ds",
+        DeepSpeech::new(DeepSpeechConfig::TINY, Variant::parse("w2a8").unwrap(), 11),
+    );
+    let f = frames(DeepSpeechConfig::TINY);
+    // distinct inputs so a scatter bug (column/request swap) is visible
+    let inputs: Vec<Vec<f32>> = (0..4)
+        .map(|r| f.iter().map(|&x| x + r as f32 * 0.25).collect())
+        .collect();
+    let rxs: Vec<_> = inputs.iter().map(|f| e.submit("ds", f.clone()).unwrap()).collect();
+    let replies: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
+    // each reply equals a fresh singleton inference of ITS OWN input
+    for (input, reply) in inputs.iter().zip(&replies) {
+        let single = e.infer("ds", input.clone()).unwrap();
+        assert_eq!(reply.logits, single.logits);
+    }
+    let (batched, singleton) = e.metrics().dispatch_counts();
+    assert_eq!(batched + singleton, 8);
+    assert_eq!(e.metrics().completed.load(Relaxed), 8);
+}
+
+#[test]
 fn batcher_generic_over_payload() {
     // the batcher is reusable for arbitrary work items
     let mut b: Batcher<String> = Batcher::new(BatcherConfig {

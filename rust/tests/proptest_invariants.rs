@@ -3,8 +3,10 @@
 //! simulator, the batcher and the router.
 
 use fullpack::coordinator::{Batcher, BatcherConfig};
-use fullpack::kernels::{gemv, pack_activations, ActVec};
-use fullpack::pack::{pack, unpack, BitWidth, PackedMatrix, Variant};
+use fullpack::kernels::{
+    gemv, pack_activations, ActVec, GemmKernel, GemvKernel, KernelRegistry, SwarKernel, Weights,
+};
+use fullpack::pack::{pack, pad_rows, unpack, BitWidth, PackedMatrix, Variant};
 use fullpack::quant::{dequantize, quantize};
 use fullpack::sim::{replay_gemv, CachePreset, GemvTraffic};
 use fullpack::util::proptest_lite::{run_prop, Gen};
@@ -163,6 +165,78 @@ fn prop_working_set_fits_no_steady_misses() {
         let cold = h.llc_stats().misses;
         replay_gemv(&mut h, &t);
         h.llc_stats().misses == cold
+    });
+}
+
+#[test]
+fn prop_pack_gemm_unpack_roundtrip() {
+    // layout invariant across the GEMV/GEMM boundary: packing a weight
+    // matrix (plain or SWAR side-table layout), running a batched GEMM
+    // over it, and unpacking it back must (a) recover the zero-padded
+    // original exactly and (b) leave every GEMM column equal to the
+    // logical oracle — so a layout change cannot silently corrupt
+    // batched results
+    let reg = KernelRegistry::global();
+    run_prop(40, |g| {
+        let bits = *g.pick(&SUB_BITS);
+        let v = Variant::new(bits, BitWidth::B8);
+        let z = g.usize_in(1, 12);
+        let k = g.usize_in(1, 200);
+        let batch = g.usize_in(1, 5);
+        let (lo, hi) = bits.value_range();
+        let w = g.vec_i8_in(lo, hi, z * k, z * k);
+
+        // plain packed layout via the GEMM backend
+        let gemm_name = fullpack::kernels::fullpack_gemm_kernel_name(v).unwrap();
+        let backend = reg.get_gemm(gemm_name).unwrap();
+        let wts = backend.prepare(&w, z, k).unwrap();
+        let kp = wts.k_padded();
+        let padded = pad_rows(&w, z, k, kp);
+        let wp = wts.as_packed().unwrap();
+        if wp.unpack_all() != padded {
+            return false; // pack→unpack lost or moved an element
+        }
+
+        // SWAR side-table layout: same packed bytes + exact row sums
+        let swar = SwarKernel::new(v).unwrap();
+        let swts = swar.prepare(&w, z, k).unwrap();
+        if swts.as_packed().unwrap().unpack_all() != padded {
+            return false;
+        }
+        let Weights::SwarPacked { row_sums, .. } = &swts else { return false };
+        let sums_ok = (0..z).all(|r| {
+            row_sums[r] == w[r * k..(r + 1) * k].iter().map(|&x| x as i64).sum::<i64>()
+        });
+        if !sums_ok {
+            return false;
+        }
+
+        // GEMM over both layouts matches the logical oracle per column
+        let cols: Vec<Vec<i8>> = (0..batch)
+            .map(|_| {
+                let mut col = g.vec_i8_in(-128, 127, k, k);
+                col.resize(kp, 0);
+                col
+            })
+            .collect();
+        let col_refs: Vec<&[i8]> = cols.iter().map(|c| c.as_slice()).collect();
+        let mut out = vec![0i32; z * batch];
+        backend.gemm(&wts, &col_refs, &mut out).unwrap();
+        let mut swar_out = vec![0i32; z * batch];
+        swar.gemm(&swts, &col_refs, &mut swar_out).unwrap();
+        if out != swar_out {
+            return false;
+        }
+        (0..batch).all(|c| {
+            (0..z).all(|r| {
+                let oracle: i32 = w[r * k..(r + 1) * k]
+                    .iter()
+                    .zip(&cols[c][..k])
+                    .map(|(&wv, &av)| wv as i32 * av as i32)
+                    .sum();
+                out[c * z + r] == oracle
+            })
+        })
     });
 }
 

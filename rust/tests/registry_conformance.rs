@@ -155,7 +155,7 @@ fn router_prefer_swar_routes_to_the_tier() {
         variant: Variant::parse(v).unwrap(),
     };
     assert_eq!(r.plan(&op(1, "w1a8")).unwrap().kernel_name(), "fullpack-w1a8-swar");
-    assert_eq!(r.plan(&op(16, "w1a8")).unwrap().kernel_name(), "ruy-w8a8");
+    assert_eq!(r.plan(&op(16, "w1a8")).unwrap().kernel_name(), "ruy-like-w8a8-gemm");
     assert_eq!(r.plan(&op(1, "w4a4")).unwrap().kernel_name(), "fullpack-w4a4");
     let (gemv, gemm) = r.counts();
     assert_eq!((gemv, gemm), (2, 1));
@@ -199,7 +199,10 @@ fn larger_shapes_and_row_parallel_agree() {
 
 /// The old `Router::route` truth table (paper §4.6), replayed against
 /// the Plan-emitting router: the old FullPack-GEMV path ⇔ a
-/// `fullpack-*` kernel, the old Ruy-GEMM path ⇔ `ruy-w8a8`.
+/// `fullpack-*` kernel; the old Ruy-GEMM path ⇔ `ruy-w8a8` for
+/// single-column ops and the first-class `ruy-like-w8a8-gemm` backend
+/// for batched ones (same protocol, same numbers — the widened
+/// consistency test below pins that).
 #[test]
 fn router_plans_reproduce_old_path_decisions() {
     let cases: &[(usize, &str, bool)] = &[
@@ -220,7 +223,8 @@ fn router_plans_reproduce_old_path_decisions() {
         if fullpack {
             assert_eq!(plan.kernel_name(), format!("fullpack-{vname}"), "batch={batch}");
         } else {
-            assert_eq!(plan.kernel_name(), "ruy-w8a8", "{vname} batch={batch}");
+            let expect = if batch > 1 { "ruy-like-w8a8-gemm" } else { "ruy-w8a8" };
+            assert_eq!(plan.kernel_name(), expect, "{vname} batch={batch}");
             assert_eq!(plan.exec_variant, Variant::parse("w8a8").unwrap());
         }
     }
@@ -246,7 +250,7 @@ fn widened_fallback_is_numerically_consistent() {
     let a = rngvals(v.a, k, 6);
     let gemv_plan = PlanBuilder::new(LayerShape { z, k, batch: 1 }, v).build().unwrap();
     let ruy_plan = PlanBuilder::new(LayerShape { z, k, batch: 2 }, v).build().unwrap();
-    assert_eq!(ruy_plan.kernel_name(), "ruy-w8a8");
+    assert_eq!(ruy_plan.kernel_name(), "ruy-like-w8a8-gemm");
     let mut out_fp = vec![0i32; z];
     let wf = gemv_plan.prepare_weights(&w).unwrap();
     gemv_plan.execute(&wf, &a, &mut out_fp).unwrap();
