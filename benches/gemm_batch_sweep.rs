@@ -3,26 +3,46 @@
 //! paper's Ruy-like W8A8 GEMM protocol, across flush sizes.  The
 //! crossover batch (first size where the batched call wins) feeds the
 //! EXPERIMENTS.md GEMM-vs-repeated-GEMV table; the raw records go to
-//! `BENCH_gemm.json` (schema `bench-gemm/v1`).  Running this bench on a
+//! `BENCH_gemm.json` (schema `bench-gemm/v2`: wall-clock timings plus
+//! the modeled per-level cache stats of each call from
+//! `costmodel::simulate_gemm_traced` — one weight pass for the GEMM
+//! tier, `batch` re-streams for the rivals).  Running this bench on a
 //! real host replaces the committed cost-model placeholder with
-//! measured numbers.
+//! measured timings (the cache columns stay model-side: hosts have no
+//! portable cache counters).
 //!
 //! Run: `cargo bench --bench gemm_batch_sweep` (QUICK=1 for less
 //! sampling; BENCH_OUT=path to redirect the JSON).
 
+use fullpack::costmodel::{simulate_gemm_traced, CoreModel, Method};
+use fullpack::figures::STEADY_CALLS;
 use fullpack::kernels::testutil::rngvals;
 use fullpack::kernels::{LayerShape, PlanBuilder, SelectPolicy};
 use fullpack::pack::{BitWidth, Variant};
+use fullpack::sim::CachePreset;
 use fullpack::util::bench::{bench, write_gemm_bench_json, GemmBenchRecord, Table};
 
 const VARIANTS: [&str; 3] = ["w4a8", "w2a8", "w1a8"];
 const BATCHES: [usize; 6] = [1, 2, 4, 8, 16, 32];
+
+/// The modeled cache half of one record: steady-state per-level stats
+/// of the batched call under the paper's default hierarchy.
+fn modeled_stats(method: Method, z: usize, k: usize, batch: usize) -> (u64, u64, u64, u64, u64) {
+    let core = CoreModel::ex5_big();
+    let (sim, replay) =
+        simulate_gemm_traced(method, z, k, batch, CachePreset::Gem5Ex5Big, &core, STEADY_CALLS);
+    (sim.l1.accesses, sim.l1.misses, sim.llc.accesses, sim.llc.misses, replay.weights.llc_misses)
+}
 
 fn main() {
     let quick = std::env::var("QUICK").is_ok();
     let ms = if quick { 8 } else { 50 };
     let (z, k) = (1024usize, 2048usize);
     let mut records: Vec<GemmBenchRecord> = Vec::new();
+    // the Ruy-like rival's traffic is variant-independent: model its
+    // cache stats once per batch, not once per variant
+    let ruy_stats: Vec<(u64, u64, u64, u64, u64)> =
+        BATCHES.iter().map(|&b| modeled_stats(Method::RuyW8A8, z, k, b)).collect();
     for vname in VARIANTS {
         let v = Variant::parse(vname).unwrap();
         println!("\n== {vname} {z}x{k} ==");
@@ -49,7 +69,7 @@ fn main() {
         let wv = gemv_plan.prepare_weights(&w).unwrap();
         let wr = ruy_plan.prepare_weights(&w).unwrap();
         let mut crossover: Option<usize> = None;
-        for batch in BATCHES {
+        for (bi, batch) in BATCHES.into_iter().enumerate() {
             let flat: Vec<i8> = (0..batch)
                 .flat_map(|c| rngvals(BitWidth::B8, k, 10 + c as u64))
                 .collect();
@@ -78,11 +98,16 @@ fn main() {
                 ms,
                 100_000,
             );
-            for (name, m) in [
-                (format!("fullpack-{vname}-gemm"), &mg),
-                (format!("repeated:fullpack-{vname}"), &mr),
-                ("ruy-like-w8a8-gemm".to_string(), &mruy),
+            for (name, m, method) in [
+                (format!("fullpack-{vname}-gemm"), &mg, Some(Method::FullPackGemm(v))),
+                (format!("repeated:fullpack-{vname}"), &mr, Some(Method::FullPack(v))),
+                ("ruy-like-w8a8-gemm".to_string(), &mruy, None),
             ] {
+                let (l1_accesses, l1_misses, llc_accesses, llc_misses, weight_llc_misses) =
+                    match method {
+                        Some(method) => modeled_stats(method, z, k, batch),
+                        None => ruy_stats[bi],
+                    };
                 records.push(GemmBenchRecord {
                     kernel: name,
                     variant: vname.to_string(),
@@ -91,6 +116,11 @@ fn main() {
                     batch,
                     median_ns: m.median_ns,
                     iters: m.iters,
+                    l1_accesses,
+                    l1_misses,
+                    llc_accesses,
+                    llc_misses,
+                    weight_llc_misses,
                 });
             }
             if crossover.is_none() && batch >= 2 && mg.median_ns < mr.median_ns {
@@ -114,7 +144,9 @@ fn main() {
     let host = format!("{}-{}", std::env::consts::ARCH, std::env::consts::OS);
     let note = "measured by benches/gemm_batch_sweep.rs; ns_per_col = median_ns / batch; \
                 repeated:* rows time `batch` back-to-back GEMV calls on the same weights; \
-                see EXPERIMENTS.md";
+                cache columns are MODELED (costmodel::simulate_gemm_traced, gem5-ex5-big \
+                preset, steady state) — one weight pass for fullpack-*-gemm, batch \
+                re-streams for rivals; see EXPERIMENTS.md";
     match write_gemm_bench_json(&out, "measured", &host, note, &records) {
         Ok(()) => println!("\nwrote {} records to {out}", records.len()),
         Err(e) => eprintln!("\nfailed to write {out}: {e}"),

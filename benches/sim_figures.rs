@@ -19,6 +19,8 @@ fn main() {
         ("fig8", sweeps::fig8),
         ("fig12", sweeps::fig12),
         ("fig13", sweeps::fig13),
+        // not a paper figure: the GEMM tier's memory-aware batch sweep
+        ("gemm-batch", sweeps::fig_gemm_batch),
     ] {
         let t0 = std::time::Instant::now();
         let report = f(sizes);

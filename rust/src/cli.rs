@@ -1,7 +1,7 @@
 //! Hand-rolled CLI (clap is unavailable offline — DESIGN.md §7).
 //!
 //! ```text
-//! fullpack simulate <fig4|fig5|fig6|fig7|fig8|fig10|fig12|fig13|all> [--quick] [--csv DIR]
+//! fullpack simulate <fig4|fig5|fig6|fig7|fig8|fig10|fig12|fig13|gemm-batch|all> [--quick] [--csv DIR]
 //! fullpack simulate --show-config [--preset NAME]
 //! fullpack bench <fig11|deepspeech> [--variant V] [--kernel NAME] [--ms N]
 //! fullpack serve [--variant V] [--kernel NAME] [--requests N] [--workers N] [--tiny]
@@ -73,8 +73,10 @@ pub const USAGE: &str = "\
 fullpack — sub-byte quantized inference engine (FullPack reproduction)
 
 USAGE:
-  fullpack simulate <fig4|fig5|fig6|fig7|fig8|fig10|fig12|fig13|all>
+  fullpack simulate <fig4|fig5|fig6|fig7|fig8|fig10|fig12|fig13|gemm-batch|all>
                     [--quick] [--csv DIR]      regenerate a paper figure
+                                               (gemm-batch: the GEMM tier's
+                                               memory-aware batch sweep)
   fullpack simulate --show-config [--preset P] print a cache preset
   fullpack bench fig11 [--ms N]                measured CNN-FC sweep (RPi substitution)
   fullpack bench deepspeech [--variant V] [--kernel NAME] [--breakdown] [--tiny]

@@ -329,32 +329,42 @@ impl Method {
     ///
     /// For [`Method::FullPackGemm`], per packed block of `G = 16·E`
     /// elements the weight load and the `2E−1` extraction shifts are
-    /// paid **once**, while the `E` activation loads and `2E` widening
-    /// MACs are paid per column — so per-column cost falls toward the
-    /// pure-MAC floor as batch grows.  Every other method models the
-    /// paper's protocol: `batch` back-to-back single-column calls
-    /// (`instr_mix × batch`).
+    /// paid once per `kernels::fullpack_gemm::COL_TILE`-column tile
+    /// (the kernel re-extracts per tile of 4, so amortization caps at
+    /// `COL_TILE` — charging one extraction per whole batch would
+    /// overstate large-batch gains), while the `E` activation loads
+    /// and `2E` widening MACs are paid per column — so per-column cost
+    /// falls toward the tile-amortized MAC floor as batch grows.
+    /// Every other method models the
+    /// paper's protocol: back-to-back whole calls of the method's own
+    /// per-call width — `batch` single-column calls for the GEMV
+    /// rivals, `⌈batch/8⌉` batch-8 calls for ULPPACK (charging it one
+    /// full call per column would overstate its cost ~8×).
     pub fn instr_mix_gemm(&self, z: usize, k: usize, batch: usize) -> InstrMix {
         let b = batch.max(1) as f64;
         if let Method::FullPackGemm(v) = self {
             let e = v.w.elems_per_byte() as f64;
             let kp = v.padded_depth(k) as f64;
             let blocks = kp / (16.0 * e);
-            // amortized once per block: 1 weight load, 2E−1 shifts, 2
-            // bookkeeping; per column: E act loads, 2E MACs, 1
-            // accumulator-tile op, 1 column step
+            let tiles =
+                batch.max(1).div_ceil(crate::kernels::fullpack_gemm::COL_TILE) as f64;
+            // amortized once per COL_TILE-column tile: 1 weight load,
+            // 2E−1 shifts, 2 bookkeeping; per column: E act loads, 2E
+            // MACs, 1 accumulator-tile op, 1 column step
             let per_row = InstrMix {
-                loads: blocks * (1.0 + b * e),
+                loads: blocks * (tiles + b * e),
                 stores: 0.0,
                 macs: blocks * b * 2.0 * e,
-                alus: blocks * ((2.0 * e - 1.0) + b),
-                scalar: blocks * (2.0 + b),
+                alus: blocks * (tiles * (2.0 * e - 1.0) + b),
+                scalar: blocks * (2.0 * tiles + b),
             };
             let row_overhead =
                 InstrMix { loads: 0.0, stores: 1.0, macs: 0.0, alus: 4.0, scalar: 6.0 };
             return per_row.add(&row_overhead.scale(b)).scale(z as f64);
         }
-        self.instr_mix(z, k).scale(b)
+        // whole calls of the method's own per-call width
+        let calls = batch.max(1).div_ceil(self.batch());
+        self.instr_mix(z, k).scale(calls as f64)
     }
 
     /// [`Method::instr_mix_gemm`] adjusted for the core's
@@ -613,6 +623,20 @@ mod tests {
         // repeated-GEMV modeling for non-GEMM methods is exactly b calls
         let r = Method::RuyW8A8;
         assert_eq!(r.instr_mix_gemm(z, k, 5), r.instr_mix(z, k).scale(5.0));
+    }
+
+    #[test]
+    fn ulppack_batched_cost_counts_whole_calls() {
+        // ULPPACK's protocol serves 8 columns per call: a 16-column
+        // batch is TWO batch-8 calls, not sixteen (charging a full
+        // call per column would overstate its cost ~8x and rig the
+        // batched CostModel argmin against it)
+        let m = Method::Ulppack { bits: 2 };
+        let one = m.instr_mix(256, 256);
+        assert_eq!(m.instr_mix_gemm(256, 256, 8), one.scale(1.0));
+        assert_eq!(m.instr_mix_gemm(256, 256, 9), one.scale(2.0));
+        assert_eq!(m.instr_mix_gemm(256, 256, 16), one.scale(2.0));
+        assert_eq!(m.instr_mix_gemm(256, 256, 17), one.scale(3.0));
     }
 
     #[test]

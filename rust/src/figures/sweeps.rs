@@ -1,10 +1,13 @@
 //! The simulated sweep figures: Fig. 4 (speedup heatmaps for all
 //! methods), Fig. 5 (what to quantize), Fig. 6 (LLC metrics), Fig. 7
 //! (LLC size/hierarchy sweep), Fig. 8 (narrower bit-widths), Fig. 12
-//! (instruction counts), Fig. 13 (IPC).
+//! (instruction counts), Fig. 13 (IPC) — plus the repo's own
+//! GEMM batch×size sweep ([`fig_gemm_batch`], not a paper figure: the
+//! paper routes GEMM to Ruy; DESIGN.md §9).
 
-use super::{geomean, grid_table, speedup, sweep};
-use crate::costmodel::{CoreModel, Method};
+use super::{geomean, grid_table, speedup, sweep, STEADY_CALLS};
+use crate::costmodel::{gemm_batch_threshold, simulate_gemm, CoreModel, Method};
+use crate::pack::Variant;
 use crate::sim::CachePreset;
 use crate::util::bench::Table;
 
@@ -207,6 +210,51 @@ pub fn fig13(sizes: &[usize]) -> FigureReport {
     FigureReport { id: "fig13", tables, headlines }
 }
 
+/// Batch columns of the [`fig_gemm_batch`] sweep rows.
+pub const GEMM_SWEEP_BATCHES: [usize; 5] = [1, 2, 4, 8, 16];
+
+/// The GEMM tier's batch×size sweep (EXPERIMENTS.md crossover table;
+/// DESIGN.md §9): memory-aware gain of **one** batched
+/// `FullPack-GEMM` call over `batch` repeated FullPack GEMVs on the
+/// same `n × n` weights (`T_repeated / T_gemm`, both through
+/// `costmodel::simulate_gemm` — the batched side replays a single
+/// blocked weight pass, the repeated side re-streams the matrix per
+/// column).  One table per GEMM-tier variant, rows = batch, columns =
+/// size; headlines report the modeled crossover batch per variant at
+/// the largest swept size (`costmodel::gemm_batch_threshold`, the
+/// number behind `kernels::GEMM_MIN_BATCH`).
+pub fn fig_gemm_batch(sizes: &[usize]) -> FigureReport {
+    let c = core();
+    let preset = CachePreset::Gem5Ex5Big;
+    let mut tables = Vec::new();
+    let mut headlines = Vec::new();
+    for vname in ["w4a8", "w2a8", "w1a8"] {
+        let gemm = Method::fullpack_gemm(vname);
+        let repeated = Method::fullpack(vname);
+        let mut headers = vec![format!("{vname} gain b\\n")];
+        headers.extend(sizes.iter().map(|n| n.to_string()));
+        let mut t = Table::new(headers);
+        for &batch in &GEMM_SWEEP_BATCHES {
+            let mut row = vec![batch.to_string()];
+            for &n in sizes {
+                let g = simulate_gemm(gemm, n, n, batch, preset, &c, STEADY_CALLS);
+                let r = simulate_gemm(repeated, n, n, batch, preset, &c, STEADY_CALLS);
+                row.push(format!("{:.2}", r.cycles / g.cycles));
+            }
+            t.row(row);
+        }
+        tables.push((format!("FullPack-GEMM-{} gain vs repeated GEMV", vname.to_uppercase()), t));
+        let n = *sizes.last().expect("non-empty size grid");
+        let v = Variant::parse(vname).expect("gemm-tier variant");
+        let th = gemm_batch_threshold(v, n, n, preset, &c, 16);
+        headlines.push((
+            format!("{vname} crossover batch @ {n}x{n}"),
+            th.map(|b| b as f64).unwrap_or(f64::INFINITY),
+        ));
+    }
+    FigureReport { id: "gemm-batch", tables, headlines }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -267,6 +315,23 @@ mod tests {
         // instruction ratios stay near 1 (paper: 1.03x / 0.8x)
         let i1 = hl["FullPack-W1A1 instr ratio vs W4A4"];
         assert!((0.5..1.5).contains(&i1), "w1a1 instr ratio {i1}");
+    }
+
+    #[test]
+    fn gemm_batch_sweep_amortizes() {
+        // small grid to keep the replay volume test-sized
+        let r = fig_gemm_batch(&[256, 1024]);
+        assert_eq!(r.tables.len(), 3);
+        for (vi, vname) in ["w4a8", "w2a8", "w1a8"].iter().enumerate() {
+            let t = &r.tables[vi].1;
+            let rendered = t.render();
+            assert!(rendered.contains("1024"), "{vname}");
+            // the memory-aware crossover at the largest swept size sits
+            // at batch 2 — the number GEMM_MIN_BATCH encodes
+            let (name, th) = &r.headlines[vi];
+            assert!(name.contains(vname));
+            assert_eq!(*th, 2.0, "{vname} crossover {th}");
+        }
     }
 
     #[test]

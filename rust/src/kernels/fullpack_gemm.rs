@@ -13,6 +13,14 @@
 use super::KernelError;
 use crate::pack::{BitWidth, PackedMatrix, VL};
 
+/// Column-tile width of the blocked loop: one weight-block extraction
+/// feeds up to this many MAC streams, and the packed weight row is
+/// re-walked once per tile (L1-resident by construction — a row is at
+/// most a few KB).  The cost model amortizes weight loads and
+/// extraction per tile, not per whole batch
+/// (`costmodel::Method::instr_mix_gemm`, `sim::replay_gemm`).
+pub const COL_TILE: usize = 4;
+
 /// Extract + MAC over all batch columns: `out[c][r] = Σ_k w[r][k] · a[c][k]`.
 ///
 /// `a_cols`: `batch` unpacked int8 activation vectors, each of length
@@ -42,17 +50,16 @@ pub fn gemm_fullpack<const B: usize>(
             )));
         }
     }
-    // column tiles of 4 with stack-array accumulators: one weight
-    // extraction feeds four MAC streams and the fixed shapes keep the
-    // SLP vectorizer engaged (a heap `Vec` of accumulators defeated it —
-    // see EXPERIMENTS.md §Perf iteration 4)
-    const CT: usize = 4;
+    // column tiles of COL_TILE with stack-array accumulators: one
+    // weight extraction feeds four MAC streams and the fixed shapes
+    // keep the SLP vectorizer engaged (a heap `Vec` of accumulators
+    // defeated it — see EXPERIMENTS.md §Perf iteration 4)
     for r in 0..z {
         let row = wp.row(r);
         let mut c0 = 0;
         while c0 < batch {
-            let ct = (batch - c0).min(CT);
-            let mut accs = [[0i32; VL]; CT];
+            let ct = (batch - c0).min(COL_TILE);
+            let mut accs = [[0i32; VL]; COL_TILE];
             for (blk, bytes) in row.chunks_exact(VL).enumerate() {
                 let base = blk * e * VL;
                 let mut blk_i8 = [0i8; VL];

@@ -35,9 +35,15 @@ const W8A8: Variant = Variant::new(BitWidth::B8, BitWidth::B8);
 
 /// Smallest flushed batch the planner promotes onto a GEMM backend:
 /// below two columns there is nothing to amortize, and the modeled
-/// extraction-amortization curve (`costmodel::gemm_batch_threshold`)
-/// confirms the crossover sits at two columns for every GEMM-tier
-/// variant at serving shapes.
+/// crossover curve (`costmodel::gemm_batch_threshold`) confirms it
+/// sits at two columns for every GEMM-tier variant at serving shapes.
+/// Since PR 4 that curve is **memory-aware** — computed from the
+/// `sim::replay_gemm`-backed `costmodel::simulate_gemm`, where the
+/// batched call replays one blocked weight pass and the repeated rival
+/// re-streams the matrix per column at distinct addresses — and the
+/// one-weight-pass cache advantage only widens the batched side's win,
+/// so the compute-only v1 threshold of 2 carries over unchanged
+/// (EXPERIMENTS.md crossover table; asserted in `costmodel` tests).
 pub const GEMM_MIN_BATCH: usize = 2;
 
 /// The layer shape a plan is bound to.

@@ -587,7 +587,9 @@ impl GemmKernel for RuyLikeGemmKernel {
     }
 
     fn cost_method(&self) -> Option<Method> {
-        // modeled as `batch` repeated Ruy GEMV calls (simulate_gemm)
+        // modeled as `batch` repeated Ruy GEMV calls, each re-streaming
+        // the weight matrix with its column at a distinct address
+        // (`costmodel::simulate_gemm` -> `sim::replay_gemm_restream`)
         Some(Method::RuyW8A8)
     }
 }

@@ -92,6 +92,9 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             "fig8" => sweeps::fig8(sz),
             "fig12" => sweeps::fig12(sz),
             "fig13" => sweeps::fig13(sz),
+            // not a paper figure: the GEMM tier's memory-aware
+            // batch x size amortization sweep (DESIGN.md §9)
+            "gemm-batch" => sweeps::fig_gemm_batch(sz),
             "fig10" | "fig1" => {
                 let (table, totals) = e2e::fig10(DeepSpeechConfig::FULL);
                 println!("=== fig10 (DeepSpeech per-layer breakdown, simulated) ===\n");
@@ -115,7 +118,8 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         emit_csv(csv, &report)
     };
     if which == "all" {
-        for id in ["fig4", "fig5", "fig6", "fig7", "fig8", "fig10", "fig12", "fig13"] {
+        for id in ["fig4", "fig5", "fig6", "fig7", "fig8", "fig10", "fig12", "fig13", "gemm-batch"]
+        {
             run(id)?;
         }
         Ok(())

@@ -16,7 +16,7 @@ use crate::kernels::{
     KernelError, LayerShape, Plan, PlanBuilder, PlanScratch, SelectPolicy, Weights,
 };
 use crate::pack::{BitWidth, Variant};
-use crate::quant::requantize_vec;
+use crate::quant::{requantize, requantize_rows, requantize_vec};
 
 /// Shape configuration (defaults = Mozilla DeepSpeech v0.9).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -70,6 +70,12 @@ pub struct DeepSpeech {
     /// FC weights, always W8A8 (paper routes GEMM to Ruy)
     pub fc_weights: Vec<Weights>,
     pub fc_biases: Vec<Vec<f32>>,
+    /// optional per-row (per-output-channel) weight scales per FC layer
+    /// — the kind `quant::quantize_per_row` produces.  `None` (the
+    /// default) keeps the per-tensor `s_w`; `Some` routes that layer's
+    /// requantization through `quant::requantize_rows`
+    /// ([`DeepSpeech::with_fc_row_scales`]).
+    fc_row_scales: Vec<Option<Vec<f32>>>,
     /// one plan per FC layer (batched → the Ruy path under `PaperRule`)
     fc_plans: Vec<Plan>,
     /// LSTM gate weights `[wx, wh]`, in the LSTM plan's kernel layout
@@ -150,6 +156,7 @@ impl DeepSpeech {
         let mut lstm_bias = vec![0.0f32; config.gate_dim()];
         lstm_bias[h..2 * h].fill(1.0); // forget-gate bias 1
         let (_, ahi) = variant.a.value_range();
+        let fc_row_scales = vec![None; fc_weights.len()];
         DeepSpeech {
             intra_op_threads: 1,
             config,
@@ -157,6 +164,7 @@ impl DeepSpeech {
             layers,
             fc_weights,
             fc_biases,
+            fc_row_scales,
             fc_plans,
             lstm_wx,
             lstm_wh,
@@ -191,6 +199,34 @@ impl DeepSpeech {
     /// Registry name of the kernel serving the LSTM gate GEMVs.
     pub fn lstm_kernel_name(&self) -> &'static str {
         self.lstm_plan.kernel_name()
+    }
+
+    /// Attach per-row (per-output-channel) weight scales to FC layer
+    /// `idx` — the scales `quant::quantize_per_row` produces.  That
+    /// layer's requantization then goes through
+    /// `quant::requantize_rows`; layers without scales keep the
+    /// per-tensor `s_w` default.  `scales` must hold one entry per
+    /// output row of the layer.
+    pub fn with_fc_row_scales(
+        mut self,
+        idx: usize,
+        scales: Vec<f32>,
+    ) -> Result<DeepSpeech, KernelError> {
+        let Some(w) = self.fc_weights.get(idx) else {
+            return Err(KernelError::Shape(format!(
+                "fc layer index {idx} out of range ({} fc layers)",
+                self.fc_weights.len()
+            )));
+        };
+        if scales.len() != w.rows() {
+            return Err(KernelError::Shape(format!(
+                "{} row scales for a {}-row fc layer",
+                scales.len(),
+                w.rows()
+            )));
+        }
+        self.fc_row_scales[idx] = Some(scales);
+        Ok(self)
     }
 
     /// Quantize an f32 vector to the variant's activation width.
@@ -349,13 +385,26 @@ impl DeepSpeech {
             .collect();
         let mut acc = vec![0i32; batch * z];
         self.fc_plans[idx].execute_batch(w, &xq, batch, &mut acc).expect("fc gemm");
-        let s = s_act * self.s_w;
         let bias = &self.fc_biases[idx];
-        let mut out = vec![0.0f32; batch * z];
-        for b in 0..batch {
-            for j in 0..z {
-                let v = acc[b * z + j] as f32 * s + bias[j];
-                out[b * z + j] = if relu { v.clamp(0.0, 20.0) } else { v };
+        // per-row scales (quantize_per_row) when the layer carries
+        // them; the per-tensor s_w default otherwise
+        let mut out = match &self.fc_row_scales[idx] {
+            // batch-major multi-column acc is requantize_rows' native shape
+            Some(s_rows) => requantize_rows(&acc, s_rows, s_act, bias),
+            None => {
+                // single allocation, fused per-column pass
+                let mut o = vec![0.0f32; batch * z];
+                for (ocol, acol) in o.chunks_exact_mut(z).zip(acc.chunks_exact(z)) {
+                    for ((y, &a), &bi) in ocol.iter_mut().zip(acol).zip(bias) {
+                        *y = requantize(a, self.s_w, s_act, bi);
+                    }
+                }
+                o
+            }
+        };
+        if relu {
+            for v in &mut out {
+                *v = v.clamp(0.0, 20.0);
             }
         }
         out
@@ -454,6 +503,32 @@ mod tests {
         // the empty flush is a no-op
         let m = DeepSpeech::new(cfg, Variant::parse("w4a8").unwrap(), 13);
         assert!(m.forward_batch(&[]).is_empty());
+    }
+
+    #[test]
+    fn per_row_fc_scales_behind_per_tensor_default() {
+        let cfg = DeepSpeechConfig::TINY;
+        let frames: Vec<f32> = (0..cfg.time_steps * cfg.n_input)
+            .map(|i| (i as f32 * 0.013).sin())
+            .collect();
+        let v = Variant::parse("w4a8").unwrap();
+        let base = DeepSpeech::new(cfg, v, 9).forward_timed(&frames).0;
+        // uniform per-row scales equal to s_w are the per-tensor path
+        // in disguise: bit-identical logits
+        let m = DeepSpeech::new(cfg, v, 9);
+        let uniform: Vec<f32> = vec![m.s_w; cfg.n_hidden];
+        let m = m.with_fc_row_scales(0, uniform).unwrap();
+        assert_eq!(m.forward_timed(&frames).0, base);
+        // inflating fc1's row scales perturbs the logits (the per-row
+        // path is actually live), still finite
+        let m2 = DeepSpeech::new(cfg, v, 9);
+        let scales = vec![m2.s_w * 4.0; cfg.n_hidden];
+        let out = m2.with_fc_row_scales(0, scales).unwrap().forward_timed(&frames).0;
+        assert_ne!(out, base);
+        assert!(out.iter().all(|x| x.is_finite()));
+        // shape errors are loud
+        assert!(DeepSpeech::new(cfg, v, 9).with_fc_row_scales(0, vec![1.0; 3]).is_err());
+        assert!(DeepSpeech::new(cfg, v, 9).with_fc_row_scales(99, vec![1.0]).is_err());
     }
 
     #[test]

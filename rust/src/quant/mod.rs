@@ -73,6 +73,36 @@ pub fn requantize_vec(acc: &[i32], s_w: f32, s_a: f32, bias: &[f32]) -> Vec<f32>
         .collect()
 }
 
+/// Per-row (per-output-channel) requantization: row `r` of the
+/// accumulator uses its own weight scale — the scales
+/// [`quantize_per_row`] produces, which [`requantize_vec`]'s single
+/// `s_w` cannot apply.
+///
+/// `acc` holds one output column (`acc.len() == s_w_rows.len()`) or a
+/// batch-major stack of columns (`acc.len() == batch · rows`, column
+/// `c` at `acc[c·rows..(c+1)·rows]` — the layout `GemmKernel::gemm`
+/// writes); `bias` is per row and added to every column.
+pub fn requantize_rows(acc: &[i32], s_w_rows: &[f32], s_a: f32, bias: &[f32]) -> Vec<f32> {
+    let rows = s_w_rows.len();
+    assert!(rows > 0, "need at least one row scale");
+    assert!(
+        acc.len() % rows == 0,
+        "acc len {} is not a whole number of {rows}-row columns",
+        acc.len()
+    );
+    // hard assert: a short bias would otherwise silently truncate
+    // every column through the zip below
+    assert_eq!(bias.len(), rows, "bias len {} != rows {rows}", bias.len());
+    acc.chunks_exact(rows)
+        .flat_map(|col| {
+            col.iter()
+                .zip(s_w_rows)
+                .zip(bias)
+                .map(|((&a, &s_w), &b)| requantize(a, s_w, s_a, b))
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -129,5 +159,67 @@ mod tests {
         assert_eq!(requantize(10, 0.5, 2.0, 1.0), 11.0);
         let out = requantize_vec(&[1, 2], 1.0, 1.0, &[0.5, 0.5]);
         assert_eq!(out, vec![1.5, 2.5]);
+    }
+
+    #[test]
+    fn requantize_rows_applies_each_rows_scale() {
+        // one column: row r scaled by its own s_w
+        let out = requantize_rows(&[10, 10, 10], &[0.1, 1.0, 10.0], 2.0, &[0.0, 0.5, 0.0]);
+        assert_eq!(out, vec![2.0, 20.5, 200.0]);
+        // uniform row scales degenerate to the per-tensor path exactly
+        let acc = [3, -7, 40];
+        let bias = [0.25, -1.0, 2.0];
+        assert_eq!(
+            requantize_rows(&acc, &[0.3; 3], 0.7, &bias),
+            requantize_vec(&acc, 0.3, 0.7, &bias)
+        );
+    }
+
+    #[test]
+    fn requantize_rows_batch_major_columns() {
+        // two columns, batch-major (the GemmKernel output layout):
+        // bias and row scales repeat per column
+        let acc = [1, 2, 10, 20];
+        let out = requantize_rows(&acc, &[1.0, 0.5], 1.0, &[0.0, 1.0]);
+        assert_eq!(out, vec![1.0, 2.0, 10.0, 11.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "whole number")]
+    fn requantize_rows_rejects_ragged_columns() {
+        let _ = requantize_rows(&[1, 2, 3], &[1.0, 1.0], 1.0, &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn per_row_pipeline_recovers_f32_gemv() {
+        // quantize_per_row -> integer GEMV -> requantize_rows tracks the
+        // f32 product within the quantizer's error bound; a single
+        // per-tensor scale cannot (rows differ by 100x)
+        let (rows, k) = (3usize, 16usize);
+        let mut w = vec![0f32; rows * k];
+        for r in 0..rows {
+            let mag = [0.01f32, 1.0, 100.0][r];
+            for c in 0..k {
+                w[r * k + c] = mag * ((c as f32 * 0.37).sin());
+            }
+        }
+        let a: Vec<f32> = (0..k).map(|i| (i as f32 * 0.21).cos()).collect();
+        let qa = quantize(&a, BitWidth::B8);
+        let (qw, s_rows) = quantize_per_row(&w, rows, k, BitWidth::B4);
+        let acc: Vec<i32> = (0..rows)
+            .map(|r| {
+                qw[r * k..(r + 1) * k]
+                    .iter()
+                    .zip(&qa.values)
+                    .map(|(&wv, &av)| wv as i32 * av as i32)
+                    .sum()
+            })
+            .collect();
+        let got = requantize_rows(&acc, &s_rows, qa.scale, &[0.0; 3]);
+        for r in 0..rows {
+            let expect: f32 = w[r * k..(r + 1) * k].iter().zip(&a).map(|(x, y)| x * y).sum();
+            let tol = 0.2 * expect.abs().max(s_rows[r] * k as f32);
+            assert!((got[r] - expect).abs() < tol, "row {r}: {} vs {expect}", got[r]);
+        }
     }
 }

@@ -12,7 +12,11 @@ pub mod cache;
 pub mod trace;
 
 pub use cache::{CacheConfig, CacheStats, Hierarchy};
-pub use trace::{replay_gemv, replay_gemv_at, GemvTraffic};
+pub use trace::{
+    replay_gemm, replay_gemm_at, replay_gemm_restream, replay_gemm_restream_at, replay_gemv,
+    replay_gemv_at, replay_gemv_traced, replay_gemv_traced_at, GemmTraffic, GemvTraffic,
+    OperandStats, ReplayStats,
+};
 
 /// Named hierarchy presets (CLI `--cache` flag and Fig. 7 sweep).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -8,6 +8,25 @@
 //! (Simulating at line granularity is exact for these streaming
 //! kernels: within one 64-byte line the 16-byte vector loads cannot
 //! miss twice.)
+//!
+//! Two call shapes exist (the paper's memory claims, §4.3, are exactly
+//! the difference between them):
+//!
+//! * [`replay_gemv`] — one GEMV pass (the `batch` field models kernels
+//!   like ULPPACK— whose *single call* processes several columns per
+//!   weight pass);
+//! * [`replay_gemm`] — one batched FullPack GEMM call
+//!   ([`GemmTraffic`]): **one** pass over each weight row's lines with
+//!   the whole n-column activation panel streamed per line progress
+//!   (the extract-once/MAC-many loop of `kernels::gemm_fullpack`), vs
+//!   [`replay_gemm_restream`] — the rival protocol that re-streams the
+//!   weight matrix once per column (the paper's "route GEMM to Ruy"
+//!   fallback and the repeated-GEMV baseline), each column's
+//!   activations and outputs at *distinct* addresses.
+//!
+//! Every replay returns a [`ReplayStats`]: summed access latency plus
+//! per-operand access/LLC-miss counts, so the one-weight-pass advantage
+//! is directly observable (`rust/tests/sim_trace.rs`).
 
 use super::cache::Hierarchy;
 
@@ -45,9 +64,151 @@ impl GemvTraffic {
     }
 }
 
+/// Byte-level traffic description of one **batched GEMM** call: `batch`
+/// activation columns against one weight pass (the FullPack GEMM tier,
+/// `kernels::gemm_fullpack`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GemmTraffic {
+    /// output rows
+    pub z: usize,
+    /// packed weight bytes per row
+    pub w_bytes_per_row: usize,
+    /// packed activation bytes per column
+    pub a_bytes: usize,
+    /// activation panel columns fed by the single weight pass
+    pub batch: usize,
+    /// bytes per output element (4 for i32)
+    pub out_elem_bytes: usize,
+}
+
+impl GemmTraffic {
+    /// Lift a single-column GEMV description to a `batch`-column GEMM
+    /// call over the same layer (`t.batch` columns per weight pass fold
+    /// into the panel).
+    pub fn from_gemv(t: &GemvTraffic, batch: usize) -> GemmTraffic {
+        GemmTraffic {
+            z: t.z,
+            w_bytes_per_row: t.w_bytes_per_row,
+            a_bytes: t.a_bytes,
+            batch: batch.max(1) * t.batch.max(1),
+            out_elem_bytes: t.out_elem_bytes,
+        }
+    }
+
+    /// Total bytes read from the weight matrix (once per call).
+    pub fn weight_bytes(&self) -> usize {
+        self.z * self.w_bytes_per_row
+    }
+
+    /// Bytes of the whole activation panel (one copy; re-read per row).
+    pub fn panel_bytes(&self) -> usize {
+        self.batch * self.a_bytes
+    }
+
+    /// Bytes of the batch-major output tile.
+    pub fn out_bytes(&self) -> usize {
+        self.z * self.batch * self.out_elem_bytes
+    }
+}
+
+/// Access/LLC-miss accounting for one operand of a replay.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct OperandStats {
+    /// line-granular accesses issued for this operand
+    pub accesses: u64,
+    /// how many of them missed the last-level cache
+    pub llc_misses: u64,
+}
+
+/// What one replay did: summed access latency plus per-operand splits.
+/// The operand split is what makes the paper's locality claims
+/// testable — e.g. "GEMM does one weight pass" is
+/// `weights.llc_misses` staying flat in batch.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ReplayStats {
+    /// summed access latency in cycles (the raw-latency view; the cost
+    /// model combines the hierarchy's per-level stats with the core
+    /// model instead)
+    pub latency: u64,
+    /// weight-matrix accesses
+    pub weights: OperandStats,
+    /// activation accesses
+    pub acts: OperandStats,
+    /// output-write accesses (first touch of each output line)
+    pub outs: OperandStats,
+}
+
+impl ReplayStats {
+    /// Total line-granular accesses across all operands.
+    pub fn total_accesses(&self) -> u64 {
+        self.weights.accesses + self.acts.accesses + self.outs.accesses
+    }
+
+    /// Total LLC misses across all operands.
+    pub fn total_llc_misses(&self) -> u64 {
+        self.weights.llc_misses + self.acts.llc_misses + self.outs.llc_misses
+    }
+}
+
+/// One classified access: records the operand's access count and
+/// whether the hierarchy's LLC missed on it.
+fn probe(h: &mut Hierarchy, addr: u64, op: &mut OperandStats) -> u64 {
+    let miss0 = h.llc_stats().misses;
+    let lat = h.access(addr);
+    op.accesses += 1;
+    if h.llc_stats().misses > miss0 {
+        op.llc_misses += 1;
+    }
+    lat
+}
+
+/// The shared GEMV inner loop: one weight pass per (row, column) with
+/// the activation vector streamed alongside in proportion, plus
+/// first-touch output-line writes.  `out_off` is the running byte
+/// offset into the output buffer, carried across calls so re-streamed
+/// protocols fill one contiguous batch-major buffer.
+fn replay_gemv_into(
+    h: &mut Hierarchy,
+    t: &GemvTraffic,
+    w_base: u64,
+    a_base: u64,
+    o_base: u64,
+    out_off: &mut usize,
+    s: &mut ReplayStats,
+) {
+    let line = h.line_size();
+    let wlines = t.w_bytes_per_row.div_ceil(line);
+    let alines = t.a_bytes.div_ceil(line);
+    for r in 0..t.z {
+        let wrow = w_base + (r * t.w_bytes_per_row) as u64;
+        for b in 0..t.batch {
+            let acol = a_base + (b * t.a_bytes) as u64;
+            let mut ai = 0usize;
+            for wl in 0..wlines {
+                s.latency += probe(h, wrow + (wl * line) as u64, &mut s.weights);
+                // stream matching share of the activation vector
+                let target = ((wl + 1) * alines) / wlines;
+                while ai < target {
+                    s.latency += probe(h, acol + (ai * line) as u64, &mut s.acts);
+                    ai += 1;
+                }
+            }
+            // output write (one element per row per batch column): the
+            // line is accessed on *first touch* — tested before the
+            // offset advances, so a call whose whole output fits one
+            // line still records it (the old crossing test fired one
+            // line late and skipped the trailing partial line entirely)
+            if *out_off % line < t.out_elem_bytes {
+                s.latency += probe(h, o_base + (*out_off / line * line) as u64, &mut s.outs);
+            }
+            *out_off += t.out_elem_bytes;
+        }
+    }
+}
+
 /// Replay one GEMV through the hierarchy.  Returns the summed access
-/// latency in cycles (the raw-latency view; the cost model combines the
-/// per-level stats with the core model instead).
+/// latency in cycles; [`replay_gemv_traced`] returns the per-operand
+/// split as well.
 ///
 /// Inner-loop interleave: the kernel walks a weight row sequentially and
 /// streams the activation vector alongside it in proportion — weight
@@ -68,33 +229,124 @@ pub fn replay_gemv_at(
     a_base: u64,
     o_base: u64,
 ) -> u64 {
+    replay_gemv_traced_at(h, t, w_base, a_base, o_base).latency
+}
+
+/// [`replay_gemv`] returning the full per-operand [`ReplayStats`].
+pub fn replay_gemv_traced(h: &mut Hierarchy, t: &GemvTraffic) -> ReplayStats {
+    replay_gemv_traced_at(h, t, W_BASE, A_BASE, O_BASE)
+}
+
+/// [`replay_gemv_traced`] with explicit operand base addresses.
+pub fn replay_gemv_traced_at(
+    h: &mut Hierarchy,
+    t: &GemvTraffic,
+    w_base: u64,
+    a_base: u64,
+    o_base: u64,
+) -> ReplayStats {
+    let mut s = ReplayStats::default();
+    let mut out_off = 0usize;
+    replay_gemv_into(h, t, w_base, a_base, o_base, &mut out_off, &mut s);
+    s
+}
+
+/// Replay one batched FullPack GEMM call: the blocked
+/// extract-once/MAC-many loop of `kernels::gemm_fullpack`.
+///
+/// Per output row the packed weight lines are walked once per
+/// [`crate::kernels::fullpack_gemm::COL_TILE`]-column tile — exactly
+/// the kernel's loop, so for batch > `COL_TILE` the intra-row re-walks
+/// appear in the L1 stream (they stay L1-resident: a packed row is at
+/// most a few KB, so the **LLC** sees one weight pass regardless of
+/// batch).  At each line progress the matching share of the tile's
+/// activation columns is streamed (the panel lives at distinct
+/// per-column addresses, `A_BASE + c · a_bytes`), and the row's output
+/// tile — one element per column, batch-major (`out[c·z + r]`) — is
+/// written with first-touch line accounting.  At batch 1 the access
+/// stream is identical to [`replay_gemv`]'s (pinned by
+/// `rust/tests/sim_trace.rs`).
+pub fn replay_gemm(h: &mut Hierarchy, t: &GemmTraffic) -> ReplayStats {
+    replay_gemm_at(h, t, W_BASE, A_BASE, O_BASE)
+}
+
+/// [`replay_gemm`] with explicit operand base addresses.
+pub fn replay_gemm_at(
+    h: &mut Hierarchy,
+    t: &GemmTraffic,
+    w_base: u64,
+    a_base: u64,
+    o_base: u64,
+) -> ReplayStats {
+    let ct = crate::kernels::fullpack_gemm::COL_TILE;
     let line = h.line_size();
     let wlines = t.w_bytes_per_row.div_ceil(line);
     let alines = t.a_bytes.div_ceil(line);
-    let mut latency = 0u64;
-    let mut out_bytes = 0usize;
+    let mut s = ReplayStats::default();
+    if t.batch == 0 {
+        return s;
+    }
     for r in 0..t.z {
         let wrow = w_base + (r * t.w_bytes_per_row) as u64;
-        for b in 0..t.batch {
-            let acol = a_base + (b * t.a_bytes) as u64;
+        let mut c0 = 0usize;
+        while c0 < t.batch {
+            let cols = (t.batch - c0).min(ct);
+            // one weight walk per column tile (the kernel's loop); the
+            // tile's columns advance in lockstep with it
             let mut ai = 0usize;
             for wl in 0..wlines {
-                latency += h.access(wrow + (wl * line) as u64);
-                // stream matching share of the activation vector
+                s.latency += probe(h, wrow + (wl * line) as u64, &mut s.weights);
                 let target = ((wl + 1) * alines) / wlines;
                 while ai < target {
-                    latency += h.access(acol + (ai * line) as u64);
+                    for c in c0..c0 + cols {
+                        let addr = a_base + (c * t.a_bytes + ai * line) as u64;
+                        s.latency += probe(h, addr, &mut s.acts);
+                    }
                     ai += 1;
                 }
             }
-            // output write (one element per row per batch column)
-            out_bytes += t.out_elem_bytes;
-            if out_bytes % line < t.out_elem_bytes {
-                latency += h.access(o_base + (out_bytes - 1) as u64 / line as u64 * line as u64);
+            // the tile's output elements, batch-major layout
+            for c in c0..c0 + cols {
+                let off = (c * t.z + r) * t.out_elem_bytes;
+                if off % line < t.out_elem_bytes {
+                    s.latency += probe(h, o_base + (off / line * line) as u64, &mut s.outs);
+                }
             }
+            c0 += cols;
         }
     }
-    latency
+    s
+}
+
+/// The rival protocol: `replays` back-to-back GEMV passes over the
+/// *same* weight matrix — the paper's "route GEMM to Ruy" fallback and
+/// the repeated-GEMV baseline (`ruy-like-w8a8-gemm` executes exactly
+/// this).  Each pass re-streams every weight line; pass `j`'s
+/// activation column(s) live at `a_base + j · batch · a_bytes` and its
+/// outputs continue through one contiguous batch-major buffer, so
+/// distinct columns never alias to one vector (the accounting bug this
+/// function replaces modeled every column at the same address,
+/// overstating rival locality).
+pub fn replay_gemm_restream(h: &mut Hierarchy, t: &GemvTraffic, replays: usize) -> ReplayStats {
+    replay_gemm_restream_at(h, t, replays, W_BASE, A_BASE, O_BASE)
+}
+
+/// [`replay_gemm_restream`] with explicit operand base addresses.
+pub fn replay_gemm_restream_at(
+    h: &mut Hierarchy,
+    t: &GemvTraffic,
+    replays: usize,
+    w_base: u64,
+    a_base: u64,
+    o_base: u64,
+) -> ReplayStats {
+    let mut s = ReplayStats::default();
+    let mut out_off = 0usize;
+    for j in 0..replays {
+        let acol = a_base + (j * t.batch.max(1) * t.a_bytes) as u64;
+        replay_gemv_into(h, t, w_base, acol, o_base, &mut out_off, &mut s);
+    }
+    s
 }
 
 #[cfg(test)]
@@ -179,5 +431,72 @@ mod tests {
         let t = traffic(4, 128, 1, 2);
         assert_eq!(t.weight_bytes(), 4 * 64);
         assert_eq!(t.act_bytes_touched(), 4 * 128);
+        let g = GemmTraffic::from_gemv(&t, 8);
+        assert_eq!(g.batch, 8);
+        assert_eq!(g.weight_bytes(), t.weight_bytes());
+        assert_eq!(g.panel_bytes(), 8 * 128);
+        assert_eq!(g.out_bytes(), 8 * 4 * 4);
+        // a traffic with an internal batch (ULPPACK) folds it in
+        let u = GemvTraffic { batch: 8, ..t };
+        assert_eq!(GemmTraffic::from_gemv(&u, 2).batch, 16);
+    }
+
+    #[test]
+    fn small_outputs_are_accounted() {
+        // regression (PR 4): z·batch·4 < 64 used to record ZERO output
+        // traffic because the old crossing test only fired when the
+        // running offset left a line
+        let mut h = gem5_ex5_big();
+        let s = replay_gemv_traced(&mut h, &traffic(4, 64, 1, 1)); // 16 out bytes
+        assert_eq!(s.outs.accesses, 1, "one output line touched");
+        // trailing partial line: 33 rows * 4 B = 132 B -> 3 lines
+        let mut h = gem5_ex5_big();
+        let s = replay_gemv_traced(&mut h, &traffic(33, 64, 1, 1));
+        assert_eq!(s.outs.accesses, 3, "trailing partial output line");
+    }
+
+    #[test]
+    fn gemm_one_weight_pass_vs_restream() {
+        // the whole point of the tier: at a size where weights spill the
+        // LLC, the batched call's weight misses stay at one pass while
+        // the re-streamed rival pays them once per column
+        let z = 4096;
+        let k = 4096;
+        let t = traffic(z, k, 1, 2); // w4a8-style packed rows
+        let batch = 4;
+        let mut hg = gem5_ex5_big();
+        let g = replay_gemm(&mut hg, &GemmTraffic::from_gemv(&t, batch));
+        let mut hr = gem5_ex5_big();
+        let r = replay_gemm_restream(&mut hr, &t, batch);
+        assert!(
+            g.weights.llc_misses * 2 < r.weights.llc_misses,
+            "gemm weight misses {} vs restream {}",
+            g.weights.llc_misses,
+            r.weights.llc_misses
+        );
+        // same logical work: identical access counts per operand
+        // (batch == COL_TILE here, so the batched call is one tile and
+        // walks each weight row exactly once)
+        assert_eq!(g.weights.accesses * batch as u64, r.weights.accesses);
+        assert_eq!(g.acts.accesses, r.acts.accesses);
+        assert_eq!(g.outs.accesses, r.outs.accesses);
+    }
+
+    #[test]
+    fn restream_columns_are_distinct() {
+        // column j reads a_base + j*a_bytes: activation accesses (and
+        // first-touch misses) must grow with the number of columns
+        let t = traffic(64, 2048, 1, 1);
+        let mut h1 = gem5_ex5_big();
+        let s1 = replay_gemm_restream(&mut h1, &t, 1);
+        let mut h8 = gem5_ex5_big();
+        let s8 = replay_gemm_restream(&mut h8, &t, 8);
+        assert_eq!(s8.acts.accesses, 8 * s1.acts.accesses);
+        assert!(
+            s8.acts.llc_misses >= 8 * s1.acts.llc_misses,
+            "distinct columns must cold-miss independently: {} vs {}",
+            s8.acts.llc_misses,
+            s1.acts.llc_misses
+        );
     }
 }

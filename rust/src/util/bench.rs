@@ -204,11 +204,14 @@ pub fn write_bench_json(
     std::fs::write(path, bench_records_json(source, host, note, records))
 }
 
-/// One batched-GEMM measurement destined for `BENCH_gemm.json`:
-/// backend × variant × shape × batch → time for **one whole batched
-/// call**.  `ns_per_col` is the amortization metric the crossover
-/// table tracks (EXPERIMENTS.md): per-column cost falling with batch
-/// is the GEMM tier's whole argument.
+/// One batched-GEMM measurement destined for `BENCH_gemm.json` (schema
+/// `bench-gemm/v2`): backend × variant × shape × batch → time for
+/// **one whole batched call**, plus the modeled per-level cache stats
+/// of that call.  `ns_per_col` is the amortization metric the
+/// crossover table tracks (EXPERIMENTS.md): per-column cost falling
+/// with batch is the GEMM tier's whole argument; the cache columns are
+/// the *memory* half of it (one weight pass vs `batch` re-streams —
+/// `costmodel::simulate_gemm_traced`).
 #[derive(Debug, Clone)]
 pub struct GemmBenchRecord {
     /// registry GEMM backend name (`fullpack-w4a8-gemm`, ...), or a
@@ -226,6 +229,20 @@ pub struct GemmBenchRecord {
     pub median_ns: f64,
     /// timed iterations behind the median (0 = modeled, not measured)
     pub iters: usize,
+    /// modeled L1 accesses of one steady-state batched call (always
+    /// model-side, even in measured records: the host has no portable
+    /// cache counters — provenance lives in the document `note`)
+    pub l1_accesses: u64,
+    /// modeled L1 misses
+    pub l1_misses: u64,
+    /// modeled LLC accesses
+    pub llc_accesses: u64,
+    /// modeled LLC misses
+    pub llc_misses: u64,
+    /// modeled LLC misses attributed to the weight operand — flat in
+    /// batch for the one-weight-pass GEMM tier, linear for re-streamed
+    /// rivals
+    pub weight_llc_misses: u64,
 }
 
 impl GemmBenchRecord {
@@ -235,8 +252,10 @@ impl GemmBenchRecord {
     }
 }
 
-/// Render the `BENCH_gemm.json` document (schema `bench-gemm/v1`).
-/// Same provenance convention as [`bench_records_json`].
+/// Render the `BENCH_gemm.json` document (schema `bench-gemm/v2`:
+/// memory-aware — every record carries the modeled per-level cache
+/// stats of its batched call).  Same provenance convention as
+/// [`bench_records_json`].
 pub fn gemm_records_json(
     source: &str,
     host: &str,
@@ -245,7 +264,7 @@ pub fn gemm_records_json(
 ) -> String {
     let mut out = String::new();
     out.push_str("{\n");
-    out.push_str("  \"schema\": \"bench-gemm/v1\",\n");
+    out.push_str("  \"schema\": \"bench-gemm/v2\",\n");
     out.push_str(&format!("  \"source\": \"{}\",\n", json_escape(source)));
     out.push_str(&format!("  \"host\": \"{}\",\n", json_escape(host)));
     out.push_str(&format!("  \"note\": \"{}\",\n", json_escape(note)));
@@ -253,7 +272,9 @@ pub fn gemm_records_json(
     for (i, r) in records.iter().enumerate() {
         out.push_str(&format!(
             "    {{\"kernel\": \"{}\", \"variant\": \"{}\", \"z\": {}, \"k\": {}, \
-             \"batch\": {}, \"median_ns\": {:.1}, \"ns_per_col\": {:.1}, \"iters\": {}}}{}\n",
+             \"batch\": {}, \"median_ns\": {:.1}, \"ns_per_col\": {:.1}, \"iters\": {}, \
+             \"l1_accesses\": {}, \"l1_misses\": {}, \"llc_accesses\": {}, \
+             \"llc_misses\": {}, \"weight_llc_misses\": {}}}{}\n",
             json_escape(&r.kernel),
             json_escape(&r.variant),
             r.z,
@@ -262,6 +283,11 @@ pub fn gemm_records_json(
             r.median_ns,
             r.ns_per_col(),
             r.iters,
+            r.l1_accesses,
+            r.l1_misses,
+            r.llc_accesses,
+            r.llc_misses,
+            r.weight_llc_misses,
             if i + 1 < records.len() { "," } else { "" },
         ));
     }
@@ -374,6 +400,11 @@ mod tests {
                 batch: 16,
                 median_ns: 8.0e5,
                 iters: 20,
+                l1_accesses: 1_000_000,
+                l1_misses: 40_000,
+                llc_accesses: 40_000,
+                llc_misses: 16_384,
+                weight_llc_misses: 16_000,
             },
             GemmBenchRecord {
                 kernel: "repeated:fullpack-w4a8".into(),
@@ -383,11 +414,16 @@ mod tests {
                 batch: 16,
                 median_ns: 1.6e6,
                 iters: 20,
+                l1_accesses: 1_100_000,
+                l1_misses: 500_000,
+                llc_accesses: 500_000,
+                llc_misses: 262_144,
+                weight_llc_misses: 256_000,
             },
         ];
         let text = gemm_records_json("measured", "test-host", "", &records);
         let j = Json::parse(&text).expect("emitted JSON parses");
-        assert_eq!(j.get("schema").unwrap().as_str(), Some("bench-gemm/v1"));
+        assert_eq!(j.get("schema").unwrap().as_str(), Some("bench-gemm/v2"));
         let recs = j.get("records").unwrap().as_arr().unwrap();
         assert_eq!(recs.len(), 2);
         assert_eq!(recs[0].get("batch").unwrap().as_usize(), Some(16));
@@ -397,6 +433,13 @@ mod tests {
         let r0 = recs[0].get("median_ns").unwrap().as_f64().unwrap();
         let r1 = recs[1].get("median_ns").unwrap().as_f64().unwrap();
         assert!((r1 / r0 - 2.0).abs() < 1e-9);
+        // v2: the memory half — one weight pass vs 16 re-streams — is
+        // readable straight off the records
+        let w0 = recs[0].get("weight_llc_misses").unwrap().as_usize().unwrap();
+        let w1 = recs[1].get("weight_llc_misses").unwrap().as_usize().unwrap();
+        assert_eq!(w1 / w0, 16);
+        assert!(recs[0].get("l1_accesses").unwrap().as_usize().is_some());
+        assert!(recs[0].get("llc_misses").unwrap().as_usize().is_some());
     }
 
     #[test]
