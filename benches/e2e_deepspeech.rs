@@ -25,7 +25,7 @@ fn main() {
     for v in variants {
         let model = DeepSpeech::new(cfg, Variant::parse(v).unwrap(), 7);
         model.forward_timed(&frames); // warmup
-        let mut best: Option<Vec<(&'static str, u128)>> = None;
+        let mut best: Option<Vec<(String, u128)>> = None;
         let mut best_total = u128::MAX;
         for _ in 0..runs {
             let (_, times) = model.forward_timed(&frames);

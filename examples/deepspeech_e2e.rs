@@ -29,7 +29,7 @@ fn main() -> Result<()> {
         (0..cfg.time_steps * cfg.n_input).map(|i| (i as f32 * 0.01).sin()).collect();
     let variants = ["w8a8", "w4a8", "w4a4", "w2a2", "w1a1"];
     let mut totals: BTreeMap<&str, f64> = BTreeMap::new();
-    let mut layer_tables: Vec<(String, Vec<(&'static str, f64)>)> = Vec::new();
+    let mut layer_tables: Vec<(String, Vec<(String, f64)>)> = Vec::new();
 
     for v in variants {
         let variant = Variant::parse(v)?;
@@ -45,14 +45,15 @@ fn main() -> Result<()> {
         let rxs: Vec<_> = (0..requests)
             .map(|_| engine.submit("deepspeech", frames.clone()))
             .collect::<Result<_>>()?;
-        let mut layer_ns: BTreeMap<&'static str, f64> = BTreeMap::new();
+        let mut layer_ns: BTreeMap<String, f64> = BTreeMap::new();
         let mut best_total = f64::INFINITY;
         for rx in rxs {
             let resp = rx.recv().map_err(|_| anyhow!("dropped"))??;
             let total: u128 = resp.layer_times.iter().map(|(_, t)| t).sum();
             if (total as f64) < best_total {
                 best_total = total as f64;
-                layer_ns = resp.layer_times.iter().map(|&(n, t)| (n, t as f64)).collect();
+                layer_ns =
+                    resp.layer_times.iter().map(|(n, t)| (n.clone(), *t as f64)).collect();
             }
         }
         println!(
@@ -65,13 +66,7 @@ fn main() -> Result<()> {
             v.to_string(),
             ["fc1", "fc2", "fc3", "lstm", "fc5", "fc6"]
                 .iter()
-                .map(|&n| (n as &'static str, layer_ns.get(n).copied().unwrap_or(0.0)))
-                .collect::<Vec<_>>()
-                .into_iter()
-                .map(|(n, t)| (match n { // keep static strs
-                    "fc1" => "fc1", "fc2" => "fc2", "fc3" => "fc3",
-                    "lstm" => "lstm", "fc5" => "fc5", _ => "fc6",
-                }, t))
+                .map(|&n| (n.to_string(), layer_ns.get(n).copied().unwrap_or(0.0)))
                 .collect(),
         ));
         engine.shutdown();
@@ -84,7 +79,7 @@ fn main() -> Result<()> {
     }
     println!();
     for i in 0..6 {
-        let name = layer_tables[0].1[i].0;
+        let name = &layer_tables[0].1[i].0;
         print!("{name:>6}");
         for (_, layers) in &layer_tables {
             print!("{:>10.3}", layers[i].1 / 1e6);

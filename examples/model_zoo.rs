@@ -1,0 +1,67 @@
+//! Model-zoo serving demo (DESIGN.md §10): one engine serving three
+//! different topologies — DeepSpeech, the sub-byte MLP classifier and
+//! the GRU keyword spotter — compiled from their `ModelGraph`s and
+//! addressed by name, with per-model dispatch/latency metrics.
+//!
+//! ```sh
+//! cargo run --release --example model_zoo            # full-size graphs
+//! cargo run --release --example model_zoo -- --tiny  # CI-sized
+//! ```
+
+use fullpack::coordinator::{BatcherConfig, Engine, EngineConfig, RouterConfig};
+use fullpack::models::{CompiledModel, Model, ModelRegistry, ModelSize};
+use fullpack::pack::Variant;
+use fullpack::util::error::{anyhow, Result};
+
+fn main() -> Result<()> {
+    let tiny = std::env::args().any(|a| a == "--tiny");
+    let size = if tiny { ModelSize::Tiny } else { ModelSize::Full };
+    let requests_per_model = if tiny { 8 } else { 12 };
+    let variant = Variant::parse("w4a8")?;
+
+    let engine = Engine::new(EngineConfig {
+        workers: 2,
+        batcher: BatcherConfig::default(),
+        router: RouterConfig::default(),
+    });
+    let zoo = ModelRegistry::global();
+    for entry in zoo.iter() {
+        let graph = (entry.build)(size, variant, 7);
+        let model = CompiledModel::compile(graph).map_err(|e| anyhow!("{}: {e}", entry.name))?;
+        println!(
+            "registered {:<16} {} (cell kernel {})",
+            entry.name,
+            model.describe(),
+            model.cell_kernel_name().unwrap_or("-")
+        );
+        engine.register_model(entry.name, model);
+    }
+
+    println!("\nserving {} requests per model...", requests_per_model);
+    let mut rxs = Vec::new();
+    for name in zoo.names() {
+        let input_len = engine.model(name).expect("registered").input_len();
+        let frames: Vec<f32> = (0..input_len).map(|i| (i as f32 * 0.01).sin()).collect();
+        for _ in 0..requests_per_model {
+            rxs.push(engine.submit(name, frames.clone())?);
+        }
+    }
+    for rx in rxs {
+        rx.recv().map_err(|_| anyhow!("engine dropped request"))??;
+    }
+
+    println!("\nengine:  {}", engine.metrics().summary());
+    for (name, m) in engine.metrics().per_model_counters() {
+        println!(
+            "  {name:<16} batched={}/{} singleton={} mean={:.0}us",
+            m.batched_requests,
+            m.batched_dispatches,
+            m.singleton_requests,
+            m.mean_latency_us()
+        );
+    }
+    let (gemv, gemm) = engine.router().counts();
+    println!("router:  gemv(FullPack)={gemv} gemm(W8A8 tier)={gemm}");
+    engine.shutdown();
+    Ok(())
+}

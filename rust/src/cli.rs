@@ -2,10 +2,13 @@
 //!
 //! ```text
 //! fullpack simulate <fig4|fig5|fig6|fig7|fig8|fig10|fig12|fig13|gemm-batch|all> [--quick] [--csv DIR]
+//! fullpack simulate model [--name <zoo-name|all>] [--variant V] [--size full|tiny]
 //! fullpack simulate --show-config [--preset NAME]
 //! fullpack bench <fig11|deepspeech> [--variant V] [--kernel NAME] [--ms N]
-//! fullpack serve [--variant V] [--kernel NAME] [--requests N] [--workers N] [--tiny]
-//! fullpack models show deepspeech
+//! fullpack serve [--model ZOO] [--model-manifest F.json] [--variant V] [--kernel NAME]
+//!                [--requests N] [--workers N] [--tiny]
+//! fullpack models list
+//! fullpack models show <zoo-name> [--variant V] [--size full|tiny]
 //! fullpack kernels list
 //! fullpack artifact run <name> [--dir artifacts]
 //! fullpack artifact list [--dir artifacts]
@@ -77,14 +80,21 @@ USAGE:
                     [--quick] [--csv DIR]      regenerate a paper figure
                                                (gemm-batch: the GEMM tier's
                                                memory-aware batch sweep)
+  fullpack simulate model [--name <zoo|all>] [--variant V] [--size full|tiny]
+                                               whole-model method comparison over
+                                               the model zoo (simulate_model)
   fullpack simulate --show-config [--preset P] print a cache preset
   fullpack bench fig11 [--ms N]                measured CNN-FC sweep (RPi substitution)
   fullpack bench deepspeech [--variant V] [--kernel NAME] [--breakdown] [--tiny]
                                                measured end-to-end DeepSpeech
-  fullpack serve [--config F.json] [--variant V] [--kernel NAME] [--requests N]
-                 [--workers N] [--tiny]
-                                               serving-engine demo (latency/throughput)
-  fullpack models show deepspeech              print the Fig. 9 topology
+  fullpack serve [--config F.json] [--model ZOO] [--model-manifest F.json]
+                 [--variant V] [--kernel NAME] [--requests N] [--workers N] [--tiny]
+                                               serving-engine demo (latency/throughput;
+                                               --model picks a zoo graph, --model-manifest
+                                               a runtime JSON layer graph)
+  fullpack models list                         print the model-zoo registry table
+  fullpack models show <zoo-name> [--variant V] [--size full|tiny]
+                                               print one graph's topology + plans
   fullpack kernels list                        print the kernel registry table
   fullpack artifact list [--dir D]             list AOT artifacts
   fullpack artifact run <name> [--dir D]       execute one artifact via PJRT

@@ -3,21 +3,26 @@
 //! roster are declared in one file and loaded by `fullpack serve
 //! --config engine.json`.
 //!
+//! Roster entries select model *graphs* by zoo registry name
+//! (`models::ModelRegistry` — DESIGN.md §10), so one config can serve a
+//! mixed fleet of topologies:
+//!
 //! ```json
 //! {
 //!   "workers": 4,
 //!   "batcher": { "max_batch": 16, "max_wait_ms": 2, "max_queue": 1024 },
 //!   "router":  { "gemv_max_batch": 1, "disable_fullpack": false, "prefer_gemm": false },
 //!   "models": [
-//!     { "name": "deepspeech", "variant": "w4a8", "size": "full", "seed": 7 }
+//!     { "name": "deepspeech", "model": "deepspeech", "variant": "w4a8", "size": "full", "seed": 7 },
+//!     { "name": "kws", "model": "keyword-spotter", "variant": "w2a8", "size": "tiny" }
 //!   ]
 //! }
 //! ```
 
 use super::{BatcherConfig, EngineConfig, RouterConfig};
-use crate::models::DeepSpeechConfig;
+use crate::models::ModelSize;
 use crate::pack::Variant;
-use crate::util::error::{anyhow, bail, Result};
+use crate::util::error::{anyhow, Result};
 use crate::util::json::Json;
 use std::time::Duration;
 
@@ -26,10 +31,13 @@ use std::time::Duration;
 pub struct ModelSpec {
     /// the name requests address the model by
     pub name: String,
+    /// zoo registry name of the graph to compile (defaults to the
+    /// request name when omitted)
+    pub model: String,
     /// weight/activation quantization of the model's layers
     pub variant: Variant,
     /// topology preset (`full` or `tiny`)
-    pub config: DeepSpeechConfig,
+    pub size: ModelSize,
     /// deterministic weight-generation seed
     pub seed: u64,
 }
@@ -83,17 +91,20 @@ impl FileConfig {
                     .and_then(Json::as_str)
                     .ok_or_else(|| anyhow!("models[{i}] missing name"))?
                     .to_string();
+                let model = m
+                    .get("model")
+                    .and_then(Json::as_str)
+                    .unwrap_or(&name)
+                    .to_string();
                 let variant = Variant::parse(
                     m.get("variant").and_then(Json::as_str).unwrap_or("w4a8"),
                 )
                 .map_err(|e| anyhow!("models[{i}] variant: {e}"))?;
-                let config = match m.get("size").and_then(Json::as_str).unwrap_or("full") {
-                    "full" => DeepSpeechConfig::FULL,
-                    "tiny" => DeepSpeechConfig::TINY,
-                    other => bail!("models[{i}] size {other:?} (expected full|tiny)"),
-                };
+                let size_str = m.get("size").and_then(Json::as_str).unwrap_or("full");
+                let size = ModelSize::parse(size_str)
+                    .ok_or_else(|| anyhow!("models[{i}] size {size_str:?} (expected full|tiny)"))?;
                 let seed = m.get("seed").and_then(Json::as_usize).unwrap_or(7) as u64;
-                models.push(ModelSpec { name, variant, config, seed });
+                models.push(ModelSpec { name, model, variant, size, seed });
             }
         }
         Ok(FileConfig { engine, models })
@@ -120,8 +131,9 @@ mod tests {
               "router": {"gemv_max_batch": 2, "disable_fullpack": true, "prefer_swar": true,
                          "prefer_gemm": true},
               "models": [
-                {"name": "ds", "variant": "w2a2", "size": "tiny", "seed": 3},
-                {"name": "ds-full", "variant": "w4a8"}
+                {"name": "ds", "model": "deepspeech", "variant": "w2a2", "size": "tiny", "seed": 3},
+                {"name": "ds-full", "variant": "w4a8"},
+                {"name": "kws", "model": "keyword-spotter", "size": "tiny"}
               ]
             }"#,
         )
@@ -133,11 +145,16 @@ mod tests {
         assert!(cfg.engine.router.disable_fullpack);
         assert!(cfg.engine.router.prefer_swar);
         assert!(cfg.engine.router.prefer_gemm);
-        assert_eq!(cfg.models.len(), 2);
+        assert_eq!(cfg.models.len(), 3);
         assert_eq!(cfg.models[0].variant, Variant::parse("w2a2").unwrap());
-        assert_eq!(cfg.models[0].config, DeepSpeechConfig::TINY);
-        assert_eq!(cfg.models[1].config, DeepSpeechConfig::FULL);
+        assert_eq!(cfg.models[0].size, ModelSize::Tiny);
+        assert_eq!(cfg.models[0].model, "deepspeech");
+        // omitted `model` defaults to the request name
+        assert_eq!(cfg.models[1].model, "ds-full");
+        assert_eq!(cfg.models[1].size, ModelSize::Full);
         assert_eq!(cfg.models[1].seed, 7);
+        // a non-DeepSpeech zoo graph in the same roster
+        assert_eq!(cfg.models[2].model, "keyword-spotter");
     }
 
     #[test]

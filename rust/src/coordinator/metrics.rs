@@ -1,5 +1,8 @@
-//! Serving metrics: counters and a fixed-bucket latency histogram.
+//! Serving metrics: engine-wide counters, a fixed-bucket latency
+//! histogram, and per-model dispatch/latency counters (the engine
+//! serves many registered models; capacity planning needs the split).
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 use std::sync::Mutex;
 use std::time::Instant;
@@ -32,6 +35,41 @@ pub struct Metrics {
     latency_buckets: [AtomicU64; 17],
     latency_sum_us: AtomicU64,
     started: Mutex<Option<Instant>>,
+    /// per-model counters, keyed by registered model name
+    per_model: Mutex<BTreeMap<String, ModelCounters>>,
+}
+
+/// Dispatch/latency counters for one registered model.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ModelCounters {
+    /// requests served through a multi-request GEMM dispatch
+    pub batched_requests: u64,
+    /// multi-request batched dispatches (flushes of ≥2 requests)
+    pub batched_dispatches: u64,
+    /// requests served individually (singleton flushes, errors)
+    pub singleton_requests: u64,
+    /// requests that failed
+    pub errors: u64,
+    /// requests served to completion
+    pub completed: u64,
+    /// summed end-to-end latency of completed requests
+    pub latency_sum_us: u64,
+}
+
+impl ModelCounters {
+    /// Mean end-to-end latency over this model's completed requests.
+    pub fn mean_latency_us(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.latency_sum_us as f64 / self.completed as f64
+        }
+    }
+
+    /// `(batched_requests, singleton_requests)` for this model.
+    pub fn dispatch_counts(&self) -> (u64, u64) {
+        (self.batched_requests, self.singleton_requests)
+    }
 }
 
 impl Default for Metrics {
@@ -46,6 +84,7 @@ impl Default for Metrics {
             latency_buckets: Default::default(),
             latency_sum_us: AtomicU64::new(0),
             started: Mutex::new(None),
+            per_model: Mutex::new(BTreeMap::new()),
         }
     }
 }
@@ -65,6 +104,72 @@ impl Metrics {
         self.latency_sum_us.fetch_add(us, Relaxed);
         let idx = BUCKETS_US.iter().position(|&b| us <= b).unwrap_or(BUCKETS_US.len() - 1);
         self.latency_buckets[idx].fetch_add(1, Relaxed);
+    }
+
+    fn with_model(&self, model: &str, f: impl FnOnce(&mut ModelCounters)) {
+        let mut map = self.per_model.lock().unwrap();
+        // steady state takes the allocation-free lookup; the
+        // to_string() only happens on a model's first-ever counter
+        match map.get_mut(model) {
+            Some(m) => f(m),
+            None => f(map.entry(model.to_string()).or_default()),
+        }
+    }
+
+    /// [`Metrics::observe_latency_us`] attributed to a model: updates
+    /// the engine-wide histogram *and* the model's completion/latency
+    /// counters.
+    pub fn observe_latency_for(&self, model: &str, us: u64) {
+        self.observe_latency_us(us);
+        self.with_model(model, |m| {
+            m.completed += 1;
+            m.latency_sum_us += us;
+        });
+    }
+
+    /// Count `n` requests of `model` served individually (engine-wide
+    /// and per-model singleton counters).
+    pub fn record_singleton(&self, model: &str, n: u64) {
+        self.singleton_requests.fetch_add(n, Relaxed);
+        self.with_model(model, |m| m.singleton_requests += n);
+    }
+
+    /// Count one multi-request batched dispatch of `model` covering
+    /// `requests` requests.
+    pub fn record_batched_dispatch(&self, model: &str, requests: u64) {
+        self.batched_dispatches.fetch_add(1, Relaxed);
+        self.batched_requests.fetch_add(requests, Relaxed);
+        self.with_model(model, |m| {
+            m.batched_dispatches += 1;
+            m.batched_requests += requests;
+        });
+    }
+
+    /// Count `n` failed requests of `model`.
+    pub fn record_errors(&self, model: &str, n: u64) {
+        self.errors.fetch_add(n, Relaxed);
+        self.with_model(model, |m| m.errors += n);
+    }
+
+    /// Snapshot of one model's counters (`None` if the engine never
+    /// dispatched for that name).
+    pub fn model_counters(&self, model: &str) -> Option<ModelCounters> {
+        self.per_model.lock().unwrap().get(model).copied()
+    }
+
+    /// `(batched_requests, singleton_requests)` for one model.
+    pub fn model_dispatch_counts(&self, model: &str) -> (u64, u64) {
+        self.model_counters(model).unwrap_or_default().dispatch_counts()
+    }
+
+    /// Snapshot of every model's counters, sorted by name.
+    pub fn per_model_counters(&self) -> Vec<(String, ModelCounters)> {
+        self.per_model
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), *v))
+            .collect()
     }
 
     /// Approximate quantile from the histogram (upper bound of the
@@ -122,7 +227,7 @@ impl Metrics {
                 format!("{}us", v)
             }
         };
-        format!(
+        let mut s = format!(
             "requests={} completed={} errors={} batched={}/{} singleton={} \
              mean={:.0}us p50<={} p95<={} rps={:.1}",
             self.requests.load(Relaxed),
@@ -135,7 +240,18 @@ impl Metrics {
             q(self.latency_quantile_us(0.5)),
             q(self.latency_quantile_us(0.95)),
             self.throughput_rps(),
-        )
+        );
+        for (name, m) in self.per_model_counters() {
+            s.push_str(&format!(
+                " | {name}: batched={}/{} singleton={} errors={} mean={:.0}us",
+                m.batched_requests,
+                m.batched_dispatches,
+                m.singleton_requests,
+                m.errors,
+                m.mean_latency_us(),
+            ));
+        }
+        s
     }
 
     /// `(batched_requests, singleton_requests)` — the dispatch-path
@@ -181,6 +297,39 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("batched=3/1"), "{s}");
         assert!(s.contains("singleton=2"), "{s}");
+    }
+
+    #[test]
+    fn per_model_counters_split_by_name() {
+        let m = Metrics::default();
+        m.record_batched_dispatch("ds", 3);
+        m.record_singleton("ds", 1);
+        m.record_singleton("mlp", 2);
+        m.record_errors("mlp", 1);
+        m.observe_latency_for("ds", 100);
+        m.observe_latency_for("ds", 300);
+        m.observe_latency_for("mlp", 50);
+        // per-model views
+        let ds = m.model_counters("ds").unwrap();
+        assert_eq!(ds.dispatch_counts(), (3, 1));
+        assert_eq!(ds.batched_dispatches, 1);
+        assert_eq!(ds.completed, 2);
+        assert_eq!(ds.mean_latency_us(), 200.0);
+        assert_eq!(m.model_dispatch_counts("mlp"), (0, 2));
+        assert_eq!(m.model_counters("mlp").unwrap().errors, 1);
+        assert!(m.model_counters("ghost").is_none());
+        assert_eq!(m.model_dispatch_counts("ghost"), (0, 0));
+        // engine-wide counters aggregate the per-model ones
+        assert_eq!(m.dispatch_counts(), (3, 3));
+        assert_eq!(m.errors.load(Relaxed), 1);
+        assert_eq!(m.completed.load(Relaxed), 3);
+        // both models surface in the summary
+        let s = m.summary();
+        assert!(s.contains("ds: batched=3/1 singleton=1"), "{s}");
+        assert!(s.contains("mlp: batched=0/0 singleton=2 errors=1"), "{s}");
+        // sorted snapshot
+        let names: Vec<String> = m.per_model_counters().into_iter().map(|(n, _)| n).collect();
+        assert_eq!(names, vec!["ds".to_string(), "mlp".to_string()]);
     }
 
     #[test]

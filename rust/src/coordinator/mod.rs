@@ -1,14 +1,19 @@
 //! L3 serving engine — the coordinator: request queue → dynamic batcher
 //! → worker pool → per-layer routed execution (FullPack GEMV for
-//! single-batch LSTM steps, GEMM-tier backends for the batched FC
-//! stack), with metrics and graceful shutdown.
+//! single-batch scan cells, GEMM-tier backends for the batched FC
+//! stacks), with metrics and graceful shutdown.
+//!
+//! The engine is generic over the [`crate::models::Model`] trait
+//! (DESIGN.md §10): any registered model — a `CompiledModel` over a
+//! zoo graph, the legacy `DeepSpeech` struct — is served by name
+//! through the same batching, routing-stats and metrics machinery.
 //!
 //! When the batcher flushes ≥2 requests for the same model, the worker
 //! executes them as **one** batched forward — each FC layer becomes a
 //! single `GemmKernel::gemm` call over `n · time_steps` columns, and
 //! per-request outputs are scattered back to their reply channels
 //! (DESIGN.md §9).  [`Metrics`] records the batched-vs-singleton
-//! dispatch split.
+//! dispatch split, engine-wide and per model.
 //!
 //! Python never appears here: models execute on the native Rust kernels
 //! or through AOT-compiled PJRT artifacts (`crate::runtime`).
@@ -22,11 +27,11 @@ pub mod router;
 
 pub use batcher::{Batcher, BatcherConfig, FlushReason};
 pub use config::{FileConfig, ModelSpec};
-pub use metrics::Metrics;
-pub use request::{OpDesc, Request, RequestId, Response};
+pub use metrics::{Metrics, ModelCounters};
+pub use request::{LayerTiming, OpDesc, Request, RequestId, Response};
 pub use router::{Router, RouterConfig};
 
-use crate::models::DeepSpeech;
+use crate::models::Model;
 use crate::util::error::{anyhow, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed};
@@ -60,7 +65,7 @@ struct Shared {
     batcher: Mutex<Batcher<(Request, Reply)>>,
     cv: Condvar,
     shutdown: AtomicBool,
-    models: RwLock<HashMap<String, Arc<DeepSpeech>>>,
+    models: RwLock<HashMap<String, Arc<dyn Model>>>,
     metrics: Metrics,
     router: Router,
 }
@@ -95,8 +100,10 @@ impl Engine {
         Engine { shared, workers, next_id: AtomicU64::new(1) }
     }
 
-    /// Register (or replace) a model under a name.
-    pub fn register_model(&self, name: &str, model: DeepSpeech) {
+    /// Register (or replace) a model under a name — anything
+    /// implementing [`Model`] (a `CompiledModel` over a zoo graph, the
+    /// legacy `DeepSpeech`, ...).
+    pub fn register_model(&self, name: &str, model: impl Model + 'static) {
         self.shared
             .models
             .write()
@@ -105,8 +112,16 @@ impl Engine {
     }
 
     /// Look up a registered model by name.
-    pub fn model(&self, name: &str) -> Option<Arc<DeepSpeech>> {
+    pub fn model(&self, name: &str) -> Option<Arc<dyn Model>> {
         self.shared.models.read().unwrap().get(name).cloned()
+    }
+
+    /// Names of every registered model, sorted.
+    pub fn model_names(&self) -> Vec<String> {
+        let mut names: Vec<String> =
+            self.shared.models.read().unwrap().keys().cloned().collect();
+        names.sort();
+        names
     }
 
     /// Submit asynchronously; the receiver yields the response.
@@ -193,7 +208,7 @@ fn worker_loop(s: Arc<Shared>) {
 /// executed as a single batched forward (one `GemmKernel::gemm` call
 /// per FC layer — the batcher's throughput win); everything else takes
 /// the per-request path.  Every request is counted exactly once as
-/// batched or singleton.
+/// batched or singleton, engine-wide and under its model's name.
 fn dispatch_flush(s: &Arc<Shared>, batch: Vec<(Request, Reply)>) {
     // group by model, preserving arrival order within each group
     let mut groups: Vec<(String, Vec<(Request, Reply)>)> = Vec::new();
@@ -206,34 +221,40 @@ fn dispatch_flush(s: &Arc<Shared>, batch: Vec<(Request, Reply)>) {
     for (name, items) in groups {
         let model = s.models.read().unwrap().get(&name).cloned();
         let Some(model) = model else {
+            // global counters only: per-model entries are keyed by
+            // *registered* names, so a stream of bogus client-supplied
+            // names cannot grow the metrics map (or the summary line)
+            // without bound
+            s.metrics.singleton_requests.fetch_add(items.len() as u64, Relaxed);
+            s.metrics.errors.fetch_add(items.len() as u64, Relaxed);
             for (req, reply) in items {
-                s.metrics.singleton_requests.fetch_add(1, Relaxed);
-                s.metrics.errors.fetch_add(1, Relaxed);
                 let _ = reply.send(Err(anyhow!("unknown model {:?}", req.model)));
             }
             continue;
         };
         // shape-validate up front; invalid requests error individually
         // and never poison the group's GEMM
-        let expected = model.config.time_steps * model.config.n_input;
+        let expected = model.input_len();
         let (valid, invalid): (Vec<_>, Vec<_>) =
             items.into_iter().partition(|(req, _)| req.frames.len() == expected);
-        for (req, reply) in invalid {
-            s.metrics.singleton_requests.fetch_add(1, Relaxed);
-            s.metrics.errors.fetch_add(1, Relaxed);
-            let _ = reply.send(Err(anyhow!(
-                "frames len {} != time_steps*n_input {expected}",
-                req.frames.len()
-            )));
+        if !invalid.is_empty() {
+            s.metrics.record_singleton(&name, invalid.len() as u64);
+            s.metrics.record_errors(&name, invalid.len() as u64);
+            for (req, reply) in invalid {
+                let _ = reply.send(Err(anyhow!(
+                    "frames len {} != model input len {expected}",
+                    req.frames.len()
+                )));
+            }
         }
         if valid.len() >= 2 {
-            process_group(s, &model, valid);
+            process_group(s, model.as_ref(), &name, valid);
         } else {
             for (req, reply) in valid {
-                s.metrics.singleton_requests.fetch_add(1, Relaxed);
-                let result = process_one(s, &model, &req);
+                s.metrics.record_singleton(&name, 1);
+                let result = process_one(s, model.as_ref(), &name, &req);
                 if result.is_err() {
-                    s.metrics.errors.fetch_add(1, Relaxed);
+                    s.metrics.record_errors(&name, 1);
                 }
                 let _ = reply.send(result);
             }
@@ -241,73 +262,48 @@ fn dispatch_flush(s: &Arc<Shared>, batch: Vec<(Request, Reply)>) {
     }
 }
 
-/// Route-classify every layer of one dispatch (stats — the model's own
-/// plans apply the identical policy, mirroring the paper's §4.6 split);
-/// a routing failure is a real error, not a silently skipped counter.
-/// `group` is the number of requests sharing the dispatch: the FC
-/// layers flush as one `group · time_steps`-column GEMM, while each
-/// request's LSTM scan stays a single-batch GEMV stream.
-fn classify_layers(s: &Shared, model: &DeepSpeech, group: usize) -> Result<()> {
-    // FC layers hold W8A8 weights regardless of the model variant (the
-    // paper's protocol, hard-built in DeepSpeech::new) — classify them
-    // as what they actually execute, so the stats can never advertise
-    // a backend the model's own plans did not run
-    let w8a8 = crate::pack::Variant::new(crate::pack::BitWidth::B8, crate::pack::BitWidth::B8);
-    for layer in &model.layers {
-        match layer.kind {
-            crate::models::LayerKind::FcBatch => {
-                let op = OpDesc {
-                    batch: group * model.config.time_steps,
-                    z: layer.z,
-                    k: layer.k,
-                    variant: w8a8,
-                };
-                s.router
-                    .classify(&op)
-                    .map_err(|e| anyhow!("routing layer {}: {e}", layer.name))?;
-            }
-            crate::models::LayerKind::LstmStep => {
-                let op =
-                    OpDesc { batch: 1, z: layer.z, k: layer.k, variant: model.variant };
-                for _ in 0..group {
-                    s.router
-                        .classify(&op)
-                        .map_err(|e| anyhow!("routing layer {}: {e}", layer.name))?;
-                }
-            }
-        }
+/// Route-classify every linear-algebra op of one dispatch (stats — the
+/// model's own plans apply the identical policy, mirroring the paper's
+/// §4.6 split); a routing failure is a real error, not a silently
+/// skipped counter.  `group` is the number of requests sharing the
+/// dispatch: the model's [`Model::route_ops`] widens batched nodes to
+/// the flushed column count and repeats scan cells per request.
+fn classify_ops(s: &Shared, model: &dyn Model, group: usize) -> Result<()> {
+    for op in model.route_ops(group) {
+        s.router
+            .classify(&op)
+            .map_err(|e| anyhow!("routing {}x{} op (batch {}): {e}", op.z, op.k, op.batch))?;
     }
     Ok(())
 }
 
 /// The per-request path (model already resolved and shape-validated).
-fn process_one(s: &Shared, model: &DeepSpeech, req: &Request) -> Result<Response> {
+fn process_one(s: &Shared, model: &dyn Model, name: &str, req: &Request) -> Result<Response> {
     let queue_ns = req.arrived.elapsed().as_nanos();
-    classify_layers(s, model, 1)?;
+    classify_ops(s, model, 1)?;
     let t0 = Instant::now();
     let (logits, layer_times) = model.forward_timed(&req.frames);
     let total_ns = queue_ns + t0.elapsed().as_nanos();
-    s.metrics.observe_latency_us((total_ns / 1_000) as u64);
+    s.metrics.observe_latency_for(name, (total_ns / 1_000) as u64);
     Ok(Response { id: req.id, logits, layer_times, queue_ns, total_ns })
 }
 
 /// The multi-request path: one batched forward for the whole group,
 /// per-request outputs scattered back to their reply channels.
-fn process_group(s: &Shared, model: &DeepSpeech, items: Vec<(Request, Reply)>) {
+fn process_group(s: &Shared, model: &dyn Model, name: &str, items: Vec<(Request, Reply)>) {
     let n = items.len();
-    if let Err(e) = classify_layers(s, model, n) {
+    if let Err(e) = classify_ops(s, model, n) {
         // no GEMM was dispatched: these count as per-request errors on
         // the singleton side, keeping batched_requests true to its
         // "served through a batched dispatch" meaning
         let msg = e.to_string();
-        s.metrics.singleton_requests.fetch_add(n as u64, Relaxed);
-        s.metrics.errors.fetch_add(n as u64, Relaxed);
+        s.metrics.record_singleton(name, n as u64);
+        s.metrics.record_errors(name, n as u64);
         for (_, reply) in items {
             let _ = reply.send(Err(anyhow!("{msg}")));
         }
         return;
     }
-    s.metrics.batched_requests.fetch_add(n as u64, Relaxed);
     let queue_ns: Vec<u128> = items.iter().map(|(r, _)| r.arrived.elapsed().as_nanos()).collect();
     let t0 = Instant::now();
     let results = {
@@ -315,12 +311,12 @@ fn process_group(s: &Shared, model: &DeepSpeech, items: Vec<(Request, Reply)>) {
         model.forward_batch(&frame_refs)
     };
     let compute_ns = t0.elapsed().as_nanos();
-    s.metrics.batched_dispatches.fetch_add(1, Relaxed);
+    s.metrics.record_batched_dispatch(name, n as u64);
     for (((req, reply), (logits, layer_times)), q) in
         items.into_iter().zip(results).zip(queue_ns)
     {
         let total_ns = q + compute_ns;
-        s.metrics.observe_latency_us((total_ns / 1_000) as u64);
+        s.metrics.observe_latency_for(name, (total_ns / 1_000) as u64);
         let _ = reply.send(Ok(Response { id: req.id, logits, layer_times, queue_ns: q, total_ns }));
     }
 }
@@ -363,8 +359,11 @@ mod tests {
         let (gemv, gemm) = e.router().counts();
         assert_eq!(gemv, 1); // the LSTM layer
         assert_eq!(gemm, 5); // the five FC layers
-        // a lone request is a singleton dispatch
+        // a lone request is a singleton dispatch, engine-wide and
+        // under the model's own name
         assert_eq!(e.metrics().dispatch_counts(), (0, 1));
+        assert_eq!(e.metrics().model_dispatch_counts("deepspeech"), (0, 1));
+        assert_eq!(e.model_names(), vec!["deepspeech".to_string()]);
     }
 
     #[test]

@@ -19,8 +19,11 @@ pub struct Request {
     pub arrived: Instant,
 }
 
-/// Per-layer timing entry: (layer name, nanoseconds).
-pub type LayerTiming = (&'static str, u128);
+/// Per-layer timing entry: (layer name, nanoseconds).  The name is an
+/// owned `String` so runtime-assembled models (graphs parsed from
+/// manifests) can report their layers without interning into leaked
+/// statics.
+pub type LayerTiming = (String, u128);
 
 /// The response: logits plus the per-layer breakdown (paper Fig. 10).
 #[derive(Debug, Clone)]

@@ -282,6 +282,73 @@ pub fn simulate_gemm_traced(
     (combine(method.instr_mix_gemm_on(z, k, b, core), &h, core), stats)
 }
 
+/// Modeled whole-model execution of a [`crate::models::ModelGraph`]:
+/// the per-layer `simulate_gemv`/`simulate_gemm` sum (DESIGN.md §10).
+///
+/// * [`crate::models::Op::FullyConnected`] nodes are one batched call
+///   over `time_steps` columns (`simulate_gemm` — the engine flushes
+///   them as one GEMM), or a single `simulate_gemv` when
+///   `time_steps == 1`;
+/// * scan cells issue two GEMVs per step (input + recurrent matrix),
+///   scaled by `time_steps`, with steady-state warm-up so the gate
+///   weights are resident across the scan (the Fig. 1 regime);
+/// * weightless elementwise nodes are free at this model's granularity.
+///
+/// `cell_method` runs the scan cells, `fc_method` the FC nodes — the
+/// paper's §4.6 split is `(FullPack, RuyW8A8)`; an all-baseline run is
+/// `(RuyW8A8, RuyW8A8)`.  Returns `(layer name, cycles)` per node;
+/// [`simulate_model_total`] folds the sum.
+pub fn simulate_model(
+    graph: &crate::models::ModelGraph,
+    cell_method: Method,
+    fc_method: Method,
+    preset: CachePreset,
+    core: &CoreModel,
+    calls: usize,
+) -> Vec<(String, f64)> {
+    use crate::models::Op;
+    let mut out = Vec::with_capacity(graph.nodes.len());
+    for node in &graph.nodes {
+        let cycles = match node.op {
+            Op::FullyConnected { .. } => {
+                if graph.time_steps > 1 {
+                    simulate_gemm(fc_method, node.z, node.k, graph.time_steps, preset, core, calls)
+                        .cycles
+                } else {
+                    simulate_gemv(fc_method, node.z, node.k, preset, core, calls).cycles
+                }
+            }
+            Op::LstmCell | Op::GruCell => {
+                let h = node.hidden().unwrap_or(0);
+                // per step: wx (z × k) + wh (z × h); the scan keeps the
+                // gate matrices resident, so warm at least one call
+                let steady = calls.max(2);
+                let wx = simulate_gemv(cell_method, node.z, node.k, preset, core, steady).cycles;
+                let wh = simulate_gemv(cell_method, node.z, h, preset, core, steady).cycles;
+                (wx + wh) * graph.time_steps as f64
+            }
+            Op::Relu { .. } => 0.0,
+        };
+        out.push((node.name.clone(), cycles));
+    }
+    out
+}
+
+/// Total modeled cycles of [`simulate_model`].
+pub fn simulate_model_total(
+    graph: &crate::models::ModelGraph,
+    cell_method: Method,
+    fc_method: Method,
+    preset: CachePreset,
+    core: &CoreModel,
+    calls: usize,
+) -> f64 {
+    simulate_model(graph, cell_method, fc_method, preset, core, calls)
+        .iter()
+        .map(|(_, c)| c)
+        .sum()
+}
+
 /// The modeled GEMM-vs-repeated-GEMV crossover: the smallest batch (in
 /// `2..=max_batch`) at which the amortized [`Method::FullPackGemm`]
 /// call beats `batch` repeated [`Method::FullPack`] GEMVs on variant
@@ -384,6 +451,97 @@ mod tests {
             let ipc = r.ipc();
             assert!(ipc > 0.05 && ipc < 6.0, "{m:?} ipc {ipc}");
         }
+    }
+
+    #[test]
+    fn simulate_model_reproduces_the_paper_split_win() {
+        // whole-model comparison over the DeepSpeech graph: FullPack on
+        // the LSTM scan (FC kept on Ruy, the §4.6 protocol) must beat
+        // the all-Ruy baseline end to end
+        use crate::models::{deepspeech_graph, DeepSpeechConfig};
+        let core = CoreModel::ex5_big();
+        let v = Variant::parse("w4a8").unwrap();
+        let g = deepspeech_graph(DeepSpeechConfig::FULL, v, 7);
+        let layers = simulate_model(
+            &g,
+            Method::FullPack(v),
+            Method::RuyW8A8,
+            CachePreset::Gem5Ex5Big,
+            &core,
+            STEADY,
+        );
+        assert_eq!(layers.len(), 6);
+        assert_eq!(layers[3].0, "lstm");
+        assert!(layers.iter().all(|(_, c)| *c >= 0.0));
+        let fp = simulate_model_total(
+            &g,
+            Method::FullPack(v),
+            Method::RuyW8A8,
+            CachePreset::Gem5Ex5Big,
+            &core,
+            STEADY,
+        );
+        let base = simulate_model_total(
+            &g,
+            Method::RuyW8A8,
+            Method::RuyW8A8,
+            CachePreset::Gem5Ex5Big,
+            &core,
+            STEADY,
+        );
+        assert!(base / fp > 1.2, "e2e speedup {}", base / fp);
+        // totals are the per-layer sum
+        let sum: f64 = layers.iter().map(|(_, c)| c).sum();
+        assert!((sum - fp).abs() < 1e-6 * fp.max(1.0));
+    }
+
+    #[test]
+    fn simulate_model_covers_feedforward_and_gru_graphs() {
+        use crate::models::{mlp_graph, keyword_spotter_graph, ModelSize};
+        let core = CoreModel::ex5_big();
+        let v = Variant::parse("w4a8").unwrap();
+        // MLP: all-FC at batch 1 — FullPack FC beats Ruy FC
+        let g = mlp_graph(ModelSize::Full, v, 7);
+        let fp = simulate_model_total(
+            &g,
+            Method::FullPack(v),
+            Method::FullPack(v),
+            CachePreset::Gem5Ex5Big,
+            &core,
+            STEADY,
+        );
+        let base = simulate_model_total(
+            &g,
+            Method::RuyW8A8,
+            Method::RuyW8A8,
+            CachePreset::Gem5Ex5Big,
+            &core,
+            STEADY,
+        );
+        assert!(base / fp > 1.0, "mlp speedup {}", base / fp);
+        // weightless relu nodes are free at this granularity
+        let layers =
+            simulate_model(&g, Method::RuyW8A8, Method::RuyW8A8, CachePreset::Gem5Ex5Big, &core, STEADY);
+        assert_eq!(layers.iter().filter(|(_, c)| *c == 0.0).count(), 2);
+        // keyword spotter: the GRU scan dominates and FullPack wins it
+        let g = keyword_spotter_graph(ModelSize::Full, v, 7);
+        let fp = simulate_model_total(
+            &g,
+            Method::FullPack(v),
+            Method::RuyW8A8,
+            CachePreset::Gem5Ex5Big,
+            &core,
+            STEADY,
+        );
+        let base = simulate_model_total(
+            &g,
+            Method::RuyW8A8,
+            Method::RuyW8A8,
+            CachePreset::Gem5Ex5Big,
+            &core,
+            STEADY,
+        );
+        assert!(base / fp > 1.0, "kws speedup {}", base / fp);
     }
 
     #[test]

@@ -1,10 +1,13 @@
 //! End-to-end DeepSpeech figures: Fig. 1 (per-layer breakdown
 //! motivating the GEMV focus) and Fig. 10 (per-layer breakdown for all
 //! methods) — both in simulated (gem5-stand-in) form, plus a measured
-//! native-kernel run used by `examples/deepspeech_e2e`.
+//! native-kernel run used by `examples/deepspeech_e2e`, and the
+//! model-zoo generalization of the §4.6 end-to-end comparison
+//! ([`fig_e2e_zoo`], built on `costmodel::simulate_model`).
 
-use crate::costmodel::{CoreModel, Method};
-use crate::models::DeepSpeechConfig;
+use crate::costmodel::{simulate_model, simulate_model_total, CoreModel, Method};
+use crate::models::{DeepSpeechConfig, ModelGraph, ModelRegistry, ModelSize};
+use crate::pack::Variant;
 use crate::sim::{replay_gemv_at, CachePreset, GemvTraffic};
 use crate::util::bench::Table;
 
@@ -158,6 +161,79 @@ pub fn fig10(cfg: DeepSpeechConfig) -> (Table, Vec<(String, f64)>) {
     (table, totals)
 }
 
+/// The FullPack method pair for a graph: scan cells always take
+/// `Method::FullPack(variant)`; FC nodes take FullPack only when the
+/// graph quantizes them on the model variant (the MLP), otherwise the
+/// paper's Ruy-W8A8 GEMM protocol (DeepSpeech, the KWS head).
+pub fn fullpack_methods_for(graph: &ModelGraph) -> (Method, Method) {
+    let cell = Method::FullPack(graph.variant);
+    let fc = if graph.has_model_variant_fc() {
+        Method::FullPack(graph.variant)
+    } else {
+        Method::RuyW8A8
+    };
+    (cell, fc)
+}
+
+/// Whole-model method comparison across the model zoo — the §4.6
+/// end-to-end table generalized beyond DeepSpeech (DESIGN.md §10):
+/// for every registered graph, the modeled all-Ruy baseline total vs
+/// the FullPack split total (`costmodel::simulate_model`).  Returns the
+/// printable table plus `(model, baseline Mcyc, fullpack Mcyc)` rows.
+pub fn fig_e2e_zoo(size: ModelSize, variant: Variant) -> (Table, Vec<(String, f64, f64)>) {
+    let core = CoreModel::ex5_big();
+    let preset = CachePreset::Gem5Ex5Big;
+    let mut table = Table::new(vec![
+        "model".to_string(),
+        "topology".to_string(),
+        "ruy-w8a8 Mcyc".to_string(),
+        "fullpack Mcyc".to_string(),
+        "speedup".to_string(),
+    ]);
+    let mut rows = Vec::new();
+    for entry in ModelRegistry::global().iter() {
+        let graph = (entry.build)(size, variant, 7);
+        let base =
+            simulate_model_total(&graph, Method::RuyW8A8, Method::RuyW8A8, preset, &core, 2);
+        let (cell_m, fc_m) = fullpack_methods_for(&graph);
+        let fp = simulate_model_total(&graph, cell_m, fc_m, preset, &core, 2);
+        table.row(vec![
+            entry.name.to_string(),
+            entry.blurb.to_string(),
+            format!("{:.2}", base / 1e6),
+            format!("{:.2}", fp / 1e6),
+            format!("{:.2}x", base / fp),
+        ]);
+        rows.push((entry.name.to_string(), base, fp));
+    }
+    (table, rows)
+}
+
+/// Per-layer modeled breakdown of one zoo model under both method
+/// assignments — the CLI's `simulate model --name X` view.
+pub fn model_breakdown(
+    graph: &ModelGraph,
+) -> (Table, f64, f64) {
+    let core = CoreModel::ex5_big();
+    let preset = CachePreset::Gem5Ex5Big;
+    let base = simulate_model(graph, Method::RuyW8A8, Method::RuyW8A8, preset, &core, 2);
+    let (cell_m, fc_m) = fullpack_methods_for(graph);
+    let fp = simulate_model(graph, cell_m, fc_m, preset, &core, 2);
+    let mut table = Table::new(vec!["layer", "ruy-w8a8 Mcyc", "fullpack Mcyc", "speedup"]);
+    for ((name, b), (_, f)) in base.iter().zip(&fp) {
+        let s = if *f > 0.0 { format!("{:.2}x", b / f) } else { "-".to_string() };
+        table.row(vec![
+            name.clone(),
+            format!("{:.2}", b / 1e6),
+            format!("{:.2}", f / 1e6),
+            s,
+        ]);
+    }
+    let bt: f64 = base.iter().map(|(_, c)| c).sum();
+    let ft: f64 = fp.iter().map(|(_, c)| c).sum();
+    (table, bt, ft)
+}
+
 /// Fig. 1 headline: LSTM share of total time for a given method pair.
 pub fn lstm_share(lstm_m: Method, fc_m: Method, cfg: DeepSpeechConfig) -> f64 {
     let core = CoreModel::ex5_big();
@@ -200,6 +276,41 @@ mod tests {
                 assert!(*total > best_fullpack * 0.99, "{name} unexpectedly faster");
             }
         }
+    }
+
+    #[test]
+    fn zoo_e2e_fullpack_wins_on_every_model() {
+        // the §4.6 comparison generalized: every zoo graph models a
+        // FullPack end-to-end win over the all-Ruy baseline
+        let (table, rows) = fig_e2e_zoo(ModelSize::Full, Variant::parse("w4a8").unwrap());
+        assert_eq!(rows.len(), ModelRegistry::global().len());
+        for (name, base, fp) in &rows {
+            assert!(base / fp > 1.0, "{name}: e2e speedup {}", base / fp);
+        }
+        let rendered = table.render();
+        assert!(rendered.contains("keyword-spotter"));
+        assert!(rendered.contains("mlp"));
+    }
+
+    #[test]
+    fn model_breakdown_sums_match_totals() {
+        let g = crate::models::deepspeech_graph(
+            DeepSpeechConfig::FULL,
+            Variant::parse("w4a8").unwrap(),
+            7,
+        );
+        let (table, base, fp) = model_breakdown(&g);
+        assert!(base > fp, "fullpack split must win on deepspeech");
+        assert!(table.render().contains("lstm"));
+        let total = simulate_model_total(
+            &g,
+            Method::RuyW8A8,
+            Method::RuyW8A8,
+            CachePreset::Gem5Ex5Big,
+            &CoreModel::ex5_big(),
+            2,
+        );
+        assert!((total - base).abs() < 1e-6 * base.max(1.0));
     }
 
     #[test]

@@ -9,9 +9,10 @@
 //! tier); `EXPERIMENTS.md` logs paper-vs-measured results and the
 //! `BENCH_kernels.json` perf trajectory.
 //!
-//! The `runtime` module (PJRT execution of AOT artifacts) needs the
-//! heavyweight `xla` bindings and is gated behind the `pjrt` feature so
-//! the default build is self-contained.
+//! The `runtime` module's PJRT executor (AOT artifact execution) needs
+//! the heavyweight `xla` bindings and is gated behind the `pjrt`
+//! feature; its dependency-free parts — the artifact manifest parser
+//! and the `ModelGraph`-from-manifest path — are always built.
 
 pub mod cli;
 pub mod coordinator;
@@ -21,7 +22,6 @@ pub mod kernels;
 pub mod models;
 pub mod pack;
 pub mod quant;
-#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sim;
 pub mod util;

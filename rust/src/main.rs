@@ -6,7 +6,9 @@ use fullpack::coordinator::{BatcherConfig, Engine, EngineConfig, RouterConfig};
 use fullpack::costmodel::Method;
 use fullpack::figures::{e2e, ondevice, sweeps, SIZES, SIZES_QUICK};
 use fullpack::kernels::{GemvKernel, KernelRegistry};
-use fullpack::models::{DeepSpeech, DeepSpeechConfig};
+use fullpack::models::{
+    CompiledModel, DeepSpeech, DeepSpeechConfig, Model, ModelRegistry, ModelSize,
+};
 use fullpack::pack::Variant;
 #[cfg(feature = "pjrt")]
 use fullpack::runtime::{Runtime, Tensor};
@@ -81,6 +83,9 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         return Ok(());
     }
     let which = args.pos(1).unwrap_or("all");
+    if which == "model" {
+        return cmd_simulate_model(args);
+    }
     let sz = sizes(args);
     let csv = args.opt("csv");
     let run = |id: &str| -> Result<()> {
@@ -128,6 +133,50 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     }
 }
 
+fn parse_size(args: &Args) -> Result<ModelSize> {
+    let s = args.opt_or("size", "full");
+    ModelSize::parse(s).ok_or_else(|| anyhow!("--size {s:?} (expected full|tiny)"))
+}
+
+fn parse_variant(args: &Args, default: &str) -> Result<Variant> {
+    Variant::parse(args.opt_or("variant", default)).map_err(|e| anyhow!("bad variant: {e}"))
+}
+
+/// `simulate model`: whole-model method comparison on the cost model
+/// (`costmodel::simulate_model`) — per-layer breakdown for one zoo
+/// graph, or the cross-zoo e2e table for `--name all`.
+fn cmd_simulate_model(args: &Args) -> Result<()> {
+    let size = parse_size(args)?;
+    let variant = parse_variant(args, "w4a8")?;
+    let name = args.opt_or("name", "all");
+    if name == "all" {
+        let (table, rows) = e2e::fig_e2e_zoo(size, variant);
+        println!(
+            "=== model zoo end-to-end (simulated, {} size, variant {variant}) ===\n",
+            size.name()
+        );
+        table.print();
+        println!("\nend-to-end speedup vs all-Ruy baseline:");
+        for (model, base, fp) in &rows {
+            println!("  {model:>16}: {:.2}x", base / fp);
+        }
+        return Ok(());
+    }
+    let graph = ModelRegistry::global()
+        .build(name, size, variant, 7)
+        .map_err(|e| anyhow!("--name: {e}"))?;
+    let (table, base, fp) = e2e::model_breakdown(&graph);
+    println!("=== {} (simulated per-layer breakdown) ===\n", graph.describe());
+    table.print();
+    println!(
+        "\ntotals: ruy-w8a8 {:.2} Mcyc, fullpack {:.2} Mcyc -> {:.2}x",
+        base / 1e6,
+        fp / 1e6,
+        base / fp
+    );
+    Ok(())
+}
+
 fn cmd_bench(args: &Args) -> Result<()> {
     match args.pos(1) {
         Some("fig11") => {
@@ -156,7 +205,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
             let frames: Vec<f32> =
                 (0..cfg.time_steps * cfg.n_input).map(|i| (i as f32 * 0.01).sin()).collect();
             // warmup + 5 measured runs, keep the best
-            let mut best: Option<Vec<(&'static str, u128)>> = None;
+            let mut best: Option<Vec<(String, u128)>> = None;
             let mut best_total = u128::MAX;
             model.forward_timed(&frames);
             for _ in 0..5 {
@@ -197,43 +246,69 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let fc = fullpack::coordinator::FileConfig::load(path)?;
         (fc.engine, fc.models)
     } else {
-        let variant = Variant::parse(args.opt_or("variant", "w4a8"))
-            .map_err(|e| anyhow!("bad variant: {e}"))?;
+        let variant = parse_variant(args, "w4a8")?;
         let workers = args.opt_usize("workers", 2).map_err(|e| anyhow!(e))?;
-        let cfg = if args.flag("tiny") { DeepSpeechConfig::TINY } else { DeepSpeechConfig::FULL };
+        let size = if args.flag("tiny") { ModelSize::Tiny } else { ModelSize::Full };
+        let zoo_name = args.opt_or("model", "deepspeech").to_string();
         (
             EngineConfig { workers, batcher: BatcherConfig::default(), router: RouterConfig::default() },
             vec![fullpack::coordinator::ModelSpec {
-                name: "deepspeech".into(),
+                name: zoo_name.clone(),
+                model: zoo_name,
                 variant,
-                config: cfg,
+                size,
                 seed: 7,
             }],
         )
     };
     let intra = args.opt_usize("intra-threads", 1).map_err(|e| anyhow!(e))?;
     let engine = Engine::new(engine_cfg);
-    let mut first = None;
-    for spec in &roster {
-        let mut model = DeepSpeech::new(spec.config, spec.variant, spec.seed);
+    let mut first: Option<(String, usize)> = None;
+    // --kernel re-binds scan cells; in a mixed fleet it applies to the
+    // models that have them and must not abort the feed-forward members
+    let kernel_applied = std::cell::Cell::new(false);
+    let register = |name: &str,
+                        graph: fullpack::models::ModelGraph,
+                        first: &mut Option<(String, usize)>|
+     -> Result<()> {
+        let mut model = CompiledModel::compile(graph).map_err(|e| anyhow!("{name}: {e}"))?;
         if let Some(kernel) = args.opt("kernel") {
-            model = model.with_lstm_kernel(kernel).map_err(|e| anyhow!("--kernel: {e}"))?;
+            if model.cell_kernel_name().is_some() {
+                model = model.with_cell_kernel(kernel).map_err(|e| anyhow!("--kernel: {e}"))?;
+                kernel_applied.set(true);
+            }
         }
         model.intra_op_threads = intra;
         println!(
-            "registered {} ({}, hidden {}, lstm kernel {})",
-            spec.name,
-            spec.variant,
-            spec.config.n_hidden,
-            model.lstm_kernel_name()
+            "registered {name}: {} (cell kernel {})",
+            model.describe(),
+            model.cell_kernel_name().unwrap_or("-")
         );
-        engine.register_model(&spec.name, model);
-        first.get_or_insert((spec.name.clone(), spec.config));
+        let input_len = model.input_len();
+        engine.register_model(name, model);
+        first.get_or_insert((name.to_string(), input_len));
+        Ok(())
+    };
+    for spec in &roster {
+        let graph = ModelRegistry::global()
+            .build(&spec.model, spec.size, spec.variant, spec.seed)
+            .map_err(|e| anyhow!("model {:?}: {e}", spec.name))?;
+        register(&spec.name, graph, &mut first)?;
     }
-    let (target, cfg) = first.ok_or_else(|| anyhow!("config has no models"))?;
+    // a runtime-assembled layer graph joins the same roster
+    if let Some(path) = args.opt("model-manifest") {
+        let graph = fullpack::runtime::manifest::load_model_graph(path)?;
+        let name = graph.name.clone();
+        register(&name, graph, &mut first)?;
+    }
+    if let Some(kernel) = args.opt("kernel") {
+        if !kernel_applied.get() {
+            bail!("--kernel {kernel:?}: no registered model has scan cells to re-bind");
+        }
+    }
+    let (target, input_len) = first.ok_or_else(|| anyhow!("config has no models"))?;
     println!("serving {target} ({} workers, {requests} requests)...", engine_cfg.workers);
-    let frames: Vec<f32> =
-        (0..cfg.time_steps * cfg.n_input).map(|i| (i as f32 * 0.01).sin()).collect();
+    let frames: Vec<f32> = (0..input_len).map(|i| (i as f32 * 0.01).sin()).collect();
     let rxs: Vec<_> = (0..requests)
         .map(|_| engine.submit(&target, frames.clone()))
         .collect::<Result<_>>()?;
@@ -249,20 +324,51 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
 fn cmd_models(args: &Args) -> Result<()> {
     match (args.pos(1), args.pos(2)) {
-        (Some("show"), Some("deepspeech")) => {
-            let cfg = DeepSpeechConfig::FULL;
-            let model = DeepSpeech::new(cfg, Variant::parse("w4a8").unwrap(), 7);
-            println!(
-                "DeepSpeech (paper Fig. 9): input {}, hidden {}, output {}, T={}",
-                cfg.n_input, cfg.n_hidden, cfg.n_output, cfg.time_steps
-            );
-            for l in &model.layers {
-                println!("  {:>5}: {:?} {}x{}", l.name, l.kind, l.z, l.k);
+        (Some("list"), _) | (None, _) => {
+            let reg = ModelRegistry::global();
+            let mut t = fullpack::util::bench::Table::new(vec!["model", "topology"]);
+            for e in reg.iter() {
+                t.row(vec![e.name.to_string(), e.blurb.to_string()]);
             }
-            println!("weight footprint (w4a8): {:.1} MB", model.weight_footprint() as f64 / 1e6);
+            println!("{} registered model graphs:\n", reg.len());
+            t.print();
+            println!(
+                "\nshow one with `models show NAME`; serve one with `serve --model NAME`"
+            );
             Ok(())
         }
-        _ => bail!("models expects: show deepspeech"),
+        (Some("show"), Some(name)) => {
+            let size = parse_size(args)?;
+            let variant = parse_variant(args, "w4a8")?;
+            let graph = ModelRegistry::global()
+                .build(name, size, variant, 7)
+                .map_err(|e| anyhow!("{e}"))?;
+            let model = CompiledModel::compile(graph.clone()).map_err(|e| anyhow!("{e}"))?;
+            println!("{}", model.describe());
+            let plans = model.plan_names();
+            for node in &graph.nodes {
+                let backend = plans
+                    .iter()
+                    .find(|(n, _)| n == &node.name)
+                    .map(|(_, b)| *b)
+                    .unwrap_or("-");
+                println!(
+                    "  {:>8}: {:<5} {:>5}x{:<5} {:?} -> {backend}",
+                    node.name,
+                    node.op.label(),
+                    node.z,
+                    node.k,
+                    node.op.role(),
+                );
+            }
+            println!(
+                "weight footprint ({}): {:.1} MB",
+                graph.variant,
+                model.weight_footprint() as f64 / 1e6
+            );
+            Ok(())
+        }
+        _ => bail!("models expects: list | show <zoo-name>"),
     }
 }
 

@@ -1,0 +1,642 @@
+//! `CompiledModel` — lower a [`ModelGraph`] onto the per-layer
+//! `kernels::Plan` machinery and execute it (DESIGN.md §10).
+//!
+//! Compilation quantizes/packs every weighted node into its selected
+//! backend's layout (one `Plan` per layer via the existing `PlanBuilder`
+//! policies: batched FC nodes land on the GEMM tier, scan cells on the
+//! FullPack GEMV tier — exactly the paper's §4.6 split), and
+//! preallocates the execution scratch so steady-state forwards do not
+//! allocate per call (`ScratchPool`).
+//!
+//! The executor is the generalization of the legacy `DeepSpeech`
+//! forward: over the DeepSpeech graph it is **bit-identical** to
+//! `DeepSpeech::forward`/`forward_batch` (pinned by
+//! `rust/tests/model_graph.rs`) — same quantization points, same
+//! requantization order, same gate math.
+
+#![warn(missing_docs)]
+
+use super::graph::{ModelGraph, Node, Op};
+use super::xorshift_vals;
+use crate::coordinator::request::OpDesc;
+use crate::kernels::{
+    KernelError, LayerShape, Plan, PlanBuilder, PlanScratch, SelectPolicy, Weights,
+};
+use crate::pack::Variant;
+use crate::quant::requantize;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// One compiled, executable layer.
+enum CompiledLayer {
+    Fc {
+        name: String,
+        /// resolved data variant (what the weights were quantized as)
+        variant: Variant,
+        plan: Plan,
+        weights: Weights,
+        bias: Vec<f32>,
+        relu: bool,
+    },
+    Cell {
+        name: String,
+        kind: CellKind,
+        hidden: usize,
+        /// gate rows (`4·hidden` LSTM, `3·hidden` GRU)
+        gate_dim: usize,
+        wx_plan: Plan,
+        wh_plan: Plan,
+        wx: Weights,
+        wh: Weights,
+        bias: Vec<f32>,
+    },
+    Relu {
+        name: String,
+        max: f32,
+    },
+}
+
+impl CompiledLayer {
+    fn name(&self) -> &str {
+        match self {
+            CompiledLayer::Fc { name, .. }
+            | CompiledLayer::Cell { name, .. }
+            | CompiledLayer::Relu { name, .. } => name,
+        }
+    }
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum CellKind {
+    Lstm,
+    Gru,
+}
+
+/// Reusable per-forward buffers (quantized activations, accumulators,
+/// cell state, plan pack scratch).  Pooled so concurrent forwards on
+/// the same model each check one out instead of allocating — including
+/// the scan-cell hot loop, which runs `n · time_steps` steps per
+/// forward without touching the allocator in steady state.
+#[derive(Default)]
+struct ExecScratch {
+    qact: Vec<i8>,
+    acc: Vec<i32>,
+    // scan-cell step buffers
+    x_q: Vec<i8>,
+    h_q: Vec<i8>,
+    acc_x: Vec<i32>,
+    acc_h: Vec<i32>,
+    h_new: Vec<f32>,
+    c: Vec<f32>,
+    c_new: Vec<f32>,
+    pack: PlanScratch,
+}
+
+/// Bounded pool of [`ExecScratch`] — steady-state forwards reuse
+/// buffers; bursts beyond the pool allocate and the extras are dropped
+/// on return.
+struct ScratchPool {
+    pool: Mutex<Vec<ExecScratch>>,
+}
+
+const SCRATCH_POOL_CAP: usize = 8;
+
+impl ScratchPool {
+    fn new() -> ScratchPool {
+        ScratchPool { pool: Mutex::new(Vec::new()) }
+    }
+
+    fn take(&self) -> ExecScratch {
+        self.pool.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    fn put(&self, s: ExecScratch) {
+        let mut p = self.pool.lock().unwrap();
+        if p.len() < SCRATCH_POOL_CAP {
+            p.push(s);
+        }
+    }
+}
+
+/// A [`ModelGraph`] lowered onto executable plans: packed weights, one
+/// plan per layer, preallocated scratch.
+pub struct CompiledModel {
+    graph: ModelGraph,
+    layers: Vec<CompiledLayer>,
+    /// hidden-state quantization scale (`1 / a_max` of the graph
+    /// variant — the legacy `DeepSpeech::s_h`)
+    s_h: f32,
+    /// intra-op row-parallelism for the scan-cell GEMVs (1 = serial;
+    /// results are bit-identical either way)
+    pub intra_op_threads: usize,
+    scratch: ScratchPool,
+}
+
+impl CompiledModel {
+    /// Compile a validated graph: quantize + pack weights per node and
+    /// bind one plan per layer under the default (`PaperRule`) policy.
+    pub fn compile(graph: ModelGraph) -> Result<CompiledModel, KernelError> {
+        graph.validate()?;
+        let mut layers = Vec::with_capacity(graph.nodes.len());
+        for node in &graph.nodes {
+            layers.push(Self::compile_node(&graph, node, None)?);
+        }
+        let (_, ahi) = graph.variant.a.value_range();
+        Ok(CompiledModel {
+            s_h: if ahi > 0 { 1.0 / ahi as f32 } else { 1.0 },
+            graph,
+            layers,
+            intra_op_threads: 1,
+            scratch: ScratchPool::new(),
+        })
+    }
+
+    fn compile_node(
+        graph: &ModelGraph,
+        node: &Node,
+        cell_kernel: Option<&str>,
+    ) -> Result<CompiledLayer, KernelError> {
+        let variant = node.variant.resolve(graph.variant);
+        match node.op {
+            Op::FullyConnected { relu, bias } => {
+                // batched over the request's columns: PaperRule lands
+                // sub-byte single-column stacks on FullPack GEMV and
+                // multi-column / 8-bit stacks on the GEMM tier
+                let plan = PlanBuilder::new(
+                    LayerShape { z: node.z, k: node.k, batch: graph.time_steps },
+                    variant,
+                )
+                .build()?;
+                let w = xorshift_vals(variant.w, node.z * node.k, graph.seed + node.seed_offset);
+                let weights = plan.prepare_weights(&w)?;
+                Ok(CompiledLayer::Fc {
+                    name: node.name.clone(),
+                    variant,
+                    plan,
+                    weights,
+                    bias: vec![bias; node.z],
+                    relu,
+                })
+            }
+            Op::LstmCell | Op::GruCell => {
+                let kind = if node.op == Op::LstmCell { CellKind::Lstm } else { CellKind::Gru };
+                let hidden = node.hidden().expect("cell node");
+                let gate_dim = node.z;
+                // kernel re-binding recompiles from the node, so the
+                // seeds need not be retained past this call
+                let wx_seed = graph.seed + node.seed_offset;
+                let wh_seed = graph.seed + node.seed_offset + 1;
+                let build = |k: usize| -> Result<Plan, KernelError> {
+                    let b = PlanBuilder::new(
+                        LayerShape { z: gate_dim, k, batch: 1 },
+                        graph.variant,
+                    );
+                    match cell_kernel {
+                        Some(name) => b.policy(SelectPolicy::Explicit(name.to_string())).build(),
+                        None => b.build(),
+                    }
+                };
+                let wx_plan = build(node.k)?;
+                let wh_plan = build(hidden)?;
+                let wx = wx_plan
+                    .prepare_weights(&xorshift_vals(graph.variant.w, gate_dim * node.k, wx_seed))?;
+                let wh = wh_plan
+                    .prepare_weights(&xorshift_vals(graph.variant.w, gate_dim * hidden, wh_seed))?;
+                let mut bias = vec![0.0f32; gate_dim];
+                if kind == CellKind::Lstm {
+                    bias[hidden..2 * hidden].fill(1.0); // forget-gate bias 1
+                }
+                Ok(CompiledLayer::Cell {
+                    name: node.name.clone(),
+                    kind,
+                    hidden,
+                    gate_dim,
+                    wx_plan,
+                    wh_plan,
+                    wx,
+                    wh,
+                    bias,
+                })
+            }
+            Op::Relu { max } => Ok(CompiledLayer::Relu { name: node.name.clone(), max }),
+        }
+    }
+
+    /// Re-bind every scan cell's GEMVs to an explicit registry kernel
+    /// (CLI `--kernel`): rebuilds the plans and re-packs the gate
+    /// weights into the new backend's layout.  A graph with no scan
+    /// cells is an error — an explicit kernel choice must never be
+    /// silently ignored.
+    pub fn with_cell_kernel(mut self, name: &str) -> Result<CompiledModel, KernelError> {
+        let mut rebound = 0;
+        for (i, node) in self.graph.nodes.iter().enumerate() {
+            if matches!(node.op, Op::LstmCell | Op::GruCell) {
+                self.layers[i] = Self::compile_node(&self.graph, node, Some(name))?;
+                rebound += 1;
+            }
+        }
+        if rebound == 0 {
+            return Err(KernelError::Shape(format!(
+                "model {:?} has no scan cells to re-bind onto {name:?} \
+                 (--kernel applies to LSTM/GRU gate plans)",
+                self.graph.name
+            )));
+        }
+        Ok(self)
+    }
+
+    /// The compiled graph.
+    pub fn graph(&self) -> &ModelGraph {
+        &self.graph
+    }
+
+    /// Registry name of the kernel serving the first scan cell's GEMVs
+    /// (`None` for pure feed-forward graphs).
+    pub fn cell_kernel_name(&self) -> Option<&'static str> {
+        self.layers.iter().find_map(|l| match l {
+            CompiledLayer::Cell { wx_plan, .. } => Some(wx_plan.kernel_name()),
+            _ => None,
+        })
+    }
+
+    /// `(layer name, backend registry name)` per weighted layer.
+    pub fn plan_names(&self) -> Vec<(String, &'static str)> {
+        self.layers
+            .iter()
+            .filter_map(|l| match l {
+                CompiledLayer::Fc { name, plan, .. } => Some((name.clone(), plan.kernel_name())),
+                CompiledLayer::Cell { name, wx_plan, .. } => {
+                    Some((name.clone(), wx_plan.kernel_name()))
+                }
+                CompiledLayer::Relu { .. } => None,
+            })
+            .collect()
+    }
+
+    /// The linear-algebra ops one dispatch of `group` requests issues,
+    /// described as what the **compiled plans** actually execute (the
+    /// legacy invariant: routing stats can never advertise a backend
+    /// the model's own plans did not run).  FC nodes whose plan carries
+    /// a GEMM backend widen to the flushed `group · time_steps` column
+    /// count; FC nodes compiled onto a GEMV plan (e.g. a sub-byte
+    /// single-column stack — the MLP) stay at their compiled batch, so
+    /// a multi-request flush is still classified onto the FullPack
+    /// path its `GemvKernel::gemm` fallback really takes.  Scan cells
+    /// repeat per request.
+    pub(crate) fn route_op_descs(&self, group: usize) -> Vec<OpDesc> {
+        let g = &self.graph;
+        let mut ops = Vec::new();
+        for (node, layer) in g.nodes.iter().zip(&self.layers) {
+            match layer {
+                CompiledLayer::Fc { variant, plan, .. } => {
+                    let batch = if plan.is_batched() {
+                        group * g.time_steps
+                    } else {
+                        g.time_steps
+                    };
+                    ops.push(OpDesc { batch, z: node.z, k: node.k, variant: *variant });
+                }
+                CompiledLayer::Cell { hidden, .. } => {
+                    // the cell's two matrices (input + recurrent) fold
+                    // into one per-request descriptor, legacy-style
+                    let op = OpDesc {
+                        batch: 1,
+                        z: node.z,
+                        k: node.k + hidden,
+                        variant: g.variant,
+                    };
+                    ops.extend(std::iter::repeat(op).take(group));
+                }
+                CompiledLayer::Relu { .. } => {}
+            }
+        }
+        ops
+    }
+
+    /// Total packed-weight bytes (the paper's capacity metric).
+    pub fn weight_footprint(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| match l {
+                CompiledLayer::Fc { weights, .. } => weights.footprint(),
+                CompiledLayer::Cell { wx, wh, .. } => wx.footprint() + wh.footprint(),
+                CompiledLayer::Relu { .. } => 0,
+            })
+            .sum()
+    }
+
+    /// Quantize an f32 vector at `scale` into `bits`' signed range, into
+    /// a reused buffer (the legacy `DeepSpeech::quant_act`, minus the
+    /// per-call allocation).
+    fn quant_into(x: &[f32], scale: f32, bits: crate::pack::BitWidth, out: &mut Vec<i8>) {
+        let (lo, hi) = bits.value_range();
+        out.clear();
+        out.extend(x.iter().map(|&v| (v / scale).round().clamp(lo as f32, hi as f32) as i8));
+    }
+
+    /// Full forward over one request's frames (`time_steps × input_dim`
+    /// row-major f32).  Returns `(outputs, per-layer elapsed ns)`.
+    pub fn forward_timed(&self, frames: &[f32]) -> (Vec<f32>, Vec<(String, u128)>) {
+        self.forward_batch(&[frames]).pop().expect("one request in, one result out")
+    }
+
+    /// Batched forward over `n` independent requests — the serving
+    /// engine's multi-request dispatch: all requests' columns stack so
+    /// every [`Op::FullyConnected`] node executes as **one** batched
+    /// call over `n · time_steps` columns, while scan cells stay
+    /// per-request single-column GEMV streams (a recurrence cannot
+    /// batch across time).  Per-request results are bit-identical to
+    /// `n` separate [`CompiledModel::forward_timed`] calls.
+    pub fn forward_batch(&self, frames: &[&[f32]]) -> Vec<(Vec<f32>, Vec<(String, u128)>)> {
+        let t = self.graph.time_steps;
+        let n = frames.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let input_len = self.graph.input_len();
+        for f in frames {
+            assert_eq!(f.len(), input_len, "bad frame window");
+        }
+        let cols = n * t;
+        let mut times: Vec<(String, u128)> = Vec::with_capacity(self.layers.len());
+        let mut scratch = self.scratch.take();
+
+        let mut cur: Vec<f32> = Vec::with_capacity(cols * self.graph.input_dim);
+        for f in frames {
+            cur.extend_from_slice(f);
+        }
+        let mut dim = self.graph.input_dim;
+        for layer in &self.layers {
+            let start = Instant::now();
+            match layer {
+                CompiledLayer::Fc { .. } => {
+                    cur = self.fc_forward(layer, &cur, cols, dim, &mut scratch);
+                }
+                CompiledLayer::Cell { .. } => {
+                    cur = self.scan_forward(layer, &cur, n, dim, &mut scratch);
+                }
+                CompiledLayer::Relu { max, .. } => {
+                    for v in &mut cur {
+                        *v = v.clamp(0.0, *max);
+                    }
+                }
+            }
+            dim = cur.len() / cols;
+            times.push((layer.name().to_string(), start.elapsed().as_nanos()));
+        }
+        self.scratch.put(scratch);
+
+        let per = t * dim;
+        (0..n).map(|r| (cur[r * per..(r + 1) * per].to_vec(), times.clone())).collect()
+    }
+
+    /// One batched FC node over all columns — the legacy
+    /// `DeepSpeech::fc_forward` generalized to the node's variant.
+    fn fc_forward(
+        &self,
+        layer: &CompiledLayer,
+        x: &[f32],
+        cols: usize,
+        k: usize,
+        scratch: &mut ExecScratch,
+    ) -> Vec<f32> {
+        let CompiledLayer::Fc { variant, plan, weights, bias, relu, .. } = layer else {
+            unreachable!("fc_forward on a non-FC layer");
+        };
+        let z = weights.rows();
+        debug_assert_eq!(weights.k(), k);
+        let (lo, hi) = variant.a.value_range();
+        let (lo, hi) = (lo as f32, hi as f32);
+        scratch.qact.clear();
+        scratch
+            .qact
+            .extend(x.iter().map(|&v| (v / self.graph.s_act).round().clamp(lo, hi) as i8));
+        scratch.acc.clear();
+        scratch.acc.resize(cols * z, 0);
+        plan.execute_batch(weights, &scratch.qact, cols, &mut scratch.acc).expect("fc gemm");
+        let mut out = vec![0.0f32; cols * z];
+        for (ocol, acol) in out.chunks_exact_mut(z).zip(scratch.acc.chunks_exact(z)) {
+            for ((y, &a), &bi) in ocol.iter_mut().zip(acol).zip(bias) {
+                *y = requantize(a, self.graph.s_w, self.graph.s_act, bi);
+            }
+        }
+        if *relu {
+            for v in &mut out {
+                *v = v.clamp(0.0, 20.0);
+            }
+        }
+        out
+    }
+
+    /// One scan cell over every request's column stream — the legacy
+    /// LSTM scan generalized (LSTM and GRU gate math).  All step-local
+    /// state lives in the pooled scratch; the only allocation is the
+    /// output stream.
+    fn scan_forward(
+        &self,
+        layer: &CompiledLayer,
+        cur: &[f32],
+        n: usize,
+        dim: usize,
+        scratch: &mut ExecScratch,
+    ) -> Vec<f32> {
+        let CompiledLayer::Cell { hidden, .. } = layer else {
+            unreachable!("scan_forward on a non-cell layer");
+        };
+        let t = self.graph.time_steps;
+        let hidden = *hidden;
+        let a_bits = self.graph.variant.a;
+        let mut hs = vec![0.0f32; n * t * hidden];
+        for r in 0..n {
+            scratch.h_q.clear();
+            scratch.h_q.resize(hidden, 0);
+            scratch.c.clear();
+            scratch.c.resize(hidden, 0.0);
+            for step in 0..t {
+                let col = r * t + step;
+                let x = &cur[col * dim..(col + 1) * dim];
+                Self::quant_into(x, self.graph.s_act, a_bits, &mut scratch.x_q);
+                self.cell_step_in(layer, scratch);
+                hs[col * hidden..(col + 1) * hidden].copy_from_slice(&scratch.h_new);
+                Self::quant_into(&scratch.h_new, self.s_h, a_bits, &mut scratch.h_q);
+                std::mem::swap(&mut scratch.c, &mut scratch.c_new);
+            }
+        }
+        hs
+    }
+
+    /// One cell step over the plan-selected kernels: two gate GEMVs
+    /// (`wx·scratch.x_q`, `wh·scratch.h_q`) then the cell's gate math,
+    /// writing `scratch.h_new`/`scratch.c_new` from `scratch.c`.
+    /// Bit-for-bit the legacy `DeepSpeech::lstm_step` for
+    /// [`CellKind::Lstm`] (same per-element requantize/gate
+    /// expressions, no reassociation).
+    fn cell_step_in(&self, layer: &CompiledLayer, scratch: &mut ExecScratch) {
+        let CompiledLayer::Cell { kind, hidden, gate_dim, wx_plan, wh_plan, wx, wh, bias, .. } =
+            layer
+        else {
+            unreachable!("cell_step_in on a non-cell layer");
+        };
+        let (hidden, gd) = (*hidden, *gate_dim);
+        let threads = self.intra_op_threads.max(1);
+        scratch.acc_x.resize(gd, 0);
+        scratch.acc_h.resize(gd, 0);
+        wx_plan
+            .execute_in(wx, &scratch.x_q, &mut scratch.acc_x, threads, &mut scratch.pack)
+            .expect("cell gemv");
+        wh_plan
+            .execute_in(wh, &scratch.h_q, &mut scratch.acc_h, threads, &mut scratch.pack)
+            .expect("cell gemv");
+
+        scratch.h_new.clear();
+        scratch.h_new.resize(hidden, 0.0);
+        scratch.c_new.clear();
+        scratch.c_new.resize(hidden, 0.0);
+        // per-lane views of the two accumulators, same expressions the
+        // legacy requantize_vec/g_h pair computed (edition-2021 closures
+        // capture the individual fields, so the writes below coexist)
+        let g_x =
+            |lane: usize| requantize(scratch.acc_x[lane], self.graph.s_w, self.graph.s_act, bias[lane]);
+        let g_h = |lane: usize| scratch.acc_h[lane] as f32 * (self.graph.s_w * self.s_h);
+        let sig = |v: f32| 1.0 / (1.0 + (-v).exp());
+        match kind {
+            CellKind::Lstm => {
+                for j in 0..hidden {
+                    let i = sig(g_x(j) + g_h(j));
+                    let f = sig(g_x(hidden + j) + g_h(hidden + j));
+                    let g = (g_x(2 * hidden + j) + g_h(2 * hidden + j)).tanh();
+                    let o = sig(g_x(3 * hidden + j) + g_h(3 * hidden + j));
+                    scratch.c_new[j] = f * scratch.c[j] + i * g;
+                    scratch.h_new[j] = o * scratch.c_new[j].tanh();
+                }
+            }
+            CellKind::Gru => {
+                // gates [reset, update, candidate]; `scratch.c` carries
+                // the f32 previous hidden state
+                for j in 0..hidden {
+                    let rg = sig(g_x(j) + g_h(j));
+                    let zg = sig(g_x(hidden + j) + g_h(hidden + j));
+                    let ng = (g_x(2 * hidden + j) + rg * g_h(2 * hidden + j)).tanh();
+                    scratch.h_new[j] = (1.0 - zg) * ng + zg * scratch.c[j];
+                    scratch.c_new[j] = scratch.h_new[j];
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+    use crate::models::DeepSpeechConfig;
+
+    fn v(s: &str) -> Variant {
+        Variant::parse(s).unwrap()
+    }
+
+    fn tiny_frames(g: &ModelGraph) -> Vec<f32> {
+        (0..g.input_len()).map(|i| (i as f32 * 0.013).sin()).collect()
+    }
+
+    #[test]
+    fn compile_rejects_invalid_graphs() {
+        let g = ModelGraph::new("empty", v("w4a8"), 8, 1, 7);
+        assert!(CompiledModel::compile(g).is_err());
+    }
+
+    #[test]
+    fn deepspeech_graph_compiles_with_paper_plans() {
+        let g = zoo::deepspeech_graph(DeepSpeechConfig::TINY, v("w4a8"), 7);
+        let m = CompiledModel::compile(g).unwrap();
+        assert_eq!(m.cell_kernel_name(), Some("fullpack-w4a8"));
+        let names = m.plan_names();
+        assert_eq!(names.len(), 6);
+        // FC stack on the Ruy-like GEMM tier (paper §4.6 protocol)
+        assert_eq!(names[0].1, "ruy-like-w8a8-gemm");
+        assert_eq!(names[3].1, "fullpack-w4a8");
+        assert!(m.weight_footprint() > 0);
+    }
+
+    #[test]
+    fn forward_shapes_and_determinism() {
+        for name in ["mlp", "keyword-spotter"] {
+            let g = zoo::ModelRegistry::global()
+                .build(name, zoo::ModelSize::Tiny, v("w4a8"), 7)
+                .unwrap();
+            let frames = tiny_frames(&g);
+            let out_len = g.output_len();
+            let layers = g.nodes.len();
+            let m = CompiledModel::compile(g.clone()).unwrap();
+            let (a, times) = m.forward_timed(&frames);
+            assert_eq!(a.len(), out_len, "{name}");
+            assert!(a.iter().all(|x| x.is_finite()), "{name}");
+            assert_eq!(times.len(), layers, "{name}");
+            let m2 = CompiledModel::compile(g).unwrap();
+            assert_eq!(m2.forward_timed(&frames).0, a, "{name} determinism");
+        }
+    }
+
+    #[test]
+    fn forward_batch_is_bit_identical_to_per_request() {
+        let g = zoo::ModelRegistry::global()
+            .build("keyword-spotter", zoo::ModelSize::Tiny, v("w2a8"), 9)
+            .unwrap();
+        let m = CompiledModel::compile(g.clone()).unwrap();
+        let reqs: Vec<Vec<f32>> = (0..3)
+            .map(|r| {
+                (0..g.input_len()).map(|i| ((i + r * 37) as f32 * 0.011).sin()).collect()
+            })
+            .collect();
+        let refs: Vec<&[f32]> = reqs.iter().map(|f| f.as_slice()).collect();
+        let batched = m.forward_batch(&refs);
+        assert_eq!(batched.len(), 3);
+        for (r, f) in reqs.iter().enumerate() {
+            assert_eq!(batched[r].0, m.forward_timed(f).0, "request {r}");
+        }
+        assert!(m.forward_batch(&[]).is_empty());
+    }
+
+    #[test]
+    fn explicit_cell_kernel_is_bit_identical() {
+        let g = zoo::deepspeech_graph(DeepSpeechConfig::TINY, v("w4a8"), 7);
+        let frames = tiny_frames(&g);
+        let base = CompiledModel::compile(g.clone()).unwrap().forward_timed(&frames).0;
+        let naive = CompiledModel::compile(g.clone())
+            .unwrap()
+            .with_cell_kernel("naive-w4a8")
+            .unwrap();
+        assert_eq!(naive.cell_kernel_name(), Some("naive-w4a8"));
+        assert_eq!(naive.forward_timed(&frames).0, base);
+        // a kernel that cannot run the variant is a re-bind error
+        assert!(CompiledModel::compile(g)
+            .unwrap()
+            .with_cell_kernel("ulppack-w2a2")
+            .is_err());
+        // a graph with no scan cells must refuse the knob rather than
+        // silently ignore an explicit kernel choice
+        let mlp = zoo::ModelRegistry::global()
+            .build("mlp", zoo::ModelSize::Tiny, v("w4a8"), 7)
+            .unwrap();
+        assert!(CompiledModel::compile(mlp)
+            .unwrap()
+            .with_cell_kernel("fullpack-w4a8-swar")
+            .is_err());
+    }
+
+    #[test]
+    fn gru_state_carries_across_steps() {
+        // feeding the same frame at every step must still move the
+        // hidden state (the recurrence is live): step outputs differ
+        let g = zoo::ModelRegistry::global()
+            .build("keyword-spotter", zoo::ModelSize::Tiny, v("w4a8"), 3)
+            .unwrap();
+        let t = g.time_steps;
+        let per = g.output_dim();
+        let one: Vec<f32> = (0..g.input_dim).map(|i| (i as f32 * 0.05).sin()).collect();
+        let frames: Vec<f32> = one.iter().copied().cycle().take(t * g.input_dim).collect();
+        let m = CompiledModel::compile(g).unwrap();
+        let (out, _) = m.forward_timed(&frames);
+        assert_ne!(out[..per], out[(t - 1) * per..], "recurrence had no effect");
+    }
+}

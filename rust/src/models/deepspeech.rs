@@ -12,6 +12,8 @@
 //! explicit registry name via [`DeepSpeech::with_lstm_kernel`]); no
 //! kernel function is named here.
 
+use super::xorshift_vals;
+use crate::coordinator::request::OpDesc;
 use crate::kernels::{
     KernelError, LayerShape, Plan, PlanBuilder, PlanScratch, SelectPolicy, Weights,
 };
@@ -51,10 +53,12 @@ pub enum LayerKind {
     LstmStep,
 }
 
-/// One layer of the Fig. 9 graph.
+/// One layer of the Fig. 9 graph.  The name is owned (not `&'static`)
+/// so layer descriptions can also be built at runtime — e.g. from a
+/// model manifest (`runtime::manifest::parse_model_graph`).
 #[derive(Debug)]
 pub struct Layer {
-    pub name: &'static str,
+    pub name: String,
     pub kind: LayerKind,
     pub z: usize,
     pub k: usize,
@@ -93,32 +97,19 @@ pub struct DeepSpeech {
     seed: u64,
 }
 
-fn xorshift_vals(bits: BitWidth, n: usize, seed: u64) -> Vec<i8> {
-    let (lo, hi) = bits.value_range();
-    let span = (hi as i16 - lo as i16 + 1) as u64;
-    let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
-    (0..n)
-        .map(|_| {
-            s ^= s << 13;
-            s ^= s >> 7;
-            s ^= s << 17;
-            (lo as i16 + (s % span) as i16) as i8
-        })
-        .collect()
-}
-
 impl DeepSpeech {
     /// Build with synthetic weights.  `variant` applies to the LSTM
     /// GEMVs; FC layers are W8A8 as in the paper's end-to-end setup.
     pub fn new(config: DeepSpeechConfig, variant: Variant, seed: u64) -> Self {
         let h = config.n_hidden;
+        let layer = |name: &str, kind, z, k| Layer { name: name.to_string(), kind, z, k };
         let layers = vec![
-            Layer { name: "fc1", kind: LayerKind::FcBatch, z: h, k: config.n_input },
-            Layer { name: "fc2", kind: LayerKind::FcBatch, z: h, k: h },
-            Layer { name: "fc3", kind: LayerKind::FcBatch, z: h, k: h },
-            Layer { name: "lstm", kind: LayerKind::LstmStep, z: config.gate_dim(), k: 2 * h },
-            Layer { name: "fc5", kind: LayerKind::FcBatch, z: h, k: h },
-            Layer { name: "fc6", kind: LayerKind::FcBatch, z: config.n_output, k: h },
+            layer("fc1", LayerKind::FcBatch, h, config.n_input),
+            layer("fc2", LayerKind::FcBatch, h, h),
+            layer("fc3", LayerKind::FcBatch, h, h),
+            layer("lstm", LayerKind::LstmStep, config.gate_dim(), 2 * h),
+            layer("fc5", LayerKind::FcBatch, h, h),
+            layer("fc6", LayerKind::FcBatch, config.n_output, h),
         ];
         let w8a8 = Variant::new(BitWidth::B8, BitWidth::B8);
         let mut fc_weights = Vec::new();
@@ -283,8 +274,9 @@ impl DeepSpeech {
     /// Full forward over `frames` (time_steps × n_input, row-major f32):
     /// FC stack (batch GEMM) → LSTM scan (per-step GEMVs) → FC stack.
     /// Returns (logits, per-layer elapsed nanoseconds) — the per-layer
-    /// breakdown is exactly what Fig. 1 / Fig. 10 plot.
-    pub fn forward_timed(&self, frames: &[f32]) -> (Vec<f32>, Vec<(&'static str, u128)>) {
+    /// breakdown is exactly what Fig. 1 / Fig. 10 plot.  Layer labels
+    /// are owned strings (runtime-built models need non-static names).
+    pub fn forward_timed(&self, frames: &[f32]) -> (Vec<f32>, Vec<(String, u128)>) {
         self.forward_batch(&[frames]).pop().expect("one request in, one result out")
     }
 
@@ -301,7 +293,7 @@ impl DeepSpeech {
     ///
     /// Returns one `(logits, layer_times)` pair per request; the layer
     /// times are the shared group-level measurements.
-    pub fn forward_batch(&self, frames: &[&[f32]]) -> Vec<(Vec<f32>, Vec<(&'static str, u128)>)> {
+    pub fn forward_batch(&self, frames: &[&[f32]]) -> Vec<(Vec<f32>, Vec<(String, u128)>)> {
         let cfg = self.config;
         let t = cfg.time_steps;
         let n = frames.len();
@@ -312,7 +304,7 @@ impl DeepSpeech {
             assert_eq!(f.len(), t * cfg.n_input, "bad frame window");
         }
         let cols = n * t;
-        let mut times = Vec::new();
+        let mut times: Vec<(String, u128)> = Vec::new();
         let s_act = 0.05f32;
 
         // FC front-end: one GEMM over all `cols` columns (W8A8 — the
@@ -327,7 +319,7 @@ impl DeepSpeech {
             let start = std::time::Instant::now();
             cur = self.fc_forward(fc_idx, &cur, cols, dim, s_act, true);
             dim = self.fc_weights[fc_idx].rows();
-            times.push((name, start.elapsed().as_nanos()));
+            times.push((name.to_string(), start.elapsed().as_nanos()));
             fc_idx += 1;
         }
 
@@ -349,7 +341,7 @@ impl DeepSpeech {
                 hs[row..row + hdim].copy_from_slice(&h_f);
             }
         }
-        times.push(("lstm", start.elapsed().as_nanos()));
+        times.push(("lstm".to_string(), start.elapsed().as_nanos()));
 
         // FC back-end: batched over all columns again
         let mut out = hs;
@@ -359,7 +351,7 @@ impl DeepSpeech {
             let relu = name == "fc5";
             out = self.fc_forward(fc_idx, &out, cols, dim2, s_act, relu);
             dim2 = self.fc_weights[fc_idx].rows();
-            times.push((name, start.elapsed().as_nanos()));
+            times.push((name.to_string(), start.elapsed().as_nanos()));
             fc_idx += 1;
         }
         let per = t * cfg.n_output;
@@ -425,6 +417,63 @@ pub struct LstmScratch {
     acc_h: Vec<i32>,
     /// activation pad/pack scratch handed to `Plan::execute_in`
     pack: PlanScratch,
+}
+
+impl super::Model for DeepSpeech {
+    fn input_len(&self) -> usize {
+        self.config.time_steps * self.config.n_input
+    }
+
+    fn output_len(&self) -> usize {
+        self.config.time_steps * self.config.n_output
+    }
+
+    fn forward_timed(&self, frames: &[f32]) -> (Vec<f32>, Vec<(String, u128)>) {
+        DeepSpeech::forward_timed(self, frames)
+    }
+
+    fn forward_batch(&self, frames: &[&[f32]]) -> Vec<(Vec<f32>, Vec<(String, u128)>)> {
+        DeepSpeech::forward_batch(self, frames)
+    }
+
+    fn route_ops(&self, group: usize) -> Vec<OpDesc> {
+        // FC layers hold W8A8 weights regardless of the model variant
+        // (the paper's protocol, hard-built in DeepSpeech::new) —
+        // describe them as what they actually execute, so routing stats
+        // can never advertise a backend the model's own plans did not
+        // run.  The FC stack flushes as one `group · time_steps`-column
+        // GEMM; each request's LSTM scan stays a single-batch GEMV
+        // stream.
+        let w8a8 = Variant::new(BitWidth::B8, BitWidth::B8);
+        let mut ops = Vec::new();
+        for layer in &self.layers {
+            match layer.kind {
+                LayerKind::FcBatch => ops.push(OpDesc {
+                    batch: group * self.config.time_steps,
+                    z: layer.z,
+                    k: layer.k,
+                    variant: w8a8,
+                }),
+                LayerKind::LstmStep => {
+                    let op =
+                        OpDesc { batch: 1, z: layer.z, k: layer.k, variant: self.variant };
+                    ops.extend(std::iter::repeat(op).take(group));
+                }
+            }
+        }
+        ops
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "deepspeech {} (input {}, hidden {}, T {}, lstm kernel {})",
+            self.variant,
+            self.config.n_input,
+            self.config.n_hidden,
+            self.config.time_steps,
+            self.lstm_kernel_name()
+        )
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,460 @@
+//! `ModelGraph` — the model-layer IR (DESIGN.md §10): a typed, ordered
+//! layer graph that [`crate::models::CompiledModel`] lowers onto the
+//! existing per-layer `kernels::Plan` machinery.
+//!
+//! The IR exists so that "a new workload" is a graph constructor (or a
+//! runtime-parsed manifest, `crate::runtime::manifest::parse_model_graph`)
+//! instead of another hand-written model struct: every node declares
+//! *what* it computes ([`Op`]), its shape, which quantization variant
+//! its weights take ([`NodeVariant`]), and how it participates in
+//! batching ([`BatchRole`] — the paper's §4.6 GEMV-vs-GEMM split made
+//! explicit per node).  Node names are owned `String`s so graphs can be
+//! assembled at runtime from manifests, not just from `&'static`
+//! constructors.
+//!
+//! Weights are synthetic and deterministic (the DESIGN.md substitution
+//! table): each node carries a `seed_offset` folded into the graph seed
+//! by the same xorshift generator the legacy `DeepSpeech` model used, so
+//! `CompiledModel` over [`crate::models::zoo::deepspeech_graph`] is
+//! bit-identical to the legacy struct (pinned by
+//! `rust/tests/model_graph.rs`).
+
+#![warn(missing_docs)]
+
+use crate::kernels::KernelError;
+use crate::pack::Variant;
+
+/// How a node participates in the engine's batching (paper §4.6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchRole {
+    /// all columns of a flush execute as one batched call (the FC
+    /// stack: one `GemmKernel::gemm` over `n·time_steps` columns)
+    Batched,
+    /// recurrent scan: per-request, per-step single-column GEMVs (the
+    /// FullPack path — a recurrence cannot batch across time)
+    Scan,
+    /// weightless elementwise op over the whole activation stream
+    Elementwise,
+}
+
+/// What one node computes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// `z × k` fully-connected layer over every column, with an
+    /// optionally fused `clamp(0, 20)` ReLU and a constant per-row bias.
+    FullyConnected {
+        /// fuse the legacy `clamp(0, 20)` ReLU after requantization
+        relu: bool,
+        /// constant bias added to every output row
+        bias: f32,
+    },
+    /// LSTM cell scanned over `time_steps`: `z = 4·hidden` gate rows,
+    /// `k` input depth, plus a `z × hidden` recurrent matrix.  Carries
+    /// the legacy forget-gate-one bias.
+    LstmCell,
+    /// GRU cell scanned over `time_steps`: `z = 3·hidden` gate rows
+    /// (reset, update, candidate), `k` input depth, plus a `z × hidden`
+    /// recurrent matrix.  Zero bias.
+    GruCell,
+    /// standalone elementwise `clamp(0, max)` over the stream.
+    Relu {
+        /// upper clamp bound (the legacy fused ReLU uses 20.0)
+        max: f32,
+    },
+}
+
+impl Op {
+    /// The node's batching role (paper §4.6 split, per node).
+    pub fn role(&self) -> BatchRole {
+        match self {
+            Op::FullyConnected { .. } => BatchRole::Batched,
+            Op::LstmCell | Op::GruCell => BatchRole::Scan,
+            Op::Relu { .. } => BatchRole::Elementwise,
+        }
+    }
+
+    /// Short op label (`fc`, `lstm`, `gru`, `relu`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Op::FullyConnected { .. } => "fc",
+            Op::LstmCell => "lstm",
+            Op::GruCell => "gru",
+            Op::Relu { .. } => "relu",
+        }
+    }
+}
+
+/// Which quantization variant a node's weights take.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeVariant {
+    /// the graph-level variant (the model's sub-byte knob)
+    Model,
+    /// a pinned variant, e.g. the paper's W8A8 FC stack regardless of
+    /// the model variant (§4.6 protocol)
+    Fixed(Variant),
+}
+
+impl NodeVariant {
+    /// Resolve against the graph-level variant.
+    pub fn resolve(self, model: Variant) -> Variant {
+        match self {
+            NodeVariant::Model => model,
+            NodeVariant::Fixed(v) => v,
+        }
+    }
+}
+
+/// One node of the layer graph.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Node {
+    /// owned layer name (timing labels, metrics, manifests)
+    pub name: String,
+    /// what the node computes
+    pub op: Op,
+    /// output rows of the node's (input) weight matrix; gate dimension
+    /// for cells (`4·hidden` LSTM, `3·hidden` GRU); stream width for
+    /// weightless ops
+    pub z: usize,
+    /// input depth (the previous node's output width); equal to `z`
+    /// for weightless ops
+    pub k: usize,
+    /// quantization of this node's weights/activations
+    pub variant: NodeVariant,
+    /// xorshift seed offset for synthetic weight generation (cells use
+    /// `offset` for the input matrix and `offset + 1` for the
+    /// recurrent one)
+    pub seed_offset: u64,
+}
+
+impl Node {
+    /// Hidden state width for cell nodes (`None` for non-recurrent ops).
+    pub fn hidden(&self) -> Option<usize> {
+        match self.op {
+            Op::LstmCell => Some(self.z / 4),
+            Op::GruCell => Some(self.z / 3),
+            _ => None,
+        }
+    }
+
+    /// Output stream width of this node.
+    pub fn out_dim(&self) -> usize {
+        match self.op {
+            Op::FullyConnected { .. } => self.z,
+            Op::LstmCell | Op::GruCell => self.hidden().unwrap_or(0),
+            Op::Relu { .. } => self.z,
+        }
+    }
+}
+
+/// The model IR: an ordered layer graph plus the graph-level
+/// quantization variant, shapes and scale constants the executor needs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelGraph {
+    /// model name (registry key, metrics label)
+    pub name: String,
+    /// graph-level quantization variant ([`NodeVariant::Model`] nodes)
+    pub variant: Variant,
+    /// per-frame input width
+    pub input_dim: usize,
+    /// columns per request (LSTM unroll length == FC batch; 1 for
+    /// feed-forward classifiers)
+    pub time_steps: usize,
+    /// deterministic weight-generation seed
+    pub seed: u64,
+    /// per-tensor weight scale (legacy default 0.02)
+    pub s_w: f32,
+    /// activation scale (legacy default 0.05)
+    pub s_act: f32,
+    /// the ordered layer nodes
+    pub nodes: Vec<Node>,
+}
+
+impl ModelGraph {
+    /// Start an empty graph with the legacy scale defaults.
+    pub fn new(
+        name: impl Into<String>,
+        variant: Variant,
+        input_dim: usize,
+        time_steps: usize,
+        seed: u64,
+    ) -> ModelGraph {
+        ModelGraph {
+            name: name.into(),
+            variant,
+            input_dim,
+            time_steps: time_steps.max(1),
+            seed,
+            s_w: 0.02,
+            s_act: 0.05,
+            nodes: Vec::new(),
+        }
+    }
+
+    /// Stream width entering the next appended node.
+    pub fn cur_dim(&self) -> usize {
+        self.nodes.last().map_or(self.input_dim, Node::out_dim)
+    }
+
+    /// Stream width leaving the last node (per column).
+    pub fn output_dim(&self) -> usize {
+        self.cur_dim()
+    }
+
+    /// f32 values per request at the input (`time_steps · input_dim`).
+    pub fn input_len(&self) -> usize {
+        self.time_steps * self.input_dim
+    }
+
+    /// f32 values per request at the output (`time_steps · output_dim`).
+    pub fn output_len(&self) -> usize {
+        self.time_steps * self.output_dim()
+    }
+
+    fn next_fc_offset(&self) -> u64 {
+        self.nodes.len() as u64
+    }
+
+    fn next_cell_offset(&self) -> u64 {
+        // the legacy DeepSpeech constructor seeded its (single) cell at
+        // seed+100/seed+101; additional cells stack above that
+        let cells = self
+            .nodes
+            .iter()
+            .filter(|n| n.op.role() == BatchRole::Scan)
+            .count() as u64;
+        100 + 2 * cells
+    }
+
+    /// Append a fully-connected node on the graph-level variant.
+    pub fn fc(self, name: impl Into<String>, z: usize, relu: bool) -> ModelGraph {
+        self.fc_node(name, z, relu, NodeVariant::Model)
+    }
+
+    /// Append a fully-connected node with a pinned variant (the paper's
+    /// W8A8 FC stack).
+    pub fn fc_fixed(
+        self,
+        name: impl Into<String>,
+        z: usize,
+        relu: bool,
+        v: Variant,
+    ) -> ModelGraph {
+        self.fc_node(name, z, relu, NodeVariant::Fixed(v))
+    }
+
+    fn fc_node(
+        mut self,
+        name: impl Into<String>,
+        z: usize,
+        relu: bool,
+        variant: NodeVariant,
+    ) -> ModelGraph {
+        let k = self.cur_dim();
+        let seed_offset = self.next_fc_offset();
+        self.nodes.push(Node {
+            name: name.into(),
+            op: Op::FullyConnected { relu, bias: 0.01 },
+            z,
+            k,
+            variant,
+            seed_offset,
+        });
+        self
+    }
+
+    /// Append an LSTM cell of the given hidden width.
+    pub fn lstm(mut self, name: impl Into<String>, hidden: usize) -> ModelGraph {
+        let k = self.cur_dim();
+        let seed_offset = self.next_cell_offset();
+        self.nodes.push(Node {
+            name: name.into(),
+            op: Op::LstmCell,
+            z: 4 * hidden,
+            k,
+            variant: NodeVariant::Model,
+            seed_offset,
+        });
+        self
+    }
+
+    /// Append a GRU cell of the given hidden width.
+    pub fn gru(mut self, name: impl Into<String>, hidden: usize) -> ModelGraph {
+        let k = self.cur_dim();
+        let seed_offset = self.next_cell_offset();
+        self.nodes.push(Node {
+            name: name.into(),
+            op: Op::GruCell,
+            z: 3 * hidden,
+            k,
+            variant: NodeVariant::Model,
+            seed_offset,
+        });
+        self
+    }
+
+    /// Append a standalone elementwise `clamp(0, max)` node.
+    pub fn relu(mut self, name: impl Into<String>, max: f32) -> ModelGraph {
+        let d = self.cur_dim();
+        self.nodes.push(Node {
+            name: name.into(),
+            op: Op::Relu { max },
+            z: d,
+            k: d,
+            variant: NodeVariant::Model,
+            seed_offset: 0,
+        });
+        self
+    }
+
+    /// Does any FC node quantize on the graph-level (sub-byte) variant?
+    /// (Decides whether a whole-model FullPack comparison also swaps
+    /// the FC method, or keeps the paper's Ruy FC protocol.)
+    pub fn has_model_variant_fc(&self) -> bool {
+        self.nodes.iter().any(|n| {
+            matches!(n.op, Op::FullyConnected { .. }) && n.variant == NodeVariant::Model
+        })
+    }
+
+    /// Structural validation: positive shapes, chained dimensions,
+    /// divisible gate widths, unique names, at least one node.
+    pub fn validate(&self) -> Result<(), KernelError> {
+        let err = |m: String| Err(KernelError::Shape(m));
+        if self.nodes.is_empty() {
+            return err(format!("model graph {:?} has no nodes", self.name));
+        }
+        if self.input_dim == 0 {
+            return err(format!("model graph {:?} has input_dim 0", self.name));
+        }
+        let mut dim = self.input_dim;
+        let mut seen = std::collections::HashSet::new();
+        for n in &self.nodes {
+            if !seen.insert(n.name.as_str()) {
+                return err(format!("duplicate node name {:?}", n.name));
+            }
+            if n.z == 0 || n.k == 0 {
+                return err(format!("node {:?} has a zero dimension", n.name));
+            }
+            if n.k != dim {
+                return err(format!(
+                    "node {:?} expects depth {} but the stream is {dim} wide",
+                    n.name, n.k
+                ));
+            }
+            match n.op {
+                Op::LstmCell if n.z % 4 != 0 => {
+                    return err(format!("LSTM node {:?}: z={} not divisible by 4", n.name, n.z))
+                }
+                Op::GruCell if n.z % 3 != 0 => {
+                    return err(format!("GRU node {:?}: z={} not divisible by 3", n.name, n.z))
+                }
+                Op::Relu { max } if !(max > 0.0) => {
+                    return err(format!("relu node {:?}: non-positive max {max}", n.name))
+                }
+                _ => {}
+            }
+            dim = n.out_dim();
+        }
+        Ok(())
+    }
+
+    /// One-line human description.
+    pub fn describe(&self) -> String {
+        format!(
+            "{} {} (input {}, T {}, {} nodes -> {})",
+            self.name,
+            self.variant,
+            self.input_dim,
+            self.time_steps,
+            self.nodes.len(),
+            self.output_dim()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(s: &str) -> Variant {
+        Variant::parse(s).unwrap()
+    }
+
+    #[test]
+    fn builder_chains_dims_and_offsets() {
+        let g = ModelGraph::new("m", v("w4a8"), 64, 4, 7)
+            .fc("fc1", 128, true)
+            .lstm("cell", 128)
+            .fc("out", 10, false);
+        assert_eq!(g.nodes.len(), 3);
+        assert_eq!(g.nodes[0].k, 64);
+        assert_eq!(g.nodes[1].z, 512);
+        assert_eq!(g.nodes[1].k, 128);
+        assert_eq!(g.nodes[1].hidden(), Some(128));
+        assert_eq!(g.nodes[2].k, 128);
+        assert_eq!(g.output_dim(), 10);
+        assert_eq!(g.input_len(), 4 * 64);
+        assert_eq!(g.output_len(), 4 * 10);
+        // fc offsets = node index, first cell at 100 (legacy seeds)
+        assert_eq!(g.nodes[0].seed_offset, 0);
+        assert_eq!(g.nodes[1].seed_offset, 100);
+        assert_eq!(g.nodes[2].seed_offset, 2);
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn roles_per_node() {
+        let g = ModelGraph::new("m", v("w4a8"), 8, 1, 7)
+            .fc("a", 8, false)
+            .relu("r", 20.0)
+            .gru("g", 4);
+        assert_eq!(g.nodes[0].op.role(), BatchRole::Batched);
+        assert_eq!(g.nodes[1].op.role(), BatchRole::Elementwise);
+        assert_eq!(g.nodes[2].op.role(), BatchRole::Scan);
+        assert_eq!(g.nodes[2].z, 12);
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn validation_rejects_bad_graphs() {
+        let empty = ModelGraph::new("m", v("w4a8"), 8, 1, 7);
+        assert!(empty.validate().is_err());
+        // broken chain: hand-built node with the wrong depth
+        let mut g = ModelGraph::new("m", v("w4a8"), 8, 1, 7).fc("a", 16, false);
+        g.nodes.push(Node {
+            name: "b".into(),
+            op: Op::FullyConnected { relu: false, bias: 0.0 },
+            z: 4,
+            k: 99,
+            variant: NodeVariant::Model,
+            seed_offset: 1,
+        });
+        assert!(g.validate().is_err());
+        // duplicate names
+        let g = ModelGraph::new("m", v("w4a8"), 8, 1, 7).fc("a", 8, false).fc("a", 8, false);
+        assert!(g.validate().is_err());
+        // non-divisible gate width
+        let mut g = ModelGraph::new("m", v("w4a8"), 8, 1, 7);
+        g.nodes.push(Node {
+            name: "l".into(),
+            op: Op::LstmCell,
+            z: 10,
+            k: 8,
+            variant: NodeVariant::Model,
+            seed_offset: 100,
+        });
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn fixed_vs_model_variant_resolution() {
+        let w8 = v("w8a8");
+        let g = ModelGraph::new("m", v("w2a8"), 8, 2, 7)
+            .fc_fixed("fc", 8, false, w8)
+            .fc("sub", 8, false);
+        assert_eq!(g.nodes[0].variant.resolve(g.variant), w8);
+        assert_eq!(g.nodes[1].variant.resolve(g.variant), v("w2a8"));
+        assert!(g.has_model_variant_fc());
+        let g2 = ModelGraph::new("m", v("w2a8"), 8, 2, 7).fc_fixed("fc", 8, false, w8);
+        assert!(!g2.has_model_variant_fc());
+    }
+}

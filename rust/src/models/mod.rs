@@ -1,10 +1,101 @@
-//! Model definitions: the DeepSpeech-like network of the paper's
-//! end-to-end evaluation (Fig. 9) and the CNN FC-layer zoo of the
+//! Model layer (DESIGN.md §10): the [`ModelGraph`] IR, the
+//! [`CompiledModel`] executor, the named model [`zoo`], and the legacy
+//! [`DeepSpeech`] struct (kept as the bit-exact oracle the graph
+//! executor is pinned against), plus the CNN FC-layer zoo of the
 //! on-device study (Fig. 11).
+//!
+//! The serving engine is generic over the [`Model`] trait: anything
+//! that can forward frames (singly or batched), report its request
+//! shape, and describe its layer ops for routing stats can be
+//! registered and served by name.
 
+pub mod compiled;
 pub mod deepspeech;
+pub mod graph;
+pub mod zoo;
 
+pub use compiled::CompiledModel;
 pub use deepspeech::{DeepSpeech, DeepSpeechConfig, Layer, LayerKind};
+pub use graph::{BatchRole, ModelGraph, Node, NodeVariant, Op};
+pub use zoo::{
+    deepspeech_graph, keyword_spotter_graph, mlp_graph, ModelRegistry, ModelSize, ZooEntry,
+};
+
+use crate::coordinator::request::{LayerTiming, OpDesc};
+use crate::pack::BitWidth;
+
+/// A servable model: the engine's only view of the things it registers.
+/// Implemented by [`CompiledModel`] (any [`ModelGraph`]) and by the
+/// legacy [`DeepSpeech`] struct.
+pub trait Model: Send + Sync {
+    /// f32 values per request (`time_steps × input_dim`); the engine
+    /// shape-validates incoming frames against this.
+    fn input_len(&self) -> usize;
+
+    /// f32 values per reply.
+    fn output_len(&self) -> usize;
+
+    /// Forward one request: `(outputs, per-layer elapsed ns)`.
+    fn forward_timed(&self, frames: &[f32]) -> (Vec<f32>, Vec<LayerTiming>);
+
+    /// Forward a flushed group of requests as one batched dispatch
+    /// (bit-identical to per-request forwards); one result per request.
+    fn forward_batch(&self, frames: &[&[f32]]) -> Vec<(Vec<f32>, Vec<LayerTiming>)>;
+
+    /// The linear-algebra ops one dispatch of `group` requests issues —
+    /// the router classifies these for the per-path stats (batched FC
+    /// nodes widen to `group · time_steps` columns; scan cells repeat
+    /// per request).
+    fn route_ops(&self, group: usize) -> Vec<OpDesc>;
+
+    /// One-line description for logs and the CLI.
+    fn describe(&self) -> String;
+}
+
+impl Model for CompiledModel {
+    fn input_len(&self) -> usize {
+        self.graph().input_len()
+    }
+
+    fn output_len(&self) -> usize {
+        self.graph().output_len()
+    }
+
+    fn forward_timed(&self, frames: &[f32]) -> (Vec<f32>, Vec<LayerTiming>) {
+        CompiledModel::forward_timed(self, frames)
+    }
+
+    fn forward_batch(&self, frames: &[&[f32]]) -> Vec<(Vec<f32>, Vec<LayerTiming>)> {
+        CompiledModel::forward_batch(self, frames)
+    }
+
+    fn route_ops(&self, group: usize) -> Vec<OpDesc> {
+        self.route_op_descs(group)
+    }
+
+    fn describe(&self) -> String {
+        self.graph().describe()
+    }
+}
+
+/// Deterministic synthetic weight values in a bit-width's signed range
+/// (the DESIGN.md substitution table: end-to-end timing depends on
+/// shapes, not weight values).  Shared by the legacy [`DeepSpeech`]
+/// constructor and [`CompiledModel`] so the two generate identical
+/// matrices from identical seeds.
+pub(crate) fn xorshift_vals(bits: BitWidth, n: usize, seed: u64) -> Vec<i8> {
+    let (lo, hi) = bits.value_range();
+    let span = (hi as i16 - lo as i16 + 1) as u64;
+    let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+    (0..n)
+        .map(|_| {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            (lo as i16 + (s % span) as i16) as i8
+        })
+        .collect()
+}
 
 /// One FullyConnected layer shape: `z` outputs from `k` inputs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -42,5 +133,41 @@ mod tests {
         for fc in CNN_FC_ZOO {
             assert!(fc.k >= 1000 && fc.z == 1000, "{}", fc.name);
         }
+    }
+
+    #[test]
+    fn mlp_route_ops_stay_on_the_compiled_fullpack_path() {
+        use crate::pack::Variant;
+        let v = Variant::parse("w4a8").unwrap();
+        let m = CompiledModel::compile(mlp_graph(ModelSize::Tiny, v, 7)).unwrap();
+        // a multi-request flush still executes the compiled batch-1
+        // FullPack GEMV plans (GemvKernel::gemm fallback) — the
+        // classification must not widen onto the W8A8 GEMM rival the
+        // plans never run
+        let ops = Model::route_ops(&m, 3);
+        assert_eq!(ops.len(), 3); // the three FC nodes; relus weightless
+        for op in ops {
+            assert_eq!(op.batch, 1);
+            assert_eq!(op.variant, v);
+        }
+    }
+
+    #[test]
+    fn compiled_route_ops_match_legacy_classification() {
+        use crate::pack::Variant;
+        let cfg = DeepSpeechConfig::TINY;
+        let v = Variant::parse("w4a8").unwrap();
+        let legacy = DeepSpeech::new(cfg, v, 7);
+        let compiled =
+            CompiledModel::compile(deepspeech_graph(cfg, v, 7)).unwrap();
+        for group in [1usize, 3] {
+            assert_eq!(
+                Model::route_ops(&legacy, group),
+                Model::route_ops(&compiled, group),
+                "group {group}"
+            );
+        }
+        // 5 FC descriptors + group LSTM descriptors
+        assert_eq!(Model::route_ops(&compiled, 3).len(), 5 + 3);
     }
 }

@@ -1,0 +1,243 @@
+//! The model zoo (DESIGN.md §10): named [`ModelGraph`] constructors
+//! registered in a [`ModelRegistry`], so the engine, the CLI and the
+//! cost model all select models by *name* — the model-level twin of the
+//! kernel registry.
+//!
+//! Built-in graphs:
+//!
+//! | name              | topology                              | scenario |
+//! |-------------------|---------------------------------------|----------|
+//! | `deepspeech`      | 3×FC → LSTM → 2×FC (paper Fig. 9)     | §4.6 end-to-end (GEMV+GEMM split) |
+//! | `mlp`             | FC → ReLU → FC → ReLU → FC            | pure-FC sub-byte classifier (all-GEMV at batch 1) |
+//! | `keyword-spotter` | GRU → FFN(FC+ReLU) → FC               | streaming KWS: recurrent scan + batched W8A8 head |
+//!
+//! `deepspeech` reproduces the legacy `DeepSpeech` struct exactly —
+//! same shapes, same weight seeds, same §4.6 variant split — so
+//! `CompiledModel` over it is bit-identical to the legacy forward
+//! (pinned by `rust/tests/model_graph.rs`).
+
+#![warn(missing_docs)]
+
+use super::graph::ModelGraph;
+use super::DeepSpeechConfig;
+use crate::pack::{BitWidth, Variant};
+use crate::util::error::{anyhow, Error};
+use std::sync::OnceLock;
+
+const W8A8: Variant = Variant::new(BitWidth::B8, BitWidth::B8);
+
+/// Topology preset: the paper-sized graph or the CI-sized twin.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelSize {
+    /// paper-scale shapes (DeepSpeech v0.9 &c.)
+    Full,
+    /// CI-sized shapes (seconds, not minutes, under `cargo test`)
+    Tiny,
+}
+
+impl ModelSize {
+    /// Parse `"full"` / `"tiny"`.
+    pub fn parse(s: &str) -> Option<ModelSize> {
+        match s {
+            "full" => Some(ModelSize::Full),
+            "tiny" => Some(ModelSize::Tiny),
+            _ => None,
+        }
+    }
+
+    /// Lowercase preset name.
+    pub fn name(self) -> &'static str {
+        match self {
+            ModelSize::Full => "full",
+            ModelSize::Tiny => "tiny",
+        }
+    }
+}
+
+/// The DeepSpeech-like Fig. 9 graph — the legacy model as a graph
+/// constructor: W8A8 FC stack (paper: GEMM routed to Ruy), model-variant
+/// LSTM gate GEMVs (the FullPack path), legacy weight seeds.
+pub fn deepspeech_graph(cfg: DeepSpeechConfig, variant: Variant, seed: u64) -> ModelGraph {
+    let h = cfg.n_hidden;
+    ModelGraph::new("deepspeech", variant, cfg.n_input, cfg.time_steps, seed)
+        .fc_fixed("fc1", h, true, W8A8)
+        .fc_fixed("fc2", h, true, W8A8)
+        .fc_fixed("fc3", h, true, W8A8)
+        .lstm("lstm", h)
+        .fc_fixed("fc5", h, true, W8A8)
+        .fc_fixed("fc6", cfg.n_output, false, W8A8)
+}
+
+fn build_deepspeech(size: ModelSize, variant: Variant, seed: u64) -> ModelGraph {
+    let cfg = match size {
+        ModelSize::Full => DeepSpeechConfig::FULL,
+        ModelSize::Tiny => DeepSpeechConfig::TINY,
+    };
+    deepspeech_graph(cfg, variant, seed)
+}
+
+/// Pure-FC MLP classifier: every layer quantizes on the model variant,
+/// so at serving batch 1 the whole network runs the FullPack GEMV path
+/// (standalone [`super::graph::Op::Relu`] nodes between layers).
+pub fn mlp_graph(size: ModelSize, variant: Variant, seed: u64) -> ModelGraph {
+    let (input, h1, h2, classes) = match size {
+        ModelSize::Full => (784, 1024, 512, 10),
+        ModelSize::Tiny => (64, 128, 64, 10),
+    };
+    ModelGraph::new("mlp", variant, input, 1, seed)
+        .fc("fc1", h1, false)
+        .relu("relu1", 20.0)
+        .fc("fc2", h2, false)
+        .relu("relu2", 20.0)
+        .fc("out", classes, false)
+}
+
+/// GRU/FFN keyword spotter: a model-variant GRU scan over the MFCC
+/// stream (the FullPack GEMV regime) feeding a batched W8A8 FFN head
+/// (the GEMM regime) — both paper paths in one non-DeepSpeech topology.
+pub fn keyword_spotter_graph(size: ModelSize, variant: Variant, seed: u64) -> ModelGraph {
+    let (input, hidden, t, ffn, classes) = match size {
+        ModelSize::Full => (40, 256, 16, 128, 12),
+        ModelSize::Tiny => (40, 64, 4, 32, 12),
+    };
+    ModelGraph::new("keyword-spotter", variant, input, t, seed)
+        .gru("gru", hidden)
+        .fc_fixed("ffn", ffn, true, W8A8)
+        .fc_fixed("out", classes, false, W8A8)
+}
+
+/// One zoo entry: a named graph constructor.
+pub struct ZooEntry {
+    /// registry name (`deepspeech`, `mlp`, `keyword-spotter`)
+    pub name: &'static str,
+    /// one-line topology description
+    pub blurb: &'static str,
+    /// the graph constructor
+    pub build: fn(ModelSize, Variant, u64) -> ModelGraph,
+}
+
+/// Named model-graph registry — the model-level twin of
+/// `kernels::KernelRegistry`.
+pub struct ModelRegistry {
+    entries: Vec<ZooEntry>,
+}
+
+impl ModelRegistry {
+    /// The built-in zoo.
+    pub fn builtin() -> ModelRegistry {
+        ModelRegistry {
+            entries: vec![
+                ZooEntry {
+                    name: "deepspeech",
+                    blurb: "3xFC -> LSTM -> 2xFC (paper Fig. 9, §4.6 split)",
+                    build: build_deepspeech,
+                },
+                ZooEntry {
+                    name: "mlp",
+                    blurb: "pure-FC sub-byte classifier (FC/ReLU stack)",
+                    build: mlp_graph,
+                },
+                ZooEntry {
+                    name: "keyword-spotter",
+                    blurb: "GRU scan -> batched W8A8 FFN head",
+                    build: keyword_spotter_graph,
+                },
+            ],
+        }
+    }
+
+    /// The process-wide registry of built-in graphs.
+    pub fn global() -> &'static ModelRegistry {
+        static REG: OnceLock<ModelRegistry> = OnceLock::new();
+        REG.get_or_init(ModelRegistry::builtin)
+    }
+
+    /// Entry by name.
+    pub fn get(&self, name: &str) -> Option<&ZooEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// All registered names, in registration order.
+    pub fn names(&self) -> Vec<&'static str> {
+        self.entries.iter().map(|e| e.name).collect()
+    }
+
+    /// Iterate the entries.
+    pub fn iter(&self) -> impl Iterator<Item = &ZooEntry> {
+        self.entries.iter()
+    }
+
+    /// Registered entry count.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Is the registry empty?  (Never, for the built-in set.)
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Build a named graph, or an error listing the registered zoo.
+    pub fn build(
+        &self,
+        name: &str,
+        size: ModelSize,
+        variant: Variant,
+        seed: u64,
+    ) -> Result<ModelGraph, Error> {
+        match self.get(name) {
+            Some(e) => Ok((e.build)(size, variant, seed)),
+            None => Err(anyhow!(
+                "unknown model {name:?} (zoo: {})",
+                self.names().join(", ")
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(s: &str) -> Variant {
+        Variant::parse(s).unwrap()
+    }
+
+    #[test]
+    fn registry_serves_three_models() {
+        let reg = ModelRegistry::global();
+        assert!(reg.len() >= 3);
+        assert!(!reg.is_empty());
+        assert_eq!(reg.names(), vec!["deepspeech", "mlp", "keyword-spotter"]);
+        for name in reg.names() {
+            for size in [ModelSize::Full, ModelSize::Tiny] {
+                let g = reg.build(name, size, v("w4a8"), 7).unwrap();
+                assert!(g.validate().is_ok(), "{name} {:?}", size);
+                assert_eq!(g.name, name);
+            }
+        }
+        assert!(reg.build("nope", ModelSize::Tiny, v("w4a8"), 7).is_err());
+    }
+
+    #[test]
+    fn deepspeech_graph_matches_legacy_shapes() {
+        let cfg = DeepSpeechConfig::TINY;
+        let g = deepspeech_graph(cfg, v("w4a8"), 7);
+        assert_eq!(g.nodes.len(), 6);
+        assert_eq!(g.nodes[3].z, cfg.gate_dim());
+        assert_eq!(g.nodes[3].k, cfg.n_hidden);
+        assert_eq!(g.input_len(), cfg.time_steps * cfg.n_input);
+        assert_eq!(g.output_len(), cfg.time_steps * cfg.n_output);
+        // legacy weight seeds: fc1..3 at 0..2, the cell at 100, fc5/6 at 4/5
+        let offs: Vec<u64> = g.nodes.iter().map(|n| n.seed_offset).collect();
+        assert_eq!(offs, vec![0, 1, 2, 100, 4, 5]);
+    }
+
+    #[test]
+    fn size_parse_roundtrip() {
+        for s in [ModelSize::Full, ModelSize::Tiny] {
+            assert_eq!(ModelSize::parse(s.name()), Some(s));
+        }
+        assert_eq!(ModelSize::parse("huge"), None);
+    }
+}

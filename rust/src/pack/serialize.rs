@@ -1,55 +1,58 @@
-//! Packed-weight serialization: store a [`PackedMatrix`] to disk and
-//! load it back — the deployment path (pack once offline, ship the
-//! packed blob, the server never touches unpacked weights).
+//! Packed-weight serialization: store a [`PackedMatrix`] (or a whole
+//! kernel-layout [`Weights`] value) to disk and load it back — the
+//! deployment path (pack once offline, ship the packed blob, the
+//! server never touches unpacked weights).
 //!
-//! Format (little-endian): magic `FPCK`, version u32, bits u32,
-//! rows u64, k u64, then the packed bytes.
+//! Two wire formats, both little-endian with magic `FPCK`:
+//!
+//! * **v1** (`write_packed`/`read_packed`): version u32 = 1, bits u32,
+//!   rows u64, k u64, packed bytes — a bare [`PackedMatrix`].
+//! * **v2** (`write_weights`/`read_weights`): version u32 = 2, kind
+//!   u32, then the v1 body, then kind-specific side tables.  Kind 0 is
+//!   [`Weights::Packed`]; kind 1 is [`Weights::SwarPacked`] and appends
+//!   `rows` i64 row sums — the SWAR tier's bias-correction side table
+//!   (DESIGN.md §8), so compiled models whose plans selected a `-swar`
+//!   backend survive save/load without re-deriving anything.
+//!   `read_weights` also accepts v1 files (as kind 0).
 
 use super::{BitWidth, PackedMatrix};
+use crate::kernels::Weights;
 use std::io::{self, Read, Write};
 
 const MAGIC: &[u8; 4] = b"FPCK";
 const VERSION: u32 = 1;
+const WEIGHTS_VERSION: u32 = 2;
 
-/// Serialize to any writer.
+const KIND_PACKED: u32 = 0;
+const KIND_SWAR_PACKED: u32 = 1;
+
+/// Serialize to any writer (v1: a bare [`PackedMatrix`]).
 pub fn write_packed<W: Write>(m: &PackedMatrix, w: &mut W) -> io::Result<()> {
     w.write_all(MAGIC)?;
     w.write_all(&VERSION.to_le_bytes())?;
-    w.write_all(&(m.bits().bits() as u32).to_le_bytes())?;
-    w.write_all(&(m.rows() as u64).to_le_bytes())?;
-    w.write_all(&(m.k() as u64).to_le_bytes())?;
-    w.write_all(m.bytes())
+    write_matrix_body(m, w)
 }
 
-/// Deserialize from any reader.
+/// Deserialize from any reader (v1 files only — [`read_weights`]
+/// accepts both formats).
 pub fn read_packed<R: Read>(r: &mut R) -> io::Result<PackedMatrix> {
+    let version = read_header(r)?;
+    if version != VERSION {
+        return Err(invalid(format!("unsupported FPCK version {version}")));
+    }
+    read_matrix_body(r)
+}
+
+/// Magic check + version read, shared by both formats.
+fn read_header<R: Read>(r: &mut R) -> io::Result<u32> {
     let mut magic = [0u8; 4];
     r.read_exact(&mut magic)?;
     if &magic != MAGIC {
-        return Err(io::Error::new(io::ErrorKind::InvalidData, "bad magic (not a FPCK file)"));
+        return Err(invalid("bad magic (not a FPCK file)"));
     }
     let mut b4 = [0u8; 4];
     r.read_exact(&mut b4)?;
-    let version = u32::from_le_bytes(b4);
-    if version != VERSION {
-        return Err(io::Error::new(
-            io::ErrorKind::InvalidData,
-            format!("unsupported FPCK version {version}"),
-        ));
-    }
-    r.read_exact(&mut b4)?;
-    let bits = BitWidth::from_u8(u32::from_le_bytes(b4) as u8)
-        .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e.to_string()))?;
-    let mut b8 = [0u8; 8];
-    r.read_exact(&mut b8)?;
-    let rows = u64::from_le_bytes(b8) as usize;
-    r.read_exact(&mut b8)?;
-    let k = u64::from_le_bytes(b8) as usize;
-    let expect = rows * bits.packed_bytes(k);
-    let mut data = vec![0u8; expect];
-    r.read_exact(&mut data)?;
-    PackedMatrix::from_packed(data, rows, k, bits)
-        .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e.to_string()))
+    Ok(u32::from_le_bytes(b4))
 }
 
 /// File convenience wrappers.
@@ -61,6 +64,130 @@ pub fn save(m: &PackedMatrix, path: impl AsRef<std::path::Path>) -> io::Result<(
 pub fn load(path: impl AsRef<std::path::Path>) -> io::Result<PackedMatrix> {
     let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
     read_packed(&mut f)
+}
+
+fn invalid(msg: impl std::fmt::Display) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.to_string())
+}
+
+fn write_matrix_body<W: Write>(m: &PackedMatrix, w: &mut W) -> io::Result<()> {
+    w.write_all(&(m.bits().bits() as u32).to_le_bytes())?;
+    w.write_all(&(m.rows() as u64).to_le_bytes())?;
+    w.write_all(&(m.k() as u64).to_le_bytes())?;
+    w.write_all(m.bytes())
+}
+
+fn read_matrix_body<R: Read>(r: &mut R) -> io::Result<PackedMatrix> {
+    // header fields are untrusted: bound them before any size
+    // arithmetic (padded_len/packed_bytes would overflow on absurd
+    // depths) and never preallocate from a declared size — read up to
+    // the declared length and require it was all actually there, so a
+    // lying ~24-byte header cannot demand gigabytes
+    const DIM_CAP: u64 = 1 << 32;
+    let mut b4 = [0u8; 4];
+    r.read_exact(&mut b4)?;
+    let bits = BitWidth::from_u8(u32::from_le_bytes(b4) as u8).map_err(invalid)?;
+    let mut b8 = [0u8; 8];
+    r.read_exact(&mut b8)?;
+    let rows = u64::from_le_bytes(b8);
+    r.read_exact(&mut b8)?;
+    let k = u64::from_le_bytes(b8);
+    if rows > DIM_CAP || k > DIM_CAP {
+        return Err(invalid(format!("implausible FPCK dims {rows}x{k}")));
+    }
+    let (rows, k) = (rows as usize, k as usize);
+    let expect = rows
+        .checked_mul(bits.packed_bytes(k))
+        .ok_or_else(|| invalid(format!("implausible FPCK payload for {rows}x{k}")))?;
+    let mut data = Vec::new();
+    r.take(expect as u64).read_to_end(&mut data)?;
+    if data.len() != expect {
+        return Err(invalid(format!(
+            "truncated FPCK payload: {} of {expect} bytes",
+            data.len()
+        )));
+    }
+    PackedMatrix::from_packed(data, rows, k, bits).map_err(invalid)
+}
+
+/// Serialize a kernel-layout [`Weights`] value (v2 format).  Supports
+/// the packed layouts ([`Weights::Packed`], [`Weights::SwarPacked`]
+/// with its `row_sums` side table); other layouts are cheap to rebuild
+/// from int8 sources and are rejected with `InvalidInput`.
+pub fn write_weights<W: Write>(weights: &Weights, w: &mut W) -> io::Result<()> {
+    w.write_all(MAGIC)?;
+    w.write_all(&WEIGHTS_VERSION.to_le_bytes())?;
+    match weights {
+        Weights::Packed(m) => {
+            w.write_all(&KIND_PACKED.to_le_bytes())?;
+            write_matrix_body(m, w)
+        }
+        Weights::SwarPacked { m, row_sums } => {
+            if row_sums.len() != m.rows() {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidInput,
+                    format!("{} row sums for a {}-row matrix", row_sums.len(), m.rows()),
+                ));
+            }
+            w.write_all(&KIND_SWAR_PACKED.to_le_bytes())?;
+            write_matrix_body(m, w)?;
+            for s in row_sums {
+                w.write_all(&s.to_le_bytes())?;
+            }
+            Ok(())
+        }
+        other => {
+            let layout = match other {
+                Weights::Ulppack(_) => "ulppack",
+                Weights::Naive { .. } => "naive",
+                Weights::F32 { .. } => "f32",
+                Weights::Packed(_) | Weights::SwarPacked { .. } => unreachable!(),
+            };
+            Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                format!("unsupported weights layout for serialization: {layout}"),
+            ))
+        }
+    }
+}
+
+/// Deserialize a [`Weights`] value: v2 kind-tagged files, plus v1
+/// bare-matrix files (read as [`Weights::Packed`]).
+pub fn read_weights<R: Read>(r: &mut R) -> io::Result<Weights> {
+    match read_header(r)? {
+        VERSION => Ok(Weights::Packed(read_matrix_body(r)?)),
+        WEIGHTS_VERSION => {
+            let mut b4 = [0u8; 4];
+            r.read_exact(&mut b4)?;
+            match u32::from_le_bytes(b4) {
+                KIND_PACKED => Ok(Weights::Packed(read_matrix_body(r)?)),
+                KIND_SWAR_PACKED => {
+                    let m = read_matrix_body(r)?;
+                    let mut row_sums = Vec::with_capacity(m.rows());
+                    let mut b8 = [0u8; 8];
+                    for _ in 0..m.rows() {
+                        r.read_exact(&mut b8)?;
+                        row_sums.push(i64::from_le_bytes(b8));
+                    }
+                    Ok(Weights::SwarPacked { m, row_sums })
+                }
+                other => Err(invalid(format!("unknown FPCK weights kind {other}"))),
+            }
+        }
+        v => Err(invalid(format!("unsupported FPCK version {v}"))),
+    }
+}
+
+/// File convenience wrappers for [`Weights`] values.
+pub fn save_weights(w: &Weights, path: impl AsRef<std::path::Path>) -> io::Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    write_weights(w, &mut f)
+}
+
+/// Load a [`Weights`] value saved by [`save_weights`] (or a v1 file).
+pub fn load_weights(path: impl AsRef<std::path::Path>) -> io::Result<Weights> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    read_weights(&mut f)
 }
 
 #[cfg(test)]
@@ -97,6 +224,118 @@ mod tests {
         let back = load(&path).unwrap();
         assert_eq!(back, m);
         let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn weights_roundtrip_packed_and_swar_every_width() {
+        use crate::kernels::{GemvKernel, KernelRegistry, Weights};
+        for bits in [BitWidth::B4, BitWidth::B2, BitWidth::B1] {
+            // the real SWAR layout, produced by the registered kernel
+            // (packed matrix + derived row_sums side table)
+            let kern = KernelRegistry::global()
+                .get(&format!("fullpack-w{}a8-swar", bits.bits()))
+                .expect("swar tier registered");
+            let (lo, hi) = bits.value_range();
+            let (rows, k) = (7usize, 100usize);
+            let vals: Vec<i8> = (0..rows * k)
+                .map(|i| (lo as i32 + (i as i32 % (hi as i32 - lo as i32 + 1))) as i8)
+                .collect();
+            let w = kern.prepare(&vals, rows, k).unwrap();
+            let Weights::SwarPacked { m, row_sums } = &w else {
+                panic!("swar prepare must produce SwarPacked");
+            };
+            let mut buf = Vec::new();
+            write_weights(&w, &mut buf).unwrap();
+            let back = read_weights(&mut buf.as_slice()).unwrap();
+            let Weights::SwarPacked { m: m2, row_sums: rs2 } = &back else {
+                panic!("{bits:?}: roundtrip lost the SWAR side table");
+            };
+            assert_eq!(m2, m, "{bits:?}");
+            assert_eq!(rs2, row_sums, "{bits:?} row sums must survive exactly");
+            // the plain packed kind too
+            let p = Weights::Packed(sample(bits));
+            let mut buf = Vec::new();
+            write_weights(&p, &mut buf).unwrap();
+            match (read_weights(&mut buf.as_slice()).unwrap(), &p) {
+                (Weights::Packed(a), Weights::Packed(b)) => assert_eq!(&a, b),
+                _ => panic!("packed kind changed shape"),
+            }
+        }
+    }
+
+    #[test]
+    fn loaded_swar_weights_execute_identically() {
+        // save/load then run the SWAR kernel on the loaded weights:
+        // bit-identical GEMV output (the side table is live, not
+        // re-derived)
+        use crate::kernels::{ActVec, GemvKernel, KernelRegistry, Weights};
+        let kern = KernelRegistry::global().get("fullpack-w4a8-swar").unwrap();
+        let (rows, k) = (5usize, 129usize);
+        let vals: Vec<i8> = (0..rows * k).map(|i| ((i % 15) as i8) - 7).collect();
+        let w = kern.prepare(&vals, rows, k).unwrap();
+        let path = std::env::temp_dir().join("fullpack_test_swar.fpck");
+        save_weights(&w, &path).unwrap();
+        let loaded = load_weights(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let kp = w.k_padded();
+        let a: Vec<i8> = (0..kp).map(|i| ((i % 11) as i8) - 5).collect();
+        let mut out_orig = vec![0i32; rows];
+        let mut out_loaded = vec![0i32; rows];
+        kern.gemv_at(&w, ActVec::I8(&a), &mut out_orig, 0).unwrap();
+        kern.gemv_at(&loaded, ActVec::I8(&a), &mut out_loaded, 0).unwrap();
+        assert_eq!(out_orig, out_loaded);
+        // a v1 file still loads (as the packed kind)
+        let m = sample(BitWidth::B4);
+        let mut buf = Vec::new();
+        write_packed(&m, &mut buf).unwrap();
+        assert!(matches!(read_weights(&mut buf.as_slice()).unwrap(), Weights::Packed(_)));
+        // non-packable layouts are a loud error
+        let f32w = Weights::F32 { data: vec![0.0; 4], rows: 2, k: 2 };
+        assert!(write_weights(&f32w, &mut Vec::new()).is_err());
+    }
+
+    #[test]
+    fn corrupt_weights_rejected() {
+        use crate::kernels::Weights;
+        let w = Weights::SwarPacked {
+            m: sample(BitWidth::B2),
+            row_sums: vec![3; sample(BitWidth::B2).rows()],
+        };
+        let mut buf = Vec::new();
+        write_weights(&w, &mut buf).unwrap();
+        // truncated side table
+        assert!(read_weights(&mut &buf[..buf.len() - 4]).is_err());
+        // unknown kind
+        let mut bad = buf.clone();
+        bad[8] = 9;
+        assert!(read_weights(&mut bad.as_slice()).is_err());
+        // bad version
+        let mut bad = buf.clone();
+        bad[4] = 7;
+        assert!(read_weights(&mut bad.as_slice()).is_err());
+        // mismatched side-table length is rejected at write time
+        let short = Weights::SwarPacked { m: sample(BitWidth::B2), row_sums: vec![1] };
+        assert!(write_weights(&short, &mut Vec::new()).is_err());
+        // a lying header (absurd dims on a tiny file) errors cleanly
+        // instead of attempting a giant allocation
+        let mut lying = Vec::new();
+        lying.extend_from_slice(b"FPCK");
+        lying.extend_from_slice(&1u32.to_le_bytes()); // v1
+        lying.extend_from_slice(&8u32.to_le_bytes()); // bits
+        lying.extend_from_slice(&(1u64 << 40).to_le_bytes()); // rows
+        lying.extend_from_slice(&(1u64 << 20).to_le_bytes()); // k
+        assert!(read_packed(&mut lying.as_slice()).is_err());
+        assert!(read_weights(&mut lying.as_slice()).is_err());
+        // plausible dims but a short payload: truncation error, not a
+        // zero-filled matrix
+        let mut short_payload = Vec::new();
+        short_payload.extend_from_slice(b"FPCK");
+        short_payload.extend_from_slice(&1u32.to_le_bytes());
+        short_payload.extend_from_slice(&8u32.to_le_bytes());
+        short_payload.extend_from_slice(&4u64.to_le_bytes());
+        short_payload.extend_from_slice(&4u64.to_le_bytes());
+        short_payload.extend_from_slice(&[1, 2, 3]); // 3 of 16 bytes
+        assert!(read_packed(&mut short_payload.as_slice()).is_err());
     }
 
     #[test]

@@ -1,6 +1,29 @@
 //! Artifact manifest (`artifacts/manifest.json`) — written by
-//! `python/compile/aot.py`, read here with the in-repo JSON parser.
+//! `python/compile/aot.py`, read here with the in-repo JSON parser —
+//! plus the **model manifest** path ([`parse_model_graph`]): a JSON
+//! layer-graph description parsed straight into a
+//! [`crate::models::ModelGraph`], so serving topologies can be declared
+//! at runtime instead of compiled in (the reason layer names are owned
+//! strings).
+//!
+//! Model manifest schema (depths chain automatically from `input_dim`):
+//!
+//! ```json
+//! {"model": "custom-kws", "variant": "w2a8", "input_dim": 40,
+//!  "time_steps": 4, "seed": 7,
+//!  "layers": [
+//!    {"name": "fc1", "op": "fc", "z": 128, "relu": true, "variant": "w8a8"},
+//!    {"name": "gru", "op": "gru", "hidden": 64},
+//!    {"name": "act", "op": "relu", "max": 20},
+//!    {"name": "out", "op": "fc", "z": 12}
+//!  ]}
+//! ```
+//!
+//! An `fc` layer without a `"variant"` key quantizes on the model-level
+//! variant (the sub-byte knob); `"relu"` defaults to false.
 
+use crate::models::{ModelGraph, ModelSize, ModelRegistry};
+use crate::pack::Variant;
 use crate::util::json::Json;
 use crate::util::error::{anyhow, bail, Result};
 use std::collections::HashMap;
@@ -156,6 +179,110 @@ fn parse_artifact(a: &Json) -> Result<ArtifactMeta> {
     })
 }
 
+/// Parse a model manifest (see the module docs for the schema) into a
+/// validated [`ModelGraph`].  `"model"` may also name a zoo graph (no
+/// `"layers"` key): the registry constructor is used with the
+/// manifest's variant/size/seed — one schema covers both "pick a zoo
+/// model" and "declare a custom topology".
+pub fn parse_model_graph(text: &str) -> Result<ModelGraph> {
+    let j = Json::parse(text).map_err(|e| anyhow!("model manifest JSON: {e}"))?;
+    let name = j
+        .get("model")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("model manifest missing \"model\""))?
+        .to_string();
+    let variant = Variant::parse(j.get("variant").and_then(Json::as_str).unwrap_or("w4a8"))
+        .map_err(|e| anyhow!("model manifest variant: {e}"))?;
+    let seed = j.get("seed").and_then(Json::as_usize).unwrap_or(7) as u64;
+
+    let Some(layers_json) = j.get("layers") else {
+        // no "layers" key at all: resolve through the zoo registry.
+        // Shape keys only make sense with explicit layers — rejecting
+        // them here beats silently serving a preset the user did not
+        // describe
+        for key in ["input_dim", "time_steps"] {
+            if j.get(key).is_some() {
+                bail!(
+                    "model manifest: {key:?} only applies to explicit \"layers\" \
+                     manifests (zoo graphs fix their own shapes)"
+                );
+            }
+        }
+        let size_str = j.get("size").and_then(Json::as_str).unwrap_or("full");
+        let size = ModelSize::parse(size_str)
+            .ok_or_else(|| anyhow!("model manifest size {size_str:?} (expected full|tiny)"))?;
+        return ModelRegistry::global()
+            .build(&name, size, variant, seed)
+            .map_err(|e| anyhow!("model manifest: {e}"));
+    };
+    // a present-but-malformed "layers" is an error, never a silent
+    // fallback onto a built-in zoo graph
+    let layers = layers_json
+        .as_arr()
+        .ok_or_else(|| anyhow!("model manifest: \"layers\" must be an array"))?;
+
+    let input_dim = j
+        .get("input_dim")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("model manifest missing input_dim"))?;
+    let time_steps = j.get("time_steps").and_then(Json::as_usize).unwrap_or(1);
+    let mut g = ModelGraph::new(name, variant, input_dim, time_steps, seed);
+    for (i, l) in layers.iter().enumerate() {
+        let lname = l
+            .get("name")
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .unwrap_or_else(|| format!("layer{i}"));
+        let op = l
+            .get("op")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("layers[{i}] missing op"))?;
+        g = match op {
+            "fc" => {
+                let z = l
+                    .get("z")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("layers[{i}]: fc needs z"))?;
+                let relu = matches!(l.get("relu"), Some(Json::Bool(true)));
+                match l.get("variant").and_then(Json::as_str) {
+                    Some(v) => {
+                        let v = Variant::parse(v)
+                            .map_err(|e| anyhow!("layers[{i}] variant: {e}"))?;
+                        g.fc_fixed(lname, z, relu, v)
+                    }
+                    None => g.fc(lname, z, relu),
+                }
+            }
+            "lstm" | "gru" => {
+                let hidden = l
+                    .get("hidden")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("layers[{i}]: {op} needs hidden"))?;
+                if op == "lstm" {
+                    g.lstm(lname, hidden)
+                } else {
+                    g.gru(lname, hidden)
+                }
+            }
+            "relu" => {
+                let max = l.get("max").and_then(Json::as_f64).unwrap_or(20.0) as f32;
+                g.relu(lname, max)
+            }
+            other => bail!("layers[{i}]: unknown op {other:?} (fc|lstm|gru|relu)"),
+        };
+    }
+    g.validate().map_err(|e| anyhow!("model manifest: {e}"))?;
+    Ok(g)
+}
+
+/// Read and [`parse_model_graph`] a model manifest file.
+pub fn load_model_graph(path: impl AsRef<std::path::Path>) -> Result<ModelGraph> {
+    let path = path.as_ref();
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("reading model manifest {path:?}: {e}"))?;
+    parse_model_graph(&text)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -200,6 +327,79 @@ mod tests {
                 assert!(m.get(&format!("gemv_{}_256x256", v.name())).is_some(), "{v}");
             }
         }
+    }
+
+    #[test]
+    fn model_manifest_builds_a_custom_graph() {
+        let g = parse_model_graph(
+            r#"{"model": "custom-kws", "variant": "w2a8", "input_dim": 40,
+                "time_steps": 4, "seed": 9,
+                "layers": [
+                  {"name": "fc1", "op": "fc", "z": 48, "relu": true, "variant": "w8a8"},
+                  {"name": "gru", "op": "gru", "hidden": 16},
+                  {"name": "act", "op": "relu", "max": 10},
+                  {"name": "out", "op": "fc", "z": 12}
+                ]}"#,
+        )
+        .unwrap();
+        assert_eq!(g.name, "custom-kws");
+        assert_eq!(g.variant, crate::pack::Variant::parse("w2a8").unwrap());
+        assert_eq!(g.nodes.len(), 4);
+        assert_eq!(g.nodes[1].z, 48); // 3 * hidden
+        assert_eq!(g.nodes[1].k, 48); // chained from fc1
+        assert_eq!(g.output_len(), 4 * 12);
+        // runtime-built graphs execute through the compiler
+        let m = crate::models::CompiledModel::compile(g).unwrap();
+        let frames = vec![0.1f32; 4 * 40];
+        let (out, times) = m.forward_timed(&frames);
+        assert_eq!(out.len(), 4 * 12);
+        assert!(out.iter().all(|v| v.is_finite()));
+        assert_eq!(times.len(), 4);
+        assert_eq!(times[1].0, "gru");
+    }
+
+    #[test]
+    fn model_manifest_resolves_zoo_names() {
+        let g = parse_model_graph(
+            r#"{"model": "mlp", "variant": "w4a8", "size": "tiny", "seed": 3}"#,
+        )
+        .unwrap();
+        assert_eq!(g.name, "mlp");
+        assert_eq!(g.time_steps, 1);
+        assert_eq!(g.seed, 3);
+    }
+
+    #[test]
+    fn model_manifest_rejects_bad_inputs() {
+        assert!(parse_model_graph("nope").is_err());
+        assert!(parse_model_graph(r#"{"layers": []}"#).is_err()); // no model
+        assert!(parse_model_graph(r#"{"model": "ghost-zoo-entry"}"#).is_err());
+        // a present-but-malformed "layers" must error, never silently
+        // fall back to the zoo graph of the same name
+        assert!(parse_model_graph(
+            r#"{"model": "mlp", "input_dim": 8, "layers": {"op": "fc", "z": 8}}"#
+        )
+        .is_err());
+        // shape keys on a zoo-name manifest must error, not be ignored
+        assert!(parse_model_graph(r#"{"model": "mlp", "input_dim": 99}"#).is_err());
+        assert!(parse_model_graph(r#"{"model": "mlp", "time_steps": 9}"#).is_err());
+        // custom layers need input_dim
+        assert!(parse_model_graph(
+            r#"{"model": "m", "layers": [{"op": "fc", "z": 8}]}"#
+        )
+        .is_err());
+        // unknown op
+        assert!(parse_model_graph(
+            r#"{"model": "m", "input_dim": 8,
+                "layers": [{"op": "conv", "z": 8}]}"#
+        )
+        .is_err());
+        // structurally invalid graphs are rejected by validate()
+        assert!(parse_model_graph(
+            r#"{"model": "m", "input_dim": 8, "layers": []}"#
+        )
+        .is_err());
+        assert!(load_model_graph("/no/such/manifest.json").is_err());
     }
 
     #[test]

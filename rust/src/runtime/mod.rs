@@ -1,6 +1,10 @@
-//! PJRT runtime: load `artifacts/*.hlo.txt` (AOT-lowered by
-//! `python/compile/aot.py`), compile once on the XLA CPU client, and
-//! execute from the L3 hot path.
+//! AOT artifact runtime.  The dependency-free half — the
+//! [`manifest`] parser, including the `ModelGraph`-from-manifest path
+//! ([`manifest::parse_model_graph`]) — is always built; the PJRT
+//! executor below (load `artifacts/*.hlo.txt`, AOT-lowered by
+//! `python/compile/aot.py`, compile once on the XLA CPU client, and
+//! execute from the L3 hot path) needs the heavyweight `xla` bindings
+//! and is gated behind the `pjrt` feature.
 //!
 //! HLO *text* is the interchange format (xla_extension 0.5.1 rejects
 //! jax ≥ 0.5 serialized protos — see /opt/xla-example/README.md); the
@@ -11,21 +15,31 @@
 //! channel-backed executor thread (`spawn`), which is also the natural
 //! device-thread isolation for a serving system.
 
+#[cfg(feature = "pjrt")]
 pub mod handle;
 pub mod manifest;
+#[cfg(feature = "pjrt")]
 pub mod tensor;
 
+#[cfg(feature = "pjrt")]
 pub use handle::{spawn, RuntimeHandle};
 pub use manifest::{ArtifactMeta, DType, Manifest, TensorSpec};
+#[cfg(feature = "pjrt")]
 pub use tensor::Tensor;
 
+#[cfg(feature = "pjrt")]
 use crate::util::error::{anyhow, bail, Context, Result};
+#[cfg(feature = "pjrt")]
 use std::cell::RefCell;
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
+#[cfg(feature = "pjrt")]
 use std::path::{Path, PathBuf};
+#[cfg(feature = "pjrt")]
 use std::rc::Rc;
 
 /// Single-threaded PJRT runtime: manifest + lazily compiled executables.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     client: xla::PjRtClient,
     dir: PathBuf,
@@ -33,6 +47,7 @@ pub struct Runtime {
     cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Load the manifest from an artifacts directory (does not compile
     /// anything yet).
@@ -115,7 +130,7 @@ impl Runtime {
     }
 }
 
-#[cfg(test)]
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
 
