@@ -1,0 +1,63 @@
+//! Bench: the serve sweep — sample a set of workload mixes from the
+//! default mix space and replay each one, emitting the fig-serve
+//! tables and the `bench-serve/v1` document (`BENCH_serve.json`).
+//!
+//! Default mode is the deterministic virtual clock (cost-model service
+//! times — same seed ⇒ byte-identical document apart from host/wall
+//! fields).  Set `LIVE=1` to drive the real engine instead (wall-clock
+//! latencies, host-dependent).
+//!
+//! Run: `cargo bench --bench serve_sweep`
+//!      (QUICK=1 for fewer mixes, SEED=n / COUNT=n to steer the sweep,
+//!       OUT=path to write the JSON document)
+
+use fullpack::figures::serve::{fig_serve_dispatch, fig_serve_latency};
+use fullpack::workload::{build_report, run_live, run_virtual, MixReport, MixSpace};
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let quick = std::env::var("QUICK").is_ok();
+    let live = std::env::var("LIVE").is_ok();
+    let seed = env_u64("SEED", 7);
+    let count = env_u64("COUNT", if quick { 3 } else { 8 }) as usize;
+    let mode = if live { "live" } else { "virtual-costmodel" };
+
+    let space = MixSpace::default_space();
+    let t0 = std::time::Instant::now();
+    let mut reports: Vec<MixReport> = Vec::with_capacity(count);
+    for mix in space.sample_all(seed, count) {
+        let t1 = std::time::Instant::now();
+        let trace = if live {
+            run_live(&mix, false).expect("live replay")
+        } else {
+            run_virtual(&mix).expect("virtual replay")
+        };
+        let report = build_report(&mix, &trace).expect("report reconciles");
+        eprintln!(
+            "[{}: {}/{} completed, p99 {} us, replayed in {:.2}s]",
+            report.mix,
+            report.completed,
+            report.issued,
+            report.p99_us,
+            t1.elapsed().as_secs_f64()
+        );
+        reports.push(report);
+    }
+
+    println!("=== fig-serve: latency/throughput ({mode}, seed {seed}) ===\n");
+    fig_serve_latency(&reports).print();
+    println!("\n=== fig-serve: dispatch mix ===\n");
+    fig_serve_dispatch(&reports).print();
+
+    if let Ok(out) = std::env::var("OUT") {
+        let host = std::env::var("HOSTNAME").unwrap_or_else(|_| "unknown-host".into());
+        let note = format!("serve sweep: seed {seed}, {count} mixes from the default space");
+        fullpack::workload::write_serve_json(&out, mode, &host, &note, &reports)
+            .expect("writing BENCH_serve.json");
+        eprintln!("[wrote {out}]");
+    }
+    eprintln!("[serve sweep: {count} mixes in {:.1}s]", t0.elapsed().as_secs_f64());
+}

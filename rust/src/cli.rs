@@ -7,6 +7,9 @@
 //! fullpack bench <fig11|deepspeech> [--variant V] [--kernel NAME] [--ms N]
 //! fullpack serve [--model ZOO] [--model-manifest F.json] [--variant V] [--kernel NAME]
 //!                [--requests N] [--workers N] [--tiny]
+//! fullpack workload gen-mixes [--space F.json] [--seed N] [--count N] [--out DIR]
+//! fullpack workload run --mix F.json [--virtual] [--verify] [--out BENCH.json]
+//! fullpack workload sweep [--space F.json] [--seed N] [--count N] [--live] [--out F.json]
 //! fullpack models list
 //! fullpack models show <zoo-name> [--variant V] [--size full|tiny]
 //! fullpack kernels list
@@ -26,7 +29,8 @@ pub struct Args {
 
 impl Args {
     /// Flags that never take a value.
-    const FLAGS: [&'static str; 5] = ["quick", "show-config", "breakdown", "tiny", "help"];
+    const FLAGS: [&'static str; 8] =
+        ["quick", "show-config", "breakdown", "tiny", "help", "virtual", "live", "verify"];
 
     pub fn parse(argv: impl IntoIterator<Item = String>) -> Result<Args, String> {
         let mut a = Args::default();
@@ -92,6 +96,20 @@ USAGE:
                                                serving-engine demo (latency/throughput;
                                                --model picks a zoo graph, --model-manifest
                                                a runtime JSON layer graph)
+  fullpack workload gen-mixes [--space F.json] [--seed N] [--count N] [--out DIR]
+                                               sample N concrete workload mixes from
+                                               a mix space (seeded: same seed ⇒
+                                               byte-identical files)
+  fullpack workload run --mix F.json [--virtual] [--verify] [--out BENCH.json]
+                                               replay one mix (default: live engine;
+                                               --virtual: deterministic virtual clock;
+                                               --verify: bit-check replies vs an
+                                               unbatched reference)
+  fullpack workload sweep [--space F.json] [--seed N] [--count N] [--live]
+                          [--out BENCH_serve.json]
+                                               sample + run a mix sweep and emit the
+                                               bench-serve/v1 document + fig-serve
+                                               tables (default mode: virtual)
   fullpack models list                         print the model-zoo registry table
   fullpack models show <zoo-name> [--variant V] [--size full|tiny]
                                                print one graph's topology + plans

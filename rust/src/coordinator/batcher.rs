@@ -9,7 +9,7 @@ use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
 /// Batching policy knobs.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct BatcherConfig {
     /// flush as soon as this many requests are waiting
     pub max_batch: usize,
@@ -213,31 +213,41 @@ mod tests {
     fn full_takes_precedence_over_deadline() {
         // a batch that is both full AND past its deadline reports Full —
         // metrics must attribute the flush to capacity, not latency
+        let m = crate::coordinator::Metrics::default();
         let mut b = Batcher::new(cfg(2, 1, 100));
         b.push(1).unwrap();
         b.push(2).unwrap();
         std::thread::sleep(Duration::from_millis(3));
         let (_, reason) = b.pop_batch(false).unwrap();
         assert_eq!(reason, FlushReason::Full);
+        m.record_flush(reason);
+        assert_eq!(m.flush_counts(), (1, 0, 0));
     }
 
     #[test]
     fn drained_reported_only_for_forced_early_flushes() {
         // force=true on a partial, non-expired batch -> Drained; the
         // same force on an expired batch still reports Deadline
+        let m = crate::coordinator::Metrics::default();
         let mut b = Batcher::new(cfg(16, 10_000, 100));
         b.push(1).unwrap();
-        assert_eq!(b.pop_batch(true).unwrap().1, FlushReason::Drained);
+        let (_, r1) = b.pop_batch(true).unwrap();
+        assert_eq!(r1, FlushReason::Drained);
+        m.record_flush(r1);
         let mut b = Batcher::new(cfg(16, 1, 100));
         b.push(1).unwrap();
         std::thread::sleep(Duration::from_millis(3));
-        assert_eq!(b.pop_batch(true).unwrap().1, FlushReason::Deadline);
+        let (_, r2) = b.pop_batch(true).unwrap();
+        assert_eq!(r2, FlushReason::Deadline);
+        m.record_flush(r2);
+        assert_eq!(m.flush_counts(), (0, 1, 1));
     }
 
     #[test]
     fn shutdown_drain_empties_in_order_across_flushes() {
         // the worker's shutdown path: repeated forced pops drain the
         // whole queue FIFO in max_batch-sized chunks, then yield None
+        let m = crate::coordinator::Metrics::default();
         let mut b = Batcher::new(cfg(3, 10_000, 100));
         for i in 0..7 {
             b.push(i).unwrap();
@@ -246,11 +256,15 @@ mod tests {
         while let Some((batch, reason)) = b.pop_batch(true) {
             assert!(batch.len() <= 3);
             assert!(matches!(reason, FlushReason::Full | FlushReason::Drained));
+            m.record_flush(reason);
             drained.extend(batch);
         }
         assert_eq!(drained, (0..7).collect::<Vec<_>>());
         assert!(b.is_empty());
         assert!(b.pop_batch(true).is_none());
+        // 7 items in max_batch=3 chunks: two Full flushes (3, 3) and
+        // one forced Drained flush for the remainder (1)
+        assert_eq!(m.flush_counts(), (2, 0, 1));
     }
 
     #[test]

@@ -51,60 +51,99 @@ pub struct FileConfig {
     pub models: Vec<ModelSpec>,
 }
 
+/// Engine knobs (`workers`/`batcher`/`router` keys) from a parsed JSON
+/// node, falling back to [`EngineConfig::default`] per field.  Shared
+/// by [`FileConfig::parse`] and the workload-mix parser
+/// (`workload::mix`), so a mix file embeds the exact same engine
+/// schema a `serve --config` file uses.
+pub fn engine_from_json(j: &Json) -> EngineConfig {
+    let usize_at = |node: &Json, key: &str, default: usize| -> usize {
+        node.get(key).and_then(Json::as_usize).unwrap_or(default)
+    };
+    let defaults = EngineConfig::default();
+    let mut engine = EngineConfig {
+        workers: usize_at(j, "workers", defaults.workers),
+        ..defaults
+    };
+    if let Some(b) = j.get("batcher") {
+        engine.batcher = BatcherConfig {
+            max_batch: usize_at(b, "max_batch", defaults.batcher.max_batch),
+            max_wait: Duration::from_millis(
+                usize_at(b, "max_wait_ms", defaults.batcher.max_wait.as_millis() as usize) as u64,
+            ),
+            max_queue: usize_at(b, "max_queue", defaults.batcher.max_queue),
+        };
+    }
+    if let Some(r) = j.get("router") {
+        engine.router = RouterConfig {
+            gemv_max_batch: usize_at(r, "gemv_max_batch", defaults.router.gemv_max_batch),
+            disable_fullpack: matches!(r.get("disable_fullpack"), Some(Json::Bool(true))),
+            prefer_swar: matches!(r.get("prefer_swar"), Some(Json::Bool(true))),
+            prefer_gemm: matches!(r.get("prefer_gemm"), Some(Json::Bool(true))),
+        };
+    }
+    engine
+}
+
+/// Serialize engine knobs back to the same JSON schema
+/// [`engine_from_json`] reads (deterministic key order — byte-stable
+/// output for seeded mix files).
+pub fn engine_to_json(e: &EngineConfig) -> String {
+    format!(
+        "{{\"workers\": {}, \"batcher\": {{\"max_batch\": {}, \"max_wait_ms\": {}, \"max_queue\": {}}}, \
+         \"router\": {{\"gemv_max_batch\": {}, \"disable_fullpack\": {}, \"prefer_swar\": {}, \"prefer_gemm\": {}}}}}",
+        e.workers,
+        e.batcher.max_batch,
+        e.batcher.max_wait.as_millis(),
+        e.batcher.max_queue,
+        e.router.gemv_max_batch,
+        e.router.disable_fullpack,
+        e.router.prefer_swar,
+        e.router.prefer_gemm,
+    )
+}
+
+/// One roster entry from a parsed JSON node (`i` is its index, for
+/// error messages).  Shared by [`FileConfig::parse`] and the
+/// workload-mix parser.
+pub fn model_spec_from_json(m: &Json, i: usize) -> Result<ModelSpec> {
+    let name = m
+        .get("name")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("models[{i}] missing name"))?
+        .to_string();
+    let model = m.get("model").and_then(Json::as_str).unwrap_or(&name).to_string();
+    let variant = Variant::parse(m.get("variant").and_then(Json::as_str).unwrap_or("w4a8"))
+        .map_err(|e| anyhow!("models[{i}] variant: {e}"))?;
+    let size_str = m.get("size").and_then(Json::as_str).unwrap_or("full");
+    let size = ModelSize::parse(size_str)
+        .ok_or_else(|| anyhow!("models[{i}] size {size_str:?} (expected full|tiny)"))?;
+    let seed = m.get("seed").and_then(Json::as_usize).unwrap_or(7) as u64;
+    Ok(ModelSpec { name, model, variant, size, seed })
+}
+
+/// Serialize one roster entry back to the schema
+/// [`model_spec_from_json`] reads (deterministic key order).
+pub fn model_spec_to_json(s: &ModelSpec) -> String {
+    format!(
+        "{{\"name\": \"{}\", \"model\": \"{}\", \"variant\": \"{}\", \"size\": \"{}\", \"seed\": {}}}",
+        s.name,
+        s.model,
+        s.variant.name(),
+        s.size.name(),
+        s.seed,
+    )
+}
+
 impl FileConfig {
     /// Parse a config document (see the module example for the schema).
     pub fn parse(text: &str) -> Result<FileConfig> {
         let j = Json::parse(text).map_err(|e| anyhow!("config JSON: {e}"))?;
-        let usize_at = |node: &Json, key: &str, default: usize| -> usize {
-            node.get(key).and_then(Json::as_usize).unwrap_or(default)
-        };
-
-        let defaults = EngineConfig::default();
-        let mut engine = EngineConfig {
-            workers: usize_at(&j, "workers", defaults.workers),
-            ..defaults
-        };
-        if let Some(b) = j.get("batcher") {
-            engine.batcher = BatcherConfig {
-                max_batch: usize_at(b, "max_batch", defaults.batcher.max_batch),
-                max_wait: Duration::from_millis(
-                    usize_at(b, "max_wait_ms", defaults.batcher.max_wait.as_millis() as usize)
-                        as u64,
-                ),
-                max_queue: usize_at(b, "max_queue", defaults.batcher.max_queue),
-            };
-        }
-        if let Some(r) = j.get("router") {
-            engine.router = RouterConfig {
-                gemv_max_batch: usize_at(r, "gemv_max_batch", defaults.router.gemv_max_batch),
-                disable_fullpack: matches!(r.get("disable_fullpack"), Some(Json::Bool(true))),
-                prefer_swar: matches!(r.get("prefer_swar"), Some(Json::Bool(true))),
-                prefer_gemm: matches!(r.get("prefer_gemm"), Some(Json::Bool(true))),
-            };
-        }
-
+        let engine = engine_from_json(&j);
         let mut models = Vec::new();
         if let Some(arr) = j.get("models").and_then(Json::as_arr) {
             for (i, m) in arr.iter().enumerate() {
-                let name = m
-                    .get("name")
-                    .and_then(Json::as_str)
-                    .ok_or_else(|| anyhow!("models[{i}] missing name"))?
-                    .to_string();
-                let model = m
-                    .get("model")
-                    .and_then(Json::as_str)
-                    .unwrap_or(&name)
-                    .to_string();
-                let variant = Variant::parse(
-                    m.get("variant").and_then(Json::as_str).unwrap_or("w4a8"),
-                )
-                .map_err(|e| anyhow!("models[{i}] variant: {e}"))?;
-                let size_str = m.get("size").and_then(Json::as_str).unwrap_or("full");
-                let size = ModelSize::parse(size_str)
-                    .ok_or_else(|| anyhow!("models[{i}] size {size_str:?} (expected full|tiny)"))?;
-                let seed = m.get("seed").and_then(Json::as_usize).unwrap_or(7) as u64;
-                models.push(ModelSpec { name, model, variant, size, seed });
+                models.push(model_spec_from_json(m, i)?);
             }
         }
         Ok(FileConfig { engine, models })

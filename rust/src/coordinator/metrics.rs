@@ -7,11 +7,92 @@ use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 use std::sync::Mutex;
 use std::time::Instant;
 
+use super::batcher::FlushReason;
+
 /// Log-spaced latency buckets in microseconds (upper bounds).
-const BUCKETS_US: [u64; 17] = [
+pub const BUCKETS_US: [u64; 17] = [
     50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000, 25_000, 50_000, 100_000, 250_000, 500_000,
     1_000_000, 2_500_000, 10_000_000, u64::MAX,
 ];
+
+/// Bucket index a latency observation lands in.
+fn bucket_index(us: u64) -> usize {
+    BUCKETS_US.iter().position(|&b| us <= b).unwrap_or(BUCKETS_US.len() - 1)
+}
+
+/// Nearest-rank quantile over bucket counts: the upper bound of the
+/// bucket containing the ⌈total·q⌉-th observation.  Resolution is the
+/// bucket spacing; reports that need exact percentiles keep the raw
+/// samples (`workload::report`) — this is the cheap always-on view.
+fn quantile_from_buckets(buckets: &[u64; 17], q: f64) -> u64 {
+    let total: u64 = buckets.iter().sum();
+    if total == 0 {
+        return 0;
+    }
+    let target = ((total as f64) * q).ceil() as u64;
+    let mut seen = 0;
+    for (i, &b) in buckets.iter().enumerate() {
+        seen += b;
+        if seen >= target {
+            return BUCKETS_US[i];
+        }
+    }
+    BUCKETS_US[BUCKETS_US.len() - 1]
+}
+
+/// Fixed-bucket log-spaced latency histogram ([`BUCKETS_US`]) with
+/// count/sum and nearest-rank p50/p95/p99 extraction.  `Copy` so it
+/// can live inside the by-value [`ModelCounters`] snapshot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LatencyHistogram {
+    buckets: [u64; 17],
+    count: u64,
+    sum_us: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram { buckets: [0; 17], count: 0, sum_us: 0 }
+    }
+}
+
+impl LatencyHistogram {
+    /// Record one latency observation.
+    pub fn observe(&mut self, us: u64) {
+        self.buckets[bucket_index(us)] += 1;
+        self.count += 1;
+        self.sum_us += us;
+    }
+
+    /// Observations recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Sum of recorded latencies (µs).
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us
+    }
+
+    /// Mean latency over recorded observations (0 when empty).
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64
+        }
+    }
+
+    /// Nearest-rank quantile (upper bound of the containing bucket).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        quantile_from_buckets(&self.buckets, q)
+    }
+
+    /// Raw per-bucket counts (aligned with [`BUCKETS_US`]).
+    pub fn bucket_counts(&self) -> [u64; 17] {
+        self.buckets
+    }
+}
 
 /// Engine-wide metrics; cheap to update from worker threads.
 #[derive(Debug)]
@@ -34,6 +115,12 @@ pub struct Metrics {
     pub singleton_requests: AtomicU64,
     latency_buckets: [AtomicU64; 17],
     latency_sum_us: AtomicU64,
+    /// batch flushes whose trigger was the batch filling up
+    pub flushes_full: AtomicU64,
+    /// batch flushes whose trigger was the max-wait deadline
+    pub flushes_deadline: AtomicU64,
+    /// forced early flushes (shutdown drain)
+    pub flushes_drained: AtomicU64,
     started: Mutex<Option<Instant>>,
     /// per-model counters, keyed by registered model name
     per_model: Mutex<BTreeMap<String, ModelCounters>>,
@@ -54,6 +141,9 @@ pub struct ModelCounters {
     pub completed: u64,
     /// summed end-to-end latency of completed requests
     pub latency_sum_us: u64,
+    /// per-model latency histogram (p50/p95/p99 via
+    /// [`LatencyHistogram::quantile_us`])
+    pub latency: LatencyHistogram,
 }
 
 impl ModelCounters {
@@ -83,6 +173,9 @@ impl Default for Metrics {
             singleton_requests: AtomicU64::new(0),
             latency_buckets: Default::default(),
             latency_sum_us: AtomicU64::new(0),
+            flushes_full: AtomicU64::new(0),
+            flushes_deadline: AtomicU64::new(0),
+            flushes_drained: AtomicU64::new(0),
             started: Mutex::new(None),
             per_model: Mutex::new(BTreeMap::new()),
         }
@@ -98,12 +191,17 @@ impl Metrics {
         }
     }
 
-    /// Count one completed request with its end-to-end latency.
-    pub fn observe_latency_us(&self, us: u64) {
+    /// Count one completed request with its end-to-end latency
+    /// (engine-wide histogram; the canonical observation entry point).
+    pub fn observe_latency(&self, us: u64) {
         self.completed.fetch_add(1, Relaxed);
         self.latency_sum_us.fetch_add(us, Relaxed);
-        let idx = BUCKETS_US.iter().position(|&b| us <= b).unwrap_or(BUCKETS_US.len() - 1);
-        self.latency_buckets[idx].fetch_add(1, Relaxed);
+        self.latency_buckets[bucket_index(us)].fetch_add(1, Relaxed);
+    }
+
+    /// Alias of [`Metrics::observe_latency`] kept for older call sites.
+    pub fn observe_latency_us(&self, us: u64) {
+        self.observe_latency(us);
     }
 
     fn with_model(&self, model: &str, f: impl FnOnce(&mut ModelCounters)) {
@@ -116,15 +214,36 @@ impl Metrics {
         }
     }
 
-    /// [`Metrics::observe_latency_us`] attributed to a model: updates
+    /// [`Metrics::observe_latency`] attributed to a model: updates
     /// the engine-wide histogram *and* the model's completion/latency
-    /// counters.
+    /// counters plus its per-model histogram.
     pub fn observe_latency_for(&self, model: &str, us: u64) {
-        self.observe_latency_us(us);
+        self.observe_latency(us);
         self.with_model(model, |m| {
             m.completed += 1;
             m.latency_sum_us += us;
+            m.latency.observe(us);
         });
+    }
+
+    /// Count one batch flush by its trigger ([`FlushReason`]): loadgen
+    /// reports attribute tail latency to batching policy with these.
+    pub fn record_flush(&self, reason: FlushReason) {
+        match reason {
+            FlushReason::Full => &self.flushes_full,
+            FlushReason::Deadline => &self.flushes_deadline,
+            FlushReason::Drained => &self.flushes_drained,
+        }
+        .fetch_add(1, Relaxed);
+    }
+
+    /// `(full, deadline, drained)` flush counts.
+    pub fn flush_counts(&self) -> (u64, u64, u64) {
+        (
+            self.flushes_full.load(Relaxed),
+            self.flushes_deadline.load(Relaxed),
+            self.flushes_drained.load(Relaxed),
+        )
     }
 
     /// Count `n` requests of `model` served individually (engine-wide
@@ -172,22 +291,14 @@ impl Metrics {
             .collect()
     }
 
-    /// Approximate quantile from the histogram (upper bound of the
-    /// bucket containing the q-th observation).
+    /// Approximate quantile from the engine-wide histogram (upper
+    /// bound of the bucket containing the q-th observation).
     pub fn latency_quantile_us(&self, q: f64) -> u64 {
-        let total: u64 = self.latency_buckets.iter().map(|b| b.load(Relaxed)).sum();
-        if total == 0 {
-            return 0;
+        let mut snap = [0u64; 17];
+        for (s, b) in snap.iter_mut().zip(&self.latency_buckets) {
+            *s = b.load(Relaxed);
         }
-        let target = ((total as f64) * q).ceil() as u64;
-        let mut seen = 0;
-        for (i, b) in self.latency_buckets.iter().enumerate() {
-            seen += b.load(Relaxed);
-            if seen >= target {
-                return BUCKETS_US[i];
-            }
-        }
-        BUCKETS_US[BUCKETS_US.len() - 1]
+        quantile_from_buckets(&snap, q)
     }
 
     /// Mean end-to-end latency over completed requests.
@@ -227,9 +338,11 @@ impl Metrics {
                 format!("{}us", v)
             }
         };
+        let (ff, fd, fs) = self.flush_counts();
         let mut s = format!(
             "requests={} completed={} errors={} batched={}/{} singleton={} \
-             mean={:.0}us p50<={} p95<={} rps={:.1}",
+             flushes=full:{ff}/deadline:{fd}/drained:{fs} \
+             mean={:.0}us p50<={} p95<={} p99<={} rps={:.1}",
             self.requests.load(Relaxed),
             self.completed.load(Relaxed),
             self.errors.load(Relaxed),
@@ -239,16 +352,19 @@ impl Metrics {
             self.mean_latency_us(),
             q(self.latency_quantile_us(0.5)),
             q(self.latency_quantile_us(0.95)),
+            q(self.latency_quantile_us(0.99)),
             self.throughput_rps(),
         );
         for (name, m) in self.per_model_counters() {
             s.push_str(&format!(
-                " | {name}: batched={}/{} singleton={} errors={} mean={:.0}us",
+                " | {name}: batched={}/{} singleton={} errors={} mean={:.0}us p50<={} p99<={}",
                 m.batched_requests,
                 m.batched_dispatches,
                 m.singleton_requests,
                 m.errors,
                 m.mean_latency_us(),
+                q(m.latency.quantile_us(0.5)),
+                q(m.latency.quantile_us(0.99)),
             ));
         }
         s
@@ -337,5 +453,66 @@ mod tests {
         let m = Metrics::default();
         m.observe_latency_us(u64::MAX / 2);
         assert_eq!(m.latency_quantile_us(1.0), u64::MAX);
+    }
+
+    #[test]
+    fn histogram_known_distribution_quantiles() {
+        // 100 observations: 50 at 80us, 45 at 2ms, 5 at 80ms.  The
+        // nearest-rank quantiles land in known buckets: p50 → the 50th
+        // obs (80us → bucket ≤100us), p95 → the 95th (2ms → ≤2.5ms),
+        // p99 → the 99th (80ms → ≤100ms).
+        let mut h = LatencyHistogram::default();
+        for _ in 0..50 {
+            h.observe(80);
+        }
+        for _ in 0..45 {
+            h.observe(2_000);
+        }
+        for _ in 0..5 {
+            h.observe(80_000);
+        }
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.quantile_us(0.50), 100);
+        assert_eq!(h.quantile_us(0.95), 2_500);
+        assert_eq!(h.quantile_us(0.99), 100_000);
+        assert_eq!(h.quantile_us(1.0), 100_000);
+        let mean = h.mean_us();
+        let expect = (50.0 * 80.0 + 45.0 * 2_000.0 + 5.0 * 80_000.0) / 100.0;
+        assert!((mean - expect).abs() < 1e-9, "mean {mean}");
+        // empty histogram yields zeros
+        assert_eq!(LatencyHistogram::default().quantile_us(0.99), 0);
+        assert_eq!(LatencyHistogram::default().mean_us(), 0.0);
+    }
+
+    #[test]
+    fn per_model_histograms_track_quantiles() {
+        let m = Metrics::default();
+        for us in [100, 100, 100, 9_000] {
+            m.observe_latency_for("ds", us);
+        }
+        m.observe_latency_for("mlp", 40);
+        let ds = m.model_counters("ds").unwrap();
+        assert_eq!(ds.latency.count(), 4);
+        assert_eq!(ds.latency.quantile_us(0.5), 100);
+        assert_eq!(ds.latency.quantile_us(0.99), 10_000);
+        let mlp = m.model_counters("mlp").unwrap();
+        assert_eq!(mlp.latency.quantile_us(0.99), 50);
+        // the global histogram aggregates both models
+        assert_eq!(m.latency_quantile_us(1.0), 10_000);
+        // per-model sums reconcile with the histogram's own view
+        assert_eq!(ds.latency.sum_us(), ds.latency_sum_us);
+        assert_eq!(ds.latency.count(), ds.completed);
+    }
+
+    #[test]
+    fn flush_counts_by_reason() {
+        let m = Metrics::default();
+        m.record_flush(FlushReason::Full);
+        m.record_flush(FlushReason::Full);
+        m.record_flush(FlushReason::Deadline);
+        m.record_flush(FlushReason::Drained);
+        assert_eq!(m.flush_counts(), (2, 1, 1));
+        let s = m.summary();
+        assert!(s.contains("flushes=full:2/deadline:1/drained:1"), "{s}");
     }
 }

@@ -27,7 +27,7 @@ pub mod router;
 
 pub use batcher::{Batcher, BatcherConfig, FlushReason};
 pub use config::{FileConfig, ModelSpec};
-pub use metrics::{Metrics, ModelCounters};
+pub use metrics::{LatencyHistogram, Metrics, ModelCounters, BUCKETS_US};
 pub use request::{LayerTiming, OpDesc, Request, RequestId, Response};
 pub use router::{Router, RouterConfig};
 
@@ -39,7 +39,7 @@ use std::sync::{mpsc, Arc, Condvar, Mutex, RwLock};
 use std::time::Instant;
 
 /// Engine configuration.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct EngineConfig {
     /// worker threads draining the batcher
     pub workers: usize,
@@ -185,7 +185,8 @@ fn worker_loop(s: Arc<Shared>) {
         let batch = {
             let mut b = s.batcher.lock().unwrap();
             loop {
-                if let Some((batch, _reason)) = b.pop_batch(s.shutdown.load(Relaxed)) {
+                if let Some((batch, reason)) = b.pop_batch(s.shutdown.load(Relaxed)) {
+                    s.metrics.record_flush(reason);
                     break Some(batch);
                 }
                 if s.shutdown.load(Relaxed) {

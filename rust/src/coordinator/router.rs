@@ -12,7 +12,7 @@ use super::request::OpDesc;
 use crate::kernels::{KernelError, LayerShape, Plan, PlanBuilder, SelectPolicy};
 
 /// Routing policy knobs.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct RouterConfig {
     /// largest batch still routed to the GEMV path (paper: 1)
     pub gemv_max_batch: usize,

@@ -8,6 +8,7 @@
 
 pub mod e2e;
 pub mod ondevice;
+pub mod serve;
 pub mod sweeps;
 
 use crate::costmodel::{simulate_gemv, CoreModel, Method, SimResult};

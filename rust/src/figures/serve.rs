@@ -1,0 +1,109 @@
+//! Serve-sweep figures (`fig-serve` family): tail latency and dispatch
+//! mix across a set of workload-mix reports — the serving analogue of
+//! the kernel sweep tables.  Rows come from `workload::report`
+//! ([`MixReport`]), one per mix, in sweep order.
+
+use crate::util::bench::Table;
+use crate::workload::report::MixReport;
+
+/// Latency/throughput table: one row per mix with exact nearest-rank
+/// tail percentiles and the shed count (the backpressure signal).
+pub fn fig_serve_latency(reports: &[MixReport]) -> Table {
+    let mut table = Table::new(vec![
+        "mix".to_string(),
+        "mode".to_string(),
+        "arrival".to_string(),
+        "clients".to_string(),
+        "issued".to_string(),
+        "shed".to_string(),
+        "p50 us".to_string(),
+        "p95 us".to_string(),
+        "p99 us".to_string(),
+        "max us".to_string(),
+        "mean us".to_string(),
+        "rps".to_string(),
+    ]);
+    for r in reports {
+        table.row(vec![
+            r.mix.clone(),
+            r.mode.clone(),
+            r.arrival.clone(),
+            r.clients.to_string(),
+            r.issued.to_string(),
+            r.shed.to_string(),
+            r.p50_us.to_string(),
+            r.p95_us.to_string(),
+            r.p99_us.to_string(),
+            r.max_us.to_string(),
+            format!("{:.1}", r.mean_us),
+            format!("{:.1}", r.throughput_rps),
+        ]);
+    }
+    table
+}
+
+/// Dispatch-mix table: how each mix's traffic split across batched vs
+/// singleton dispatches and what triggered the flushes — the batching
+/// policy's side of the tail-latency story.
+pub fn fig_serve_dispatch(reports: &[MixReport]) -> Table {
+    let mut table = Table::new(vec![
+        "mix".to_string(),
+        "completed".to_string(),
+        "errors".to_string(),
+        "batched".to_string(),
+        "singleton".to_string(),
+        "dispatches".to_string(),
+        "flush full".to_string(),
+        "flush deadline".to_string(),
+        "flush drained".to_string(),
+        "models".to_string(),
+    ]);
+    for r in reports {
+        let models: Vec<String> = r
+            .per_model
+            .iter()
+            .map(|m| format!("{}:{}b/{}s", m.name, m.batched_requests, m.singleton_requests))
+            .collect();
+        table.row(vec![
+            r.mix.clone(),
+            r.completed.to_string(),
+            r.errors.to_string(),
+            r.batched_requests.to_string(),
+            r.singleton_requests.to_string(),
+            r.batched_dispatches.to_string(),
+            r.flushes.0.to_string(),
+            r.flushes.1.to_string(),
+            r.flushes.2.to_string(),
+            models.join(" "),
+        ]);
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::loadgen::run_virtual;
+    use crate::workload::mix::MixSpace;
+    use crate::workload::report::build_report;
+
+    #[test]
+    fn tables_render_one_row_per_mix() {
+        let mut space = MixSpace::default_space();
+        space.clients = (1, 1);
+        space.requests_per_client = (4, 4);
+        let reports: Vec<MixReport> = space
+            .sample_all(13, 2)
+            .iter()
+            .map(|mix| build_report(mix, &run_virtual(mix).unwrap()).unwrap())
+            .collect();
+        let lat = fig_serve_latency(&reports).render();
+        let disp = fig_serve_dispatch(&reports).render();
+        for name in ["mix_000", "mix_001"] {
+            assert!(lat.contains(name), "{lat}");
+            assert!(disp.contains(name), "{disp}");
+        }
+        assert!(lat.contains("p99 us"));
+        assert!(disp.contains("flush deadline"));
+    }
+}

@@ -5,19 +5,11 @@
 
 use crate::pack::BitWidth;
 
-/// Deterministic xorshift values in the width's signed range.
+/// Deterministic xorshift values in the width's signed range (the
+/// legacy weight stream, now centralized in `util::rng`).
 pub fn rngvals(bits: BitWidth, n: usize, seed: u64) -> Vec<i8> {
     let (lo, hi) = bits.value_range();
-    let span = (hi as i16 - lo as i16 + 1) as u64;
-    let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
-    (0..n)
-        .map(|_| {
-            s ^= s << 13;
-            s ^= s >> 7;
-            s ^= s << 17;
-            (lo as i16 + (s % span) as i16) as i8
-        })
-        .collect()
+    crate::util::rng::xorshift_range_vals(lo, hi, n, seed)
 }
 
 /// int32 oracle GEMV on unpacked operands.

@@ -25,3 +25,4 @@ pub mod quant;
 pub mod runtime;
 pub mod sim;
 pub mod util;
+pub mod workload;

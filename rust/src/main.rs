@@ -31,6 +31,7 @@ fn main() {
         "simulate" => cmd_simulate(&args),
         "bench" => cmd_bench(&args),
         "serve" => cmd_serve(&args),
+        "workload" => cmd_workload(&args),
         "models" => cmd_models(&args),
         "kernels" => cmd_kernels(&args),
         "artifact" => cmd_artifact(&args),
@@ -320,6 +321,104 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("router:  gemv(FullPack)={gemv} gemm(Ruy)={gemm}");
     engine.shutdown();
     Ok(())
+}
+
+/// `workload gen-mixes|run|sweep`: the scenario-mix harness
+/// (DESIGN.md §11).  `gen-mixes` samples concrete mix files from a mix
+/// space, `run` replays one mix (live engine by default), `sweep`
+/// samples + runs a whole set and emits the `bench-serve/v1` document.
+fn cmd_workload(args: &Args) -> Result<()> {
+    use fullpack::figures::serve::{fig_serve_dispatch, fig_serve_latency};
+    use fullpack::workload::{
+        build_report, run_live, run_virtual, write_serve_json, MixReport, MixSpace, WorkloadMix,
+    };
+
+    let host = std::env::var("HOSTNAME").unwrap_or_else(|_| "unknown-host".into());
+    let load_space = |args: &Args| -> Result<MixSpace> {
+        match args.opt("space") {
+            Some(path) => MixSpace::load(path),
+            None => Ok(MixSpace::default_space()),
+        }
+    };
+
+    match args.pos(1) {
+        Some("gen-mixes") => {
+            let space = load_space(args)?;
+            let seed = args.opt_usize("seed", 7).map_err(|e| anyhow!(e))? as u64;
+            let count = args.opt_usize("count", 8).map_err(|e| anyhow!(e))?;
+            let dir = args.opt_or("out", "mixes");
+            std::fs::create_dir_all(dir)?;
+            for mix in space.sample_all(seed, count) {
+                let path = format!("{dir}/{}.json", mix.name);
+                mix.save(&path)?;
+                println!(
+                    "{path}: {} x{} clients, {} ({} requests)",
+                    mix.arrival.describe(),
+                    mix.clients,
+                    mix.models.iter().map(|m| m.spec.name.as_str()).collect::<Vec<_>>().join("+"),
+                    mix.total_requests(),
+                );
+            }
+            println!("sampled with seed {seed}; same seed => byte-identical files");
+            Ok(())
+        }
+        Some("run") => {
+            let path = args
+                .opt("mix")
+                .ok_or_else(|| anyhow!("workload run --mix F.json [--virtual] [--verify]"))?;
+            let mix = WorkloadMix::load(path)?;
+            let (mode, trace) = if args.flag("virtual") {
+                ("virtual-costmodel", run_virtual(&mix)?)
+            } else {
+                ("live", run_live(&mix, args.flag("verify"))?)
+            };
+            let report = build_report(&mix, &trace)?;
+            let reports = [report];
+            fig_serve_latency(&reports).print();
+            println!();
+            fig_serve_dispatch(&reports).print();
+            let r = &reports[0];
+            println!(
+                "\n{}: {}/{} completed ({} shed, {} errors), p99 {} us, {:.1} rps",
+                r.mix, r.completed, r.issued, r.shed, r.errors, r.p99_us, r.throughput_rps
+            );
+            if let Some(out) = args.opt("out") {
+                let note = format!("single mix {path}");
+                write_serve_json(out, mode, &host, &note, &reports)?;
+                println!("wrote {out}");
+            }
+            Ok(())
+        }
+        Some("sweep") => {
+            let space = load_space(args)?;
+            let seed = args.opt_usize("seed", 7).map_err(|e| anyhow!(e))? as u64;
+            let count = args.opt_usize("count", 8).map_err(|e| anyhow!(e))?;
+            let live = args.flag("live");
+            let mode = if live { "live" } else { "virtual-costmodel" };
+            let out = args.opt_or("out", "BENCH_serve.json");
+            let mut reports: Vec<MixReport> = Vec::with_capacity(count);
+            for mix in space.sample_all(seed, count) {
+                let trace =
+                    if live { run_live(&mix, false)? } else { run_virtual(&mix)? };
+                let report = build_report(&mix, &trace)?;
+                println!(
+                    "{}: {}/{} completed, p99 {} us",
+                    report.mix, report.completed, report.issued, report.p99_us
+                );
+                reports.push(report);
+            }
+            println!("\n=== fig-serve: latency/throughput ===\n");
+            fig_serve_latency(&reports).print();
+            println!("\n=== fig-serve: dispatch mix ===\n");
+            fig_serve_dispatch(&reports).print();
+            let space_desc = args.opt_or("space", "default space");
+            let note = format!("mix sweep: seed {seed}, {count} mixes from {space_desc}");
+            write_serve_json(out, mode, &host, &note, &reports)?;
+            println!("\nwrote {out} (schema bench-serve/v1, source {mode})");
+            Ok(())
+        }
+        _ => bail!("workload expects: gen-mixes | run --mix F.json | sweep"),
+    }
 }
 
 fn cmd_models(args: &Args) -> Result<()> {

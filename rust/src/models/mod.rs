@@ -85,16 +85,7 @@ impl Model for CompiledModel {
 /// matrices from identical seeds.
 pub(crate) fn xorshift_vals(bits: BitWidth, n: usize, seed: u64) -> Vec<i8> {
     let (lo, hi) = bits.value_range();
-    let span = (hi as i16 - lo as i16 + 1) as u64;
-    let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
-    (0..n)
-        .map(|_| {
-            s ^= s << 13;
-            s ^= s >> 7;
-            s ^= s << 17;
-            (lo as i16 + (s % span) as i16) as i8
-        })
-        .collect()
+    crate::util::rng::xorshift_range_vals(lo, hi, n, seed)
 }
 
 /// One FullyConnected layer shape: `z` outputs from `k` inputs.

@@ -146,7 +146,9 @@ impl BenchRecord {
     }
 }
 
-fn json_escape(s: &str) -> String {
+/// Escape a string for embedding in a JSON document (shared by every
+/// BENCH_*.json emitter, including `workload::report`).
+pub fn json_escape(s: &str) -> String {
     let mut out = String::with_capacity(s.len());
     for c in s.chars() {
         match c {

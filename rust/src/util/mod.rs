@@ -6,3 +6,4 @@ pub mod bench;
 pub mod error;
 pub mod json;
 pub mod proptest_lite;
+pub mod rng;

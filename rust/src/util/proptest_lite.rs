@@ -13,33 +13,31 @@
 //! });
 //! ```
 
-/// SplitMix64 — tiny, high-quality, deterministic.
+use crate::util::rng::SplitMix64;
+
+/// Seeded generator for property tests — a thin wrapper over the
+/// canonical [`SplitMix64`] in `util::rng` (byte-identical sequences
+/// to the pre-extraction inline implementation).
 pub struct Gen {
-    state: u64,
+    rng: SplitMix64,
 }
 
 impl Gen {
     pub fn new(seed: u64) -> Self {
-        Gen { state: seed }
+        Gen { rng: SplitMix64::new(seed) }
     }
 
     pub fn next_u64(&mut self) -> u64 {
-        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
-        let mut z = self.state;
-        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
-        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
-        z ^ (z >> 31)
+        self.rng.next_u64()
     }
 
     /// Uniform in `[lo, hi]` inclusive.
     pub fn int_in(&mut self, lo: i64, hi: i64) -> i64 {
-        debug_assert!(lo <= hi);
-        let span = (hi - lo + 1) as u64;
-        lo + (self.next_u64() % span) as i64
+        self.rng.int_in(lo, hi)
     }
 
     pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
-        self.int_in(lo as i64, hi as i64) as usize
+        self.rng.usize_in(lo, hi)
     }
 
     pub fn i8_in(&mut self, lo: i8, hi: i8) -> i8 {

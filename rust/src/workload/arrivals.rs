@@ -1,0 +1,256 @@
+//! Arrival-plan layer: expand a [`WorkloadMix`] into per-client
+//! request plans.
+//!
+//! A plan is computed **before** the run starts, from the mix seed
+//! alone — the live loadgen and the virtual-clock simulator replay the
+//! *same* plan, which is what makes their traces comparable and makes
+//! every run of a mix reproducible.  Client `c` draws from SplitMix64
+//! stream `c` of `mix.seed`, so plans are independent of client count
+//! ordering and of thread scheduling.
+
+use super::mix::{ArrivalProcess, WorkloadMix};
+use crate::util::rng::SplitMix64;
+
+/// One request in a plan: which model it addresses and how much of the
+/// model's fixed input window carries signal.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlannedRequest {
+    /// index into `mix.models`
+    pub model: usize,
+    /// sequence fill in `(0, 1]`
+    pub fill: f64,
+}
+
+/// One arrival event: wait `gap_ns`, then submit all `requests`
+/// back-to-back.  For open-loop processes the gap is measured from the
+/// previous *arrival*; for the closed loop it is think time measured
+/// from the previous burst's *completion*.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlannedBurst {
+    /// nanoseconds to wait before this burst (see above for the epoch)
+    pub gap_ns: u64,
+    /// requests submitted at this arrival
+    pub requests: Vec<PlannedRequest>,
+}
+
+/// Per-burst inter-arrival gaps for one client, as an iterator-ish
+/// stateful sampler (split out so the gap math is testable alone).
+struct GapSampler {
+    arrival: ArrivalProcess,
+    clients: u64,
+    /// bursts emitted so far
+    count: u64,
+    /// bursty: position inside the current on-window, ns
+    phase_ns: f64,
+}
+
+impl GapSampler {
+    fn new(mix: &WorkloadMix) -> GapSampler {
+        GapSampler {
+            arrival: mix.arrival,
+            clients: mix.clients as u64,
+            count: 0,
+            phase_ns: 0.0,
+        }
+    }
+
+    fn next_gap_ns(&mut self, client: usize, rng: &mut SplitMix64) -> u64 {
+        let first = self.count == 0;
+        self.count += 1;
+        match self.arrival {
+            ArrivalProcess::OpenPoisson { rate_rps } => {
+                // each of `clients` streams carries 1/clients of the
+                // aggregate rate: per-client mean gap = clients / rate
+                let mean_ns = 1e9 * self.clients as f64 / rate_rps;
+                rng.exp(mean_ns) as u64
+            }
+            ArrivalProcess::Deterministic { interval_us } => {
+                let interval_ns = interval_us * 1_000;
+                if first {
+                    client as u64 * interval_ns
+                } else {
+                    interval_ns * self.clients
+                }
+            }
+            ArrivalProcess::ClosedLoop { think_us } => {
+                if first {
+                    0
+                } else {
+                    think_us * 1_000
+                }
+            }
+            ArrivalProcess::BurstyOnOff { on_us, off_us, rate_rps } => {
+                // Poisson during on-windows only: draw the on-time gap,
+                // then add one off-window per on-window boundary the
+                // gap crosses (folding the silent periods in)
+                let mean_ns = 1e9 * self.clients as f64 / rate_rps;
+                let on_ns = (on_us * 1_000) as f64;
+                let off_ns = (off_us * 1_000) as f64;
+                let raw = rng.exp(mean_ns);
+                let crossings = ((self.phase_ns + raw) / on_ns).floor();
+                self.phase_ns = (self.phase_ns + raw) % on_ns;
+                (raw + crossings * off_ns) as u64
+            }
+        }
+    }
+}
+
+/// Expand the plan for one client of a mix: bursts with inter-arrival
+/// gaps, each holding per-request model choices and sequence fills.
+/// Deterministic in `(mix.seed, client)`; the per-request draw order
+/// (model, then fill) is part of the format.
+pub fn client_plan(mix: &WorkloadMix, client: usize) -> Vec<PlannedBurst> {
+    let mut rng = SplitMix64::stream(mix.seed, client as u64);
+    let weights: Vec<f64> = mix.models.iter().map(|m| m.weight).collect();
+    let mut gaps = GapSampler::new(mix);
+    let mut bursts = Vec::new();
+    let mut remaining = mix.requests_per_client;
+    while remaining > 0 {
+        let gap_ns = gaps.next_gap_ns(client, &mut rng);
+        let want = (mix.burst.sample(&mut rng).round() as usize).max(1);
+        let n = want.min(remaining);
+        remaining -= n;
+        let requests = (0..n)
+            .map(|_| PlannedRequest {
+                model: rng.pick_weighted(&weights),
+                fill: mix.seq_fill.sample(&mut rng),
+            })
+            .collect();
+        bursts.push(PlannedBurst { gap_ns, requests });
+    }
+    bursts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::mix::{Dist, MixSpace};
+
+    fn base_mix() -> WorkloadMix {
+        let mut m = MixSpace::default_space().sample(11, 0);
+        m.clients = 2;
+        m.requests_per_client = 20;
+        m
+    }
+
+    fn total(plan: &[PlannedBurst]) -> usize {
+        plan.iter().map(|b| b.requests.len()).sum()
+    }
+
+    #[test]
+    fn plans_are_deterministic_and_complete() {
+        let mix = base_mix();
+        for client in 0..mix.clients {
+            let a = client_plan(&mix, client);
+            let b = client_plan(&mix, client);
+            assert_eq!(a, b);
+            assert_eq!(total(&a), mix.requests_per_client);
+            for burst in &a {
+                assert!(!burst.requests.is_empty());
+                for r in &burst.requests {
+                    assert!(r.model < mix.models.len());
+                    assert!(r.fill > 0.0 && r.fill <= 1.0);
+                }
+            }
+        }
+        // distinct clients draw from distinct streams
+        assert_ne!(client_plan(&mix, 0), client_plan(&mix, 1));
+    }
+
+    #[test]
+    fn deterministic_arrivals_stagger_clients() {
+        let mut mix = base_mix();
+        mix.clients = 3;
+        mix.arrival = ArrivalProcess::Deterministic { interval_us: 500 };
+        mix.burst = Dist::Const(1.0);
+        for client in 0..3 {
+            let plan = client_plan(&mix, client);
+            // first gap offsets the client; later gaps keep the
+            // aggregate stream at one request per interval
+            assert_eq!(plan[0].gap_ns, client as u64 * 500_000);
+            for b in &plan[1..] {
+                assert_eq!(b.gap_ns, 3 * 500_000);
+            }
+        }
+    }
+
+    #[test]
+    fn closed_loop_thinks_between_bursts() {
+        let mut mix = base_mix();
+        mix.arrival = ArrivalProcess::ClosedLoop { think_us: 250 };
+        let plan = client_plan(&mix, 0);
+        assert_eq!(plan[0].gap_ns, 0);
+        for b in &plan[1..] {
+            assert_eq!(b.gap_ns, 250_000);
+        }
+    }
+
+    #[test]
+    fn poisson_gaps_average_near_mean() {
+        let mut mix = base_mix();
+        mix.clients = 1;
+        mix.requests_per_client = 4000;
+        mix.arrival = ArrivalProcess::OpenPoisson { rate_rps: 1000.0 };
+        mix.burst = Dist::Const(1.0);
+        let plan = client_plan(&mix, 0);
+        let mean = plan.iter().map(|b| b.gap_ns as f64).sum::<f64>() / plan.len() as f64;
+        // per-client mean gap = clients/rate = 1ms
+        assert!((mean - 1_000_000.0).abs() < 100_000.0, "mean {mean}");
+    }
+
+    #[test]
+    fn bursty_gaps_fold_in_off_windows() {
+        let mut mix = base_mix();
+        mix.clients = 1;
+        mix.requests_per_client = 2000;
+        mix.arrival =
+            ArrivalProcess::BurstyOnOff { on_us: 1_000, off_us: 4_000, rate_rps: 10_000.0 };
+        mix.burst = Dist::Const(1.0);
+        let plan = client_plan(&mix, 0);
+        // mean on-time gap is 0.1ms -> ~10 arrivals per 1ms on-window;
+        // each on-window boundary adds a 4ms off-window, so the overall
+        // mean gap must sit well above the pure-Poisson mean...
+        let mean = plan.iter().map(|b| b.gap_ns as f64).sum::<f64>() / plan.len() as f64;
+        assert!(mean > 150_000.0, "mean {mean}");
+        // ...and arrivals-per-on-window ~ on_ns/mean_ns = 10, so mean ~
+        // (0.1ms on-gap + 0.4ms amortized off) = 0.5ms
+        assert!((mean - 500_000.0).abs() < 100_000.0, "mean {mean}");
+        // some gaps are pure on-window gaps (no boundary crossed)
+        assert!(plan.iter().any(|b| b.gap_ns < 1_000_000));
+        // and some fold in at least one full off-window
+        assert!(plan.iter().any(|b| b.gap_ns >= 4_000_000));
+    }
+
+    #[test]
+    fn model_choice_follows_weights() {
+        let mut mix = base_mix();
+        mix.clients = 1;
+        mix.requests_per_client = 6000;
+        mix.models.truncate(1);
+        let spec = mix.models[0].spec.clone();
+        mix.models[0].weight = 3.0;
+        mix.models.push(super::super::mix::MixModel {
+            spec: crate::coordinator::ModelSpec { name: "other".to_string(), ..spec },
+            weight: 1.0,
+        });
+        let plan = client_plan(&mix, 0);
+        let hits = plan
+            .iter()
+            .flat_map(|b| &b.requests)
+            .filter(|r| r.model == 0)
+            .count();
+        let frac = hits as f64 / mix.requests_per_client as f64;
+        assert!((frac - 0.75).abs() < 0.03, "frac {frac}");
+    }
+
+    #[test]
+    fn burst_sizes_respect_dist_and_clamp() {
+        let mut mix = base_mix();
+        mix.requests_per_client = 7;
+        mix.burst = Dist::Const(3.0);
+        let plan = client_plan(&mix, 0);
+        let sizes: Vec<usize> = plan.iter().map(|b| b.requests.len()).collect();
+        // 7 requests in bursts of 3: 3, 3, then a clamped 1
+        assert_eq!(sizes, vec![3, 3, 1]);
+    }
+}

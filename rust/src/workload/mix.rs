@@ -1,0 +1,908 @@
+//! Workload-mix spec layer: [`WorkloadMix`] (one concrete scenario as
+//! a JSON file) and [`MixSpace`] (per-axis ranges a seeded sampler
+//! draws mixes from).
+//!
+//! Serialization is hand-rolled over `util::json` (serde is
+//! unavailable offline — DESIGN.md §7) with **deterministic key order
+//! and float formatting**, so `gen-mixes --seed S` writes byte-identical
+//! files on every run — the invariant `rust/tests/workload_harness.rs`
+//! pins.  Engine knobs and roster entries reuse the exact
+//! `serve --config` schema (`coordinator::config`).
+
+use crate::coordinator::config::{
+    engine_from_json, engine_to_json, model_spec_from_json, model_spec_to_json,
+};
+use crate::coordinator::{EngineConfig, ModelSpec};
+use crate::util::error::{anyhow, bail, Result};
+use crate::util::json::Json;
+use crate::util::rng::SplitMix64;
+
+/// Deterministic float formatting for mix files: Rust's shortest
+/// round-trip `Display` — stable across runs and platforms for the
+/// same bit pattern.
+fn fmt_f64(x: f64) -> String {
+    format!("{x}")
+}
+
+/// Round to `d` decimals (sampled axes are quantized so mix files stay
+/// readable and byte-stable).
+fn round_to(x: f64, d: u32) -> f64 {
+    let p = 10f64.powi(d as i32);
+    (x * p).round() / p
+}
+
+/// A scalar distribution a plan samples per burst/request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Dist {
+    /// always the same value
+    Const(f64),
+    /// uniform in `[lo, hi]`
+    Uniform {
+        /// lower bound (inclusive)
+        lo: f64,
+        /// upper bound (inclusive)
+        hi: f64,
+    },
+    /// weighted choice over `(value, weight)` options
+    Choice(Vec<(f64, f64)>),
+}
+
+impl Dist {
+    /// Draw one value.
+    pub fn sample(&self, rng: &mut SplitMix64) -> f64 {
+        match self {
+            Dist::Const(v) => *v,
+            Dist::Uniform { lo, hi } => rng.f64_in(*lo, *hi),
+            Dist::Choice(opts) => {
+                let weights: Vec<f64> = opts.iter().map(|(_, w)| *w).collect();
+                opts[rng.pick_weighted(&weights)].0
+            }
+        }
+    }
+
+    /// Smallest value the distribution can produce.
+    pub fn min_value(&self) -> f64 {
+        match self {
+            Dist::Const(v) => *v,
+            Dist::Uniform { lo, .. } => *lo,
+            Dist::Choice(opts) => {
+                opts.iter().map(|(v, _)| *v).fold(f64::INFINITY, f64::min)
+            }
+        }
+    }
+
+    /// Largest value the distribution can produce.
+    pub fn max_value(&self) -> f64 {
+        match self {
+            Dist::Const(v) => *v,
+            Dist::Uniform { hi, .. } => *hi,
+            Dist::Choice(opts) => {
+                opts.iter().map(|(v, _)| *v).fold(f64::NEG_INFINITY, f64::max)
+            }
+        }
+    }
+
+    /// Parse from the mix-file schema (`ctx` labels errors).
+    pub fn parse(j: &Json, ctx: &str) -> Result<Dist> {
+        let kind = j
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("{ctx}: missing dist kind"))?;
+        match kind {
+            "const" => {
+                let v = j
+                    .get("value")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| anyhow!("{ctx}: const dist missing value"))?;
+                Ok(Dist::Const(v))
+            }
+            "uniform" => {
+                let lo = j
+                    .get("lo")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| anyhow!("{ctx}: uniform dist missing lo"))?;
+                let hi = j
+                    .get("hi")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| anyhow!("{ctx}: uniform dist missing hi"))?;
+                if hi < lo {
+                    bail!("{ctx}: uniform dist hi {hi} < lo {lo}");
+                }
+                Ok(Dist::Uniform { lo, hi })
+            }
+            "choice" => {
+                let opts = j
+                    .get("options")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("{ctx}: choice dist missing options"))?;
+                if opts.is_empty() {
+                    bail!("{ctx}: choice dist has no options");
+                }
+                let mut out = Vec::with_capacity(opts.len());
+                for (i, o) in opts.iter().enumerate() {
+                    let v = o
+                        .get("value")
+                        .and_then(Json::as_f64)
+                        .ok_or_else(|| anyhow!("{ctx}: options[{i}] missing value"))?;
+                    let w = o.get("weight").and_then(Json::as_f64).unwrap_or(1.0);
+                    if !(w > 0.0) {
+                        bail!("{ctx}: options[{i}] non-positive weight {w}");
+                    }
+                    out.push((v, w));
+                }
+                Ok(Dist::Choice(out))
+            }
+            other => bail!("{ctx}: unknown dist kind {other:?} (expected const|uniform|choice)"),
+        }
+    }
+
+    /// Serialize to the schema [`Dist::parse`] reads (deterministic).
+    pub fn to_json(&self) -> String {
+        match self {
+            Dist::Const(v) => format!("{{\"kind\": \"const\", \"value\": {}}}", fmt_f64(*v)),
+            Dist::Uniform { lo, hi } => format!(
+                "{{\"kind\": \"uniform\", \"lo\": {}, \"hi\": {}}}",
+                fmt_f64(*lo),
+                fmt_f64(*hi)
+            ),
+            Dist::Choice(opts) => {
+                let items: Vec<String> = opts
+                    .iter()
+                    .map(|(v, w)| {
+                        format!("{{\"value\": {}, \"weight\": {}}}", fmt_f64(*v), fmt_f64(*w))
+                    })
+                    .collect();
+                format!("{{\"kind\": \"choice\", \"options\": [{}]}}", items.join(", "))
+            }
+        }
+    }
+}
+
+/// How requests arrive (the load-shape axis of a mix).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// open loop: aggregate Poisson arrivals at `rate_rps` (split
+    /// evenly across clients); submission never waits for replies
+    OpenPoisson {
+        /// aggregate request rate (requests/second across all clients)
+        rate_rps: f64,
+    },
+    /// open loop: fixed aggregate inter-arrival gap, clients staggered
+    Deterministic {
+        /// aggregate inter-arrival interval in microseconds
+        interval_us: u64,
+    },
+    /// closed loop: each client waits for its replies, thinks, repeats
+    ClosedLoop {
+        /// per-client think time between bursts, microseconds
+        think_us: u64,
+    },
+    /// open loop: Poisson at `rate_rps` during on-windows, silence
+    /// during off-windows (burst storms — the tail-latency stressor)
+    BurstyOnOff {
+        /// on-window length, microseconds
+        on_us: u64,
+        /// off-window length, microseconds
+        off_us: u64,
+        /// aggregate rate during on-windows (requests/second)
+        rate_rps: f64,
+    },
+}
+
+impl ArrivalProcess {
+    /// Schema kind tag (`poisson`/`deterministic`/`closed-loop`/`bursty`).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ArrivalProcess::OpenPoisson { .. } => "poisson",
+            ArrivalProcess::Deterministic { .. } => "deterministic",
+            ArrivalProcess::ClosedLoop { .. } => "closed-loop",
+            ArrivalProcess::BurstyOnOff { .. } => "bursty",
+        }
+    }
+
+    /// Is submission decoupled from replies?
+    pub fn is_open_loop(&self) -> bool {
+        !matches!(self, ArrivalProcess::ClosedLoop { .. })
+    }
+
+    /// One-line human description.
+    pub fn describe(&self) -> String {
+        match self {
+            ArrivalProcess::OpenPoisson { rate_rps } => format!("poisson {rate_rps} rps"),
+            ArrivalProcess::Deterministic { interval_us } => {
+                format!("deterministic {interval_us}us")
+            }
+            ArrivalProcess::ClosedLoop { think_us } => format!("closed-loop think {think_us}us"),
+            ArrivalProcess::BurstyOnOff { on_us, off_us, rate_rps } => {
+                format!("bursty {rate_rps} rps on {on_us}us / off {off_us}us")
+            }
+        }
+    }
+
+    /// Parse from the mix-file schema.
+    pub fn parse(j: &Json) -> Result<ArrivalProcess> {
+        let kind = j
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("arrival: missing kind"))?;
+        let f64_at = |key: &str| -> Result<f64> {
+            j.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("arrival {kind}: missing {key}"))
+        };
+        let us_at = |key: &str| -> Result<u64> {
+            let v = f64_at(key)?;
+            if !(v >= 0.0) {
+                bail!("arrival {kind}: negative {key}");
+            }
+            Ok(v as u64)
+        };
+        let a = match kind {
+            "poisson" => ArrivalProcess::OpenPoisson { rate_rps: f64_at("rate_rps")? },
+            "deterministic" => {
+                ArrivalProcess::Deterministic { interval_us: us_at("interval_us")? }
+            }
+            "closed-loop" => ArrivalProcess::ClosedLoop { think_us: us_at("think_us")? },
+            "bursty" => ArrivalProcess::BurstyOnOff {
+                on_us: us_at("on_us")?,
+                off_us: us_at("off_us")?,
+                rate_rps: f64_at("rate_rps")?,
+            },
+            other => bail!(
+                "arrival: unknown kind {other:?} (expected poisson|deterministic|closed-loop|bursty)"
+            ),
+        };
+        match a {
+            ArrivalProcess::OpenPoisson { rate_rps }
+            | ArrivalProcess::BurstyOnOff { rate_rps, .. }
+                if !(rate_rps > 0.0) =>
+            {
+                bail!("arrival {kind}: rate_rps must be positive (got {rate_rps})")
+            }
+            ArrivalProcess::BurstyOnOff { on_us, .. } if on_us == 0 => {
+                bail!("arrival bursty: on_us must be positive")
+            }
+            ArrivalProcess::Deterministic { interval_us } if interval_us == 0 => {
+                bail!("arrival deterministic: interval_us must be positive")
+            }
+            _ => {}
+        }
+        Ok(a)
+    }
+
+    /// Serialize to the schema [`ArrivalProcess::parse`] reads.
+    pub fn to_json(&self) -> String {
+        match self {
+            ArrivalProcess::OpenPoisson { rate_rps } => format!(
+                "{{\"kind\": \"poisson\", \"rate_rps\": {}}}",
+                fmt_f64(*rate_rps)
+            ),
+            ArrivalProcess::Deterministic { interval_us } => format!(
+                "{{\"kind\": \"deterministic\", \"interval_us\": {interval_us}}}"
+            ),
+            ArrivalProcess::ClosedLoop { think_us } => {
+                format!("{{\"kind\": \"closed-loop\", \"think_us\": {think_us}}}")
+            }
+            ArrivalProcess::BurstyOnOff { on_us, off_us, rate_rps } => format!(
+                "{{\"kind\": \"bursty\", \"on_us\": {on_us}, \"off_us\": {off_us}, \"rate_rps\": {}}}",
+                fmt_f64(*rate_rps)
+            ),
+        }
+    }
+}
+
+/// One model in a mix's composition: a roster entry (the exact
+/// `serve --config` schema) plus its traffic weight.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MixModel {
+    /// roster entry (name, zoo graph, variant, size, weight seed)
+    pub spec: ModelSpec,
+    /// relative traffic share (need not be normalized)
+    pub weight: f64,
+}
+
+/// One concrete workload scenario — the declarative unit the loadgen
+/// replays and `gen-mixes` samples.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadMix {
+    /// mix name (file stem, report label)
+    pub name: String,
+    /// seed for every random draw the mix's replay makes (plans,
+    /// per-request model choice, fills)
+    pub seed: u64,
+    /// concurrent load-generating clients
+    pub clients: usize,
+    /// requests each client issues over the run
+    pub requests_per_client: usize,
+    /// how requests arrive
+    pub arrival: ArrivalProcess,
+    /// requests per arrival event (burst size; batch-size axis)
+    pub burst: Dist,
+    /// fraction of the model's fixed input window carrying signal
+    /// (padded-utterance semantics — engine input shapes stay valid)
+    pub seq_fill: Dist,
+    /// model composition with traffic weights (≥1 entry)
+    pub models: Vec<MixModel>,
+    /// engine under test (same schema as `serve --config`)
+    pub engine: EngineConfig,
+}
+
+impl WorkloadMix {
+    /// Total requests the mix issues.
+    pub fn total_requests(&self) -> usize {
+        self.clients * self.requests_per_client
+    }
+
+    /// Parse a mix document; every malformed field is a typed error.
+    pub fn parse(text: &str) -> Result<WorkloadMix> {
+        let j = Json::parse(text).map_err(|e| anyhow!("mix JSON: {e}"))?;
+        let name = j
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("mix: missing name"))?
+            .to_string();
+        let seed = j
+            .get("seed")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("mix {name:?}: missing seed"))? as u64;
+        let clients = j
+            .get("clients")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("mix {name:?}: missing clients"))?;
+        let requests_per_client = j
+            .get("requests_per_client")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("mix {name:?}: missing requests_per_client"))?;
+        let arrival = ArrivalProcess::parse(
+            j.get("arrival").ok_or_else(|| anyhow!("mix {name:?}: missing arrival"))?,
+        )?;
+        let burst = match j.get("burst") {
+            Some(b) => Dist::parse(b, "burst")?,
+            None => Dist::Const(1.0),
+        };
+        let seq_fill = match j.get("seq_fill") {
+            Some(s) => Dist::parse(s, "seq_fill")?,
+            None => Dist::Const(1.0),
+        };
+        let marr = j
+            .get("models")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("mix {name:?}: missing models"))?;
+        let mut models = Vec::with_capacity(marr.len());
+        for (i, m) in marr.iter().enumerate() {
+            let spec = model_spec_from_json(m, i)?;
+            let weight = m.get("weight").and_then(Json::as_f64).unwrap_or(1.0);
+            models.push(MixModel { spec, weight });
+        }
+        let engine = engine_from_json(j.get("engine").unwrap_or(&Json::Null));
+        let mix = WorkloadMix {
+            name,
+            seed,
+            clients,
+            requests_per_client,
+            arrival,
+            burst,
+            seq_fill,
+            models,
+            engine,
+        };
+        mix.validate()?;
+        Ok(mix)
+    }
+
+    /// Read and [`WorkloadMix::parse`] a mix file.
+    pub fn load(path: &str) -> Result<WorkloadMix> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading mix {path:?}: {e}"))?;
+        Self::parse(&text)
+    }
+
+    /// Semantic validation beyond field presence.
+    pub fn validate(&self) -> Result<()> {
+        let name = &self.name;
+        if self.clients == 0 {
+            bail!("mix {name:?}: clients must be >= 1");
+        }
+        if self.requests_per_client == 0 {
+            bail!("mix {name:?}: requests_per_client must be >= 1");
+        }
+        if self.models.is_empty() {
+            bail!("mix {name:?}: models must be non-empty");
+        }
+        let mut seen = std::collections::HashSet::new();
+        for m in &self.models {
+            if !seen.insert(m.spec.name.as_str()) {
+                bail!("mix {name:?}: duplicate model name {:?}", m.spec.name);
+            }
+            if !(m.weight > 0.0) {
+                bail!("mix {name:?}: model {:?} weight must be positive", m.spec.name);
+            }
+        }
+        if self.burst.min_value() < 1.0 {
+            bail!("mix {name:?}: burst sizes must be >= 1");
+        }
+        if self.seq_fill.min_value() <= 0.0 || self.seq_fill.max_value() > 1.0 {
+            bail!("mix {name:?}: seq_fill must lie in (0, 1]");
+        }
+        Ok(())
+    }
+
+    /// Serialize to the mix-file schema (deterministic key order and
+    /// float formatting — byte-stable for a given mix).
+    pub fn to_json(&self) -> String {
+        let models: Vec<String> = self
+            .models
+            .iter()
+            .map(|m| {
+                // splice the weight into the roster-entry object
+                let spec = model_spec_to_json(&m.spec);
+                format!(
+                    "{}, \"weight\": {}}}",
+                    &spec[..spec.len() - 1],
+                    fmt_f64(m.weight)
+                )
+            })
+            .collect();
+        format!(
+            "{{\n  \"name\": \"{}\",\n  \"seed\": {},\n  \"clients\": {},\n  \
+             \"requests_per_client\": {},\n  \"arrival\": {},\n  \"burst\": {},\n  \
+             \"seq_fill\": {},\n  \"models\": [\n    {}\n  ],\n  \"engine\": {}\n}}\n",
+            self.name,
+            self.seed,
+            self.clients,
+            self.requests_per_client,
+            self.arrival.to_json(),
+            self.burst.to_json(),
+            self.seq_fill.to_json(),
+            models.join(",\n    "),
+            engine_to_json(&self.engine),
+        )
+    }
+
+    /// Write [`WorkloadMix::to_json`] to `path`.
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_json())
+            .map_err(|e| anyhow!("writing mix {path:?}: {e}"))
+    }
+}
+
+/// Per-axis ranges a sweep samples concrete mixes from (the
+/// declarative input of `fullpack workload gen-mixes|sweep`).
+#[derive(Debug, Clone)]
+pub struct MixSpace {
+    /// client-count range (inclusive)
+    pub clients: (usize, usize),
+    /// requests-per-client range (inclusive)
+    pub requests_per_client: (usize, usize),
+    /// arrival kinds to sample among (schema tags)
+    pub arrivals: Vec<String>,
+    /// aggregate Poisson/bursty rate range, log-uniform (rps)
+    pub rate_rps: (f64, f64),
+    /// deterministic inter-arrival range (µs)
+    pub interval_us: (u64, u64),
+    /// closed-loop think-time range (µs)
+    pub think_us: (u64, u64),
+    /// bursty on-window range (µs)
+    pub on_us: (u64, u64),
+    /// bursty off-window range (µs)
+    pub off_us: (u64, u64),
+    /// largest burst size a sampled burst dist may produce
+    pub burst_max: usize,
+    /// sequence-fill range (fraction of the input window)
+    pub seq_fill: (f64, f64),
+    /// models-per-mix range (inclusive; clamped to the zoo size)
+    pub models_per_mix: (usize, usize),
+    /// roster entries mixes draw their composition from
+    pub zoo: Vec<ModelSpec>,
+    /// engine under test for every sampled mix
+    pub engine: EngineConfig,
+}
+
+impl MixSpace {
+    /// The built-in CI-friendly space: tiny zoo models, small client
+    /// counts, every arrival kind reachable.
+    pub fn default_space() -> MixSpace {
+        let spec = |name: &str, model: &str, variant: &str| ModelSpec {
+            name: name.to_string(),
+            model: model.to_string(),
+            variant: crate::pack::Variant::parse(variant).unwrap(),
+            size: crate::models::ModelSize::Tiny,
+            seed: 7,
+        };
+        MixSpace {
+            clients: (1, 3),
+            requests_per_client: (4, 10),
+            arrivals: vec![
+                "poisson".to_string(),
+                "deterministic".to_string(),
+                "closed-loop".to_string(),
+                "bursty".to_string(),
+            ],
+            rate_rps: (50.0, 400.0),
+            interval_us: (500, 5_000),
+            think_us: (200, 2_000),
+            on_us: (2_000, 10_000),
+            off_us: (1_000, 5_000),
+            burst_max: 4,
+            seq_fill: (0.5, 1.0),
+            models_per_mix: (1, 3),
+            zoo: vec![
+                spec("deepspeech-tiny", "deepspeech", "w4a8"),
+                spec("kws-tiny", "keyword-spotter", "w2a8"),
+                spec("mlp-tiny", "mlp", "w4a8"),
+            ],
+            engine: EngineConfig::default(),
+        }
+    }
+
+    /// Parse a space document: every key optional, defaulting to
+    /// [`MixSpace::default_space`].
+    pub fn parse(text: &str) -> Result<MixSpace> {
+        let j = Json::parse(text).map_err(|e| anyhow!("space JSON: {e}"))?;
+        let mut s = MixSpace::default_space();
+        let usize_pair = |key: &str, cur: (usize, usize)| -> Result<(usize, usize)> {
+            match j.get(key) {
+                None => Ok(cur),
+                Some(v) => {
+                    let a = v.as_arr().ok_or_else(|| anyhow!("space {key}: expected [lo, hi]"))?;
+                    if a.len() != 2 {
+                        bail!("space {key}: expected [lo, hi]");
+                    }
+                    let lo = a[0].as_usize().ok_or_else(|| anyhow!("space {key}: bad lo"))?;
+                    let hi = a[1].as_usize().ok_or_else(|| anyhow!("space {key}: bad hi"))?;
+                    if hi < lo {
+                        bail!("space {key}: hi < lo");
+                    }
+                    Ok((lo, hi))
+                }
+            }
+        };
+        let f64_pair = |key: &str, cur: (f64, f64)| -> Result<(f64, f64)> {
+            match j.get(key) {
+                None => Ok(cur),
+                Some(v) => {
+                    let a = v.as_arr().ok_or_else(|| anyhow!("space {key}: expected [lo, hi]"))?;
+                    if a.len() != 2 {
+                        bail!("space {key}: expected [lo, hi]");
+                    }
+                    let lo = a[0].as_f64().ok_or_else(|| anyhow!("space {key}: bad lo"))?;
+                    let hi = a[1].as_f64().ok_or_else(|| anyhow!("space {key}: bad hi"))?;
+                    if hi < lo {
+                        bail!("space {key}: hi < lo");
+                    }
+                    Ok((lo, hi))
+                }
+            }
+        };
+        s.clients = usize_pair("clients", s.clients)?;
+        s.requests_per_client = usize_pair("requests_per_client", s.requests_per_client)?;
+        if let Some(a) = j.get("arrivals") {
+            let arr = a.as_arr().ok_or_else(|| anyhow!("space arrivals: expected an array"))?;
+            let mut kinds = Vec::new();
+            for k in arr {
+                let k = k
+                    .as_str()
+                    .ok_or_else(|| anyhow!("space arrivals: expected kind strings"))?;
+                if !matches!(k, "poisson" | "deterministic" | "closed-loop" | "bursty") {
+                    bail!("space arrivals: unknown kind {k:?}");
+                }
+                kinds.push(k.to_string());
+            }
+            if kinds.is_empty() {
+                bail!("space arrivals: must be non-empty");
+            }
+            s.arrivals = kinds;
+        }
+        s.rate_rps = f64_pair("rate_rps", s.rate_rps)?;
+        if !(s.rate_rps.0 > 0.0) {
+            bail!("space rate_rps: lo must be positive");
+        }
+        let u64_pair = |key: &str, cur: (u64, u64)| -> Result<(u64, u64)> {
+            let p = usize_pair(key, (cur.0 as usize, cur.1 as usize))?;
+            Ok((p.0 as u64, p.1 as u64))
+        };
+        s.interval_us = u64_pair("interval_us", s.interval_us)?;
+        s.think_us = u64_pair("think_us", s.think_us)?;
+        s.on_us = u64_pair("on_us", s.on_us)?;
+        s.off_us = u64_pair("off_us", s.off_us)?;
+        if let Some(b) = j.get("burst_max") {
+            s.burst_max = b.as_usize().ok_or_else(|| anyhow!("space burst_max: bad number"))?;
+        }
+        s.seq_fill = f64_pair("seq_fill", s.seq_fill)?;
+        if !(s.seq_fill.0 > 0.0) || s.seq_fill.1 > 1.0 {
+            bail!("space seq_fill: range must lie in (0, 1]");
+        }
+        s.models_per_mix = usize_pair("models_per_mix", s.models_per_mix)?;
+        if let Some(arr) = j.get("zoo").and_then(Json::as_arr) {
+            let mut zoo = Vec::with_capacity(arr.len());
+            for (i, m) in arr.iter().enumerate() {
+                zoo.push(model_spec_from_json(m, i)?);
+            }
+            if zoo.is_empty() {
+                bail!("space zoo: must be non-empty");
+            }
+            s.zoo = zoo;
+        }
+        if let Some(e) = j.get("engine") {
+            s.engine = engine_from_json(e);
+        }
+        if s.models_per_mix.0 == 0 {
+            bail!("space models_per_mix: lo must be >= 1");
+        }
+        Ok(s)
+    }
+
+    /// Read and [`MixSpace::parse`] a space file.
+    pub fn load(path: &str) -> Result<MixSpace> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading space {path:?}: {e}"))?;
+        Self::parse(&text)
+    }
+
+    /// Sample mix `index` of a sweep seeded with `seed`: stream
+    /// `index` of the seed drives every draw, so any mix of a sweep is
+    /// reproducible in isolation and the whole sweep is byte-identical
+    /// across runs.  The axis order below is part of the format — it
+    /// must not change, or existing seeds resample differently.
+    pub fn sample(&self, seed: u64, index: usize) -> WorkloadMix {
+        let mut r = SplitMix64::stream(seed, index as u64);
+        // folded to 53 bits: mix files carry the seed as a JSON number,
+        // and only integers up to 2^53 survive the f64-backed number
+        // representation byte-exactly through a save -> load roundtrip
+        let mix_seed = r.next_u64() >> 11;
+        let clients = r.usize_in(self.clients.0, self.clients.1);
+        let requests_per_client =
+            r.usize_in(self.requests_per_client.0, self.requests_per_client.1);
+        let kind = &self.arrivals[r.usize_in(0, self.arrivals.len() - 1)];
+        let arrival = match kind.as_str() {
+            "poisson" => ArrivalProcess::OpenPoisson {
+                rate_rps: round_to(r.f64_log_in(self.rate_rps.0, self.rate_rps.1), 1),
+            },
+            "deterministic" => ArrivalProcess::Deterministic {
+                interval_us: r.usize_in(self.interval_us.0 as usize, self.interval_us.1 as usize)
+                    as u64,
+            },
+            "closed-loop" => ArrivalProcess::ClosedLoop {
+                think_us: r.usize_in(self.think_us.0 as usize, self.think_us.1 as usize) as u64,
+            },
+            _ => ArrivalProcess::BurstyOnOff {
+                on_us: r.usize_in(self.on_us.0 as usize, self.on_us.1 as usize) as u64,
+                off_us: r.usize_in(self.off_us.0 as usize, self.off_us.1 as usize) as u64,
+                rate_rps: round_to(r.f64_log_in(self.rate_rps.0, self.rate_rps.1), 1),
+            },
+        };
+        let burst = if self.burst_max <= 1 || r.f64_unit() < 0.5 {
+            Dist::Const(1.0)
+        } else {
+            Dist::Uniform { lo: 1.0, hi: self.burst_max as f64 }
+        };
+        let fill_a = round_to(r.f64_in(self.seq_fill.0, self.seq_fill.1), 2);
+        let fill_b = round_to(r.f64_in(self.seq_fill.0, self.seq_fill.1), 2);
+        let (lo, hi) = (fill_a.min(fill_b), fill_a.max(fill_b));
+        let seq_fill = if lo == hi { Dist::Const(lo) } else { Dist::Uniform { lo, hi } };
+        let want = r.usize_in(
+            self.models_per_mix.0.min(self.zoo.len()),
+            self.models_per_mix.1.min(self.zoo.len()),
+        );
+        // partial Fisher-Yates: the first `want` slots are a uniform
+        // subset in a deterministic order
+        let mut idx: Vec<usize> = (0..self.zoo.len()).collect();
+        for i in 0..want {
+            let j = r.usize_in(i, idx.len() - 1);
+            idx.swap(i, j);
+        }
+        let models: Vec<MixModel> = idx[..want]
+            .iter()
+            .map(|&zi| MixModel {
+                spec: self.zoo[zi].clone(),
+                weight: round_to(r.f64_in(0.5, 2.0), 2),
+            })
+            .collect();
+        WorkloadMix {
+            name: format!("mix_{index:03}"),
+            seed: mix_seed,
+            clients,
+            requests_per_client,
+            arrival,
+            burst,
+            seq_fill,
+            models,
+            engine: self.engine,
+        }
+    }
+
+    /// Sample `count` mixes (`mix_000` … `mix_{count-1}`).
+    pub fn sample_all(&self, seed: u64, count: usize) -> Vec<WorkloadMix> {
+        (0..count).map(|i| self.sample(seed, i)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bursty_mix_text() -> &'static str {
+        r#"{
+          "name": "storm",
+          "seed": 99,
+          "clients": 2,
+          "requests_per_client": 6,
+          "arrival": {"kind": "bursty", "on_us": 3000, "off_us": 2000, "rate_rps": 200.0},
+          "burst": {"kind": "uniform", "lo": 1, "hi": 3},
+          "seq_fill": {"kind": "const", "value": 0.8},
+          "models": [
+            {"name": "ds", "model": "deepspeech", "variant": "w4a8", "size": "tiny", "seed": 7, "weight": 1.5},
+            {"name": "kws", "model": "keyword-spotter", "variant": "w2a8", "size": "tiny", "seed": 7, "weight": 0.5}
+          ],
+          "engine": {"workers": 2, "batcher": {"max_batch": 4, "max_wait_ms": 1, "max_queue": 64}}
+        }"#
+    }
+
+    #[test]
+    fn mix_parses_and_roundtrips() {
+        let mix = WorkloadMix::parse(bursty_mix_text()).unwrap();
+        assert_eq!(mix.name, "storm");
+        assert_eq!(mix.total_requests(), 12);
+        assert_eq!(mix.arrival.kind(), "bursty");
+        assert!(mix.arrival.is_open_loop());
+        assert_eq!(mix.models.len(), 2);
+        assert_eq!(mix.models[0].weight, 1.5);
+        assert_eq!(mix.engine.batcher.max_batch, 4);
+        // serialize -> parse -> identical structure
+        let text = mix.to_json();
+        let back = WorkloadMix::parse(&text).unwrap();
+        assert_eq!(back, mix);
+        // serialization is byte-stable
+        assert_eq!(back.to_json(), text);
+    }
+
+    #[test]
+    fn malformed_mixes_rejected_with_typed_errors() {
+        let cases: Vec<(&str, &str)> = vec![
+            ("not json", "mix JSON"),
+            (r#"{"seed": 1}"#, "missing name"),
+            (r#"{"name": "m"}"#, "missing seed"),
+            (r#"{"name": "m", "seed": 1}"#, "missing clients"),
+            (
+                r#"{"name": "m", "seed": 1, "clients": 1, "requests_per_client": 1}"#,
+                "missing arrival",
+            ),
+            (
+                r#"{"name": "m", "seed": 1, "clients": 1, "requests_per_client": 1,
+                   "arrival": {"kind": "warp"}, "models": []}"#,
+                "unknown kind",
+            ),
+            (
+                r#"{"name": "m", "seed": 1, "clients": 1, "requests_per_client": 1,
+                   "arrival": {"kind": "poisson"}, "models": []}"#,
+                "missing rate_rps",
+            ),
+            (
+                r#"{"name": "m", "seed": 1, "clients": 1, "requests_per_client": 1,
+                   "arrival": {"kind": "poisson", "rate_rps": 100}}"#,
+                "missing models",
+            ),
+            (
+                r#"{"name": "m", "seed": 1, "clients": 1, "requests_per_client": 1,
+                   "arrival": {"kind": "poisson", "rate_rps": 100}, "models": []}"#,
+                "models must be non-empty",
+            ),
+            (
+                r#"{"name": "m", "seed": 1, "clients": 0, "requests_per_client": 1,
+                   "arrival": {"kind": "poisson", "rate_rps": 100},
+                   "models": [{"name": "ds", "size": "tiny"}]}"#,
+                "clients must be >= 1",
+            ),
+            (
+                r#"{"name": "m", "seed": 1, "clients": 1, "requests_per_client": 1,
+                   "arrival": {"kind": "poisson", "rate_rps": 100},
+                   "models": [{"name": "ds", "size": "tiny", "weight": 0}]}"#,
+                "weight must be positive",
+            ),
+            (
+                r#"{"name": "m", "seed": 1, "clients": 1, "requests_per_client": 1,
+                   "arrival": {"kind": "poisson", "rate_rps": 100},
+                   "models": [{"name": "ds", "size": "tiny"}, {"name": "ds", "size": "tiny"}]}"#,
+                "duplicate model name",
+            ),
+            (
+                r#"{"name": "m", "seed": 1, "clients": 1, "requests_per_client": 1,
+                   "arrival": {"kind": "poisson", "rate_rps": 100},
+                   "burst": {"kind": "const", "value": 0},
+                   "models": [{"name": "ds", "size": "tiny"}]}"#,
+                "burst sizes must be >= 1",
+            ),
+            (
+                r#"{"name": "m", "seed": 1, "clients": 1, "requests_per_client": 1,
+                   "arrival": {"kind": "poisson", "rate_rps": 100},
+                   "seq_fill": {"kind": "uniform", "lo": 0.5, "hi": 1.5},
+                   "models": [{"name": "ds", "size": "tiny"}]}"#,
+                "seq_fill must lie in (0, 1]",
+            ),
+            (
+                r#"{"name": "m", "seed": 1, "clients": 1, "requests_per_client": 1,
+                   "arrival": {"kind": "bursty", "on_us": 0, "off_us": 10, "rate_rps": 5},
+                   "models": [{"name": "ds", "size": "tiny"}]}"#,
+                "on_us must be positive",
+            ),
+            (
+                r#"{"name": "m", "seed": 1, "clients": 1, "requests_per_client": 1,
+                   "arrival": {"kind": "poisson", "rate_rps": 100},
+                   "burst": {"kind": "choice", "options": []},
+                   "models": [{"name": "ds", "size": "tiny"}]}"#,
+                "no options",
+            ),
+        ];
+        for (text, needle) in cases {
+            let err = WorkloadMix::parse(text).expect_err(needle).to_string();
+            assert!(err.contains(needle), "expected {needle:?} in {err:?}");
+        }
+    }
+
+    #[test]
+    fn dists_sample_within_bounds() {
+        let mut r = SplitMix64::new(5);
+        let u = Dist::Uniform { lo: 1.0, hi: 4.0 };
+        let c = Dist::Choice(vec![(2.0, 1.0), (8.0, 3.0)]);
+        for _ in 0..500 {
+            let v = u.sample(&mut r);
+            assert!((1.0..=4.0).contains(&v));
+            let w = c.sample(&mut r);
+            assert!(w == 2.0 || w == 8.0);
+        }
+        assert_eq!(Dist::Const(3.0).sample(&mut r), 3.0);
+        assert_eq!(u.min_value(), 1.0);
+        assert_eq!(u.max_value(), 4.0);
+        assert_eq!(c.min_value(), 2.0);
+        assert_eq!(c.max_value(), 8.0);
+    }
+
+    #[test]
+    fn sampler_is_deterministic_and_in_range() {
+        let space = MixSpace::default_space();
+        let a = space.sample_all(7, 5);
+        let b = space.sample_all(7, 5);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x, y);
+            assert_eq!(x.to_json(), y.to_json());
+        }
+        // a different seed changes at least one sampled mix
+        let c = space.sample_all(8, 5);
+        assert!(a.iter().zip(&c).any(|(x, y)| x != y));
+        for (i, m) in a.iter().enumerate() {
+            assert_eq!(m.name, format!("mix_{i:03}"));
+            assert!((space.clients.0..=space.clients.1).contains(&m.clients));
+            assert!(
+                (space.requests_per_client.0..=space.requests_per_client.1)
+                    .contains(&m.requests_per_client)
+            );
+            assert!(!m.models.is_empty() && m.models.len() <= space.zoo.len());
+            m.validate().unwrap();
+            // sampled mixes survive a serialize/parse roundtrip
+            assert_eq!(&WorkloadMix::parse(&m.to_json()).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn space_parse_overrides_and_rejects() {
+        let s = MixSpace::parse(
+            r#"{"clients": [2, 2], "arrivals": ["bursty"], "burst_max": 2,
+                "zoo": [{"name": "only", "model": "mlp", "size": "tiny"}]}"#,
+        )
+        .unwrap();
+        assert_eq!(s.clients, (2, 2));
+        assert_eq!(s.arrivals, vec!["bursty".to_string()]);
+        assert_eq!(s.zoo.len(), 1);
+        let m = s.sample(3, 0);
+        assert_eq!(m.clients, 2);
+        assert_eq!(m.arrival.kind(), "bursty");
+        assert_eq!(m.models[0].spec.name, "only");
+
+        assert!(MixSpace::parse("oops").is_err());
+        assert!(MixSpace::parse(r#"{"clients": [3, 1]}"#).is_err());
+        assert!(MixSpace::parse(r#"{"arrivals": ["warp"]}"#).is_err());
+        assert!(MixSpace::parse(r#"{"arrivals": []}"#).is_err());
+        assert!(MixSpace::parse(r#"{"seq_fill": [0.0, 1.0]}"#).is_err());
+        assert!(MixSpace::parse(r#"{"models_per_mix": [0, 1]}"#).is_err());
+    }
+}

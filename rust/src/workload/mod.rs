@@ -1,0 +1,37 @@
+//! Scenario-mix workload harness (DESIGN.md §11): declarative load
+//! sweeps for the serving engine.
+//!
+//! The paper's headline is that *which scenarios you run decides which
+//! method wins* (speedups swing 0.96×–6.7× with layer shapes); the
+//! serving analogue is that which **traffic** you replay decides how
+//! the engine's batching, routing and admission policies score.  This
+//! subsystem makes traffic a declarative artifact instead of test
+//! code, in four layers (the parsimon-eval idiom from ROADMAP.md):
+//!
+//! 1. **spec** ([`mix`]) — [`WorkloadMix`]: one JSON file describing a
+//!    scenario (arrival process, model composition, burst and
+//!    sequence-fill distributions, client count, seed, engine config),
+//!    plus [`MixSpace`]: per-axis ranges a sweep samples from.
+//! 2. **sampler** ([`MixSpace::sample`]) — seeded SplitMix64 sampling
+//!    of N concrete mixes from a space (`fullpack workload gen-mixes`);
+//!    same seed ⇒ byte-identical mix files.
+//! 3. **loadgen** ([`loadgen`]) — multi-client replay of a mix against
+//!    the **live** [`crate::coordinator::Engine`] (real threads, real
+//!    channels, real batcher) in open- and closed-loop modes, plus a
+//!    virtual-clock discrete-event mode that mirrors the batcher
+//!    policy deterministically for tests and cost-model sweeps.
+//! 4. **report** ([`report`]) — per-mix aggregation into exact
+//!    p50/p95/p99, throughput, shed/error counts and the dispatch mix,
+//!    reconciled against [`crate::coordinator::Metrics`] and emitted
+//!    as the `bench-serve/v1` schema (`BENCH_serve.json`).
+#![warn(missing_docs)]
+
+pub mod arrivals;
+pub mod loadgen;
+pub mod mix;
+pub mod report;
+
+pub use arrivals::{client_plan, PlannedBurst, PlannedRequest};
+pub use loadgen::{run_live, run_virtual, EngineSnapshot, Outcome, RequestRecord, RunTrace};
+pub use mix::{ArrivalProcess, Dist, MixModel, MixSpace, WorkloadMix};
+pub use report::{build_report, serve_records_json, write_serve_json, MixReport, ModelLine};

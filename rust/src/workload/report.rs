@@ -1,0 +1,392 @@
+//! Report layer: aggregate one run's [`RunTrace`] into a [`MixReport`]
+//! and render sweeps as the `bench-serve/v1` document
+//! (`BENCH_serve.json`), sibling of `bench-kernels/v1` and
+//! `bench-gemm/v2` (`util::bench`).
+//!
+//! Percentiles here are **exact** nearest-rank over the raw per-request
+//! latencies — the sort oracle — not the bucketed approximation the
+//! always-on [`Metrics`](crate::coordinator::Metrics) histogram gives;
+//! [`build_report`] cross-checks every count against the engine's own
+//! counters and refuses to produce a report that does not reconcile.
+
+use super::loadgen::{Outcome, RunTrace};
+use super::mix::WorkloadMix;
+use crate::util::bench::json_escape;
+use crate::util::error::{bail, Result};
+
+/// Exact nearest-rank percentile: the smallest sample such that at
+/// least `q·n` samples are ≤ it.  `samples` must be sorted ascending.
+fn percentile(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = ((sorted.len() as f64) * q).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// Per-model aggregation inside one [`MixReport`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelLine {
+    /// registered model name
+    pub name: String,
+    /// requests completed for this model
+    pub completed: u64,
+    /// requests errored for this model
+    pub errors: u64,
+    /// served through a multi-request batched dispatch
+    pub batched_requests: u64,
+    /// served individually
+    pub singleton_requests: u64,
+    /// multi-request dispatches
+    pub batched_dispatches: u64,
+    /// exact nearest-rank p50 over this model's completed requests (µs)
+    pub p50_us: u64,
+    /// exact nearest-rank p99 (µs)
+    pub p99_us: u64,
+    /// mean latency (µs)
+    pub mean_us: f64,
+}
+
+/// One mix's aggregated outcome — a row of `BENCH_serve.json` and of
+/// the `fig-serve` tables.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MixReport {
+    /// mix name
+    pub mix: String,
+    /// mix seed (replay handle)
+    pub seed: u64,
+    /// `"live"` or `"virtual"`
+    pub mode: String,
+    /// arrival-process description (`ArrivalProcess::describe`)
+    pub arrival: String,
+    /// load-generating clients
+    pub clients: usize,
+    /// requests issued (sheds included)
+    pub issued: u64,
+    /// requests completed
+    pub completed: u64,
+    /// requests errored
+    pub errors: u64,
+    /// requests shed by backpressure
+    pub shed: u64,
+    /// exact nearest-rank p50 latency (µs)
+    pub p50_us: u64,
+    /// exact nearest-rank p95 latency (µs)
+    pub p95_us: u64,
+    /// exact nearest-rank p99 latency (µs)
+    pub p99_us: u64,
+    /// worst completed-request latency (µs)
+    pub max_us: u64,
+    /// mean latency over completed requests (µs)
+    pub mean_us: f64,
+    /// completed requests per second of run wall time
+    pub throughput_rps: f64,
+    /// run duration (ms; virtual-clock ms in virtual mode)
+    pub wall_ms: f64,
+    /// requests served through multi-request batched dispatches
+    pub batched_requests: u64,
+    /// requests served individually
+    pub singleton_requests: u64,
+    /// multi-request batched dispatches
+    pub batched_dispatches: u64,
+    /// `(full, deadline, drained)` batch-flush counts
+    pub flushes: (u64, u64, u64),
+    /// per-model breakdown, in mix composition order
+    pub per_model: Vec<ModelLine>,
+}
+
+/// Aggregate a run into a report, reconciling every count against the
+/// engine's [`Metrics`](crate::coordinator::Metrics) snapshot — a
+/// mismatch means a request was dropped or double-counted somewhere,
+/// and is an error, not a report.
+pub fn build_report(mix: &WorkloadMix, trace: &RunTrace) -> Result<MixReport> {
+    let issued = trace.records.len() as u64;
+    if issued != mix.total_requests() as u64 {
+        bail!(
+            "trace holds {issued} records but the mix plans {} requests",
+            mix.total_requests()
+        );
+    }
+    let count = |o: Outcome| trace.records.iter().filter(|r| r.outcome == o).count() as u64;
+    let completed = count(Outcome::Completed);
+    let errors = count(Outcome::Error);
+    let shed = count(Outcome::Shed);
+    let s = &trace.snapshot;
+    if s.requests != issued {
+        bail!("engine accepted {} requests but the trace issued {issued}", s.requests);
+    }
+    if s.completed != completed {
+        bail!("engine completed {} but the trace records {completed}", s.completed);
+    }
+    if s.errors != errors {
+        bail!("engine errored {} but the trace records {errors}", s.errors);
+    }
+    if s.batched_requests + s.singleton_requests != completed + errors {
+        bail!(
+            "dispatch split {}+{} does not cover the {} worker-handled requests",
+            s.batched_requests,
+            s.singleton_requests,
+            completed + errors
+        );
+    }
+    // per-model reconciliation: the trace's per-model completion counts
+    // must match the engine's per-model counters exactly
+    let mut per_model = Vec::with_capacity(mix.models.len());
+    for (mi, m) in mix.models.iter().enumerate() {
+        let name = &m.spec.name;
+        let counters = s
+            .per_model
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, c)| *c)
+            .unwrap_or_default();
+        let mut lat: Vec<u64> = trace
+            .records
+            .iter()
+            .filter(|r| r.model == mi && r.outcome == Outcome::Completed)
+            .map(|r| r.latency_us)
+            .collect();
+        lat.sort_unstable();
+        if counters.completed != lat.len() as u64 {
+            bail!(
+                "model {name:?}: engine completed {} but the trace records {}",
+                counters.completed,
+                lat.len()
+            );
+        }
+        let model_errors = trace
+            .records
+            .iter()
+            .filter(|r| r.model == mi && r.outcome == Outcome::Error)
+            .count() as u64;
+        if counters.errors != model_errors {
+            bail!(
+                "model {name:?}: engine errored {} but the trace records {model_errors}",
+                counters.errors
+            );
+        }
+        let mean_us = if lat.is_empty() {
+            0.0
+        } else {
+            lat.iter().sum::<u64>() as f64 / lat.len() as f64
+        };
+        per_model.push(ModelLine {
+            name: name.clone(),
+            completed: counters.completed,
+            errors: counters.errors,
+            batched_requests: counters.batched_requests,
+            singleton_requests: counters.singleton_requests,
+            batched_dispatches: counters.batched_dispatches,
+            p50_us: percentile(&lat, 0.50),
+            p99_us: percentile(&lat, 0.99),
+            mean_us,
+        });
+    }
+    let mut lat: Vec<u64> = trace
+        .records
+        .iter()
+        .filter(|r| r.outcome == Outcome::Completed)
+        .map(|r| r.latency_us)
+        .collect();
+    lat.sort_unstable();
+    let mean_us = if lat.is_empty() {
+        0.0
+    } else {
+        lat.iter().sum::<u64>() as f64 / lat.len() as f64
+    };
+    let wall_s = trace.wall_ns as f64 / 1e9;
+    Ok(MixReport {
+        mix: mix.name.clone(),
+        seed: mix.seed,
+        mode: trace.mode.to_string(),
+        arrival: mix.arrival.describe(),
+        clients: mix.clients,
+        issued,
+        completed,
+        errors,
+        shed,
+        p50_us: percentile(&lat, 0.50),
+        p95_us: percentile(&lat, 0.95),
+        p99_us: percentile(&lat, 0.99),
+        max_us: lat.last().copied().unwrap_or(0),
+        mean_us,
+        throughput_rps: if wall_s > 0.0 { completed as f64 / wall_s } else { 0.0 },
+        wall_ms: trace.wall_ns as f64 / 1e6,
+        batched_requests: s.batched_requests,
+        singleton_requests: s.singleton_requests,
+        batched_dispatches: s.batched_dispatches,
+        flushes: s.flushes,
+        per_model,
+    })
+}
+
+/// Render the `BENCH_serve.json` document (schema `bench-serve/v1`).
+/// Provenance follows the repo convention (`util::bench`): `source`
+/// says how the numbers were obtained (`"live"` from a real engine run,
+/// `"virtual-costmodel"` from the virtual clock), `host` and `note` are
+/// free-form.
+pub fn serve_records_json(
+    source: &str,
+    host: &str,
+    note: &str,
+    reports: &[MixReport],
+) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"schema\": \"bench-serve/v1\",\n");
+    out.push_str(&format!("  \"source\": \"{}\",\n", json_escape(source)));
+    out.push_str(&format!("  \"host\": \"{}\",\n", json_escape(host)));
+    out.push_str(&format!("  \"note\": \"{}\",\n", json_escape(note)));
+    out.push_str("  \"records\": [\n");
+    for (i, r) in reports.iter().enumerate() {
+        let models: Vec<String> = r
+            .per_model
+            .iter()
+            .map(|m| {
+                format!(
+                    "{{\"name\": \"{}\", \"completed\": {}, \"errors\": {}, \
+                     \"batched_requests\": {}, \"singleton_requests\": {}, \
+                     \"batched_dispatches\": {}, \"p50_us\": {}, \"p99_us\": {}, \
+                     \"mean_us\": {:.1}}}",
+                    json_escape(&m.name),
+                    m.completed,
+                    m.errors,
+                    m.batched_requests,
+                    m.singleton_requests,
+                    m.batched_dispatches,
+                    m.p50_us,
+                    m.p99_us,
+                    m.mean_us,
+                )
+            })
+            .collect();
+        out.push_str(&format!(
+            "    {{\"mix\": \"{}\", \"seed\": {}, \"mode\": \"{}\", \"arrival\": \"{}\", \
+             \"clients\": {}, \"issued\": {}, \"completed\": {}, \"errors\": {}, \
+             \"shed\": {}, \"p50_us\": {}, \"p95_us\": {}, \"p99_us\": {}, \"max_us\": {}, \
+             \"mean_us\": {:.1}, \"throughput_rps\": {:.1}, \"wall_ms\": {:.3}, \
+             \"batched_requests\": {}, \"singleton_requests\": {}, \"batched_dispatches\": {}, \
+             \"flushes_full\": {}, \"flushes_deadline\": {}, \"flushes_drained\": {}, \
+             \"models\": [{}]}}{}\n",
+            json_escape(&r.mix),
+            r.seed,
+            json_escape(&r.mode),
+            json_escape(&r.arrival),
+            r.clients,
+            r.issued,
+            r.completed,
+            r.errors,
+            r.shed,
+            r.p50_us,
+            r.p95_us,
+            r.p99_us,
+            r.max_us,
+            r.mean_us,
+            r.throughput_rps,
+            r.wall_ms,
+            r.batched_requests,
+            r.singleton_requests,
+            r.batched_dispatches,
+            r.flushes.0,
+            r.flushes.1,
+            r.flushes.2,
+            models.join(", "),
+            if i + 1 < reports.len() { "," } else { "" },
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// Write [`serve_records_json`] to `path` (repo convention:
+/// `BENCH_serve.json` at the repository root).
+pub fn write_serve_json(
+    path: &str,
+    source: &str,
+    host: &str,
+    note: &str,
+    reports: &[MixReport],
+) -> std::io::Result<()> {
+    std::fs::write(path, serve_records_json(source, host, note, reports))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+    use crate::workload::loadgen::run_virtual;
+    use crate::workload::mix::MixSpace;
+
+    #[test]
+    fn percentile_matches_sort_oracle_semantics() {
+        // nearest-rank over a known set: p50 of 1..=10 is the 5th value
+        let v: Vec<u64> = (1..=10).collect();
+        assert_eq!(percentile(&v, 0.50), 5);
+        assert_eq!(percentile(&v, 0.95), 10);
+        assert_eq!(percentile(&v, 0.99), 10);
+        assert_eq!(percentile(&v, 1.0), 10);
+        assert_eq!(percentile(&[], 0.5), 0);
+        assert_eq!(percentile(&[7], 0.5), 7);
+        // 100 distinct values: pXX picks index ceil(q*100)-1
+        let v: Vec<u64> = (0..100).map(|i| i * 10).collect();
+        assert_eq!(percentile(&v, 0.50), 490);
+        assert_eq!(percentile(&v, 0.95), 940);
+        assert_eq!(percentile(&v, 0.99), 980);
+    }
+
+    #[test]
+    fn report_reconciles_and_serializes() {
+        let mut space = MixSpace::default_space();
+        space.arrivals = vec!["bursty".to_string()];
+        space.clients = (2, 2);
+        space.requests_per_client = (8, 8);
+        let mix = space.sample(21, 0);
+        let trace = run_virtual(&mix).unwrap();
+        let report = build_report(&mix, &trace).unwrap();
+        assert_eq!(report.issued, mix.total_requests() as u64);
+        assert_eq!(report.completed + report.errors + report.shed, report.issued);
+        assert_eq!(report.mode, "virtual");
+        assert!(report.p50_us <= report.p95_us && report.p95_us <= report.p99_us);
+        assert!(report.p99_us <= report.max_us);
+        assert_eq!(report.per_model.len(), mix.models.len());
+        let per_model_total: u64 = report.per_model.iter().map(|m| m.completed).sum();
+        assert_eq!(per_model_total, report.completed);
+        // the document parses back with the declared schema
+        let doc = serve_records_json("virtual-costmodel", "test", "unit test", &[report]);
+        let j = Json::parse(&doc).unwrap();
+        assert_eq!(j.get("schema").and_then(Json::as_str), Some("bench-serve/v1"));
+        let recs = j.get("records").and_then(Json::as_arr).unwrap();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].get("mix").and_then(Json::as_str), Some("mix_000"));
+        assert!(recs[0].get("p99_us").and_then(Json::as_f64).is_some());
+        assert_eq!(
+            recs[0].get("models").and_then(Json::as_arr).unwrap().len(),
+            mix.models.len()
+        );
+    }
+
+    #[test]
+    fn report_rejects_tampered_traces() {
+        let mut space = MixSpace::default_space();
+        space.clients = (1, 1);
+        space.requests_per_client = (4, 4);
+        let mix = space.sample(3, 0);
+        let good = run_virtual(&mix).unwrap();
+        // dropping a record breaks the issued-count reconciliation
+        let mut t = good.clone();
+        t.records.pop();
+        assert!(build_report(&mix, &t).is_err());
+        // inflating an engine counter breaks the completed reconciliation
+        let mut t = good.clone();
+        t.snapshot.completed += 1;
+        assert!(build_report(&mix, &t).is_err());
+        // flipping a record's model breaks the per-model reconciliation
+        if mix.models.len() > 1 {
+            let mut t = good.clone();
+            t.records[0].model = (t.records[0].model + 1) % mix.models.len();
+            assert!(build_report(&mix, &t).is_err());
+        }
+        // the untouched trace still reconciles
+        assert!(build_report(&mix, &good).is_ok());
+    }
+}

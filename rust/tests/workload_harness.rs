@@ -1,0 +1,236 @@
+//! Workload-harness integration (DESIGN.md §11): the spec → sampler →
+//! loadgen → report pipeline end-to-end.
+//!
+//! - determinism: same seed ⇒ byte-identical sampled mix files and
+//!   identical virtual traces;
+//! - live replay: a bursty mixed-model mix against the real engine
+//!   answers every request exactly once, with per-model dispatch sums
+//!   reconciling against the engine's own `Metrics`;
+//! - report: exact percentiles match a brute-force sort oracle;
+//! - spec: malformed mix JSON is rejected with typed errors.
+
+use fullpack::coordinator::{BatcherConfig, EngineConfig, ModelSpec, RouterConfig};
+use fullpack::models::ModelSize;
+use fullpack::pack::Variant;
+use fullpack::workload::{
+    build_report, run_live, run_virtual, ArrivalProcess, Dist, MixModel, MixSpace, Outcome,
+    WorkloadMix,
+};
+
+/// A small sampling space so virtual runs stay fast.
+fn small_space() -> MixSpace {
+    let mut space = MixSpace::default_space();
+    space.clients = (1, 2);
+    space.requests_per_client = (4, 6);
+    space
+}
+
+/// A hand-built bursty two-model mix for the live-engine test.
+fn bursty_two_model_mix() -> WorkloadMix {
+    let spec = |name: &str, model: &str, variant: &str| ModelSpec {
+        name: name.to_string(),
+        model: model.to_string(),
+        variant: Variant::parse(variant).unwrap(),
+        size: ModelSize::Tiny,
+        seed: 7,
+    };
+    WorkloadMix {
+        name: "bursty-two-model".to_string(),
+        seed: 42,
+        clients: 2,
+        requests_per_client: 8,
+        arrival: ArrivalProcess::BurstyOnOff { on_us: 2_000, off_us: 1_000, rate_rps: 2_000.0 },
+        burst: Dist::Uniform { lo: 1.0, hi: 3.0 },
+        seq_fill: Dist::Uniform { lo: 0.5, hi: 1.0 },
+        models: vec![
+            MixModel { spec: spec("ds", "deepspeech", "w4a8"), weight: 2.0 },
+            MixModel { spec: spec("mlp", "mlp", "w2a8"), weight: 1.0 },
+        ],
+        engine: EngineConfig {
+            workers: 2,
+            batcher: BatcherConfig {
+                max_batch: 4,
+                max_wait: std::time::Duration::from_millis(1),
+                max_queue: 256,
+            },
+            router: RouterConfig::default(),
+        },
+    }
+}
+
+#[test]
+fn same_seed_yields_byte_identical_mixes_and_traces() {
+    let space = small_space();
+    let a = space.sample_all(7, 4);
+    let b = space.sample_all(7, 4);
+    assert_eq!(a.len(), 4);
+    for (ma, mb) in a.iter().zip(&b) {
+        assert_eq!(ma, mb);
+        assert_eq!(ma.to_json(), mb.to_json(), "sampled mix files must be byte-identical");
+        let ta = run_virtual(ma).unwrap();
+        let tb = run_virtual(mb).unwrap();
+        assert_eq!(ta, tb, "{}: virtual trace must be reproducible", ma.name);
+        assert_eq!(ta.records.len(), ma.total_requests());
+    }
+    // a different seed changes the sample
+    let c = space.sample_all(8, 4);
+    assert!(a.iter().zip(&c).any(|(x, y)| x != y), "seed must steer the sampler");
+}
+
+#[test]
+fn sampled_mixes_roundtrip_through_files() {
+    let dir = std::env::temp_dir().join("fullpack_workload_roundtrip");
+    std::fs::create_dir_all(&dir).unwrap();
+    for mix in small_space().sample_all(11, 3) {
+        let path = dir.join(format!("{}.json", mix.name));
+        let path = path.to_str().unwrap();
+        mix.save(path).unwrap();
+        let back = WorkloadMix::load(path).unwrap();
+        assert_eq!(mix, back, "save -> load must be the identity");
+        // serializing the reloaded mix reproduces the file bytes
+        assert_eq!(std::fs::read_to_string(path).unwrap(), back.to_json());
+    }
+}
+
+#[test]
+fn live_bursty_mixed_mix_replies_exactly_once_and_reconciles() {
+    let mix = bursty_two_model_mix();
+    // verify=true: every completed reply is checked bit-for-bit against
+    // an unbatched reference forward of the same frames
+    let trace = run_live(&mix, true).unwrap();
+    let total = mix.total_requests();
+    assert_eq!(trace.records.len(), total, "every planned request resolved");
+
+    // exactly once: each (client, index) slot appears once, in order
+    for (i, r) in trace.records.iter().enumerate() {
+        assert_eq!(r.client * mix.requests_per_client + r.index, i);
+    }
+
+    // trace tallies reconcile with the engine's own counters
+    let s = &trace.snapshot;
+    let count = |o: Outcome| trace.records.iter().filter(|r| r.outcome == o).count() as u64;
+    assert_eq!(s.requests, total as u64, "submit counts sheds too");
+    assert_eq!(s.completed, count(Outcome::Completed));
+    assert_eq!(s.errors, count(Outcome::Error));
+    assert_eq!(count(Outcome::Error), 0, "healthy mix must not error");
+    assert_eq!(
+        s.batched_requests + s.singleton_requests,
+        s.completed + s.errors,
+        "dispatch split covers everything a worker served"
+    );
+
+    // per-model dispatch sums match the per-model record tallies
+    for (mi, m) in mix.models.iter().enumerate() {
+        let served = trace
+            .records
+            .iter()
+            .filter(|r| r.model == mi && r.outcome == Outcome::Completed)
+            .count() as u64;
+        let counters = s
+            .per_model
+            .iter()
+            .find(|(n, _)| n == &m.spec.name)
+            .map(|(_, c)| *c)
+            .unwrap_or_default();
+        assert_eq!(counters.completed, served, "model {:?}", m.spec.name);
+        assert_eq!(
+            counters.batched_requests + counters.singleton_requests,
+            served,
+            "model {:?} dispatch split",
+            m.spec.name
+        );
+    }
+
+    // the report layer accepts the trace (it re-runs all of the above
+    // reconciliation and fails on any mismatch)
+    let report = build_report(&mix, &trace).unwrap();
+    assert_eq!(report.issued, total as u64);
+    assert_eq!(report.mode, "live");
+    assert_eq!(report.per_model.len(), 2);
+}
+
+#[test]
+fn report_percentiles_match_sort_oracle() {
+    let mix = small_space().sample(19, 0);
+    let trace = run_virtual(&mix).unwrap();
+    let report = build_report(&mix, &trace).unwrap();
+
+    // brute-force oracle: sort completed latencies, take nearest-rank
+    let mut lat: Vec<u64> = trace
+        .records
+        .iter()
+        .filter(|r| r.outcome == Outcome::Completed)
+        .map(|r| r.latency_us)
+        .collect();
+    lat.sort_unstable();
+    assert!(!lat.is_empty());
+    let oracle = |q: f64| {
+        let rank = ((lat.len() as f64 * q).ceil() as usize).clamp(1, lat.len());
+        lat[rank - 1]
+    };
+    assert_eq!(report.p50_us, oracle(0.50));
+    assert_eq!(report.p95_us, oracle(0.95));
+    assert_eq!(report.p99_us, oracle(0.99));
+    assert_eq!(report.max_us, *lat.last().unwrap());
+    let mean = lat.iter().sum::<u64>() as f64 / lat.len() as f64;
+    assert!((report.mean_us - mean).abs() < 1e-9);
+
+    // per-model lines use the same rule over their own subsets
+    for (mi, line) in report.per_model.iter().enumerate() {
+        let mut sub: Vec<u64> = trace
+            .records
+            .iter()
+            .filter(|r| r.model == mi && r.outcome == Outcome::Completed)
+            .map(|r| r.latency_us)
+            .collect();
+        sub.sort_unstable();
+        if sub.is_empty() {
+            assert_eq!(line.p50_us, 0);
+            continue;
+        }
+        let rank = |q: f64| ((sub.len() as f64 * q).ceil() as usize).clamp(1, sub.len());
+        assert_eq!(line.p50_us, sub[rank(0.50) - 1], "{}", line.name);
+        assert_eq!(line.p99_us, sub[rank(0.99) - 1], "{}", line.name);
+    }
+}
+
+#[test]
+fn malformed_mix_files_rejected_with_typed_errors() {
+    let dir = std::env::temp_dir().join("fullpack_workload_malformed");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cases: &[(&str, &str, &str)] = &[
+        ("not_json", "{", "mix JSON"),
+        ("no_seed", r#"{"name": "m", "clients": 1}"#, "missing seed"),
+        (
+            "bad_arrival",
+            r#"{"name": "m", "seed": 1, "clients": 1, "requests_per_client": 1,
+               "arrival": {"kind": "fractal"},
+               "models": [{"name": "ds", "model": "deepspeech", "size": "tiny"}]}"#,
+            "unknown",
+        ),
+        (
+            "zero_clients",
+            r#"{"name": "m", "seed": 1, "clients": 0, "requests_per_client": 1,
+               "arrival": {"kind": "poisson", "rate_rps": 10},
+               "models": [{"name": "ds", "model": "deepspeech", "size": "tiny"}]}"#,
+            "clients must be >= 1",
+        ),
+        (
+            "fill_over_one",
+            r#"{"name": "m", "seed": 1, "clients": 1, "requests_per_client": 1,
+               "arrival": {"kind": "poisson", "rate_rps": 10},
+               "seq_fill": {"kind": "const", "value": 1.5},
+               "models": [{"name": "ds", "model": "deepspeech", "size": "tiny"}]}"#,
+            "seq_fill must lie in (0, 1]",
+        ),
+    ];
+    for (stem, text, want) in cases {
+        let path = dir.join(format!("{stem}.json"));
+        std::fs::write(&path, text).unwrap();
+        let err = WorkloadMix::load(path.to_str().unwrap()).unwrap_err().to_string();
+        assert!(err.contains(want), "{stem}: error {err:?} should mention {want:?}");
+    }
+    // a missing file is also a typed error, not a panic
+    let err = WorkloadMix::load("/nonexistent/mix.json").unwrap_err().to_string();
+    assert!(err.contains("reading mix"), "{err}");
+}
