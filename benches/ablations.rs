@@ -5,8 +5,8 @@
 //!    the packing *co-design* is what pays, not density alone.
 //! 2. **Batched GEMM extension** — FullPack's one-extraction-per-block
 //!    GEMM vs repeated GEMV at the same bit-width.
-//! 3. **Batcher policy** — serving-engine throughput with batching
-//!    enabled vs per-request dispatch (max_batch = 1).
+//! 3. **Scheduler policy** — serving-engine throughput with admission
+//!    batching enabled vs per-request dispatch (max_batch = 1).
 //! 4. **Router policy** — FullPack disabled (everything on Ruy) vs the
 //!    paper's §4.6 split.
 //!
@@ -15,7 +15,7 @@
 //!
 //! Run: `cargo bench --bench ablations` (QUICK=1 shortens sampling)
 
-use fullpack::coordinator::{BatcherConfig, Engine, EngineConfig, RouterConfig};
+use fullpack::coordinator::{Engine, EngineConfig, RouterConfig, SchedulerConfig};
 use fullpack::kernels::testutil::rngvals;
 use fullpack::kernels::{LayerShape, PlanBuilder, SelectPolicy};
 use fullpack::models::{DeepSpeech, DeepSpeechConfig};
@@ -110,20 +110,20 @@ fn main() {
     let frames: Vec<f32> =
         (0..cfg.time_steps * cfg.n_input).map(|i| (i as f32 * 0.01).sin()).collect();
     let mut t = Table::new(vec!["policy", "mean us", "p95", "rps"]);
-    for (name, batcher, router) in [
-        ("batched + fullpack", BatcherConfig::default(), RouterConfig::default()),
+    for (name, sched, router) in [
+        ("batched + fullpack", SchedulerConfig::default(), RouterConfig::default()),
         (
             "no batching",
-            BatcherConfig { max_batch: 1, ..Default::default() },
+            SchedulerConfig { max_batch: 1, ..Default::default() },
             RouterConfig::default(),
         ),
         (
             "fullpack disabled",
-            BatcherConfig::default(),
+            SchedulerConfig::default(),
             RouterConfig { disable_fullpack: true, ..Default::default() },
         ),
     ] {
-        let engine = Engine::new(EngineConfig { workers: 2, batcher, router });
+        let engine = Engine::new(EngineConfig { workers: 2, sched, router });
         engine.register_model(
             "ds",
             DeepSpeech::new(cfg, Variant::parse("w4a8").unwrap(), 7),

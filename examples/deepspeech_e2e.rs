@@ -10,7 +10,7 @@
 //! cargo run --release --example deepspeech_e2e -- --tiny  # CI-sized
 //! ```
 
-use fullpack::coordinator::{BatcherConfig, Engine, EngineConfig, RouterConfig};
+use fullpack::coordinator::{Engine, EngineConfig, RouterConfig, SchedulerConfig};
 use fullpack::models::{DeepSpeech, DeepSpeechConfig};
 use fullpack::pack::Variant;
 use fullpack::util::error::{anyhow, Result};
@@ -35,7 +35,7 @@ fn main() -> Result<()> {
         let variant = Variant::parse(v)?;
         let engine = Engine::new(EngineConfig {
             workers: 2,
-            batcher: BatcherConfig::default(),
+            sched: SchedulerConfig::default(),
             router: RouterConfig::default(),
         });
         engine.register_model("deepspeech", DeepSpeech::new(cfg, variant, 7));

@@ -8,7 +8,7 @@
 //! cargo run --release --example model_zoo -- --tiny  # CI-sized
 //! ```
 
-use fullpack::coordinator::{BatcherConfig, Engine, EngineConfig, RouterConfig};
+use fullpack::coordinator::{Engine, EngineConfig, RouterConfig, SchedulerConfig};
 use fullpack::models::{CompiledModel, Model, ModelRegistry, ModelSize};
 use fullpack::pack::Variant;
 use fullpack::util::error::{anyhow, Result};
@@ -21,7 +21,7 @@ fn main() -> Result<()> {
 
     let engine = Engine::new(EngineConfig {
         workers: 2,
-        batcher: BatcherConfig::default(),
+        sched: SchedulerConfig::default(),
         router: RouterConfig::default(),
     });
     let zoo = ModelRegistry::global();

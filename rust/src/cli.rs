@@ -7,6 +7,7 @@
 //! fullpack bench <fig11|deepspeech> [--variant V] [--kernel NAME] [--ms N]
 //! fullpack serve [--model ZOO] [--model-manifest F.json] [--variant V] [--kernel NAME]
 //!                [--requests N] [--workers N] [--tiny]
+//!                [--slo-ms N] [--max-batch N] [--max-queue N] [--fixed-deadline]
 //! fullpack workload gen-mixes [--space F.json] [--seed N] [--count N] [--out DIR]
 //! fullpack workload run --mix F.json [--virtual] [--verify] [--out BENCH.json]
 //! fullpack workload sweep [--space F.json] [--seed N] [--count N] [--live] [--out F.json]
@@ -29,8 +30,17 @@ pub struct Args {
 
 impl Args {
     /// Flags that never take a value.
-    const FLAGS: [&'static str; 8] =
-        ["quick", "show-config", "breakdown", "tiny", "help", "virtual", "live", "verify"];
+    const FLAGS: [&'static str; 9] = [
+        "quick",
+        "show-config",
+        "breakdown",
+        "tiny",
+        "help",
+        "virtual",
+        "live",
+        "verify",
+        "fixed-deadline",
+    ];
 
     pub fn parse(argv: impl IntoIterator<Item = String>) -> Result<Args, String> {
         let mut a = Args::default();
@@ -93,9 +103,13 @@ USAGE:
                                                measured end-to-end DeepSpeech
   fullpack serve [--config F.json] [--model ZOO] [--model-manifest F.json]
                  [--variant V] [--kernel NAME] [--requests N] [--workers N] [--tiny]
+                 [--slo-ms N] [--max-batch N] [--max-queue N] [--fixed-deadline]
                                                serving-engine demo (latency/throughput;
                                                --model picks a zoo graph, --model-manifest
-                                               a runtime JSON layer graph)
+                                               a runtime JSON layer graph; --slo-ms /
+                                               --max-batch / --max-queue tune admission,
+                                               --fixed-deadline disables the cost-model
+                                               scheduler for the legacy batching policy)
   fullpack workload gen-mixes [--space F.json] [--seed N] [--count N] [--out DIR]
                                                sample N concrete workload mixes from
                                                a mix space (seeded: same seed ⇒
@@ -108,7 +122,7 @@ USAGE:
   fullpack workload sweep [--space F.json] [--seed N] [--count N] [--live]
                           [--out BENCH_serve.json]
                                                sample + run a mix sweep and emit the
-                                               bench-serve/v1 document + fig-serve
+                                               bench-serve/v2 document + fig-serve
                                                tables (default mode: virtual)
   fullpack models list                         print the model-zoo registry table
   fullpack models show <zoo-name> [--variant V] [--size full|tiny]

@@ -1,7 +1,7 @@
 //! Engine configuration files (JSON) — the deployment-facing config
-//! system: workers, batching policy, routing policy and the model
-//! roster are declared in one file and loaded by `fullpack serve
-//! --config engine.json`.
+//! system: workers, admission/scheduling policy, routing policy and
+//! the model roster are declared in one file and loaded by `fullpack
+//! serve --config engine.json`.
 //!
 //! Roster entries select model *graphs* by zoo registry name
 //! (`models::ModelRegistry` — DESIGN.md §10), so one config can serve a
@@ -10,7 +10,8 @@
 //! ```json
 //! {
 //!   "workers": 4,
-//!   "batcher": { "max_batch": 16, "max_wait_ms": 2, "max_queue": 1024 },
+//!   "scheduler": { "max_batch": 16, "max_wait_ms": 2, "max_queue": 1024,
+//!                  "slo_ms": 50, "cost_flush": true, "shed_over_budget": true },
 //!   "router":  { "gemv_max_batch": 1, "disable_fullpack": false, "prefer_gemm": false },
 //!   "models": [
 //!     { "name": "deepspeech", "model": "deepspeech", "variant": "w4a8", "size": "full", "seed": 7 },
@@ -18,8 +19,12 @@
 //!   ]
 //! }
 //! ```
+//!
+//! The pre-scheduler `"batcher"` key (`max_batch`/`max_wait_ms`/
+//! `max_queue` only) is still read as a fallback so existing config
+//! and mix files keep loading.
 
-use super::{BatcherConfig, EngineConfig, RouterConfig};
+use super::{EngineConfig, RouterConfig, SchedulerConfig};
 use crate::models::ModelSize;
 use crate::pack::Variant;
 use crate::util::error::{anyhow, Result};
@@ -51,27 +56,39 @@ pub struct FileConfig {
     pub models: Vec<ModelSpec>,
 }
 
-/// Engine knobs (`workers`/`batcher`/`router` keys) from a parsed JSON
-/// node, falling back to [`EngineConfig::default`] per field.  Shared
-/// by [`FileConfig::parse`] and the workload-mix parser
+/// Engine knobs (`workers`/`scheduler`/`router` keys, with the legacy
+/// `batcher` key accepted for the scheduler section) from a parsed
+/// JSON node, falling back to [`EngineConfig::default`] per field.
+/// Shared by [`FileConfig::parse`] and the workload-mix parser
 /// (`workload::mix`), so a mix file embeds the exact same engine
 /// schema a `serve --config` file uses.
 pub fn engine_from_json(j: &Json) -> EngineConfig {
     let usize_at = |node: &Json, key: &str, default: usize| -> usize {
         node.get(key).and_then(Json::as_usize).unwrap_or(default)
     };
+    let bool_at = |node: &Json, key: &str, default: bool| -> bool {
+        match node.get(key) {
+            Some(Json::Bool(b)) => *b,
+            _ => default,
+        }
+    };
     let defaults = EngineConfig::default();
     let mut engine = EngineConfig {
         workers: usize_at(j, "workers", defaults.workers),
         ..defaults
     };
-    if let Some(b) = j.get("batcher") {
-        engine.batcher = BatcherConfig {
-            max_batch: usize_at(b, "max_batch", defaults.batcher.max_batch),
+    if let Some(b) = j.get("scheduler").or_else(|| j.get("batcher")) {
+        engine.sched = SchedulerConfig {
+            max_batch: usize_at(b, "max_batch", defaults.sched.max_batch),
             max_wait: Duration::from_millis(
-                usize_at(b, "max_wait_ms", defaults.batcher.max_wait.as_millis() as usize) as u64,
+                usize_at(b, "max_wait_ms", defaults.sched.max_wait.as_millis() as usize) as u64,
             ),
-            max_queue: usize_at(b, "max_queue", defaults.batcher.max_queue),
+            max_queue: usize_at(b, "max_queue", defaults.sched.max_queue),
+            slo: Duration::from_millis(
+                usize_at(b, "slo_ms", defaults.sched.slo.as_millis() as usize) as u64,
+            ),
+            cost_flush: bool_at(b, "cost_flush", defaults.sched.cost_flush),
+            shed_over_budget: bool_at(b, "shed_over_budget", defaults.sched.shed_over_budget),
         };
     }
     if let Some(r) = j.get("router") {
@@ -90,12 +107,16 @@ pub fn engine_from_json(j: &Json) -> EngineConfig {
 /// output for seeded mix files).
 pub fn engine_to_json(e: &EngineConfig) -> String {
     format!(
-        "{{\"workers\": {}, \"batcher\": {{\"max_batch\": {}, \"max_wait_ms\": {}, \"max_queue\": {}}}, \
+        "{{\"workers\": {}, \"scheduler\": {{\"max_batch\": {}, \"max_wait_ms\": {}, \"max_queue\": {}, \
+         \"slo_ms\": {}, \"cost_flush\": {}, \"shed_over_budget\": {}}}, \
          \"router\": {{\"gemv_max_batch\": {}, \"disable_fullpack\": {}, \"prefer_swar\": {}, \"prefer_gemm\": {}}}}}",
         e.workers,
-        e.batcher.max_batch,
-        e.batcher.max_wait.as_millis(),
-        e.batcher.max_queue,
+        e.sched.max_batch,
+        e.sched.max_wait.as_millis(),
+        e.sched.max_queue,
+        e.sched.slo.as_millis(),
+        e.sched.cost_flush,
+        e.sched.shed_over_budget,
         e.router.gemv_max_batch,
         e.router.disable_fullpack,
         e.router.prefer_swar,
@@ -166,7 +187,8 @@ mod tests {
         let cfg = FileConfig::parse(
             r#"{
               "workers": 4,
-              "batcher": {"max_batch": 8, "max_wait_ms": 5, "max_queue": 32},
+              "scheduler": {"max_batch": 8, "max_wait_ms": 5, "max_queue": 32,
+                            "slo_ms": 20, "cost_flush": false, "shed_over_budget": false},
               "router": {"gemv_max_batch": 2, "disable_fullpack": true, "prefer_swar": true,
                          "prefer_gemm": true},
               "models": [
@@ -178,8 +200,11 @@ mod tests {
         )
         .unwrap();
         assert_eq!(cfg.engine.workers, 4);
-        assert_eq!(cfg.engine.batcher.max_batch, 8);
-        assert_eq!(cfg.engine.batcher.max_wait, Duration::from_millis(5));
+        assert_eq!(cfg.engine.sched.max_batch, 8);
+        assert_eq!(cfg.engine.sched.max_wait, Duration::from_millis(5));
+        assert_eq!(cfg.engine.sched.slo, Duration::from_millis(20));
+        assert!(!cfg.engine.sched.cost_flush);
+        assert!(!cfg.engine.sched.shed_over_budget);
         assert_eq!(cfg.engine.router.gemv_max_batch, 2);
         assert!(cfg.engine.router.disable_fullpack);
         assert!(cfg.engine.router.prefer_swar);
@@ -200,7 +225,36 @@ mod tests {
     fn defaults_when_sections_missing() {
         let cfg = FileConfig::parse("{}").unwrap();
         assert_eq!(cfg.engine.workers, EngineConfig::default().workers);
+        assert_eq!(cfg.engine.sched, SchedulerConfig::default());
         assert!(cfg.models.is_empty());
+    }
+
+    #[test]
+    fn legacy_batcher_key_still_parses() {
+        // pre-scheduler config files name the section "batcher" and
+        // carry no SLO knobs: the three shared fields are honored and
+        // the new policy knobs take their defaults
+        let cfg = FileConfig::parse(
+            r#"{"workers": 2, "batcher": {"max_batch": 4, "max_wait_ms": 1, "max_queue": 64}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.engine.sched.max_batch, 4);
+        assert_eq!(cfg.engine.sched.max_wait, Duration::from_millis(1));
+        assert_eq!(cfg.engine.sched.max_queue, 64);
+        assert_eq!(cfg.engine.sched.slo, SchedulerConfig::default().slo);
+        assert!(cfg.engine.sched.cost_flush);
+    }
+
+    #[test]
+    fn engine_json_roundtrips_through_parser() {
+        let mut e = EngineConfig::default();
+        e.workers = 3;
+        e.sched.max_batch = 6;
+        e.sched.slo = Duration::from_millis(9);
+        e.sched.shed_over_budget = false;
+        let text = engine_to_json(&e);
+        let back = engine_from_json(&Json::parse(&text).unwrap());
+        assert_eq!(back, e, "engine_to_json -> engine_from_json is the identity");
     }
 
     #[test]

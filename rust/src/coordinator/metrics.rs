@@ -1,13 +1,19 @@
 //! Serving metrics: engine-wide counters, a fixed-bucket latency
 //! histogram, and per-model dispatch/latency counters (the engine
 //! serves many registered models; capacity planning needs the split).
+//! The admission scheduler (DESIGN.md §12) surfaces its policy here
+//! too: flush reasons (including cost-model `Budget` seals), typed
+//! shed counts, queue-occupancy high-water marks, dispatch batch
+//! sizes, and EDF inversions/steals from the sharded worker pool — all
+//! of it reconciled exactly by `workload::report::build_report`.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 use std::sync::Mutex;
 use std::time::Instant;
 
-use super::batcher::FlushReason;
+use super::request::ShedReason;
+use super::scheduler::FlushReason;
 
 /// Log-spaced latency buckets in microseconds (upper bounds).
 pub const BUCKETS_US: [u64; 17] = [
@@ -117,10 +123,28 @@ pub struct Metrics {
     latency_sum_us: AtomicU64,
     /// batch flushes whose trigger was the batch filling up
     pub flushes_full: AtomicU64,
+    /// batch flushes sealed by the cost model's marginal-latency rule
+    /// (one more column would no longer fit the front request's
+    /// remaining SLO budget)
+    pub flushes_budget: AtomicU64,
     /// batch flushes whose trigger was the max-wait deadline
     pub flushes_deadline: AtomicU64,
     /// forced early flushes (shutdown drain)
     pub flushes_drained: AtomicU64,
+    /// requests shed because a model queue was at `max_queue`
+    pub sheds_queue_full: AtomicU64,
+    /// requests shed because the modeled backlog exceeded the SLO
+    pub sheds_over_budget: AtomicU64,
+    /// shard-affinity dispatches that overtook a strictly
+    /// earlier-deadline sealed batch waiting on another queue
+    pub edf_inversions: AtomicU64,
+    /// dispatches a worker took from outside its home shard (its own
+    /// shard had nothing sealed)
+    pub stolen_dispatches: AtomicU64,
+    /// high-water mark of per-model queue depth observed at admission
+    pub max_queue_depth: AtomicU64,
+    /// dispatch batch-size histogram: `size -> dispatches`
+    dispatch_sizes: Mutex<BTreeMap<u64, u64>>,
     started: Mutex<Option<Instant>>,
     /// per-model counters, keyed by registered model name
     per_model: Mutex<BTreeMap<String, ModelCounters>>,
@@ -144,6 +168,12 @@ pub struct ModelCounters {
     /// per-model latency histogram (p50/p95/p99 via
     /// [`LatencyHistogram::quantile_us`])
     pub latency: LatencyHistogram,
+    /// requests shed from this model's queue at `max_queue`
+    pub sheds_queue_full: u64,
+    /// requests shed because this model's modeled backlog broke SLO
+    pub sheds_over_budget: u64,
+    /// high-water queue depth observed at admission
+    pub max_queue_depth: u64,
 }
 
 impl ModelCounters {
@@ -174,8 +204,15 @@ impl Default for Metrics {
             latency_buckets: Default::default(),
             latency_sum_us: AtomicU64::new(0),
             flushes_full: AtomicU64::new(0),
+            flushes_budget: AtomicU64::new(0),
             flushes_deadline: AtomicU64::new(0),
             flushes_drained: AtomicU64::new(0),
+            sheds_queue_full: AtomicU64::new(0),
+            sheds_over_budget: AtomicU64::new(0),
+            edf_inversions: AtomicU64::new(0),
+            stolen_dispatches: AtomicU64::new(0),
+            max_queue_depth: AtomicU64::new(0),
+            dispatch_sizes: Mutex::new(BTreeMap::new()),
             started: Mutex::new(None),
             per_model: Mutex::new(BTreeMap::new()),
         }
@@ -231,19 +268,58 @@ impl Metrics {
     pub fn record_flush(&self, reason: FlushReason) {
         match reason {
             FlushReason::Full => &self.flushes_full,
+            FlushReason::Budget => &self.flushes_budget,
             FlushReason::Deadline => &self.flushes_deadline,
             FlushReason::Drained => &self.flushes_drained,
         }
         .fetch_add(1, Relaxed);
     }
 
-    /// `(full, deadline, drained)` flush counts.
-    pub fn flush_counts(&self) -> (u64, u64, u64) {
+    /// `(full, budget, deadline, drained)` flush counts.
+    pub fn flush_counts(&self) -> (u64, u64, u64, u64) {
         (
             self.flushes_full.load(Relaxed),
+            self.flushes_budget.load(Relaxed),
             self.flushes_deadline.load(Relaxed),
             self.flushes_drained.load(Relaxed),
         )
+    }
+
+    /// Count one typed load shed against `model`.
+    pub fn record_shed(&self, model: &str, reason: ShedReason) {
+        match reason {
+            ShedReason::QueueFull => &self.sheds_queue_full,
+            ShedReason::OverBudget => &self.sheds_over_budget,
+        }
+        .fetch_add(1, Relaxed);
+        self.with_model(model, |m| match reason {
+            ShedReason::QueueFull => m.sheds_queue_full += 1,
+            ShedReason::OverBudget => m.sheds_over_budget += 1,
+        });
+    }
+
+    /// `(queue_full, over_budget)` shed counts.
+    pub fn shed_counts(&self) -> (u64, u64) {
+        (self.sheds_queue_full.load(Relaxed), self.sheds_over_budget.load(Relaxed))
+    }
+
+    /// Record the queue depth observed when a request of `model` was
+    /// admitted (engine-wide and per-model high-water marks — the
+    /// backpressure/occupancy signal).
+    pub fn observe_queue_depth(&self, model: &str, depth: u64) {
+        self.max_queue_depth.fetch_max(depth, Relaxed);
+        self.with_model(model, |m| m.max_queue_depth = m.max_queue_depth.max(depth));
+    }
+
+    /// Count one dispatch of `size` requests in the batch-size
+    /// histogram.
+    pub fn record_batch_size(&self, size: u64) {
+        *self.dispatch_sizes.lock().unwrap().entry(size).or_insert(0) += 1;
+    }
+
+    /// Snapshot of the dispatch batch-size histogram, sorted by size.
+    pub fn batch_size_counts(&self) -> Vec<(u64, u64)> {
+        self.dispatch_sizes.lock().unwrap().iter().map(|(&k, &v)| (k, v)).collect()
     }
 
     /// Count `n` requests of `model` served individually (engine-wide
@@ -338,10 +414,13 @@ impl Metrics {
                 format!("{}us", v)
             }
         };
-        let (ff, fd, fs) = self.flush_counts();
+        let (ff, fb, fd, fs) = self.flush_counts();
+        let (sq, sb) = self.shed_counts();
         let mut s = format!(
             "requests={} completed={} errors={} batched={}/{} singleton={} \
-             flushes=full:{ff}/deadline:{fd}/drained:{fs} \
+             flushes=full:{ff}/budget:{fb}/deadline:{fd}/drained:{fs} \
+             shed=queue-full:{sq}/over-budget:{sb} \
+             qdepth-max={} edf-inv={} stolen={} \
              mean={:.0}us p50<={} p95<={} p99<={} rps={:.1}",
             self.requests.load(Relaxed),
             self.completed.load(Relaxed),
@@ -349,6 +428,9 @@ impl Metrics {
             self.batched_requests.load(Relaxed),
             self.batched_dispatches.load(Relaxed),
             self.singleton_requests.load(Relaxed),
+            self.max_queue_depth.load(Relaxed),
+            self.edf_inversions.load(Relaxed),
+            self.stolen_dispatches.load(Relaxed),
             self.mean_latency_us(),
             q(self.latency_quantile_us(0.5)),
             q(self.latency_quantile_us(0.95)),
@@ -509,10 +591,45 @@ mod tests {
         let m = Metrics::default();
         m.record_flush(FlushReason::Full);
         m.record_flush(FlushReason::Full);
+        m.record_flush(FlushReason::Budget);
         m.record_flush(FlushReason::Deadline);
         m.record_flush(FlushReason::Drained);
-        assert_eq!(m.flush_counts(), (2, 1, 1));
+        assert_eq!(m.flush_counts(), (2, 1, 1, 1));
         let s = m.summary();
-        assert!(s.contains("flushes=full:2/deadline:1/drained:1"), "{s}");
+        assert!(s.contains("flushes=full:2/budget:1/deadline:1/drained:1"), "{s}");
+    }
+
+    #[test]
+    fn typed_sheds_and_occupancy_counters() {
+        let m = Metrics::default();
+        m.record_shed("ds", ShedReason::QueueFull);
+        m.record_shed("ds", ShedReason::QueueFull);
+        m.record_shed("mlp", ShedReason::OverBudget);
+        assert_eq!(m.shed_counts(), (2, 1));
+        let ds = m.model_counters("ds").unwrap();
+        assert_eq!((ds.sheds_queue_full, ds.sheds_over_budget), (2, 0));
+        let mlp = m.model_counters("mlp").unwrap();
+        assert_eq!((mlp.sheds_queue_full, mlp.sheds_over_budget), (0, 1));
+        // occupancy keeps the high-water mark, globally and per model
+        m.observe_queue_depth("ds", 3);
+        m.observe_queue_depth("ds", 7);
+        m.observe_queue_depth("ds", 5);
+        m.observe_queue_depth("mlp", 2);
+        assert_eq!(m.max_queue_depth.load(Relaxed), 7);
+        assert_eq!(m.model_counters("ds").unwrap().max_queue_depth, 7);
+        assert_eq!(m.model_counters("mlp").unwrap().max_queue_depth, 2);
+        let s = m.summary();
+        assert!(s.contains("shed=queue-full:2/over-budget:1"), "{s}");
+        assert!(s.contains("qdepth-max=7"), "{s}");
+    }
+
+    #[test]
+    fn batch_size_histogram_counts_dispatches() {
+        let m = Metrics::default();
+        m.record_batch_size(1);
+        m.record_batch_size(4);
+        m.record_batch_size(4);
+        m.record_batch_size(2);
+        assert_eq!(m.batch_size_counts(), vec![(1, 1), (2, 1), (4, 2)]);
     }
 }

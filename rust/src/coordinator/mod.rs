@@ -1,50 +1,70 @@
-//! L3 serving engine — the coordinator: request queue → dynamic batcher
-//! → worker pool → per-layer routed execution (FullPack GEMV for
+//! L3 serving engine — the coordinator: per-model admission queues →
+//! cost-model-driven continuous batching → EDF dispatch across a
+//! sharded worker pool → per-layer routed execution (FullPack GEMV for
 //! single-batch scan cells, GEMM-tier backends for the batched FC
-//! stacks), with metrics and graceful shutdown.
+//! stacks), with metrics, typed load shedding and graceful shutdown
+//! (DESIGN.md §12).
 //!
 //! The engine is generic over the [`crate::models::Model`] trait
 //! (DESIGN.md §10): any registered model — a `CompiledModel` over a
 //! zoo graph, the legacy `DeepSpeech` struct — is served by name
-//! through the same batching, routing-stats and metrics machinery.
+//! through the same admission, routing-stats and metrics machinery.
 //!
-//! When the batcher flushes ≥2 requests for the same model, the worker
+//! Admission and dequeue live in [`Scheduler`], a pure state machine
+//! driven here with wall-clock nanoseconds and by the workload
+//! harness's virtual DES with simulated ones — one policy
+//! implementation, two clocks.  A request is admitted into its model's
+//! forming batch while the cost model says one more column still fits
+//! the front request's remaining SLO budget; otherwise the batch seals
+//! and the next one forms.  Overload is shed at the front door with a
+//! typed [`Rejected`] carrying a modeled retry-after instead of a bare
+//! error string.  Workers prefer their home shard of model queues
+//! (`model_id % workers`) and steal the globally earliest-deadline
+//! batch when their shard is idle.
+//!
+//! When a sealed batch holds ≥2 requests for a model, the worker
 //! executes them as **one** batched forward — each FC layer becomes a
 //! single `GemmKernel::gemm` call over `n · time_steps` columns, and
 //! per-request outputs are scattered back to their reply channels
 //! (DESIGN.md §9).  [`Metrics`] records the batched-vs-singleton
-//! dispatch split, engine-wide and per model.
+//! dispatch split, flush reasons, shed counts, queue occupancy and EDF
+//! inversions, engine-wide and per model.
 //!
 //! Python never appears here: models execute on the native Rust kernels
 //! or through AOT-compiled PJRT artifacts (`crate::runtime`).
 #![warn(missing_docs)]
 
-pub mod batcher;
 pub mod config;
 pub mod metrics;
 pub mod request;
 pub mod router;
+pub mod scheduler;
 
-pub use batcher::{Batcher, BatcherConfig, FlushReason};
 pub use config::{FileConfig, ModelSpec};
 pub use metrics::{LatencyHistogram, Metrics, ModelCounters, BUCKETS_US};
-pub use request::{LayerTiming, OpDesc, Request, RequestId, Response};
+pub use request::{
+    LayerTiming, OpDesc, Rejected, Request, RequestId, Response, ShedReason, SubmitError,
+};
 pub use router::{Router, RouterConfig};
+pub use scheduler::{
+    Admitted, CostFn, Dispatch, FaultPlan, FlushReason, Scheduler, SchedulerConfig,
+};
 
 use crate::models::Model;
 use crate::util::error::{anyhow, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed};
 use std::sync::{mpsc, Arc, Condvar, Mutex, RwLock};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Engine configuration.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct EngineConfig {
-    /// worker threads draining the batcher
+    /// worker threads draining the scheduler (model queues shard
+    /// across them by `model_id % workers`)
     pub workers: usize,
-    /// dynamic-batching policy
-    pub batcher: BatcherConfig,
+    /// admission / batching / shedding policy
+    pub sched: SchedulerConfig,
     /// per-layer kernel routing policy
     pub router: RouterConfig,
 }
@@ -53,21 +73,31 @@ impl Default for EngineConfig {
     fn default() -> Self {
         EngineConfig {
             workers: 2,
-            batcher: BatcherConfig::default(),
+            sched: SchedulerConfig::default(),
             router: RouterConfig::default(),
         }
     }
 }
 
 type Reply = mpsc::Sender<Result<Response>>;
+type ModelMap = Arc<RwLock<HashMap<String, Arc<dyn Model>>>>;
 
 struct Shared {
-    batcher: Mutex<Batcher<(Request, Reply)>>,
+    sched: Mutex<Scheduler<(Request, Reply)>>,
     cv: Condvar,
     shutdown: AtomicBool,
-    models: RwLock<HashMap<String, Arc<dyn Model>>>,
+    models: ModelMap,
     metrics: Metrics,
     router: Router,
+    epoch: Instant,
+    faults: FaultPlan,
+}
+
+impl Shared {
+    /// Monotonic nanoseconds since engine start — the scheduler clock.
+    fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
 }
 
 /// The serving engine.
@@ -77,23 +107,69 @@ pub struct Engine {
     next_id: AtomicU64,
 }
 
+/// Modeled dispatch cost for models that carry no cost model of their
+/// own ([`Model::dispatch_cost_ns`] returned `None`): classify the
+/// dispatch's routed ops and simulate each on the analytic cost model
+/// (scan cells as FullPack GEMVs, widened FC nodes on the Ruy-W8A8
+/// GEMM protocol).  Coarser than `costmodel::serving_dispatch_ns` but
+/// monotone in the group size, which is all the admission rule needs.
+fn fallback_dispatch_ns(model: &dyn Model, group: usize) -> u64 {
+    use crate::costmodel::{simulate_gemm, simulate_gemv, CoreModel, Method};
+    use crate::sim::CachePreset;
+    let core = CoreModel::ex5_big();
+    let preset = CachePreset::Gem5Ex5Big;
+    let mut cycles = 0.0;
+    for op in model.route_ops(group.max(1)) {
+        cycles += if op.batch > 1 {
+            simulate_gemm(Method::RuyW8A8, op.z, op.k, op.batch, preset, &core, 2).cycles
+        } else {
+            simulate_gemv(Method::FullPack(op.variant), op.z, op.k, preset, &core, 2).cycles
+        };
+    }
+    ((cycles / core.freq_ghz) as u64).max(1)
+}
+
 impl Engine {
     /// Start an engine: spawns the worker pool immediately.
     pub fn new(config: EngineConfig) -> Engine {
+        Engine::new_with_faults(config, FaultPlan::default())
+    }
+
+    /// Start an engine with an injected [`FaultPlan`] (the scheduler
+    /// test battery's graceful-degradation hook: worker stalls and
+    /// slow models are honored here; poisoned reply channels are a
+    /// client-side fault the reply path already tolerates).
+    pub fn new_with_faults(config: EngineConfig, faults: FaultPlan) -> Engine {
+        let models: ModelMap = Arc::new(RwLock::new(HashMap::new()));
+        let cost_models = models.clone();
+        let cost: CostFn = Box::new(move |name, n| {
+            let m = cost_models.read().unwrap().get(name).cloned();
+            match m {
+                Some(m) => m
+                    .dispatch_cost_ns(n)
+                    .unwrap_or_else(|| fallback_dispatch_ns(m.as_ref(), n)),
+                // unreachable via submit (unknown models are refused at
+                // the front door) — a safe floor, not a policy
+                None => 1_000,
+            }
+        });
+        let nworkers = config.workers.max(1);
         let shared = Arc::new(Shared {
-            batcher: Mutex::new(Batcher::new(config.batcher)),
+            sched: Mutex::new(Scheduler::new(config.sched, cost)),
             cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
-            models: RwLock::new(HashMap::new()),
+            models,
             metrics: Metrics::default(),
             router: Router::new(config.router),
+            epoch: Instant::now(),
+            faults,
         });
-        let workers = (0..config.workers.max(1))
+        let workers = (0..nworkers)
             .map(|i| {
                 let s = shared.clone();
                 std::thread::Builder::new()
                     .name(format!("fullpack-worker-{i}"))
-                    .spawn(move || worker_loop(s))
+                    .spawn(move || worker_loop(s, i, nworkers))
                     .expect("spawn worker")
             })
             .collect();
@@ -102,13 +178,16 @@ impl Engine {
 
     /// Register (or replace) a model under a name — anything
     /// implementing [`Model`] (a `CompiledModel` over a zoo graph, the
-    /// legacy `DeepSpeech`, ...).
+    /// legacy `DeepSpeech`, ...).  Registration creates the model's
+    /// admission queue; replacement invalidates its cost memo.
     pub fn register_model(&self, name: &str, model: impl Model + 'static) {
         self.shared
             .models
             .write()
             .unwrap()
             .insert(name.to_string(), Arc::new(model));
+        self.shared.sched.lock().unwrap().register(name);
+        self.shared.cv.notify_all();
     }
 
     /// Look up a registered model by name.
@@ -124,8 +203,17 @@ impl Engine {
         names
     }
 
-    /// Submit asynchronously; the receiver yields the response.
-    pub fn submit(&self, model: &str, frames: Vec<f32>) -> Result<mpsc::Receiver<Result<Response>>> {
+    /// Submit asynchronously with typed refusals: an unknown model or
+    /// a load shed is reported at the front door as a [`SubmitError`]
+    /// (sheds carry the modeled retry-after).  The receiver yields the
+    /// response.
+    pub fn try_submit(
+        &self,
+        model: &str,
+        frames: Vec<f32>,
+    ) -> std::result::Result<mpsc::Receiver<Result<Response>>, SubmitError> {
+        self.shared.metrics.mark_started();
+        self.shared.metrics.requests.fetch_add(1, Relaxed);
         let (tx, rx) = mpsc::channel();
         let req = Request {
             id: self.next_id.fetch_add(1, Relaxed),
@@ -133,14 +221,39 @@ impl Engine {
             frames,
             arrived: Instant::now(),
         };
-        self.shared.metrics.mark_started();
-        self.shared.metrics.requests.fetch_add(1, Relaxed);
-        {
-            let mut b = self.shared.batcher.lock().unwrap();
-            b.push((req, tx)).map_err(|_| anyhow!("queue full (backpressure)"))?;
+        let admitted = {
+            let mut sched = self.shared.sched.lock().unwrap();
+            let Some(mid) = sched.model_id(model) else {
+                drop(sched);
+                // global counter only: per-model entries are keyed by
+                // *registered* names, so a stream of bogus
+                // client-supplied names cannot grow the metrics map
+                self.shared.metrics.errors.fetch_add(1, Relaxed);
+                return Err(SubmitError::UnknownModel(model.to_string()));
+            };
+            sched.submit(mid, (req, tx), self.shared.now_ns())
+        };
+        match admitted {
+            Ok(a) => {
+                self.shared.metrics.observe_queue_depth(model, a.depth as u64);
+                if a.sealed {
+                    self.shared.cv.notify_all();
+                } else {
+                    self.shared.cv.notify_one();
+                }
+                Ok(rx)
+            }
+            Err(rej) => {
+                self.shared.metrics.record_shed(model, rej.reason);
+                Err(SubmitError::Rejected(rej))
+            }
         }
-        self.shared.cv.notify_one();
-        Ok(rx)
+    }
+
+    /// [`Engine::try_submit`] with the refusal flattened into the
+    /// crate-wide error type (legacy signature).
+    pub fn submit(&self, model: &str, frames: Vec<f32>) -> Result<mpsc::Receiver<Result<Response>>> {
+        self.try_submit(model, frames).map_err(|e| anyhow!("{e}"))
     }
 
     /// Synchronous convenience wrapper.
@@ -158,6 +271,11 @@ impl Engine {
     /// The per-layer routing policy (and its path counters).
     pub fn router(&self) -> &Router {
         &self.shared.router
+    }
+
+    /// Per-queue occupancy snapshot: `(model, forming, sealed)`.
+    pub fn queue_depths(&self) -> Vec<(String, usize, usize)> {
+        self.shared.sched.lock().unwrap().depths()
     }
 
     /// Drain and stop the workers.
@@ -180,85 +298,100 @@ impl Drop for Engine {
     }
 }
 
-fn worker_loop(s: Arc<Shared>) {
+/// Worker `w` of `nworkers`: tick the scheduler, dispatch its shard's
+/// earliest-deadline sealed batch (stealing globally when the shard is
+/// idle), or sleep until the next seal-eligibility instant.
+fn worker_loop(s: Arc<Shared>, w: usize, nworkers: usize) {
+    if !s.faults.worker_stall.is_zero() {
+        std::thread::sleep(s.faults.worker_stall);
+    }
     loop {
-        let batch = {
-            let mut b = s.batcher.lock().unwrap();
+        let dispatch = {
+            let mut sched = s.sched.lock().unwrap();
             loop {
-                if let Some((batch, reason)) = b.pop_batch(s.shutdown.load(Relaxed)) {
-                    s.metrics.record_flush(reason);
-                    break Some(batch);
+                let now = s.now_ns();
+                sched.on_tick(now);
+                if let Some(d) = sched.pop(now, Some((w, nworkers))) {
+                    break Some(d);
                 }
                 if s.shutdown.load(Relaxed) {
-                    break None;
+                    // drain: seal whatever is forming and serve it; the
+                    // worker exits only when nothing sealed remains
+                    // anywhere (shard affinity is ignored on the way out
+                    // so no batch is orphaned)
+                    sched.seal_all_drained();
+                    break sched.pop(s.now_ns(), None);
                 }
-                let wait = b
-                    .time_to_deadline()
-                    .unwrap_or(std::time::Duration::from_millis(50))
-                    .max(std::time::Duration::from_micros(100));
-                let (guard, _timeout) = s.cv.wait_timeout(b, wait).unwrap();
-                b = guard;
+                let wait = match sched.next_wakeup(now) {
+                    Some(t) => Duration::from_nanos(t.saturating_sub(now)),
+                    None => Duration::from_millis(50),
+                }
+                .clamp(Duration::from_micros(100), Duration::from_millis(50));
+                let (guard, _timeout) = s.cv.wait_timeout(sched, wait).unwrap();
+                sched = guard;
             }
         };
-        let Some(batch) = batch else { return };
-        dispatch_flush(&s, batch);
+        let Some(d) = dispatch else { return };
+        s.metrics.record_flush(d.reason);
+        s.metrics.record_batch_size(d.entries.len() as u64);
+        if d.stolen {
+            s.metrics.stolen_dispatches.fetch_add(1, Relaxed);
+        }
+        if d.inversion {
+            s.metrics.edf_inversions.fetch_add(1, Relaxed);
+        }
+        dispatch_batch(&s, d);
     }
 }
 
-/// Serve one flushed batch: same-model runs of ≥2 valid requests are
-/// executed as a single batched forward (one `GemmKernel::gemm` call
-/// per FC layer — the batcher's throughput win); everything else takes
-/// the per-request path.  Every request is counted exactly once as
-/// batched or singleton, engine-wide and under its model's name.
-fn dispatch_flush(s: &Arc<Shared>, batch: Vec<(Request, Reply)>) {
-    // group by model, preserving arrival order within each group
-    let mut groups: Vec<(String, Vec<(Request, Reply)>)> = Vec::new();
-    for (req, reply) in batch {
-        match groups.iter_mut().find(|(m, _)| *m == req.model) {
-            Some((_, v)) => v.push((req, reply)),
-            None => groups.push((req.model.clone(), vec![(req, reply)])),
+/// Serve one sealed batch (single-model by construction): ≥2 valid
+/// requests execute as a single batched forward (one
+/// `GemmKernel::gemm` call per FC layer — the scheduler's throughput
+/// win); everything else takes the per-request path.  Every dispatched
+/// request is counted exactly once as batched or singleton, engine-wide
+/// and under its model's name.
+fn dispatch_batch(s: &Arc<Shared>, d: Dispatch<(Request, Reply)>) {
+    let name = d.name;
+    let items: Vec<(Request, Reply)> = d.entries.into_iter().map(|(item, _)| item).collect();
+    if let Some(extra) = s.faults.slow_for(&name) {
+        std::thread::sleep(extra);
+    }
+    let model = s.models.read().unwrap().get(&name).cloned();
+    let Some(model) = model else {
+        // defensive: queues exist only for registered models, and
+        // models are never removed — but a reply beats a panic
+        s.metrics.record_singleton(&name, items.len() as u64);
+        s.metrics.record_errors(&name, items.len() as u64);
+        for (req, reply) in items {
+            let _ = reply.send(Err(anyhow!("unknown model {:?}", req.model)));
+        }
+        return;
+    };
+    // shape-validate up front; invalid requests error individually
+    // and never poison the group's GEMM
+    let expected = model.input_len();
+    let (valid, invalid): (Vec<_>, Vec<_>) =
+        items.into_iter().partition(|(req, _)| req.frames.len() == expected);
+    if !invalid.is_empty() {
+        s.metrics.record_singleton(&name, invalid.len() as u64);
+        s.metrics.record_errors(&name, invalid.len() as u64);
+        for (req, reply) in invalid {
+            let _ = reply.send(Err(anyhow!(
+                "frames len {} != model input len {expected}",
+                req.frames.len()
+            )));
         }
     }
-    for (name, items) in groups {
-        let model = s.models.read().unwrap().get(&name).cloned();
-        let Some(model) = model else {
-            // global counters only: per-model entries are keyed by
-            // *registered* names, so a stream of bogus client-supplied
-            // names cannot grow the metrics map (or the summary line)
-            // without bound
-            s.metrics.singleton_requests.fetch_add(items.len() as u64, Relaxed);
-            s.metrics.errors.fetch_add(items.len() as u64, Relaxed);
-            for (req, reply) in items {
-                let _ = reply.send(Err(anyhow!("unknown model {:?}", req.model)));
+    if valid.len() >= 2 {
+        process_group(s, model.as_ref(), &name, valid);
+    } else {
+        for (req, reply) in valid {
+            s.metrics.record_singleton(&name, 1);
+            let result = process_one(s, model.as_ref(), &name, &req);
+            if result.is_err() {
+                s.metrics.record_errors(&name, 1);
             }
-            continue;
-        };
-        // shape-validate up front; invalid requests error individually
-        // and never poison the group's GEMM
-        let expected = model.input_len();
-        let (valid, invalid): (Vec<_>, Vec<_>) =
-            items.into_iter().partition(|(req, _)| req.frames.len() == expected);
-        if !invalid.is_empty() {
-            s.metrics.record_singleton(&name, invalid.len() as u64);
-            s.metrics.record_errors(&name, invalid.len() as u64);
-            for (req, reply) in invalid {
-                let _ = reply.send(Err(anyhow!(
-                    "frames len {} != model input len {expected}",
-                    req.frames.len()
-                )));
-            }
-        }
-        if valid.len() >= 2 {
-            process_group(s, model.as_ref(), &name, valid);
-        } else {
-            for (req, reply) in valid {
-                s.metrics.record_singleton(&name, 1);
-                let result = process_one(s, model.as_ref(), &name, &req);
-                if result.is_err() {
-                    s.metrics.record_errors(&name, 1);
-                }
-                let _ = reply.send(result);
-            }
+            let _ = reply.send(result);
         }
     }
 }
@@ -325,16 +458,17 @@ fn process_group(s: &Shared, model: &dyn Model, name: &str, items: Vec<(Request,
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::models::DeepSpeechConfig;
+    use crate::models::{DeepSpeech, DeepSpeechConfig};
     use crate::pack::Variant;
 
     fn tiny_engine(variant: &str) -> Engine {
         let e = Engine::new(EngineConfig {
             workers: 2,
-            batcher: BatcherConfig {
+            sched: SchedulerConfig {
                 max_batch: 4,
                 max_wait: std::time::Duration::from_millis(1),
                 max_queue: 64,
+                ..SchedulerConfig::default()
             },
             router: RouterConfig::default(),
         });
@@ -368,10 +502,12 @@ mod tests {
     }
 
     #[test]
-    fn unknown_model_is_error() {
+    fn unknown_model_is_refused_at_the_front_door() {
         let e = tiny_engine("w4a8");
+        let err = e.try_submit("nope", frames()).unwrap_err();
+        assert!(matches!(err, SubmitError::UnknownModel(ref n) if n == "nope"));
         assert!(e.infer("nope", frames()).is_err());
-        assert_eq!(e.metrics().errors.load(Relaxed), 1);
+        assert_eq!(e.metrics().errors.load(Relaxed), 2);
     }
 
     #[test]
@@ -396,6 +532,8 @@ mod tests {
         // every request dispatched exactly once, batched or singleton
         let (batched, singleton) = e.metrics().dispatch_counts();
         assert_eq!(batched + singleton, 16);
+        // occupancy was observed on every admission
+        assert!(e.metrics().max_queue_depth.load(Relaxed) >= 1);
     }
 
     #[test]
@@ -412,5 +550,46 @@ mod tests {
         let a = tiny_engine("w4a8").infer("deepspeech", frames()).unwrap().logits;
         let b = tiny_engine("w4a8").infer("deepspeech", frames()).unwrap().logits;
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn queue_full_shed_is_typed_with_retry_hint() {
+        // one worker stalled long enough that nothing drains while we
+        // flood a depth-2 queue: the third submit must shed with a
+        // typed QueueFull carrying a modeled retry-after
+        let e = Engine::new_with_faults(
+            EngineConfig {
+                workers: 1,
+                sched: SchedulerConfig {
+                    max_batch: 4,
+                    max_queue: 2,
+                    max_wait: std::time::Duration::from_millis(200),
+                    ..SchedulerConfig::default()
+                },
+                router: RouterConfig::default(),
+            },
+            FaultPlan {
+                worker_stall: std::time::Duration::from_millis(300),
+                ..FaultPlan::default()
+            },
+        );
+        let m = DeepSpeech::new(DeepSpeechConfig::TINY, Variant::parse("w4a8").unwrap(), 5);
+        e.register_model("deepspeech", m);
+        let _rx1 = e.try_submit("deepspeech", frames()).unwrap();
+        let _rx2 = e.try_submit("deepspeech", frames()).unwrap();
+        let err = e.try_submit("deepspeech", frames()).unwrap_err();
+        match err {
+            SubmitError::Rejected(r) => {
+                assert_eq!(r.reason, ShedReason::QueueFull);
+                assert_eq!(r.depth, 2);
+                assert!(r.retry_after_us >= 1, "modeled retry hint present");
+                assert_eq!(r.model, "deepspeech");
+            }
+            other => panic!("expected a typed shed, got {other:?}"),
+        }
+        assert_eq!(e.metrics().sheds_queue_full.load(Relaxed), 1);
+        // the queued requests still complete after the stall
+        assert!(_rx1.recv().unwrap().is_ok());
+        assert!(_rx2.recv().unwrap().is_ok());
     }
 }

@@ -40,6 +40,74 @@ pub struct Response {
     pub total_ns: u128,
 }
 
+/// Why the admission scheduler shed a request (DESIGN.md §12).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// the model's queue (forming + sealed) is at `max_queue`
+    QueueFull,
+    /// the modeled backlog already exceeds the request's SLO budget —
+    /// admitting it could only produce a deadline miss
+    OverBudget,
+}
+
+impl ShedReason {
+    /// Stable lowercase label (metrics, JSON reports).
+    pub fn name(self) -> &'static str {
+        match self {
+            ShedReason::QueueFull => "queue-full",
+            ShedReason::OverBudget => "over-budget",
+        }
+    }
+}
+
+/// A typed load-shed reply: why the request was rejected, how deep the
+/// queue was, and the cost model's estimate of when retrying could
+/// succeed (`retry_after_us`) — derived from the same service-time
+/// curve that drives batching, so clients get a budget hint instead of
+/// a bare "queue full" string.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Rejected {
+    /// the model whose queue shed the request
+    pub model: String,
+    /// why it was shed
+    pub reason: ShedReason,
+    /// queue depth (forming + sealed) observed at the shed
+    pub depth: usize,
+    /// modeled microseconds until a retry could be admitted (≥ 1)
+    pub retry_after_us: u64,
+}
+
+impl std::fmt::Display for Rejected {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "request shed ({}): model {:?} at depth {}, retry after ~{}us",
+            self.reason.name(),
+            self.model,
+            self.depth,
+            self.retry_after_us
+        )
+    }
+}
+
+/// Why `Engine::try_submit` refused a request at the front door.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    /// no model registered under this name
+    UnknownModel(String),
+    /// the admission scheduler shed it (typed, with a retry hint)
+    Rejected(Rejected),
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::UnknownModel(name) => write!(f, "unknown model {name:?}"),
+            SubmitError::Rejected(r) => write!(f, "{r}"),
+        }
+    }
+}
+
 /// What kind of linear-algebra call a layer needs — the router's input
 /// (paper §4.6: GEMV single-batch vs GEMM multi-batch).  The router
 /// turns one of these into an executable `kernels::Plan`.

@@ -1,0 +1,766 @@
+//! Admission-controlled scheduler: per-model admission queues, a
+//! cost-model flush policy, EDF dequeue, and typed load shedding —
+//! the continuous-batching core that replaced the single global
+//! deadline batcher (DESIGN.md §12).
+//!
+//! The scheduler is a **pure state machine**: every method takes an
+//! explicit `now_ns` timestamp instead of reading a clock.  The live
+//! [`super::Engine`] drives it with `Instant`-derived nanoseconds; the
+//! workload harness's virtual discrete-event loop
+//! (`workload::loadgen::run_virtual`) drives the *same code* with
+//! virtual-clock nanoseconds — which is what makes the DES a bit-exact
+//! mirror of the live admission policy by construction, not by
+//! reimplementation.
+//!
+//! Policy, per model queue:
+//!
+//! * **admission** — a request joins its model's *forming* batch.  The
+//!   batch **seals** (becomes dispatchable) as soon as one of:
+//!   - `Full`: the forming batch reached `max_batch`;
+//!   - `Budget`: the cost model says one more column no longer fits
+//!     the front request's remaining deadline budget — i.e.
+//!     `svc(n+1) > slo − waited(front)` (the marginal-latency rule;
+//!     `svc` is the modeled batched-dispatch service time, the same
+//!     `costmodel` curve behind `gemm_batch_threshold`);
+//!   - `Deadline`: the forming batch's front waited `max_wait`
+//!     (the legacy flush deadline, now a backstop);
+//!   - `Drained`: shutdown seals whatever is forming.
+//! * **shedding** — `submit` rejects with a typed [`Rejected`] carrying
+//!   a **modeled retry-after** instead of silently dropping: `QueueFull`
+//!   when the queue (forming + sealed) is at `max_queue`, `OverBudget`
+//!   when the modeled backlog already exceeds the request's SLO budget.
+//! * **dequeue** — EDF: among sealed batches the earliest front
+//!   deadline (`enq + slo`) dispatches first.  A multi-worker engine
+//!   shards models across workers (`model_id % workers`); a worker
+//!   prefers its home shard and steals the global EDF batch only when
+//!   its shard is empty (work conservation).  Shard-affinity dispatches
+//!   that overtake an earlier-deadline batch elsewhere are surfaced as
+//!   **EDF inversions** in [`super::Metrics`].
+
+use std::collections::{HashMap, VecDeque};
+use std::time::Duration;
+
+use super::request::{Rejected, ShedReason};
+
+/// Scheduling policy knobs (the `"scheduler"` section of engine JSON).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SchedulerConfig {
+    /// seal a forming batch as soon as this many requests joined it
+    pub max_batch: usize,
+    /// seal a non-empty forming batch after this long (backstop)
+    pub max_wait: Duration,
+    /// per-model admission bound (forming + sealed, not yet dispatched);
+    /// beyond it `submit` sheds with [`ShedReason::QueueFull`]
+    pub max_queue: usize,
+    /// per-request latency budget: the EDF deadline (`enq + slo`), the
+    /// remaining-budget term of the marginal-latency seal rule, and the
+    /// over-budget shed threshold
+    pub slo: Duration,
+    /// enable the cost-model marginal-latency seal (`Budget` flushes);
+    /// off, the scheduler degrades to full/deadline batching
+    pub cost_flush: bool,
+    /// enable admission-control shedding when the modeled backlog
+    /// already exceeds `slo` ([`ShedReason::OverBudget`])
+    pub shed_over_budget: bool,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            max_batch: 16,
+            max_wait: Duration::from_millis(2),
+            max_queue: 1024,
+            slo: Duration::from_millis(50),
+            cost_flush: true,
+            shed_over_budget: true,
+        }
+    }
+}
+
+/// Why a batch sealed (for metrics and tests).
+#[derive(Debug, PartialEq, Eq, Clone, Copy)]
+pub enum FlushReason {
+    /// the forming batch reached `max_batch`
+    Full,
+    /// the cost model said one more column no longer fits the front
+    /// request's remaining deadline budget (marginal-latency rule)
+    Budget,
+    /// the forming batch's front waited past `max_wait`
+    Deadline,
+    /// a forced drain (shutdown)
+    Drained,
+}
+
+/// Fault-injection plan for the scheduler test battery and the
+/// workload harness (`rust/tests/scheduler_invariants.rs`): the engine
+/// honors `worker_stall` and `slow_models`; `poison_reply_every` is a
+/// *client-side* fault (the submitting harness drops every k-th reply
+/// receiver, proving the engine never blocks on a dead channel).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// each worker sleeps this long once before its first dispatch
+    pub worker_stall: Duration,
+    /// extra per-dispatch latency injected for the named models
+    pub slow_models: Vec<(String, Duration)>,
+    /// harness-side: drop the reply receiver of every k-th request
+    pub poison_reply_every: Option<u64>,
+}
+
+impl FaultPlan {
+    /// Injected extra latency for `model`, if any.
+    pub fn slow_for(&self, model: &str) -> Option<Duration> {
+        self.slow_models.iter().find(|(n, _)| n == model).map(|(_, d)| *d)
+    }
+
+    /// True when the plan injects nothing.
+    pub fn is_noop(&self) -> bool {
+        self.worker_stall.is_zero()
+            && self.slow_models.is_empty()
+            && self.poison_reply_every.is_none()
+    }
+}
+
+/// Modeled service time (ns) of one batched dispatch of `group`
+/// requests of a named model — the scheduler's admission brain.
+/// Memoized per `(model, group)` inside the scheduler.
+pub type CostFn = Box<dyn Fn(&str, usize) -> u64 + Send>;
+
+/// Outcome of a successful [`Scheduler::submit`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Admitted {
+    /// queue depth (forming + sealed) after admission — the
+    /// backpressure/occupancy signal surfaced in `Metrics`
+    pub depth: usize,
+    /// the admission sealed a batch (workers should be woken broadly)
+    pub sealed: bool,
+}
+
+/// One dispatchable batch handed to a worker by [`Scheduler::pop`].
+#[derive(Debug)]
+pub struct Dispatch<T> {
+    /// queue index of the model (registration order)
+    pub model: usize,
+    /// registered model name
+    pub name: String,
+    /// `(item, enq_ns)` in admission order
+    pub entries: Vec<(T, u64)>,
+    /// what sealed the batch
+    pub reason: FlushReason,
+    /// EDF key: the front entry's deadline (`enq + slo`)
+    pub front_deadline_ns: u64,
+    /// the dispatching worker's home shard was empty and it took the
+    /// global EDF batch instead
+    pub stolen: bool,
+    /// shard affinity dispatched this batch past a strictly
+    /// earlier-deadline sealed batch waiting elsewhere
+    pub inversion: bool,
+}
+
+#[derive(Debug)]
+struct Entry<T> {
+    item: T,
+    enq_ns: u64,
+}
+
+#[derive(Debug)]
+struct SealedBatch<T> {
+    entries: Vec<Entry<T>>,
+    reason: FlushReason,
+    svc_ns: u64,
+    seq: u64,
+}
+
+#[derive(Debug)]
+struct ModelQueue<T> {
+    name: String,
+    forming: VecDeque<Entry<T>>,
+    sealed: VecDeque<SealedBatch<T>>,
+    /// requests inside `sealed` (kept explicit; depth checks are hot)
+    sealed_items: usize,
+    /// summed modeled service of `sealed` (the backlog estimate)
+    sealed_svc_ns: u64,
+}
+
+impl<T> ModelQueue<T> {
+    fn new(name: &str) -> Self {
+        ModelQueue {
+            name: name.to_string(),
+            forming: VecDeque::new(),
+            sealed: VecDeque::new(),
+            sealed_items: 0,
+            sealed_svc_ns: 0,
+        }
+    }
+
+    fn depth(&self) -> usize {
+        self.forming.len() + self.sealed_items
+    }
+}
+
+/// The admission scheduler (single consumer lock; callers hold it).
+/// Generic over the queued payload so the test battery can drive it
+/// with plain values and synthetic clocks/cost curves.
+pub struct Scheduler<T> {
+    cfg: SchedulerConfig,
+    queues: Vec<ModelQueue<T>>,
+    index: HashMap<String, usize>,
+    cost: CostFn,
+    /// per-model `group -> ns` memo of the cost function
+    memo: Vec<HashMap<usize, u64>>,
+    seal_seq: u64,
+}
+
+impl<T> std::fmt::Debug for Scheduler<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Scheduler")
+            .field("cfg", &self.cfg)
+            .field("queues", &self.queues.len())
+            .finish()
+    }
+}
+
+impl<T> Scheduler<T> {
+    /// An empty scheduler with the given policy and cost model.
+    pub fn new(cfg: SchedulerConfig, cost: CostFn) -> Self {
+        Scheduler {
+            cfg,
+            queues: Vec::new(),
+            index: HashMap::new(),
+            cost,
+            memo: Vec::new(),
+            seal_seq: 0,
+        }
+    }
+
+    /// The policy in force.
+    pub fn config(&self) -> &SchedulerConfig {
+        &self.cfg
+    }
+
+    /// Register (or re-register) a model queue; returns its id.
+    /// Re-registration keeps the queue but invalidates the cost memo
+    /// (hot-swapped weights may change the service curve).
+    pub fn register(&mut self, name: &str) -> usize {
+        if let Some(&i) = self.index.get(name) {
+            self.memo[i].clear();
+            return i;
+        }
+        let i = self.queues.len();
+        self.queues.push(ModelQueue::new(name));
+        self.memo.push(HashMap::new());
+        self.index.insert(name.to_string(), i);
+        i
+    }
+
+    /// Queue id of a registered model.
+    pub fn model_id(&self, name: &str) -> Option<usize> {
+        self.index.get(name).copied()
+    }
+
+    /// Memoized modeled service time of one dispatch of `n` requests —
+    /// the same curve the admission decisions consult.  The virtual
+    /// workload DES reads it for dispatch service times, so live and
+    /// virtual replays share one cost source.
+    pub fn modeled_cost_ns(&mut self, model: usize, n: usize) -> u64 {
+        self.cost_ns(model, n)
+    }
+
+    /// Memoized modeled service time of one dispatch of `n` requests.
+    fn cost_ns(&mut self, model: usize, n: usize) -> u64 {
+        if let Some(&v) = self.memo[model].get(&n) {
+            return v;
+        }
+        let v = (self.cost)(&self.queues[model].name, n).max(1);
+        self.memo[model].insert(n, v);
+        v
+    }
+
+    fn slo_ns(&self) -> u64 {
+        self.cfg.slo.as_nanos() as u64
+    }
+
+    fn max_wait_ns(&self) -> u64 {
+        self.cfg.max_wait.as_nanos() as u64
+    }
+
+    /// Modeled time to drain `depth` queued requests of `model` — the
+    /// retry-after hint a `QueueFull` shed carries: the queue drains in
+    /// `⌈depth / max_batch⌉` dispatches of modeled service
+    /// `svc(min(depth, max_batch))` each.
+    fn drain_estimate_us(&mut self, model: usize, depth: usize) -> u64 {
+        let per = self.cost_ns(model, depth.min(self.cfg.max_batch).max(1));
+        let flushes = depth.div_ceil(self.cfg.max_batch.max(1)) as u64;
+        (flushes.saturating_mul(per) / 1_000).max(1)
+    }
+
+    /// Seal the forming batch of `model` (no-op when empty).
+    fn seal(&mut self, model: usize, reason: FlushReason) {
+        let n = self.queues[model].forming.len();
+        if n == 0 {
+            return;
+        }
+        let svc = self.cost_ns(model, n);
+        self.seal_seq += 1;
+        let seq = self.seal_seq;
+        let q = &mut self.queues[model];
+        let entries: Vec<Entry<T>> = q.forming.drain(..).collect();
+        q.sealed_items += n;
+        q.sealed_svc_ns += svc;
+        q.sealed.push_back(SealedBatch { entries, reason, svc_ns: svc, seq });
+    }
+
+    /// Admit one request into its model's forming batch at `now_ns`,
+    /// or shed it with a typed, retry-hinted [`Rejected`].
+    pub fn submit(&mut self, model: usize, item: T, now_ns: u64) -> Result<Admitted, Rejected> {
+        let depth = self.queues[model].depth();
+        if depth >= self.cfg.max_queue {
+            let retry_after_us = self.drain_estimate_us(model, depth);
+            return Err(Rejected {
+                model: self.queues[model].name.clone(),
+                reason: ShedReason::QueueFull,
+                depth,
+                retry_after_us,
+            });
+        }
+        if self.cfg.shed_over_budget {
+            // modeled completion if admitted: the sealed backlog plus
+            // this request's own batch — beyond the SLO it can only
+            // miss its deadline, so shed it now with the overshoot as
+            // the retry hint
+            let own = self.cost_ns(model, self.queues[model].forming.len() + 1);
+            let backlog = self.queues[model].sealed_svc_ns.saturating_add(own);
+            let slo = self.slo_ns();
+            if backlog > slo {
+                return Err(Rejected {
+                    model: self.queues[model].name.clone(),
+                    reason: ShedReason::OverBudget,
+                    depth,
+                    retry_after_us: ((backlog - slo) / 1_000).max(1),
+                });
+            }
+        }
+        self.queues[model].forming.push_back(Entry { item, enq_ns: now_ns });
+        let n = self.queues[model].forming.len();
+        let sealed = if n >= self.cfg.max_batch {
+            self.seal(model, FlushReason::Full);
+            true
+        } else if self.cfg.cost_flush {
+            // the marginal-latency rule: keep the batch open only while
+            // one more column still fits the front's remaining budget
+            let front_enq = self.queues[model].forming.front().map(|e| e.enq_ns).unwrap_or(now_ns);
+            let remaining = self.slo_ns().saturating_sub(now_ns.saturating_sub(front_enq));
+            if self.cost_ns(model, n + 1) > remaining {
+                self.seal(model, FlushReason::Budget);
+                true
+            } else {
+                false
+            }
+        } else {
+            false
+        };
+        Ok(Admitted { depth: depth + 1, sealed })
+    }
+
+    /// Seal-eligibility time of `model`'s forming batch: the earlier of
+    /// its `max_wait` deadline and the instant the marginal-latency
+    /// rule expires (`enq + slo − svc(n+1)`, exclusive).
+    fn seal_time(&mut self, model: usize) -> Option<u64> {
+        let front_enq = self.queues[model].forming.front().map(|e| e.enq_ns)?;
+        let n = self.queues[model].forming.len();
+        let deadline_t = front_enq.saturating_add(self.max_wait_ns());
+        let budget_t = if self.cfg.cost_flush {
+            let c = self.cost_ns(model, n + 1);
+            front_enq
+                .saturating_add(self.slo_ns().saturating_sub(c))
+                .saturating_add(1)
+        } else {
+            u64::MAX
+        };
+        Some(deadline_t.min(budget_t))
+    }
+
+    /// Seal every forming batch whose deadline or budget expired by
+    /// `now_ns` (workers call this on every wake-up; the virtual DES on
+    /// every event).  `Deadline` takes precedence when both expired.
+    pub fn on_tick(&mut self, now_ns: u64) {
+        for m in 0..self.queues.len() {
+            let Some(front_enq) = self.queues[m].forming.front().map(|e| e.enq_ns) else {
+                continue;
+            };
+            let Some(t) = self.seal_time(m) else { continue };
+            if now_ns >= t {
+                let reason = if now_ns >= front_enq.saturating_add(self.max_wait_ns()) {
+                    FlushReason::Deadline
+                } else {
+                    FlushReason::Budget
+                };
+                self.seal(m, reason);
+            }
+        }
+    }
+
+    /// Earliest future seal-eligibility instant over all forming
+    /// batches (what a worker may sleep until), `None` when nothing is
+    /// forming.  Call after [`Scheduler::on_tick`]: already-due batches
+    /// are sealed, so the returned instant is strictly after `now_ns`.
+    pub fn next_wakeup(&mut self, now_ns: u64) -> Option<u64> {
+        (0..self.queues.len())
+            .filter_map(|m| self.seal_time(m))
+            .min()
+            .map(|t| t.max(now_ns + 1))
+    }
+
+    /// Seal every forming batch as `Drained` (shutdown path).
+    pub fn seal_all_drained(&mut self) {
+        for m in 0..self.queues.len() {
+            self.seal(m, FlushReason::Drained);
+        }
+    }
+
+    /// EDF dequeue: dispatch the sealed batch whose front deadline
+    /// (`enq + slo`) is earliest.  With `worker = Some((w, n))` the
+    /// worker prefers its home shard (`model % n == w`) and steals the
+    /// global EDF batch only when the shard has nothing sealed; an
+    /// affinity dispatch past a strictly earlier deadline elsewhere is
+    /// flagged as an EDF inversion.
+    pub fn pop(&mut self, _now_ns: u64, worker: Option<(usize, usize)>) -> Option<Dispatch<T>> {
+        let slo = self.slo_ns();
+        let key = |q: &ModelQueue<T>| -> Option<(u64, u64)> {
+            q.sealed
+                .front()
+                .map(|s| (s.entries[0].enq_ns.saturating_add(slo), s.seq))
+        };
+        let global = (0..self.queues.len())
+            .filter_map(|m| key(&self.queues[m]).map(|k| (k, m)))
+            .min()?;
+        let (chosen, stolen) = match worker {
+            Some((w, n)) if n > 1 => {
+                let home = (0..self.queues.len())
+                    .filter(|m| m % n.max(1) == w % n.max(1))
+                    .filter_map(|m| key(&self.queues[m]).map(|k| (k, m)))
+                    .min();
+                match home {
+                    Some(h) => (h, false),
+                    None => (global, true),
+                }
+            }
+            _ => (global, false),
+        };
+        let ((front_deadline_ns, _), model) = chosen;
+        let inversion = chosen.0 > global.0;
+        let q = &mut self.queues[model];
+        let batch = q.sealed.pop_front().expect("chosen queue has a sealed batch");
+        q.sealed_items -= batch.entries.len();
+        q.sealed_svc_ns = q.sealed_svc_ns.saturating_sub(batch.svc_ns);
+        Some(Dispatch {
+            model,
+            name: q.name.clone(),
+            entries: batch.entries.into_iter().map(|e| (e.item, e.enq_ns)).collect(),
+            reason: batch.reason,
+            front_deadline_ns,
+            stolen,
+            inversion,
+        })
+    }
+
+    /// Any sealed batch waiting for a worker?
+    pub fn has_sealed(&self) -> bool {
+        self.queues.iter().any(|q| !q.sealed.is_empty())
+    }
+
+    /// Any forming (unsealed) batch?
+    pub fn has_forming(&self) -> bool {
+        self.queues.iter().any(|q| !q.forming.is_empty())
+    }
+
+    /// Earliest front deadline over sealed batches (test/EDF oracle).
+    pub fn min_sealed_deadline(&self) -> Option<u64> {
+        let slo = self.slo_ns();
+        self.queues
+            .iter()
+            .filter_map(|q| q.sealed.front().map(|s| s.entries[0].enq_ns.saturating_add(slo)))
+            .min()
+    }
+
+    /// Per-queue occupancy: `(name, forming, sealed_items)`.
+    pub fn depths(&self) -> Vec<(String, usize, usize)> {
+        self.queues
+            .iter()
+            .map(|q| (q.name.clone(), q.forming.len(), q.sealed_items))
+            .collect()
+    }
+
+    /// Total queued (forming + sealed) requests across all models.
+    pub fn len(&self) -> usize {
+        self.queues.iter().map(|q| q.depth()).sum()
+    }
+
+    /// No queued requests anywhere?
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MS: u64 = 1_000_000;
+
+    /// Scheduler with a flat synthetic cost curve: `svc(n) = n · step`.
+    fn sched(cfg: SchedulerConfig, step: u64) -> Scheduler<u32> {
+        Scheduler::new(cfg, Box::new(move |_, n| n as u64 * step))
+    }
+
+    fn cfg(max_batch: usize, wait_ms: u64, max_queue: usize, slo_ms: u64) -> SchedulerConfig {
+        SchedulerConfig {
+            max_batch,
+            max_wait: Duration::from_millis(wait_ms),
+            max_queue,
+            slo: Duration::from_millis(slo_ms),
+            cost_flush: true,
+            shed_over_budget: false,
+        }
+    }
+
+    fn drain_items(s: &mut Scheduler<u32>) -> Vec<u32> {
+        let mut out = Vec::new();
+        s.seal_all_drained();
+        while let Some(d) = s.pop(0, None) {
+            out.extend(d.entries.into_iter().map(|(i, _)| i));
+        }
+        out
+    }
+
+    #[test]
+    fn full_seal_pops_fifo() {
+        // svc tiny vs slo: the budget rule never fires; Full does
+        let mut s = sched(cfg(4, 1_000, 100, 1_000), 1);
+        let m = s.register("ds");
+        for i in 0..4u32 {
+            let a = s.submit(m, i, 0).unwrap();
+            assert_eq!(a.depth as u32, i + 1);
+            assert_eq!(a.sealed, i == 3);
+        }
+        let d = s.pop(0, None).unwrap();
+        assert_eq!(d.reason, FlushReason::Full);
+        assert_eq!(d.entries.iter().map(|&(i, _)| i).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn partial_not_dispatchable_before_deadline() {
+        let mut s = sched(cfg(4, 10, 100, 1_000), 1);
+        let m = s.register("ds");
+        s.submit(m, 1, 0).unwrap();
+        s.on_tick(5 * MS);
+        assert!(s.pop(5 * MS, None).is_none());
+        // the wake-up targets the 10ms max-wait backstop (svc is ns-
+        // scale, so the budget instant sits just before slo = 1s)
+        assert_eq!(s.next_wakeup(5 * MS).unwrap(), 10 * MS);
+        s.on_tick(10 * MS);
+        let d = s.pop(10 * MS, None).unwrap();
+        assert_eq!(d.reason, FlushReason::Deadline);
+        assert_eq!(d.entries.len(), 1);
+    }
+
+    #[test]
+    fn budget_seal_at_admission_matches_cost_curve() {
+        // svc(n) = n·2ms, slo = 5ms: svc(n+1) > 5ms first at n = 2
+        // (svc(3) = 6ms) — the marginal-latency rule seals exactly
+        // there, long before the 1s max-wait backstop
+        let mut s = sched(cfg(16, 1_000, 100, 5), 2 * MS);
+        let m = s.register("ds");
+        assert!(!s.submit(m, 0, 0).unwrap().sealed, "svc(2)=4ms fits the 5ms budget");
+        assert!(s.submit(m, 1, 0).unwrap().sealed, "svc(3)=6ms does not");
+        let d = s.pop(0, None).unwrap();
+        assert_eq!(d.reason, FlushReason::Budget);
+        assert_eq!(d.entries.len(), 2);
+    }
+
+    #[test]
+    fn budget_seal_when_remaining_budget_decays() {
+        // svc(2) = 2ms, slo = 5ms: at t=0 one request waits (2 < 5);
+        // once 3ms+ elapse the remaining budget drops below svc(2) and
+        // the tick seals with Budget, ahead of the 100ms deadline
+        let mut s = sched(cfg(16, 100, 100, 5), MS);
+        let m = s.register("ds");
+        s.submit(m, 7, 0).unwrap();
+        let wake = s.next_wakeup(0).unwrap();
+        assert_eq!(wake, 3 * MS + 1, "budget expiry: slo − svc(2) = 3ms, exclusive");
+        s.on_tick(wake - 1);
+        assert!(s.pop(wake - 1, None).is_none());
+        s.on_tick(wake);
+        let d = s.pop(wake, None).unwrap();
+        assert_eq!(d.reason, FlushReason::Budget);
+    }
+
+    #[test]
+    fn deadline_takes_precedence_when_both_expired() {
+        let mut s = sched(cfg(16, 1, 100, 5), MS);
+        let m = s.register("ds");
+        s.submit(m, 1, 0).unwrap();
+        // 10ms later both the 1ms deadline and the budget have expired
+        s.on_tick(10 * MS);
+        assert_eq!(s.pop(10 * MS, None).unwrap().reason, FlushReason::Deadline);
+    }
+
+    #[test]
+    fn queue_full_shed_carries_modeled_retry_after() {
+        // max_queue 2, max_batch 4, svc(n) = n·1ms: at depth 2 the
+        // drain estimate is one flush of svc(2) = 2ms → 2000µs
+        let mut s = sched(cfg(4, 1_000, 2, 1_000), MS);
+        let m = s.register("ds");
+        s.submit(m, 1, 0).unwrap();
+        s.submit(m, 2, 0).unwrap();
+        let rej = s.submit(m, 3, 0).unwrap_err();
+        assert_eq!(rej.reason, ShedReason::QueueFull);
+        assert_eq!(rej.depth, 2);
+        assert_eq!(rej.retry_after_us, 2_000, "⌈2/4⌉ flush × svc(2)=2ms");
+        assert_eq!(rej.model, "ds");
+        // the queue is intact and drains in order
+        assert_eq!(drain_items(&mut s), vec![1, 2]);
+    }
+
+    #[test]
+    fn queue_full_retry_after_spans_multiple_flushes() {
+        // depth 5, max_batch 2 → ⌈5/2⌉ = 3 flushes × svc(2) = 2ms
+        let mut c = cfg(2, 1_000, 5, 1_000);
+        c.cost_flush = false; // keep all 5 queued without budget seals
+        let mut s = sched(c, MS);
+        let m = s.register("ds");
+        for i in 0..5 {
+            s.submit(m, i, 0).unwrap();
+        }
+        let rej = s.submit(m, 9, 0).unwrap_err();
+        assert_eq!(rej.reason, ShedReason::QueueFull);
+        assert_eq!(rej.retry_after_us, 6_000);
+    }
+
+    #[test]
+    fn over_budget_shed_is_typed_with_overshoot_hint() {
+        // svc(1) = 10ms > slo 5ms: the queue can never meet the SLO,
+        // admission control sheds up front with the 5ms overshoot
+        let mut c = cfg(16, 1_000, 100, 5);
+        c.shed_over_budget = true;
+        let mut s = sched(c, 10 * MS);
+        let m = s.register("ds");
+        let rej = s.submit(m, 1, 0).unwrap_err();
+        assert_eq!(rej.reason, ShedReason::OverBudget);
+        assert_eq!(rej.depth, 0);
+        assert_eq!(rej.retry_after_us, 5_000, "modeled overshoot: 10ms − 5ms");
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn backpressure_recovers_after_pop() {
+        let mut s = sched(cfg(2, 1_000, 2, 1_000), 1);
+        let m = s.register("ds");
+        s.submit(m, 1, 0).unwrap();
+        s.submit(m, 2, 0).unwrap(); // Full seal
+        assert!(s.submit(m, 3, 0).is_err());
+        s.pop(0, None).unwrap();
+        assert!(s.submit(m, 4, 0).is_ok());
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn oversize_burst_seals_in_chunks() {
+        let mut s = sched(cfg(2, 1_000, 100, 1_000), 1);
+        let m = s.register("ds");
+        for i in 0..5u32 {
+            s.submit(m, i, 0).unwrap();
+        }
+        assert_eq!(s.pop(0, None).unwrap().entries.len(), 2);
+        assert_eq!(s.pop(0, None).unwrap().entries.len(), 2);
+        assert!(s.pop(0, None).is_none(), "remainder still forming");
+        s.seal_all_drained();
+        let d = s.pop(0, None).unwrap();
+        assert_eq!(d.reason, FlushReason::Drained);
+        assert_eq!(d.entries.iter().map(|&(i, _)| i).collect::<Vec<_>>(), vec![4]);
+    }
+
+    #[test]
+    fn edf_orders_across_model_queues() {
+        // model "b"'s batch sealed later but its front enqueued earlier
+        // → earlier deadline → dispatched first
+        let mut s = sched(cfg(2, 1_000, 100, 10), 1);
+        let a = s.register("a");
+        let b = s.register("b");
+        s.submit(b, 100, 0).unwrap();
+        s.submit(a, 200, 1 * MS).unwrap();
+        s.submit(a, 201, 1 * MS).unwrap(); // seals a (Full)
+        s.submit(b, 101, 2 * MS).unwrap(); // seals b (Full)
+        let d1 = s.pop(2 * MS, None).unwrap();
+        assert_eq!(d1.name, "b", "front deadline 0+slo beats 1ms+slo");
+        assert!(!d1.inversion && !d1.stolen);
+        assert_eq!(s.pop(2 * MS, None).unwrap().name, "a");
+    }
+
+    #[test]
+    fn shard_affinity_steals_and_flags_inversions() {
+        let mut s = sched(cfg(1, 1_000, 100, 10), 1);
+        let a = s.register("a"); // home of worker 0 (a % 2 == 0)
+        let b = s.register("b"); // home of worker 1
+        s.submit(b, 1, 0).unwrap(); // sealed (max_batch 1), deadline 0+slo
+        s.submit(a, 2, 1 * MS).unwrap(); // sealed, deadline 1ms+slo
+        // worker 0's home has a sealed batch, but the global EDF batch
+        // is b's — dispatching a's is an EDF inversion
+        let d = s.pop(1 * MS, Some((0, 2))).unwrap();
+        assert_eq!(d.name, "a");
+        assert!(d.inversion && !d.stolen);
+        // worker 0's home is now empty: it steals b's batch
+        let d = s.pop(1 * MS, Some((0, 2))).unwrap();
+        assert_eq!(d.name, "b");
+        assert!(d.stolen && !d.inversion);
+        // a single-worker topology is pure EDF: never inverted
+        s.submit(b, 3, 2 * MS).unwrap();
+        s.submit(a, 4, 3 * MS).unwrap();
+        let d = s.pop(3 * MS, Some((0, 1))).unwrap();
+        assert_eq!(d.name, "b");
+        assert!(!d.inversion && !d.stolen);
+    }
+
+    #[test]
+    fn reregistration_clears_cost_memo() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        use std::sync::Arc;
+        let calls = Arc::new(AtomicU64::new(0));
+        let c = calls.clone();
+        let mut s: Scheduler<u32> = Scheduler::new(
+            cfg(4, 1_000, 100, 1_000),
+            Box::new(move |_, n| {
+                c.fetch_add(1, Ordering::Relaxed);
+                n as u64
+            }),
+        );
+        let m = s.register("ds");
+        s.submit(m, 1, 0).unwrap();
+        s.submit(m, 2, 0).unwrap();
+        let before = calls.load(Ordering::Relaxed);
+        assert!(before > 0);
+        s.submit(m, 3, 0).unwrap(); // memoized lookahead: no new calls
+        assert_eq!(calls.load(Ordering::Relaxed), before);
+        assert_eq!(s.register("ds"), m, "same queue id");
+        s.submit(m, 4, 0).unwrap();
+        assert!(calls.load(Ordering::Relaxed) > before, "memo invalidated");
+    }
+
+    #[test]
+    fn depths_and_occupancy_views() {
+        let mut s = sched(cfg(2, 1_000, 100, 1_000), 1);
+        let a = s.register("a");
+        let b = s.register("b");
+        s.submit(a, 1, 0).unwrap();
+        s.submit(a, 2, 0).unwrap(); // sealed
+        s.submit(a, 3, 0).unwrap(); // forming
+        s.submit(b, 4, 0).unwrap(); // forming
+        assert_eq!(
+            s.depths(),
+            vec![("a".to_string(), 1, 2), ("b".to_string(), 1, 0)]
+        );
+        assert!(s.has_sealed() && s.has_forming());
+        assert_eq!(s.len(), 4);
+        assert_eq!(s.min_sealed_deadline(), Some(1_000 * MS));
+    }
+}

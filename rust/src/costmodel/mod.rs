@@ -376,6 +376,42 @@ pub fn gemm_batch_threshold(
     })
 }
 
+/// The FullPack method pair for a graph: scan cells always take
+/// `Method::FullPack(variant)`; FC nodes take FullPack only when the
+/// graph quantizes them on the model variant (the MLP), otherwise the
+/// paper's Ruy-W8A8 GEMM protocol (DeepSpeech, the KWS head).
+pub fn fullpack_methods_for(graph: &crate::models::ModelGraph) -> (Method, Method) {
+    let cell = Method::FullPack(graph.variant);
+    let fc = if graph.has_model_variant_fc() {
+        Method::FullPack(graph.variant)
+    } else {
+        Method::RuyW8A8
+    };
+    (cell, fc)
+}
+
+/// Modeled wall-clock nanoseconds of **one batched serving dispatch**
+/// of `group` requests of `graph` — the admission scheduler's brain
+/// (DESIGN.md §12) and the workload DES's service-time source.
+///
+/// Batching `group` requests widens every layer to `group ×
+/// time_steps` columns, which is exactly `simulate_model_total` over a
+/// graph with `time_steps` scaled by the group (the same construction
+/// the serving figures use): FC stacks amortize one weight pass over
+/// all columns (the paper's GEMM win), scan cells repeat per request.
+/// Cycles are converted at the modeled ex5_big frequency; the absolute
+/// number is a cost-model estimate, but admission decisions only
+/// compare these against each other and the SLO, so the *shape* of the
+/// curve (marginal cost of one more column) is what matters.
+pub fn serving_dispatch_ns(graph: &crate::models::ModelGraph, group: usize) -> u64 {
+    let core = CoreModel::ex5_big();
+    let mut g = graph.clone();
+    g.time_steps *= group.max(1);
+    let (cell_m, fc_m) = fullpack_methods_for(&g);
+    let cycles = simulate_model_total(&g, cell_m, fc_m, CachePreset::Gem5Ex5Big, &core, 2);
+    (cycles / core.freq_ghz) as u64
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -161,19 +161,9 @@ pub fn fig10(cfg: DeepSpeechConfig) -> (Table, Vec<(String, f64)>) {
     (table, totals)
 }
 
-/// The FullPack method pair for a graph: scan cells always take
-/// `Method::FullPack(variant)`; FC nodes take FullPack only when the
-/// graph quantizes them on the model variant (the MLP), otherwise the
-/// paper's Ruy-W8A8 GEMM protocol (DeepSpeech, the KWS head).
-pub fn fullpack_methods_for(graph: &ModelGraph) -> (Method, Method) {
-    let cell = Method::FullPack(graph.variant);
-    let fc = if graph.has_model_variant_fc() {
-        Method::FullPack(graph.variant)
-    } else {
-        Method::RuyW8A8
-    };
-    (cell, fc)
-}
+/// The FullPack method pair for a graph (now shared with the serving
+/// scheduler's admission brain — the definition lives in `costmodel`).
+pub use crate::costmodel::fullpack_methods_for;
 
 /// Whole-model method comparison across the model zoo — the §4.6
 /// end-to-end table generalized beyond DeepSpeech (DESIGN.md §10):

@@ -1,13 +1,16 @@
 //! Serve-sweep figures (`fig-serve` family): tail latency and dispatch
 //! mix across a set of workload-mix reports — the serving analogue of
 //! the kernel sweep tables.  Rows come from `workload::report`
-//! ([`MixReport`]), one per mix, in sweep order.
+//! ([`MixReport`]), one per mix, in sweep order, and carry the
+//! admission scheduler's policy signals (typed sheds, cost-model
+//! budget flushes, queue occupancy, EDF inversions).
 
 use crate::util::bench::Table;
 use crate::workload::report::MixReport;
 
 /// Latency/throughput table: one row per mix with exact nearest-rank
-/// tail percentiles and the shed count (the backpressure signal).
+/// tail percentiles and the typed shed split (the backpressure and
+/// admission-control signals).
 pub fn fig_serve_latency(reports: &[MixReport]) -> Table {
     let mut table = Table::new(vec![
         "mix".to_string(),
@@ -15,7 +18,7 @@ pub fn fig_serve_latency(reports: &[MixReport]) -> Table {
         "arrival".to_string(),
         "clients".to_string(),
         "issued".to_string(),
-        "shed".to_string(),
+        "shed full/budget".to_string(),
         "p50 us".to_string(),
         "p95 us".to_string(),
         "p99 us".to_string(),
@@ -30,7 +33,7 @@ pub fn fig_serve_latency(reports: &[MixReport]) -> Table {
             r.arrival.clone(),
             r.clients.to_string(),
             r.issued.to_string(),
-            r.shed.to_string(),
+            format!("{}/{}", r.shed_queue_full, r.shed_over_budget),
             r.p50_us.to_string(),
             r.p95_us.to_string(),
             r.p99_us.to_string(),
@@ -43,8 +46,10 @@ pub fn fig_serve_latency(reports: &[MixReport]) -> Table {
 }
 
 /// Dispatch-mix table: how each mix's traffic split across batched vs
-/// singleton dispatches and what triggered the flushes — the batching
-/// policy's side of the tail-latency story.
+/// singleton dispatches, what sealed the batches (including the cost
+/// model's marginal-latency `budget` seals), and the sharded worker
+/// pool's EDF behavior — the scheduling policy's side of the
+/// tail-latency story.
 pub fn fig_serve_dispatch(reports: &[MixReport]) -> Table {
     let mut table = Table::new(vec![
         "mix".to_string(),
@@ -54,8 +59,12 @@ pub fn fig_serve_dispatch(reports: &[MixReport]) -> Table {
         "singleton".to_string(),
         "dispatches".to_string(),
         "flush full".to_string(),
+        "flush budget".to_string(),
         "flush deadline".to_string(),
         "flush drained".to_string(),
+        "qdepth max".to_string(),
+        "edf inv".to_string(),
+        "stolen".to_string(),
         "models".to_string(),
     ]);
     for r in reports {
@@ -74,6 +83,10 @@ pub fn fig_serve_dispatch(reports: &[MixReport]) -> Table {
             r.flushes.0.to_string(),
             r.flushes.1.to_string(),
             r.flushes.2.to_string(),
+            r.flushes.3.to_string(),
+            r.max_queue_depth.to_string(),
+            r.edf_inversions.to_string(),
+            r.stolen_dispatches.to_string(),
             models.join(" "),
         ]);
     }
@@ -104,6 +117,9 @@ mod tests {
             assert!(disp.contains(name), "{disp}");
         }
         assert!(lat.contains("p99 us"));
+        assert!(lat.contains("shed full/budget"));
         assert!(disp.contains("flush deadline"));
+        assert!(disp.contains("flush budget"));
+        assert!(disp.contains("edf inv"));
     }
 }

@@ -24,8 +24,8 @@ pub const COL_TILE: usize = 4;
 /// Extract + MAC over all batch columns: `out[c][r] = Σ_k w[r][k] · a[c][k]`.
 ///
 /// `a_cols`: `batch` unpacked int8 activation vectors, each of length
-/// `wp.k_padded()` (column-major batches, as the dynamic batcher
-/// collects them).  `out`: `batch * rows`, batch-major.
+/// `wp.k_padded()` (column-major batches, as the admission scheduler
+/// seals them).  `out`: `batch * rows`, batch-major.
 pub fn gemm_fullpack<const B: usize>(
     wp: &PackedMatrix,
     a_cols: &[&[i8]],

@@ -2,7 +2,7 @@
 //! benches, the serving-engine demo, and PJRT artifact execution.
 
 use fullpack::cli::{Args, USAGE};
-use fullpack::coordinator::{BatcherConfig, Engine, EngineConfig, RouterConfig};
+use fullpack::coordinator::{Engine, EngineConfig, RouterConfig, SchedulerConfig, SubmitError};
 use fullpack::costmodel::Method;
 use fullpack::figures::{e2e, ondevice, sweeps, SIZES, SIZES_QUICK};
 use fullpack::kernels::{GemvKernel, KernelRegistry};
@@ -243,7 +243,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let requests = args.opt_usize("requests", 32).map_err(|e| anyhow!(e))?;
     // config file takes precedence over ad-hoc flags
-    let (engine_cfg, roster) = if let Some(path) = args.opt("config") {
+    let (mut engine_cfg, roster) = if let Some(path) = args.opt("config") {
         let fc = fullpack::coordinator::FileConfig::load(path)?;
         (fc.engine, fc.models)
     } else {
@@ -252,7 +252,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let size = if args.flag("tiny") { ModelSize::Tiny } else { ModelSize::Full };
         let zoo_name = args.opt_or("model", "deepspeech").to_string();
         (
-            EngineConfig { workers, batcher: BatcherConfig::default(), router: RouterConfig::default() },
+            EngineConfig {
+                workers,
+                sched: SchedulerConfig::default(),
+                router: RouterConfig::default(),
+            },
             vec![fullpack::coordinator::ModelSpec {
                 name: zoo_name.clone(),
                 model: zoo_name,
@@ -262,6 +266,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
             }],
         )
     };
+    // scheduler knobs layer on top of either source
+    engine_cfg.sched.max_batch = args
+        .opt_usize("max-batch", engine_cfg.sched.max_batch)
+        .map_err(|e| anyhow!(e))?;
+    engine_cfg.sched.max_queue = args
+        .opt_usize("max-queue", engine_cfg.sched.max_queue)
+        .map_err(|e| anyhow!(e))?;
+    engine_cfg.sched.slo = std::time::Duration::from_millis(
+        args.opt_usize("slo-ms", engine_cfg.sched.slo.as_millis() as usize)
+            .map_err(|e| anyhow!(e))? as u64,
+    );
+    if args.flag("fixed-deadline") {
+        // the pre-scheduler policy: no cost-model seals, no admission
+        // control — the before-side of the EXPERIMENTS.md comparison
+        engine_cfg.sched.cost_flush = false;
+        engine_cfg.sched.shed_over_budget = false;
+    }
     let intra = args.opt_usize("intra-threads", 1).map_err(|e| anyhow!(e))?;
     let engine = Engine::new(engine_cfg);
     let mut first: Option<(String, usize)> = None;
@@ -308,13 +329,32 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     }
     let (target, input_len) = first.ok_or_else(|| anyhow!("config has no models"))?;
-    println!("serving {target} ({} workers, {requests} requests)...", engine_cfg.workers);
+    println!(
+        "serving {target} ({} workers, {requests} requests, slo {}ms{})...",
+        engine_cfg.workers,
+        engine_cfg.sched.slo.as_millis(),
+        if engine_cfg.sched.cost_flush { "" } else { ", fixed-deadline policy" },
+    );
     let frames: Vec<f32> = (0..input_len).map(|i| (i as f32 * 0.01).sin()).collect();
-    let rxs: Vec<_> = (0..requests)
-        .map(|_| engine.submit(&target, frames.clone()))
-        .collect::<Result<_>>()?;
+    // typed sheds are an expected outcome under admission control, not
+    // a demo failure: collect what was admitted, report what was shed
+    let mut rxs = Vec::with_capacity(requests);
+    let mut shed = 0u64;
+    for _ in 0..requests {
+        match engine.try_submit(&target, frames.clone()) {
+            Ok(rx) => rxs.push(rx),
+            Err(SubmitError::Rejected(rej)) => {
+                shed += 1;
+                println!("  {rej}");
+            }
+            Err(e) => bail!("{e}"),
+        }
+    }
     for rx in rxs {
         rx.recv().map_err(|_| anyhow!("engine dropped request"))??;
+    }
+    if shed > 0 {
+        println!("{shed}/{requests} requests shed by admission control (typed, retry-hinted)");
     }
     println!("metrics: {}", engine.metrics().summary());
     let (gemv, gemm) = engine.router().counts();
@@ -326,7 +366,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// `workload gen-mixes|run|sweep`: the scenario-mix harness
 /// (DESIGN.md §11).  `gen-mixes` samples concrete mix files from a mix
 /// space, `run` replays one mix (live engine by default), `sweep`
-/// samples + runs a whole set and emits the `bench-serve/v1` document.
+/// samples + runs a whole set and emits the `bench-serve/v2` document.
 fn cmd_workload(args: &Args) -> Result<()> {
     use fullpack::figures::serve::{fig_serve_dispatch, fig_serve_latency};
     use fullpack::workload::{
@@ -414,7 +454,7 @@ fn cmd_workload(args: &Args) -> Result<()> {
             let space_desc = args.opt_or("space", "default space");
             let note = format!("mix sweep: seed {seed}, {count} mixes from {space_desc}");
             write_serve_json(out, mode, &host, &note, &reports)?;
-            println!("\nwrote {out} (schema bench-serve/v1, source {mode})");
+            println!("\nwrote {out} (schema bench-serve/v2, source {mode})");
             Ok(())
         }
         _ => bail!("workload expects: gen-mixes | run --mix F.json | sweep"),

@@ -48,6 +48,19 @@ pub trait Model: Send + Sync {
     /// per request).
     fn route_ops(&self, group: usize) -> Vec<OpDesc>;
 
+    /// Modeled service time (ns) of one batched dispatch of `group`
+    /// requests — the admission scheduler's marginal-latency brain
+    /// (DESIGN.md §12).  `None` means the model carries no cost model;
+    /// the engine falls back to a [`Model::route_ops`]-derived
+    /// estimate.  Graph-backed models return
+    /// `costmodel::serving_dispatch_ns`, the same curve the virtual
+    /// workload DES replays, which is what keeps live and virtual
+    /// admission decisions bit-identical.
+    fn dispatch_cost_ns(&self, group: usize) -> Option<u64> {
+        let _ = group;
+        None
+    }
+
     /// One-line description for logs and the CLI.
     fn describe(&self) -> String;
 }
@@ -71,6 +84,10 @@ impl Model for CompiledModel {
 
     fn route_ops(&self, group: usize) -> Vec<OpDesc> {
         self.route_op_descs(group)
+    }
+
+    fn dispatch_cost_ns(&self, group: usize) -> Option<u64> {
+        Some(crate::costmodel::serving_dispatch_ns(self.graph(), group))
     }
 
     fn describe(&self) -> String {

@@ -4,33 +4,42 @@
 //! Two modes share the same per-client plans ([`super::arrivals`]):
 //!
 //! - [`run_live`] drives the **real** [`Engine`] — worker threads,
-//!   channels, the deadline batcher — with one OS thread per client.
+//!   channels, the admission scheduler — with one OS thread per client.
 //!   Wall-clock timing is real, so latencies are host-dependent; reply
 //!   *contents* are not, and `verify` checks every completed reply
 //!   bit-for-bit against an unbatched reference forward (safe because
 //!   `Model::forward_batch` is pinned bit-identical to per-request
 //!   forwards).
 //! - [`run_virtual`] replays the plan on a virtual clock: a
-//!   discrete-event mirror of the batcher policy (full-batch and
-//!   deadline flushes, backpressure sheds, per-model grouping) with
-//!   service times from the L2 cost model (`costmodel`, ex5-big core).
-//!   Fully deterministic — same mix ⇒ identical trace — which is what
-//!   CI and the sweep figures run on.
+//!   discrete-event loop that drives **the same
+//!   [`Scheduler`](crate::coordinator::Scheduler) state machine the
+//!   live engine runs** (admission, cost-model budget seals, EDF
+//!   dequeue, typed sheds) with virtual timestamps and service times
+//!   from the L2 cost model (`costmodel::serving_dispatch_ns`, ex5-big
+//!   core).  Because the policy is shared code, flush decisions and
+//!   shed counts mirror the live engine bit-exactly whenever live
+//!   timing cannot influence them (see
+//!   `tests/workload_harness.rs`).  Fully deterministic — same mix ⇒
+//!   identical trace — which is what CI and the sweep figures run on.
 //!
 //! Both modes drive a real [`Metrics`] instance, so a report built from
 //! the trace can reconcile record counts against engine counters
-//! exactly ([`super::report::build_report`]).
+//! exactly ([`super::report::build_report`]).  Both accept a
+//! [`FaultPlan`] (worker stalls, slow models) through the `_with`
+//! variants; `FaultPlan::poison_reply_every` is a client-side fault the
+//! scheduler battery injects directly and is ignored here.
 
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap, VecDeque};
+use std::collections::{BinaryHeap, HashMap};
 use std::sync::atomic::Ordering::Relaxed;
 use std::time::{Duration, Instant};
 
 use super::arrivals::client_plan;
 use super::mix::WorkloadMix;
-use crate::coordinator::{Engine, Metrics, ModelCounters};
-use crate::costmodel::{simulate_model_total, CachePreset, CoreModel};
-use crate::figures::e2e::fullpack_methods_for;
+use crate::coordinator::{
+    CostFn, Engine, FaultPlan, Metrics, ModelCounters, Scheduler, ShedReason, SubmitError,
+};
+use crate::costmodel::serving_dispatch_ns;
 use crate::models::{CompiledModel, Model, ModelGraph, ModelRegistry};
 use crate::util::error::{anyhow, bail, Result};
 use crate::util::rng::SplitMix64;
@@ -40,20 +49,28 @@ use crate::util::rng::SplitMix64;
 pub enum Outcome {
     /// replied successfully
     Completed,
-    /// rejected at submission by queue backpressure
-    Shed,
+    /// shed at admission with a typed reason (queue backpressure or
+    /// SLO admission control)
+    Shed(ShedReason),
     /// replied with an error
     Error,
 }
 
 impl Outcome {
-    /// Schema label (`completed`/`shed`/`error`).
+    /// Schema label (`completed`/`shed-queue-full`/`shed-over-budget`/
+    /// `error`).
     pub fn name(&self) -> &'static str {
         match self {
             Outcome::Completed => "completed",
-            Outcome::Shed => "shed",
+            Outcome::Shed(ShedReason::QueueFull) => "shed-queue-full",
+            Outcome::Shed(ShedReason::OverBudget) => "shed-over-budget",
             Outcome::Error => "error",
         }
+    }
+
+    /// Was this request shed at admission (either reason)?
+    pub fn is_shed(&self) -> bool {
+        matches!(self, Outcome::Shed(_))
     }
 }
 
@@ -89,8 +106,18 @@ pub struct EngineSnapshot {
     pub singleton_requests: u64,
     /// multi-request batched dispatches
     pub batched_dispatches: u64,
-    /// `(full, deadline, drained)` batch-flush counts
-    pub flushes: (u64, u64, u64),
+    /// `(full, budget, deadline, drained)` batch-flush counts
+    pub flushes: (u64, u64, u64, u64),
+    /// `(queue_full, over_budget)` typed shed counts
+    pub sheds: (u64, u64),
+    /// shard-affinity dispatches past an earlier global deadline
+    pub edf_inversions: u64,
+    /// dispatches taken from outside the worker's home shard
+    pub stolen_dispatches: u64,
+    /// high-water per-model queue depth observed at admission
+    pub max_queue_depth: u64,
+    /// dispatch batch-size histogram, sorted by size
+    pub batch_sizes: Vec<(u64, u64)>,
     /// per-model counters, sorted by registered name
     pub per_model: Vec<(String, ModelCounters)>,
 }
@@ -106,6 +133,11 @@ impl EngineSnapshot {
             singleton_requests: m.singleton_requests.load(Relaxed),
             batched_dispatches: m.batched_dispatches.load(Relaxed),
             flushes: m.flush_counts(),
+            sheds: m.shed_counts(),
+            edf_inversions: m.edf_inversions.load(Relaxed),
+            stolen_dispatches: m.stolen_dispatches.load(Relaxed),
+            max_queue_depth: m.max_queue_depth.load(Relaxed),
+            batch_sizes: m.batch_size_counts(),
             per_model: m.per_model_counters(),
         }
     }
@@ -163,14 +195,19 @@ fn build_models(mix: &WorkloadMix) -> Result<Vec<(ModelGraph, CompiledModel)>> {
     Ok(out)
 }
 
-/// Replay `mix` against a live [`Engine`]: one thread per client, real
-/// batcher, real workers.  With `verify`, every completed reply is
-/// checked bit-for-bit against an unbatched reference forward of the
-/// same frames.  Returns the trace with records sorted by
-/// `(client, index)`.
+/// [`run_live_with`] with no injected faults.
 pub fn run_live(mix: &WorkloadMix, verify: bool) -> Result<RunTrace> {
+    run_live_with(mix, verify, &FaultPlan::default())
+}
+
+/// Replay `mix` against a live [`Engine`]: one thread per client, real
+/// admission scheduler, real workers, with `faults` injected into the
+/// engine.  With `verify`, every completed reply is checked
+/// bit-for-bit against an unbatched reference forward of the same
+/// frames.  Returns the trace with records sorted by `(client, index)`.
+pub fn run_live_with(mix: &WorkloadMix, verify: bool, faults: &FaultPlan) -> Result<RunTrace> {
     mix.validate()?;
-    let engine = Engine::new(mix.engine);
+    let engine = Engine::new_with_faults(mix.engine, faults.clone());
     // register one compiled instance and keep an independent reference
     // instance for verification
     let refs: Vec<CompiledModel> = {
@@ -250,7 +287,7 @@ fn client_loop(
                 frame_stream(client, index),
             ).next_u64());
             let submit_ns = t0.elapsed().as_nanos() as u64;
-            match engine.submit(&model.spec.name, frames.clone()) {
+            match engine.try_submit(&model.spec.name, frames.clone()) {
                 Ok(rx) => {
                     let slot = (index, req.model, submit_ns, frames, rx);
                     if open_loop {
@@ -259,13 +296,24 @@ fn client_loop(
                         inline.push(slot);
                     }
                 }
-                Err(_) => records.push(RequestRecord {
+                Err(SubmitError::Rejected(rej)) => records.push(RequestRecord {
                     client,
                     index,
                     model: req.model,
                     submit_ns,
                     latency_us: 0,
-                    outcome: Outcome::Shed,
+                    outcome: Outcome::Shed(rej.reason),
+                }),
+                // the roster registers every mix model up front, so an
+                // unknown-model refusal is a harness bug — but record
+                // it as the error the engine counted it as
+                Err(SubmitError::UnknownModel(_)) => records.push(RequestRecord {
+                    client,
+                    index,
+                    model: req.model,
+                    submit_ns,
+                    latency_us: 0,
+                    outcome: Outcome::Error,
                 }),
             }
             index += 1;
@@ -336,51 +384,69 @@ enum Ev {
         /// burst index in the client's plan
         burst: usize,
     },
-    /// a worker finished its flush
+    /// a worker finished its dispatch
     WorkerFree,
-    /// the oldest queued request's max-wait deadline passed
-    Deadline,
+    /// a forming batch's seal-eligibility instant (deadline or budget)
+    Wake,
 }
 
-/// One queued (virtual) request.
+/// One queued (virtual) request — the scheduler's payload.
 #[derive(Debug, Clone, Copy)]
 struct QItem {
-    enq_ns: u64,
     client: usize,
     index: usize,
-    model: usize,
+}
+
+/// [`run_virtual_with`] with no injected faults.
+pub fn run_virtual(mix: &WorkloadMix) -> Result<RunTrace> {
+    run_virtual_with(mix, &FaultPlan::default())
 }
 
 /// Replay `mix` on a virtual clock: a deterministic discrete-event
-/// mirror of the engine's batcher policy with cost-model service times
-/// (ex5-big core, gem5 cache preset — ns = cycles / freq).  Drives a
+/// loop around the **live engine's own [`Scheduler`]** — admission,
+/// cost-model budget seals, EDF/shard dequeue and typed sheds are the
+/// same code the live engine runs, fed virtual timestamps — with
+/// service times from the L2 cost model (`serving_dispatch_ns`: ex5-big
+/// core, gem5 cache preset, ns = cycles / freq).  `faults` mirrors the
+/// live plan: worker stalls delay each worker's first availability,
+/// slow models add their extra latency to every dispatch.  Drives a
 /// real [`Metrics`] instance so reports reconcile exactly.  Same mix ⇒
 /// byte-identical trace.
-pub fn run_virtual(mix: &WorkloadMix) -> Result<RunTrace> {
+pub fn run_virtual_with(mix: &WorkloadMix, faults: &FaultPlan) -> Result<RunTrace> {
     mix.validate()?;
     let models = build_models(mix)?;
     let metrics = Metrics::default();
-    let core = CoreModel::ex5_big();
-    let preset = CachePreset::Gem5Ex5Big;
-    // service time of one flushed group of n same-model requests: the
-    // batched forward widens every layer to n·time_steps columns, which
-    // is exactly a graph with time_steps scaled by n
-    let mut svc_memo: HashMap<(usize, usize), u64> = HashMap::new();
-    let mut svc_ns = |model: usize, n: usize| -> u64 {
-        *svc_memo.entry((model, n)).or_insert_with(|| {
-            let mut g = models[model].0.clone();
-            g.time_steps *= n;
-            let (cell_m, fc_m) = fullpack_methods_for(&g);
-            let cycles = simulate_model_total(&g, cell_m, fc_m, preset, &core, 2);
-            (cycles / core.freq_ghz) as u64
-        })
+    let names: Vec<String> = mix.models.iter().map(|m| m.spec.name.clone()).collect();
+    // the same service-time curve CompiledModel::dispatch_cost_ns
+    // feeds the live engine's scheduler — shared brain, shared numbers
+    let cost: CostFn = {
+        let graphs: Vec<ModelGraph> = models.iter().map(|(g, _)| g.clone()).collect();
+        let by_name: HashMap<String, usize> =
+            names.iter().enumerate().map(|(i, n)| (n.clone(), i)).collect();
+        Box::new(move |name, n| serving_dispatch_ns(&graphs[by_name[name]], n))
     };
+    let mut sched: Scheduler<QItem> = Scheduler::new(mix.engine.sched, cost);
+    for (i, name) in names.iter().enumerate() {
+        let id = sched.register(name);
+        debug_assert_eq!(id, i, "registration order must match mix order");
+    }
+    let fault_extra_ns: Vec<u64> = names
+        .iter()
+        .map(|n| faults.slow_for(n).map(|d| d.as_nanos() as u64).unwrap_or(0))
+        .collect();
 
-    let max_batch = mix.engine.batcher.max_batch;
-    let max_queue = mix.engine.batcher.max_queue;
-    let max_wait_ns = mix.engine.batcher.max_wait.as_nanos() as u64;
     let workers = mix.engine.workers.max(1);
-    let mut free_at = vec![0u64; workers];
+    // a stalled worker pool becomes available only after the stall
+    let stall_ns = faults.worker_stall.as_nanos() as u64;
+    let mut free_at = vec![stall_ns; workers];
+
+    let mut heap: BinaryHeap<Reverse<(u64, u64, Ev)>> = BinaryHeap::new();
+    let mut seq = 0u64;
+    if stall_ns > 0 {
+        // sealed work queued entirely inside the stall window still
+        // needs a wake-up the moment the pool recovers
+        push_ev(&mut heap, &mut seq, stall_ns, Ev::WorkerFree);
+    }
 
     let plans: Vec<_> = (0..mix.clients).map(|c| client_plan(mix, c)).collect();
     // per-client replay cursors (closed loop schedules burst n+1 only
@@ -388,9 +454,6 @@ pub fn run_virtual(mix: &WorkloadMix) -> Result<RunTrace> {
     let mut next_index = vec![0usize; mix.clients];
     let mut outstanding = vec![0usize; mix.clients];
     let mut done_bursts = vec![0usize; mix.clients];
-
-    let mut heap: BinaryHeap<Reverse<(u64, u64, Ev)>> = BinaryHeap::new();
-    let mut seq = 0u64;
 
     let open_loop = mix.arrival.is_open_loop();
     if open_loop {
@@ -408,7 +471,6 @@ pub fn run_virtual(mix: &WorkloadMix) -> Result<RunTrace> {
         }
     }
 
-    let mut queue: VecDeque<QItem> = VecDeque::new();
     let mut records = Vec::with_capacity(mix.total_requests());
     let mut wall_ns = 0u64;
 
@@ -419,21 +481,25 @@ pub fn run_virtual(mix: &WorkloadMix) -> Result<RunTrace> {
             for req in &plans[client][burst].requests {
                 let index = next_index[client];
                 next_index[client] += 1;
-                // mirror Engine::submit exactly: the request counter
-                // includes sheds, which never reach a worker
+                // mirror Engine::try_submit exactly: the request
+                // counter includes sheds, which never reach a worker
                 metrics.requests.fetch_add(1, Relaxed);
-                if queue.len() >= max_queue {
-                    records.push(RequestRecord {
-                        client,
-                        index,
-                        model: req.model,
-                        submit_ns: t,
-                        latency_us: 0,
-                        outcome: Outcome::Shed,
-                    });
-                } else {
-                    queue.push_back(QItem { enq_ns: t, client, index, model: req.model });
-                    outstanding[client] += 1;
+                match sched.submit(req.model, QItem { client, index }, t) {
+                    Ok(a) => {
+                        metrics.observe_queue_depth(&names[req.model], a.depth as u64);
+                        outstanding[client] += 1;
+                    }
+                    Err(rej) => {
+                        metrics.record_shed(&names[req.model], rej.reason);
+                        records.push(RequestRecord {
+                            client,
+                            index,
+                            model: req.model,
+                            submit_ns: t,
+                            latency_us: 0,
+                            outcome: Outcome::Shed(rej.reason),
+                        });
+                    }
                 }
             }
             // a fully-shed closed-loop burst completes immediately
@@ -441,90 +507,79 @@ pub fn run_virtual(mix: &WorkloadMix) -> Result<RunTrace> {
                 schedule_next_burst(&plans, client, burst, t, &mut done_bursts, &mut heap, &mut seq);
             }
         }
-        // dispatch: a free worker flushes when the batch is full or the
-        // oldest entry is past its deadline (no force-drain — matching
-        // a live engine in steady state, where Drained stays 0)
+        // dispatch sweep: every worker free at `t` drains its shard's
+        // earliest-deadline sealed batch (stealing globally when the
+        // shard is idle) — the same pop the live worker loop runs
         loop {
-            if queue.is_empty() {
-                break;
-            }
-            let Some(w) = (0..workers).filter(|&w| free_at[w] <= t).min_by_key(|&w| free_at[w])
-            else {
-                break; // a WorkerFree event is pending
-            };
-            let full = queue.len() >= max_batch;
-            let due = t >= queue.front().unwrap().enq_ns + max_wait_ns;
-            if !(full || due) {
-                push_ev(
-                    &mut heap,
-                    &mut seq,
-                    queue.front().unwrap().enq_ns + max_wait_ns,
-                    Ev::Deadline,
-                );
-                break;
-            }
-            metrics.record_flush(if full {
-                crate::coordinator::FlushReason::Full
-            } else {
-                crate::coordinator::FlushReason::Deadline
-            });
-            let n = queue.len().min(max_batch);
-            let batch: Vec<QItem> = queue.drain(..n).collect();
-            // group by model preserving arrival order (dispatch_flush)
-            let mut groups: Vec<(usize, Vec<QItem>)> = Vec::new();
-            for item in batch {
-                match groups.iter_mut().find(|(m, _)| *m == item.model) {
-                    Some((_, v)) => v.push(item),
-                    None => groups.push((item.model, vec![item])),
+            sched.on_tick(t);
+            let mut dispatched = false;
+            for w in 0..workers {
+                if free_at[w] > t {
+                    continue;
                 }
-            }
-            let mut t_cursor = t;
-            for (model, items) in groups {
-                let name = &mix.models[model].spec.name;
-                let svc = svc_ns(model, items.len());
-                if items.len() >= 2 {
-                    metrics.record_batched_dispatch(name, items.len() as u64);
+                let Some(d) = sched.pop(t, Some((w, workers))) else { continue };
+                metrics.record_flush(d.reason);
+                metrics.record_batch_size(d.entries.len() as u64);
+                if d.stolen {
+                    metrics.stolen_dispatches.fetch_add(1, Relaxed);
+                }
+                if d.inversion {
+                    metrics.edf_inversions.fetch_add(1, Relaxed);
+                }
+                let n = d.entries.len();
+                let name = &names[d.model];
+                let svc = sched.modeled_cost_ns(d.model, n) + fault_extra_ns[d.model];
+                if n >= 2 {
+                    metrics.record_batched_dispatch(name, n as u64);
                 } else {
                     metrics.record_singleton(name, 1);
                 }
-                for item in &items {
-                    // queue wait measured at this group's dispatch,
-                    // plus the whole group's forward — process_group
-                    let latency_ns = (t_cursor - item.enq_ns) + svc;
-                    let latency_us = latency_ns / 1_000;
+                let done = t + svc;
+                for (item, enq_ns) in &d.entries {
+                    // queue wait measured at dispatch, plus the whole
+                    // group's forward — process_group semantics
+                    let latency_us = ((t - enq_ns) + svc) / 1_000;
                     metrics.observe_latency_for(name, latency_us);
                     records.push(RequestRecord {
                         client: item.client,
                         index: item.index,
-                        model: item.model,
-                        submit_ns: item.enq_ns,
+                        model: d.model,
+                        submit_ns: *enq_ns,
                         latency_us,
                         outcome: Outcome::Completed,
                     });
-                }
-                t_cursor += svc;
-                // closed loop: a finished burst unblocks its client
-                for item in &items {
+                    // closed loop: a finished burst unblocks its client
                     outstanding[item.client] -= 1;
                     if !open_loop && outstanding[item.client] == 0 {
                         schedule_next_burst(
                             &plans,
                             item.client,
                             done_bursts[item.client],
-                            t_cursor,
+                            done,
                             &mut done_bursts,
                             &mut heap,
                             &mut seq,
                         );
                     }
                 }
+                free_at[w] = done;
+                wall_ns = wall_ns.max(done);
+                push_ev(&mut heap, &mut seq, done, Ev::WorkerFree);
+                dispatched = true;
             }
-            free_at[w] = t_cursor;
-            wall_ns = wall_ns.max(t_cursor);
-            push_ev(&mut heap, &mut seq, t_cursor, Ev::WorkerFree);
+            if !dispatched {
+                break;
+            }
+        }
+        // nothing dispatchable: if batches are still forming, wake at
+        // their next seal-eligibility instant (deadline or budget)
+        if sched.has_forming() {
+            if let Some(tw) = sched.next_wakeup(t) {
+                push_ev(&mut heap, &mut seq, tw, Ev::Wake);
+            }
         }
     }
-    if queue.front().is_some() {
+    if !sched.is_empty() {
         bail!("virtual run ended with queued requests (simulator bug)");
     }
     records.sort_by_key(|r| (r.client, r.index));
@@ -593,13 +648,18 @@ mod tests {
         let s = &trace.snapshot;
         let completed =
             trace.records.iter().filter(|r| r.outcome == Outcome::Completed).count() as u64;
-        let shed = trace.records.iter().filter(|r| r.outcome == Outcome::Shed).count() as u64;
+        let shed = trace.records.iter().filter(|r| r.outcome.is_shed()).count() as u64;
         assert_eq!(s.requests, completed + shed);
         assert_eq!(s.completed, completed);
         assert_eq!(s.errors, 0);
         assert_eq!(s.batched_requests + s.singleton_requests, completed);
+        // typed sheds reconcile with the records
+        assert_eq!(s.sheds.0 + s.sheds.1, shed);
         // no force-drain in the virtual policy
-        assert_eq!(s.flushes.2, 0);
+        assert_eq!(s.flushes.3, 0);
+        // the batch-size histogram covers every served request
+        let sized: u64 = s.batch_sizes.iter().map(|&(sz, n)| sz * n).sum();
+        assert_eq!(sized, completed);
         // latencies are the cost-model service time at minimum
         assert!(trace
             .records
@@ -610,19 +670,51 @@ mod tests {
     }
 
     #[test]
-    fn virtual_sheds_under_tiny_queue() {
+    fn virtual_sheds_under_tiny_queue_are_typed() {
         let mut mix = tiny_mix("poisson");
         mix.arrival = crate::workload::mix::ArrivalProcess::OpenPoisson { rate_rps: 1e9 };
         mix.requests_per_client = 50;
-        mix.engine.batcher.max_queue = 2;
-        mix.engine.batcher.max_batch = 2;
+        mix.engine.sched.max_queue = 2;
+        mix.engine.sched.max_batch = 2;
         let trace = run_virtual(&mix).unwrap();
-        let shed = trace.records.iter().filter(|r| r.outcome == Outcome::Shed).count();
+        let shed = trace.records.iter().filter(|r| r.outcome.is_shed()).count();
         assert!(shed > 0, "expected backpressure sheds at absurd rate");
+        assert!(
+            trace
+                .records
+                .iter()
+                .any(|r| r.outcome == Outcome::Shed(ShedReason::QueueFull)),
+            "queue-full sheds carry their reason"
+        );
         assert_eq!(
             trace.snapshot.requests as usize,
             trace.records.len(),
             "sheds still count as accepted requests"
+        );
+        assert_eq!(
+            trace.snapshot.sheds.0 + trace.snapshot.sheds.1,
+            shed as u64,
+            "typed shed counters reconcile"
+        );
+    }
+
+    #[test]
+    fn virtual_worker_stall_fault_delays_first_dispatch() {
+        let mix = tiny_mix("deterministic");
+        let base = run_virtual(&mix).unwrap();
+        let stalled = run_virtual_with(
+            &mix,
+            &FaultPlan { worker_stall: Duration::from_millis(5), ..FaultPlan::default() },
+        )
+        .unwrap();
+        // all requests still resolve exactly once under the fault
+        assert_eq!(stalled.records.len(), mix.total_requests());
+        // and the virtual clock reflects the injected stall
+        assert!(
+            stalled.wall_ns >= 5_000_000 && stalled.wall_ns >= base.wall_ns,
+            "stall must push completions past 5ms (got {} vs base {})",
+            stalled.wall_ns,
+            base.wall_ns
         );
     }
 

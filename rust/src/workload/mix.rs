@@ -747,8 +747,11 @@ mod tests {
         assert!(mix.arrival.is_open_loop());
         assert_eq!(mix.models.len(), 2);
         assert_eq!(mix.models[0].weight, 1.5);
-        assert_eq!(mix.engine.batcher.max_batch, 4);
-        // serialize -> parse -> identical structure
+        // the legacy "batcher" key still reaches the scheduler config
+        assert_eq!(mix.engine.sched.max_batch, 4);
+        assert_eq!(mix.engine.sched.slo, crate::coordinator::SchedulerConfig::default().slo);
+        // serialize -> parse -> identical structure (to_json re-emits
+        // the modern "scheduler" key; the parse prefers it)
         let text = mix.to_json();
         let back = WorkloadMix::parse(&text).unwrap();
         assert_eq!(back, mix);

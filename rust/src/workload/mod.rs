@@ -17,13 +17,19 @@
 //!    same seed ⇒ byte-identical mix files.
 //! 3. **loadgen** ([`loadgen`]) — multi-client replay of a mix against
 //!    the **live** [`crate::coordinator::Engine`] (real threads, real
-//!    channels, real batcher) in open- and closed-loop modes, plus a
-//!    virtual-clock discrete-event mode that mirrors the batcher
-//!    policy deterministically for tests and cost-model sweeps.
+//!    channels, the real admission scheduler) in open- and closed-loop
+//!    modes, plus a virtual-clock discrete-event mode that drives the
+//!    *same* [`crate::coordinator::Scheduler`] state machine with
+//!    cost-model service times — flush decisions and typed shed counts
+//!    mirror the live policy bit-exactly on timing-insensitive mixes.
+//!    Both modes accept a [`crate::coordinator::FaultPlan`] through the
+//!    `_with` variants (worker stalls, slow models) for degradation
+//!    testing.
 //! 4. **report** ([`report`]) — per-mix aggregation into exact
-//!    p50/p95/p99, throughput, shed/error counts and the dispatch mix,
+//!    p50/p95/p99, throughput, typed shed/error counts, flush-reason
+//!    and dispatch splits, queue occupancy and EDF inversions,
 //!    reconciled against [`crate::coordinator::Metrics`] and emitted
-//!    as the `bench-serve/v1` schema (`BENCH_serve.json`).
+//!    as the `bench-serve/v2` schema (`BENCH_serve.json`).
 #![warn(missing_docs)]
 
 pub mod arrivals;
@@ -32,6 +38,9 @@ pub mod mix;
 pub mod report;
 
 pub use arrivals::{client_plan, PlannedBurst, PlannedRequest};
-pub use loadgen::{run_live, run_virtual, EngineSnapshot, Outcome, RequestRecord, RunTrace};
+pub use loadgen::{
+    run_live, run_live_with, run_virtual, run_virtual_with, EngineSnapshot, Outcome,
+    RequestRecord, RunTrace,
+};
 pub use mix::{ArrivalProcess, Dist, MixModel, MixSpace, WorkloadMix};
 pub use report::{build_report, serve_records_json, write_serve_json, MixReport, ModelLine};

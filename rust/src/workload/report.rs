@@ -1,7 +1,9 @@
 //! Report layer: aggregate one run's [`RunTrace`] into a [`MixReport`]
-//! and render sweeps as the `bench-serve/v1` document
+//! and render sweeps as the `bench-serve/v2` document
 //! (`BENCH_serve.json`), sibling of `bench-kernels/v1` and
-//! `bench-gemm/v2` (`util::bench`).
+//! `bench-gemm/v2` (`util::bench`).  v2 (over v1) carries the admission
+//! scheduler's policy signals: cost-model `Budget` flushes, typed shed
+//! splits, queue-occupancy high-water marks and EDF inversions/steals.
 //!
 //! Percentiles here are **exact** nearest-rank over the raw per-request
 //! latencies — the sort oracle — not the bucketed approximation the
@@ -11,6 +13,7 @@
 
 use super::loadgen::{Outcome, RunTrace};
 use super::mix::WorkloadMix;
+use crate::coordinator::ShedReason;
 use crate::util::bench::json_escape;
 use crate::util::error::{bail, Result};
 
@@ -33,12 +36,16 @@ pub struct ModelLine {
     pub completed: u64,
     /// requests errored for this model
     pub errors: u64,
+    /// requests shed from this model's admission queue (both reasons)
+    pub shed: u64,
     /// served through a multi-request batched dispatch
     pub batched_requests: u64,
     /// served individually
     pub singleton_requests: u64,
     /// multi-request dispatches
     pub batched_dispatches: u64,
+    /// high-water queue depth observed at admission
+    pub max_queue_depth: u64,
     /// exact nearest-rank p50 over this model's completed requests (µs)
     pub p50_us: u64,
     /// exact nearest-rank p99 (µs)
@@ -67,8 +74,12 @@ pub struct MixReport {
     pub completed: u64,
     /// requests errored
     pub errors: u64,
-    /// requests shed by backpressure
+    /// requests shed at admission (both reasons)
     pub shed: u64,
+    /// sheds typed [`ShedReason::QueueFull`]
+    pub shed_queue_full: u64,
+    /// sheds typed [`ShedReason::OverBudget`]
+    pub shed_over_budget: u64,
     /// exact nearest-rank p50 latency (µs)
     pub p50_us: u64,
     /// exact nearest-rank p95 latency (µs)
@@ -89,8 +100,14 @@ pub struct MixReport {
     pub singleton_requests: u64,
     /// multi-request batched dispatches
     pub batched_dispatches: u64,
-    /// `(full, deadline, drained)` batch-flush counts
-    pub flushes: (u64, u64, u64),
+    /// `(full, budget, deadline, drained)` batch-flush counts
+    pub flushes: (u64, u64, u64, u64),
+    /// shard-affinity dispatches past an earlier global EDF deadline
+    pub edf_inversions: u64,
+    /// dispatches a worker took from outside its home shard
+    pub stolen_dispatches: u64,
+    /// engine-wide high-water per-model queue depth
+    pub max_queue_depth: u64,
     /// per-model breakdown, in mix composition order
     pub per_model: Vec<ModelLine>,
 }
@@ -110,7 +127,9 @@ pub fn build_report(mix: &WorkloadMix, trace: &RunTrace) -> Result<MixReport> {
     let count = |o: Outcome| trace.records.iter().filter(|r| r.outcome == o).count() as u64;
     let completed = count(Outcome::Completed);
     let errors = count(Outcome::Error);
-    let shed = count(Outcome::Shed);
+    let shed_queue_full = count(Outcome::Shed(ShedReason::QueueFull));
+    let shed_over_budget = count(Outcome::Shed(ShedReason::OverBudget));
+    let shed = shed_queue_full + shed_over_budget;
     let s = &trace.snapshot;
     if s.requests != issued {
         bail!("engine accepted {} requests but the trace issued {issued}", s.requests);
@@ -121,6 +140,13 @@ pub fn build_report(mix: &WorkloadMix, trace: &RunTrace) -> Result<MixReport> {
     if s.errors != errors {
         bail!("engine errored {} but the trace records {errors}", s.errors);
     }
+    if s.sheds != (shed_queue_full, shed_over_budget) {
+        bail!(
+            "engine shed {:?} (queue-full, over-budget) but the trace records ({shed_queue_full}, \
+             {shed_over_budget})",
+            s.sheds
+        );
+    }
     if s.batched_requests + s.singleton_requests != completed + errors {
         bail!(
             "dispatch split {}+{} does not cover the {} worker-handled requests",
@@ -129,7 +155,7 @@ pub fn build_report(mix: &WorkloadMix, trace: &RunTrace) -> Result<MixReport> {
             completed + errors
         );
     }
-    // per-model reconciliation: the trace's per-model completion counts
+    // per-model reconciliation: the trace's per-model outcome counts
     // must match the engine's per-model counters exactly
     let mut per_model = Vec::with_capacity(mix.models.len());
     for (mi, m) in mix.models.iter().enumerate() {
@@ -165,6 +191,18 @@ pub fn build_report(mix: &WorkloadMix, trace: &RunTrace) -> Result<MixReport> {
                 counters.errors
             );
         }
+        let model_shed = trace
+            .records
+            .iter()
+            .filter(|r| r.model == mi && r.outcome.is_shed())
+            .count() as u64;
+        if counters.sheds_queue_full + counters.sheds_over_budget != model_shed {
+            bail!(
+                "model {name:?}: engine shed {}+{} but the trace records {model_shed}",
+                counters.sheds_queue_full,
+                counters.sheds_over_budget
+            );
+        }
         let mean_us = if lat.is_empty() {
             0.0
         } else {
@@ -174,9 +212,11 @@ pub fn build_report(mix: &WorkloadMix, trace: &RunTrace) -> Result<MixReport> {
             name: name.clone(),
             completed: counters.completed,
             errors: counters.errors,
+            shed: model_shed,
             batched_requests: counters.batched_requests,
             singleton_requests: counters.singleton_requests,
             batched_dispatches: counters.batched_dispatches,
+            max_queue_depth: counters.max_queue_depth,
             p50_us: percentile(&lat, 0.50),
             p99_us: percentile(&lat, 0.99),
             mean_us,
@@ -205,6 +245,8 @@ pub fn build_report(mix: &WorkloadMix, trace: &RunTrace) -> Result<MixReport> {
         completed,
         errors,
         shed,
+        shed_queue_full,
+        shed_over_budget,
         p50_us: percentile(&lat, 0.50),
         p95_us: percentile(&lat, 0.95),
         p99_us: percentile(&lat, 0.99),
@@ -216,11 +258,14 @@ pub fn build_report(mix: &WorkloadMix, trace: &RunTrace) -> Result<MixReport> {
         singleton_requests: s.singleton_requests,
         batched_dispatches: s.batched_dispatches,
         flushes: s.flushes,
+        edf_inversions: s.edf_inversions,
+        stolen_dispatches: s.stolen_dispatches,
+        max_queue_depth: s.max_queue_depth,
         per_model,
     })
 }
 
-/// Render the `BENCH_serve.json` document (schema `bench-serve/v1`).
+/// Render the `BENCH_serve.json` document (schema `bench-serve/v2`).
 /// Provenance follows the repo convention (`util::bench`): `source`
 /// says how the numbers were obtained (`"live"` from a real engine run,
 /// `"virtual-costmodel"` from the virtual clock), `host` and `note` are
@@ -233,7 +278,7 @@ pub fn serve_records_json(
 ) -> String {
     let mut out = String::new();
     out.push_str("{\n");
-    out.push_str("  \"schema\": \"bench-serve/v1\",\n");
+    out.push_str("  \"schema\": \"bench-serve/v2\",\n");
     out.push_str(&format!("  \"source\": \"{}\",\n", json_escape(source)));
     out.push_str(&format!("  \"host\": \"{}\",\n", json_escape(host)));
     out.push_str(&format!("  \"note\": \"{}\",\n", json_escape(note)));
@@ -244,16 +289,18 @@ pub fn serve_records_json(
             .iter()
             .map(|m| {
                 format!(
-                    "{{\"name\": \"{}\", \"completed\": {}, \"errors\": {}, \
+                    "{{\"name\": \"{}\", \"completed\": {}, \"errors\": {}, \"shed\": {}, \
                      \"batched_requests\": {}, \"singleton_requests\": {}, \
-                     \"batched_dispatches\": {}, \"p50_us\": {}, \"p99_us\": {}, \
-                     \"mean_us\": {:.1}}}",
+                     \"batched_dispatches\": {}, \"max_queue_depth\": {}, \
+                     \"p50_us\": {}, \"p99_us\": {}, \"mean_us\": {:.1}}}",
                     json_escape(&m.name),
                     m.completed,
                     m.errors,
+                    m.shed,
                     m.batched_requests,
                     m.singleton_requests,
                     m.batched_dispatches,
+                    m.max_queue_depth,
                     m.p50_us,
                     m.p99_us,
                     m.mean_us,
@@ -263,11 +310,13 @@ pub fn serve_records_json(
         out.push_str(&format!(
             "    {{\"mix\": \"{}\", \"seed\": {}, \"mode\": \"{}\", \"arrival\": \"{}\", \
              \"clients\": {}, \"issued\": {}, \"completed\": {}, \"errors\": {}, \
-             \"shed\": {}, \"p50_us\": {}, \"p95_us\": {}, \"p99_us\": {}, \"max_us\": {}, \
+             \"shed\": {}, \"shed_queue_full\": {}, \"shed_over_budget\": {}, \
+             \"p50_us\": {}, \"p95_us\": {}, \"p99_us\": {}, \"max_us\": {}, \
              \"mean_us\": {:.1}, \"throughput_rps\": {:.1}, \"wall_ms\": {:.3}, \
              \"batched_requests\": {}, \"singleton_requests\": {}, \"batched_dispatches\": {}, \
-             \"flushes_full\": {}, \"flushes_deadline\": {}, \"flushes_drained\": {}, \
-             \"models\": [{}]}}{}\n",
+             \"flushes_full\": {}, \"flushes_budget\": {}, \"flushes_deadline\": {}, \
+             \"flushes_drained\": {}, \"edf_inversions\": {}, \"stolen_dispatches\": {}, \
+             \"max_queue_depth\": {}, \"models\": [{}]}}{}\n",
             json_escape(&r.mix),
             r.seed,
             json_escape(&r.mode),
@@ -277,6 +326,8 @@ pub fn serve_records_json(
             r.completed,
             r.errors,
             r.shed,
+            r.shed_queue_full,
+            r.shed_over_budget,
             r.p50_us,
             r.p95_us,
             r.p99_us,
@@ -290,6 +341,10 @@ pub fn serve_records_json(
             r.flushes.0,
             r.flushes.1,
             r.flushes.2,
+            r.flushes.3,
+            r.edf_inversions,
+            r.stolen_dispatches,
+            r.max_queue_depth,
             models.join(", "),
             if i + 1 < reports.len() { "," } else { "" },
         ));
@@ -345,20 +400,27 @@ mod tests {
         let report = build_report(&mix, &trace).unwrap();
         assert_eq!(report.issued, mix.total_requests() as u64);
         assert_eq!(report.completed + report.errors + report.shed, report.issued);
+        assert_eq!(report.shed, report.shed_queue_full + report.shed_over_budget);
         assert_eq!(report.mode, "virtual");
         assert!(report.p50_us <= report.p95_us && report.p95_us <= report.p99_us);
         assert!(report.p99_us <= report.max_us);
         assert_eq!(report.per_model.len(), mix.models.len());
         let per_model_total: u64 = report.per_model.iter().map(|m| m.completed).sum();
         assert_eq!(per_model_total, report.completed);
+        let per_model_shed: u64 = report.per_model.iter().map(|m| m.shed).sum();
+        assert_eq!(per_model_shed, report.shed);
         // the document parses back with the declared schema
         let doc = serve_records_json("virtual-costmodel", "test", "unit test", &[report]);
         let j = Json::parse(&doc).unwrap();
-        assert_eq!(j.get("schema").and_then(Json::as_str), Some("bench-serve/v1"));
+        assert_eq!(j.get("schema").and_then(Json::as_str), Some("bench-serve/v2"));
         let recs = j.get("records").and_then(Json::as_arr).unwrap();
         assert_eq!(recs.len(), 1);
         assert_eq!(recs[0].get("mix").and_then(Json::as_str), Some("mix_000"));
         assert!(recs[0].get("p99_us").and_then(Json::as_f64).is_some());
+        assert!(recs[0].get("flushes_budget").and_then(Json::as_f64).is_some());
+        assert!(recs[0].get("shed_queue_full").and_then(Json::as_f64).is_some());
+        assert!(recs[0].get("edf_inversions").and_then(Json::as_f64).is_some());
+        assert!(recs[0].get("max_queue_depth").and_then(Json::as_f64).is_some());
         assert_eq!(
             recs[0].get("models").and_then(Json::as_arr).unwrap().len(),
             mix.models.len()
@@ -379,6 +441,10 @@ mod tests {
         // inflating an engine counter breaks the completed reconciliation
         let mut t = good.clone();
         t.snapshot.completed += 1;
+        assert!(build_report(&mix, &t).is_err());
+        // an unrecorded typed shed breaks the shed reconciliation
+        let mut t = good.clone();
+        t.snapshot.sheds.1 += 1;
         assert!(build_report(&mix, &t).is_err());
         // flipping a record's model breaks the per-model reconciliation
         if mix.models.len() > 1 {

@@ -1,9 +1,9 @@
-//! Engine-level integration: the whole L3 stack (batcher → router →
-//! workers → model → kernels) under concurrent load, failure injection,
-//! and policy variations.
+//! Engine-level integration: the whole L3 stack (admission scheduler →
+//! router → sharded workers → model → kernels) under concurrent load,
+//! failure injection, and policy variations.
 
 use fullpack::coordinator::{
-    Batcher, BatcherConfig, Engine, EngineConfig, RouterConfig,
+    Engine, EngineConfig, FlushReason, RouterConfig, Scheduler, SchedulerConfig,
 };
 use fullpack::models::{DeepSpeech, DeepSpeechConfig};
 use fullpack::pack::Variant;
@@ -15,10 +15,14 @@ fn frames(cfg: DeepSpeechConfig) -> Vec<f32> {
 fn engine_with(variant: &str, workers: usize, max_queue: usize) -> Engine {
     let e = Engine::new(EngineConfig {
         workers,
-        batcher: BatcherConfig {
+        sched: SchedulerConfig {
             max_batch: 4,
             max_wait: std::time::Duration::from_millis(1),
             max_queue,
+            // lax SLO: these tests exercise load/batching, not the
+            // admission controller's budget rule
+            slo: std::time::Duration::from_secs(5),
+            ..SchedulerConfig::default()
         },
         router: RouterConfig::default(),
     });
@@ -131,10 +135,12 @@ fn producer_threads_every_reply_exactly_once_and_dispatch_counts_sum() {
     let total = (producers * per_producer) as u64;
     let e = Engine::new(EngineConfig {
         workers: 1,
-        batcher: BatcherConfig {
+        sched: SchedulerConfig {
             max_batch: 8,
             max_wait: std::time::Duration::from_millis(100),
             max_queue: 256,
+            slo: std::time::Duration::from_secs(5),
+            ..SchedulerConfig::default()
         },
         router: RouterConfig::default(),
     });
@@ -196,10 +202,12 @@ fn batched_dispatch_replies_match_singleton_results() {
     // max_batch while the single worker is still parked on the deadline
     let e = Engine::new(EngineConfig {
         workers: 1,
-        batcher: BatcherConfig {
+        sched: SchedulerConfig {
             max_batch: 4,
             max_wait: std::time::Duration::from_millis(200),
             max_queue: 64,
+            slo: std::time::Duration::from_secs(5),
+            ..SchedulerConfig::default()
         },
         router: RouterConfig::default(),
     });
@@ -225,16 +233,25 @@ fn batched_dispatch_replies_match_singleton_results() {
 }
 
 #[test]
-fn batcher_generic_over_payload() {
-    // the batcher is reusable for arbitrary work items
-    let mut b: Batcher<String> = Batcher::new(BatcherConfig {
-        max_batch: 2,
-        max_wait: std::time::Duration::from_secs(10),
-        max_queue: 8,
-    });
-    b.push("a".into()).unwrap();
-    b.push("b".into()).unwrap();
-    b.push("c".into()).unwrap();
-    let (batch, _) = b.pop_batch(false).unwrap();
-    assert_eq!(batch, vec!["a".to_string(), "b".to_string()]);
+fn scheduler_generic_over_payload() {
+    // the scheduler is reusable for arbitrary work items: max_batch 2
+    // seals {a, b} Full at admission, c keeps forming
+    let mut s: Scheduler<String> = Scheduler::new(
+        SchedulerConfig {
+            max_batch: 2,
+            max_wait: std::time::Duration::from_secs(10),
+            max_queue: 8,
+            ..SchedulerConfig::default()
+        },
+        Box::new(|_, _| 1),
+    );
+    let m = s.register("strings");
+    assert!(!s.submit(m, "a".into(), 0).unwrap().sealed);
+    assert!(s.submit(m, "b".into(), 0).unwrap().sealed);
+    assert!(!s.submit(m, "c".into(), 0).unwrap().sealed);
+    let d = s.pop(0, None).unwrap();
+    assert_eq!(d.reason, FlushReason::Full);
+    let items: Vec<String> = d.entries.into_iter().map(|(item, _)| item).collect();
+    assert_eq!(items, vec!["a".to_string(), "b".to_string()]);
+    assert!(s.has_forming() && !s.has_sealed());
 }

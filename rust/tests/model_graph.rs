@@ -10,7 +10,7 @@
 //!   through the one `Model` trait, with exactly-once replies and
 //!   per-model dispatch metrics that sum to the request totals.
 
-use fullpack::coordinator::{BatcherConfig, Engine, EngineConfig, RouterConfig};
+use fullpack::coordinator::{Engine, EngineConfig, RouterConfig, SchedulerConfig};
 use fullpack::models::{
     deepspeech_graph, CompiledModel, DeepSpeech, DeepSpeechConfig, Model, ModelRegistry,
     ModelSize,
@@ -171,10 +171,11 @@ fn engine_serves_mixed_zoo_models_exactly_once_with_per_model_metrics() {
     use std::sync::atomic::Ordering::Relaxed;
     let e = Engine::new(EngineConfig {
         workers: 2,
-        batcher: BatcherConfig {
+        sched: SchedulerConfig {
             max_batch: 6,
             max_wait: std::time::Duration::from_millis(5),
             max_queue: 256,
+            ..SchedulerConfig::default()
         },
         router: RouterConfig::default(),
     });
@@ -228,15 +229,16 @@ fn engine_serves_mixed_zoo_models_exactly_once_with_per_model_metrics() {
 
 #[test]
 fn mixed_flush_groups_by_model_and_stays_bit_identical() {
-    // one worker + a parked deadline so requests for two models land in
-    // ONE flush: the worker must group per model, batch within groups,
-    // and scatter bit-identical results
+    // one worker + a parked deadline so requests for two models
+    // coalesce inside their per-model admission queues: each model's
+    // batch must scatter bit-identical results
     let e = Engine::new(EngineConfig {
         workers: 1,
-        batcher: BatcherConfig {
+        sched: SchedulerConfig {
             max_batch: 8,
             max_wait: std::time::Duration::from_millis(200),
             max_queue: 64,
+            ..SchedulerConfig::default()
         },
         router: RouterConfig::default(),
     });

@@ -1,8 +1,8 @@
 //! Property-based invariants (proptest_lite — DESIGN.md §7) across the
 //! coordinator substrates: packing, kernels, quantization, the cache
-//! simulator, the batcher and the router.
+//! simulator, the admission scheduler and the router.
 
-use fullpack::coordinator::{Batcher, BatcherConfig};
+use fullpack::coordinator::{Scheduler, SchedulerConfig};
 use fullpack::kernels::{
     gemv, pack_activations, ActVec, GemmKernel, GemvKernel, KernelRegistry, SwarKernel, Weights,
 };
@@ -241,25 +241,37 @@ fn prop_pack_gemm_unpack_roundtrip() {
 }
 
 #[test]
-fn prop_batcher_fifo_and_lossless() {
+fn prop_scheduler_fifo_and_lossless_drain() {
     run_prop(60, |g| {
         let max_batch = g.usize_in(1, 8);
         let n = g.usize_in(0, 40);
-        let mut b = Batcher::new(BatcherConfig {
-            max_batch,
-            max_wait: std::time::Duration::from_secs(100),
-            max_queue: 1024,
-        });
+        // deadline/budget rules disarmed: only Full seals and the
+        // shutdown drain move requests, so the property is pure FIFO
+        let mut s: Scheduler<usize> = Scheduler::new(
+            SchedulerConfig {
+                max_batch,
+                max_wait: std::time::Duration::from_secs(100),
+                max_queue: 1024,
+                slo: std::time::Duration::from_secs(100),
+                cost_flush: false,
+                shed_over_budget: false,
+            },
+            Box::new(|_, group| group as u64),
+        );
+        let m = s.register("m");
         for i in 0..n {
-            b.push(i).unwrap();
-        }
-        let mut drained = Vec::new();
-        while let Some((batch, _)) = b.pop_batch(true) {
-            if batch.len() > max_batch {
+            if s.submit(m, i, i as u64).is_err() {
                 return false;
             }
-            drained.extend(batch);
         }
-        drained == (0..n).collect::<Vec<_>>()
+        s.seal_all_drained();
+        let mut drained = Vec::new();
+        while let Some(d) = s.pop(n as u64, None) {
+            if d.entries.len() > max_batch {
+                return false;
+            }
+            drained.extend(d.entries.into_iter().map(|(item, _)| item));
+        }
+        s.is_empty() && drained == (0..n).collect::<Vec<_>>()
     });
 }

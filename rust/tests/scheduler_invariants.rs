@@ -1,0 +1,499 @@
+//! Scheduler test battery (DESIGN.md §12): the admission-controlled
+//! serving core pinned by seeded property storms and fault injection.
+//!
+//! Every property runs across ≥3 seeds ([`SEEDS`]):
+//!
+//! - **exactly-once** — N producer threads × M models under shed and
+//!   deadline storms (tiny queues, 1ms deadlines, bad shapes mixed in):
+//!   every accepted request is answered exactly once, every refusal is
+//!   a typed [`Rejected`] with a retry hint, and the engine's counters
+//!   reconcile with the clients' tallies by conservation law;
+//! - **EDF** — the dequeue order of a randomly filled scheduler matches
+//!   the min-deadline oracle exactly, and shard affinity flags steals
+//!   and inversions truthfully;
+//! - **cost-model flush points** — the marginal-latency rule seals at
+//!   exactly the admission where one more column would break the SLO,
+//!   both count-driven (at submit) and clock-driven (at `on_tick`), and
+//!   the compiled cost curve feeding it is positive and monotone;
+//! - **fault injection** ([`FaultPlan`]) — worker stalls delay but
+//!   never lose replies, a slow model degrades only its own shard, and
+//!   poisoned (dropped) reply channels neither hang workers nor leak
+//!   requests.  Degradation is always a typed error or a late reply,
+//!   never a deadlock: every wait in this battery is bounded.
+
+use std::sync::atomic::Ordering::Relaxed;
+use std::time::{Duration, Instant};
+
+use fullpack::coordinator::{
+    Engine, EngineConfig, FaultPlan, FlushReason, RouterConfig, Scheduler, SchedulerConfig,
+    ShedReason, SubmitError,
+};
+use fullpack::models::{CompiledModel, Model, ModelRegistry, ModelSize};
+use fullpack::pack::Variant;
+use fullpack::util::rng::SplitMix64;
+
+/// The battery's seeds: every property must hold on each.
+const SEEDS: [u64; 3] = [1, 2, 3];
+
+const MS: u64 = 1_000_000;
+
+/// A reply must land well inside this bound; waiting longer than this
+/// is reported as a lost reply, not a hang.
+const REPLY_BOUND: Duration = Duration::from_secs(30);
+
+const ZOO: [&str; 3] = ["deepspeech", "mlp", "keyword-spotter"];
+
+fn tiny(name: &str, seed: u64) -> CompiledModel {
+    let g = ModelRegistry::global()
+        .build(name, ModelSize::Tiny, Variant::parse("w4a8").unwrap(), seed)
+        .unwrap();
+    CompiledModel::compile(g).unwrap()
+}
+
+fn storm_engine(max_queue: usize, seed: u64) -> Engine {
+    let e = Engine::new(EngineConfig {
+        workers: 2,
+        sched: SchedulerConfig {
+            max_batch: 4,
+            // deadline storm: forming batches expire every millisecond
+            max_wait: Duration::from_millis(1),
+            // shed storm: per-model queues a few entries deep
+            max_queue,
+            // lax SLO so sheds are queue-full typed, deterministically
+            slo: Duration::from_secs(5),
+            ..SchedulerConfig::default()
+        },
+        router: RouterConfig::default(),
+    });
+    for (i, name) in ZOO.iter().enumerate() {
+        e.register_model(name, tiny(name, seed + i as u64));
+    }
+    e
+}
+
+#[test]
+fn storm_every_accepted_request_replies_exactly_once_across_seeds() {
+    for seed in SEEDS {
+        let mut rng = SplitMix64::new(seed);
+        let producers = rng.usize_in(3, 5);
+        let per_producer = rng.usize_in(10, 18);
+        let max_queue = rng.usize_in(2, 5);
+        let e = std::sync::Arc::new(storm_engine(max_queue, seed));
+        let input_lens: Vec<usize> =
+            ZOO.iter().map(|n| e.model(n).unwrap().input_len()).collect();
+
+        let mut handles = Vec::new();
+        for p in 0..producers {
+            let e = e.clone();
+            let input_lens = input_lens.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = SplitMix64::stream(seed, p as u64);
+                let mut accepted = Vec::new();
+                let mut shed = 0u64;
+                for _ in 0..per_producer {
+                    let m = rng.usize_in(0, ZOO.len() - 1);
+                    // ~1 in 4 submissions carries a bad shape: the
+                    // engine must answer it with a typed error
+                    let bad = rng.usize_in(0, 3) == 0;
+                    let len = input_lens[m] + usize::from(bad);
+                    match e.try_submit(ZOO[m], vec![0.25f32; len]) {
+                        Ok(rx) => accepted.push((bad, rx)),
+                        Err(SubmitError::Rejected(rej)) => {
+                            // typed refusal with an actionable hint
+                            assert!(
+                                matches!(
+                                    rej.reason,
+                                    ShedReason::QueueFull | ShedReason::OverBudget
+                                ),
+                                "untyped shed"
+                            );
+                            assert!(rej.retry_after_us >= 1, "shed without a retry hint");
+                            assert!(rej.depth > 0);
+                            shed += 1;
+                        }
+                        Err(SubmitError::UnknownModel(m)) => {
+                            panic!("roster registered {m} up front")
+                        }
+                    }
+                    if rng.usize_in(0, 7) == 0 {
+                        // occasional think time lets deadline seals race
+                        // admission seals
+                        std::thread::sleep(Duration::from_micros(
+                            rng.usize_in(50, 400) as u64
+                        ));
+                    }
+                }
+                // collect with a bound: a reply that never comes is a
+                // lost request, and must fail the test, not hang it
+                let mut ids = Vec::new();
+                let mut errors = 0u64;
+                for (bad, rx) in accepted {
+                    match rx.recv_timeout(REPLY_BOUND).expect("accepted request lost its reply")
+                    {
+                        Ok(resp) => {
+                            assert!(!bad, "a bad-shape request must not succeed");
+                            ids.push(resp.id);
+                        }
+                        Err(_) => {
+                            assert!(bad, "a well-formed request must not error");
+                            errors += 1;
+                        }
+                    }
+                }
+                (per_producer as u64, shed, ids, errors)
+            }));
+        }
+
+        let mut total_submitted = 0u64;
+        let mut total_shed = 0u64;
+        let mut total_errors = 0u64;
+        let mut all_ids: Vec<u64> = Vec::new();
+        for h in handles {
+            let (submitted, shed, ids, errors) = h.join().unwrap();
+            total_submitted += submitted;
+            total_shed += shed;
+            total_errors += errors;
+            all_ids.extend(ids);
+        }
+        // exactly once: every accepted id answered, none twice
+        let completed = all_ids.len() as u64;
+        all_ids.sort_unstable();
+        all_ids.dedup();
+        assert_eq!(all_ids.len() as u64, completed, "seed {seed}: duplicate replies");
+        // conservation: submitted = completed + errored + shed
+        assert_eq!(
+            completed + total_errors + total_shed,
+            total_submitted,
+            "seed {seed}: requests leaked"
+        );
+        // the engine's own ledger agrees with the clients'
+        let m = e.metrics();
+        assert_eq!(m.requests.load(Relaxed), total_submitted, "seed {seed}");
+        assert_eq!(m.completed.load(Relaxed), completed, "seed {seed}");
+        assert_eq!(m.errors.load(Relaxed), total_errors, "seed {seed}");
+        let (sq, sb) = m.shed_counts();
+        assert_eq!(sq + sb, total_shed, "seed {seed}: typed shed split must cover sheds");
+        assert_eq!(sb, 0, "seed {seed}: a 5s SLO must never shed over-budget");
+        // dispatch accounting covers exactly the worker-served requests
+        let (batched, singleton) = m.dispatch_counts();
+        assert_eq!(batched + singleton, completed + total_errors, "seed {seed}");
+        // and the engine still serves cleanly after the storm
+        let ok = e
+            .infer("mlp", vec![0.5; e.model("mlp").unwrap().input_len()])
+            .expect("engine must recover after the storm");
+        assert!(!ok.logits.is_empty());
+        // all clients joined: dropping the engine drains the workers
+        drop(e);
+    }
+}
+
+/// Pure-scheduler fixture: synthetic cost curve `svc(n) = n·step`.
+fn sched(cfg: SchedulerConfig, step: u64) -> Scheduler<u64> {
+    Scheduler::new(cfg, Box::new(move |_, n| n as u64 * step))
+}
+
+#[test]
+fn edf_pop_order_matches_min_deadline_oracle_across_seeds() {
+    for seed in SEEDS {
+        let mut rng = SplitMix64::new(seed);
+        let models = rng.usize_in(2, 5);
+        let mut s = sched(
+            SchedulerConfig {
+                max_batch: rng.usize_in(1, 4),
+                max_wait: Duration::from_millis(2),
+                max_queue: 4096,
+                slo: Duration::from_millis(50),
+                cost_flush: false,
+                shed_over_budget: false,
+            },
+            100,
+        );
+        for m in 0..models {
+            s.register(&format!("m{m}"));
+        }
+        // random interleaved arrivals over virtual time, with the
+        // deadline rule sealing behind them
+        let n = rng.usize_in(20, 60);
+        let mut t = 0u64;
+        for i in 0..n {
+            t += rng.usize_in(0, 500_000) as u64;
+            s.on_tick(t);
+            let m = rng.usize_in(0, models - 1);
+            s.submit(m, i as u64, t).expect("deep queue never sheds");
+        }
+        s.seal_all_drained();
+        // a single consumer must pop in exactly min-deadline order
+        let mut popped = 0usize;
+        let mut last = 0u64;
+        while let Some(oracle) = s.min_sealed_deadline() {
+            let d = s.pop(t, None).expect("sealed work must pop");
+            assert_eq!(
+                d.front_deadline_ns, oracle,
+                "seed {seed}: EDF must serve the earliest deadline first"
+            );
+            assert!(!d.stolen && !d.inversion, "seed {seed}: global pop is never a steal");
+            assert!(d.front_deadline_ns >= last, "seed {seed}: deadlines ran backwards");
+            last = d.front_deadline_ns;
+            popped += d.entries.len();
+        }
+        assert!(s.is_empty(), "seed {seed}");
+        assert_eq!(popped, n, "seed {seed}: every admitted request dispatched");
+    }
+}
+
+#[test]
+fn shard_affinity_flags_steals_and_inversions_truthfully() {
+    // two models × two workers: model id % 2 is the home shard
+    let mut s = sched(
+        SchedulerConfig {
+            max_batch: 1, // every submit seals instantly
+            max_wait: Duration::from_secs(1),
+            max_queue: 16,
+            slo: Duration::from_millis(10),
+            cost_flush: false,
+            shed_over_budget: false,
+        },
+        100,
+    );
+    let a = s.register("a"); // home: worker 0
+    let b = s.register("b"); // home: worker 1
+    // b's batch is strictly older → earlier global EDF deadline
+    s.submit(b, 1, 0).unwrap();
+    s.submit(a, 2, 1_000).unwrap();
+    // worker 0 serves its home shard past b's earlier deadline: an
+    // EDF inversion, not a steal
+    let d = s.pop(2_000, Some((0, 2))).unwrap();
+    assert_eq!(d.model, a);
+    assert!(d.inversion && !d.stolen);
+    // worker 0's shard is now empty: taking b's batch is a steal of
+    // the global EDF front, not an inversion
+    let d = s.pop(2_000, Some((0, 2))).unwrap();
+    assert_eq!(d.model, b);
+    assert!(d.stolen && !d.inversion);
+    assert!(s.is_empty());
+    // when the home shard also holds the global front, neither flag
+    s.submit(b, 3, 10_000).unwrap();
+    let d = s.pop(11_000, Some((1, 2))).unwrap();
+    assert_eq!(d.model, b);
+    assert!(!d.stolen && !d.inversion);
+}
+
+#[test]
+fn budget_seal_fires_exactly_at_the_marginal_latency_point() {
+    // svc(n) = n ms against a 10ms SLO: admitting n leaves the batch
+    // open iff svc(n+1) ≤ 10ms, so the seal lands exactly on the 10th
+    // admission (svc(11) = 11ms breaks the budget)
+    let mut s = sched(
+        SchedulerConfig {
+            max_batch: 64,
+            max_wait: Duration::from_secs(1),
+            max_queue: 1024,
+            slo: Duration::from_millis(10),
+            cost_flush: true,
+            shed_over_budget: false,
+        },
+        MS,
+    );
+    let m = s.register("m");
+    for i in 0..9 {
+        let a = s.submit(m, i, 0).unwrap();
+        assert!(!a.sealed, "admission {i}: svc({}) still fits the SLO", i + 2);
+    }
+    let a = s.submit(m, 9, 0).unwrap();
+    assert!(a.sealed, "the 10th admission must seal: svc(11) > SLO");
+    let d = s.pop(0, None).unwrap();
+    assert_eq!(d.reason, FlushReason::Budget);
+    assert_eq!(d.entries.len(), 10);
+
+    // clock-driven flush point: one request at t=0 leaves 10−2 = 8ms
+    // of margin for a second column, so the batch seals Budget just
+    // past t = 8ms — and strictly before its 1s deadline
+    s.submit(m, 10, 0).unwrap();
+    s.on_tick(8 * MS);
+    assert!(!s.has_sealed(), "the margin has not expired at 8ms");
+    let wake = s.next_wakeup(0).unwrap();
+    assert_eq!(wake, 8 * MS + 1, "wakeup is the exact marginal-latency expiry");
+    s.on_tick(wake);
+    let d = s.pop(wake, None).unwrap();
+    assert_eq!(d.reason, FlushReason::Budget);
+    assert_eq!(d.entries.len(), 1);
+
+    // deadline precedence: with max_wait below the budget point, the
+    // same shape seals Deadline instead
+    let mut s = sched(
+        SchedulerConfig {
+            max_batch: 64,
+            max_wait: Duration::from_millis(5),
+            max_queue: 1024,
+            slo: Duration::from_millis(10),
+            cost_flush: true,
+            shed_over_budget: false,
+        },
+        MS,
+    );
+    let m = s.register("m");
+    s.submit(m, 0, 0).unwrap();
+    s.on_tick(6 * MS);
+    let d = s.pop(6 * MS, None).unwrap();
+    assert_eq!(d.reason, FlushReason::Deadline);
+}
+
+#[test]
+fn compiled_cost_curve_is_positive_and_monotone() {
+    // the curve the admission controller consults (both live and in
+    // the virtual DES) must be a sane service-time model
+    let model = tiny("deepspeech", 7);
+    let cost = |n: usize| model.dispatch_cost_ns(n).expect("compiled models carry a cost");
+    assert!(cost(1) >= 1, "a dispatch costs time");
+    for (a, b) in [(1, 2), (2, 4), (4, 8), (8, 16)] {
+        assert!(
+            cost(b) >= cost(a),
+            "serving {b} columns must not be modeled cheaper than {a} ({} < {})",
+            cost(b),
+            cost(a)
+        );
+    }
+}
+
+#[test]
+fn worker_stall_fault_delays_but_never_loses_replies() {
+    for seed in SEEDS {
+        let stall = Duration::from_millis(150);
+        // clock starts before the workers spawn, so every reply must
+        // land at least one full stall after t0
+        let t0 = Instant::now();
+        let e = Engine::new_with_faults(
+            EngineConfig {
+                workers: 2,
+                sched: SchedulerConfig {
+                    max_batch: 4,
+                    max_wait: Duration::from_millis(1),
+                    max_queue: 64,
+                    slo: Duration::from_secs(5),
+                    ..SchedulerConfig::default()
+                },
+                router: RouterConfig::default(),
+            },
+            FaultPlan { worker_stall: stall, ..FaultPlan::default() },
+        );
+        e.register_model("ds", tiny("deepspeech", seed));
+        let len = e.model("ds").unwrap().input_len();
+        let rxs: Vec<_> = (0..8)
+            .map(|_| e.try_submit("ds", vec![0.1; len]).expect("queue sized for the load"))
+            .collect();
+        for rx in rxs {
+            rx.recv_timeout(REPLY_BOUND)
+                .expect("stalled workers must still answer")
+                .expect("well-formed requests succeed");
+        }
+        // replies cannot predate the stalled pool waking up
+        assert!(
+            t0.elapsed() >= stall,
+            "seed {seed}: replies arrived before the stall ended"
+        );
+        assert_eq!(e.metrics().completed.load(Relaxed), 8, "seed {seed}");
+        e.shutdown();
+    }
+}
+
+#[test]
+fn slow_model_fault_degrades_only_its_own_shard() {
+    // model ids shard across the two workers, so the slow model's
+    // +200ms dispatches occupy only its home worker; the fast model's
+    // replies must not wait behind them
+    let slow_extra = Duration::from_millis(200);
+    let e = Engine::new_with_faults(
+        EngineConfig {
+            workers: 2,
+            sched: SchedulerConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                max_queue: 64,
+                slo: Duration::from_secs(5),
+                ..SchedulerConfig::default()
+            },
+            router: RouterConfig::default(),
+        },
+        FaultPlan { slow_models: vec![("slow".to_string(), slow_extra)], ..FaultPlan::default() },
+    );
+    e.register_model("slow", tiny("deepspeech", 3));
+    e.register_model("fast", tiny("mlp", 4));
+    let slow_len = e.model("slow").unwrap().input_len();
+    let fast_len = e.model("fast").unwrap().input_len();
+    let t0 = Instant::now();
+    let slow_rx = e.try_submit("slow", vec![0.1; slow_len]).unwrap();
+    let fast_rx = e.try_submit("fast", vec![0.1; fast_len]).unwrap();
+    fast_rx
+        .recv_timeout(REPLY_BOUND)
+        .expect("fast model must not starve")
+        .expect("fast reply ok");
+    let fast_elapsed = t0.elapsed();
+    slow_rx
+        .recv_timeout(REPLY_BOUND)
+        .expect("slow model still answers")
+        .expect("slow reply ok");
+    let slow_elapsed = t0.elapsed();
+    // the injected latency lands on the slow shard only: the fast
+    // reply beats the slow model's injected floor, the slow one pays it
+    assert!(
+        fast_elapsed < slow_extra,
+        "fast reply waited on the slow shard ({fast_elapsed:?})"
+    );
+    assert!(
+        slow_elapsed >= slow_extra,
+        "slow dispatch skipped its injected latency ({slow_elapsed:?})"
+    );
+    assert_eq!(e.metrics().completed.load(Relaxed), 2);
+    e.shutdown();
+}
+
+#[test]
+fn poisoned_reply_channels_neither_hang_workers_nor_leak_requests() {
+    for seed in SEEDS {
+        let e = Engine::new(EngineConfig {
+            workers: 2,
+            sched: SchedulerConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                max_queue: 64,
+                slo: Duration::from_secs(5),
+                ..SchedulerConfig::default()
+            },
+            router: RouterConfig::default(),
+        });
+        e.register_model("ds", tiny("deepspeech", seed));
+        let len = e.model("ds").unwrap().input_len();
+        let total = 12usize;
+        let rxs: Vec<_> = (0..total)
+            .map(|_| e.try_submit("ds", vec![0.2; len]).expect("queue sized for the load"))
+            .collect();
+        // poison every other reply channel: the client walks away and
+        // drops the receiver while the request is (possibly) in flight
+        let mut kept = Vec::new();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            if i % 2 == 0 {
+                drop(rx); // poisoned
+            } else {
+                kept.push(rx);
+            }
+        }
+        // surviving channels each get exactly one reply, boundedly
+        for rx in kept {
+            rx.recv_timeout(REPLY_BOUND)
+                .expect("a poisoned sibling must not cost this reply")
+                .expect("well-formed requests succeed");
+        }
+        // workers served the full dozen — a dropped receiver is the
+        // client's loss, never the worker's problem
+        let deadline = Instant::now() + REPLY_BOUND;
+        while e.metrics().completed.load(Relaxed) < total as u64 {
+            assert!(Instant::now() < deadline, "seed {seed}: dispatches stuck");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert_eq!(e.metrics().errors.load(Relaxed), 0, "seed {seed}");
+        // and the engine remains fully serviceable
+        let ok = e.infer("ds", vec![0.3; len]).expect("engine survives poisoning");
+        assert!(!ok.logits.is_empty());
+        e.shutdown();
+    }
+}

@@ -6,15 +6,25 @@
 //! - live replay: a bursty mixed-model mix against the real engine
 //!   answers every request exactly once, with per-model dispatch sums
 //!   reconciling against the engine's own `Metrics`;
+//! - policy mirroring: on a count-only pinned mix, the virtual DES and
+//!   the live engine take bit-identical admission decisions (flush
+//!   reasons, sealed batch sizes, typed sheds, per-model splits) —
+//!   they run the same `Scheduler` state machine;
+//! - shedding: a tail-heavy bursty storm sheds with typed reasons that
+//!   reconcile exactly through `build_report`;
 //! - report: exact percentiles match a brute-force sort oracle;
 //! - spec: malformed mix JSON is rejected with typed errors.
 
-use fullpack::coordinator::{BatcherConfig, EngineConfig, ModelSpec, RouterConfig};
+use std::time::Duration;
+
+use fullpack::coordinator::{
+    EngineConfig, FaultPlan, ModelSpec, RouterConfig, SchedulerConfig, ShedReason,
+};
 use fullpack::models::ModelSize;
 use fullpack::pack::Variant;
 use fullpack::workload::{
-    build_report, run_live, run_virtual, ArrivalProcess, Dist, MixModel, MixSpace, Outcome,
-    WorkloadMix,
+    build_report, run_live, run_live_with, run_virtual, run_virtual_with, ArrivalProcess,
+    Dist, MixModel, MixSpace, Outcome, WorkloadMix,
 };
 
 /// A small sampling space so virtual runs stay fast.
@@ -25,15 +35,20 @@ fn small_space() -> MixSpace {
     space
 }
 
-/// A hand-built bursty two-model mix for the live-engine test.
-fn bursty_two_model_mix() -> WorkloadMix {
-    let spec = |name: &str, model: &str, variant: &str| ModelSpec {
+fn spec(name: &str, model: &str, variant: &str) -> ModelSpec {
+    ModelSpec {
         name: name.to_string(),
         model: model.to_string(),
         variant: Variant::parse(variant).unwrap(),
         size: ModelSize::Tiny,
         seed: 7,
-    };
+    }
+}
+
+/// A hand-built bursty two-model mix for the live-engine test.  The
+/// queue is deep enough that the tiny models never shed, so every
+/// planned request completes.
+fn bursty_two_model_mix() -> WorkloadMix {
     WorkloadMix {
         name: "bursty-two-model".to_string(),
         seed: 42,
@@ -48,10 +63,14 @@ fn bursty_two_model_mix() -> WorkloadMix {
         ],
         engine: EngineConfig {
             workers: 2,
-            batcher: BatcherConfig {
+            sched: SchedulerConfig {
                 max_batch: 4,
-                max_wait: std::time::Duration::from_millis(1),
+                max_wait: Duration::from_millis(1),
                 max_queue: 256,
+                // lax enough that tiny-model backlogs never trip the
+                // over-budget admission rule: every request completes
+                slo: Duration::from_secs(2),
+                ..SchedulerConfig::default()
             },
             router: RouterConfig::default(),
         },
@@ -113,6 +132,8 @@ fn live_bursty_mixed_mix_replies_exactly_once_and_reconciles() {
     assert_eq!(s.completed, count(Outcome::Completed));
     assert_eq!(s.errors, count(Outcome::Error));
     assert_eq!(count(Outcome::Error), 0, "healthy mix must not error");
+    let shed = trace.records.iter().filter(|r| r.outcome.is_shed()).count() as u64;
+    assert_eq!(shed, 0, "deep queue + lax SLO must not shed");
     assert_eq!(
         s.batched_requests + s.singleton_requests,
         s.completed + s.errors,
@@ -147,6 +168,177 @@ fn live_bursty_mixed_mix_replies_exactly_once_and_reconciles() {
     assert_eq!(report.issued, total as u64);
     assert_eq!(report.mode, "live");
     assert_eq!(report.per_model.len(), 2);
+}
+
+/// A mix whose admission decisions are pure *counting*: `max_batch`
+/// seals happen at admission, the SLO is orders of magnitude beyond
+/// any modeled dispatch cost (the budget rule can never race wall-clock
+/// jitter), and a worker stall covers the whole submission window so no
+/// pop interleaves with admission.  Under those conditions the sequence
+/// of scheduler decisions is a pure function of the arrival order —
+/// which both replay modes take from the same seeded plan.
+fn pinned_count_only_mix() -> WorkloadMix {
+    WorkloadMix {
+        name: "pinned-count-only".to_string(),
+        seed: 1234,
+        clients: 1,
+        requests_per_client: 24,
+        arrival: ArrivalProcess::Deterministic { interval_us: 1 },
+        burst: Dist::Const(1.0),
+        seq_fill: Dist::Const(1.0),
+        models: vec![
+            MixModel { spec: spec("ds", "deepspeech", "w4a8"), weight: 1.0 },
+            MixModel { spec: spec("mlp", "mlp", "w2a8"), weight: 1.0 },
+        ],
+        engine: EngineConfig {
+            workers: 1,
+            sched: SchedulerConfig {
+                max_batch: 3,
+                max_wait: Duration::from_millis(40),
+                max_queue: 4,
+                slo: Duration::from_secs(30),
+                cost_flush: true,
+                shed_over_budget: true,
+            },
+            router: RouterConfig::default(),
+        },
+    }
+}
+
+#[test]
+fn virtual_des_mirrors_live_admission_bit_exactly() {
+    let mix = pinned_count_only_mix();
+    // stall the (single) worker well past the ~24µs-planned submission
+    // window: admission runs pop-free in both modes, so queue depths,
+    // seal points and sheds depend only on the shared plan
+    let stall = FaultPlan {
+        worker_stall: Duration::from_millis(300),
+        ..FaultPlan::default()
+    };
+    let live = run_live_with(&mix, false, &stall).unwrap();
+    let virt = run_virtual_with(&mix, &stall).unwrap();
+    let (l, v) = (&live.snapshot, &virt.snapshot);
+
+    // the policy made the same decisions in both worlds
+    assert_eq!(l.requests, v.requests);
+    assert_eq!(l.completed, v.completed);
+    assert_eq!((l.errors, v.errors), (0, 0));
+    assert_eq!(l.flushes, v.flushes, "flush decisions must be bit-identical");
+    assert_eq!(l.batch_sizes, v.batch_sizes, "sealed memberships must match");
+    assert_eq!(l.sheds, v.sheds, "typed shed counts must match");
+    assert_eq!(l.batched_requests, v.batched_requests);
+    assert_eq!(l.singleton_requests, v.singleton_requests);
+    assert_eq!(l.batched_dispatches, v.batched_dispatches);
+    assert_eq!(l.max_queue_depth, v.max_queue_depth);
+
+    // and the mix actually exercised the policy: Full seals at
+    // admission, Deadline seals of the stalled remainders, queue-full
+    // sheds once each model queue hit max_queue — never over-budget
+    // (the SLO is 30s)
+    assert!(l.flushes.0 > 0, "expected Full seals (got {:?})", l.flushes);
+    assert!(l.flushes.2 > 0, "expected Deadline seals (got {:?})", l.flushes);
+    assert_eq!(l.flushes.1, 0, "30s SLO must never budget-seal");
+    assert!(l.sheds.0 > 0, "4-deep queues must shed under the stall");
+    assert_eq!(l.sheds.1, 0, "30s SLO must never shed over-budget");
+    // single worker: EDF order is served exactly, nothing is stolen
+    assert_eq!((l.edf_inversions, l.stolen_dispatches), (0, 0));
+    assert_eq!((v.edf_inversions, v.stolen_dispatches), (0, 0));
+
+    // per-model splits agree on every timing-free counter
+    assert_eq!(l.per_model.len(), v.per_model.len());
+    for ((ln, lc), (vn, vc)) in l.per_model.iter().zip(&v.per_model) {
+        assert_eq!(ln, vn);
+        assert_eq!(lc.completed, vc.completed, "{ln}");
+        assert_eq!(lc.batched_requests, vc.batched_requests, "{ln}");
+        assert_eq!(lc.singleton_requests, vc.singleton_requests, "{ln}");
+        assert_eq!(lc.batched_dispatches, vc.batched_dispatches, "{ln}");
+        assert_eq!(lc.sheds_queue_full, vc.sheds_queue_full, "{ln}");
+        assert_eq!(lc.sheds_over_budget, vc.sheds_over_budget, "{ln}");
+        assert_eq!(lc.max_queue_depth, vc.max_queue_depth, "{ln}");
+    }
+
+    // every planned request meets the same fate in both worlds
+    assert_eq!(live.records.len(), virt.records.len());
+    for (lr, vr) in live.records.iter().zip(&virt.records) {
+        assert_eq!((lr.client, lr.index, lr.model), (vr.client, vr.index, vr.model));
+        assert_eq!(
+            lr.outcome, vr.outcome,
+            "client {} index {}: live and virtual disagree",
+            lr.client, lr.index
+        );
+    }
+
+    // both traces survive the report layer's exact reconciliation, and
+    // the policy columns agree between the two reports
+    let lrep = build_report(&mix, &live).unwrap();
+    let vrep = build_report(&mix, &virt).unwrap();
+    assert_eq!(lrep.flushes, vrep.flushes);
+    assert_eq!(lrep.shed_queue_full, vrep.shed_queue_full);
+    assert_eq!(lrep.shed_over_budget, vrep.shed_over_budget);
+    assert_eq!(lrep.completed, vrep.completed);
+}
+
+#[test]
+fn tail_heavy_bursty_storm_sheds_typed_and_reconciles() {
+    // a burst storm against shallow queues: arrivals land ns apart
+    // while every dispatch costs the full modeled service time, so the
+    // 3-deep per-model queues overflow and shed with typed reasons
+    let mut mix = bursty_two_model_mix();
+    mix.name = "tail-heavy-bursty".to_string();
+    mix.clients = 4;
+    mix.requests_per_client = 32;
+    mix.arrival = ArrivalProcess::BurstyOnOff { on_us: 500, off_us: 2_000, rate_rps: 5e8 };
+    mix.burst = Dist::Uniform { lo: 2.0, hi: 6.0 };
+    mix.engine.workers = 2;
+    mix.engine.sched.max_batch = 4;
+    mix.engine.sched.max_queue = 3;
+    mix.engine.sched.shed_over_budget = false; // isolate queue-full shedding
+    let trace = run_virtual(&mix).unwrap();
+
+    let count = |o: Outcome| trace.records.iter().filter(|r| r.outcome == o).count() as u64;
+    let shed_qf = count(Outcome::Shed(ShedReason::QueueFull));
+    let shed_ob = count(Outcome::Shed(ShedReason::OverBudget));
+    assert!(shed_qf > 0, "the storm must overflow the 3-deep queues");
+    assert_eq!(shed_ob, 0, "over-budget shedding is disabled here");
+    assert!(count(Outcome::Completed) > 0, "admitted requests still complete");
+    assert_eq!(trace.snapshot.sheds, (shed_qf, shed_ob), "typed counters reconcile");
+
+    // the report carries the typed split and reconciles it exactly
+    let report = build_report(&mix, &trace).unwrap();
+    assert_eq!(report.issued, mix.total_requests() as u64);
+    assert_eq!(report.shed_queue_full, shed_qf);
+    assert_eq!(report.shed_over_budget, shed_ob);
+    assert_eq!(report.shed, shed_qf + shed_ob);
+    assert_eq!(report.completed + report.errors + report.shed, report.issued);
+    let per_model_shed: u64 = report.per_model.iter().map(|m| m.shed).sum();
+    assert_eq!(per_model_shed, report.shed, "per-model sheds cover the global split");
+    assert!(report.max_queue_depth <= mix.engine.sched.max_queue as u64);
+
+    // the reconciliation is exact, not approximate: a lost shed is an
+    // error, not a report
+    let mut tampered = trace.clone();
+    tampered.snapshot.sheds.0 += 1;
+    assert!(build_report(&mix, &tampered).is_err());
+
+    // over-budget admission control on the same storm: a sub-ms SLO
+    // that no modeled dispatch can meet sheds typed OverBudget at the
+    // front door (deterministically — the backlog test is cost-model
+    // arithmetic, not timing)
+    let mut strict = mix.clone();
+    strict.name = "tail-heavy-strict-slo".to_string();
+    strict.engine.sched.shed_over_budget = true;
+    strict.engine.sched.slo = Duration::ZERO;
+    let trace = run_virtual(&strict).unwrap();
+    let count = |o: Outcome| trace.records.iter().filter(|r| r.outcome == o).count() as u64;
+    assert_eq!(
+        count(Outcome::Shed(ShedReason::OverBudget)),
+        strict.total_requests() as u64,
+        "a zero SLO budget admits nothing"
+    );
+    let report = build_report(&strict, &trace).unwrap();
+    assert_eq!(report.shed_over_budget, report.issued);
+    assert_eq!(report.completed, 0);
+    assert_eq!(report.p99_us, 0, "no completions, no percentiles");
 }
 
 #[test]
