@@ -128,7 +128,8 @@ fn main() {
             "ds",
             DeepSpeech::new(cfg, Variant::parse("w4a8").unwrap(), 7),
         );
-        let rxs: Vec<_> = (0..64).map(|_| engine.submit("ds", frames.clone()).unwrap()).collect();
+        let rxs: Vec<_> =
+            (0..64).map(|_| engine.try_submit("ds", frames.clone()).unwrap()).collect();
         for rx in rxs {
             rx.recv().unwrap().unwrap();
         }

@@ -1,0 +1,138 @@
+//! Bench: the LUT tier's crossover sweep (DESIGN.md §13) — each
+//! `lut-*` GEMV backend vs its FullPack sibling (and, for `w4a4`, the
+//! ULPPACK comparator) over the two axes the table trades on: output
+//! rows `z` (amortizing the per-call table build) and depth `k` (the
+//! table is `wb · 1KB`, so depth decides whether it is L1-resident).
+//! A final section times one `lut-w4a8-gemm` batched call against
+//! `batch` repeated `lut-w4a8` GEMVs — measuring on real silicon the
+//! weight-stream-vs-table-scratch trade the cost model pins in
+//! `lut_gemm_wrapper_trades_weight_stream_for_table_pressure` (the
+//! modeled verdict at this shape favors the repeated calls: COL_TILE
+//! live tables alias in L1, one rebuilt table stays resident).
+//!
+//! Records append to the `BENCH_kernels.json` family (schema
+//! `bench-kernels/v1`); running on a real host replaces the committed
+//! cost-model placeholder in the EXPERIMENTS.md crossover table.
+//!
+//! Run: `cargo bench --bench lut_sweep` (QUICK=1 for less sampling;
+//! BENCH_OUT=path to redirect the JSON).
+
+use fullpack::kernels::testutil::rngvals;
+use fullpack::kernels::{LayerShape, PlanBuilder, SelectPolicy};
+use fullpack::pack::Variant;
+use fullpack::util::bench::{bench, write_bench_json, BenchRecord, Table};
+
+const VARIANTS: [&str; 4] = ["w4a8", "w2a8", "w1a8", "w4a4"];
+/// Row counts: below / around / above the build-amortization crossover.
+const ZS: [usize; 3] = [128, 512, 2048];
+/// Depths: table fits L1 (128 → ≤64KB) vs thrashes it (2048 → ≤1MB).
+const KS: [usize; 2] = [128, 2048];
+const GEMM_BATCH: usize = 8;
+
+fn gemv_plan(name: &str, z: usize, k: usize, v: Variant) -> fullpack::kernels::Plan {
+    PlanBuilder::new(LayerShape { z, k, batch: 1 }, v)
+        .policy(SelectPolicy::Explicit(name.into()))
+        .build()
+        .unwrap_or_else(|e| panic!("plan {name} {z}x{k}: {e}"))
+}
+
+fn main() {
+    let quick = std::env::var("QUICK").is_ok();
+    let ms = if quick { 8 } else { 50 };
+    let mut records: Vec<BenchRecord> = Vec::new();
+    for vname in VARIANTS {
+        let v = Variant::parse(vname).unwrap();
+        for k in KS {
+            println!("\n== {vname} k={k} ==");
+            let mut rivals = vec![format!("fullpack-{vname}")];
+            if vname == "w4a4" {
+                rivals.push("ulppack-w4a4".to_string());
+            }
+            let mut headers = vec!["z".to_string(), "lut us".to_string()];
+            headers.extend(rivals.iter().map(|r| format!("{r} us")));
+            headers.push("lut gain".to_string());
+            let mut t = Table::new(headers);
+            for z in ZS {
+                let w = rngvals(v.w, z * k, 3);
+                let a = rngvals(v.a, k, 7);
+                let mut out = vec![0i32; z];
+                let mut time = |name: &str| {
+                    let p = gemv_plan(name, z, k, v);
+                    let wts = p.prepare_weights(&w).unwrap();
+                    let m = bench(|| p.execute(&wts, &a, &mut out).unwrap(), 2, ms, 100_000);
+                    records.push(BenchRecord {
+                        kernel: name.to_string(),
+                        variant: vname.to_string(),
+                        z,
+                        k,
+                        median_ns: m.median_ns,
+                        iters: m.iters,
+                    });
+                    m
+                };
+                let ml = time(&format!("lut-{vname}"));
+                let rival_ms: Vec<_> = rivals.iter().map(|r| time(r)).collect();
+                let mut row = vec![z.to_string(), format!("{:.1}", ml.micros())];
+                row.extend(rival_ms.iter().map(|m| format!("{:.1}", m.micros())));
+                row.push(format!("{:.2}x", rival_ms[0].median_ns / ml.median_ns));
+                t.row(row);
+            }
+            t.print();
+        }
+    }
+    // the GEMM wrapper: one tiled batched call vs repeated GEMVs on the
+    // same prepared weights (per-tile tables built once per COL_TILE
+    // columns instead of once per column)
+    let v = Variant::parse("w4a8").unwrap();
+    let (z, k) = (1024usize, 128usize);
+    println!("\n== lut-w4a8-gemm {z}x{k} batch={GEMM_BATCH} ==");
+    let w = rngvals(v.w, z * k, 3);
+    let flat: Vec<i8> =
+        (0..GEMM_BATCH).flat_map(|c| rngvals(v.a, k, 10 + c as u64)).collect();
+    let gp = PlanBuilder::new(LayerShape { z, k, batch: GEMM_BATCH }, v)
+        .policy(SelectPolicy::Explicit("lut-w4a8-gemm".into()))
+        .build()
+        .unwrap();
+    assert_eq!(gp.kernel_name(), "lut-w4a8-gemm");
+    let vp = gemv_plan("lut-w4a8", z, k, v);
+    let wg = gp.prepare_weights(&w).unwrap();
+    let wv = vp.prepare_weights(&w).unwrap();
+    let mut out = vec![0i32; z * GEMM_BATCH];
+    let mg = bench(|| gp.execute_batch(&wg, &flat, GEMM_BATCH, &mut out).unwrap(), 2, ms, 100_000);
+    let mr = bench(
+        || {
+            for c in 0..GEMM_BATCH {
+                vp.execute(&wv, &flat[c * k..(c + 1) * k], &mut out[c * z..(c + 1) * z]).unwrap();
+            }
+        },
+        2,
+        ms,
+        100_000,
+    );
+    for (name, m) in [("lut-w4a8-gemm", &mg), ("repeated:lut-w4a8", &mr)] {
+        records.push(BenchRecord {
+            kernel: name.to_string(),
+            variant: "w4a8".to_string(),
+            z,
+            k,
+            median_ns: m.median_ns,
+            iters: m.iters,
+        });
+    }
+    println!(
+        "gemm {:.1}us vs repeated {:.1}us ({:.2}x)",
+        mg.micros(),
+        mr.micros(),
+        mr.median_ns / mg.median_ns
+    );
+    let out_path = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_kernels.json".to_string());
+    let host = format!("{}-{}", std::env::consts::ARCH, std::env::consts::OS);
+    let note = "measured by benches/lut_sweep.rs; lut-* rows rebuild the per-position \
+                byte table every call (z amortizes it, k decides L1 residency); \
+                repeated:lut-w4a8 times 8 back-to-back GEMVs against one \
+                lut-w4a8-gemm call; see EXPERIMENTS.md LUT crossover table";
+    match write_bench_json(&out_path, "measured", &host, note, &records) {
+        Ok(()) => println!("\nwrote {} records to {out_path}", records.len()),
+        Err(e) => eprintln!("\nfailed to write {out_path}: {e}"),
+    }
+}

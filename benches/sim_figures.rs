@@ -21,6 +21,8 @@ fn main() {
         ("fig13", sweeps::fig13),
         // not a paper figure: the GEMM tier's memory-aware batch sweep
         ("gemm-batch", sweeps::fig_gemm_batch),
+        // not a paper figure: the LUT tier's table-vs-L1 crossover sweep
+        ("lut-crossover", sweeps::fig_lut_crossover),
     ] {
         let t0 = std::time::Instant::now();
         let report = f(sizes);

@@ -10,7 +10,7 @@
 //! cargo run --release --example deepspeech_e2e -- --tiny  # CI-sized
 //! ```
 
-use fullpack::coordinator::{Engine, EngineConfig, RouterConfig, SchedulerConfig};
+use fullpack::coordinator::{Engine, EngineConfig, RouterConfig, SchedulerConfig, SubmitError};
 use fullpack::models::{DeepSpeech, DeepSpeechConfig};
 use fullpack::pack::Variant;
 use fullpack::util::error::{anyhow, Result};
@@ -43,8 +43,8 @@ fn main() -> Result<()> {
         // warm-up (cache + branch predictors), then measured burst
         engine.infer("deepspeech", frames.clone())?;
         let rxs: Vec<_> = (0..requests)
-            .map(|_| engine.submit("deepspeech", frames.clone()))
-            .collect::<Result<_>>()?;
+            .map(|_| engine.try_submit("deepspeech", frames.clone()))
+            .collect::<std::result::Result<_, SubmitError>>()?;
         let mut layer_ns: BTreeMap<String, f64> = BTreeMap::new();
         let mut best_total = f64::INFINITY;
         for rx in rxs {

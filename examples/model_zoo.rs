@@ -43,7 +43,7 @@ fn main() -> Result<()> {
         let input_len = engine.model(name).expect("registered").input_len();
         let frames: Vec<f32> = (0..input_len).map(|i| (i as f32 * 0.01).sin()).collect();
         for _ in 0..requests_per_model {
-            rxs.push(engine.submit(name, frames.clone())?);
+            rxs.push(engine.try_submit(name, frames.clone())?);
         }
     }
     for rx in rxs {

@@ -250,15 +250,14 @@ impl Engine {
         }
     }
 
-    /// [`Engine::try_submit`] with the refusal flattened into the
-    /// crate-wide error type (legacy signature).
-    pub fn submit(&self, model: &str, frames: Vec<f32>) -> Result<mpsc::Receiver<Result<Response>>> {
-        self.try_submit(model, frames).map_err(|e| anyhow!("{e}"))
-    }
-
-    /// Synchronous convenience wrapper.
+    /// Synchronous convenience wrapper over [`Engine::try_submit`].
+    /// Refusals stay typed: the returned error wraps the original
+    /// [`SubmitError`], so callers can `downcast_ref::<SubmitError>()`
+    /// to recover `QueueFull`/`OverBudget`/`UnknownModel` and the
+    /// modeled `retry_after_us` instead of parsing a message.
     pub fn infer(&self, model: &str, frames: Vec<f32>) -> Result<Response> {
-        self.submit(model, frames)?
+        self.try_submit(model, frames)
+            .map_err(crate::util::error::Error::new)?
             .recv()
             .map_err(|_| anyhow!("engine dropped request"))?
     }
@@ -506,7 +505,12 @@ mod tests {
         let e = tiny_engine("w4a8");
         let err = e.try_submit("nope", frames()).unwrap_err();
         assert!(matches!(err, SubmitError::UnknownModel(ref n) if n == "nope"));
-        assert!(e.infer("nope", frames()).is_err());
+        // the sync wrapper keeps the refusal typed behind anyhow
+        let ierr = e.infer("nope", frames()).unwrap_err();
+        assert!(matches!(
+            ierr.downcast_ref::<SubmitError>(),
+            Some(SubmitError::UnknownModel(n)) if n == "nope"
+        ));
         assert_eq!(e.metrics().errors.load(Relaxed), 2);
     }
 
@@ -519,7 +523,8 @@ mod tests {
     #[test]
     fn concurrent_submissions_all_complete() {
         let e = tiny_engine("w2a2");
-        let rxs: Vec<_> = (0..16).map(|_| e.submit("deepspeech", frames()).unwrap()).collect();
+        let rxs: Vec<_> =
+            (0..16).map(|_| e.try_submit("deepspeech", frames()).unwrap()).collect();
         let mut ok = 0;
         for rx in rxs {
             let r = rx.recv().unwrap().unwrap();
@@ -539,7 +544,7 @@ mod tests {
     #[test]
     fn shutdown_drains() {
         let e = tiny_engine("w1a1");
-        let rx = e.submit("deepspeech", frames()).unwrap();
+        let rx = e.try_submit("deepspeech", frames()).unwrap();
         e.shutdown();
         // the queued request was served before exit
         assert!(rx.recv().unwrap().is_ok());

@@ -108,6 +108,14 @@ impl std::fmt::Display for SubmitError {
     }
 }
 
+// std error impls so refusals can travel through `anyhow::Error` (e.g.
+// `Engine::infer`) without losing their type: callers recover the shed
+// reason and `retry_after_us` via `downcast_ref` instead of string
+// matching — the stringly `Engine::submit` path this replaced.
+impl std::error::Error for SubmitError {}
+
+impl std::error::Error for Rejected {}
+
 /// What kind of linear-algebra call a layer needs — the router's input
 /// (paper §4.6: GEMV single-batch vs GEMM multi-batch).  The router
 /// turns one of these into an executable `kernels::Plan`.

@@ -25,6 +25,21 @@ pub enum Method {
     /// supplied per call ([`Method::instr_mix_gemm`],
     /// `costmodel::simulate_gemm`)
     FullPackGemm(Variant),
+    /// the LUT tier (DeepGEMM, Ganji et al. 2023, arXiv 2304.09049, as
+    /// the *opposite* trade to bit-plane extraction): per packed weight
+    /// byte slot, a 256-entry table of partial dots against the current
+    /// activation block is built once per call, then every weight byte
+    /// becomes one gather-style table load + add — no extraction at
+    /// all.  Scalar by construction (gathers defeat the SLP
+    /// vectorizer), so the mix is dominated by the table build and
+    /// gather loads; the table stresses L1 instead of bandwidth
+    /// (`sim::replay_gemv_lut`).  Same packed layout as [`Method::FullPack`]
+    Lut(Variant),
+    /// batched LUT GEMM wrapper (`lut-*-gemm`): per-column tables, but
+    /// the packed weight bytes are walked once per
+    /// `kernels::fullpack_gemm::COL_TILE`-column tile instead of once
+    /// per column — amortizing weight streaming, not table builds
+    LutGemm(Variant),
     /// Alg. 1 adjacent packing with scalar extraction (ablation)
     Naive(Variant),
     /// ULPPACK— (Won et al. 2022): spacer-lane GEMM, batch 8 per the
@@ -56,12 +71,24 @@ impl Method {
         Method::FullPackGemm(Variant::parse(v).expect("valid variant"))
     }
 
+    /// Convenience constructor: `Method::lut("w4a8")`.
+    pub fn lut(v: &str) -> Method {
+        Method::Lut(Variant::parse(v).expect("valid variant"))
+    }
+
+    /// Convenience constructor: `Method::lut_gemm("w4a8")`.
+    pub fn lut_gemm(v: &str) -> Method {
+        Method::LutGemm(Variant::parse(v).expect("valid variant"))
+    }
+
     /// Display name matching the paper's legend.
     pub fn label(&self) -> String {
         match self {
             Method::FullPack(v) => format!("FullPack-{}", v.name().to_uppercase()),
             Method::FullPackSwar(v) => format!("FullPack-SWAR-{}", v.name().to_uppercase()),
             Method::FullPackGemm(v) => format!("FullPack-GEMM-{}", v.name().to_uppercase()),
+            Method::Lut(v) => format!("LUT-{}", v.name().to_uppercase()),
+            Method::LutGemm(v) => format!("LUT-GEMM-{}", v.name().to_uppercase()),
             Method::Naive(v) => format!("Naive-{}", v.name().to_uppercase()),
             Method::Ulppack { bits } => format!("ULPPACK-W{bits}A{bits}"),
             Method::RuyW8A8 => "Ruy-W8A8".into(),
@@ -82,6 +109,8 @@ impl Method {
             Method::FullPack(v) => format!("fullpack-{}", v.name()),
             Method::FullPackSwar(v) => format!("fullpack-{}-swar", v.name()),
             Method::FullPackGemm(v) => format!("fullpack-{}-gemm", v.name()),
+            Method::Lut(v) => format!("lut-{}", v.name()),
+            Method::LutGemm(v) => format!("lut-{}-gemm", v.name()),
             Method::Naive(v) => format!("naive-{}", v.name()),
             Method::Ulppack { bits } => format!("ulppack-w{bits}a{bits}"),
             Method::RuyW8A8 => "ruy-w8a8".into(),
@@ -113,6 +142,8 @@ impl Method {
             Method::FullPack(v)
             | Method::FullPackSwar(v)
             | Method::FullPackGemm(v)
+            | Method::Lut(v)
+            | Method::LutGemm(v)
             | Method::Naive(v) => *v,
             Method::Ulppack { bits } => {
                 let b = BitWidth::from_u8(*bits).unwrap_or(BitWidth::B8);
@@ -144,10 +175,14 @@ impl Method {
     /// Bytes of weight storage per row of a depth-`k` layer.
     pub fn weight_bytes_per_row(&self, k: usize) -> usize {
         match self {
-            // the GEMM tier shares the GEMV tier's packed layout exactly
-            Method::FullPack(v) | Method::FullPackGemm(v) | Method::Naive(v) => {
-                v.w.packed_bytes(v.padded_depth(k))
-            }
+            // the GEMM and LUT tiers share the GEMV tier's packed
+            // layout exactly (the LUT kernels index tables *by* the
+            // packed bytes — no re-layout)
+            Method::FullPack(v)
+            | Method::FullPackGemm(v)
+            | Method::Lut(v)
+            | Method::LutGemm(v)
+            | Method::Naive(v) => v.w.packed_bytes(v.padded_depth(k)),
             // the SWAR tier also streams its 8-byte per-row weight-sum
             // side table (Weights::SwarPacked, DESIGN.md §8)
             Method::FullPackSwar(v) => {
@@ -165,6 +200,8 @@ impl Method {
             Method::FullPack(v)
             | Method::FullPackSwar(v)
             | Method::FullPackGemm(v)
+            | Method::Lut(v)
+            | Method::LutGemm(v)
             | Method::Naive(v) => v.a.packed_bytes(v.padded_depth(k)),
             Method::Ulppack { .. } => k,
             Method::RuyW8A8 | Method::XnnW8A8 | Method::TfliteW8A8 | Method::GemmlowpW8A8 => k,
@@ -193,10 +230,15 @@ impl Method {
 
     /// Instruction mix of one inference call on a `z × k` layer.
     pub fn instr_mix(&self, z: usize, k: usize) -> InstrMix {
-        // the GEMM tier's single-column degenerate case (a GEMV with
+        // the GEMM tiers' single-column degenerate case (a GEMV with
         // per-column bookkeeping); batched calls use `instr_mix_gemm`
-        if matches!(self, Method::FullPackGemm(_)) {
+        if matches!(self, Method::FullPackGemm(_) | Method::LutGemm(_)) {
             return self.instr_mix_gemm(z, k, 1);
+        }
+        // the LUT tier is not the per-row × z shape below: the table
+        // build is a whole-call cost that amortizes across rows
+        if let Method::Lut(v) = self {
+            return lut_call_mix(*v, z, k, 1);
         }
         let zf = z as f64;
         let kf = k as f64;
@@ -318,7 +360,9 @@ impl Method {
             Method::XnnF32 => per16(kf, 5.0, 4.0, 0.0, 0.5),
             Method::EigenF32 => per16(kf, 5.25, 4.0, 0.0, 1.0),
             Method::TfliteF32 => per16(kf, 8.0, 4.0, 4.0, 6.0),
-            Method::FullPackGemm(_) => unreachable!("handled above"),
+            Method::FullPackGemm(_) | Method::Lut(_) | Method::LutGemm(_) => {
+                unreachable!("handled above")
+            }
         };
         let overhead_scale = self.batch() as f64;
         per_row.add(&row_overhead.scale(overhead_scale)).scale(zf)
@@ -362,6 +406,16 @@ impl Method {
                 InstrMix { loads: 0.0, stores: 1.0, macs: 0.0, alus: 4.0, scalar: 6.0 };
             return per_row.add(&row_overhead.scale(b)).scale(z as f64);
         }
+        // LUT GEMM: per-column tables (builds scale with batch — table
+        // construction is NOT amortizable, each column's activations
+        // differ), but the packed weight bytes stream once per
+        // COL_TILE-column tile instead of once per column.  Note the
+        // contrast with the repeated-call fallback used for
+        // [`Method::Lut`]: b separate GEMV calls also pay b builds,
+        // so the GEMM tier's whole gain is the weight-stream reuse
+        if let Method::LutGemm(v) = self {
+            return lut_call_mix(*v, z, k, batch);
+        }
         // whole calls of the method's own per-call width
         let calls = batch.max(1).div_ceil(self.batch());
         self.instr_mix(z, k).scale(calls as f64)
@@ -386,11 +440,16 @@ impl Method {
 
     /// Does this method's inner loop depend on the compiler turning
     /// staged 16-lane array code into real SIMD?  The SWAR tier (plain
-    /// 64-bit register ops) and the naive strawman (scalar by
-    /// construction) run at their modeled cost on any core; everything
+    /// 64-bit register ops), the naive strawman (scalar by
+    /// construction) and the LUT tier (data-dependent table gathers —
+    /// scalar on any core, which is exactly why it wins on weak
+    /// vectorizers) run at their modeled cost everywhere; everything
     /// else degrades by `CoreModel::autovec_eff` (DESIGN.md §8).
     pub fn simd_staged(&self) -> bool {
-        !matches!(self, Method::FullPackSwar(_) | Method::Naive(_))
+        !matches!(
+            self,
+            Method::FullPackSwar(_) | Method::Naive(_) | Method::Lut(_) | Method::LutGemm(_)
+        )
     }
 
     /// [`Method::instr_mix`] adjusted for the core's auto-vectorization
@@ -405,6 +464,40 @@ impl Method {
             mix
         }
     }
+}
+
+/// One LUT-tier call on a `z × k` layer with `batch` columns
+/// ([`Method::Lut`] is the `batch = 1` case).
+///
+/// Per column, the build fills 256 entries per packed weight byte slot
+/// via the incremental recurrence (clear the top field, load the
+/// smaller entry, add the new field's contribution): ~3 scalar ops per
+/// entry, plus one streaming pass over that column's activations.  Per
+/// output row, the packed weight bytes stream once per
+/// `kernels::fullpack_gemm::COL_TILE`-column tile (vector loads), and
+/// every weight byte costs one gather-style table load + add *per
+/// column* — scalar, because the data-dependent indices defeat the
+/// vectorizer (which is also why [`Method::simd_staged`] is false).
+fn lut_call_mix(v: Variant, z: usize, k: usize, batch: usize) -> InstrMix {
+    let b = batch.max(1) as f64;
+    let wb = v.w.packed_bytes(v.padded_depth(k)) as f64;
+    let tiles = batch.max(1).div_ceil(crate::kernels::fullpack_gemm::COL_TILE) as f64;
+    let build = InstrMix {
+        loads: b * v.a.packed_bytes(v.padded_depth(k)) as f64 / 16.0,
+        stores: 0.0,
+        macs: 0.0,
+        alus: 0.0,
+        scalar: b * 3.0 * 256.0 * wb,
+    };
+    let per_row = InstrMix {
+        loads: tiles * wb / 16.0,
+        stores: 0.0,
+        macs: 0.0,
+        alus: 0.0,
+        scalar: b * 2.0 * wb,
+    };
+    let row_overhead = InstrMix { loads: 0.0, stores: 1.0, macs: 0.0, alus: 4.0, scalar: 6.0 };
+    per_row.add(&row_overhead.scale(b)).scale(z as f64).add(&build)
 }
 
 /// Helper: a mix expressed per 16 logical elements.
@@ -623,6 +716,55 @@ mod tests {
         // repeated-GEMV modeling for non-GEMM methods is exactly b calls
         let r = Method::RuyW8A8;
         assert_eq!(r.instr_mix_gemm(z, k, 5), r.instr_mix(z, k).scale(5.0));
+    }
+
+    #[test]
+    fn lut_methods_share_registry_namespace_and_layout() {
+        for v in ["w4a8", "w2a8", "w1a8", "w4a4"] {
+            let m = Method::lut(v);
+            let g = Method::lut_gemm(v);
+            assert_eq!(m.registry_name(), format!("lut-{v}"));
+            assert_eq!(g.registry_name(), format!("lut-{v}-gemm"));
+            // both tiers resolve through the registry's own cost_method
+            assert_eq!(Method::from_registry(&m.registry_name()), Some(m));
+            assert_eq!(Method::from_registry(&g.registry_name()), Some(g));
+            // identical packed layout to the FullPack GEMV tier: the
+            // tables are indexed *by* the packed bytes, no re-layout
+            assert_eq!(
+                m.weight_bytes_per_row(2048),
+                Method::fullpack(v).weight_bytes_per_row(2048)
+            );
+            assert_eq!(m.act_bytes(2048), Method::fullpack(v).act_bytes(2048));
+            assert_eq!(m.data_variant(), Variant::parse(v).unwrap());
+            // table gathers are scalar on every core
+            assert!(!m.simd_staged());
+            assert!(!g.simd_staged());
+        }
+        assert_eq!(Method::lut("w4a8").label(), "LUT-W4A8");
+        assert_eq!(Method::lut_gemm("w2a8").label(), "LUT-GEMM-W2A8");
+    }
+
+    #[test]
+    fn lut_build_amortizes_across_rows_and_gemm_amortizes_weight_stream() {
+        let k = 2048;
+        let m = Method::lut("w4a8");
+        // the table build is a whole-call cost: doubling the rows less
+        // than doubles the total
+        let a = m.instr_mix(64, k).total();
+        let b2 = m.instr_mix(128, k).total();
+        assert!(b2 < 2.0 * a, "build amortizes across rows: {b2} vs 2×{a}");
+        let g = Method::lut_gemm("w4a8");
+        let g1 = g.instr_mix_gemm(256, k, 1);
+        assert_eq!(m.instr_mix(256, k), g1, "batch 1 degenerates to the GEMV tier");
+        // batch b: builds and gathers scale with b exactly (per-column
+        // tables are not amortizable)...
+        let g8 = g.instr_mix_gemm(256, k, 8);
+        assert!((g8.scalar - 8.0 * g1.scalar).abs() < 1e-6);
+        // ...but the packed weight stream is paid once per COL_TILE
+        // tile, so the GEMM tier beats b repeated GEMV calls (which is
+        // what `instr_mix_gemm` charges Method::Lut)
+        assert!(g8.loads < 8.0 * g1.loads);
+        assert!(g8.total() < m.instr_mix_gemm(256, k, 8).total());
     }
 
     #[test]

@@ -24,8 +24,8 @@ pub mod methods;
 pub use methods::{InstrMix, Method};
 
 use crate::sim::{
-    replay_gemm, replay_gemm_restream, replay_gemv, CachePreset, CacheStats, GemmTraffic,
-    Hierarchy, ReplayStats,
+    replay_gemm, replay_gemm_lut, replay_gemm_restream, replay_gemv, replay_gemv_lut,
+    replay_gemv_lut_restream, CachePreset, CacheStats, GemmTraffic, Hierarchy, ReplayStats,
 };
 
 /// Pipeline/throughput description of the modeled core.
@@ -185,12 +185,22 @@ pub fn simulate_gemv(
 ) -> SimResult {
     let mut h = preset.build();
     let t = method.traffic(z, k);
+    // the LUT tier replays its table-build + gather stream; everything
+    // else streams weights and activations directly
+    let replay = |h: &mut Hierarchy| match method {
+        Method::Lut(_) => {
+            replay_gemv_lut(h, &t);
+        }
+        _ => {
+            replay_gemv(h, &t);
+        }
+    };
     // warm-up calls: populate the hierarchy
     for _ in 1..calls.max(1) {
-        replay_gemv(&mut h, &t);
+        replay(&mut h);
     }
     h.reset_stats();
-    replay_gemv(&mut h, &t);
+    replay(&mut h);
     finish(method, z, k, &h, core)
 }
 
@@ -268,6 +278,13 @@ pub fn simulate_gemm_traced(
     let replay = |h: &mut Hierarchy| -> ReplayStats {
         match method {
             Method::FullPackGemm(_) => replay_gemm(h, &GemmTraffic::from_gemv(&t, b)),
+            // the LUT GEMM tier: one weight pass per COL_TILE-column
+            // tile, per-column table builds (`sim::replay_gemm_lut`)
+            Method::LutGemm(_) => replay_gemm_lut(h, &GemmTraffic::from_gemv(&t, b)),
+            // the LUT GEMV kernel as a batched rival: b back-to-back
+            // calls, each rebuilding the table and re-streaming the
+            // weights — the protocol its `-gemm` wrapper amortizes
+            Method::Lut(_) => replay_gemv_lut_restream(h, &t, b),
             // rivals re-stream the weights once per whole call of
             // their own per-call width: `b` single-column calls for
             // the GEMV protocols, ⌈b/8⌉ batch-8 calls for ULPPACK
@@ -606,6 +623,76 @@ mod tests {
         let n = |m: Method| simulate_gemv(m, 2048, 2048, preset, &neon, STEADY).cycles;
         assert!(n(Method::fullpack("w1a8")) < n(Method::fullpack_swar("w1a8")));
         assert!(n(Method::fullpack("w4a8")) < n(Method::fullpack_swar("w4a8")));
+    }
+
+    #[test]
+    fn lut_crossover_amortized_build_vs_l1_pressure() {
+        // DESIGN.md §13: the LUT tier wins only where (a) the scalar
+        // gather row loop beats *degraded* staged extraction — a
+        // portable core, not the paper's NEON core — and (b) the table
+        // (`wb` KB) fits L1 so the gathers hit.  k=128 w4a8 → wb=64 →
+        // a 64KB table, half the 128KB L1.
+        let preset = CachePreset::Gem5Ex5Big;
+        let port = CoreModel::portable();
+        let cyc =
+            |m: Method, z: usize, k: usize| simulate_gemv(m, z, k, preset, &port, STEADY).cycles;
+        // many rows amortize the per-call table build: LUT wins
+        assert!(
+            cyc(Method::lut("w4a8"), 2048, 128) < cyc(Method::fullpack("w4a8"), 2048, 128),
+            "lut should win at z=2048 k=128 on the portable core"
+        );
+        // few rows: the build dominates and the staged kernel wins
+        assert!(
+            cyc(Method::lut("w4a8"), 128, 128) > cyc(Method::fullpack("w4a8"), 128, 128),
+            "fullpack should win at z=128 k=128"
+        );
+        // deep layers: the table outgrows L1 (k=2048 → 1MB) and the
+        // gathers stall — FullPack wins even with many rows
+        assert!(
+            cyc(Method::lut("w4a8"), 2048, 2048) > cyc(Method::fullpack("w4a8"), 2048, 2048),
+            "fullpack should win at k=2048 (table thrashes L1)"
+        );
+        // on the paper's NEON core the staged kernels win everywhere
+        let neon = CoreModel::ex5_big();
+        let n = |m: Method| simulate_gemv(m, 2048, 128, preset, &neon, STEADY).cycles;
+        assert!(n(Method::lut("w4a8")) > n(Method::fullpack("w4a8")));
+    }
+
+    #[test]
+    fn lut_gemm_wrapper_trades_weight_stream_for_table_pressure() {
+        // Compute side, the -gemm wrapper is a strict improvement: it
+        // walks the packed weights once per COL_TILE tile instead of
+        // once per column (fewer loads), while the table-build scalar
+        // work scales with the batch either way (identical scalar).
+        let (z, k) = (1024usize, 128usize);
+        let g_mix = Method::lut_gemm("w4a8").instr_mix_gemm(z, k, 16);
+        let r_mix = Method::lut("w4a8").instr_mix_gemm(z, k, 16);
+        assert!(g_mix.loads < r_mix.loads, "{} !< {}", g_mix.loads, r_mix.loads);
+        assert_eq!(g_mix.scalar, r_mix.scalar, "builds scale with batch either way");
+        // Memory side, the trade goes the other way: the wrapper keeps
+        // COL_TILE live tables at a `wb`KB stride — at k=128 (wb=64)
+        // that stride is exactly the L1 way size, so same-position
+        // lines of the four tables alias into one 2-way set and the
+        // gathers thrash, while the repeated-GEMV rival rebuilds ONE
+        // table in place and gathers straight from L1.  The model
+        // scores that honestly: the wrapper's stall bill dwarfs the
+        // restreamed calls' and costs it the matchup — among LUT
+        // plans repeated calls win, and full-registry batched
+        // selection stays on the FullPack GEMM tier
+        // (plan::tests::cost_model_selects_the_fullpack_gemm_tier...).
+        let core = CoreModel::portable();
+        let preset = CachePreset::Gem5Ex5Big;
+        for batch in [4usize, 16] {
+            let g = simulate_gemm(Method::lut_gemm("w4a8"), z, k, batch, preset, &core, STEADY);
+            let r = simulate_gemm(Method::lut("w4a8"), z, k, batch, preset, &core, STEADY);
+            assert!(
+                g.stall_cycles > 10.0 * r.stall_cycles,
+                "batch {batch}: wrapper stalls {} !> 10x restream stalls {}",
+                g.stall_cycles,
+                r.stall_cycles
+            );
+            assert!(g.cycles > r.cycles, "batch {batch}: {} !> {}", g.cycles, r.cycles);
+        }
     }
 
     #[test]

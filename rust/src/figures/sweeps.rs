@@ -6,7 +6,7 @@
 //! paper routes GEMM to Ruy; DESIGN.md §9).
 
 use super::{geomean, grid_table, speedup, sweep, STEADY_CALLS};
-use crate::costmodel::{gemm_batch_threshold, simulate_gemm, CoreModel, Method};
+use crate::costmodel::{gemm_batch_threshold, simulate_gemm, simulate_gemv, CoreModel, Method};
 use crate::pack::Variant;
 use crate::sim::CachePreset;
 use crate::util::bench::Table;
@@ -255,6 +255,66 @@ pub fn fig_gemm_batch(sizes: &[usize]) -> FigureReport {
     FigureReport { id: "gemm-batch", tables, headlines }
 }
 
+/// Depth columns of the [`fig_lut_crossover`] sweep: the LUT tier's
+/// table is `wb · 1KB` (`wb` = packed bytes per row), so the swept
+/// depths straddle the 128KB L1 — 128 (64KB table at w4a8, fits), 512
+/// (256KB, spills), 2048 (1MB, thrashes).
+pub const LUT_SWEEP_DEPTHS: [usize; 3] = [128, 512, 2048];
+
+/// The LUT tier's crossover sweep (EXPERIMENTS.md §LUT; DESIGN.md §13,
+/// not a paper figure): modeled gain of one `lut-*` GEMV call over its
+/// FullPack sibling (and, for `w4a4`, over ULPPACK) on the **portable**
+/// core — the regime the tier exists for, where the staged lane loops
+/// are charged for imperfect vectorization while the LUT's scalar
+/// gathers cost what they cost everywhere.  Rows sweep `z` (more rows
+/// amortize the per-call table build), columns sweep `k`
+/// ([`LUT_SWEEP_DEPTHS`] — the table-vs-L1 axis).  Headlines pin the
+/// four crossover cells the cost-model tests assert: LUT wins only at
+/// many-rows × L1-resident-table on the portable core.
+pub fn fig_lut_crossover(zs: &[usize]) -> FigureReport {
+    let preset = CachePreset::Gem5Ex5Big;
+    let port = CoreModel::portable();
+    let mut tables = Vec::new();
+    let mut headlines = Vec::new();
+    let lineup: [(&str, Method, &str); 5] = [
+        ("w4a8", Method::fullpack("w4a8"), "FullPack-W4A8"),
+        ("w2a8", Method::fullpack("w2a8"), "FullPack-W2A8"),
+        ("w1a8", Method::fullpack("w1a8"), "FullPack-W1A8"),
+        ("w4a4", Method::fullpack("w4a4"), "FullPack-W4A4"),
+        ("w4a4", Method::Ulppack { bits: 4 }, "ULPPACK-W4A4"),
+    ];
+    for (vname, rival, rival_label) in lineup {
+        let lut = Method::lut(vname);
+        let mut headers = vec![format!("{vname} gain z\\k")];
+        headers.extend(LUT_SWEEP_DEPTHS.iter().map(|k| k.to_string()));
+        let mut t = Table::new(headers);
+        for &z in zs {
+            let mut row = vec![z.to_string()];
+            for &k in &LUT_SWEEP_DEPTHS {
+                let l = simulate_gemv(lut, z, k, preset, &port, STEADY_CALLS);
+                let r = simulate_gemv(rival, z, k, preset, &port, STEADY_CALLS);
+                row.push(format!("{:.2}", r.cycles / l.cycles));
+            }
+            t.row(row);
+        }
+        tables.push((
+            format!("LUT-{} gain vs {rival_label} [portable core]", vname.to_uppercase()),
+            t,
+        ));
+    }
+    let cell = |core: &CoreModel, z: usize, k: usize| {
+        let l = simulate_gemv(Method::lut("w4a8"), z, k, preset, core, STEADY_CALLS);
+        let r = simulate_gemv(Method::fullpack("w4a8"), z, k, preset, core, STEADY_CALLS);
+        r.cycles / l.cycles
+    };
+    headlines.push(("w4a8 gain @ z=2048 k=128 [portable]".into(), cell(&port, 2048, 128)));
+    headlines.push(("w4a8 gain @ z=128 k=128 [portable]".into(), cell(&port, 128, 128)));
+    headlines.push(("w4a8 gain @ z=2048 k=2048 [portable]".into(), cell(&port, 2048, 2048)));
+    let neon = CoreModel::ex5_big();
+    headlines.push(("w4a8 gain @ z=2048 k=128 [ex5-big]".into(), cell(&neon, 2048, 128)));
+    FigureReport { id: "lut-crossover", tables, headlines }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -332,6 +392,23 @@ mod tests {
             assert!(name.contains(vname));
             assert_eq!(*th, 2.0, "{vname} crossover {th}");
         }
+    }
+
+    #[test]
+    fn lut_crossover_sweep_shows_both_regimes() {
+        let r = fig_lut_crossover(&[128, 2048]);
+        // one gain table per FullPack sibling plus the ULPPACK rival
+        assert_eq!(r.tables.len(), 5);
+        let hl: std::collections::HashMap<&str, f64> =
+            r.headlines.iter().map(|(n, v)| (n.as_str(), *v)).collect();
+        // the four pinned crossover cells (mirrors costmodel::tests::
+        // lut_crossover_amortized_build_vs_l1_pressure): LUT wins only
+        // when the table is L1-resident, the build is amortized over
+        // many rows, and the core pays the portable autovec penalty
+        assert!(hl["w4a8 gain @ z=2048 k=128 [portable]"] > 1.0);
+        assert!(hl["w4a8 gain @ z=128 k=128 [portable]"] < 1.0);
+        assert!(hl["w4a8 gain @ z=2048 k=2048 [portable]"] < 1.0);
+        assert!(hl["w4a8 gain @ z=2048 k=128 [ex5-big]"] < 1.0);
     }
 
     #[test]

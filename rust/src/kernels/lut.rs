@@ -1,0 +1,542 @@
+//! The LUT kernel tier (DESIGN.md §13): table-driven sub-byte GEMV/GEMM
+//! over the FullPack packed layout — the DeepGEMM-style rival (Ganji et
+//! al. 2023, arXiv 2304.09049) to shift-based extraction.
+//!
+//! Where the FullPack kernels spend two shifts per sub-vector to unpack
+//! every weight byte, the LUT tier spends **zero extraction work in the
+//! row loop**: per packed byte *position* of a row it precomputes a
+//! 256-entry table of partial dot products against the activation block
+//! that position multiplies, then every weight byte becomes one
+//! gather-style table load + add.
+//!
+//! For byte position `pos = blk·VL + j` of a packed row (FullPack
+//! layout: byte `j` of block `blk` holds elements `blk·E·VL + k·VL + j`
+//! for sub-vectors `k < E`, `E = 8/b`):
+//!
+//! ```text
+//!   T[pos][v] = Σ_{k<E} extract(v, k) · a[blk·E·VL + k·VL + j]   v ∈ 0..256
+//!   out[r]    = Σ_pos T[pos][row_bytes[pos]]
+//! ```
+//!
+//! The sums are exact in `i32`, so the tier is bit-identical to the
+//! FullPack siblings and the scalar oracle.  The table build is
+//! incremental — entry `v` extends the already-built entry with `v`'s
+//! highest non-zero sub-vector field cleared (a strictly smaller index),
+//! so each of the `256·wb` slots costs one add — and the build is
+//! amortized across all `z` rows of the call.  The trade: the table
+//! occupies `wb·1KB` of L1 (`wb` = packed bytes per row) and the row
+//! loop is data-dependent gathers the SLP vectorizer cannot touch, so
+//! the tier wins only where many rows amortize the build **and** the
+//! table fits L1 — the crossover the cost model resolves
+//! (`costmodel::Method::Lut`, EXPERIMENTS.md §LUT).
+//!
+//! Batched wrappers (`lut-*-gemm`) walk the packed weight bytes once per
+//! [`COL_TILE`]-column tile instead of once per column, amortizing
+//! weight streaming while builds still scale with the batch.
+#![warn(missing_docs)]
+
+use super::api::{check_gemm_shape, check_rows, wrong_layout, GemmKernel, GemvKernel, Weights};
+use super::fullpack::extract;
+use super::fullpack_gemm::COL_TILE;
+use super::{ActVec, KernelError};
+use crate::costmodel::Method;
+use crate::pack::{pad_rows, BitWidth, PackedMatrix, Variant, VL};
+use std::cell::RefCell;
+
+/// The variants the LUT tier implements, one registry entry per tier
+/// namespace (`lut-*` GEMV, `lut-*-gemm` GEMM).  Sub-byte weights are
+/// required (the 256-entry table *is* the unpack); `w4a4` takes packed
+/// activations on the GEMV path (SPARQLe-style sub-byte acts) and plain
+/// int8 columns on the GEMM path, like its FullPack sibling.
+pub const LUT_VARIANTS: [Variant; 4] = [
+    Variant::new(BitWidth::B4, BitWidth::B8),
+    Variant::new(BitWidth::B2, BitWidth::B8),
+    Variant::new(BitWidth::B1, BitWidth::B8),
+    Variant::new(BitWidth::B4, BitWidth::B4),
+];
+
+/// Registry name of the LUT GEMV kernel for a variant, if implemented.
+pub fn lut_kernel_name(v: Variant) -> Option<&'static str> {
+    match (v.w, v.a) {
+        (BitWidth::B4, BitWidth::B8) => Some("lut-w4a8"),
+        (BitWidth::B2, BitWidth::B8) => Some("lut-w2a8"),
+        (BitWidth::B1, BitWidth::B8) => Some("lut-w1a8"),
+        (BitWidth::B4, BitWidth::B4) => Some("lut-w4a4"),
+        _ => None,
+    }
+}
+
+/// Registry name of the LUT GEMM backend for a variant, if implemented.
+pub fn lut_gemm_kernel_name(v: Variant) -> Option<&'static str> {
+    match (v.w, v.a) {
+        (BitWidth::B4, BitWidth::B8) => Some("lut-w4a8-gemm"),
+        (BitWidth::B2, BitWidth::B8) => Some("lut-w2a8-gemm"),
+        (BitWidth::B1, BitWidth::B8) => Some("lut-w1a8-gemm"),
+        (BitWidth::B4, BitWidth::B4) => Some("lut-w4a4-gemm"),
+        _ => None,
+    }
+}
+
+/// Per-thread scratch: the table lives here so steady-state calls never
+/// allocate (the build cost the model charges is the fill, not malloc).
+#[derive(Default)]
+struct LutScratch {
+    table: Vec<i32>,
+    acts: Vec<i8>,
+}
+
+thread_local! {
+    static LUT_SCRATCH: RefCell<LutScratch> = RefCell::new(LutScratch::default());
+}
+
+/// Fill `table` (`wb · 256` slots) with the partial-dot tables for one
+/// activation vector: `table[pos·256 + v]` is what packed byte value
+/// `v` at row byte position `pos` contributes to a dot product with
+/// `a`.  `a` must be the unpacked activation vector of at least the
+/// padded depth `wb · E`.
+///
+/// Incremental build: entry `v` extends the entry with `v`'s highest
+/// non-zero sub-vector field cleared — a strictly smaller index, so one
+/// signed multiply-add per slot.
+pub fn build_tables<const B: usize>(a: &[i8], wb: usize, table: &mut [i32]) {
+    let e = 8 / B;
+    debug_assert!(a.len() >= wb * e, "activations {} < padded depth {}", a.len(), wb * e);
+    debug_assert_eq!(table.len(), wb * 256);
+    for pos in 0..wb {
+        let blk = pos / VL;
+        let j = pos % VL;
+        // the E activation elements byte position `pos` multiplies
+        let mut af = [0i32; 8];
+        for (k, slot) in af.iter_mut().enumerate().take(e) {
+            *slot = a[blk * e * VL + k * VL + j] as i32;
+        }
+        let t = &mut table[pos * 256..(pos + 1) * 256];
+        t[0] = 0; // every sub-vector field of byte 0 extracts to 0
+        for v in 1..256usize {
+            let top_bit = 31 - (v as u32).leading_zeros() as usize;
+            let ks = top_bit / B;
+            let lower = v & ((1usize << (ks * B)) - 1);
+            t[v] = t[lower] + extract::<B>(v as u8 as i8, ks) as i32 * af[ks];
+        }
+    }
+}
+
+/// LUT GEMV: build the tables once, then one gather + add per packed
+/// weight byte per row.  `table` is caller-owned scratch (cleared and
+/// refilled here).
+pub fn gemv_lut<const B: usize>(
+    wp: &PackedMatrix,
+    a: &[i8],
+    out: &mut [i32],
+    table: &mut Vec<i32>,
+) {
+    gemv_lut_at::<B>(wp, a, out, 0, table)
+}
+
+/// [`gemv_lut`] over the row range `[row0, row0 + out.len())` — the
+/// zero-copy sharding entry (`kernels::parallel` shards rows; each
+/// shard rebuilds its own table, which is why the planner's thread
+/// budget is a poor fit for this tier).
+pub fn gemv_lut_at<const B: usize>(
+    wp: &PackedMatrix,
+    a: &[i8],
+    out: &mut [i32],
+    row0: usize,
+    table: &mut Vec<i32>,
+) {
+    debug_assert_eq!(wp.bits().bits(), B);
+    let wb = wp.bytes_per_row();
+    table.clear();
+    table.resize(wb * 256, 0);
+    build_tables::<B>(a, wb, table);
+    for (r, o) in out.iter_mut().enumerate() {
+        let row = wp.row(row0 + r);
+        let mut sum = 0i32;
+        for (pos, &byte) in row.iter().enumerate() {
+            sum += table[pos * 256 + byte as usize];
+        }
+        *o = sum;
+    }
+}
+
+/// Batched LUT GEMM: per [`COL_TILE`]-column tile, build one table per
+/// column, then walk each packed weight row **once per tile** feeding
+/// all the tile's columns — the weight stream amortizes as
+/// `ceil(batch/COL_TILE)/batch` while builds stay one per column.
+/// `out[c·z + r]` is batch-major like every GEMM backend.
+pub fn gemm_lut<const B: usize>(
+    wp: &PackedMatrix,
+    cols: &[&[i8]],
+    out: &mut [i32],
+    tables: &mut Vec<i32>,
+) {
+    let wb = wp.bytes_per_row();
+    let z = wp.rows();
+    let tb = wb * 256;
+    for c0 in (0..cols.len()).step_by(COL_TILE) {
+        let ct = (cols.len() - c0).min(COL_TILE);
+        tables.clear();
+        tables.resize(ct * tb, 0);
+        for ci in 0..ct {
+            build_tables::<B>(cols[c0 + ci], wb, &mut tables[ci * tb..(ci + 1) * tb]);
+        }
+        for r in 0..z {
+            let row = wp.row(r);
+            let mut sums = [0i32; COL_TILE];
+            for (pos, &byte) in row.iter().enumerate() {
+                let idx = pos * 256 + byte as usize;
+                for (ci, s) in sums.iter_mut().enumerate().take(ct) {
+                    *s += tables[ci * tb + idx];
+                }
+            }
+            for (ci, s) in sums.iter().enumerate().take(ct) {
+                out[(c0 + ci) * z + r] = *s;
+            }
+        }
+    }
+}
+
+/// Width-dispatched [`gemv_lut_at`] (int8 weights have no LUT kernel:
+/// a 256-entry table per byte position would just memoize one scalar
+/// multiply).
+pub fn gemv_lut_dyn(
+    wp: &PackedMatrix,
+    a: &[i8],
+    out: &mut [i32],
+    row0: usize,
+    table: &mut Vec<i32>,
+) -> Result<(), KernelError> {
+    match wp.bits() {
+        BitWidth::B4 => gemv_lut_at::<4>(wp, a, out, row0, table),
+        BitWidth::B2 => gemv_lut_at::<2>(wp, a, out, row0, table),
+        BitWidth::B1 => gemv_lut_at::<1>(wp, a, out, row0, table),
+        BitWidth::B8 => {
+            return Err(KernelError::Unsupported("lut tier needs sub-byte weights".into()))
+        }
+    }
+    Ok(())
+}
+
+/// Width-dispatched [`gemm_lut`].
+pub fn gemm_lut_dyn(
+    wp: &PackedMatrix,
+    cols: &[&[i8]],
+    out: &mut [i32],
+    tables: &mut Vec<i32>,
+) -> Result<(), KernelError> {
+    match wp.bits() {
+        BitWidth::B4 => gemm_lut::<4>(wp, cols, out, tables),
+        BitWidth::B2 => gemm_lut::<2>(wp, cols, out, tables),
+        BitWidth::B1 => gemm_lut::<1>(wp, cols, out, tables),
+        BitWidth::B8 => {
+            return Err(KernelError::Unsupported("lut tier needs sub-byte weights".into()))
+        }
+    }
+    Ok(())
+}
+
+/// Unpack a FullPack-packed activation vector to plain int8 in logical
+/// element order (the order [`build_tables`] indexes): group `g`, field
+/// `k`, lane `j` ↦ element `g·E·VL + k·VL + j`.
+fn unpack_acts<const B: usize>(bytes: &[u8], out: &mut Vec<i8>) {
+    let e = 8 / B;
+    out.clear();
+    out.reserve(bytes.len() * e);
+    for chunk in bytes.chunks_exact(VL) {
+        for k in 0..e {
+            for &b in chunk {
+                out.push(extract::<B>(b as i8, k));
+            }
+        }
+    }
+}
+
+fn unpack_acts_dyn(bytes: &[u8], bits: BitWidth, out: &mut Vec<i8>) {
+    match bits {
+        BitWidth::B4 => unpack_acts::<4>(bytes, out),
+        BitWidth::B2 => unpack_acts::<2>(bytes, out),
+        BitWidth::B1 => unpack_acts::<1>(bytes, out),
+        BitWidth::B8 => unreachable!("B8 activations arrive as ActVec::I8"),
+    }
+}
+
+/// The LUT GEMV tier as a registry backend, one entry per
+/// [`LUT_VARIANTS`] variant.  Shares the FullPack tier's prepared
+/// layout exactly: weights prepared by `fullpack-*` (or the `-gemm`
+/// twins of either family) execute here unchanged.
+pub struct LutKernel {
+    variant: Variant,
+    name: &'static str,
+}
+
+impl LutKernel {
+    /// Backend for `variant`, if the tier implements it.
+    pub fn new(variant: Variant) -> Option<LutKernel> {
+        lut_kernel_name(variant).map(|name| LutKernel { variant, name })
+    }
+}
+
+impl GemvKernel for LutKernel {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn supports(&self, v: Variant) -> bool {
+        v == self.variant
+    }
+
+    fn prepare(&self, w: &[i8], rows: usize, k: usize) -> Result<Weights, KernelError> {
+        // identical layout to the FullPack tier: prepared weights are
+        // interchangeable across both families and both namespaces
+        let kp = self.variant.padded_depth(k);
+        let padded = pad_rows(w, rows, k, kp);
+        Ok(Weights::Packed(PackedMatrix::from_i8(&padded, rows, kp, self.variant.w)?))
+    }
+
+    fn gemv_at(
+        &self,
+        w: &Weights,
+        a: ActVec<'_>,
+        out: &mut [i32],
+        row0: usize,
+    ) -> Result<(), KernelError> {
+        let Weights::Packed(wp) = w else { return Err(wrong_layout(self.name, w)) };
+        if !wp.bits().is_sub_byte() {
+            return Err(wrong_layout(self.name, w));
+        }
+        check_rows(w, out, row0)?;
+        let kp = wp.k_padded();
+        LUT_SCRATCH.with(|s| {
+            let mut s = s.borrow_mut();
+            let s = &mut *s;
+            match a {
+                ActVec::I8(av) => {
+                    if av.len() < kp {
+                        return Err(KernelError::Shape(format!(
+                            "activation elems {} < padded depth {kp}",
+                            av.len()
+                        )));
+                    }
+                    gemv_lut_dyn(wp, av, out, row0, &mut s.table)
+                }
+                ActVec::Packed { bytes, bits } if bits == self.variant.a => {
+                    unpack_acts_dyn(bytes, bits, &mut s.acts);
+                    if s.acts.len() < kp {
+                        return Err(KernelError::Shape(format!(
+                            "activation elems {} < padded depth {kp}",
+                            s.acts.len()
+                        )));
+                    }
+                    gemv_lut_dyn(wp, &s.acts, out, row0, &mut s.table)
+                }
+                ActVec::Packed { bits, .. } => Err(KernelError::Unsupported(format!(
+                    "{}: {}-bit packed activations",
+                    self.name,
+                    bits.bits()
+                ))),
+            }
+        })
+    }
+
+    fn cost_method(&self) -> Option<Method> {
+        Some(Method::Lut(self.variant))
+    }
+
+    fn packs_activations(&self) -> bool {
+        self.variant.a.is_sub_byte()
+    }
+
+    // NOTE: the default `gemm` (repeated per-column `gemv_at`) is kept
+    // deliberately — it is exactly what `Method::Lut` models for
+    // batches (b rebuilt tables, b weight streams); the amortized path
+    // is the separate `lut-*-gemm` backend.
+}
+
+/// The batched LUT GEMM wrappers as first-class backends
+/// (`lut-*-gemm`): same prepared layout, [`gemm_lut`] execution.
+pub struct LutGemmKernel {
+    variant: Variant,
+    name: &'static str,
+}
+
+impl LutGemmKernel {
+    /// Backend for `variant`, if the tier implements it.
+    pub fn new(variant: Variant) -> Option<LutGemmKernel> {
+        lut_gemm_kernel_name(variant).map(|name| LutGemmKernel { variant, name })
+    }
+}
+
+impl GemmKernel for LutGemmKernel {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn supports(&self, v: Variant) -> bool {
+        v == self.variant
+    }
+
+    fn prepare(&self, w: &[i8], rows: usize, k: usize) -> Result<Weights, KernelError> {
+        let kp = self.variant.padded_depth(k);
+        let padded = pad_rows(w, rows, k, kp);
+        Ok(Weights::Packed(PackedMatrix::from_i8(&padded, rows, kp, self.variant.w)?))
+    }
+
+    fn gemm(&self, w: &Weights, cols: &[&[i8]], out: &mut [i32]) -> Result<(), KernelError> {
+        let Weights::Packed(wp) = w else { return Err(wrong_layout(self.name, w)) };
+        if !wp.bits().is_sub_byte() {
+            return Err(wrong_layout(self.name, w));
+        }
+        check_gemm_shape(w, cols, out)?;
+        // int8 columns even for w4a4: sub-byte activation values pass
+        // through i8 losslessly and the table build consumes i8 anyway
+        LUT_SCRATCH.with(|s| gemm_lut_dyn(wp, cols, out, &mut s.borrow_mut().table))
+    }
+
+    fn cost_method(&self) -> Option<Method> {
+        Some(Method::LutGemm(self.variant))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::testutil::{oracle_gemv, rngvals};
+    use crate::kernels::pack_activations;
+
+    #[test]
+    fn table_recurrence_matches_direct_computation() {
+        // the incremental build must equal the definitional triple loop
+        fn check<const B: usize>(seed: u64) {
+            let e = 8 / B;
+            let wb = 2 * VL; // two blocks
+            let a = rngvals(BitWidth::B8, wb * e, seed);
+            let mut table = vec![0i32; wb * 256];
+            build_tables::<B>(&a, wb, &mut table);
+            for pos in 0..wb {
+                let (blk, j) = (pos / VL, pos % VL);
+                for v in 0..256usize {
+                    let direct: i32 = (0..e)
+                        .map(|k| {
+                            extract::<B>(v as u8 as i8, k) as i32
+                                * a[blk * e * VL + k * VL + j] as i32
+                        })
+                        .sum();
+                    assert_eq!(table[pos * 256 + v], direct, "B={B} pos={pos} v={v}");
+                }
+            }
+        }
+        check::<4>(11);
+        check::<2>(12);
+        check::<1>(13);
+    }
+
+    #[test]
+    fn lut_gemv_matches_oracle_all_variants() {
+        for (i, v) in LUT_VARIANTS.iter().enumerate() {
+            let kernel = LutKernel::new(*v).unwrap();
+            for k in [1usize, 33, 64, 129] {
+                let z = 24;
+                let w = rngvals(v.w, z * k, 500 + i as u64 + k as u64);
+                let a = rngvals(v.a, k, 600 + i as u64 + k as u64);
+                let wts = kernel.prepare(&w, z, k).unwrap();
+                let kp = wts.k_padded();
+                let mut ap = a.clone();
+                ap.resize(kp, 0);
+                let packed_a;
+                let act = if kernel.packs_activations() {
+                    packed_a = pack_activations(&ap, v.a).unwrap();
+                    ActVec::Packed { bytes: &packed_a, bits: v.a }
+                } else {
+                    ActVec::I8(&ap)
+                };
+                let mut out = vec![0i32; z];
+                kernel.gemv_at(&wts, act, &mut out, 0).unwrap();
+                let wpad = pad_rows(&w, z, k, kp);
+                assert_eq!(out, oracle_gemv(&wpad, &ap, z, kp), "{v} k={k}");
+                // row-range sharding entry
+                let mut shard = vec![0i32; z / 2];
+                kernel.gemv_at(&wts, act, &mut shard, z / 2).unwrap();
+                assert_eq!(shard.as_slice(), &out[z / 2..], "{v} k={k} shard");
+            }
+        }
+    }
+
+    #[test]
+    fn lut_gemm_matches_oracle_across_tile_boundaries() {
+        // batches around the COL_TILE boundary: partial tiles included
+        for v in LUT_VARIANTS {
+            let g = LutGemmKernel::new(v).unwrap();
+            for batch in [1usize, 2, COL_TILE, COL_TILE + 1, 2 * COL_TILE + 3] {
+                let (z, k) = (16usize, 77usize);
+                let w = rngvals(v.w, z * k, 700 + batch as u64);
+                let wts = g.prepare(&w, z, k).unwrap();
+                let kp = wts.k_padded();
+                let cols: Vec<Vec<i8>> = (0..batch)
+                    .map(|c| {
+                        let mut col = rngvals(v.a, k, 800 + c as u64);
+                        col.resize(kp, 0);
+                        col
+                    })
+                    .collect();
+                let refs: Vec<&[i8]> = cols.iter().map(|c| c.as_slice()).collect();
+                let mut out = vec![0i32; z * batch];
+                g.gemm(&wts, &refs, &mut out).unwrap();
+                let wpad = pad_rows(&w, z, k, kp);
+                for (c, col) in cols.iter().enumerate() {
+                    assert_eq!(
+                        &out[c * z..(c + 1) * z],
+                        oracle_gemv(&wpad, col, z, kp).as_slice(),
+                        "{v} batch={batch} col {c}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn foreign_layouts_and_widths_are_rejected() {
+        let v = Variant::parse("w4a8").unwrap();
+        let kernel = LutKernel::new(v).unwrap();
+        let g = LutGemmKernel::new(v).unwrap();
+        let a = vec![0i8; 64];
+        let mut out = vec![0i32; 2];
+        // int8-packed (non-sub-byte) weights
+        let w8 = Weights::Packed(PackedMatrix::from_i8(&vec![0i8; 128], 2, 64, BitWidth::B8).unwrap());
+        assert!(kernel.gemv_at(&w8, ActVec::I8(&a), &mut out, 0).is_err());
+        assert!(g.gemm(&w8, &[a.as_slice(), a.as_slice()], &mut vec![0i32; 4]).is_err());
+        // a rival family's layout entirely
+        let f32w = Weights::F32 { data: vec![0.0; 128], rows: 2, k: 64 };
+        assert!(kernel.gemv_at(&f32w, ActVec::I8(&a), &mut out, 0).is_err());
+        assert!(g.gemm(&f32w, &[a.as_slice(), a.as_slice()], &mut vec![0i32; 4]).is_err());
+        // packed activations of the wrong width
+        let wts = kernel.prepare(&vec![0i8; 128], 2, 64).unwrap();
+        let bytes = vec![0u8; 16];
+        let bad = ActVec::Packed { bytes: &bytes, bits: BitWidth::B2 };
+        assert!(kernel.gemv_at(&wts, bad, &mut out, 0).is_err());
+        // short activations
+        let short = vec![0i8; 63];
+        assert!(kernel.gemv_at(&wts, ActVec::I8(&short), &mut out, 0).is_err());
+    }
+
+    #[test]
+    fn shared_layout_with_fullpack_prepared_weights() {
+        // weights prepared by the FullPack GEMV tier run on the LUT
+        // tier unchanged (and vice versa) — one prepared artifact, two
+        // families
+        let v = Variant::parse("w2a8").unwrap();
+        let reg = crate::kernels::KernelRegistry::global();
+        let fp = reg.get("fullpack-w2a8").unwrap();
+        let lut = reg.get("lut-w2a8").unwrap();
+        let (z, k) = (8usize, 100usize);
+        let w = rngvals(v.w, z * k, 41);
+        let wts = fp.prepare(&w, z, k).unwrap();
+        let kp = wts.k_padded();
+        let mut a = rngvals(v.a, k, 42);
+        a.resize(kp, 0);
+        let mut via_fp = vec![0i32; z];
+        fp.gemv_at(&wts, ActVec::I8(&a), &mut via_fp, 0).unwrap();
+        let mut via_lut = vec![0i32; z];
+        lut.gemv_at(&wts, ActVec::I8(&a), &mut via_lut, 0).unwrap();
+        assert_eq!(via_fp, via_lut);
+    }
+}

@@ -5,6 +5,8 @@
 //! the paper's kernels one-for-one).
 //!
 //! * [`fullpack`] — the nine paper variants (§3.2) over the dense layout;
+//! * [`lut`]      — the table-driven LUT tier (DESIGN.md §13): same
+//!   packed layout, gather-based row loops, `lut-*`/`lut-*-gemm` entries;
 //! * [`baseline`] — Ruy/XNNPack/TFLite/GEMMLOWP-like i8 and f32 rivals;
 //! * [`ulppack`]  — the ULPPACK spacer-lane comparator (Won et al. 2022);
 //! * [`naive`]    — the Alg. 1 strawman over adjacent packing.
@@ -22,6 +24,7 @@ pub mod api;
 pub mod baseline;
 pub mod fullpack;
 pub mod fullpack_gemm;
+pub mod lut;
 pub mod naive;
 pub mod parallel;
 pub mod plan;
@@ -31,6 +34,7 @@ pub mod testutil;
 pub mod ulppack;
 
 pub use api::{GemmKernel, GemvKernel, Weights};
+pub use lut::{lut_gemm_kernel_name, lut_kernel_name, LutGemmKernel, LutKernel, LUT_VARIANTS};
 pub use plan::{LayerShape, Plan, PlanBuilder, PlanScratch, SelectPolicy, Selection, GEMM_MIN_BATCH};
 pub use registry::{
     fullpack_gemm_kernel_name, KernelRegistry, RowParallel, FULLPACK_GEMM_VARIANTS,

@@ -23,6 +23,7 @@
 #![warn(missing_docs)]
 
 use super::api::{GemmKernel, GemvKernel, Weights};
+use super::lut::lut_kernel_name;
 use super::registry::{fullpack_gemm_kernel_name, fullpack_kernel_name, KernelRegistry};
 use super::swar::{swar_kernel_name, SWAR_MIN_DEPTH};
 use super::{parallel, ActVec, KernelError};
@@ -257,8 +258,9 @@ impl PlanBuilder {
 
     /// For a batched selection, the same-layout GEMV twin of a GEMM
     /// backend — `fullpack-wXa8` for the `fullpack-wXa8-gemm` tier,
-    /// `ruy-w8a8` for everything int8-rowed.  Only used as plan
-    /// metadata; execution goes through the GEMM backend itself.
+    /// `lut-wXaY` for the `lut-wXaY-gemm` wrappers, `ruy-w8a8` for
+    /// everything int8-rowed.  Only used as plan metadata; execution
+    /// goes through the GEMM backend itself.
     fn gemv_twin(
         reg: &KernelRegistry,
         gemm_name: &str,
@@ -266,6 +268,8 @@ impl PlanBuilder {
     ) -> Result<Arc<dyn GemvKernel>, KernelError> {
         let name = if gemm_name.starts_with("fullpack-") {
             fullpack_kernel_name(ev)
+        } else if gemm_name.starts_with("lut-") {
+            lut_kernel_name(ev).unwrap_or("ruy-w8a8")
         } else {
             "ruy-w8a8"
         };
@@ -768,6 +772,69 @@ mod tests {
             .policy(SelectPolicy::Explicit("fullpack-w2a8-gemm".into()))
             .build()
             .is_err());
+    }
+
+    #[test]
+    fn explicit_lut_plans_execute_both_namespaces() {
+        let v = Variant::parse("w4a8").unwrap();
+        let (z, k) = (16usize, 77usize);
+        let kp = v.padded_depth(k);
+        let w = rngvals(v.w, z * k, 61);
+        let wp = pad_rows(&w, z, k, kp);
+        // GEMV namespace
+        let p = PlanBuilder::new(shape(z, k, 1), v)
+            .policy(SelectPolicy::Explicit("lut-w4a8".into()))
+            .build()
+            .unwrap();
+        assert_eq!(p.kernel_name(), "lut-w4a8");
+        assert!(!p.is_batched());
+        let a = rngvals(v.a, k, 62);
+        let wts = p.prepare_weights(&w).unwrap();
+        let mut out = vec![0i32; z];
+        p.execute(&wts, &a, &mut out).unwrap();
+        let mut ap = a.clone();
+        ap.resize(kp, 0);
+        assert_eq!(out, oracle_gemv(&wp, &ap, z, kp));
+        // GEMM namespace: batch-first plan with the same-layout twin
+        let batch = 5;
+        let p = PlanBuilder::new(shape(z, k, batch), v)
+            .policy(SelectPolicy::Explicit("lut-w4a8-gemm".into()))
+            .build()
+            .unwrap();
+        assert_eq!(p.kernel_name(), "lut-w4a8-gemm");
+        assert_eq!(p.kernel().name(), "lut-w4a8");
+        assert!(p.is_batched());
+        let ab = rngvals(v.a, batch * k, 63);
+        let wts = p.prepare_weights(&w).unwrap();
+        let mut outb = vec![0i32; batch * z];
+        p.execute_batch(&wts, &ab, batch, &mut outb).unwrap();
+        for b in 0..batch {
+            let mut col = ab[b * k..(b + 1) * k].to_vec();
+            col.resize(kp, 0);
+            assert_eq!(
+                &outb[b * z..(b + 1) * z],
+                oracle_gemv(&wp, &col, z, kp).as_slice(),
+                "col {b}"
+            );
+        }
+        // w4a4: the planner's activation-packing path feeds the LUT
+        // kernel packed sub-byte activations
+        let w4a4 = Variant::parse("w4a4").unwrap();
+        let p = PlanBuilder::new(shape(z, k, 1), w4a4)
+            .policy(SelectPolicy::Explicit("lut-w4a4".into()))
+            .build()
+            .unwrap();
+        assert!(p.kernel().packs_activations());
+        let w4 = rngvals(w4a4.w, z * k, 64);
+        let a4 = rngvals(w4a4.a, k, 65);
+        let wts4 = p.prepare_weights(&w4).unwrap();
+        let mut out4 = vec![0i32; z];
+        p.execute(&wts4, &a4, &mut out4).unwrap();
+        let kp4 = w4a4.padded_depth(k);
+        let wp4 = pad_rows(&w4, z, k, kp4);
+        let mut ap4 = a4.clone();
+        ap4.resize(kp4, 0);
+        assert_eq!(out4, oracle_gemv(&wp4, &ap4, z, kp4));
     }
 
     #[test]

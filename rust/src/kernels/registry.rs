@@ -10,6 +10,7 @@
 //! |-------------------|----------|-----------|-----------------------|
 //! | `fullpack-wXaY`   | FullPack | stride-16 | `Method::FullPack`    |
 //! | `fullpack-wXa8-swar` | SWAR tier | stride-16 + row sums | `Method::FullPackSwar` |
+//! | `lut-wXaY`        | LUT tier | stride-16 + per-call tables | `Method::Lut` |
 //! | `naive-wXa8`      | Alg. 1   | adjacent  | `Method::Naive`       |
 //! | `ulppack-wXaX`    | ULPPACK  | spacer    | `Method::Ulppack`     |
 //! | `ruy-w8a8` &co.   | int8     | row-major | `Method::*W8A8`       |
@@ -20,6 +21,7 @@
 //! | name                  | family       | layout    | modeled as             |
 //! |-----------------------|--------------|-----------|------------------------|
 //! | `fullpack-wXa8-gemm`  | FullPack     | stride-16 | `Method::FullPackGemm` |
+//! | `lut-wXaY-gemm`       | LUT tier     | stride-16 | `Method::LutGemm`      |
 //! | `ruy-like-w8a8-gemm`  | int8 rival   | row-major | repeated `RuyW8A8`     |
 //! | `naive-oracle-gemm`   | test oracle  | unpacked  | (not modeled)          |
 //!
@@ -29,6 +31,7 @@
 #![warn(missing_docs)]
 
 use super::api::{check_gemm_shape, check_rows, wrong_layout, GemmKernel, GemvKernel, Weights};
+use super::lut::{LutGemmKernel, LutKernel, LUT_VARIANTS};
 use super::swar::{SwarKernel, SWAR_VARIANTS};
 use super::{baseline, fullpack_gemm, naive, parallel, ulppack, ActVec, KernelError};
 use crate::costmodel::Method;
@@ -657,10 +660,11 @@ impl KernelRegistry {
     }
 
     /// Every built-in backend: nine FullPack variants, the SWAR fast
-    /// path (DESIGN.md §8), the naive Alg. 1 strawman, ULPPACK, the
-    /// W8A8 rivals and the FP32 rivals — plus the GEMM tier
-    /// (DESIGN.md §9): `fullpack-{w4,w2,w1}a8-gemm`, the Ruy-like W8A8
-    /// GEMM rival, and the naive oracle.
+    /// path (DESIGN.md §8), the LUT tier (DESIGN.md §13), the naive
+    /// Alg. 1 strawman, ULPPACK, the W8A8 rivals and the FP32 rivals —
+    /// plus the GEMM tier (DESIGN.md §9):
+    /// `fullpack-{w4,w2,w1}a8-gemm`, the `lut-*-gemm` wrappers, the
+    /// Ruy-like W8A8 GEMM rival, and the naive oracle.
     pub fn with_builtins() -> KernelRegistry {
         let mut reg = KernelRegistry::empty();
         for v in Variant::PAPER_VARIANTS {
@@ -668,6 +672,10 @@ impl KernelRegistry {
         }
         for v in SWAR_VARIANTS {
             let kernel = SwarKernel::new(v).expect("SWAR_VARIANTS are implemented");
+            reg.register(Arc::new(kernel));
+        }
+        for v in LUT_VARIANTS {
+            let kernel = LutKernel::new(v).expect("LUT_VARIANTS are implemented");
             reg.register(Arc::new(kernel));
         }
         for flavor in [I8Flavor::Ruy, I8Flavor::Xnn, I8Flavor::Tflite, I8Flavor::Gemmlowp] {
@@ -682,6 +690,10 @@ impl KernelRegistry {
         }
         for v in FULLPACK_GEMM_VARIANTS {
             let kernel = FullPackGemmKernel::new(v).expect("FULLPACK_GEMM_VARIANTS implemented");
+            reg.register_gemm(Arc::new(kernel));
+        }
+        for v in LUT_VARIANTS {
+            let kernel = LutGemmKernel::new(v).expect("LUT_VARIANTS are implemented");
             reg.register_gemm(Arc::new(kernel));
         }
         reg.register_gemm(Arc::new(RuyLikeGemmKernel));
@@ -796,14 +808,18 @@ mod tests {
     #[test]
     fn builtin_roster_complete() {
         let reg = KernelRegistry::global();
-        // 9 fullpack + 4 swar + 4 i8 + 3 f32 + 3 naive + 3 ulppack
-        assert_eq!(reg.len(), 26);
+        // 9 fullpack + 4 swar + 4 lut + 4 i8 + 3 f32 + 3 naive + 3 ulppack
+        assert_eq!(reg.len(), 30);
         for name in [
             "fullpack-w4a8",
             "fullpack-w4a8-swar",
             "fullpack-w2a8-swar",
             "fullpack-w1a8-swar",
             "fullpack-w8a8-swar",
+            "lut-w4a8",
+            "lut-w2a8",
+            "lut-w1a8",
+            "lut-w4a4",
             "ruy-w8a8",
             "xnn-w8a8",
             "ulppack-w2a2",
@@ -817,12 +833,16 @@ mod tests {
         names.sort_unstable();
         names.dedup();
         assert_eq!(names.len(), reg.len());
-        // the GEMM tier: 3 fullpack + ruy-like rival + naive oracle
-        assert_eq!(reg.gemm_len(), 5);
+        // the GEMM tier: 3 fullpack + 4 lut + ruy-like rival + naive oracle
+        assert_eq!(reg.gemm_len(), 9);
         for name in [
             "fullpack-w4a8-gemm",
             "fullpack-w2a8-gemm",
             "fullpack-w1a8-gemm",
+            "lut-w4a8-gemm",
+            "lut-w2a8-gemm",
+            "lut-w1a8-gemm",
+            "lut-w4a4-gemm",
             "ruy-like-w8a8-gemm",
             "naive-oracle-gemm",
         ] {
@@ -886,6 +906,43 @@ mod tests {
                 );
             }
             // shape rejection: wrong out length, short column
+            let mut bad = vec![0i32; z * batch - 1];
+            assert!(g.gemm(&wts, &col_refs, &mut bad).is_err());
+            let short = vec![0i8; kp.saturating_sub(1)];
+            let mut out1 = vec![0i32; z];
+            assert!(g.gemm(&wts, &[short.as_slice()], &mut out1).is_err());
+        }
+    }
+
+    #[test]
+    fn lut_gemm_backends_match_per_column_oracle() {
+        use crate::kernels::lut::lut_gemm_kernel_name;
+        let reg = KernelRegistry::global();
+        for v in LUT_VARIANTS {
+            let g = reg.get_gemm(lut_gemm_kernel_name(v).unwrap()).unwrap();
+            let (z, k, batch) = (8usize, 50usize, 5usize);
+            let w = rngvals(v.w, z * k, 191);
+            let wts = g.prepare(&w, z, k).unwrap();
+            let kp = wts.k_padded();
+            let cols: Vec<Vec<i8>> = (0..batch)
+                .map(|c| {
+                    let mut col = rngvals(v.a, k, 192 + c as u64);
+                    col.resize(kp, 0);
+                    col
+                })
+                .collect();
+            let col_refs: Vec<&[i8]> = cols.iter().map(|c| c.as_slice()).collect();
+            let mut out = vec![0i32; z * batch];
+            g.gemm(&wts, &col_refs, &mut out).unwrap();
+            let wp = crate::pack::pad_rows(&w, z, k, kp);
+            for (c, col) in cols.iter().enumerate() {
+                assert_eq!(
+                    &out[c * z..(c + 1) * z],
+                    oracle_gemv(&wp, col, z, kp).as_slice(),
+                    "{v} col {c}"
+                );
+            }
+            // shape rejection mirrors the FullPack GEMM tier
             let mut bad = vec![0i32; z * batch - 1];
             assert!(g.gemm(&wts, &col_refs, &mut bad).is_err());
             let short = vec![0i8; kp.saturating_sub(1)];

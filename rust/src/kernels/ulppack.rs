@@ -138,12 +138,17 @@ mod tests {
     fn local_step_bounds() {
         assert_eq!(max_local_steps(BitWidth::B1), 255);
         assert_eq!(max_local_steps(BitWidth::B2), 28);
-        assert!(max_local_steps(BitWidth::B4) >= 1);
+        // B4: (2^4-1)^2 = 225 > 255/2 — the middle segment must be
+        // extracted after every single lane
+        assert_eq!(max_local_steps(BitWidth::B4), 1);
     }
 
     #[test]
     fn ulppack_matches_oracle() {
-        for bits in [BitWidth::B1, BitWidth::B2] {
+        // B4 included: its max_local_steps == 1 per-block extraction
+        // path (one lane per middle-segment recompute) had no oracle
+        // coverage before
+        for bits in [BitWidth::B1, BitWidth::B2, BitWidth::B4] {
             for k in [16usize, 33, 64, 100, 256] {
                 let z = 8;
                 let w = rngvals(bits, z * k, 51);
@@ -159,15 +164,23 @@ mod tests {
 
     #[test]
     fn ulppack_extremes() {
-        let bits = BitWidth::B2;
-        let k = 64;
-        let z = 2;
-        let w = vec![-2i8; z * k]; // min value
-        let a = vec![1i8; k]; // max value
-        let wm = UlppackMatrix::from_i8(&w, z, k, bits).unwrap();
-        let (a_rev, a_sum) = prepare_acts(&a, bits);
-        let mut out = vec![0i32; z];
-        gemv_ulppack(&wm, &a_rev, a_sum, k, &mut out);
-        assert_eq!(out, oracle_gemv(&w, &a, z, k));
+        // worst-case accumulators per width: all-min weights × all-max
+        // activations, plus the all-min × all-min corner (largest
+        // positive product), at an even and an odd (phantom-lane) depth
+        for bits in [BitWidth::B1, BitWidth::B2, BitWidth::B4] {
+            let (lo, hi) = bits.value_range();
+            for k in [64usize, 65] {
+                for (wv, av) in [(lo, hi.max(lo + 1)), (lo, lo), (hi, hi)] {
+                    let z = 2;
+                    let w = vec![wv; z * k];
+                    let a = vec![av; k];
+                    let wm = UlppackMatrix::from_i8(&w, z, k, bits).unwrap();
+                    let (a_rev, a_sum) = prepare_acts(&a, bits);
+                    let mut out = vec![0i32; z];
+                    gemv_ulppack(&wm, &a_rev, a_sum, k, &mut out);
+                    assert_eq!(out, oracle_gemv(&w, &a, z, k), "{bits:?} k={k} w={wv} a={av}");
+                }
+            }
+        }
     }
 }

@@ -101,6 +101,9 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             // not a paper figure: the GEMM tier's memory-aware
             // batch x size amortization sweep (DESIGN.md §9)
             "gemm-batch" => sweeps::fig_gemm_batch(sz),
+            // not a paper figure: the LUT tier's table-vs-L1 crossover
+            // sweep on the portable core (DESIGN.md §13)
+            "lut-crossover" => sweeps::fig_lut_crossover(sz),
             "fig10" | "fig1" => {
                 let (table, totals) = e2e::fig10(DeepSpeechConfig::FULL);
                 println!("=== fig10 (DeepSpeech per-layer breakdown, simulated) ===\n");
@@ -124,8 +127,18 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         emit_csv(csv, &report)
     };
     if which == "all" {
-        for id in ["fig4", "fig5", "fig6", "fig7", "fig8", "fig10", "fig12", "fig13", "gemm-batch"]
-        {
+        for id in [
+            "fig4",
+            "fig5",
+            "fig6",
+            "fig7",
+            "fig8",
+            "fig10",
+            "fig12",
+            "fig13",
+            "gemm-batch",
+            "lut-crossover",
+        ] {
             run(id)?;
         }
         Ok(())

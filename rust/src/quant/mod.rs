@@ -66,7 +66,9 @@ pub fn requantize(acc: i32, s_w: f32, s_a: f32, bias: f32) -> f32 {
 
 /// Apply [`requantize`] across a whole output vector.
 pub fn requantize_vec(acc: &[i32], s_w: f32, s_a: f32, bias: &[f32]) -> Vec<f32> {
-    debug_assert_eq!(acc.len(), bias.len());
+    // hard assert (like `requantize_rows`): a short bias would
+    // otherwise silently truncate the output through the zip below
+    assert_eq!(acc.len(), bias.len(), "bias len {} != acc len {}", bias.len(), acc.len());
     acc.iter()
         .zip(bias)
         .map(|(&a, &b)| requantize(a, s_w, s_a, b))
@@ -182,6 +184,14 @@ mod tests {
         let acc = [1, 2, 10, 20];
         let out = requantize_rows(&acc, &[1.0, 0.5], 1.0, &[0.0, 1.0]);
         assert_eq!(out, vec![1.0, 2.0, 10.0, 11.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "bias len")]
+    fn requantize_vec_rejects_short_bias() {
+        // regression: the guard was a debug_assert, so release builds
+        // silently truncated the output vector to the bias length
+        let _ = requantize_vec(&[1, 2, 3], 1.0, 1.0, &[0.0, 0.0]);
     }
 
     #[test]

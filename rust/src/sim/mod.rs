@@ -13,9 +13,10 @@ pub mod trace;
 
 pub use cache::{CacheConfig, CacheStats, Hierarchy};
 pub use trace::{
-    replay_gemm, replay_gemm_at, replay_gemm_restream, replay_gemm_restream_at, replay_gemv,
-    replay_gemv_at, replay_gemv_traced, replay_gemv_traced_at, GemmTraffic, GemvTraffic,
-    OperandStats, ReplayStats,
+    replay_gemm, replay_gemm_at, replay_gemm_lut, replay_gemm_lut_at, replay_gemm_restream,
+    replay_gemm_restream_at, replay_gemv, replay_gemv_at, replay_gemv_lut, replay_gemv_lut_at,
+    replay_gemv_lut_restream, replay_gemv_traced, replay_gemv_traced_at, GemmTraffic,
+    GemvTraffic, OperandStats, ReplayStats,
 };
 
 /// Named hierarchy presets (CLI `--cache` flag and Fig. 7 sweep).

@@ -12,17 +12,37 @@ use std::fmt;
 /// reflexive `From<Error>`.
 pub struct Error {
     msg: String,
+    /// typed payload preserved by [`Error::new`] — the `anyhow`
+    /// downcast surface, so typed refusals (e.g. the coordinator's
+    /// `SubmitError`) survive the trip through the convenience wrappers
+    source: Option<Box<dyn std::any::Any + Send + Sync>>,
 }
 
 impl Error {
     /// Build from anything displayable (the `anyhow!` macro's backend).
     pub fn msg(m: impl fmt::Display) -> Error {
-        Error { msg: m.to_string() }
+        Error { msg: m.to_string(), source: None }
     }
 
-    /// Prepend a context layer: `outer: inner`.
+    /// Build from a typed error, keeping the value recoverable with
+    /// [`Error::downcast_ref`] (mirrors `anyhow::Error::new`).
+    pub fn new<E>(e: E) -> Error
+    where
+        E: fmt::Display + Send + Sync + 'static,
+    {
+        Error { msg: e.to_string(), source: Some(Box::new(e)) }
+    }
+
+    /// The typed payload, if this error was built with [`Error::new`]
+    /// from a `T` (mirrors `anyhow::Error::downcast_ref`).
+    pub fn downcast_ref<T: 'static>(&self) -> Option<&T> {
+        self.source.as_deref().and_then(|s| s.downcast_ref::<T>())
+    }
+
+    /// Prepend a context layer: `outer: inner`.  The typed payload, if
+    /// any, stays downcastable underneath the new message.
     pub fn context(self, c: impl fmt::Display) -> Error {
-        Error { msg: format!("{c}: {}", self.msg) }
+        Error { msg: format!("{c}: {}", self.msg), source: self.source }
     }
 }
 

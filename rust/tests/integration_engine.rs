@@ -3,7 +3,8 @@
 //! failure injection, and policy variations.
 
 use fullpack::coordinator::{
-    Engine, EngineConfig, FlushReason, RouterConfig, Scheduler, SchedulerConfig,
+    Engine, EngineConfig, FlushReason, RouterConfig, Scheduler, SchedulerConfig, ShedReason,
+    SubmitError,
 };
 use fullpack::models::{DeepSpeech, DeepSpeechConfig};
 use fullpack::pack::Variant;
@@ -38,7 +39,7 @@ fn sustained_concurrent_load_all_variants() {
     for variant in ["w4a8", "w8a4", "w4a4", "w2a8", "w8a2", "w2a2", "w1a8", "w8a1", "w1a1"] {
         let e = engine_with(variant, 3, 256);
         let f = frames(DeepSpeechConfig::TINY);
-        let rxs: Vec<_> = (0..24).map(|_| e.submit("ds", f.clone()).unwrap()).collect();
+        let rxs: Vec<_> = (0..24).map(|_| e.try_submit("ds", f.clone()).unwrap()).collect();
         for rx in rxs {
             let r = rx.recv().unwrap().unwrap();
             assert!(r.logits.iter().all(|x| x.is_finite()), "{variant}");
@@ -84,9 +85,19 @@ fn backpressure_rejects_cleanly_and_recovers() {
     let mut accepted = Vec::new();
     let mut rejected = 0;
     for _ in 0..64 {
-        match e.submit("ds", f.clone()) {
+        match e.try_submit("ds", f.clone()) {
             Ok(rx) => accepted.push(rx),
-            Err(_) => rejected += 1,
+            Err(SubmitError::Rejected(r)) => {
+                // refusals arrive typed, with the modeled retry hint
+                assert!(
+                    matches!(r.reason, ShedReason::QueueFull | ShedReason::OverBudget),
+                    "{r}"
+                );
+                assert!(r.retry_after_us >= 1, "retry hint present: {r}");
+                assert_eq!(r.model, "ds");
+                rejected += 1;
+            }
+            Err(e @ SubmitError::UnknownModel(_)) => panic!("ds is registered: {e}"),
         }
     }
     for rx in accepted {
@@ -159,7 +170,7 @@ fn producer_threads_every_reply_exactly_once_and_dispatch_counts_sum() {
         handles.push(std::thread::spawn(move || {
             let mut ids = Vec::new();
             let rxs: Vec<_> = (0..per_producer)
-                .map(|_| e.submit("ds", f.clone()).expect("queue sized for the load"))
+                .map(|_| e.try_submit("ds", f.clone()).expect("queue sized for the load"))
                 .collect();
             for rx in rxs {
                 let r = rx.recv().expect("engine never drops accepted work").expect("infer ok");
@@ -220,7 +231,7 @@ fn batched_dispatch_replies_match_singleton_results() {
     let inputs: Vec<Vec<f32>> = (0..4)
         .map(|r| f.iter().map(|&x| x + r as f32 * 0.25).collect())
         .collect();
-    let rxs: Vec<_> = inputs.iter().map(|f| e.submit("ds", f.clone()).unwrap()).collect();
+    let rxs: Vec<_> = inputs.iter().map(|f| e.try_submit("ds", f.clone()).unwrap()).collect();
     let replies: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
     // each reply equals a fresh singleton inference of ITS OWN input
     for (input, reply) in inputs.iter().zip(&replies) {

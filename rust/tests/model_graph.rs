@@ -190,7 +190,7 @@ fn engine_serves_mixed_zoo_models_exactly_once_with_per_model_metrics() {
     for name in zoo {
         let input_len = e.model(name).unwrap().input_len();
         for r in 0..per_model {
-            rxs.push((name, e.submit(name, frames_for(input_len, r)).unwrap()));
+            rxs.push((name, e.try_submit(name, frames_for(input_len, r)).unwrap()));
         }
     }
     // exactly once: every reply arrives, ids unique, logits shaped
@@ -250,7 +250,7 @@ fn mixed_flush_groups_by_model_and_stays_bit_identical() {
     for r in 0..4 {
         let (name, len) = if r % 2 == 0 { ("ds", ds_len) } else { ("kws", kws_len) };
         let f = frames_for(len, r);
-        subs.push((name, f.clone(), e.submit(name, f).unwrap()));
+        subs.push((name, f.clone(), e.try_submit(name, f).unwrap()));
     }
     for (name, f, rx) in subs {
         let got = rx.recv().unwrap().unwrap().logits;
