@@ -1,6 +1,6 @@
 //! Bench: the serve sweep — sample a set of workload mixes from the
 //! default mix space and replay each one, emitting the fig-serve
-//! tables and the `bench-serve/v2` document (`BENCH_serve.json`).
+//! tables and the `bench-serve/v3` document (`BENCH_serve.json`).
 //!
 //! Default mode is the deterministic virtual clock (cost-model service
 //! times — same seed ⇒ byte-identical document apart from host/wall

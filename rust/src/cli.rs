@@ -8,11 +8,14 @@
 //! fullpack serve [--model ZOO] [--model-manifest F.json] [--variant V] [--kernel NAME]
 //!                [--requests N] [--workers N] [--tiny]
 //!                [--slo-ms N] [--max-batch N] [--max-queue N] [--fixed-deadline]
+//!                [--resident-mb N] [--pin NAME] [--swap-manifest F.json]
 //! fullpack workload gen-mixes [--space F.json] [--seed N] [--count N] [--out DIR]
 //! fullpack workload run --mix F.json [--virtual] [--verify] [--out BENCH.json]
 //! fullpack workload sweep [--space F.json] [--seed N] [--count N] [--live] [--out F.json]
 //! fullpack models list
 //! fullpack models show <zoo-name> [--variant V] [--size full|tiny]
+//! fullpack models store <out-dir> [--variant V] [--size full|tiny]
+//! fullpack models store --inspect F.fpck
 //! fullpack kernels list
 //! fullpack artifact run <name> [--dir artifacts]
 //! fullpack artifact list [--dir artifacts]
@@ -104,12 +107,16 @@ USAGE:
   fullpack serve [--config F.json] [--model ZOO] [--model-manifest F.json]
                  [--variant V] [--kernel NAME] [--requests N] [--workers N] [--tiny]
                  [--slo-ms N] [--max-batch N] [--max-queue N] [--fixed-deadline]
+                 [--resident-mb N] [--pin NAME] [--swap-manifest F.json]
                                                serving-engine demo (latency/throughput;
                                                --model picks a zoo graph, --model-manifest
                                                a runtime JSON layer graph; --slo-ms /
                                                --max-batch / --max-queue tune admission,
                                                --fixed-deadline disables the cost-model
-                                               scheduler for the legacy batching policy)
+                                               scheduler for the legacy batching policy;
+                                               --resident-mb budgets the model store,
+                                               --pin exempts a model from eviction,
+                                               --swap-manifest hot-swaps mid-run)
   fullpack workload gen-mixes [--space F.json] [--seed N] [--count N] [--out DIR]
                                                sample N concrete workload mixes from
                                                a mix space (seeded: same seed ⇒
@@ -122,11 +129,15 @@ USAGE:
   fullpack workload sweep [--space F.json] [--seed N] [--count N] [--live]
                           [--out BENCH_serve.json]
                                                sample + run a mix sweep and emit the
-                                               bench-serve/v2 document + fig-serve
+                                               bench-serve/v3 document + fig-serve
                                                tables (default mode: virtual)
   fullpack models list                         print the model-zoo registry table
   fullpack models show <zoo-name> [--variant V] [--size full|tiny]
                                                print one graph's topology + plans
+  fullpack models store <out-dir> [--variant V] [--size full|tiny]
+                                               pack compiled zoo weights into FPCK
+                                               images (the store's zero-copy load path)
+  fullpack models store --inspect F.fpck       list one FPCK image's tensors
   fullpack kernels list                        print the kernel registry table
   fullpack artifact list [--dir D]             list AOT artifacts
   fullpack artifact run <name> [--dir D]       execute one artifact via PJRT

@@ -24,7 +24,7 @@
 //! `max_queue` only) is still read as a fallback so existing config
 //! and mix files keep loading.
 
-use super::{EngineConfig, RouterConfig, SchedulerConfig};
+use super::{EngineConfig, RouterConfig, SchedulerConfig, StoreConfig};
 use crate::models::ModelSize;
 use crate::pack::Variant;
 use crate::util::error::{anyhow, Result};
@@ -45,6 +45,9 @@ pub struct ModelSpec {
     pub size: ModelSize,
     /// deterministic weight-generation seed
     pub seed: u64,
+    /// pin this model resident in the store (loaded eagerly, never
+    /// evicted under the residency budget — DESIGN.md §14)
+    pub pin: bool,
 }
 
 /// Parsed config file: engine knobs + model roster.
@@ -99,6 +102,11 @@ pub fn engine_from_json(j: &Json) -> EngineConfig {
             prefer_gemm: matches!(r.get("prefer_gemm"), Some(Json::Bool(true))),
         };
     }
+    if let Some(s) = j.get("store") {
+        engine.store = StoreConfig {
+            budget_bytes: s.get("budget_bytes").and_then(Json::as_usize).map(|b| b as u64),
+        };
+    }
     engine
 }
 
@@ -106,10 +114,17 @@ pub fn engine_from_json(j: &Json) -> EngineConfig {
 /// [`engine_from_json`] reads (deterministic key order — byte-stable
 /// output for seeded mix files).
 pub fn engine_to_json(e: &EngineConfig) -> String {
+    // `store` serializes `{}` for the unbounded default so configs
+    // written before the model store parse back to the identical value
+    let store = match e.store.budget_bytes {
+        Some(b) => format!("{{\"budget_bytes\": {b}}}"),
+        None => "{}".to_string(),
+    };
     format!(
         "{{\"workers\": {}, \"scheduler\": {{\"max_batch\": {}, \"max_wait_ms\": {}, \"max_queue\": {}, \
          \"slo_ms\": {}, \"cost_flush\": {}, \"shed_over_budget\": {}}}, \
-         \"router\": {{\"gemv_max_batch\": {}, \"disable_fullpack\": {}, \"prefer_swar\": {}, \"prefer_gemm\": {}}}}}",
+         \"router\": {{\"gemv_max_batch\": {}, \"disable_fullpack\": {}, \"prefer_swar\": {}, \"prefer_gemm\": {}}}, \
+         \"store\": {store}}}",
         e.workers,
         e.sched.max_batch,
         e.sched.max_wait.as_millis(),
@@ -140,14 +155,18 @@ pub fn model_spec_from_json(m: &Json, i: usize) -> Result<ModelSpec> {
     let size = ModelSize::parse(size_str)
         .ok_or_else(|| anyhow!("models[{i}] size {size_str:?} (expected full|tiny)"))?;
     let seed = m.get("seed").and_then(Json::as_usize).unwrap_or(7) as u64;
-    Ok(ModelSpec { name, model, variant, size, seed })
+    let pin = matches!(m.get("pin"), Some(Json::Bool(true)));
+    Ok(ModelSpec { name, model, variant, size, seed, pin })
 }
 
 /// Serialize one roster entry back to the schema
 /// [`model_spec_from_json`] reads (deterministic key order).
 pub fn model_spec_to_json(s: &ModelSpec) -> String {
+    // `pin` is emitted only when set, keeping pre-store mix files
+    // byte-stable through a write/parse/write cycle
+    let pin = if s.pin { ", \"pin\": true" } else { "" };
     format!(
-        "{{\"name\": \"{}\", \"model\": \"{}\", \"variant\": \"{}\", \"size\": \"{}\", \"seed\": {}}}",
+        "{{\"name\": \"{}\", \"model\": \"{}\", \"variant\": \"{}\", \"size\": \"{}\", \"seed\": {}{pin}}}",
         s.name,
         s.model,
         s.variant.name(),
@@ -191,8 +210,9 @@ mod tests {
                             "slo_ms": 20, "cost_flush": false, "shed_over_budget": false},
               "router": {"gemv_max_batch": 2, "disable_fullpack": true, "prefer_swar": true,
                          "prefer_gemm": true},
+              "store": {"budget_bytes": 8388608},
               "models": [
-                {"name": "ds", "model": "deepspeech", "variant": "w2a2", "size": "tiny", "seed": 3},
+                {"name": "ds", "model": "deepspeech", "variant": "w2a2", "size": "tiny", "seed": 3, "pin": true},
                 {"name": "ds-full", "variant": "w4a8"},
                 {"name": "kws", "model": "keyword-spotter", "size": "tiny"}
               ]
@@ -209,7 +229,10 @@ mod tests {
         assert!(cfg.engine.router.disable_fullpack);
         assert!(cfg.engine.router.prefer_swar);
         assert!(cfg.engine.router.prefer_gemm);
+        assert_eq!(cfg.engine.store.budget_bytes, Some(8 << 20));
         assert_eq!(cfg.models.len(), 3);
+        assert!(cfg.models[0].pin);
+        assert!(!cfg.models[1].pin, "pin defaults to false");
         assert_eq!(cfg.models[0].variant, Variant::parse("w2a2").unwrap());
         assert_eq!(cfg.models[0].size, ModelSize::Tiny);
         assert_eq!(cfg.models[0].model, "deepspeech");
@@ -255,6 +278,25 @@ mod tests {
         let text = engine_to_json(&e);
         let back = engine_from_json(&Json::parse(&text).unwrap());
         assert_eq!(back, e, "engine_to_json -> engine_from_json is the identity");
+        // identity holds with a residency budget set, too
+        e.store.budget_bytes = Some(16 << 20);
+        let text = engine_to_json(&e);
+        let back = engine_from_json(&Json::parse(&text).unwrap());
+        assert_eq!(back, e, "store budget survives the round trip");
+        // pinned model specs round-trip; unpinned stay byte-stable
+        let spec = ModelSpec {
+            name: "ds".into(),
+            model: "deepspeech".into(),
+            variant: Variant::parse("w2a2").unwrap(),
+            size: ModelSize::Tiny,
+            seed: 3,
+            pin: true,
+        };
+        let back = model_spec_from_json(&Json::parse(&model_spec_to_json(&spec)).unwrap(), 0)
+            .unwrap();
+        assert_eq!(back, spec);
+        let unpinned = ModelSpec { pin: false, ..spec };
+        assert!(!model_spec_to_json(&unpinned).contains("pin"));
     }
 
     #[test]

@@ -135,6 +135,15 @@ pub struct Metrics {
     pub sheds_queue_full: AtomicU64,
     /// requests shed because the modeled backlog exceeded the SLO
     pub sheds_over_budget: AtomicU64,
+    /// requests shed because the model was registered but not resident
+    /// (the store started the load; retry priced at modeled load time)
+    pub sheds_cold_model: AtomicU64,
+    /// model-store weight loads (cold admissions + pins + swaps)
+    pub model_loads: AtomicU64,
+    /// model-store LRU evictions under the residency budget
+    pub model_evictions: AtomicU64,
+    /// model-store atomic hot-swaps (version flips)
+    pub model_swaps: AtomicU64,
     /// shard-affinity dispatches that overtook a strictly
     /// earlier-deadline sealed batch waiting on another queue
     pub edf_inversions: AtomicU64,
@@ -172,8 +181,17 @@ pub struct ModelCounters {
     pub sheds_queue_full: u64,
     /// requests shed because this model's modeled backlog broke SLO
     pub sheds_over_budget: u64,
+    /// requests shed because this model was cold (not resident)
+    pub sheds_cold_model: u64,
     /// high-water queue depth observed at admission
     pub max_queue_depth: u64,
+    /// times the store loaded this model's weights into residency
+    pub loads: u64,
+    /// times the store evicted this model under the byte budget
+    pub evictions: u64,
+    /// store version of this model's weights (0 = never swapped or
+    /// not store-managed; starts at 1 on registration, +1 per swap)
+    pub version: u64,
 }
 
 impl ModelCounters {
@@ -209,6 +227,10 @@ impl Default for Metrics {
             flushes_drained: AtomicU64::new(0),
             sheds_queue_full: AtomicU64::new(0),
             sheds_over_budget: AtomicU64::new(0),
+            sheds_cold_model: AtomicU64::new(0),
+            model_loads: AtomicU64::new(0),
+            model_evictions: AtomicU64::new(0),
+            model_swaps: AtomicU64::new(0),
             edf_inversions: AtomicU64::new(0),
             stolen_dispatches: AtomicU64::new(0),
             max_queue_depth: AtomicU64::new(0),
@@ -290,17 +312,58 @@ impl Metrics {
         match reason {
             ShedReason::QueueFull => &self.sheds_queue_full,
             ShedReason::OverBudget => &self.sheds_over_budget,
+            ShedReason::ColdModel => &self.sheds_cold_model,
         }
         .fetch_add(1, Relaxed);
         self.with_model(model, |m| match reason {
             ShedReason::QueueFull => m.sheds_queue_full += 1,
             ShedReason::OverBudget => m.sheds_over_budget += 1,
+            ShedReason::ColdModel => m.sheds_cold_model += 1,
         });
     }
 
-    /// `(queue_full, over_budget)` shed counts.
-    pub fn shed_counts(&self) -> (u64, u64) {
-        (self.sheds_queue_full.load(Relaxed), self.sheds_over_budget.load(Relaxed))
+    /// `(queue_full, over_budget, cold_model)` shed counts.
+    pub fn shed_counts(&self) -> (u64, u64, u64) {
+        (
+            self.sheds_queue_full.load(Relaxed),
+            self.sheds_over_budget.load(Relaxed),
+            self.sheds_cold_model.load(Relaxed),
+        )
+    }
+
+    /// Count one model-store weight load of `model` (cold admission,
+    /// pin, or swap bringing bytes into residency).
+    pub fn record_model_load(&self, model: &str) {
+        self.model_loads.fetch_add(1, Relaxed);
+        self.with_model(model, |m| m.loads += 1);
+    }
+
+    /// Count one LRU eviction of `model` under the residency budget.
+    pub fn record_model_eviction(&self, model: &str) {
+        self.model_evictions.fetch_add(1, Relaxed);
+        self.with_model(model, |m| m.evictions += 1);
+    }
+
+    /// Record an atomic hot-swap of `model` to store `version`.
+    pub fn record_model_swap(&self, model: &str, version: u64) {
+        self.model_swaps.fetch_add(1, Relaxed);
+        self.with_model(model, |m| m.version = version);
+    }
+
+    /// Surface a model's current store version without counting a swap
+    /// (set at registration so reports can reconcile versions even for
+    /// never-swapped models).
+    pub fn set_model_version(&self, model: &str, version: u64) {
+        self.with_model(model, |m| m.version = version);
+    }
+
+    /// `(loads, evictions, swaps)` model-store counts.
+    pub fn model_store_counts(&self) -> (u64, u64, u64) {
+        (
+            self.model_loads.load(Relaxed),
+            self.model_evictions.load(Relaxed),
+            self.model_swaps.load(Relaxed),
+        )
     }
 
     /// Record the queue depth observed when a request of `model` was
@@ -415,11 +478,13 @@ impl Metrics {
             }
         };
         let (ff, fb, fd, fs) = self.flush_counts();
-        let (sq, sb) = self.shed_counts();
+        let (sq, sb, sc) = self.shed_counts();
+        let (ml, me, ms) = self.model_store_counts();
         let mut s = format!(
             "requests={} completed={} errors={} batched={}/{} singleton={} \
              flushes=full:{ff}/budget:{fb}/deadline:{fd}/drained:{fs} \
-             shed=queue-full:{sq}/over-budget:{sb} \
+             shed=queue-full:{sq}/over-budget:{sb}/cold-model:{sc} \
+             store=loads:{ml}/evictions:{me}/swaps:{ms} \
              qdepth-max={} edf-inv={} stolen={} \
              mean={:.0}us p50<={} p95<={} p99<={} rps={:.1}",
             self.requests.load(Relaxed),
@@ -605,11 +670,15 @@ mod tests {
         m.record_shed("ds", ShedReason::QueueFull);
         m.record_shed("ds", ShedReason::QueueFull);
         m.record_shed("mlp", ShedReason::OverBudget);
-        assert_eq!(m.shed_counts(), (2, 1));
+        m.record_shed("kws", ShedReason::ColdModel);
+        m.record_shed("kws", ShedReason::ColdModel);
+        m.record_shed("kws", ShedReason::ColdModel);
+        assert_eq!(m.shed_counts(), (2, 1, 3));
         let ds = m.model_counters("ds").unwrap();
         assert_eq!((ds.sheds_queue_full, ds.sheds_over_budget), (2, 0));
         let mlp = m.model_counters("mlp").unwrap();
         assert_eq!((mlp.sheds_queue_full, mlp.sheds_over_budget), (0, 1));
+        assert_eq!(m.model_counters("kws").unwrap().sheds_cold_model, 3);
         // occupancy keeps the high-water mark, globally and per model
         m.observe_queue_depth("ds", 3);
         m.observe_queue_depth("ds", 7);
@@ -619,8 +688,26 @@ mod tests {
         assert_eq!(m.model_counters("ds").unwrap().max_queue_depth, 7);
         assert_eq!(m.model_counters("mlp").unwrap().max_queue_depth, 2);
         let s = m.summary();
-        assert!(s.contains("shed=queue-full:2/over-budget:1"), "{s}");
+        assert!(s.contains("shed=queue-full:2/over-budget:1/cold-model:3"), "{s}");
         assert!(s.contains("qdepth-max=7"), "{s}");
+    }
+
+    #[test]
+    fn model_store_counters_and_versions() {
+        let m = Metrics::default();
+        m.set_model_version("ds", 1);
+        m.record_model_load("ds");
+        m.record_model_load("ds");
+        m.record_model_eviction("ds");
+        m.record_model_swap("ds", 2);
+        m.record_model_load("mlp");
+        assert_eq!(m.model_store_counts(), (3, 1, 1));
+        let ds = m.model_counters("ds").unwrap();
+        assert_eq!((ds.loads, ds.evictions, ds.version), (2, 1, 2));
+        let mlp = m.model_counters("mlp").unwrap();
+        assert_eq!((mlp.loads, mlp.evictions, mlp.version), (1, 0, 0));
+        let s = m.summary();
+        assert!(s.contains("store=loads:3/evictions:1/swaps:1"), "{s}");
     }
 
     #[test]

@@ -50,12 +50,19 @@ pub use scheduler::{
     Admitted, CostFn, Dispatch, FaultPlan, FlushReason, Scheduler, SchedulerConfig,
 };
 
-use crate::models::Model;
+use crate::models::{Model, ModelBuilder, ModelStore, StoreError};
 use crate::util::error::{anyhow, Result};
-use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed};
-use std::sync::{mpsc, Arc, Condvar, Mutex, RwLock};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+/// Model-store residency policy (DESIGN.md §14).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct StoreConfig {
+    /// modeled resident-weights byte budget; `None` = unbounded
+    /// (nothing is ever evicted)
+    pub budget_bytes: Option<u64>,
+}
 
 /// Engine configuration.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -67,6 +74,8 @@ pub struct EngineConfig {
     pub sched: SchedulerConfig,
     /// per-layer kernel routing policy
     pub router: RouterConfig,
+    /// model residency / eviction policy
+    pub store: StoreConfig,
 }
 
 impl Default for EngineConfig {
@@ -75,19 +84,19 @@ impl Default for EngineConfig {
             workers: 2,
             sched: SchedulerConfig::default(),
             router: RouterConfig::default(),
+            store: StoreConfig::default(),
         }
     }
 }
 
 type Reply = mpsc::Sender<Result<Response>>;
-type ModelMap = Arc<RwLock<HashMap<String, Arc<dyn Model>>>>;
 
 struct Shared {
     sched: Mutex<Scheduler<(Request, Reply)>>,
     cv: Condvar,
     shutdown: AtomicBool,
-    models: ModelMap,
-    metrics: Metrics,
+    store: Arc<ModelStore>,
+    metrics: Arc<Metrics>,
     router: Router,
     epoch: Instant,
     faults: FaultPlan,
@@ -140,16 +149,19 @@ impl Engine {
     /// slow models are honored here; poisoned reply channels are a
     /// client-side fault the reply path already tolerates).
     pub fn new_with_faults(config: EngineConfig, faults: FaultPlan) -> Engine {
-        let models: ModelMap = Arc::new(RwLock::new(HashMap::new()));
-        let cost_models = models.clone();
+        let metrics = Arc::new(Metrics::default());
+        let store = Arc::new(ModelStore::new(config.store.budget_bytes.map(|b| b as usize)));
+        store.attach_metrics(metrics.clone());
+        let cost_store = store.clone();
         let cost: CostFn = Box::new(move |name, n| {
-            let m = cost_models.read().unwrap().get(name).cloned();
-            match m {
+            // pure peek: probing a cost must never touch LRU order or
+            // trigger a load, or live and virtual admission would skew
+            match cost_store.peek(name) {
                 Some(m) => m
                     .dispatch_cost_ns(n)
                     .unwrap_or_else(|| fallback_dispatch_ns(m.as_ref(), n)),
-                // unreachable via submit (unknown models are refused at
-                // the front door) — a safe floor, not a policy
+                // cold or unknown (unknown models are refused at the
+                // front door) — a safe floor, not a policy
                 None => 1_000,
             }
         });
@@ -158,8 +170,8 @@ impl Engine {
             sched: Mutex::new(Scheduler::new(config.sched, cost)),
             cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
-            models,
-            metrics: Metrics::default(),
+            store,
+            metrics,
             router: Router::new(config.router),
             epoch: Instant::now(),
             faults,
@@ -176,31 +188,75 @@ impl Engine {
         Engine { shared, workers, next_id: AtomicU64::new(1) }
     }
 
-    /// Register (or replace) a model under a name — anything
-    /// implementing [`Model`] (a `CompiledModel` over a zoo graph, the
-    /// legacy `DeepSpeech`, ...).  Registration creates the model's
-    /// admission queue; replacement invalidates its cost memo.
-    pub fn register_model(&self, name: &str, model: impl Model + 'static) {
-        self.shared
-            .models
-            .write()
-            .unwrap()
-            .insert(name.to_string(), Arc::new(model));
+    /// Register a model under a name — anything implementing [`Model`]
+    /// (a `CompiledModel` over a zoo graph, the legacy `DeepSpeech`,
+    /// ...).  Registration creates the model's admission queue.
+    /// Re-registering an existing name is refused with a typed
+    /// [`StoreError::AlreadyRegistered`]: replacing a live model must
+    /// go through the explicit versioned [`Engine::swap_model`], so a
+    /// config typo can never silently clobber a serving model.
+    pub fn register_model(
+        &self,
+        name: &str,
+        model: impl Model + 'static,
+    ) -> std::result::Result<(), StoreError> {
+        self.shared.store.register(name, Arc::new(model))?;
         self.shared.sched.lock().unwrap().register(name);
         self.shared.cv.notify_all();
+        Ok(())
     }
 
-    /// Look up a registered model by name.
+    /// Register a lazily-built model: cold (non-resident) until first
+    /// admission, evictable back to `builder` under the store budget.
+    pub fn register_model_lazy(
+        &self,
+        name: &str,
+        bytes_hint: usize,
+        builder: ModelBuilder,
+    ) -> std::result::Result<(), StoreError> {
+        self.shared.store.register_lazy(name, bytes_hint, builder)?;
+        self.shared.sched.lock().unwrap().register(name);
+        self.shared.cv.notify_all();
+        Ok(())
+    }
+
+    /// Pin a registered model: loaded eagerly, never evicted.
+    pub fn pin_model(&self, name: &str) -> std::result::Result<(), StoreError> {
+        self.shared.store.pin(name)
+    }
+
+    /// Atomically hot-swap a registered model to new weights: the
+    /// store's per-model version counter bumps, new admissions see the
+    /// new model, and in-flight sealed batches finish on the old
+    /// weights their dispatch guards hold.  Replacement invalidates
+    /// the model's cost memo.  Returns the new version.
+    pub fn swap_model(
+        &self,
+        name: &str,
+        model: impl Model + 'static,
+        builder: Option<ModelBuilder>,
+    ) -> std::result::Result<u64, StoreError> {
+        let version = self.shared.store.swap(name, Arc::new(model), builder)?;
+        // scheduler re-registration of an existing name keeps its
+        // queue and id but drops the memoized cost curve
+        self.shared.sched.lock().unwrap().register(name);
+        self.shared.cv.notify_all();
+        Ok(version)
+    }
+
+    /// The engine's model store (residency stats, versions, pins).
+    pub fn store(&self) -> &Arc<ModelStore> {
+        &self.shared.store
+    }
+
+    /// Look up a registered model by name, loading it if cold.
     pub fn model(&self, name: &str) -> Option<Arc<dyn Model>> {
-        self.shared.models.read().unwrap().get(name).cloned()
+        self.shared.store.fetch(name).ok()
     }
 
     /// Names of every registered model, sorted.
     pub fn model_names(&self) -> Vec<String> {
-        let mut names: Vec<String> =
-            self.shared.models.read().unwrap().keys().cloned().collect();
-        names.sort();
-        names
+        self.shared.store.per_entry().into_iter().map(|e| e.name).collect()
     }
 
     /// Submit asynchronously with typed refusals: an unknown model or
@@ -214,6 +270,35 @@ impl Engine {
     ) -> std::result::Result<mpsc::Receiver<Result<Response>>, SubmitError> {
         self.shared.metrics.mark_started();
         self.shared.metrics.requests.fetch_add(1, Relaxed);
+        // residency gate (DESIGN.md §14): a cold model starts loading
+        // *now* (synchronously, so the retry hits a warm entry) but
+        // the triggering request is shed with the modeled load time as
+        // its retry hint.  The virtual DES mirrors this exact order:
+        // count the request, then the cold check, then admission.
+        match self.shared.store.admit(model) {
+            Ok(_) => {}
+            Err(StoreError::Cold(cold)) => {
+                self.shared.metrics.record_shed(model, ShedReason::ColdModel);
+                return Err(SubmitError::Rejected(Rejected {
+                    model: model.to_string(),
+                    reason: ShedReason::ColdModel,
+                    depth: 0,
+                    retry_after_us: cold.retry_after_us,
+                }));
+            }
+            Err(e) => {
+                // unknown name, or a builder failure (the model is
+                // unservable either way).  Global counter only:
+                // per-model entries are keyed by *registered* names,
+                // so bogus client-supplied names cannot grow the map.
+                self.shared.metrics.errors.fetch_add(1, Relaxed);
+                let name = match e {
+                    StoreError::Unknown(n) => n,
+                    _ => model.to_string(),
+                };
+                return Err(SubmitError::UnknownModel(name));
+            }
+        }
         let (tx, rx) = mpsc::channel();
         let req = Request {
             id: self.next_id.fetch_add(1, Relaxed),
@@ -355,17 +440,27 @@ fn dispatch_batch(s: &Arc<Shared>, d: Dispatch<(Request, Reply)>) {
     if let Some(extra) = s.faults.slow_for(&name) {
         std::thread::sleep(extra);
     }
-    let model = s.models.read().unwrap().get(&name).cloned();
-    let Some(model) = model else {
-        // defensive: queues exist only for registered models, and
-        // models are never removed — but a reply beats a panic
-        s.metrics.record_singleton(&name, items.len() as u64);
-        s.metrics.record_errors(&name, items.len() as u64);
-        for (req, reply) in items {
-            let _ = reply.send(Err(anyhow!("unknown model {:?}", req.model)));
+    // the dispatch guard pins this batch's model version for the whole
+    // forward: a concurrent hot-swap flips the registry entry but this
+    // batch finishes on the weights it captured, and the LRU can never
+    // evict an entry with a live guard.  A model evicted between
+    // admission and dispatch is transparently reloaded (no shed — the
+    // request was already admitted).
+    let guard = match s.store.begin_dispatch(&name) {
+        Ok(g) => g,
+        Err(e) => {
+            // defensive: queues exist only for registered models, and
+            // entries are never removed — but a reply beats a panic
+            s.metrics.record_singleton(&name, items.len() as u64);
+            s.metrics.record_errors(&name, items.len() as u64);
+            let msg = e.to_string();
+            for (_, reply) in items {
+                let _ = reply.send(Err(anyhow!("{msg}")));
+            }
+            return;
         }
-        return;
     };
+    let model = guard.model().clone();
     // shape-validate up front; invalid requests error individually
     // and never poison the group's GEMM
     let expected = model.input_len();
@@ -470,9 +565,10 @@ mod tests {
                 ..SchedulerConfig::default()
             },
             router: RouterConfig::default(),
+            store: StoreConfig::default(),
         });
         let m = DeepSpeech::new(DeepSpeechConfig::TINY, Variant::parse(variant).unwrap(), 5);
-        e.register_model("deepspeech", m);
+        e.register_model("deepspeech", m).unwrap();
         e
     }
 
@@ -512,6 +608,67 @@ mod tests {
             Some(SubmitError::UnknownModel(n)) if n == "nope"
         ));
         assert_eq!(e.metrics().errors.load(Relaxed), 2);
+    }
+
+    #[test]
+    fn re_registration_is_refused_until_explicitly_swapped() {
+        // the silent-replacement bug: register_model used to blindly
+        // insert, so a duplicate name clobbered a live model with no
+        // trace.  Now the duplicate is a typed refusal and replacement
+        // is an explicit versioned swap.
+        let e = tiny_engine("w4a8");
+        let dup = DeepSpeech::new(DeepSpeechConfig::TINY, Variant::parse("w4a8").unwrap(), 6);
+        let err = e.register_model("deepspeech", dup).unwrap_err();
+        assert!(matches!(err, StoreError::AlreadyRegistered(ref n) if n == "deepspeech"));
+        // the original model (seed 5) is still the one serving
+        let before = e.infer("deepspeech", frames()).unwrap().logits;
+        assert_eq!(e.store().version("deepspeech"), Some(1));
+        // the explicit path: swap bumps the version and changes weights
+        let next = DeepSpeech::new(DeepSpeechConfig::TINY, Variant::parse("w4a8").unwrap(), 6);
+        let v = e.swap_model("deepspeech", next, None).unwrap();
+        assert_eq!(v, 2);
+        assert_eq!(e.store().version("deepspeech"), Some(2));
+        let after = e.infer("deepspeech", frames()).unwrap().logits;
+        assert_ne!(before, after, "swap must actually change the serving weights");
+        assert_eq!(e.metrics().model_store_counts().2, 1);
+        // swapping a never-registered name is a typed error too
+        assert!(matches!(
+            e.swap_model("ghost", DeepSpeech::new(DeepSpeechConfig::TINY, Variant::parse("w4a8").unwrap(), 5), None),
+            Err(StoreError::Unknown(_))
+        ));
+    }
+
+    #[test]
+    fn cold_model_is_shed_with_modeled_retry_then_served() {
+        let e = tiny_engine("w4a8");
+        e.register_model_lazy(
+            "lazy-ds",
+            1 << 20,
+            Box::new(|| {
+                Ok(Arc::new(DeepSpeech::new(
+                    DeepSpeechConfig::TINY,
+                    Variant::parse("w4a8").unwrap(),
+                    9,
+                )))
+            }),
+        )
+        .unwrap();
+        assert!(!e.store().resident("lazy-ds"));
+        let err = e.try_submit("lazy-ds", frames()).unwrap_err();
+        match err {
+            SubmitError::Rejected(r) => {
+                assert_eq!(r.reason, ShedReason::ColdModel);
+                assert_eq!(r.model, "lazy-ds");
+                assert!(r.retry_after_us >= 1);
+            }
+            other => panic!("expected a cold-model shed, got {other:?}"),
+        }
+        assert_eq!(e.metrics().shed_counts().2, 1);
+        // the shed performed the load: the retry is admitted and served
+        assert!(e.store().resident("lazy-ds"));
+        let r = e.infer("lazy-ds", frames()).unwrap();
+        assert!(r.logits.iter().all(|x| x.is_finite()));
+        assert_eq!(e.metrics().shed_counts().2, 1, "warm retry must not shed");
     }
 
     #[test]
@@ -572,6 +729,7 @@ mod tests {
                     ..SchedulerConfig::default()
                 },
                 router: RouterConfig::default(),
+                store: StoreConfig::default(),
             },
             FaultPlan {
                 worker_stall: std::time::Duration::from_millis(300),
@@ -579,7 +737,7 @@ mod tests {
             },
         );
         let m = DeepSpeech::new(DeepSpeechConfig::TINY, Variant::parse("w4a8").unwrap(), 5);
-        e.register_model("deepspeech", m);
+        e.register_model("deepspeech", m).unwrap();
         let _rx1 = e.try_submit("deepspeech", frames()).unwrap();
         let _rx2 = e.try_submit("deepspeech", frames()).unwrap();
         let err = e.try_submit("deepspeech", frames()).unwrap_err();

@@ -40,7 +40,7 @@ pub struct Response {
     pub total_ns: u128,
 }
 
-/// Why the admission scheduler shed a request (DESIGN.md §12).
+/// Why the admission scheduler shed a request (DESIGN.md §12, §14).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ShedReason {
     /// the model's queue (forming + sealed) is at `max_queue`
@@ -48,6 +48,10 @@ pub enum ShedReason {
     /// the modeled backlog already exceeds the request's SLO budget —
     /// admitting it could only produce a deadline miss
     OverBudget,
+    /// the model is registered but not resident — the store started
+    /// bringing it in and priced the retry at the modeled load time
+    /// (`costmodel::cold_retry_us`, DESIGN.md §14)
+    ColdModel,
 }
 
 impl ShedReason {
@@ -56,6 +60,7 @@ impl ShedReason {
         match self {
             ShedReason::QueueFull => "queue-full",
             ShedReason::OverBudget => "over-budget",
+            ShedReason::ColdModel => "cold-model",
         }
     }
 }

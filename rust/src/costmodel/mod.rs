@@ -429,6 +429,30 @@ pub fn serving_dispatch_ns(graph: &crate::models::ModelGraph, group: usize) -> u
     (cycles / core.freq_ghz) as u64
 }
 
+/// Modeled wall-clock nanoseconds to bring `bytes` of packed weights
+/// resident — the model store's cold-load price (DESIGN.md §14) and the
+/// source of `ColdModel` retry-after hints.
+///
+/// Streaming a cold image is DRAM-bound: one 16-byte vector load per
+/// cycle (`load_tp`), discounted by the OoO window's miss-hiding
+/// fraction (`mem_overlap`).  At the ex5_big core that is ≈ 15.7 GB/s —
+/// and the cost scales with the *packed* byte count, so a w4 model
+/// loads in half the time a w8 twin would: FullPack's footprint
+/// advantage priced directly into residency churn.  Pure and
+/// deterministic, so the virtual DES mirrors live cold-load pricing
+/// bit-exactly.
+pub fn weight_load_ns(bytes: usize) -> u64 {
+    let core = CoreModel::ex5_big();
+    let cycles = (bytes as f64 / 16.0) / core.load_tp / core.mem_overlap;
+    (cycles / core.freq_ghz).ceil() as u64
+}
+
+/// [`weight_load_ns`] as the microsecond retry-after hint carried by a
+/// `ColdModel` shed (floored at 1µs so a hint is never "retry now").
+pub fn cold_retry_us(bytes: usize) -> u64 {
+    (weight_load_ns(bytes) / 1_000).max(1)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -820,6 +844,25 @@ mod tests {
             g8 <= g1 + g1 / 4,
             "one weight pass: misses must not grow with batch ({g1} -> {g8})"
         );
+    }
+
+    #[test]
+    fn weight_load_cost_scales_with_packed_bytes() {
+        // the residency price is linear in *packed* bytes: a w4 model
+        // costs exactly half its w8 twin's load time (FullPack's
+        // capacity claim priced into churn), and the retry hint is the
+        // same number in µs, floored at 1
+        let mb = 1 << 20;
+        let w8 = weight_load_ns(2 * mb);
+        let w4 = weight_load_ns(mb);
+        assert!(w8 > 0 && w4 > 0);
+        assert!((w8 as i64 - 2 * w4 as i64).abs() <= 2, "w8 {w8} vs 2x w4 {w4}");
+        // ≈ 15.7 GB/s modeled bandwidth: 1 MiB in the 50–100 µs decade
+        assert!((10_000..1_000_000).contains(&w4), "1 MiB load {w4} ns");
+        assert_eq!(cold_retry_us(mb), weight_load_ns(mb) / 1_000);
+        assert_eq!(cold_retry_us(0), 1);
+        // deterministic (the DES mirrors this bit-exactly)
+        assert_eq!(weight_load_ns(12345), weight_load_ns(12345));
     }
 
     #[test]

@@ -18,7 +18,7 @@ pub fn fig_serve_latency(reports: &[MixReport]) -> Table {
         "arrival".to_string(),
         "clients".to_string(),
         "issued".to_string(),
-        "shed full/budget".to_string(),
+        "shed full/budget/cold".to_string(),
         "p50 us".to_string(),
         "p95 us".to_string(),
         "p99 us".to_string(),
@@ -33,7 +33,7 @@ pub fn fig_serve_latency(reports: &[MixReport]) -> Table {
             r.arrival.clone(),
             r.clients.to_string(),
             r.issued.to_string(),
-            format!("{}/{}", r.shed_queue_full, r.shed_over_budget),
+            format!("{}/{}/{}", r.shed_queue_full, r.shed_over_budget, r.shed_cold_model),
             r.p50_us.to_string(),
             r.p95_us.to_string(),
             r.p99_us.to_string(),
@@ -65,6 +65,7 @@ pub fn fig_serve_dispatch(reports: &[MixReport]) -> Table {
         "qdepth max".to_string(),
         "edf inv".to_string(),
         "stolen".to_string(),
+        "store l/e/s".to_string(),
         "models".to_string(),
     ]);
     for r in reports {
@@ -87,6 +88,7 @@ pub fn fig_serve_dispatch(reports: &[MixReport]) -> Table {
             r.max_queue_depth.to_string(),
             r.edf_inversions.to_string(),
             r.stolen_dispatches.to_string(),
+            format!("{}/{}/{}", r.store_loads, r.store_evictions, r.store_swaps),
             models.join(" "),
         ]);
     }
@@ -117,9 +119,10 @@ mod tests {
             assert!(disp.contains(name), "{disp}");
         }
         assert!(lat.contains("p99 us"));
-        assert!(lat.contains("shed full/budget"));
+        assert!(lat.contains("shed full/budget/cold"));
         assert!(disp.contains("flush deadline"));
         assert!(disp.contains("flush budget"));
         assert!(disp.contains("edf inv"));
+        assert!(disp.contains("store l/e/s"));
     }
 }

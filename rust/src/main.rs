@@ -2,7 +2,9 @@
 //! benches, the serving-engine demo, and PJRT artifact execution.
 
 use fullpack::cli::{Args, USAGE};
-use fullpack::coordinator::{Engine, EngineConfig, RouterConfig, SchedulerConfig, SubmitError};
+use fullpack::coordinator::{
+    Engine, EngineConfig, RouterConfig, SchedulerConfig, StoreConfig, SubmitError,
+};
 use fullpack::costmodel::Method;
 use fullpack::figures::{e2e, ondevice, sweeps, SIZES, SIZES_QUICK};
 use fullpack::kernels::{GemvKernel, KernelRegistry};
@@ -269,6 +271,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 workers,
                 sched: SchedulerConfig::default(),
                 router: RouterConfig::default(),
+                store: StoreConfig::default(),
             },
             vec![fullpack::coordinator::ModelSpec {
                 name: zoo_name.clone(),
@@ -276,6 +279,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 variant,
                 size,
                 seed: 7,
+                pin: false,
             }],
         )
     };
@@ -290,6 +294,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         args.opt_usize("slo-ms", engine_cfg.sched.slo.as_millis() as usize)
             .map_err(|e| anyhow!(e))? as u64,
     );
+    // residency knobs (DESIGN.md §14): --resident-mb puts the model
+    // store under a modeled byte budget, --pin exempts one model
+    if let Some(mb) = args.opt("resident-mb") {
+        let mb: u64 = mb.parse().map_err(|_| anyhow!("--resident-mb: bad number {mb:?}"))?;
+        engine_cfg.store.budget_bytes = Some(mb << 20);
+    }
     if args.flag("fixed-deadline") {
         // the pre-scheduler policy: no cost-model seals, no admission
         // control — the before-side of the EXPERIMENTS.md comparison
@@ -320,7 +330,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
             model.cell_kernel_name().unwrap_or("-")
         );
         let input_len = model.input_len();
-        engine.register_model(name, model);
+        engine
+            .register_model(name, model)
+            .map_err(|e| anyhow!("register {name:?}: {e}"))?;
         first.get_or_insert((name.to_string(), input_len));
         Ok(())
     };
@@ -329,6 +341,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .build(&spec.model, spec.size, spec.variant, spec.seed)
             .map_err(|e| anyhow!("model {:?}: {e}", spec.name))?;
         register(&spec.name, graph, &mut first)?;
+        if spec.pin {
+            engine.pin_model(&spec.name).map_err(|e| anyhow!("pin {:?}: {e}", spec.name))?;
+        }
     }
     // a runtime-assembled layer graph joins the same roster
     if let Some(path) = args.opt("model-manifest") {
@@ -340,6 +355,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         if !kernel_applied.get() {
             bail!("--kernel {kernel:?}: no registered model has scan cells to re-bind");
         }
+    }
+    if let Some(name) = args.opt("pin") {
+        engine.pin_model(name).map_err(|e| anyhow!("--pin {name:?}: {e}"))?;
     }
     let (target, input_len) = first.ok_or_else(|| anyhow!("config has no models"))?;
     println!(
@@ -363,6 +381,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
             Err(e) => bail!("{e}"),
         }
     }
+    // manifest-driven hot-swap while v1 batches may still be in flight:
+    // the swap is atomic (new admissions see v2), the pending receivers
+    // below drain on whichever version their batch was dispatched with
+    if let Some(path) = args.opt("swap-manifest") {
+        let v = fullpack::runtime::manifest::swap_model_from_manifest(&engine, path)?;
+        println!("hot-swapped from {path}: now serving v{v}");
+    }
     for rx in rxs {
         rx.recv().map_err(|_| anyhow!("engine dropped request"))??;
     }
@@ -372,6 +397,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("metrics: {}", engine.metrics().summary());
     let (gemv, gemm) = engine.router().counts();
     println!("router:  gemv(FullPack)={gemv} gemm(Ruy)={gemm}");
+    let st = engine.store().stats();
+    println!(
+        "store:   {}/{} models resident, {:.1} MB modeled{}",
+        st.resident_models,
+        st.models,
+        st.resident_bytes as f64 / 1e6,
+        match st.budget_bytes {
+            Some(b) => format!(" (budget {:.1} MB)", b as f64 / 1e6),
+            None => " (unbudgeted)".to_string(),
+        },
+    );
     engine.shutdown();
     Ok(())
 }
@@ -379,7 +415,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// `workload gen-mixes|run|sweep`: the scenario-mix harness
 /// (DESIGN.md §11).  `gen-mixes` samples concrete mix files from a mix
 /// space, `run` replays one mix (live engine by default), `sweep`
-/// samples + runs a whole set and emits the `bench-serve/v2` document.
+/// samples + runs a whole set and emits the `bench-serve/v3` document.
 fn cmd_workload(args: &Args) -> Result<()> {
     use fullpack::figures::serve::{fig_serve_dispatch, fig_serve_latency};
     use fullpack::workload::{
@@ -467,7 +503,7 @@ fn cmd_workload(args: &Args) -> Result<()> {
             let space_desc = args.opt_or("space", "default space");
             let note = format!("mix sweep: seed {seed}, {count} mixes from {space_desc}");
             write_serve_json(out, mode, &host, &note, &reports)?;
-            println!("\nwrote {out} (schema bench-serve/v2, source {mode})");
+            println!("\nwrote {out} (schema bench-serve/v3, source {mode})");
             Ok(())
         }
         _ => bail!("workload expects: gen-mixes | run --mix F.json | sweep"),
@@ -520,7 +556,49 @@ fn cmd_models(args: &Args) -> Result<()> {
             );
             Ok(())
         }
-        _ => bail!("models expects: list | show <zoo-name>"),
+        // `models store`: pack compiled zoo weights into FPCK images —
+        // the zero-copy load path the model store's cold admissions
+        // exercise (DESIGN.md §14)
+        (Some("store"), sub) => {
+            if let Some(path) = args.opt("inspect") {
+                let img = fullpack::pack::serialize::WeightsImage::open(path)?;
+                println!(
+                    "{path}: FPCK image, {} tensors, {} payload bytes",
+                    img.len(),
+                    img.total_bytes()
+                );
+                for name in img.names() {
+                    let w = img.get(name).unwrap();
+                    println!("  {name:>20}: {:>5}x{:<5} ({} bytes)", w.rows(), w.k(), w.footprint());
+                }
+                return Ok(());
+            }
+            let dir = sub.ok_or_else(|| {
+                anyhow!("models store <out-dir> [--size S] [--variant V] | models store --inspect F.fpck")
+            })?;
+            let size = parse_size(args)?;
+            let variant = parse_variant(args, "w4a8")?;
+            std::fs::create_dir_all(dir)?;
+            for e in ModelRegistry::global().iter() {
+                let graph = ModelRegistry::global()
+                    .build(e.name, size, variant, 7)
+                    .map_err(|err| anyhow!("{}: {err}", e.name))?;
+                let model = CompiledModel::compile(graph).map_err(|err| anyhow!("{}: {err}", e.name))?;
+                let entries = model.weight_entries();
+                let tensors: Vec<(&str, &fullpack::kernels::Weights)> =
+                    entries.iter().map(|(n, w)| (n.as_str(), *w)).collect();
+                let path = format!("{dir}/{}.fpck", e.name);
+                fullpack::pack::serialize::save_image(&tensors, &path)?;
+                println!(
+                    "{path}: {} tensors, {} resident bytes",
+                    tensors.len(),
+                    model.resident_bytes()
+                );
+            }
+            println!("reload one with `WeightsImage::open` (zero-copy borrowed views)");
+            Ok(())
+        }
+        _ => bail!("models expects: list | show <zoo-name> | store <out-dir>"),
     }
 }
 

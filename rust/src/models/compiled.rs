@@ -22,7 +22,8 @@ use crate::coordinator::request::OpDesc;
 use crate::kernels::{
     KernelError, LayerShape, Plan, PlanBuilder, PlanScratch, SelectPolicy, Weights,
 };
-use crate::pack::Variant;
+use crate::pack::serialize::WeightsImage;
+use crate::pack::{BitWidth, Variant};
 use crate::quant::requantize;
 use std::sync::Mutex;
 use std::time::Instant;
@@ -136,10 +137,33 @@ impl CompiledModel {
     /// Compile a validated graph: quantize + pack weights per node and
     /// bind one plan per layer under the default (`PaperRule`) policy.
     pub fn compile(graph: ModelGraph) -> Result<CompiledModel, KernelError> {
+        Self::compile_from(graph, None)
+    }
+
+    /// Compile a graph resolving every weight tensor from a loaded
+    /// [`WeightsImage`] instead of regenerating and re-packing it — the
+    /// model store's warm path: the layers *borrow* the shared image
+    /// allocation (zero payload copies; see `pack::serialize`).  Tensor
+    /// names are the node names, with scan cells contributing
+    /// `"<name>.wx"`/`"<name>.wh"` (the [`CompiledModel::weight_entries`]
+    /// convention).  Plan selection is deterministic from the graph, so
+    /// an image saved from a compiled model always re-binds onto the
+    /// same kernels; dimension/width mismatches are a typed error.
+    pub fn compile_with_image(
+        graph: ModelGraph,
+        image: &WeightsImage,
+    ) -> Result<CompiledModel, KernelError> {
+        Self::compile_from(graph, Some(image))
+    }
+
+    fn compile_from(
+        graph: ModelGraph,
+        image: Option<&WeightsImage>,
+    ) -> Result<CompiledModel, KernelError> {
         graph.validate()?;
         let mut layers = Vec::with_capacity(graph.nodes.len());
         for node in &graph.nodes {
-            layers.push(Self::compile_node(&graph, node, None)?);
+            layers.push(Self::compile_node(&graph, node, None, image)?);
         }
         let (_, ahi) = graph.variant.a.value_range();
         Ok(CompiledModel {
@@ -151,10 +175,41 @@ impl CompiledModel {
         })
     }
 
+    /// Pull tensor `entry` out of an image and require it to match the
+    /// shape/width the plan was built for.
+    fn image_weights(
+        image: &WeightsImage,
+        entry: &str,
+        rows: usize,
+        k: usize,
+        wbits: BitWidth,
+    ) -> Result<Weights, KernelError> {
+        let w = image.get(entry).ok_or_else(|| {
+            KernelError::Shape(format!(
+                "weights image has no tensor {entry:?} (image has {:?})",
+                image.names()
+            ))
+        })?;
+        let m = w.as_packed().expect("images only carry packed kinds");
+        if m.rows() != rows || m.k() != k || m.bits() != wbits {
+            return Err(KernelError::Shape(format!(
+                "image tensor {entry:?} is {}x{} w{}, the model wants {}x{} w{}",
+                m.rows(),
+                m.k(),
+                m.bits().bits(),
+                rows,
+                k,
+                wbits.bits()
+            )));
+        }
+        Ok(w)
+    }
+
     fn compile_node(
         graph: &ModelGraph,
         node: &Node,
         cell_kernel: Option<&str>,
+        image: Option<&WeightsImage>,
     ) -> Result<CompiledLayer, KernelError> {
         let variant = node.variant.resolve(graph.variant);
         match node.op {
@@ -167,8 +222,19 @@ impl CompiledModel {
                     variant,
                 )
                 .build()?;
-                let w = xorshift_vals(variant.w, node.z * node.k, graph.seed + node.seed_offset);
-                let weights = plan.prepare_weights(&w)?;
+                let weights = match image {
+                    Some(img) => {
+                        Self::image_weights(img, &node.name, node.z, node.k, variant.w)?
+                    }
+                    None => {
+                        let w = xorshift_vals(
+                            variant.w,
+                            node.z * node.k,
+                            graph.seed + node.seed_offset,
+                        );
+                        plan.prepare_weights(&w)?
+                    }
+                };
                 Ok(CompiledLayer::Fc {
                     name: node.name.clone(),
                     variant,
@@ -198,10 +264,36 @@ impl CompiledModel {
                 };
                 let wx_plan = build(node.k)?;
                 let wh_plan = build(hidden)?;
-                let wx = wx_plan
-                    .prepare_weights(&xorshift_vals(graph.variant.w, gate_dim * node.k, wx_seed))?;
-                let wh = wh_plan
-                    .prepare_weights(&xorshift_vals(graph.variant.w, gate_dim * hidden, wh_seed))?;
+                let (wx, wh) = match image {
+                    Some(img) => (
+                        Self::image_weights(
+                            img,
+                            &format!("{}.wx", node.name),
+                            gate_dim,
+                            node.k,
+                            graph.variant.w,
+                        )?,
+                        Self::image_weights(
+                            img,
+                            &format!("{}.wh", node.name),
+                            gate_dim,
+                            hidden,
+                            graph.variant.w,
+                        )?,
+                    ),
+                    None => (
+                        wx_plan.prepare_weights(&xorshift_vals(
+                            graph.variant.w,
+                            gate_dim * node.k,
+                            wx_seed,
+                        ))?,
+                        wh_plan.prepare_weights(&xorshift_vals(
+                            graph.variant.w,
+                            gate_dim * hidden,
+                            wh_seed,
+                        ))?,
+                    ),
+                };
                 let mut bias = vec![0.0f32; gate_dim];
                 if kind == CellKind::Lstm {
                     bias[hidden..2 * hidden].fill(1.0); // forget-gate bias 1
@@ -231,7 +323,7 @@ impl CompiledModel {
         let mut rebound = 0;
         for (i, node) in self.graph.nodes.iter().enumerate() {
             if matches!(node.op, Op::LstmCell | Op::GruCell) {
-                self.layers[i] = Self::compile_node(&self.graph, node, Some(name))?;
+                self.layers[i] = Self::compile_node(&self.graph, node, Some(name), None)?;
                 rebound += 1;
             }
         }
@@ -323,6 +415,41 @@ impl CompiledModel {
                 CompiledLayer::Relu { .. } => 0,
             })
             .sum()
+    }
+
+    /// Bytes this model costs to keep resident — the model store's
+    /// budget currency.  Packed-width-aware by construction: the packed
+    /// weight footprint (so a w4 model charges half its w8 twin, the
+    /// paper's capacity claim) plus the f32 bias vectors.
+    pub fn resident_bytes(&self) -> usize {
+        let bias: usize = self
+            .layers
+            .iter()
+            .map(|l| match l {
+                CompiledLayer::Fc { bias, .. } | CompiledLayer::Cell { bias, .. } => bias.len() * 4,
+                CompiledLayer::Relu { .. } => 0,
+            })
+            .sum();
+        self.weight_footprint() + bias
+    }
+
+    /// Every weight tensor by its image-entry name: FC nodes under the
+    /// node name, scan cells as `"<name>.wx"`/`"<name>.wh"` — the
+    /// naming contract shared with [`CompiledModel::compile_with_image`]
+    /// and `pack::serialize::write_image`.
+    pub fn weight_entries(&self) -> Vec<(String, &Weights)> {
+        let mut out = Vec::new();
+        for l in &self.layers {
+            match l {
+                CompiledLayer::Fc { name, weights, .. } => out.push((name.clone(), weights)),
+                CompiledLayer::Cell { name, wx, wh, .. } => {
+                    out.push((format!("{name}.wx"), wx));
+                    out.push((format!("{name}.wh"), wh));
+                }
+                CompiledLayer::Relu { .. } => {}
+            }
+        }
+        out
     }
 
     /// Quantize an f32 vector at `scale` into `bits`' signed range, into
@@ -622,6 +749,53 @@ mod tests {
             .unwrap()
             .with_cell_kernel("fullpack-w4a8-swar")
             .is_err());
+    }
+
+    #[test]
+    fn image_compiled_model_is_bit_identical_and_zero_copy() {
+        use crate::pack::serialize::{write_image, WeightsImage};
+        // export a compiled model's tensors to one image, re-compile
+        // from the image, and require bit-identical forwards with every
+        // weight tensor aliasing the image allocation
+        let g = zoo::deepspeech_graph(DeepSpeechConfig::TINY, v("w4a8"), 7);
+        let frames = tiny_frames(&g);
+        let base = CompiledModel::compile(g.clone()).unwrap();
+        let entries = base.weight_entries();
+        assert!(entries.len() >= 6, "deepspeech has FC + cell tensors");
+        let named: Vec<(&str, &Weights)> =
+            entries.iter().map(|(n, w)| (n.as_str(), *w)).collect();
+        let mut buf = Vec::new();
+        write_image(&named, &mut buf).unwrap();
+        let img = WeightsImage::from_bytes(buf).unwrap();
+        let from_img = CompiledModel::compile_with_image(g.clone(), &img).unwrap();
+        assert_eq!(from_img.forward_timed(&frames).0, base.forward_timed(&frames).0);
+        assert_eq!(from_img.resident_bytes(), base.resident_bytes());
+        // zero-copy: every tensor of the image-compiled model borrows
+        // the one image buffer
+        for (name, w) in from_img.weight_entries() {
+            let m = w.as_packed().expect("packed kinds only");
+            assert!(m.shared().is_view_of(img.owner()), "{name} must alias the image");
+        }
+        // ...while the freshly compiled model owns its bytes
+        for (_, w) in base.weight_entries() {
+            assert!(!w.as_packed().unwrap().shared().is_view_of(img.owner()));
+        }
+        // a mismatched graph is a typed error, not silent garbage: same
+        // shapes, different weight width (the cell tensors are w2, the
+        // image holds w4)
+        let other = zoo::deepspeech_graph(DeepSpeechConfig::TINY, v("w2a8"), 7);
+        assert!(CompiledModel::compile_with_image(other, &img).is_err());
+    }
+
+    #[test]
+    fn resident_bytes_scale_with_packed_width() {
+        // the capacity claim the store banks on: a w4 zoo model buys
+        // roughly twice the residency of its w8 twin
+        let g4 = zoo::deepspeech_graph(DeepSpeechConfig::TINY, v("w4a8"), 7);
+        let g8 = zoo::deepspeech_graph(DeepSpeechConfig::TINY, v("w8a8"), 7);
+        let m4 = CompiledModel::compile(g4).unwrap().resident_bytes();
+        let m8 = CompiledModel::compile(g8).unwrap().resident_bytes();
+        assert!(m4 > 0 && m8 > m4, "w8 {m8} must outweigh w4 {m4}");
     }
 
     #[test]

@@ -12,13 +12,18 @@
 pub mod compiled;
 pub mod deepspeech;
 pub mod graph;
+pub mod store;
 pub mod zoo;
 
 pub use compiled::CompiledModel;
 pub use deepspeech::{DeepSpeech, DeepSpeechConfig, Layer, LayerKind};
 pub use graph::{BatchRole, ModelGraph, Node, NodeVariant, Op};
+pub use store::{
+    ColdLoad, DispatchGuard, ModelBuilder, ModelStore, StoreEntryStats, StoreError, StoreStats,
+};
 pub use zoo::{
-    deepspeech_graph, keyword_spotter_graph, mlp_graph, ModelRegistry, ModelSize, ZooEntry,
+    deepspeech_graph, keyword_spotter_graph, mlp_graph, synthetic_roster, ModelRegistry,
+    ModelSize, ZooEntry,
 };
 
 use crate::coordinator::request::{LayerTiming, OpDesc};
@@ -61,6 +66,14 @@ pub trait Model: Send + Sync {
         None
     }
 
+    /// Bytes this model costs to keep resident, packed-width-aware —
+    /// the [`ModelStore`] budget currency (DESIGN.md §14).  The default
+    /// `0` means "free": models with no sizing never trigger eviction
+    /// and are effectively always-resident.
+    fn resident_bytes(&self) -> usize {
+        0
+    }
+
     /// One-line description for logs and the CLI.
     fn describe(&self) -> String;
 }
@@ -88,6 +101,10 @@ impl Model for CompiledModel {
 
     fn dispatch_cost_ns(&self, group: usize) -> Option<u64> {
         Some(crate::costmodel::serving_dispatch_ns(self.graph(), group))
+    }
+
+    fn resident_bytes(&self) -> usize {
+        CompiledModel::resident_bytes(self)
     }
 
     fn describe(&self) -> String {

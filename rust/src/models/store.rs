@@ -1,0 +1,803 @@
+//! Multi-tenant model store (DESIGN.md §14): the engine's single
+//! source of truth for which models exist, which are *resident*
+//! (weights materialized in memory), and which version of each is
+//! live.  Three jobs:
+//!
+//! 1. **Residency budget** — every resident model charges its
+//!    packed-width-aware [`Model::resident_bytes`] against a modeled
+//!    byte budget.  When the budget overflows, the least-recently-used
+//!    unpinned idle model is evicted back to its builder (a closure
+//!    that can re-materialize it, typically from an FPCK
+//!    [`WeightsImage`](crate::pack::serialize::WeightsImage) on disk).
+//! 2. **Cold admission** — admitting a non-resident model loads it
+//!    *and* sheds the triggering request with a typed
+//!    [`ColdLoad`] whose `retry_after_us` is priced by
+//!    [`costmodel::cold_retry_us`](crate::costmodel::cold_retry_us)
+//!    (bytes over modeled load bandwidth).  The retry hits a warm
+//!    entry.  Because pricing is pure in the byte count, the virtual
+//!    workload DES replays cold sheds bit-exactly.
+//! 3. **Atomic hot-swap** — [`ModelStore::swap`] flips the registry
+//!    entry to new weights under a per-model version counter while
+//!    in-flight dispatches keep the old `Arc` alive until their
+//!    [`DispatchGuard`]s drop: v1 batches finish on v1 weights, v2
+//!    admissions see v2, and nothing ever observes a torn model.
+//!
+//! All bookkeeping lives behind one mutex; model forwards never hold
+//! it — dispatch clones the `Arc` out under the guard and computes
+//! outside.  Determinism rules (the DES mirrors these): LRU victim is
+//! the minimum `(last_used, name)` over evictable entries, and
+//! [`ModelStore::resident`] is a pure peek that never touches LRU
+//! order (the scheduler's cost closure may probe it freely).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::metrics::Metrics;
+use crate::costmodel::cold_retry_us;
+use crate::models::Model;
+
+/// Builder closure that re-materializes an evicted model's weights.
+pub type ModelBuilder = Box<dyn Fn() -> Result<Arc<dyn Model>, String> + Send + Sync>;
+
+/// Typed cold-admission shed: the store started bringing the model
+/// into residency and prices the retry at the modeled weight-load
+/// time — clients get a budget hint, not a bare "try later".
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ColdLoad {
+    /// the model that was cold
+    pub name: String,
+    /// resident bytes the load brings in
+    pub bytes: usize,
+    /// modeled microseconds until a retry hits the warm entry (≥ 1)
+    pub retry_after_us: u64,
+}
+
+impl std::fmt::Display for ColdLoad {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "model {:?} cold: loading {} bytes, retry after ~{}us",
+            self.name, self.bytes, self.retry_after_us
+        )
+    }
+}
+
+/// Why a store operation failed.
+#[derive(Debug)]
+pub enum StoreError {
+    /// `register` on a name that already exists — re-registration must
+    /// be an explicit versioned [`ModelStore::swap`], never a silent
+    /// replacement
+    AlreadyRegistered(String),
+    /// no entry under this name
+    Unknown(String),
+    /// the model was registered but not resident; the load has been
+    /// started and the request should be shed with this retry hint
+    Cold(ColdLoad),
+    /// the entry's builder failed to re-materialize the model
+    Build {
+        /// entry whose builder failed
+        name: String,
+        /// builder's error message
+        reason: String,
+    },
+}
+
+impl std::fmt::Display for StoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StoreError::AlreadyRegistered(n) => {
+                write!(f, "model {n:?} already registered (use swap to replace)")
+            }
+            StoreError::Unknown(n) => write!(f, "no model registered under {n:?}"),
+            StoreError::Cold(c) => write!(f, "{c}"),
+            StoreError::Build { name, reason } => {
+                write!(f, "building model {name:?} failed: {reason}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for StoreError {}
+
+/// One registry entry.
+struct Entry {
+    /// the live model, when resident
+    resident: Option<Arc<dyn Model>>,
+    /// re-materializer; `None` for bare registered instances, which
+    /// therefore can never be evicted (nothing could bring them back)
+    builder: Option<ModelBuilder>,
+    /// pinned entries are never evicted and are loaded eagerly
+    pinned: bool,
+    /// weights version: 1 at registration, +1 per swap
+    version: u64,
+    /// times this entry's weights were brought into residency
+    loads: u64,
+    /// times this entry was evicted under the budget
+    evictions: u64,
+    /// logical LRU clock value of the last admission/fetch
+    last_used: u64,
+    /// dispatches currently holding this entry's model
+    in_flight: usize,
+    /// resident byte charge (actual when resident, hint when cold)
+    bytes: usize,
+}
+
+struct Inner {
+    entries: HashMap<String, Entry>,
+    /// logical LRU clock; bumped on every touch
+    tick: u64,
+    /// modeled residency budget; `None` = unbounded
+    budget: Option<usize>,
+    /// sum of `bytes` over resident entries
+    resident_bytes: usize,
+    total_loads: u64,
+    total_evictions: u64,
+    metrics: Option<Arc<Metrics>>,
+}
+
+/// Store-wide counters ([`ModelStore::stats`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StoreStats {
+    /// registered entries
+    pub models: usize,
+    /// entries currently resident
+    pub resident_models: usize,
+    /// bytes charged by resident entries
+    pub resident_bytes: usize,
+    /// the modeled budget (`None` = unbounded)
+    pub budget_bytes: Option<usize>,
+    /// weight loads performed
+    pub loads: u64,
+    /// evictions performed
+    pub evictions: u64,
+}
+
+/// Per-entry counters ([`ModelStore::entry_stats`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StoreEntryStats {
+    /// entry name
+    pub name: String,
+    /// currently resident
+    pub resident: bool,
+    /// pinned (never evicted)
+    pub pinned: bool,
+    /// weights version (1 = as registered)
+    pub version: u64,
+    /// times loaded into residency
+    pub loads: u64,
+    /// times evicted
+    pub evictions: u64,
+    /// resident byte charge
+    pub bytes: usize,
+    /// dispatches currently holding the model
+    pub in_flight: usize,
+}
+
+/// The multi-tenant model store.  See the module docs for the
+/// residency/admission/hot-swap contract.
+pub struct ModelStore {
+    inner: Mutex<Inner>,
+}
+
+impl std::fmt::Debug for ModelStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.stats();
+        f.debug_struct("ModelStore")
+            .field("models", &s.models)
+            .field("resident_models", &s.resident_models)
+            .field("resident_bytes", &s.resident_bytes)
+            .field("budget_bytes", &s.budget_bytes)
+            .finish()
+    }
+}
+
+impl ModelStore {
+    /// Empty store with a modeled residency budget (`None` =
+    /// unbounded: nothing is ever evicted).
+    pub fn new(budget_bytes: Option<usize>) -> Self {
+        ModelStore {
+            inner: Mutex::new(Inner {
+                entries: HashMap::new(),
+                tick: 0,
+                budget: budget_bytes,
+                resident_bytes: 0,
+                total_loads: 0,
+                total_evictions: 0,
+                metrics: None,
+            }),
+        }
+    }
+
+    /// Mirror load/eviction/swap/version events into the engine's
+    /// [`Metrics`] so reports reconcile store activity.
+    pub fn attach_metrics(&self, metrics: Arc<Metrics>) {
+        self.inner.lock().unwrap().metrics = Some(metrics);
+    }
+
+    /// Register a bare model instance.  It is resident immediately and
+    /// — having no builder to re-materialize it — never evicted.
+    /// Fails with [`StoreError::AlreadyRegistered`] on a duplicate
+    /// name: replacing a live model must be an explicit versioned
+    /// [`ModelStore::swap`].
+    pub fn register(&self, name: &str, model: Arc<dyn Model>) -> Result<(), StoreError> {
+        let mut g = self.inner.lock().unwrap();
+        if g.entries.contains_key(name) {
+            return Err(StoreError::AlreadyRegistered(name.to_string()));
+        }
+        let bytes = model.resident_bytes();
+        g.tick += 1;
+        let tick = g.tick;
+        g.entries.insert(
+            name.to_string(),
+            Entry {
+                resident: Some(model),
+                builder: None,
+                pinned: false,
+                version: 1,
+                loads: 1,
+                evictions: 0,
+                last_used: tick,
+                in_flight: 0,
+                bytes,
+            },
+        );
+        g.resident_bytes += bytes;
+        g.total_loads += 1;
+        if let Some(m) = &g.metrics {
+            m.record_model_load(name);
+            m.set_model_version(name, 1);
+        }
+        Self::evict_to_fit(&mut g, Some(name));
+        Ok(())
+    }
+
+    /// Register a lazily-built model: cold until first admission,
+    /// evictable back to `builder` thereafter.  `bytes_hint` is the
+    /// charge used while cold (replaced by the model's actual
+    /// [`Model::resident_bytes`] on load).
+    pub fn register_lazy(
+        &self,
+        name: &str,
+        bytes_hint: usize,
+        builder: ModelBuilder,
+    ) -> Result<(), StoreError> {
+        let mut g = self.inner.lock().unwrap();
+        if g.entries.contains_key(name) {
+            return Err(StoreError::AlreadyRegistered(name.to_string()));
+        }
+        g.entries.insert(
+            name.to_string(),
+            Entry {
+                resident: None,
+                builder: Some(builder),
+                pinned: false,
+                version: 1,
+                loads: 0,
+                evictions: 0,
+                last_used: 0,
+                in_flight: 0,
+                bytes: bytes_hint,
+            },
+        );
+        if let Some(m) = &g.metrics {
+            m.set_model_version(name, 1);
+        }
+        Ok(())
+    }
+
+    /// Pin an entry: loaded eagerly (if cold) and never evicted.
+    pub fn pin(&self, name: &str) -> Result<(), StoreError> {
+        let mut g = self.inner.lock().unwrap();
+        if !g.entries.contains_key(name) {
+            return Err(StoreError::Unknown(name.to_string()));
+        }
+        if g.entries.get(name).unwrap().resident.is_none() {
+            Self::make_resident(&mut g, name)?;
+        }
+        g.entries.get_mut(name).unwrap().pinned = true;
+        Ok(())
+    }
+
+    /// Admit a request for `name`.  Warm → LRU touch and the model.
+    /// Cold → the load happens *now* (synchronously, so the very next
+    /// admission is warm), but the triggering request is shed with a
+    /// typed [`ColdLoad`] pricing the retry at the modeled load time.
+    pub fn admit(&self, name: &str) -> Result<Arc<dyn Model>, StoreError> {
+        let mut g = self.inner.lock().unwrap();
+        let warm = match g.entries.get(name) {
+            None => return Err(StoreError::Unknown(name.to_string())),
+            Some(e) => e.resident.is_some(),
+        };
+        if warm {
+            g.tick += 1;
+            let tick = g.tick;
+            let e = g.entries.get_mut(name).unwrap();
+            e.last_used = tick;
+            Ok(e.resident.as_ref().unwrap().clone())
+        } else {
+            Self::make_resident(&mut g, name)?;
+            let bytes = g.entries.get(name).unwrap().bytes;
+            Err(StoreError::Cold(ColdLoad {
+                name: name.to_string(),
+                bytes,
+                retry_after_us: cold_retry_us(bytes),
+            }))
+        }
+    }
+
+    /// Warm-or-load without the cold shed: the model, loading it first
+    /// if needed.  The synchronous path for `infer` and the CLI, where
+    /// there is no admission queue to protect.
+    pub fn fetch(&self, name: &str) -> Result<Arc<dyn Model>, StoreError> {
+        let mut g = self.inner.lock().unwrap();
+        if !g.entries.contains_key(name) {
+            return Err(StoreError::Unknown(name.to_string()));
+        }
+        if g.entries.get(name).unwrap().resident.is_none() {
+            Self::make_resident(&mut g, name)?;
+        }
+        g.tick += 1;
+        let tick = g.tick;
+        let e = g.entries.get_mut(name).unwrap();
+        e.last_used = tick;
+        Ok(e.resident.as_ref().unwrap().clone())
+    }
+
+    /// Pure model peek: the resident model if any, with no LRU touch
+    /// and no load.  The scheduler's cost closure probes this;
+    /// keeping it side-effect-free is what lets the virtual DES
+    /// replay admissions bit-exactly.
+    pub fn peek(&self, name: &str) -> Option<Arc<dyn Model>> {
+        self.inner.lock().unwrap().entries.get(name).and_then(|e| e.resident.clone())
+    }
+
+    /// Pure residency peek: no LRU touch, no load.
+    pub fn resident(&self, name: &str) -> bool {
+        self.inner
+            .lock()
+            .unwrap()
+            .entries
+            .get(name)
+            .is_some_and(|e| e.resident.is_some())
+    }
+
+    /// Take a dispatch hold on `name`: the returned guard keeps the
+    /// entry's *current* model alive and un-evictable until dropped.
+    /// If the entry was evicted between admission and dispatch the
+    /// weights are transparently reloaded (no shed — the request was
+    /// already admitted).
+    pub fn begin_dispatch(self: &Arc<Self>, name: &str) -> Result<DispatchGuard, StoreError> {
+        let mut g = self.inner.lock().unwrap();
+        if !g.entries.contains_key(name) {
+            return Err(StoreError::Unknown(name.to_string()));
+        }
+        if g.entries.get(name).unwrap().resident.is_none() {
+            Self::make_resident(&mut g, name)?;
+        }
+        let e = g.entries.get_mut(name).unwrap();
+        e.in_flight += 1;
+        let model = e.resident.as_ref().unwrap().clone();
+        drop(g);
+        Ok(DispatchGuard { store: Arc::clone(self), name: name.to_string(), model })
+    }
+
+    fn end_dispatch(&self, name: &str) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(e) = g.entries.get_mut(name) {
+            e.in_flight = e.in_flight.saturating_sub(1);
+        }
+        // a hold ending may free the victim the budget was waiting on
+        Self::evict_to_fit(&mut g, None);
+    }
+
+    /// Atomically hot-swap `name` to new weights: the version counter
+    /// bumps, new admissions see the new model, and in-flight
+    /// dispatches finish on the old `Arc` their guards hold — the
+    /// drain protocol is the guard lifetime itself.  `builder`, when
+    /// given, replaces the re-materializer so future cold loads build
+    /// the *new* version.  Returns the new version.
+    pub fn swap(
+        &self,
+        name: &str,
+        model: Arc<dyn Model>,
+        builder: Option<ModelBuilder>,
+    ) -> Result<u64, StoreError> {
+        let mut g = self.inner.lock().unwrap();
+        if !g.entries.contains_key(name) {
+            return Err(StoreError::Unknown(name.to_string()));
+        }
+        let bytes = model.resident_bytes();
+        g.tick += 1;
+        let tick = g.tick;
+        let e = g.entries.get_mut(name).unwrap();
+        let was_resident = e.resident.is_some();
+        let old_bytes = e.bytes;
+        e.resident = Some(model);
+        e.bytes = bytes;
+        e.version += 1;
+        e.loads += 1;
+        e.last_used = tick;
+        if let Some(b) = builder {
+            e.builder = Some(b);
+        }
+        let version = e.version;
+        if was_resident {
+            g.resident_bytes = g.resident_bytes - old_bytes + bytes;
+        } else {
+            g.resident_bytes += bytes;
+        }
+        g.total_loads += 1;
+        if let Some(m) = &g.metrics {
+            m.record_model_load(name);
+            m.record_model_swap(name, version);
+        }
+        Self::evict_to_fit(&mut g, Some(name));
+        Ok(version)
+    }
+
+    /// Current version of an entry (1 = as registered).
+    pub fn version(&self, name: &str) -> Option<u64> {
+        self.inner.lock().unwrap().entries.get(name).map(|e| e.version)
+    }
+
+    /// Store-wide counters.
+    pub fn stats(&self) -> StoreStats {
+        let g = self.inner.lock().unwrap();
+        StoreStats {
+            models: g.entries.len(),
+            resident_models: g.entries.values().filter(|e| e.resident.is_some()).count(),
+            resident_bytes: g.resident_bytes,
+            budget_bytes: g.budget,
+            loads: g.total_loads,
+            evictions: g.total_evictions,
+        }
+    }
+
+    /// One entry's counters.
+    pub fn entry_stats(&self, name: &str) -> Option<StoreEntryStats> {
+        let g = self.inner.lock().unwrap();
+        g.entries.get(name).map(|e| Self::entry_to_stats(name, e))
+    }
+
+    /// Every entry's counters, sorted by name.
+    pub fn per_entry(&self) -> Vec<StoreEntryStats> {
+        let g = self.inner.lock().unwrap();
+        let mut v: Vec<StoreEntryStats> =
+            g.entries.iter().map(|(n, e)| Self::entry_to_stats(n, e)).collect();
+        v.sort_by(|a, b| a.name.cmp(&b.name));
+        v
+    }
+
+    fn entry_to_stats(name: &str, e: &Entry) -> StoreEntryStats {
+        StoreEntryStats {
+            name: name.to_string(),
+            resident: e.resident.is_some(),
+            pinned: e.pinned,
+            version: e.version,
+            loads: e.loads,
+            evictions: e.evictions,
+            bytes: e.bytes,
+            in_flight: e.in_flight,
+        }
+    }
+
+    /// Build `name`'s model via its builder and charge it against the
+    /// budget, evicting LRU victims as needed.  Caller holds the lock.
+    fn make_resident(g: &mut Inner, name: &str) -> Result<(), StoreError> {
+        let e = g.entries.get(name).ok_or_else(|| StoreError::Unknown(name.to_string()))?;
+        let builder = e.builder.as_ref().ok_or_else(|| StoreError::Build {
+            name: name.to_string(),
+            reason: "entry is not resident and has no builder".to_string(),
+        })?;
+        let model = builder().map_err(|reason| StoreError::Build {
+            name: name.to_string(),
+            reason,
+        })?;
+        let bytes = model.resident_bytes();
+        g.tick += 1;
+        let tick = g.tick;
+        let e = g.entries.get_mut(name).unwrap();
+        e.resident = Some(model);
+        e.bytes = bytes;
+        e.loads += 1;
+        e.last_used = tick;
+        g.resident_bytes += bytes;
+        g.total_loads += 1;
+        if let Some(m) = &g.metrics {
+            m.record_model_load(name);
+        }
+        Self::evict_to_fit(g, Some(name));
+        Ok(())
+    }
+
+    /// Evict LRU victims until the budget fits or no victim remains.
+    /// A victim must be resident, unpinned, idle (no dispatch holds),
+    /// rebuildable (has a builder), and not `keep` (the entry that
+    /// just loaded — evicting it immediately would thrash forever).
+    /// Victim order is the minimum `(last_used, name)` — total and
+    /// deterministic despite the `HashMap`, so the DES mirrors it.
+    /// The budget is *modeled*: pins, dispatch holds, and oversized
+    /// single models may legitimately exceed it.
+    fn evict_to_fit(g: &mut Inner, keep: Option<&str>) {
+        let Some(budget) = g.budget else { return };
+        while g.resident_bytes > budget {
+            let victim = g
+                .entries
+                .iter()
+                .filter(|(n, e)| {
+                    e.resident.is_some()
+                        && !e.pinned
+                        && e.in_flight == 0
+                        && e.builder.is_some()
+                        && keep != Some(n.as_str())
+                })
+                .min_by(|(an, ae), (bn, be)| {
+                    ae.last_used.cmp(&be.last_used).then_with(|| an.cmp(bn))
+                })
+                .map(|(n, _)| n.clone());
+            let Some(victim) = victim else { return };
+            let e = g.entries.get_mut(&victim).unwrap();
+            e.resident = None;
+            e.evictions += 1;
+            g.resident_bytes -= e.bytes;
+            g.total_evictions += 1;
+            if let Some(m) = &g.metrics {
+                m.record_model_eviction(&victim);
+            }
+        }
+    }
+}
+
+/// A dispatch hold: keeps one model `Arc` alive and its entry
+/// un-evictable for the guard's lifetime.  Hot-swapping while guards
+/// exist is safe — they finish on the version they captured.
+pub struct DispatchGuard {
+    store: Arc<ModelStore>,
+    name: String,
+    model: Arc<dyn Model>,
+}
+
+impl DispatchGuard {
+    /// The model captured at dispatch time.
+    pub fn model(&self) -> &Arc<dyn Model> {
+        &self.model
+    }
+
+    /// The entry this guard holds.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+impl Drop for DispatchGuard {
+    fn drop(&mut self) {
+        self.store.end_dispatch(&self.name);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::{LayerTiming, OpDesc};
+
+    /// Weightless stub whose only interesting property is its byte
+    /// charge; forwards echo the first frame so swap tests can tell
+    /// versions apart by behavior if they want to.
+    struct Stub {
+        bytes: usize,
+        tag: f32,
+    }
+
+    impl Model for Stub {
+        fn input_len(&self) -> usize {
+            1
+        }
+        fn output_len(&self) -> usize {
+            1
+        }
+        fn forward_timed(&self, _frames: &[f32]) -> (Vec<f32>, Vec<LayerTiming>) {
+            (vec![self.tag], Vec::new())
+        }
+        fn forward_batch(&self, frames: &[&[f32]]) -> Vec<(Vec<f32>, Vec<LayerTiming>)> {
+            frames.iter().map(|_| (vec![self.tag], Vec::new())).collect()
+        }
+        fn route_ops(&self, _group: usize) -> Vec<OpDesc> {
+            Vec::new()
+        }
+        fn resident_bytes(&self) -> usize {
+            self.bytes
+        }
+        fn describe(&self) -> String {
+            format!("stub[{} bytes]", self.bytes)
+        }
+    }
+
+    fn stub(bytes: usize, tag: f32) -> Arc<dyn Model> {
+        Arc::new(Stub { bytes, tag })
+    }
+
+    fn lazy(bytes: usize, tag: f32) -> ModelBuilder {
+        Box::new(move || Ok(stub(bytes, tag)))
+    }
+
+    #[test]
+    fn register_rejects_duplicates_and_admits_warm() {
+        let store = ModelStore::new(None);
+        store.register("a", stub(100, 1.0)).unwrap();
+        let err = store.register("a", stub(100, 2.0)).unwrap_err();
+        assert!(matches!(err, StoreError::AlreadyRegistered(n) if n == "a"));
+        // the original instance survived the rejected re-registration
+        let m = store.admit("a").unwrap();
+        assert_eq!(m.forward_timed(&[0.0]).0, vec![1.0]);
+        assert!(store.resident("a"));
+        assert!(!store.resident("ghost"));
+        assert!(matches!(store.admit("ghost"), Err(StoreError::Unknown(_))));
+        assert_eq!(store.version("a"), Some(1));
+    }
+
+    #[test]
+    fn cold_admission_sheds_once_then_hits_warm() {
+        let store = ModelStore::new(None);
+        store.register_lazy("m", 4 << 20, lazy(4 << 20, 1.0)).unwrap();
+        assert!(!store.resident("m"));
+        let err = store.admit("m").unwrap_err();
+        let StoreError::Cold(cold) = err else { panic!("expected cold shed") };
+        assert_eq!(cold.name, "m");
+        assert_eq!(cold.bytes, 4 << 20);
+        assert_eq!(cold.retry_after_us, cold_retry_us(4 << 20));
+        assert!(cold.retry_after_us >= 1);
+        // the shed itself performed the load: the retry is warm
+        assert!(store.resident("m"));
+        store.admit("m").unwrap();
+        let s = store.entry_stats("m").unwrap();
+        assert_eq!((s.loads, s.evictions), (1, 0));
+    }
+
+    #[test]
+    fn lru_evicts_to_budget_deterministically() {
+        // budget fits two 100-byte models
+        let store = ModelStore::new(Some(200));
+        for (name, tag) in [("a", 1.0), ("b", 2.0), ("c", 3.0)] {
+            store.register_lazy(name, 100, lazy(100, tag)).unwrap();
+        }
+        let _ = store.admit("a"); // cold shed + load
+        let _ = store.admit("b");
+        store.admit("a").unwrap(); // touch a: b is now LRU
+        let _ = store.admit("c"); // loads c, evicting b
+        assert!(store.resident("a"));
+        assert!(!store.resident("b"));
+        assert!(store.resident("c"));
+        let s = store.stats();
+        assert_eq!(s.resident_bytes, 200);
+        assert_eq!((s.loads, s.evictions), (3, 1));
+        assert_eq!(s.resident_models, 2);
+        // b reloads on demand and evicts the now-LRU a
+        let _ = store.admit("b");
+        assert!(!store.resident("a"));
+        assert_eq!(store.entry_stats("b").unwrap().loads, 2);
+        assert_eq!(store.entry_stats("a").unwrap().evictions, 1);
+    }
+
+    #[test]
+    fn pinned_and_bare_entries_are_never_evicted() {
+        let store = ModelStore::new(Some(150));
+        // bare instance: no builder, can never be evicted
+        store.register("bare", stub(100, 0.0)).unwrap();
+        store.register_lazy("p", 100, lazy(100, 1.0)).unwrap();
+        store.register_lazy("q", 100, lazy(100, 2.0)).unwrap();
+        store.pin("p").unwrap(); // eager load, over budget already
+        assert!(store.resident("p"));
+        let _ = store.admit("q"); // loads q; only q itself is evictable
+        // q was just loaded (kept), bare/p are protected: budget is
+        // legitimately exceeded
+        assert!(store.resident("bare") && store.resident("p") && store.resident("q"));
+        // the next load finds q idle and unpinned: it goes
+        store.register_lazy("r", 100, lazy(100, 3.0)).unwrap();
+        let _ = store.admit("r");
+        assert!(!store.resident("q"));
+        assert!(store.resident("bare") && store.resident("p") && store.resident("r"));
+        assert!(matches!(store.pin("ghost"), Err(StoreError::Unknown(_))));
+    }
+
+    #[test]
+    fn dispatch_guard_blocks_eviction_and_reloads_transparently() {
+        let store = Arc::new(ModelStore::new(Some(100)));
+        store.register_lazy("a", 100, lazy(100, 1.0)).unwrap();
+        store.register_lazy("b", 100, lazy(100, 2.0)).unwrap();
+        let _ = store.admit("a");
+        let guard = store.begin_dispatch("a").unwrap();
+        assert_eq!(store.entry_stats("a").unwrap().in_flight, 1);
+        // loading b wants a's bytes, but the hold protects a
+        let _ = store.admit("b");
+        assert!(store.resident("a") && store.resident("b"));
+        drop(guard);
+        assert_eq!(store.entry_stats("a").unwrap().in_flight, 0);
+        // the drop re-ran eviction: LRU a went back under budget
+        assert!(!store.resident("a"));
+        assert!(store.resident("b"));
+        // dispatch of an evicted-but-admitted model reloads, no shed
+        let g2 = store.begin_dispatch("a").unwrap();
+        assert_eq!(g2.model().forward_timed(&[0.0]).0, vec![1.0]);
+        assert_eq!(store.entry_stats("a").unwrap().loads, 2);
+    }
+
+    #[test]
+    fn swap_bumps_version_and_in_flight_finishes_on_old_weights() {
+        let store = Arc::new(ModelStore::new(None));
+        store.register("m", stub(100, 1.0)).unwrap();
+        let guard = store.begin_dispatch("m").unwrap();
+        let v2 = store.swap("m", stub(120, 2.0), Some(lazy(120, 2.0))).unwrap();
+        assert_eq!(v2, 2);
+        assert_eq!(store.version("m"), Some(2));
+        // the guard still runs version 1
+        assert_eq!(guard.model().forward_timed(&[0.0]).0, vec![1.0]);
+        // new admissions get version 2
+        assert_eq!(store.admit("m").unwrap().forward_timed(&[0.0]).0, vec![2.0]);
+        drop(guard);
+        let s = store.entry_stats("m").unwrap();
+        assert_eq!((s.version, s.loads, s.bytes), (2, 2, 120));
+        assert_eq!(store.stats().resident_bytes, 120);
+        // swapping an unknown name is a typed error
+        assert!(matches!(
+            store.swap("ghost", stub(1, 0.0), None),
+            Err(StoreError::Unknown(_))
+        ));
+    }
+
+    #[test]
+    fn swap_installs_builder_so_evictions_rebuild_the_new_version() {
+        let store = ModelStore::new(Some(100));
+        store.register_lazy("m", 60, lazy(60, 1.0)).unwrap();
+        store.register_lazy("other", 60, lazy(60, 9.0)).unwrap();
+        let _ = store.admit("m");
+        store.swap("m", stub(60, 2.0), Some(lazy(60, 2.0))).unwrap();
+        let _ = store.admit("other"); // evicts m (LRU)
+        assert!(!store.resident("m"));
+        // the reload builds v2 weights, version counter unchanged
+        let err = store.admit("m").unwrap_err();
+        assert!(matches!(err, StoreError::Cold(_)));
+        assert_eq!(store.admit("m").unwrap().forward_timed(&[0.0]).0, vec![2.0]);
+        assert_eq!(store.version("m"), Some(2));
+    }
+
+    #[test]
+    fn metrics_mirror_store_activity() {
+        let metrics = Arc::new(Metrics::default());
+        let store = ModelStore::new(Some(100));
+        store.attach_metrics(Arc::clone(&metrics));
+        store.register_lazy("a", 100, lazy(100, 1.0)).unwrap();
+        store.register_lazy("b", 100, lazy(100, 2.0)).unwrap();
+        let _ = store.admit("a"); // load a
+        let _ = store.admit("b"); // load b, evict a
+        store.swap("b", stub(100, 3.0), None).unwrap(); // load + swap
+        let (loads, evictions, swaps) = metrics.model_store_counts();
+        assert_eq!((loads, evictions, swaps), (3, 1, 1));
+        let s = store.stats();
+        assert_eq!((s.loads, s.evictions), (loads, evictions));
+        let a = metrics.model_counters("a").unwrap();
+        assert_eq!((a.loads, a.evictions, a.version), (1, 1, 1));
+        let b = metrics.model_counters("b").unwrap();
+        assert_eq!((b.loads, b.evictions, b.version), (2, 0, 2));
+    }
+
+    #[test]
+    fn per_entry_listing_is_sorted_and_complete() {
+        let store = ModelStore::new(None);
+        store.register("z", stub(10, 0.0)).unwrap();
+        store.register_lazy("a", 20, lazy(20, 0.0)).unwrap();
+        let rows = store.per_entry();
+        assert_eq!(
+            rows.iter().map(|r| r.name.as_str()).collect::<Vec<_>>(),
+            ["a", "z"]
+        );
+        assert!(!rows[0].resident && rows[1].resident);
+        assert_eq!(rows[0].bytes, 20);
+        let failing = ModelStore::new(None);
+        failing
+            .register_lazy("bad", 1, Box::new(|| Err("disk on fire".to_string())))
+            .unwrap();
+        let err = failing.fetch("bad").unwrap_err();
+        assert!(matches!(err, StoreError::Build { reason, .. } if reason.contains("disk")));
+    }
+}

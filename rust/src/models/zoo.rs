@@ -106,6 +106,28 @@ pub fn keyword_spotter_graph(size: ModelSize, variant: Variant, seed: u64) -> Mo
         .fc_fixed("out", classes, false, W8A8)
 }
 
+/// Synthetic N-model roster for residency and eviction tests: cycles
+/// the built-in zoo with per-index seeds and zero-padded unique names
+/// (`mlp-017`), without growing the registry itself.  Names sort in
+/// roster order only within a topology, so LRU victim selection over a
+/// roster exercises the `(last_used, name)` tie-break across topologies.
+pub fn synthetic_roster(
+    n: usize,
+    size: ModelSize,
+    variant: Variant,
+    seed: u64,
+) -> Vec<(String, ModelGraph)> {
+    let reg = ModelRegistry::global();
+    let names = reg.names();
+    (0..n)
+        .map(|i| {
+            let base = names[i % names.len()];
+            let graph = (reg.get(base).expect("builtin").build)(size, variant, seed + i as u64);
+            (format!("{base}-{i:03}"), graph)
+        })
+        .collect()
+}
+
 /// One zoo entry: a named graph constructor.
 pub struct ZooEntry {
     /// registry name (`deepspeech`, `mlp`, `keyword-spotter`)
@@ -231,6 +253,27 @@ mod tests {
         // legacy weight seeds: fc1..3 at 0..2, the cell at 100, fc5/6 at 4/5
         let offs: Vec<u64> = g.nodes.iter().map(|n| n.seed_offset).collect();
         assert_eq!(offs, vec![0, 1, 2, 100, 4, 5]);
+    }
+
+    #[test]
+    fn synthetic_roster_names_are_unique_and_graphs_valid() {
+        let roster = synthetic_roster(7, ModelSize::Tiny, v("w4a8"), 42);
+        assert_eq!(roster.len(), 7);
+        let mut names: Vec<&str> = roster.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names[0], "deepspeech-000");
+        assert_eq!(names[1], "mlp-001");
+        assert_eq!(names[3], "deepspeech-003");
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 7, "roster names collide");
+        for (_, g) in &roster {
+            g.validate().unwrap();
+        }
+        // the registry itself is untouched
+        assert_eq!(
+            ModelRegistry::global().names(),
+            vec!["deepspeech", "mlp", "keyword-spotter"]
+        );
     }
 
     #[test]

@@ -3,13 +3,99 @@
 //! rows"), plus the ULPPACK comparison container.
 
 use super::{pack, pack_ulppack, unpack, BitWidth, PackError, VL};
+use std::sync::Arc;
+
+/// Reference-counted byte storage for packed weights: a window into an
+/// owner buffer shared across any number of views.  The owner is either
+/// a plain heap `Vec<u8>` (one matrix, one allocation — the historical
+/// layout) or a whole multi-tensor FPCK image (`serialize::WeightsImage`,
+/// possibly an `mmap`ed file), in which case every tensor's bytes alias
+/// the single image allocation — the zero-copy multi-tenant path.
+#[derive(Clone)]
+pub struct SharedBytes {
+    owner: Arc<dyn AsRef<[u8]> + Send + Sync>,
+    off: usize,
+    len: usize,
+}
+
+impl SharedBytes {
+    /// Own a heap buffer outright (the single-tensor path).
+    pub fn from_vec(data: Vec<u8>) -> Self {
+        let len = data.len();
+        SharedBytes { owner: Arc::new(data), off: 0, len }
+    }
+
+    /// A `[off, off+len)` window into a shared owner buffer.  Panics if
+    /// the window falls outside the owner (caller bugs, not wire data —
+    /// wire offsets are validated by the image parser first).
+    pub fn view(owner: Arc<dyn AsRef<[u8]> + Send + Sync>, off: usize, len: usize) -> Self {
+        let total = (*owner).as_ref().len();
+        assert!(
+            off.checked_add(len).is_some_and(|end| end <= total),
+            "SharedBytes window {off}+{len} outside owner of {total} bytes"
+        );
+        SharedBytes { owner, off, len }
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[u8] {
+        &(*self.owner).as_ref()[self.off..self.off + self.len]
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Offset of this window within its owner (0 for `from_vec`).
+    #[inline]
+    pub fn offset(&self) -> usize {
+        self.off
+    }
+
+    /// Does this view borrow from `owner` (same allocation), rather than
+    /// holding its own copy?  The zero-copy test hook.
+    pub fn is_view_of(&self, owner: &Arc<dyn AsRef<[u8]> + Send + Sync>) -> bool {
+        Arc::ptr_eq(&self.owner, owner)
+    }
+}
+
+impl std::ops::Deref for SharedBytes {
+    type Target = [u8];
+    #[inline]
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl PartialEq for SharedBytes {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl Eq for SharedBytes {}
+
+impl std::fmt::Debug for SharedBytes {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SharedBytes")
+            .field("off", &self.off)
+            .field("len", &self.len)
+            .finish()
+    }
+}
 
 /// A `rows × k` matrix of signed `bits`-wide values in FullPack layout
 /// (or plain int8 for `BitWidth::B8`).  Rows are packed independently so
 /// the GEMV kernels can stream one row at a time.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct PackedMatrix {
-    data: Vec<u8>,
+    data: SharedBytes,
     rows: usize,
     /// logical (unpadded) depth
     k: usize,
@@ -30,7 +116,7 @@ impl PackedMatrix {
                 data.extend(pack(&w[r * k..(r + 1) * k], bits)?);
             }
             Ok(PackedMatrix {
-                data,
+                data: SharedBytes::from_vec(data),
                 rows,
                 k,
                 k_padded: bits.padded_len(k),
@@ -39,7 +125,7 @@ impl PackedMatrix {
             })
         } else {
             Ok(PackedMatrix {
-                data: w.iter().map(|&v| v as u8).collect(),
+                data: SharedBytes::from_vec(w.iter().map(|&v| v as u8).collect()),
                 rows,
                 k,
                 k_padded: k,
@@ -53,6 +139,18 @@ impl PackedMatrix {
     /// Python pack twin).  Validates the byte count.
     pub fn from_packed(
         data: Vec<u8>,
+        rows: usize,
+        k: usize,
+        bits: BitWidth,
+    ) -> Result<Self, PackError> {
+        Self::from_shared(SharedBytes::from_vec(data), rows, k, bits)
+    }
+
+    /// Adopt pre-packed bytes that alias a shared owner buffer — the
+    /// zero-copy path used by `serialize::WeightsImage`: every tensor of
+    /// a loaded image borrows the one image allocation.
+    pub fn from_shared(
+        data: SharedBytes,
         rows: usize,
         k: usize,
         bits: BitWidth,
@@ -115,6 +213,13 @@ impl PackedMatrix {
     /// Whole packed buffer (for PJRT literal upload / serialization).
     #[inline]
     pub fn bytes(&self) -> &[u8] {
+        self.data.as_slice()
+    }
+
+    /// The shared storage behind this matrix (zero-copy introspection:
+    /// `SharedBytes::is_view_of` tells whether it aliases an image).
+    #[inline]
+    pub fn shared(&self) -> &SharedBytes {
         &self.data
     }
 
@@ -262,5 +367,55 @@ mod tests {
     fn from_packed_validates_length() {
         let ok = PackedMatrix::from_packed(vec![0u8; 2 * 16], 2, 32, BitWidth::B4);
         assert!(ok.is_ok());
+    }
+
+    #[test]
+    fn shared_views_alias_one_owner_without_copying() {
+        use std::sync::Arc;
+        // two matrices carved out of one owner buffer: same allocation,
+        // disjoint windows, equal to their standalone twins
+        let w: Vec<i8> = (0..2 * 32).map(|i| ((i % 15) as i8) - 7).collect();
+        let standalone = PackedMatrix::from_i8(&w, 2, 32, BitWidth::B4).unwrap();
+        let mut buf = vec![0xAAu8; 8]; // leading bytes the views must skip
+        buf.extend_from_slice(standalone.bytes());
+        buf.extend_from_slice(standalone.bytes());
+        let owner: Arc<dyn AsRef<[u8]> + Send + Sync> = Arc::new(buf);
+        let n = standalone.bytes().len();
+        let a = PackedMatrix::from_shared(
+            SharedBytes::view(owner.clone(), 8, n),
+            2,
+            32,
+            BitWidth::B4,
+        )
+        .unwrap();
+        let b = PackedMatrix::from_shared(
+            SharedBytes::view(owner.clone(), 8 + n, n),
+            2,
+            32,
+            BitWidth::B4,
+        )
+        .unwrap();
+        assert_eq!(a, standalone);
+        assert_eq!(b, standalone);
+        assert_eq!(a.unpack_all(), w);
+        // zero-copy: both views alias the owner allocation...
+        assert!(a.shared().is_view_of(&owner));
+        assert!(b.shared().is_view_of(&owner));
+        let base = (*owner).as_ref().as_ptr() as usize;
+        assert_eq!(a.bytes().as_ptr() as usize, base + 8);
+        assert_eq!(b.bytes().as_ptr() as usize, base + 8 + n);
+        // ...while from_i8/from_packed matrices own their bytes
+        assert!(!standalone.shared().is_view_of(&owner));
+        // a clone shares too (Arc bump, no byte copy)
+        let c = a.clone();
+        assert_eq!(c.bytes().as_ptr(), a.bytes().as_ptr());
+    }
+
+    #[test]
+    #[should_panic(expected = "outside owner")]
+    fn shared_view_bounds_checked() {
+        use std::sync::Arc;
+        let owner: Arc<dyn AsRef<[u8]> + Send + Sync> = Arc::new(vec![0u8; 16]);
+        let _ = SharedBytes::view(owner, 8, 9);
     }
 }

@@ -13,7 +13,7 @@
 
 mod matrix;
 pub mod serialize;
-pub use matrix::{PackedMatrix, UlppackMatrix};
+pub use matrix::{PackedMatrix, SharedBytes, UlppackMatrix};
 
 /// Vector lane count: 16 int8 lanes of a 128-bit NEON register.  Kept at
 /// 16 on every target so layouts are interchangeable with the Pallas

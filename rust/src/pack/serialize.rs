@@ -15,16 +15,26 @@
 //!   backend survive save/load without re-deriving anything.
 //!   `read_weights` also accepts v1 files (as kind 0).
 
-use super::{BitWidth, PackedMatrix};
+use super::{BitWidth, PackedMatrix, SharedBytes};
 use crate::kernels::Weights;
 use std::io::{self, Read, Write};
+use std::sync::Arc;
 
 const MAGIC: &[u8; 4] = b"FPCK";
 const VERSION: u32 = 1;
 const WEIGHTS_VERSION: u32 = 2;
+const IMAGE_VERSION: u32 = 3;
 
 const KIND_PACKED: u32 = 0;
 const KIND_SWAR_PACKED: u32 = 1;
+
+/// Header fields are untrusted: dimensions beyond this are rejected
+/// before any size arithmetic (padded_len/packed_bytes would overflow
+/// on absurd depths).
+const DIM_CAP: u64 = 1 << 32;
+/// Tensor-count / name-length sanity caps for v3 images.
+const COUNT_CAP: u32 = 1 << 20;
+const NAME_CAP: u32 = 4096;
 
 /// Serialize to any writer (v1: a bare [`PackedMatrix`]).
 pub fn write_packed<W: Write>(m: &PackedMatrix, w: &mut W) -> io::Result<()> {
@@ -63,7 +73,22 @@ pub fn save(m: &PackedMatrix, path: impl AsRef<std::path::Path>) -> io::Result<(
 
 pub fn load(path: impl AsRef<std::path::Path>) -> io::Result<PackedMatrix> {
     let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
-    read_packed(&mut f)
+    let m = read_packed(&mut f)?;
+    require_eof(&mut f)?;
+    Ok(m)
+}
+
+/// A file must end exactly where its payload does.  The stream readers
+/// (`read_packed`/`read_weights`) deliberately stop at the payload edge
+/// so records can be concatenated in one stream, but a *file* with
+/// bytes past the payload is corrupt (doubled payload, bad re-pack) and
+/// loading its prefix would silently serve wrong-provenance weights.
+fn require_eof<R: Read>(r: &mut R) -> io::Result<()> {
+    let mut probe = [0u8; 1];
+    if r.read(&mut probe)? != 0 {
+        return Err(invalid("trailing bytes after FPCK payload"));
+    }
+    Ok(())
 }
 
 fn invalid(msg: impl std::fmt::Display) -> io::Error {
@@ -78,12 +103,9 @@ fn write_matrix_body<W: Write>(m: &PackedMatrix, w: &mut W) -> io::Result<()> {
 }
 
 fn read_matrix_body<R: Read>(r: &mut R) -> io::Result<PackedMatrix> {
-    // header fields are untrusted: bound them before any size
-    // arithmetic (padded_len/packed_bytes would overflow on absurd
-    // depths) and never preallocate from a declared size — read up to
-    // the declared length and require it was all actually there, so a
-    // lying ~24-byte header cannot demand gigabytes
-    const DIM_CAP: u64 = 1 << 32;
+    // never preallocate from a declared size — read up to the declared
+    // length and require it was all actually there, so a lying ~24-byte
+    // header cannot demand gigabytes
     let mut b4 = [0u8; 4];
     r.read_exact(&mut b4)?;
     let bits = BitWidth::from_u8(u32::from_le_bytes(b4) as u8).map_err(invalid)?;
@@ -187,7 +209,347 @@ pub fn save_weights(w: &Weights, path: impl AsRef<std::path::Path>) -> io::Resul
 /// Load a [`Weights`] value saved by [`save_weights`] (or a v1 file).
 pub fn load_weights(path: impl AsRef<std::path::Path>) -> io::Result<Weights> {
     let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
-    read_weights(&mut f)
+    let w = read_weights(&mut f)?;
+    require_eof(&mut f)?;
+    Ok(w)
+}
+
+// ---------------------------------------------------------------------------
+// v3: multi-tensor weight images (the zero-copy model-store path)
+// ---------------------------------------------------------------------------
+
+/// One named tensor inside a [`WeightsImage`]: its header fields plus
+/// byte ranges into the shared image buffer (validated at parse time).
+#[derive(Debug, Clone)]
+struct ImageEntry {
+    name: String,
+    kind: u32,
+    bits: BitWidth,
+    rows: usize,
+    k: usize,
+    payload_off: usize,
+    payload_len: usize,
+    /// byte offset of the `rows × i64` row-sum side table (SWAR kind).
+    sums_off: usize,
+}
+
+/// A whole model's weights in one buffer, shared zero-copy.
+///
+/// v3 wire format: magic `FPCK`, version u32 = 3, count u32, then per
+/// tensor: name_len u32, utf-8 name, kind u32, bits u32, rows u64,
+/// k u64, the packed payload, and (kind 1) `rows` i64 row sums.  The
+/// parser walks the buffer once, validates every range, and requires
+/// exact EOF by construction; [`WeightsImage::get`] then hands out
+/// [`Weights`] whose [`PackedMatrix`] *borrows* the image allocation
+/// through [`SharedBytes`] — loading a model copies its weight bytes
+/// zero times (the SWAR side table, `rows × 8` bytes, is decoded per
+/// `get` because i64 alignment forbids aliasing it in place).
+///
+/// The owner is a heap buffer ([`WeightsImage::open`]/`from_bytes`) or,
+/// with the zero-dependency `mmap` feature on Linux, a read-only
+/// private file mapping — residency then costs page-cache, not heap.
+pub struct WeightsImage {
+    owner: Arc<dyn AsRef<[u8]> + Send + Sync>,
+    entries: Vec<ImageEntry>,
+}
+
+impl WeightsImage {
+    /// Parse an image from an owned heap buffer.
+    pub fn from_bytes(buf: Vec<u8>) -> io::Result<Self> {
+        Self::from_owner(Arc::new(buf))
+    }
+
+    /// Load an image file.  With the `mmap` feature on Linux the file
+    /// is mapped read-only (falling back to a heap read on any mmap
+    /// failure); otherwise it is read into a heap buffer.
+    pub fn open(path: impl AsRef<std::path::Path>) -> io::Result<Self> {
+        #[cfg(all(feature = "mmap", target_os = "linux"))]
+        if let Ok(m) = mapped::MappedFile::open(path.as_ref()) {
+            return Self::from_owner(Arc::new(m));
+        }
+        Self::from_bytes(std::fs::read(path)?)
+    }
+
+    /// Parse from any shared owner buffer (heap, mmap, test double).
+    pub fn from_owner(owner: Arc<dyn AsRef<[u8]> + Send + Sync>) -> io::Result<Self> {
+        let mut cur = Cursor { buf: (*owner).as_ref(), pos: 0 };
+        if cur.take(4)? != MAGIC {
+            return Err(invalid("bad magic (not a FPCK file)"));
+        }
+        let version = cur.u32()?;
+        if version != IMAGE_VERSION {
+            return Err(invalid(format!(
+                "unsupported FPCK image version {version} (expected {IMAGE_VERSION})"
+            )));
+        }
+        let count = cur.u32()?;
+        if count > COUNT_CAP {
+            return Err(invalid(format!("implausible FPCK image tensor count {count}")));
+        }
+        let mut entries: Vec<ImageEntry> = Vec::with_capacity(count.min(1024) as usize);
+        for _ in 0..count {
+            let name_len = cur.u32()?;
+            if name_len == 0 || name_len > NAME_CAP {
+                return Err(invalid(format!("implausible FPCK tensor name length {name_len}")));
+            }
+            let name = std::str::from_utf8(cur.take(name_len as usize)?)
+                .map_err(|_| invalid("FPCK tensor name is not utf-8"))?
+                .to_string();
+            if entries.iter().any(|e| e.name == name) {
+                return Err(invalid(format!("duplicate FPCK tensor name {name:?}")));
+            }
+            let kind = cur.u32()?;
+            if kind != KIND_PACKED && kind != KIND_SWAR_PACKED {
+                return Err(invalid(format!("unknown FPCK weights kind {kind}")));
+            }
+            let bits = BitWidth::from_u8(cur.u32()? as u8).map_err(invalid)?;
+            let rows = cur.u64()?;
+            let k = cur.u64()?;
+            if rows > DIM_CAP || k > DIM_CAP {
+                return Err(invalid(format!("implausible FPCK dims {rows}x{k}")));
+            }
+            let (rows, k) = (rows as usize, k as usize);
+            let payload_len = rows
+                .checked_mul(bits.packed_bytes(k))
+                .ok_or_else(|| invalid(format!("implausible FPCK payload for {rows}x{k}")))?;
+            let payload_off = cur.pos;
+            cur.take(payload_len)?;
+            let sums_off = cur.pos;
+            if kind == KIND_SWAR_PACKED {
+                cur.take(rows.checked_mul(8).ok_or_else(|| invalid("row-sum overflow"))?)?;
+            }
+            entries.push(ImageEntry { name, kind, bits, rows, k, payload_off, payload_len, sums_off });
+        }
+        if cur.pos != cur.buf.len() {
+            return Err(invalid(format!(
+                "trailing bytes after FPCK image payload: {} of {} consumed",
+                cur.pos,
+                cur.buf.len()
+            )));
+        }
+        drop(cur);
+        Ok(WeightsImage { owner, entries })
+    }
+
+    /// Resolve one tensor by name as kernel-layout [`Weights`] whose
+    /// matrix bytes alias the image buffer (no payload copy).
+    pub fn get(&self, name: &str) -> Option<Weights> {
+        let e = self.entries.iter().find(|e| e.name == name)?;
+        let m = PackedMatrix::from_shared(
+            SharedBytes::view(self.owner.clone(), e.payload_off, e.payload_len),
+            e.rows,
+            e.k,
+            e.bits,
+        )
+        .expect("image entry validated at parse time");
+        Some(if e.kind == KIND_PACKED {
+            Weights::Packed(m)
+        } else {
+            let buf: &[u8] = (*self.owner).as_ref();
+            let row_sums = (0..e.rows)
+                .map(|i| {
+                    let off = e.sums_off + i * 8;
+                    i64::from_le_bytes(buf[off..off + 8].try_into().unwrap())
+                })
+                .collect();
+            Weights::SwarPacked { m, row_sums }
+        })
+    }
+
+    /// Tensor names in file order.
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.iter().map(|e| e.name.as_str()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Size of the whole image buffer in bytes — what residency costs.
+    pub fn total_bytes(&self) -> usize {
+        (*self.owner).as_ref().len()
+    }
+
+    /// The shared buffer behind every tensor view (zero-copy test hook:
+    /// pair with [`SharedBytes::is_view_of`]).
+    pub fn owner(&self) -> &Arc<dyn AsRef<[u8]> + Send + Sync> {
+        &self.owner
+    }
+
+    /// `(offset, len)` of a tensor's packed payload within the image.
+    pub fn payload_range(&self, name: &str) -> Option<(usize, usize)> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name)
+            .map(|e| (e.payload_off, e.payload_len))
+    }
+}
+
+/// Serialize named tensors as one v3 image.  Same layout support as
+/// [`write_weights`]: the packed kinds round-trip (including the SWAR
+/// row-sum side table); other layouts are rejected with `InvalidInput`.
+pub fn write_image<W: Write>(tensors: &[(&str, &Weights)], w: &mut W) -> io::Result<()> {
+    if tensors.len() as u64 > COUNT_CAP as u64 {
+        return Err(io::Error::new(io::ErrorKind::InvalidInput, "too many tensors for one image"));
+    }
+    w.write_all(MAGIC)?;
+    w.write_all(&IMAGE_VERSION.to_le_bytes())?;
+    w.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    let mut seen: Vec<&str> = Vec::with_capacity(tensors.len());
+    for (name, weights) in tensors {
+        if name.is_empty() || name.len() as u32 > NAME_CAP {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                format!("bad tensor name length {}", name.len()),
+            ));
+        }
+        if seen.contains(name) {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                format!("duplicate tensor name {name:?}"),
+            ));
+        }
+        seen.push(name);
+        w.write_all(&(name.len() as u32).to_le_bytes())?;
+        w.write_all(name.as_bytes())?;
+        match weights {
+            Weights::Packed(m) => {
+                w.write_all(&KIND_PACKED.to_le_bytes())?;
+                write_matrix_body(m, w)?;
+            }
+            Weights::SwarPacked { m, row_sums } => {
+                if row_sums.len() != m.rows() {
+                    return Err(io::Error::new(
+                        io::ErrorKind::InvalidInput,
+                        format!("{} row sums for a {}-row matrix", row_sums.len(), m.rows()),
+                    ));
+                }
+                w.write_all(&KIND_SWAR_PACKED.to_le_bytes())?;
+                write_matrix_body(m, w)?;
+                for s in row_sums {
+                    w.write_all(&s.to_le_bytes())?;
+                }
+            }
+            other => {
+                let layout = match other {
+                    Weights::Ulppack(_) => "ulppack",
+                    Weights::Naive { .. } => "naive",
+                    Weights::F32 { .. } => "f32",
+                    Weights::Packed(_) | Weights::SwarPacked { .. } => unreachable!(),
+                };
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidInput,
+                    format!("unsupported weights layout for serialization: {layout}"),
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// File convenience wrapper for [`write_image`].
+pub fn save_image(tensors: &[(&str, &Weights)], path: impl AsRef<std::path::Path>) -> io::Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    write_image(tensors, &mut f)?;
+    f.flush()
+}
+
+/// Bounds-checked walk over an image buffer.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> io::Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| invalid("truncated FPCK image"))?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> io::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> io::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+/// Read-only private file mappings for the `mmap` feature: hand-rolled
+/// libc FFI so the default build stays dependency-free.  Linux-only;
+/// [`WeightsImage::open`] falls back to a heap read everywhere else.
+#[cfg(all(feature = "mmap", target_os = "linux"))]
+mod mapped {
+    use std::ffi::c_void;
+    use std::io;
+    use std::os::unix::io::AsRawFd;
+
+    const PROT_READ: i32 = 1;
+    const MAP_PRIVATE: i32 = 2;
+
+    extern "C" {
+        fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        fn munmap(addr: *mut c_void, len: usize) -> i32;
+    }
+
+    pub struct MappedFile {
+        ptr: *mut c_void,
+        len: usize,
+    }
+
+    // SAFETY: the mapping is PROT_READ and exclusively owned; the only
+    // access is through the shared `&[u8]` below.
+    unsafe impl Send for MappedFile {}
+    unsafe impl Sync for MappedFile {}
+
+    impl MappedFile {
+        pub fn open(path: &std::path::Path) -> io::Result<Self> {
+            let f = std::fs::File::open(path)?;
+            let len = f.metadata()?.len() as usize;
+            if len == 0 {
+                // mmap(len=0) is EINVAL; an empty file cannot be an image
+                return Err(io::Error::new(io::ErrorKind::InvalidData, "empty FPCK image"));
+            }
+            let ptr = unsafe {
+                mmap(std::ptr::null_mut(), len, PROT_READ, MAP_PRIVATE, f.as_raw_fd(), 0)
+            };
+            if ptr as isize == -1 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(MappedFile { ptr, len })
+        }
+    }
+
+    impl AsRef<[u8]> for MappedFile {
+        fn as_ref(&self) -> &[u8] {
+            unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+        }
+    }
+
+    impl Drop for MappedFile {
+        fn drop(&mut self) {
+            unsafe {
+                munmap(self.ptr, self.len);
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -350,5 +712,150 @@ mod tests {
         // wrong version
         buf[4] = 9;
         assert!(read_packed(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn file_loaders_reject_trailing_garbage() {
+        // corruption table for the strict-EOF check on the file
+        // variants: (suffix appended to a valid file, loader).  The
+        // stream readers stay lenient (concatenated records), but a
+        // file must end exactly at the payload.
+        let dir = std::env::temp_dir();
+        let m = sample(BitWidth::B4);
+        let mut v1 = Vec::new();
+        write_packed(&m, &mut v1).unwrap();
+        let w = Weights::Packed(sample(BitWidth::B2));
+        let mut v2 = Vec::new();
+        write_weights(&w, &mut v2).unwrap();
+        let cases: [(&str, Vec<u8>); 4] = [
+            ("one trailing byte", vec![0u8]),
+            ("trailing run", vec![0xAB; 64]),
+            ("doubled payload (v1)", v1.clone()),
+            ("doubled payload (v2)", v2.clone()),
+        ];
+        for (what, suffix) in &cases {
+            let p1 = dir.join(format!("fullpack_eof_v1_{}.fpck", what.len()));
+            let mut bytes = v1.clone();
+            bytes.extend_from_slice(suffix);
+            std::fs::write(&p1, &bytes).unwrap();
+            assert!(load(&p1).is_err(), "load must reject: {what}");
+            let p2 = dir.join(format!("fullpack_eof_v2_{}.fpck", what.len()));
+            let mut bytes = v2.clone();
+            bytes.extend_from_slice(suffix);
+            std::fs::write(&p2, &bytes).unwrap();
+            assert!(load_weights(&p2).is_err(), "load_weights must reject: {what}");
+            let _ = std::fs::remove_file(p1);
+            let _ = std::fs::remove_file(p2);
+        }
+        // the exact files still load
+        let p = dir.join("fullpack_eof_clean.fpck");
+        std::fs::write(&p, &v1).unwrap();
+        assert_eq!(load(&p).unwrap(), m);
+        std::fs::write(&p, &v2).unwrap();
+        assert!(load_weights(&p).is_ok());
+        let _ = std::fs::remove_file(p);
+    }
+
+    fn swar_sample(bits: BitWidth, rows: usize, k: usize) -> Weights {
+        use crate::kernels::{GemvKernel, KernelRegistry};
+        let kern = KernelRegistry::global()
+            .get(&format!("fullpack-w{}a8-swar", bits.bits()))
+            .expect("swar tier registered");
+        let (lo, hi) = bits.value_range();
+        let vals: Vec<i8> = (0..rows * k)
+            .map(|i| (lo as i32 + (i as i32 % (hi as i32 - lo as i32 + 1))) as i8)
+            .collect();
+        kern.prepare(&vals, rows, k).unwrap()
+    }
+
+    #[test]
+    fn image_roundtrip_is_zero_copy() {
+        let fc = Weights::Packed(sample(BitWidth::B4));
+        let swar = swar_sample(BitWidth::B2, 5, 129);
+        let b8 = Weights::Packed(sample(BitWidth::B8));
+        let mut buf = Vec::new();
+        write_image(&[("fc0", &fc), ("cell0.wx", &swar), ("out", &b8)], &mut buf).unwrap();
+        let img = WeightsImage::from_bytes(buf).unwrap();
+        assert_eq!(img.names(), vec!["fc0", "cell0.wx", "out"]);
+        assert_eq!(img.len(), 3);
+        // every tensor round-trips bit-exactly...
+        let (Some(Weights::Packed(m_fc)), Weights::Packed(m0)) = (img.get("fc0"), &fc) else {
+            panic!("fc0 kind changed")
+        };
+        assert_eq!(&m_fc, m0);
+        let (Some(Weights::SwarPacked { m, row_sums }), Weights::SwarPacked { m: m1, row_sums: rs1 }) =
+            (img.get("cell0.wx"), &swar)
+        else {
+            panic!("cell0.wx lost the SWAR side table")
+        };
+        assert_eq!(&m, m1);
+        assert_eq!(&row_sums, rs1);
+        // ...and borrows the image allocation: payload bytes alias the
+        // one buffer, at the parser's recorded offsets (zero copies)
+        let base = (**img.owner()).as_ref().as_ptr() as usize;
+        for name in ["fc0", "cell0.wx", "out"] {
+            let (off, len) = img.payload_range(name).unwrap();
+            let w = img.get(name).unwrap();
+            let m = match &w {
+                Weights::Packed(m) => m,
+                Weights::SwarPacked { m, .. } => m,
+                _ => unreachable!(),
+            };
+            assert!(m.shared().is_view_of(img.owner()), "{name} must alias the image");
+            assert_eq!(m.bytes().as_ptr() as usize, base + off, "{name} offset");
+            assert_eq!(m.bytes().len(), len, "{name} length");
+        }
+        assert!(img.get("missing").is_none());
+    }
+
+    #[test]
+    fn image_file_roundtrip_and_corruption_table() {
+        let fc = Weights::Packed(sample(BitWidth::B4));
+        let swar = swar_sample(BitWidth::B4, 7, 100);
+        let path = std::env::temp_dir().join("fullpack_test_image.fpck");
+        save_image(&[("a", &fc), ("b", &swar)], &path).unwrap();
+        let img = WeightsImage::open(&path).unwrap();
+        assert_eq!(img.names(), vec!["a", "b"]);
+        assert!(img.total_bytes() > 0);
+        let mut good = std::fs::read(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        // trailing byte → strict-EOF error (exact-consumption parse)
+        let mut bad = good.clone();
+        bad.push(0);
+        assert!(WeightsImage::from_bytes(bad).is_err());
+        // truncation anywhere → error
+        let cut = good.len() - 3;
+        assert!(WeightsImage::from_bytes(good[..cut].to_vec()).is_err());
+        // wrong version (a v2 single-weights file is not an image)
+        let mut single = Vec::new();
+        write_weights(&fc, &mut single).unwrap();
+        assert!(WeightsImage::from_bytes(single).is_err());
+        // unknown kind: corrupt the first entry's kind field
+        // (offset: magic 4 + version 4 + count 4 + name_len 4 + "a" 1)
+        let kind_off = 17;
+        good[kind_off] = 9;
+        assert!(WeightsImage::from_bytes(good).is_err());
+        // duplicate names are rejected at write time
+        assert!(write_image(&[("a", &fc), ("a", &fc)], &mut Vec::new()).is_err());
+        // non-packable layouts too
+        let f32w = Weights::F32 { data: vec![0.0; 4], rows: 2, k: 2 };
+        assert!(write_image(&[("x", &f32w)], &mut Vec::new()).is_err());
+    }
+
+    #[test]
+    fn image_swar_weights_execute_identically() {
+        use crate::kernels::{ActVec, GemvKernel, KernelRegistry};
+        let kern = KernelRegistry::global().get("fullpack-w4a8-swar").unwrap();
+        let w = swar_sample(BitWidth::B4, 5, 129);
+        let mut buf = Vec::new();
+        write_image(&[("m", &w)], &mut buf).unwrap();
+        let img = WeightsImage::from_bytes(buf).unwrap();
+        let loaded = img.get("m").unwrap();
+        let kp = w.k_padded();
+        let a: Vec<i8> = (0..kp).map(|i| ((i % 11) as i8) - 5).collect();
+        let (mut out_orig, mut out_loaded) = (vec![0i32; 5], vec![0i32; 5]);
+        kern.gemv_at(&w, ActVec::I8(&a), &mut out_orig, 0).unwrap();
+        kern.gemv_at(&loaded, ActVec::I8(&a), &mut out_loaded, 0).unwrap();
+        assert_eq!(out_orig, out_loaded);
     }
 }

@@ -283,6 +283,32 @@ pub fn load_model_graph(path: impl AsRef<std::path::Path>) -> Result<ModelGraph>
     parse_model_graph(&text)
 }
 
+/// Compile a model manifest and atomically hot-swap it into a serving
+/// engine under the manifest's `"model"` name (DESIGN.md §14): new
+/// admissions see the new weights immediately, in-flight batches sealed
+/// on the old version drain on the old weights their dispatch guards
+/// hold, and the per-model version counter bumps.  The installed
+/// rebuild closure recompiles *this* manifest's graph, so an eviction
+/// after the swap restores the swapped-in version, never the
+/// registration-time one.  Returns the new version number.
+pub fn swap_model_from_manifest(
+    engine: &crate::coordinator::Engine,
+    path: impl AsRef<std::path::Path>,
+) -> Result<u64> {
+    let graph = load_model_graph(path)?;
+    let name = graph.name.clone();
+    let model = crate::models::CompiledModel::compile(graph.clone())
+        .map_err(|e| anyhow!("swap {name:?}: {e}"))?;
+    let builder: crate::models::ModelBuilder = Box::new(move || {
+        crate::models::CompiledModel::compile(graph.clone())
+            .map(|m| std::sync::Arc::new(m) as std::sync::Arc<dyn crate::models::Model>)
+            .map_err(|e| e.to_string())
+    });
+    engine
+        .swap_model(&name, model, Some(builder))
+        .map_err(|e| anyhow!("swap {name:?}: {e}"))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

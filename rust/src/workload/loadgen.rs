@@ -40,7 +40,9 @@ use crate::coordinator::{
     CostFn, Engine, FaultPlan, Metrics, ModelCounters, Scheduler, ShedReason, SubmitError,
 };
 use crate::costmodel::serving_dispatch_ns;
-use crate::models::{CompiledModel, Model, ModelGraph, ModelRegistry};
+use crate::models::{
+    CompiledModel, Model, ModelBuilder, ModelGraph, ModelRegistry, ModelStore, StoreError,
+};
 use crate::util::error::{anyhow, bail, Result};
 use crate::util::rng::SplitMix64;
 
@@ -58,12 +60,13 @@ pub enum Outcome {
 
 impl Outcome {
     /// Schema label (`completed`/`shed-queue-full`/`shed-over-budget`/
-    /// `error`).
+    /// `shed-cold-model`/`error`).
     pub fn name(&self) -> &'static str {
         match self {
             Outcome::Completed => "completed",
             Outcome::Shed(ShedReason::QueueFull) => "shed-queue-full",
             Outcome::Shed(ShedReason::OverBudget) => "shed-over-budget",
+            Outcome::Shed(ShedReason::ColdModel) => "shed-cold-model",
             Outcome::Error => "error",
         }
     }
@@ -108,8 +111,10 @@ pub struct EngineSnapshot {
     pub batched_dispatches: u64,
     /// `(full, budget, deadline, drained)` batch-flush counts
     pub flushes: (u64, u64, u64, u64),
-    /// `(queue_full, over_budget)` typed shed counts
-    pub sheds: (u64, u64),
+    /// `(queue_full, over_budget, cold_model)` typed shed counts
+    pub sheds: (u64, u64, u64),
+    /// `(loads, evictions, swaps)` model-store counts
+    pub store: (u64, u64, u64),
     /// shard-affinity dispatches past an earlier global deadline
     pub edf_inversions: u64,
     /// dispatches taken from outside the worker's home shard
@@ -134,6 +139,7 @@ impl EngineSnapshot {
             batched_dispatches: m.batched_dispatches.load(Relaxed),
             flushes: m.flush_counts(),
             sheds: m.shed_counts(),
+            store: m.model_store_counts(),
             edf_inversions: m.edf_inversions.load(Relaxed),
             stolen_dispatches: m.stolen_dispatches.load(Relaxed),
             max_queue_depth: m.max_queue_depth.load(Relaxed),
@@ -208,12 +214,42 @@ pub fn run_live(mix: &WorkloadMix, verify: bool) -> Result<RunTrace> {
 pub fn run_live_with(mix: &WorkloadMix, verify: bool, faults: &FaultPlan) -> Result<RunTrace> {
     mix.validate()?;
     let engine = Engine::new_with_faults(mix.engine, faults.clone());
-    // register one compiled instance and keep an independent reference
-    // instance for verification
+    // register the roster and keep an independent reference instance
+    // for verification.  Without a residency budget models register as
+    // bare always-resident instances (the pre-store behavior); with
+    // one they register lazily with a recompiling builder, are
+    // warm-started in roster order (a deterministic initial LRU
+    // state), and can be evicted/reloaded as the working set rotates —
+    // re-admissions of evicted models shed with `ColdModel`.  The
+    // virtual DES drives its own store through the identical sequence.
+    let budgeted = mix.engine.store.budget_bytes.is_some();
     let refs: Vec<CompiledModel> = {
         let mut refs = Vec::with_capacity(mix.models.len());
         for (i, (graph, compiled)) in build_models(mix)?.into_iter().enumerate() {
-            engine.register_model(&mix.models[i].spec.name, compiled);
+            let name = &mix.models[i].spec.name;
+            if budgeted {
+                let hint = compiled.resident_bytes();
+                let g = graph.clone();
+                let builder: ModelBuilder = Box::new(move || {
+                    CompiledModel::compile(g.clone())
+                        .map(|m| std::sync::Arc::new(m) as std::sync::Arc<dyn Model>)
+                        .map_err(|e| e.to_string())
+                });
+                engine
+                    .register_model_lazy(name, hint, builder)
+                    .map_err(|e| anyhow!("registering {name:?}: {e}"))?;
+                // warm start: load in roster order
+                engine
+                    .model(name)
+                    .ok_or_else(|| anyhow!("warm-starting {name:?} failed"))?;
+            } else {
+                engine
+                    .register_model(name, compiled)
+                    .map_err(|e| anyhow!("registering {name:?}: {e}"))?;
+            }
+            if mix.models[i].spec.pin {
+                engine.pin_model(name).map_err(|e| anyhow!("pinning {name:?}: {e}"))?;
+            }
             refs.push(
                 CompiledModel::compile(graph)
                     .map_err(|e| anyhow!("compiling reference: {e}"))?,
@@ -415,7 +451,7 @@ pub fn run_virtual(mix: &WorkloadMix) -> Result<RunTrace> {
 pub fn run_virtual_with(mix: &WorkloadMix, faults: &FaultPlan) -> Result<RunTrace> {
     mix.validate()?;
     let models = build_models(mix)?;
-    let metrics = Metrics::default();
+    let metrics = std::sync::Arc::new(Metrics::default());
     let names: Vec<String> = mix.models.iter().map(|m| m.spec.name.clone()).collect();
     // the same service-time curve CompiledModel::dispatch_cost_ns
     // feeds the live engine's scheduler — shared brain, shared numbers
@@ -429,6 +465,41 @@ pub fn run_virtual_with(mix: &WorkloadMix, faults: &FaultPlan) -> Result<RunTrac
     for (i, name) in names.iter().enumerate() {
         let id = sched.register(name);
         debug_assert_eq!(id, i, "registration order must match mix order");
+    }
+    // a real ModelStore driven through the exact live-engine sequence
+    // (same budget, same registration/warm-start order, same pins, a
+    // pure-peek cost closure in both modes), so residency decisions —
+    // which admissions shed cold, which entries evict — replay
+    // bit-exactly.  The DES builder hands back the same Arc instead of
+    // recompiling: only the *decisions* matter on a virtual clock.
+    let budgeted = mix.engine.store.budget_bytes.is_some();
+    let store = std::sync::Arc::new(ModelStore::new(
+        mix.engine.store.budget_bytes.map(|b| b as usize),
+    ));
+    store.attach_metrics(metrics.clone());
+    for (i, (_, compiled)) in models.into_iter().enumerate() {
+        let name = &names[i];
+        let instance: std::sync::Arc<dyn Model> = std::sync::Arc::new(compiled);
+        if budgeted {
+            let hint = instance.resident_bytes();
+            let builder: ModelBuilder = {
+                let a = instance.clone();
+                Box::new(move || Ok(a.clone()))
+            };
+            store
+                .register_lazy(name, hint, builder)
+                .map_err(|e| anyhow!("registering {name:?}: {e}"))?;
+            store
+                .fetch(name)
+                .map_err(|e| anyhow!("warm-starting {name:?}: {e}"))?;
+        } else {
+            store
+                .register(name, instance)
+                .map_err(|e| anyhow!("registering {name:?}: {e}"))?;
+        }
+        if mix.models[i].spec.pin {
+            store.pin(name).map_err(|e| anyhow!("pinning {name:?}: {e}"))?;
+        }
     }
     let fault_extra_ns: Vec<u64> = names
         .iter()
@@ -481,9 +552,40 @@ pub fn run_virtual_with(mix: &WorkloadMix, faults: &FaultPlan) -> Result<RunTrac
             for req in &plans[client][burst].requests {
                 let index = next_index[client];
                 next_index[client] += 1;
-                // mirror Engine::try_submit exactly: the request
-                // counter includes sheds, which never reach a worker
+                // mirror Engine::try_submit exactly: count the
+                // request (sheds included), then the residency gate,
+                // then scheduler admission
                 metrics.requests.fetch_add(1, Relaxed);
+                match store.admit(&names[req.model]) {
+                    Ok(_) => {}
+                    Err(StoreError::Cold(_)) => {
+                        metrics.record_shed(&names[req.model], ShedReason::ColdModel);
+                        records.push(RequestRecord {
+                            client,
+                            index,
+                            model: req.model,
+                            submit_ns: t,
+                            latency_us: 0,
+                            outcome: Outcome::Shed(ShedReason::ColdModel),
+                        });
+                        continue;
+                    }
+                    Err(e) => {
+                        // unreachable for a registered roster, but
+                        // mirror the live error accounting anyway
+                        let _ = e;
+                        metrics.errors.fetch_add(1, Relaxed);
+                        records.push(RequestRecord {
+                            client,
+                            index,
+                            model: req.model,
+                            submit_ns: t,
+                            latency_us: 0,
+                            outcome: Outcome::Error,
+                        });
+                        continue;
+                    }
+                }
                 match sched.submit(req.model, QItem { client, index }, t) {
                     Ok(a) => {
                         metrics.observe_queue_depth(&names[req.model], a.depth as u64);
@@ -528,6 +630,11 @@ pub fn run_virtual_with(mix: &WorkloadMix, faults: &FaultPlan) -> Result<RunTrac
                 }
                 let n = d.entries.len();
                 let name = &names[d.model];
+                // mirror the live dispatch guard: counts the
+                // transparent reload if the model was evicted between
+                // admission and dispatch (dropped immediately — the
+                // virtual forward is instantaneous in event time)
+                let _ = store.begin_dispatch(name);
                 let svc = sched.modeled_cost_ns(d.model, n) + fault_extra_ns[d.model];
                 if n >= 2 {
                     metrics.record_batched_dispatch(name, n as u64);
@@ -654,7 +761,7 @@ mod tests {
         assert_eq!(s.errors, 0);
         assert_eq!(s.batched_requests + s.singleton_requests, completed);
         // typed sheds reconcile with the records
-        assert_eq!(s.sheds.0 + s.sheds.1, shed);
+        assert_eq!(s.sheds.0 + s.sheds.1 + s.sheds.2, shed);
         // no force-drain in the virtual policy
         assert_eq!(s.flushes.3, 0);
         // the batch-size histogram covers every served request
@@ -692,7 +799,7 @@ mod tests {
             "sheds still count as accepted requests"
         );
         assert_eq!(
-            trace.snapshot.sheds.0 + trace.snapshot.sheds.1,
+            trace.snapshot.sheds.0 + trace.snapshot.sheds.1 + trace.snapshot.sheds.2,
             shed as u64,
             "typed shed counters reconcile"
         );

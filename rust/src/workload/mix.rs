@@ -492,6 +492,14 @@ pub struct MixSpace {
     pub seq_fill: (f64, f64),
     /// models-per-mix range (inclusive; clamped to the zoo size)
     pub models_per_mix: (usize, usize),
+    /// Zipf popularity exponent range: when the sampled `s > 0`, the
+    /// drawn per-model traffic weights are reshaped to `1 / rank^s`
+    /// (roster order = popularity rank), concentrating traffic on a
+    /// head of hot models — the model-churn axis that exercises the
+    /// store's residency budget (cold sheds, LRU rotation).  The
+    /// default `(0, 0)` disables the axis and leaves sampled weights
+    /// untouched, so pre-store seeds resample byte-identically.
+    pub zipf_s: (f64, f64),
     /// roster entries mixes draw their composition from
     pub zoo: Vec<ModelSpec>,
     /// engine under test for every sampled mix
@@ -508,6 +516,7 @@ impl MixSpace {
             variant: crate::pack::Variant::parse(variant).unwrap(),
             size: crate::models::ModelSize::Tiny,
             seed: 7,
+            pin: false,
         };
         MixSpace {
             clients: (1, 3),
@@ -526,6 +535,7 @@ impl MixSpace {
             burst_max: 4,
             seq_fill: (0.5, 1.0),
             models_per_mix: (1, 3),
+            zipf_s: (0.0, 0.0),
             zoo: vec![
                 spec("deepspeech-tiny", "deepspeech", "w4a8"),
                 spec("kws-tiny", "keyword-spotter", "w2a8"),
@@ -613,6 +623,10 @@ impl MixSpace {
             bail!("space seq_fill: range must lie in (0, 1]");
         }
         s.models_per_mix = usize_pair("models_per_mix", s.models_per_mix)?;
+        s.zipf_s = f64_pair("zipf_s", s.zipf_s)?;
+        if s.zipf_s.0 < 0.0 {
+            bail!("space zipf_s: lo must be >= 0");
+        }
         if let Some(arr) = j.get("zoo").and_then(Json::as_arr) {
             let mut zoo = Vec::with_capacity(arr.len());
             for (i, m) in arr.iter().enumerate() {
@@ -691,13 +705,25 @@ impl MixSpace {
             let j = r.usize_in(i, idx.len() - 1);
             idx.swap(i, j);
         }
-        let models: Vec<MixModel> = idx[..want]
+        let mut models: Vec<MixModel> = idx[..want]
             .iter()
             .map(|&zi| MixModel {
                 spec: self.zoo[zi].clone(),
                 weight: round_to(r.f64_in(0.5, 2.0), 2),
             })
             .collect();
+        // Zipf popularity axis (appended after every pre-existing draw
+        // so disabled spaces resample byte-identically): reshape the
+        // traffic weights to 1/rank^s in sampled roster order, giving
+        // the head models the traffic and the tail the cold starts.
+        if self.zipf_s.1 > 0.0 {
+            let s = round_to(r.f64_in(self.zipf_s.0, self.zipf_s.1), 2);
+            if s > 0.0 {
+                for (rank, m) in models.iter_mut().enumerate() {
+                    m.weight = round_to(1.0 / ((rank + 1) as f64).powf(s), 4).max(0.0001);
+                }
+            }
+        }
         WorkloadMix {
             name: format!("mix_{index:03}"),
             seed: mix_seed,
@@ -907,5 +933,55 @@ mod tests {
         assert!(MixSpace::parse(r#"{"arrivals": []}"#).is_err());
         assert!(MixSpace::parse(r#"{"seq_fill": [0.0, 1.0]}"#).is_err());
         assert!(MixSpace::parse(r#"{"models_per_mix": [0, 1]}"#).is_err());
+        assert!(MixSpace::parse(r#"{"zipf_s": [-0.5, 1.0]}"#).is_err());
+    }
+
+    #[test]
+    fn zipf_axis_reshapes_weights_and_disabled_space_is_unchanged() {
+        // disabled axis: the default space must sample exactly as it
+        // did before the axis existed (the zipf draw only happens when
+        // the range is enabled, and it trails every other draw)
+        let plain = MixSpace::default_space();
+        assert_eq!(plain.zipf_s, (0.0, 0.0));
+        let baseline = plain.sample_all(7, 4);
+        for m in &baseline {
+            for mm in &m.models {
+                assert!((0.5..=2.0).contains(&mm.weight), "{}", mm.weight);
+            }
+        }
+
+        // enabled axis parses, samples deterministically, and yields
+        // strictly non-increasing 1/rank^s weights over the roster
+        let zs = MixSpace::parse(
+            r#"{"models_per_mix": [3, 3], "zipf_s": [1.0, 1.2]}"#,
+        )
+        .unwrap();
+        assert_eq!(zs.zipf_s, (1.0, 1.2));
+        let a = zs.sample_all(7, 4);
+        assert_eq!(a, zs.sample_all(7, 4));
+        for m in &a {
+            assert_eq!(m.models.len(), 3);
+            for w in m.models.windows(2) {
+                assert!(w[0].weight > w[1].weight, "zipf weights must decay");
+            }
+            assert_eq!(m.models[0].weight, 1.0); // rank 1 is always 1/1^s
+            assert!(m.models.iter().all(|mm| mm.weight > 0.0));
+            m.validate().unwrap();
+            // reshaped weights survive a serialize/parse roundtrip
+            assert_eq!(&WorkloadMix::parse(&m.to_json()).unwrap(), m);
+        }
+
+        // everything drawn before the zipf axis is untouched by it:
+        // same seed, same space apart from zipf -> identical arrivals,
+        // clients, and roster selection
+        let zs_off = MixSpace::parse(r#"{"models_per_mix": [3, 3]}"#).unwrap();
+        let b = zs_off.sample_all(7, 4);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.clients, y.clients);
+            assert_eq!(x.arrival, y.arrival);
+            let xs: Vec<_> = x.models.iter().map(|m| &m.spec.name).collect();
+            let ys: Vec<_> = y.models.iter().map(|m| &m.spec.name).collect();
+            assert_eq!(xs, ys);
+        }
     }
 }

@@ -29,7 +29,8 @@
 //!    p50/p95/p99, throughput, typed shed/error counts, flush-reason
 //!    and dispatch splits, queue occupancy and EDF inversions,
 //!    reconciled against [`crate::coordinator::Metrics`] and emitted
-//!    as the `bench-serve/v2` schema (`BENCH_serve.json`).
+//!    as the `bench-serve/v3` schema (`BENCH_serve.json`), model-store
+//!    residency counters (cold sheds, loads/evictions/swaps) included.
 #![warn(missing_docs)]
 
 pub mod arrivals;

@@ -1,9 +1,13 @@
 //! Report layer: aggregate one run's [`RunTrace`] into a [`MixReport`]
-//! and render sweeps as the `bench-serve/v2` document
+//! and render sweeps as the `bench-serve/v3` document
 //! (`BENCH_serve.json`), sibling of `bench-kernels/v1` and
 //! `bench-gemm/v2` (`util::bench`).  v2 (over v1) carries the admission
 //! scheduler's policy signals: cost-model `Budget` flushes, typed shed
 //! splits, queue-occupancy high-water marks and EDF inversions/steals.
+//! v3 (over v2) carries the model store's residency signals
+//! (DESIGN.md §14): the cold-model shed split and the engine-wide
+//! load/eviction/hot-swap counts, all reconciled against the engine's
+//! counters like every other field.
 //!
 //! Percentiles here are **exact** nearest-rank over the raw per-request
 //! latencies — the sort oracle — not the bucketed approximation the
@@ -80,6 +84,8 @@ pub struct MixReport {
     pub shed_queue_full: u64,
     /// sheds typed [`ShedReason::OverBudget`]
     pub shed_over_budget: u64,
+    /// sheds typed [`ShedReason::ColdModel`] (residency misses)
+    pub shed_cold_model: u64,
     /// exact nearest-rank p50 latency (µs)
     pub p50_us: u64,
     /// exact nearest-rank p95 latency (µs)
@@ -108,6 +114,12 @@ pub struct MixReport {
     pub stolen_dispatches: u64,
     /// engine-wide high-water per-model queue depth
     pub max_queue_depth: u64,
+    /// model-store cold/eager loads over the run
+    pub store_loads: u64,
+    /// model-store LRU evictions over the run
+    pub store_evictions: u64,
+    /// model-store atomic hot-swaps over the run
+    pub store_swaps: u64,
     /// per-model breakdown, in mix composition order
     pub per_model: Vec<ModelLine>,
 }
@@ -129,7 +141,8 @@ pub fn build_report(mix: &WorkloadMix, trace: &RunTrace) -> Result<MixReport> {
     let errors = count(Outcome::Error);
     let shed_queue_full = count(Outcome::Shed(ShedReason::QueueFull));
     let shed_over_budget = count(Outcome::Shed(ShedReason::OverBudget));
-    let shed = shed_queue_full + shed_over_budget;
+    let shed_cold_model = count(Outcome::Shed(ShedReason::ColdModel));
+    let shed = shed_queue_full + shed_over_budget + shed_cold_model;
     let s = &trace.snapshot;
     if s.requests != issued {
         bail!("engine accepted {} requests but the trace issued {issued}", s.requests);
@@ -140,10 +153,10 @@ pub fn build_report(mix: &WorkloadMix, trace: &RunTrace) -> Result<MixReport> {
     if s.errors != errors {
         bail!("engine errored {} but the trace records {errors}", s.errors);
     }
-    if s.sheds != (shed_queue_full, shed_over_budget) {
+    if s.sheds != (shed_queue_full, shed_over_budget, shed_cold_model) {
         bail!(
-            "engine shed {:?} (queue-full, over-budget) but the trace records ({shed_queue_full}, \
-             {shed_over_budget})",
+            "engine shed {:?} (queue-full, over-budget, cold-model) but the trace records \
+             ({shed_queue_full}, {shed_over_budget}, {shed_cold_model})",
             s.sheds
         );
     }
@@ -196,11 +209,14 @@ pub fn build_report(mix: &WorkloadMix, trace: &RunTrace) -> Result<MixReport> {
             .iter()
             .filter(|r| r.model == mi && r.outcome.is_shed())
             .count() as u64;
-        if counters.sheds_queue_full + counters.sheds_over_budget != model_shed {
+        if counters.sheds_queue_full + counters.sheds_over_budget + counters.sheds_cold_model
+            != model_shed
+        {
             bail!(
-                "model {name:?}: engine shed {}+{} but the trace records {model_shed}",
+                "model {name:?}: engine shed {}+{}+{} but the trace records {model_shed}",
                 counters.sheds_queue_full,
-                counters.sheds_over_budget
+                counters.sheds_over_budget,
+                counters.sheds_cold_model
             );
         }
         let mean_us = if lat.is_empty() {
@@ -247,6 +263,7 @@ pub fn build_report(mix: &WorkloadMix, trace: &RunTrace) -> Result<MixReport> {
         shed,
         shed_queue_full,
         shed_over_budget,
+        shed_cold_model,
         p50_us: percentile(&lat, 0.50),
         p95_us: percentile(&lat, 0.95),
         p99_us: percentile(&lat, 0.99),
@@ -261,11 +278,14 @@ pub fn build_report(mix: &WorkloadMix, trace: &RunTrace) -> Result<MixReport> {
         edf_inversions: s.edf_inversions,
         stolen_dispatches: s.stolen_dispatches,
         max_queue_depth: s.max_queue_depth,
+        store_loads: s.store.0,
+        store_evictions: s.store.1,
+        store_swaps: s.store.2,
         per_model,
     })
 }
 
-/// Render the `BENCH_serve.json` document (schema `bench-serve/v2`).
+/// Render the `BENCH_serve.json` document (schema `bench-serve/v3`).
 /// Provenance follows the repo convention (`util::bench`): `source`
 /// says how the numbers were obtained (`"live"` from a real engine run,
 /// `"virtual-costmodel"` from the virtual clock), `host` and `note` are
@@ -278,7 +298,7 @@ pub fn serve_records_json(
 ) -> String {
     let mut out = String::new();
     out.push_str("{\n");
-    out.push_str("  \"schema\": \"bench-serve/v2\",\n");
+    out.push_str("  \"schema\": \"bench-serve/v3\",\n");
     out.push_str(&format!("  \"source\": \"{}\",\n", json_escape(source)));
     out.push_str(&format!("  \"host\": \"{}\",\n", json_escape(host)));
     out.push_str(&format!("  \"note\": \"{}\",\n", json_escape(note)));
@@ -311,12 +331,14 @@ pub fn serve_records_json(
             "    {{\"mix\": \"{}\", \"seed\": {}, \"mode\": \"{}\", \"arrival\": \"{}\", \
              \"clients\": {}, \"issued\": {}, \"completed\": {}, \"errors\": {}, \
              \"shed\": {}, \"shed_queue_full\": {}, \"shed_over_budget\": {}, \
+             \"shed_cold_model\": {}, \
              \"p50_us\": {}, \"p95_us\": {}, \"p99_us\": {}, \"max_us\": {}, \
              \"mean_us\": {:.1}, \"throughput_rps\": {:.1}, \"wall_ms\": {:.3}, \
              \"batched_requests\": {}, \"singleton_requests\": {}, \"batched_dispatches\": {}, \
              \"flushes_full\": {}, \"flushes_budget\": {}, \"flushes_deadline\": {}, \
              \"flushes_drained\": {}, \"edf_inversions\": {}, \"stolen_dispatches\": {}, \
-             \"max_queue_depth\": {}, \"models\": [{}]}}{}\n",
+             \"max_queue_depth\": {}, \"store_loads\": {}, \"store_evictions\": {}, \
+             \"store_swaps\": {}, \"models\": [{}]}}{}\n",
             json_escape(&r.mix),
             r.seed,
             json_escape(&r.mode),
@@ -328,6 +350,7 @@ pub fn serve_records_json(
             r.shed,
             r.shed_queue_full,
             r.shed_over_budget,
+            r.shed_cold_model,
             r.p50_us,
             r.p95_us,
             r.p99_us,
@@ -345,6 +368,9 @@ pub fn serve_records_json(
             r.edf_inversions,
             r.stolen_dispatches,
             r.max_queue_depth,
+            r.store_loads,
+            r.store_evictions,
+            r.store_swaps,
             models.join(", "),
             if i + 1 < reports.len() { "," } else { "" },
         ));
@@ -400,7 +426,10 @@ mod tests {
         let report = build_report(&mix, &trace).unwrap();
         assert_eq!(report.issued, mix.total_requests() as u64);
         assert_eq!(report.completed + report.errors + report.shed, report.issued);
-        assert_eq!(report.shed, report.shed_queue_full + report.shed_over_budget);
+        assert_eq!(
+            report.shed,
+            report.shed_queue_full + report.shed_over_budget + report.shed_cold_model
+        );
         assert_eq!(report.mode, "virtual");
         assert!(report.p50_us <= report.p95_us && report.p95_us <= report.p99_us);
         assert!(report.p99_us <= report.max_us);
@@ -412,15 +441,19 @@ mod tests {
         // the document parses back with the declared schema
         let doc = serve_records_json("virtual-costmodel", "test", "unit test", &[report]);
         let j = Json::parse(&doc).unwrap();
-        assert_eq!(j.get("schema").and_then(Json::as_str), Some("bench-serve/v2"));
+        assert_eq!(j.get("schema").and_then(Json::as_str), Some("bench-serve/v3"));
         let recs = j.get("records").and_then(Json::as_arr).unwrap();
         assert_eq!(recs.len(), 1);
         assert_eq!(recs[0].get("mix").and_then(Json::as_str), Some("mix_000"));
         assert!(recs[0].get("p99_us").and_then(Json::as_f64).is_some());
         assert!(recs[0].get("flushes_budget").and_then(Json::as_f64).is_some());
         assert!(recs[0].get("shed_queue_full").and_then(Json::as_f64).is_some());
+        assert!(recs[0].get("shed_cold_model").and_then(Json::as_f64).is_some());
         assert!(recs[0].get("edf_inversions").and_then(Json::as_f64).is_some());
         assert!(recs[0].get("max_queue_depth").and_then(Json::as_f64).is_some());
+        assert!(recs[0].get("store_loads").and_then(Json::as_f64).is_some());
+        assert!(recs[0].get("store_evictions").and_then(Json::as_f64).is_some());
+        assert!(recs[0].get("store_swaps").and_then(Json::as_f64).is_some());
         assert_eq!(
             recs[0].get("models").and_then(Json::as_arr).unwrap().len(),
             mix.models.len()

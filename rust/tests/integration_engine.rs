@@ -4,7 +4,7 @@
 
 use fullpack::coordinator::{
     Engine, EngineConfig, FlushReason, RouterConfig, Scheduler, SchedulerConfig, ShedReason,
-    SubmitError,
+    StoreConfig, SubmitError,
 };
 use fullpack::models::{DeepSpeech, DeepSpeechConfig};
 use fullpack::pack::Variant;
@@ -26,11 +26,13 @@ fn engine_with(variant: &str, workers: usize, max_queue: usize) -> Engine {
             ..SchedulerConfig::default()
         },
         router: RouterConfig::default(),
+        store: StoreConfig::default(),
     });
     e.register_model(
         "ds",
         DeepSpeech::new(DeepSpeechConfig::TINY, Variant::parse(variant).unwrap(), 11),
-    );
+    )
+    .unwrap();
     e
 }
 
@@ -55,7 +57,8 @@ fn multiple_models_coexist() {
     e.register_model(
         "ds-w1a1",
         DeepSpeech::new(DeepSpeechConfig::TINY, Variant::parse("w1a1").unwrap(), 11),
-    );
+    )
+    .unwrap();
     let f = frames(DeepSpeechConfig::TINY);
     let a = e.infer("ds", f.clone()).unwrap();
     let b = e.infer("ds-w1a1", f).unwrap();
@@ -67,11 +70,22 @@ fn model_hot_swap() {
     let e = engine_with("w4a8", 1, 64);
     let f = frames(DeepSpeechConfig::TINY);
     let before = e.infer("ds", f.clone()).unwrap().logits;
-    // replace the model under the same name (new seed)
-    e.register_model(
-        "ds",
-        DeepSpeech::new(DeepSpeechConfig::TINY, Variant::parse("w4a8").unwrap(), 99),
-    );
+    // silent replacement by re-registration is refused; replacing a
+    // live model is the explicit versioned swap (DESIGN.md §14)
+    assert!(e
+        .register_model(
+            "ds",
+            DeepSpeech::new(DeepSpeechConfig::TINY, Variant::parse("w4a8").unwrap(), 99),
+        )
+        .is_err());
+    let v = e
+        .swap_model(
+            "ds",
+            DeepSpeech::new(DeepSpeechConfig::TINY, Variant::parse("w4a8").unwrap(), 99),
+            None,
+        )
+        .unwrap();
+    assert_eq!(v, 2, "first swap of a v1 registration");
     let after = e.infer("ds", f).unwrap().logits;
     assert_ne!(before, after, "hot-swapped weights take effect");
 }
@@ -154,11 +168,13 @@ fn producer_threads_every_reply_exactly_once_and_dispatch_counts_sum() {
             ..SchedulerConfig::default()
         },
         router: RouterConfig::default(),
+        store: StoreConfig::default(),
     });
     e.register_model(
         "ds",
         DeepSpeech::new(DeepSpeechConfig::TINY, Variant::parse("w4a8").unwrap(), 11),
-    );
+    )
+    .unwrap();
     let e = std::sync::Arc::new(e);
     let f = frames(DeepSpeechConfig::TINY);
     let baseline = e.infer("ds", f.clone()).unwrap().logits;
@@ -221,11 +237,13 @@ fn batched_dispatch_replies_match_singleton_results() {
             ..SchedulerConfig::default()
         },
         router: RouterConfig::default(),
+        store: StoreConfig::default(),
     });
     e.register_model(
         "ds",
         DeepSpeech::new(DeepSpeechConfig::TINY, Variant::parse("w2a8").unwrap(), 11),
-    );
+    )
+    .unwrap();
     let f = frames(DeepSpeechConfig::TINY);
     // distinct inputs so a scatter bug (column/request swap) is visible
     let inputs: Vec<Vec<f32>> = (0..4)

@@ -10,7 +10,7 @@
 //!   through the one `Model` trait, with exactly-once replies and
 //!   per-model dispatch metrics that sum to the request totals.
 
-use fullpack::coordinator::{Engine, EngineConfig, RouterConfig, SchedulerConfig};
+use fullpack::coordinator::{Engine, EngineConfig, RouterConfig, SchedulerConfig, StoreConfig};
 use fullpack::models::{
     deepspeech_graph, CompiledModel, DeepSpeech, DeepSpeechConfig, Model, ModelRegistry,
     ModelSize,
@@ -178,11 +178,12 @@ fn engine_serves_mixed_zoo_models_exactly_once_with_per_model_metrics() {
             ..SchedulerConfig::default()
         },
         router: RouterConfig::default(),
+        store: StoreConfig::default(),
     });
     // three distinct topologies behind the one Model trait
     let zoo = ["deepspeech", "mlp", "keyword-spotter"];
     for name in zoo {
-        e.register_model(name, tiny_compiled(name, "w4a8", 11));
+        e.register_model(name, tiny_compiled(name, "w4a8", 11)).unwrap();
     }
     assert_eq!(e.model_names().len(), 3);
     let per_model = 8usize;
@@ -241,9 +242,10 @@ fn mixed_flush_groups_by_model_and_stays_bit_identical() {
             ..SchedulerConfig::default()
         },
         router: RouterConfig::default(),
+        store: StoreConfig::default(),
     });
-    e.register_model("ds", tiny_compiled("deepspeech", "w2a8", 5));
-    e.register_model("kws", tiny_compiled("keyword-spotter", "w2a8", 5));
+    e.register_model("ds", tiny_compiled("deepspeech", "w2a8", 5)).unwrap();
+    e.register_model("kws", tiny_compiled("keyword-spotter", "w2a8", 5)).unwrap();
     let ds_len = e.model("ds").unwrap().input_len();
     let kws_len = e.model("kws").unwrap().input_len();
     let mut subs = Vec::new();
@@ -269,8 +271,8 @@ fn legacy_and_compiled_models_coexist_in_one_engine() {
     let e = Engine::new(EngineConfig::default());
     let cfg = DeepSpeechConfig::TINY;
     let v = Variant::parse("w4a8").unwrap();
-    e.register_model("legacy", DeepSpeech::new(cfg, v, 7));
-    e.register_model("graph", tiny_compiled("deepspeech", "w4a8", 7));
+    e.register_model("legacy", DeepSpeech::new(cfg, v, 7)).unwrap();
+    e.register_model("graph", tiny_compiled("deepspeech", "w4a8", 7)).unwrap();
     let f = frames_for(cfg.time_steps * cfg.n_input, 9);
     let a = e.infer("legacy", f.clone()).unwrap().logits;
     let b = e.infer("graph", f).unwrap().logits;

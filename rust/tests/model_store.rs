@@ -1,0 +1,334 @@
+//! Model-store battery (DESIGN.md §14): the multi-tenant residency /
+//! hot-swap contract under concurrent load.
+//!
+//! - **eviction storm** — N producer threads against a 100-model
+//!   synthetic zoo on a budget that fits ~8 resident models: every
+//!   accepted request replies exactly once, every cold admission is a
+//!   typed shed whose retry lands warm, the pinned model is never
+//!   evicted, and the store's load/eviction counters reconcile with
+//!   [`Metrics::model_store_counts`] and with the clients' tallies;
+//! - **hot-swap atomicity** — swapping under producer load yields only
+//!   whole versions: every reply bit-matches the v1 or the v2
+//!   reference forward, never a torn mix, and the version counter and
+//!   swap metrics account for exactly one flip;
+//! - **in-flight drain** — a dispatch whose guard was taken before the
+//!   swap finishes bit-exact on the v1 weights it captured, while the
+//!   next dispatch after the swap serves v2.
+
+use std::sync::atomic::Ordering::Relaxed;
+use std::sync::Arc;
+use std::time::Duration;
+
+use fullpack::coordinator::request::{LayerTiming, OpDesc};
+use fullpack::coordinator::{
+    Engine, EngineConfig, RouterConfig, SchedulerConfig, ShedReason, StoreConfig, SubmitError,
+};
+use fullpack::models::{
+    synthetic_roster, CompiledModel, Model, ModelBuilder, ModelRegistry, ModelSize,
+};
+use fullpack::pack::Variant;
+use fullpack::util::rng::SplitMix64;
+
+const REPLY_BOUND: Duration = Duration::from_secs(30);
+
+fn v(s: &str) -> Variant {
+    Variant::parse(s).unwrap()
+}
+
+fn tiny_compiled(name: &str, seed: u64) -> CompiledModel {
+    let g = ModelRegistry::global().build(name, ModelSize::Tiny, v("w4a8"), seed).unwrap();
+    CompiledModel::compile(g).unwrap()
+}
+
+#[test]
+fn eviction_storm_exactly_once_and_counters_reconcile() {
+    const ZOO_N: usize = 100;
+    const PRODUCERS: usize = 4;
+    const PER_PRODUCER: usize = 40;
+    let roster = synthetic_roster(ZOO_N, ModelSize::Tiny, v("w4a8"), 7);
+    // topology cycle is deepspeech/mlp/keyword-spotter: byte size and
+    // input length depend on topology only, so probe each base once
+    let probes: Vec<CompiledModel> =
+        (0..3).map(|i| CompiledModel::compile(roster[i].1.clone()).unwrap()).collect();
+    let sizes: Vec<usize> = probes.iter().map(|m| m.resident_bytes()).collect();
+    let lens: Vec<usize> = probes.iter().map(|m| m.input_len()).collect();
+    // budget: exactly the first eight roster models resident at once
+    let budget: usize = (0..8).map(|i| sizes[i % 3]).sum();
+    assert!(sizes.iter().all(|&b| b > 0), "tiny models must charge bytes");
+
+    let e = Engine::new(EngineConfig {
+        workers: 2,
+        sched: SchedulerConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            max_queue: 64,
+            slo: Duration::from_secs(5),
+            ..SchedulerConfig::default()
+        },
+        router: RouterConfig::default(),
+        store: StoreConfig { budget_bytes: Some(budget as u64) },
+    });
+    let names: Vec<String> = roster.iter().map(|(n, _)| n.clone()).collect();
+    for (i, (name, graph)) in roster.into_iter().enumerate() {
+        let builder: ModelBuilder = Box::new(move || {
+            CompiledModel::compile(graph.clone())
+                .map(|m| Arc::new(m) as Arc<dyn Model>)
+                .map_err(|e| e.to_string())
+        });
+        e.register_model_lazy(&name, sizes[i % 3], builder).unwrap();
+    }
+    e.pin_model(&names[0]).unwrap(); // eager load, evict-exempt
+
+    let e = Arc::new(e);
+    let mut handles = Vec::new();
+    for p in 0..PRODUCERS {
+        let e = Arc::clone(&e);
+        let names = names.clone();
+        let lens = lens.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = SplitMix64::stream(17, p as u64);
+            let (mut attempts, mut cold, mut other_shed) = (0u64, 0u64, 0u64);
+            let mut rxs = Vec::new();
+            for _ in 0..PER_PRODUCER {
+                let idx = rng.usize_in(0, ZOO_N - 1);
+                let frames = vec![0.25f32; lens[idx % 3]];
+                let mut tries = 0;
+                loop {
+                    attempts += 1;
+                    tries += 1;
+                    match e.try_submit(&names[idx], frames.clone()) {
+                        Ok(rx) => {
+                            rxs.push(rx);
+                            break;
+                        }
+                        Err(SubmitError::Rejected(r)) if r.reason == ShedReason::ColdModel => {
+                            // the shed itself performed the load: the
+                            // retry is warm unless concurrent loads
+                            // evicted it again in the window
+                            cold += 1;
+                            assert!(r.retry_after_us >= 1, "cold shed without retry hint");
+                            assert_eq!(r.depth, 0, "cold sheds happen before enqueue");
+                            assert!(tries <= 100, "cold-retry livelock on {:?}", names[idx]);
+                        }
+                        Err(SubmitError::Rejected(_)) => {
+                            other_shed += 1;
+                            break;
+                        }
+                        Err(err) => panic!("roster model refused: {err}"),
+                    }
+                }
+            }
+            let mut ids = Vec::new();
+            for rx in rxs {
+                let r = rx
+                    .recv_timeout(REPLY_BOUND)
+                    .expect("accepted requests always reply")
+                    .expect("well-formed requests succeed");
+                assert!(r.logits.iter().all(|x| x.is_finite()));
+                ids.push(r.id);
+            }
+            (attempts, cold, other_shed, ids)
+        }));
+    }
+    let (mut attempts, mut cold, mut other_shed) = (0u64, 0u64, 0u64);
+    let mut all_ids = Vec::new();
+    for h in handles {
+        let (a, c, o, ids) = h.join().unwrap();
+        attempts += a;
+        cold += c;
+        other_shed += o;
+        all_ids.extend(ids);
+    }
+    // exactly once: every accepted request answered, no id twice
+    let accepted = attempts - cold - other_shed;
+    all_ids.sort_unstable();
+    all_ids.dedup();
+    assert_eq!(all_ids.len() as u64, accepted, "duplicate or lost replies");
+    assert!(cold > 0, "a 100-model zoo on an 8-model budget must shed cold");
+
+    let m = e.metrics();
+    assert_eq!(m.requests.load(Relaxed), attempts, "every attempt counted");
+    assert_eq!(m.completed.load(Relaxed), accepted);
+    assert_eq!(m.errors.load(Relaxed), 0);
+    let (qf, ob, cm) = m.shed_counts();
+    assert_eq!(cm, cold, "typed cold sheds reconcile with client tallies");
+    assert_eq!(qf + ob, other_shed);
+
+    // store counters reconcile with metrics, and the budget held
+    let s = e.store().stats();
+    assert_eq!(s.models, ZOO_N);
+    assert!(s.evictions > 0, "the storm never hit the budget");
+    assert!(s.loads >= s.evictions, "can't evict what was never loaded");
+    let (loads, evictions, swaps) = m.model_store_counts();
+    assert_eq!((s.loads, s.evictions, 0), (loads, evictions, swaps));
+
+    // the pinned model rode out the whole storm resident
+    let pinned = e.store().entry_stats(&names[0]).unwrap();
+    assert!(pinned.pinned && pinned.resident);
+    assert_eq!(pinned.evictions, 0, "pinned models are never evicted");
+
+    let e = Arc::try_unwrap(e).ok().expect("all producers joined");
+    let store = Arc::clone(e.store());
+    e.shutdown();
+    // drained: no dispatch holds remain, and the modeled budget holds
+    let s = store.stats();
+    assert!(
+        s.resident_bytes <= budget,
+        "post-drain residency {} exceeds budget {}",
+        s.resident_bytes,
+        budget
+    );
+    assert!(store.per_entry().iter().all(|r| r.in_flight == 0));
+}
+
+#[test]
+fn hot_swap_under_load_yields_only_whole_versions() {
+    const PRODUCERS: usize = 3;
+    const PER_PRODUCER: usize = 30;
+    let e = Engine::new(EngineConfig {
+        workers: 2,
+        sched: SchedulerConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            max_queue: 256,
+            slo: Duration::from_secs(5),
+            ..SchedulerConfig::default()
+        },
+        router: RouterConfig::default(),
+        store: StoreConfig::default(),
+    });
+    e.register_model("m", tiny_compiled("deepspeech", 1)).unwrap();
+    let len = e.model("m").unwrap().input_len();
+    let input = vec![0.1f32; len];
+    let ref1 = e.infer("m", input.clone()).unwrap().logits;
+
+    let e = Arc::new(e);
+    let mut handles = Vec::new();
+    for _ in 0..PRODUCERS {
+        let e = Arc::clone(&e);
+        let input = input.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut replies = Vec::new();
+            let rxs: Vec<_> = (0..PER_PRODUCER)
+                .map(|_| e.try_submit("m", input.clone()).expect("queue sized for the load"))
+                .collect();
+            for rx in rxs {
+                replies.push(
+                    rx.recv_timeout(REPLY_BOUND)
+                        .expect("swap never loses replies")
+                        .expect("infer ok")
+                        .logits,
+                );
+            }
+            replies
+        }));
+    }
+    std::thread::sleep(Duration::from_millis(5));
+    let version = e.swap_model("m", tiny_compiled("deepspeech", 2), None).unwrap();
+    assert_eq!(version, 2);
+
+    let mut replies = Vec::new();
+    for h in handles {
+        replies.extend(h.join().unwrap());
+    }
+    // post-drain: the serving weights are v2
+    let ref2 = e.infer("m", input).unwrap().logits;
+    assert_ne!(ref1, ref2, "seeds 1 and 2 must differ");
+    // atomicity: every concurrent reply is wholly one version
+    let (mut v1, mut v2) = (0u64, 0u64);
+    for logits in &replies {
+        if *logits == ref1 {
+            v1 += 1;
+        } else if *logits == ref2 {
+            v2 += 1;
+        } else {
+            panic!("reply matches neither version: torn swap");
+        }
+    }
+    assert_eq!(v1 + v2, (PRODUCERS * PER_PRODUCER) as u64);
+    assert_eq!(e.store().version("m"), Some(2));
+    assert_eq!(e.metrics().model_store_counts().2, 1, "exactly one swap");
+    assert_eq!(
+        e.metrics().completed.load(Relaxed),
+        (PRODUCERS * PER_PRODUCER) as u64 + 2 // + the two reference infers
+    );
+}
+
+/// Delegating wrapper whose forward sleeps first: pins the dispatch
+/// guard inside the forward long enough for the test to hot-swap
+/// mid-flight, deterministically.
+struct Slowed {
+    inner: CompiledModel,
+    delay: Duration,
+}
+
+impl Model for Slowed {
+    fn input_len(&self) -> usize {
+        self.inner.input_len()
+    }
+    fn output_len(&self) -> usize {
+        self.inner.output_len()
+    }
+    fn forward_timed(&self, frames: &[f32]) -> (Vec<f32>, Vec<LayerTiming>) {
+        std::thread::sleep(self.delay);
+        Model::forward_timed(&self.inner, frames)
+    }
+    fn forward_batch(&self, frames: &[&[f32]]) -> Vec<(Vec<f32>, Vec<LayerTiming>)> {
+        std::thread::sleep(self.delay);
+        Model::forward_batch(&self.inner, frames)
+    }
+    fn route_ops(&self, group: usize) -> Vec<OpDesc> {
+        Model::route_ops(&self.inner, group)
+    }
+    fn resident_bytes(&self) -> usize {
+        Model::resident_bytes(&self.inner)
+    }
+    fn describe(&self) -> String {
+        format!("slowed({})", self.inner.describe())
+    }
+}
+
+#[test]
+fn in_flight_dispatch_finishes_on_v1_weights_across_a_swap() {
+    let v1 = tiny_compiled("mlp", 1);
+    let v2 = tiny_compiled("mlp", 2);
+    let input = vec![0.1f32; Model::input_len(&v1)];
+    let ref1 = Model::forward_timed(&v1, &input).0;
+    let ref2 = Model::forward_timed(&v2, &input).0;
+    assert_ne!(ref1, ref2);
+
+    let e = Engine::new(EngineConfig {
+        workers: 1,
+        sched: SchedulerConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            max_queue: 64,
+            slo: Duration::from_secs(5),
+            ..SchedulerConfig::default()
+        },
+        router: RouterConfig::default(),
+        store: StoreConfig::default(),
+    });
+    e.register_model("m", Slowed { inner: v1, delay: Duration::from_millis(500) }).unwrap();
+    let rx1 = e.try_submit("m", input.clone()).unwrap();
+    // wait for the worker to take its dispatch hold (the guard is
+    // captured before the slowed forward starts sleeping)
+    let t0 = std::time::Instant::now();
+    while e.store().entry_stats("m").unwrap().in_flight == 0 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "dispatch never started");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    // swap while the v1 guard is live: the drain protocol is the guard
+    // lifetime — no wait, no lock handoff, v1 just finishes on v1
+    let version = e.swap_model("m", v2, None).unwrap();
+    assert_eq!(version, 2);
+    assert_eq!(e.store().entry_stats("m").unwrap().in_flight, 1, "guard still live");
+    let r1 = rx1.recv_timeout(REPLY_BOUND).unwrap().unwrap();
+    assert_eq!(r1.logits, ref1, "in-flight dispatch must finish on the v1 weights it captured");
+    // the next dispatch serves v2 (and is no longer slowed)
+    let r2 = e.infer("m", input).unwrap();
+    assert_eq!(r2.logits, ref2, "post-swap dispatches must serve v2");
+    let (loads, evictions, swaps) = e.metrics().model_store_counts();
+    assert_eq!((loads, evictions, swaps), (2, 0, 1));
+    e.shutdown();
+}

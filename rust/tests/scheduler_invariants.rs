@@ -26,7 +26,7 @@ use std::time::{Duration, Instant};
 
 use fullpack::coordinator::{
     Engine, EngineConfig, FaultPlan, FlushReason, RouterConfig, Scheduler, SchedulerConfig,
-    ShedReason, SubmitError,
+    ShedReason, StoreConfig, SubmitError,
 };
 use fullpack::models::{CompiledModel, Model, ModelRegistry, ModelSize};
 use fullpack::pack::Variant;
@@ -64,9 +64,10 @@ fn storm_engine(max_queue: usize, seed: u64) -> Engine {
             ..SchedulerConfig::default()
         },
         router: RouterConfig::default(),
+        store: StoreConfig::default(),
     });
     for (i, name) in ZOO.iter().enumerate() {
-        e.register_model(name, tiny(name, seed + i as u64));
+        e.register_model(name, tiny(name, seed + i as u64)).unwrap();
     }
     e
 }
@@ -373,10 +374,11 @@ fn worker_stall_fault_delays_but_never_loses_replies() {
                     ..SchedulerConfig::default()
                 },
                 router: RouterConfig::default(),
+                store: StoreConfig::default(),
             },
             FaultPlan { worker_stall: stall, ..FaultPlan::default() },
         );
-        e.register_model("ds", tiny("deepspeech", seed));
+        e.register_model("ds", tiny("deepspeech", seed)).unwrap();
         let len = e.model("ds").unwrap().input_len();
         let rxs: Vec<_> = (0..8)
             .map(|_| e.try_submit("ds", vec![0.1; len]).expect("queue sized for the load"))
@@ -413,11 +415,12 @@ fn slow_model_fault_degrades_only_its_own_shard() {
                 ..SchedulerConfig::default()
             },
             router: RouterConfig::default(),
+            store: StoreConfig::default(),
         },
         FaultPlan { slow_models: vec![("slow".to_string(), slow_extra)], ..FaultPlan::default() },
     );
-    e.register_model("slow", tiny("deepspeech", 3));
-    e.register_model("fast", tiny("mlp", 4));
+    e.register_model("slow", tiny("deepspeech", 3)).unwrap();
+    e.register_model("fast", tiny("mlp", 4)).unwrap();
     let slow_len = e.model("slow").unwrap().input_len();
     let fast_len = e.model("fast").unwrap().input_len();
     let t0 = Instant::now();
@@ -460,8 +463,9 @@ fn poisoned_reply_channels_neither_hang_workers_nor_leak_requests() {
                 ..SchedulerConfig::default()
             },
             router: RouterConfig::default(),
+            store: StoreConfig::default(),
         });
-        e.register_model("ds", tiny("deepspeech", seed));
+        e.register_model("ds", tiny("deepspeech", seed)).unwrap();
         let len = e.model("ds").unwrap().input_len();
         let total = 12usize;
         let rxs: Vec<_> = (0..total)

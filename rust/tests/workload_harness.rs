@@ -18,7 +18,7 @@
 use std::time::Duration;
 
 use fullpack::coordinator::{
-    EngineConfig, FaultPlan, ModelSpec, RouterConfig, SchedulerConfig, ShedReason,
+    EngineConfig, FaultPlan, ModelSpec, RouterConfig, SchedulerConfig, ShedReason, StoreConfig,
 };
 use fullpack::models::ModelSize;
 use fullpack::pack::Variant;
@@ -42,6 +42,7 @@ fn spec(name: &str, model: &str, variant: &str) -> ModelSpec {
         variant: Variant::parse(variant).unwrap(),
         size: ModelSize::Tiny,
         seed: 7,
+        pin: false,
     }
 }
 
@@ -73,6 +74,7 @@ fn bursty_two_model_mix() -> WorkloadMix {
                 ..SchedulerConfig::default()
             },
             router: RouterConfig::default(),
+            store: StoreConfig::default(),
         },
     }
 }
@@ -201,6 +203,7 @@ fn pinned_count_only_mix() -> WorkloadMix {
                 shed_over_budget: true,
             },
             router: RouterConfig::default(),
+            store: StoreConfig::default(),
         },
     }
 }
@@ -279,6 +282,62 @@ fn virtual_des_mirrors_live_admission_bit_exactly() {
 }
 
 #[test]
+fn budgeted_store_cold_sheds_mirror_between_live_and_virtual() {
+    // the count-only mirror mix under a 1-byte residency budget: at
+    // most one model is warm at a time, so the alternating two-model
+    // traffic churns the store — every admission of the cold model
+    // sheds typed ColdModel and synchronously swaps residency.  The
+    // decision sequence is a pure function of the shared arrival plan,
+    // so the live engine and the virtual DES must take bit-identical
+    // cold-shed, load and eviction decisions (DESIGN.md §14).
+    let mut mix = pinned_count_only_mix();
+    mix.name = "budgeted-churn".to_string();
+    mix.engine.store.budget_bytes = Some(1);
+    let stall = FaultPlan {
+        worker_stall: Duration::from_millis(300),
+        ..FaultPlan::default()
+    };
+    let live = run_live_with(&mix, false, &stall).unwrap();
+    let virt = run_virtual_with(&mix, &stall).unwrap();
+    let (l, v) = (&live.snapshot, &virt.snapshot);
+
+    assert!(l.sheds.2 > 0, "a 1-byte budget must shed cold admissions (got {:?})", l.sheds);
+    assert_eq!(l.sheds, v.sheds, "typed shed counts (cold included) must mirror");
+    assert_eq!(l.store, v.store, "store load/eviction/swap counters must mirror");
+    assert!(l.store.0 > 0 && l.store.1 > 0, "churn must load and evict (got {:?})", l.store);
+    assert_eq!(l.requests, v.requests);
+    assert_eq!(l.completed, v.completed);
+    assert_eq!((l.errors, v.errors), (0, 0));
+
+    // every planned request meets the same fate in both worlds
+    assert_eq!(live.records.len(), virt.records.len());
+    for (lr, vr) in live.records.iter().zip(&virt.records) {
+        assert_eq!((lr.client, lr.index, lr.model), (vr.client, vr.index, vr.model));
+        assert_eq!(
+            lr.outcome, vr.outcome,
+            "client {} index {}: live and virtual disagree",
+            lr.client, lr.index
+        );
+    }
+    for ((ln, lc), (vn, vc)) in l.per_model.iter().zip(&v.per_model) {
+        assert_eq!(ln, vn);
+        assert_eq!(lc.sheds_cold_model, vc.sheds_cold_model, "{ln}");
+        assert_eq!(lc.loads, vc.loads, "{ln}");
+        assert_eq!(lc.evictions, vc.evictions, "{ln}");
+    }
+
+    // both traces reconcile through the report layer, store columns too
+    let lrep = build_report(&mix, &live).unwrap();
+    let vrep = build_report(&mix, &virt).unwrap();
+    assert!(lrep.shed_cold_model > 0);
+    assert_eq!(lrep.shed_cold_model, vrep.shed_cold_model);
+    assert_eq!(
+        (lrep.store_loads, lrep.store_evictions, lrep.store_swaps),
+        (vrep.store_loads, vrep.store_evictions, vrep.store_swaps)
+    );
+}
+
+#[test]
 fn tail_heavy_bursty_storm_sheds_typed_and_reconciles() {
     // a burst storm against shallow queues: arrivals land ns apart
     // while every dispatch costs the full modeled service time, so the
@@ -301,7 +360,7 @@ fn tail_heavy_bursty_storm_sheds_typed_and_reconciles() {
     assert!(shed_qf > 0, "the storm must overflow the 3-deep queues");
     assert_eq!(shed_ob, 0, "over-budget shedding is disabled here");
     assert!(count(Outcome::Completed) > 0, "admitted requests still complete");
-    assert_eq!(trace.snapshot.sheds, (shed_qf, shed_ob), "typed counters reconcile");
+    assert_eq!(trace.snapshot.sheds, (shed_qf, shed_ob, 0), "typed counters reconcile");
 
     // the report carries the typed split and reconciles it exactly
     let report = build_report(&mix, &trace).unwrap();
