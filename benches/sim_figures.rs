@@ -23,6 +23,8 @@ fn main() {
         ("gemm-batch", sweeps::fig_gemm_batch),
         // not a paper figure: the LUT tier's table-vs-L1 crossover sweep
         ("lut-crossover", sweeps::fig_lut_crossover),
+        // not a paper figure: the real-ISA tier vs staged/SWAR sweep
+        ("isa-crossover", sweeps::fig_isa_crossover),
     ] {
         let t0 = std::time::Instant::now();
         let report = f(sizes);

@@ -1,15 +1,19 @@
 //! Bench: the SWAR fast-path tier vs the staged scalar kernels
 //! (DESIGN.md §8) across LLC-relevant shapes, for every variant the
-//! tier implements.  Writes the measured records to
-//! `BENCH_kernels.json` (schema `bench-kernels/v1`) — the file
-//! EXPERIMENTS.md's "measured" column is populated from.  Running this
-//! bench on a real host replaces the committed cost-model placeholder
-//! with measured numbers.
+//! tier implements — plus the real-ISA tier (DESIGN.md §15) for every
+//! vector ISA the host actually supports (absent entries are skipped
+//! with a note, so the JSON only ever holds executed numbers).  Writes
+//! the measured records to `BENCH_kernels.json` (schema
+//! `bench-kernels/v1`) — the file EXPERIMENTS.md's "measured" column is
+//! populated from.  Running this bench on a real host replaces the
+//! committed cost-model placeholder with measured numbers.
 //!
 //! Run: `cargo bench --bench swar_vs_scalar` (QUICK=1 for less
-//! sampling; BENCH_OUT=path to redirect the JSON).
+//! sampling; BENCH_OUT=path to redirect the JSON), or
+//! `scripts/bench_host.sh` for the full three-suite sweep.
 
 use fullpack::figures::ondevice::measure_method;
+use fullpack::kernels::isa::{detected, isa_kernel_name, ISA_VARIANTS};
 use fullpack::models::FcShape;
 use fullpack::util::bench::{write_bench_json, BenchRecord, Table};
 
@@ -51,6 +55,43 @@ fn main() {
             ]);
         }
         t.print();
+
+        // the real-ISA tier, for whatever this host can execute (the
+        // registry only holds executable entries, so a missing name
+        // here means the ISA is absent — note it and move on)
+        let isa = detected();
+        if isa.count() == 0 {
+            println!("(no vector ISA detected: skipping the fullpack-*-avx2/-neon records)");
+        } else {
+            let mut ti = Table::new(vec!["kernel", "isa us", "vs scalar"]);
+            for kind in isa.kinds() {
+                for v in ISA_VARIANTS {
+                    let name = isa_kernel_name(v, kind).expect("ISA_VARIANTS are implemented");
+                    let scalar = if v.w.is_sub_byte() {
+                        format!("fullpack-{}", v.name())
+                    } else {
+                        "ruy-w8a8".to_string()
+                    };
+                    let fc = FcShape { name: "isa-sweep", z, k };
+                    let base = measure_method(&fc, &scalar, 3, ms);
+                    let fast = measure_method(&fc, name, 3, ms);
+                    records.push(BenchRecord {
+                        kernel: name.to_string(),
+                        variant: v.name().to_string(),
+                        z,
+                        k,
+                        median_ns: fast.median_ns,
+                        iters: fast.iters,
+                    });
+                    ti.row(vec![
+                        name.to_string(),
+                        format!("{:.1}", fast.micros()),
+                        format!("{:.2}x", base.median_ns / fast.median_ns),
+                    ]);
+                }
+            }
+            ti.print();
+        }
     }
     let out = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_kernels.json".to_string());
     let host = format!("{}-{}", std::env::consts::ARCH, std::env::consts::OS);

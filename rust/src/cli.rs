@@ -1,7 +1,7 @@
 //! Hand-rolled CLI (clap is unavailable offline — DESIGN.md §7).
 //!
 //! ```text
-//! fullpack simulate <fig4|fig5|fig6|fig7|fig8|fig10|fig12|fig13|gemm-batch|all> [--quick] [--csv DIR]
+//! fullpack simulate <fig4|fig5|fig6|fig7|fig8|fig10|fig12|fig13|gemm-batch|lut-crossover|isa-crossover|all> [--quick] [--csv DIR]
 //! fullpack simulate model [--name <zoo-name|all>] [--variant V] [--size full|tiny]
 //! fullpack simulate --show-config [--preset NAME]
 //! fullpack bench <fig11|deepspeech> [--variant V] [--kernel NAME] [--ms N]
@@ -93,10 +93,13 @@ pub const USAGE: &str = "\
 fullpack — sub-byte quantized inference engine (FullPack reproduction)
 
 USAGE:
-  fullpack simulate <fig4|fig5|fig6|fig7|fig8|fig10|fig12|fig13|gemm-batch|all>
+  fullpack simulate <fig4|fig5|fig6|fig7|fig8|fig10|fig12|fig13|gemm-batch|
+                     lut-crossover|isa-crossover|all>
                     [--quick] [--csv DIR]      regenerate a paper figure
                                                (gemm-batch: the GEMM tier's
-                                               memory-aware batch sweep)
+                                               memory-aware batch sweep;
+                                               isa-crossover: the AVX2/NEON
+                                               tier vs staged/SWAR)
   fullpack simulate model [--name <zoo|all>] [--variant V] [--size full|tiny]
                                                whole-model method comparison over
                                                the model zoo (simulate_model)

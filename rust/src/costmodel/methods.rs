@@ -7,6 +7,7 @@
 //! `Method` through the kernel's own `cost_method`
 //! ([`Method::from_registry`]).
 
+use crate::kernels::isa::IsaKind;
 use crate::pack::{BitWidth, Variant};
 use crate::sim::GemvTraffic;
 
@@ -18,6 +19,13 @@ pub enum Method {
     /// the u64 SWAR fast-path tier over the same layout (DESIGN.md §8):
     /// vectorizer-independent bit-plane inner loops, `wXa8` variants
     FullPackSwar(Variant),
+    /// the real-ISA tier (DESIGN.md §15): AVX2/NEON intrinsic kernels
+    /// over the unchanged packed layout, registered only on hosts whose
+    /// CPU can execute them (`fullpack-wXa8-avx2`/`-neon`).  The mix is
+    /// parameterized by the ISA's lane width — a 256-bit AVX2 lane
+    /// covers two 16-byte blocks per weight load, halving weight-stream
+    /// and bookkeeping ops relative to the 128-bit NEON schedule
+    FullPackIsa(Variant, IsaKind),
     /// the batched FullPack GEMM extension (DESIGN.md §9): each packed
     /// weight block is extracted once and its lanes feed every batch
     /// column, so extraction cost amortizes as `1/batch` — the DeepGEMM
@@ -66,6 +74,11 @@ impl Method {
         Method::FullPackSwar(Variant::parse(v).expect("valid variant"))
     }
 
+    /// Convenience constructor: `Method::fullpack_isa("w4a8", IsaKind::Avx2)`.
+    pub fn fullpack_isa(v: &str, kind: IsaKind) -> Method {
+        Method::FullPackIsa(Variant::parse(v).expect("valid variant"), kind)
+    }
+
     /// Convenience constructor: `Method::fullpack_gemm("w4a8")`.
     pub fn fullpack_gemm(v: &str) -> Method {
         Method::FullPackGemm(Variant::parse(v).expect("valid variant"))
@@ -86,6 +99,9 @@ impl Method {
         match self {
             Method::FullPack(v) => format!("FullPack-{}", v.name().to_uppercase()),
             Method::FullPackSwar(v) => format!("FullPack-SWAR-{}", v.name().to_uppercase()),
+            Method::FullPackIsa(v, kind) => {
+                format!("FullPack-{}-{}", kind.label(), v.name().to_uppercase())
+            }
             Method::FullPackGemm(v) => format!("FullPack-GEMM-{}", v.name().to_uppercase()),
             Method::Lut(v) => format!("LUT-{}", v.name().to_uppercase()),
             Method::LutGemm(v) => format!("LUT-GEMM-{}", v.name().to_uppercase()),
@@ -108,6 +124,7 @@ impl Method {
         match self {
             Method::FullPack(v) => format!("fullpack-{}", v.name()),
             Method::FullPackSwar(v) => format!("fullpack-{}-swar", v.name()),
+            Method::FullPackIsa(v, kind) => format!("fullpack-{}-{}", v.name(), kind.suffix()),
             Method::FullPackGemm(v) => format!("fullpack-{}-gemm", v.name()),
             Method::Lut(v) => format!("lut-{}", v.name()),
             Method::LutGemm(v) => format!("lut-{}-gemm", v.name()),
@@ -141,6 +158,7 @@ impl Method {
         match self {
             Method::FullPack(v)
             | Method::FullPackSwar(v)
+            | Method::FullPackIsa(v, _)
             | Method::FullPackGemm(v)
             | Method::Lut(v)
             | Method::LutGemm(v)
@@ -175,10 +193,12 @@ impl Method {
     /// Bytes of weight storage per row of a depth-`k` layer.
     pub fn weight_bytes_per_row(&self, k: usize) -> usize {
         match self {
-            // the GEMM and LUT tiers share the GEMV tier's packed
-            // layout exactly (the LUT kernels index tables *by* the
-            // packed bytes — no re-layout)
+            // the GEMM, LUT and real-ISA tiers share the GEMV tier's
+            // packed layout exactly (the LUT kernels index tables *by*
+            // the packed bytes, the ISA kernels extract bit-planes from
+            // them in-register — no re-layout)
             Method::FullPack(v)
+            | Method::FullPackIsa(v, _)
             | Method::FullPackGemm(v)
             | Method::Lut(v)
             | Method::LutGemm(v)
@@ -199,6 +219,7 @@ impl Method {
         match self {
             Method::FullPack(v)
             | Method::FullPackSwar(v)
+            | Method::FullPackIsa(v, _)
             | Method::FullPackGemm(v)
             | Method::Lut(v)
             | Method::LutGemm(v)
@@ -316,6 +337,43 @@ impl Method {
                         macs: chunks * 8.0,
                         alus: chunks * 16.0,
                         scalar: chunks * 4.0,
+                    }
+                }
+            }
+            Method::FullPackIsa(v, kind) => {
+                // real intrinsics, parameterized by lane width: with
+                // r = lane_bytes/16 packed blocks per vector register,
+                // the weight load and loop bookkeeping are paid once
+                // per r blocks while per-element work is lane-count
+                // invariant (wider lanes do r blocks per op)
+                let r = kind.lane_bytes() as f64 / 16.0;
+                if v.w.is_sub_byte() {
+                    // per 16-byte block (16·E elements): 1/r weight
+                    // loads + E act loads; per sub-vector one
+                    // shift+mask+sign-extend+bias (4 ALU) and one
+                    // MAC+widen pair (2 MAC-class); 2/r bookkeeping
+                    let e = v.w.elems_per_byte() as f64;
+                    let kp = v.padded_depth(k) as f64;
+                    let blocks = kp / (16.0 * e);
+                    InstrMix {
+                        loads: blocks * (1.0 / r + e),
+                        stores: 0.0,
+                        macs: blocks * 2.0 * e,
+                        alus: blocks * 4.0 * e,
+                        scalar: blocks * 2.0 / r,
+                    }
+                } else {
+                    // w8a8 widening path, per 16 elements: both operand
+                    // loads and the multiply chain scale with 1/r, but
+                    // AVX2 pays 2 extra widen/shuffle ops per 32-byte
+                    // chunk (cvtepi8_epi16 of each half)
+                    let units = kf / 16.0;
+                    InstrMix {
+                        loads: units * 2.0 / r,
+                        stores: 0.0,
+                        macs: units * 2.0 / r,
+                        alus: units * (2.0 / r + (r - 1.0) * 2.0),
+                        scalar: units / r,
                     }
                 }
             }
@@ -441,15 +499,33 @@ impl Method {
     /// Does this method's inner loop depend on the compiler turning
     /// staged 16-lane array code into real SIMD?  The SWAR tier (plain
     /// 64-bit register ops), the naive strawman (scalar by
-    /// construction) and the LUT tier (data-dependent table gathers —
+    /// construction), the LUT tier (data-dependent table gathers —
     /// scalar on any core, which is exactly why it wins on weak
-    /// vectorizers) run at their modeled cost everywhere; everything
-    /// else degrades by `CoreModel::autovec_eff` (DESIGN.md §8).
+    /// vectorizers) and the real-ISA tier (hand-written intrinsics, no
+    /// vectorizer in the loop) run at their modeled cost everywhere;
+    /// everything else degrades by `CoreModel::autovec_eff`
+    /// (DESIGN.md §8).
     pub fn simd_staged(&self) -> bool {
         !matches!(
             self,
-            Method::FullPackSwar(_) | Method::Naive(_) | Method::Lut(_) | Method::LutGemm(_)
+            Method::FullPackSwar(_)
+                | Method::FullPackIsa(..)
+                | Method::Naive(_)
+                | Method::Lut(_)
+                | Method::LutGemm(_)
         )
+    }
+
+    /// The narrowest SIMD register width (bytes) this method needs the
+    /// executing core to have — 0 for everything outside the real-ISA
+    /// tier.  `PlanBuilder`'s CostModel policy skips methods whose
+    /// requirement exceeds `CoreModel::vec_bytes`, so a portable core
+    /// model never selects an ISA kernel it cannot reason about.
+    pub fn min_lane_bytes(&self) -> f64 {
+        match self {
+            Method::FullPackIsa(_, kind) => kind.lane_bytes() as f64,
+            _ => 0.0,
+        }
     }
 
     /// [`Method::instr_mix`] adjusted for the core's auto-vectorization
@@ -779,6 +855,60 @@ mod tests {
         assert_eq!(m.instr_mix_gemm(256, 256, 9), one.scale(2.0));
         assert_eq!(m.instr_mix_gemm(256, 256, 16), one.scale(2.0));
         assert_eq!(m.instr_mix_gemm(256, 256, 17), one.scale(3.0));
+    }
+
+    #[test]
+    fn isa_methods_share_registry_namespace_and_layout() {
+        use crate::kernels::isa::{detected, ISA_KINDS};
+        for kind in ISA_KINDS {
+            for v in ["w4a8", "w2a8", "w1a8", "w8a8"] {
+                let m = Method::fullpack_isa(v, kind);
+                let name = m.registry_name();
+                assert_eq!(name, format!("fullpack-{v}-{}", kind.suffix()));
+                // identical packed layout to the GEMV tier — the ISA
+                // kernels consume Weights::Packed verbatim, no side
+                // table and no re-layout
+                assert_eq!(
+                    m.weight_bytes_per_row(2048),
+                    Method::fullpack(v).weight_bytes_per_row(2048)
+                );
+                assert_eq!(m.act_bytes(2048), Method::fullpack(v).act_bytes(2048));
+                assert_eq!(m.data_variant(), Variant::parse(v).unwrap());
+                assert_eq!(m.batch(), 1);
+                // hand-written intrinsics: vectorizer-independent
+                assert!(!m.simd_staged());
+                assert_eq!(m.min_lane_bytes(), kind.lane_bytes() as f64);
+                // the registry carries an ISA entry iff the host can
+                // execute it — from_registry resolves exactly then
+                if detected().has(kind) {
+                    assert_eq!(Method::from_registry(&name), Some(m), "{name}");
+                } else {
+                    assert_eq!(Method::from_registry(&name), None, "{name} must not register");
+                }
+            }
+        }
+        assert_eq!(Method::fullpack_isa("w4a8", IsaKind::Avx2).label(), "FullPack-AVX2-W4A8");
+        assert_eq!(Method::fullpack_isa("w2a8", IsaKind::Neon).label(), "FullPack-NEON-W2A8");
+        assert_eq!(Method::fullpack("w4a8").min_lane_bytes(), 0.0);
+    }
+
+    #[test]
+    fn wider_isa_lanes_amortize_the_weight_stream() {
+        let (z, k) = (256, 2048);
+        for v in ["w4a8", "w1a8", "w8a8"] {
+            let avx = Method::fullpack_isa(v, IsaKind::Avx2).instr_mix(z, k);
+            let neon = Method::fullpack_isa(v, IsaKind::Neon).instr_mix(z, k);
+            // 256-bit lanes halve the per-block weight loads and
+            // bookkeeping; per-element MAC work is lane-invariant for
+            // sub-byte (and strictly cheaper per op at w8a8)
+            assert!(avx.loads < neon.loads, "{v}");
+            assert!(avx.scalar < neon.scalar, "{v}");
+        }
+        // the ISA tier beats the staged FullPack mix at its own game:
+        // same MAC count, no 16-lane staging risk, fewer shift ops
+        let isa = Method::fullpack_isa("w4a8", IsaKind::Neon).instr_mix(z, k);
+        let staged = Method::fullpack("w4a8").instr_mix(z, k);
+        assert!((isa.macs - staged.macs).abs() < 1e-6, "same widening MAC schedule");
     }
 
     #[test]

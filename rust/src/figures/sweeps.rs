@@ -7,6 +7,7 @@
 
 use super::{geomean, grid_table, speedup, sweep, STEADY_CALLS};
 use crate::costmodel::{gemm_batch_threshold, simulate_gemm, simulate_gemv, CoreModel, Method};
+use crate::kernels::isa::IsaKind;
 use crate::pack::Variant;
 use crate::sim::CachePreset;
 use crate::util::bench::Table;
@@ -315,6 +316,81 @@ pub fn fig_lut_crossover(zs: &[usize]) -> FigureReport {
     FigureReport { id: "lut-crossover", tables, headlines }
 }
 
+/// The real-ISA tier's crossover sweep (EXPERIMENTS.md §ISA;
+/// DESIGN.md §15, not a paper figure): modeled gain of the
+/// `fullpack-*-avx2` / `-neon` intrinsic kernels over the staged scalar
+/// kernel **and** the SWAR tier, each ISA evaluated on its matching
+/// wide core ([`CoreModel::avx2`] / [`CoreModel::neon`] — real SIMD
+/// issue, but the staged lane loops charged the portable autovec
+/// discount they actually suffer there).  Rows sweep the square size
+/// `n`; the two gain columns are the tier's rivals.  Headlines pin the
+/// cells the plan-selection test asserts
+/// (`kernels::plan::tests::cost_model_prefers_the_isa_tier_on_wide_cores`):
+/// the ISA tier wins on the wide cores, while on `ex5_big` — where the
+/// model trusts the compiler to vectorize the staged loops perfectly —
+/// staged keeps winning, which is why detection alone never forces the
+/// tier on.
+pub fn fig_isa_crossover(sizes: &[usize]) -> FigureReport {
+    let preset = CachePreset::Gem5Ex5Big;
+    let mut tables = Vec::new();
+    let mut headlines = Vec::new();
+    let lineup: [(IsaKind, CoreModel, &str); 2] = [
+        (IsaKind::Avx2, CoreModel::avx2(), "avx2-core"),
+        (IsaKind::Neon, CoreModel::neon(), "neon-core"),
+    ];
+    for (kind, core, core_label) in &lineup {
+        for vname in ["w4a8", "w2a8", "w1a8", "w8a8"] {
+            let isa = Method::fullpack_isa(vname, *kind);
+            // staged rival: the scalar FullPack sibling for sub-byte,
+            // the Ruy-style baseline for w8a8 (no staged w8a8 kernel)
+            let staged =
+                if vname == "w8a8" { Method::RuyW8A8 } else { Method::fullpack(vname) };
+            let swar = Method::fullpack_swar(vname);
+            let mut t = Table::new(vec![
+                format!("{vname} gain n"),
+                "vs staged".to_string(),
+                "vs swar".to_string(),
+            ]);
+            for &n in sizes {
+                let i = simulate_gemv(isa, n, n, preset, core, STEADY_CALLS);
+                let s = simulate_gemv(staged, n, n, preset, core, STEADY_CALLS);
+                let w = simulate_gemv(swar, n, n, preset, core, STEADY_CALLS);
+                t.row(vec![
+                    n.to_string(),
+                    format!("{:.2}", s.cycles / i.cycles),
+                    format!("{:.2}", w.cycles / i.cycles),
+                ]);
+            }
+            tables.push((format!("{} gain [{core_label}]", isa.label()), t));
+        }
+    }
+    let cell = |m: Method, core: &CoreModel, n: usize| {
+        simulate_gemv(m, n, n, preset, core, STEADY_CALLS).cycles
+    };
+    let avx = CoreModel::avx2();
+    let neon = CoreModel::neon();
+    let ex5 = CoreModel::ex5_big();
+    let w4_avx = Method::fullpack_isa("w4a8", IsaKind::Avx2);
+    let w4_neon = Method::fullpack_isa("w4a8", IsaKind::Neon);
+    headlines.push((
+        "w4a8 avx2 gain vs swar @ 2048 [avx2-core]".into(),
+        cell(Method::fullpack_swar("w4a8"), &avx, 2048) / cell(w4_avx, &avx, 2048),
+    ));
+    headlines.push((
+        "w4a8 avx2 gain vs staged @ 2048 [avx2-core]".into(),
+        cell(Method::fullpack("w4a8"), &avx, 2048) / cell(w4_avx, &avx, 2048),
+    ));
+    headlines.push((
+        "w4a8 neon gain vs staged @ 2048 [neon-core]".into(),
+        cell(Method::fullpack("w4a8"), &neon, 2048) / cell(w4_neon, &neon, 2048),
+    ));
+    headlines.push((
+        "w4a8 neon gain vs staged @ 2048 [ex5-big]".into(),
+        cell(Method::fullpack("w4a8"), &ex5, 2048) / cell(w4_neon, &ex5, 2048),
+    ));
+    FigureReport { id: "isa-crossover", tables, headlines }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -409,6 +485,23 @@ mod tests {
         assert!(hl["w4a8 gain @ z=128 k=128 [portable]"] < 1.0);
         assert!(hl["w4a8 gain @ z=2048 k=2048 [portable]"] < 1.0);
         assert!(hl["w4a8 gain @ z=2048 k=128 [ex5-big]"] < 1.0);
+    }
+
+    #[test]
+    fn isa_crossover_pins_the_wide_core_wins() {
+        let r = fig_isa_crossover(&SIZES_QUICK);
+        // 2 ISAs x 4 variants, one gain table each
+        assert_eq!(r.tables.len(), 8);
+        let hl: std::collections::HashMap<&str, f64> =
+            r.headlines.iter().map(|(n, v)| (n.as_str(), *v)).collect();
+        // mirrors kernels::plan::tests::cost_model_prefers_the_isa_tier_
+        // on_wide_cores: the ISA tier wins on its matching wide core...
+        assert!(hl["w4a8 avx2 gain vs swar @ 2048 [avx2-core]"] > 1.0);
+        assert!(hl["w4a8 avx2 gain vs staged @ 2048 [avx2-core]"] > 1.0);
+        assert!(hl["w4a8 neon gain vs staged @ 2048 [neon-core]"] > 1.0);
+        // ...but on ex5-big, where the model trusts the autovectorizer,
+        // the staged kernel keeps its §4.4 crown
+        assert!(hl["w4a8 neon gain vs staged @ 2048 [ex5-big]"] < 1.0);
     }
 
     #[test]

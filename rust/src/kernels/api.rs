@@ -202,6 +202,33 @@ pub trait GemmKernel: Send + Sync {
     /// cols[c][k]`, batch-major output.
     fn gemm(&self, w: &Weights, cols: &[&[i8]], out: &mut [i32]) -> Result<(), KernelError>;
 
+    /// Batched GEMM over the row-tile `[row0, row0 + rows_tile)` where
+    /// `rows_tile = out.len() / cols.len()` — the zero-copy sharding
+    /// entry the tile-parallel decorator
+    /// ([`super::RowParallelGemm`]) uses.  The tile output is
+    /// batch-major *over the tile*: `out[c * rows_tile + (r - row0)]`
+    /// receives row `r` of column `c`.
+    ///
+    /// The default covers only the degenerate full-matrix tile
+    /// (`row0 == 0` and `out` spanning every row) by delegating to
+    /// [`GemmKernel::gemm`]; backends opt into real sharding by
+    /// overriding.  All built-in backends override.
+    fn gemm_at(
+        &self,
+        w: &Weights,
+        cols: &[&[i8]],
+        out: &mut [i32],
+        row0: usize,
+    ) -> Result<(), KernelError> {
+        if row0 == 0 && out.len() == w.rows() * cols.len() {
+            return self.gemm(w, cols, out);
+        }
+        Err(KernelError::Unsupported(format!(
+            "kernel {} has no row-tile GEMM entry",
+            self.name()
+        )))
+    }
+
     /// The analytic cost-model method this backend is modeled as
     /// (`None` for backends the model does not cover, e.g. the naive
     /// oracle).  FullPack GEMM entries map to `Method::FullPackGemm`;
@@ -238,6 +265,50 @@ pub(crate) fn check_gemm_shape(
         }
     }
     Ok(())
+}
+
+/// Shared operand validation for [`GemmKernel::gemm_at`] row-tile
+/// implementations: batch-major tile shape, row-range bounds, per-column
+/// padded depth.  Returns the tile height `rt = out.len() / cols.len()`
+/// (0 for an empty batch).
+pub(crate) fn check_gemm_tile(
+    w: &Weights,
+    cols: &[&[i8]],
+    out: &[i32],
+    row0: usize,
+) -> Result<usize, KernelError> {
+    let batch = cols.len();
+    if batch == 0 {
+        return if out.is_empty() {
+            Ok(0)
+        } else {
+            Err(KernelError::Shape(format!("out len {} with empty batch", out.len())))
+        };
+    }
+    if out.len() % batch != 0 {
+        return Err(KernelError::Shape(format!(
+            "out len {} not a multiple of batch {batch}",
+            out.len()
+        )));
+    }
+    let rt = out.len() / batch;
+    if row0 + rt > w.rows() {
+        return Err(KernelError::Shape(format!(
+            "row range {row0}..{} exceeds rows {}",
+            row0 + rt,
+            w.rows()
+        )));
+    }
+    let kp = w.k_padded();
+    for (c, col) in cols.iter().enumerate() {
+        if col.len() < kp {
+            return Err(KernelError::Shape(format!(
+                "column {c} len {} < padded depth {kp}",
+                col.len()
+            )));
+        }
+    }
+    Ok(rt)
 }
 
 /// Shared bounds check for `gemv_at` implementations.

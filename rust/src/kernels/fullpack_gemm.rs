@@ -31,14 +31,49 @@ pub fn gemm_fullpack<const B: usize>(
     a_cols: &[&[i8]],
     out: &mut [i32],
 ) -> Result<(), KernelError> {
-    let e = 8 / B;
     let z = wp.rows();
-    let batch = a_cols.len();
-    if out.len() != z * batch {
+    if out.len() != z * a_cols.len() {
         return Err(KernelError::Shape(format!(
             "out len {} != rows*batch {}",
             out.len(),
-            z * batch
+            z * a_cols.len()
+        )));
+    }
+    gemm_fullpack_at::<B>(wp, a_cols, out, 0)
+}
+
+/// [`gemm_fullpack`] over the row-tile `[row0, row0 + rt)` where
+/// `rt = out.len() / a_cols.len()` — the zero-copy sharding entry the
+/// tile-parallel decorator uses.  The tile output is batch-major *over
+/// the tile*: `out[c*rt + (r - row0)]` (for the full matrix this is
+/// the plain batch-major result, so [`gemm_fullpack`] delegates here).
+pub fn gemm_fullpack_at<const B: usize>(
+    wp: &PackedMatrix,
+    a_cols: &[&[i8]],
+    out: &mut [i32],
+    row0: usize,
+) -> Result<(), KernelError> {
+    let e = 8 / B;
+    let batch = a_cols.len();
+    if batch == 0 {
+        return if out.is_empty() {
+            Ok(())
+        } else {
+            Err(KernelError::Shape(format!("out len {} with empty batch", out.len())))
+        };
+    }
+    if out.len() % batch != 0 {
+        return Err(KernelError::Shape(format!(
+            "out len {} not a multiple of batch {batch}",
+            out.len()
+        )));
+    }
+    let rt = out.len() / batch;
+    if row0 + rt > wp.rows() {
+        return Err(KernelError::Shape(format!(
+            "row range {row0}..{} exceeds rows {}",
+            row0 + rt,
+            wp.rows()
         )));
     }
     for (c, col) in a_cols.iter().enumerate() {
@@ -54,8 +89,8 @@ pub fn gemm_fullpack<const B: usize>(
     // weight extraction feeds four MAC streams and the fixed shapes
     // keep the SLP vectorizer engaged (a heap `Vec` of accumulators
     // defeated it — see EXPERIMENTS.md §Perf iteration 4)
-    for r in 0..z {
-        let row = wp.row(r);
+    for r in 0..rt {
+        let row = wp.row(row0 + r);
         let mut c0 = 0;
         while c0 < batch {
             let ct = (batch - c0).min(COL_TILE);
@@ -82,7 +117,7 @@ pub fn gemm_fullpack<const B: usize>(
                 }
             }
             for (ci, acc) in accs.iter().enumerate().take(ct) {
-                out[(c0 + ci) * z + r] = acc.iter().sum();
+                out[(c0 + ci) * rt + r] = acc.iter().sum();
             }
             c0 += ct;
         }
@@ -100,6 +135,21 @@ pub fn gemm_fullpack_dyn(
         BitWidth::B4 => gemm_fullpack::<4>(wp, a_cols, out),
         BitWidth::B2 => gemm_fullpack::<2>(wp, a_cols, out),
         BitWidth::B1 => gemm_fullpack::<1>(wp, a_cols, out),
+        BitWidth::B8 => Err(KernelError::Unsupported("w8 gemm: use baseline::gemm_ruy_i8".into())),
+    }
+}
+
+/// Width-dispatched [`gemm_fullpack_at`].
+pub fn gemm_fullpack_dyn_at(
+    wp: &PackedMatrix,
+    a_cols: &[&[i8]],
+    out: &mut [i32],
+    row0: usize,
+) -> Result<(), KernelError> {
+    match wp.bits() {
+        BitWidth::B4 => gemm_fullpack_at::<4>(wp, a_cols, out, row0),
+        BitWidth::B2 => gemm_fullpack_at::<2>(wp, a_cols, out, row0),
+        BitWidth::B1 => gemm_fullpack_at::<1>(wp, a_cols, out, row0),
         BitWidth::B8 => Err(KernelError::Unsupported("w8 gemm: use baseline::gemm_ruy_i8".into())),
     }
 }
@@ -130,6 +180,36 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn row_tile_matches_the_full_call() {
+        let bits = BitWidth::B4;
+        let z = 24;
+        let k = bits.group_size() * 2;
+        let batch = 3;
+        let w = rngvals(bits, z * k, 71);
+        let wp = PackedMatrix::from_i8(&w, z, k, bits).unwrap();
+        let cols: Vec<Vec<i8>> =
+            (0..batch).map(|c| rngvals(BitWidth::B8, k, 72 + c as u64)).collect();
+        let refs: Vec<&[i8]> = cols.iter().map(|c| c.as_slice()).collect();
+        let mut full = vec![0i32; z * batch];
+        gemm_fullpack_dyn(&wp, &refs, &mut full).unwrap();
+        // an interior tile is batch-major over the tile
+        let (lo, hi) = (8usize, 19usize);
+        let rt = hi - lo;
+        let mut tile = vec![0i32; rt * batch];
+        gemm_fullpack_dyn_at(&wp, &refs, &mut tile, lo).unwrap();
+        for c in 0..batch {
+            assert_eq!(
+                &tile[c * rt..(c + 1) * rt],
+                &full[c * z + lo..c * z + hi],
+                "col {c}"
+            );
+        }
+        // a tile past the last row is a shape error
+        let mut bad = vec![0i32; 10 * batch];
+        assert!(gemm_fullpack_dyn_at(&wp, &refs, &mut bad, z - 5).is_err());
     }
 
     #[test]

@@ -1,0 +1,146 @@
+//! AVX2 FullPack GEMV kernels (DESIGN.md §15): 256-bit bit-plane
+//! extraction + `maddubs`-class MACs over the unchanged FullPack packed
+//! layout — two 16-byte blocks per iteration.
+//!
+//! Extraction per sub-vector `k` of a 32-byte weight chunk: one
+//! 16-bit-lane logical right shift by `k·B` plus a byte mask
+//! `(1<<B)-1`.  The shift crosses byte boundaries inside each 16-bit
+//! lane, but the contamination lands at bit `≥ 8 - k·B ≥ B` (since
+//! `k ≤ E-1` implies `k·B ≤ 8-B`), which the mask clears — so the
+//! field equals the scalar two-shift schedule exactly.  Sign extension
+//! from `B` bits is the xor/sub idiom (`x ^ s) - s` with
+//! `s = 1<<(B-1)`).
+//!
+//! MAC schedule: AVX2's byte multiplier `_mm256_maddubs_epi16` wants
+//! one **unsigned** operand, so the kernel biases the int8 activations
+//! by 128 (`a ^ 0x80` as unsigned = `a + 128`) and subtracts the bias
+//! afterwards via a weight-sum compensation accumulator:
+//!
+//! ```text
+//!   Σ (a+128)·w  =  Σ a·w + 128·Σ w    ⇒    Σ a·w = main − 128·comp
+//! ```
+//!
+//! Overflow bounds (why this is exact, per weight width):
+//! * `B ∈ {1,2,4}`: each `maddubs` pair is `≤ 2·255·8 = 4080 < 32767` —
+//!   no i16 saturation; `madd_epi16(·, 1)` widens to i32 losslessly and
+//!   the per-lane i32 accumulator is safe to depths ≫ the model sizes.
+//! * `B = 8`: `maddubs` **would** saturate (`2·255·128 > 32767`), so the
+//!   int8 kernel takes a widening path instead — `cvtepi8_epi16` both
+//!   operands, `madd_epi16` pairs into i32 — exact at every input.
+//!
+//! Zero weight padding contributes zero to both accumulators, so the
+//! packed tail padding stays neutral exactly like the scalar tiers.
+
+use super::super::fullpack::extract;
+use crate::pack::{PackedMatrix, VL};
+use std::arch::x86_64::*;
+
+/// Sub-byte weights (`B ∈ {1,2,4}`) × int8 activations.  Caller must
+/// have verified AVX2 support via `isa::detect` (debug-asserted here).
+pub fn gemv_wsub_a8<const B: usize>(wp: &PackedMatrix, a: &[i8], out: &mut [i32], row0: usize) {
+    debug_assert!(std::is_x86_feature_detected!("avx2"));
+    debug_assert_eq!(wp.bits().bits(), B);
+    debug_assert!(a.len() >= wp.k_padded());
+    unsafe { gemv_wsub_a8_impl::<B>(wp, a, out, row0) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn gemv_wsub_a8_impl<const B: usize>(
+    wp: &PackedMatrix,
+    a: &[i8],
+    out: &mut [i32],
+    row0: usize,
+) {
+    let e = 8 / B;
+    let mask = _mm256_set1_epi8(((1u16 << B) - 1) as u8 as i8);
+    let sign = _mm256_set1_epi8(1i8 << (B - 1));
+    let bias = _mm256_set1_epi8(0x80u8 as i8);
+    let ones8 = _mm256_set1_epi8(1);
+    let ones16 = _mm256_set1_epi16(1);
+    for (r, o) in out.iter_mut().enumerate() {
+        let row = wp.row(row0 + r);
+        let nblk = row.len() / VL;
+        let nchunk = nblk / 2;
+        let mut acc = _mm256_setzero_si256();
+        let mut comp = _mm256_setzero_si256();
+        for c in 0..nchunk {
+            let w = _mm256_loadu_si256(row.as_ptr().add(c * 2 * VL) as *const __m256i);
+            for k in 0..e {
+                // the two blocks' activation bases are NOT contiguous
+                // (each block owns e·VL activations): merge two 128-bit
+                // loads into one 256-bit register, low block low
+                let lo = _mm_loadu_si128(a.as_ptr().add((c * 2 * e + k) * VL) as *const __m128i);
+                let hi =
+                    _mm_loadu_si128(a.as_ptr().add(((c * 2 + 1) * e + k) * VL) as *const __m128i);
+                let act = _mm256_set_m128i(hi, lo);
+                // extract bit-plane k: shift (variable count — the lane
+                // crossings land above bit B and the mask clears them),
+                // mask, sign-extend from B bits
+                let count = _mm_cvtsi32_si128((k * B) as i32);
+                let field = _mm256_and_si256(_mm256_srl_epi16(w, count), mask);
+                let sw = _mm256_sub_epi8(_mm256_xor_si256(field, sign), sign);
+                // biased maddubs MAC + weight-sum compensation
+                let au = _mm256_xor_si256(act, bias);
+                acc = _mm256_add_epi32(acc, _mm256_madd_epi16(_mm256_maddubs_epi16(au, sw), ones16));
+                comp =
+                    _mm256_add_epi32(comp, _mm256_madd_epi16(_mm256_maddubs_epi16(ones8, sw), ones16));
+            }
+        }
+        let mut sum = hsum_epi32(acc) - 128 * hsum_epi32(comp);
+        if nblk % 2 == 1 {
+            // odd trailing 16-byte block: scalar two-shift tail
+            let blk = nblk - 1;
+            let bytes = &row[blk * VL..];
+            for k in 0..e {
+                let base = (blk * e + k) * VL;
+                for j in 0..VL {
+                    sum += extract::<B>(bytes[j] as i8, k) as i32 * a[base + j] as i32;
+                }
+            }
+        }
+        *o = sum;
+    }
+}
+
+/// Int8 weights × int8 activations — the widening (`cvtepi8_epi16` +
+/// `madd_epi16`) path; exact at every input (see the module docs).
+pub fn gemv_w8_a8(wp: &PackedMatrix, a: &[i8], out: &mut [i32], row0: usize) {
+    debug_assert!(std::is_x86_feature_detected!("avx2"));
+    debug_assert!(!wp.bits().is_sub_byte());
+    debug_assert!(a.len() >= wp.k_padded());
+    unsafe { gemv_w8_a8_impl(wp, a, out, row0) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn gemv_w8_a8_impl(wp: &PackedMatrix, a: &[i8], out: &mut [i32], row0: usize) {
+    let k = wp.k_padded();
+    let chunks = k / 32;
+    for (r, o) in out.iter_mut().enumerate() {
+        let row = wp.row(row0 + r);
+        let mut acc = _mm256_setzero_si256();
+        for c in 0..chunks {
+            let w = _mm256_loadu_si256(row.as_ptr().add(c * 32) as *const __m256i);
+            let av = _mm256_loadu_si256(a.as_ptr().add(c * 32) as *const __m256i);
+            let wlo = _mm256_cvtepi8_epi16(_mm256_castsi256_si128(w));
+            let whi = _mm256_cvtepi8_epi16(_mm256_extracti128_si256(w, 1));
+            let alo = _mm256_cvtepi8_epi16(_mm256_castsi256_si128(av));
+            let ahi = _mm256_cvtepi8_epi16(_mm256_extracti128_si256(av, 1));
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(wlo, alo));
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(whi, ahi));
+        }
+        let mut sum = hsum_epi32(acc);
+        for i in chunks * 32..k {
+            sum += row[i] as i8 as i32 * a[i] as i32;
+        }
+        *o = sum;
+    }
+}
+
+/// Horizontal i32 sum of a 256-bit accumulator.
+#[target_feature(enable = "avx2")]
+unsafe fn hsum_epi32(v: __m256i) -> i32 {
+    let s = _mm_add_epi32(_mm256_castsi256_si128(v), _mm256_extracti128_si256(v, 1));
+    let s = _mm_add_epi32(s, _mm_unpackhi_epi64(s, s));
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0b01));
+    _mm_cvtsi128_si32(s)
+}

@@ -1,0 +1,149 @@
+//! Runtime ISA capability probe (DESIGN.md §15).
+//!
+//! `probe()` asks the host CPU what it can execute
+//! (`is_x86_feature_detected!` / `is_aarch64_feature_detected!` under
+//! the matching `cfg(target_arch)` arm); [`detected`] additionally
+//! applies the `FULLPACK_ISA` environment filter and caches the result
+//! for the process lifetime — registration
+//! (`kernels::isa::register_isa_backends`) and the conformance tests'
+//! auto-skip both read this one answer.
+//!
+//! The env var can only **restrict**, never force-enable: executing an
+//! intrinsic the CPU lacks is undefined behavior, so
+//! `FULLPACK_ISA=neon` on an x86 host yields *no* ISA backends rather
+//! than a crash.  Accepted values: a comma-separated subset of
+//! `avx2,neon`, or `none` (or the empty string) to disable the tier —
+//! the hook the tests use to exercise scalar-only registries on any
+//! host.
+
+use super::IsaKind;
+use std::sync::OnceLock;
+
+/// Which real-ISA kernel families the host can execute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct IsaSupport {
+    /// 256-bit AVX2 integer SIMD (x86-64).
+    pub avx2: bool,
+    /// 128-bit NEON/AdvSIMD (aarch64).
+    pub neon: bool,
+}
+
+impl IsaSupport {
+    /// No ISA tier at all — the portable baseline.
+    pub const NONE: IsaSupport = IsaSupport { avx2: false, neon: false };
+
+    /// Does the support set include `kind`?
+    pub fn has(&self, kind: IsaKind) -> bool {
+        match kind {
+            IsaKind::Avx2 => self.avx2,
+            IsaKind::Neon => self.neon,
+        }
+    }
+
+    /// The supported kinds, widest lane first.
+    pub fn kinds(&self) -> Vec<IsaKind> {
+        let mut v = Vec::new();
+        if self.avx2 {
+            v.push(IsaKind::Avx2);
+        }
+        if self.neon {
+            v.push(IsaKind::Neon);
+        }
+        v
+    }
+
+    /// Number of supported kinds.
+    pub fn count(&self) -> usize {
+        self.avx2 as usize + self.neon as usize
+    }
+}
+
+/// Raw host capability check, no env filtering and no caching.
+pub fn probe() -> IsaSupport {
+    #[cfg(target_arch = "x86_64")]
+    return IsaSupport { avx2: std::is_x86_feature_detected!("avx2"), neon: false };
+    #[cfg(target_arch = "aarch64")]
+    return IsaSupport {
+        avx2: false,
+        neon: std::arch::is_aarch64_feature_detected!("neon"),
+    };
+    #[allow(unreachable_code)]
+    IsaSupport::NONE
+}
+
+/// [`probe`] filtered by the `FULLPACK_ISA` env var (restrict-only) and
+/// cached for the process lifetime — the answer registration and the
+/// test auto-skips agree on.
+pub fn detected() -> IsaSupport {
+    static CACHE: OnceLock<IsaSupport> = OnceLock::new();
+    *CACHE.get_or_init(|| env_filter(probe(), std::env::var("FULLPACK_ISA").ok().as_deref()))
+}
+
+/// Apply the `FULLPACK_ISA` filter: unset keeps the probe verbatim; set
+/// keeps only the listed kinds **that the probe already reported** —
+/// the env can disable, never enable (enabling would execute intrinsics
+/// the CPU lacks: UB).
+pub fn env_filter(probed: IsaSupport, var: Option<&str>) -> IsaSupport {
+    let Some(v) = var else { return probed };
+    let mut allowed = IsaSupport::NONE;
+    for tok in v.split(',').map(str::trim) {
+        match tok {
+            "avx2" => allowed.avx2 = true,
+            "neon" => allowed.neon = true,
+            _ => {} // "none", "", unknown tokens: allow nothing extra
+        }
+    }
+    IsaSupport { avx2: probed.avx2 && allowed.avx2, neon: probed.neon && allowed.neon }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn env_filter_is_restrict_only() {
+        let both = IsaSupport { avx2: true, neon: true };
+        // unset: probe passes through
+        assert_eq!(env_filter(both, None), both);
+        // subset selection
+        assert_eq!(env_filter(both, Some("avx2")), IsaSupport { avx2: true, neon: false });
+        assert_eq!(env_filter(both, Some("neon")), IsaSupport { avx2: false, neon: true });
+        assert_eq!(env_filter(both, Some("avx2,neon")), both);
+        assert_eq!(env_filter(both, Some(" avx2 , neon ")), both);
+        // disable entirely
+        assert_eq!(env_filter(both, Some("none")), IsaSupport::NONE);
+        assert_eq!(env_filter(both, Some("")), IsaSupport::NONE);
+        // the env can never force-enable what the probe lacks
+        assert_eq!(env_filter(IsaSupport::NONE, Some("avx2,neon")), IsaSupport::NONE);
+        let only_neon = IsaSupport { avx2: false, neon: true };
+        assert_eq!(env_filter(only_neon, Some("avx2")), IsaSupport::NONE);
+    }
+
+    #[test]
+    fn probe_matches_the_compiled_arch() {
+        let p = probe();
+        // at most one family per architecture, and never a family the
+        // target arch cannot express
+        #[cfg(not(target_arch = "x86_64"))]
+        assert!(!p.avx2);
+        #[cfg(not(target_arch = "aarch64"))]
+        assert!(!p.neon);
+        assert!(p.count() <= 1);
+    }
+
+    #[test]
+    fn detected_is_a_subset_of_probe() {
+        let (d, p) = (detected(), probe());
+        assert!(!d.avx2 || p.avx2);
+        assert!(!d.neon || p.neon);
+    }
+
+    #[test]
+    fn support_set_accessors_agree() {
+        let s = IsaSupport { avx2: true, neon: false };
+        assert!(s.has(IsaKind::Avx2) && !s.has(IsaKind::Neon));
+        assert_eq!(s.kinds(), vec![IsaKind::Avx2]);
+        assert_eq!(s.count(), 1);
+        assert_eq!(IsaSupport::NONE.kinds(), Vec::<IsaKind>::new());
+    }
+}

@@ -1,0 +1,332 @@
+//! The real-ISA kernel tier (DESIGN.md §15): FullPack GEMV kernels
+//! written in actual `std::arch` intrinsics — 256-bit AVX2 on x86-64,
+//! 128-bit NEON on aarch64 — behind the same registry the scalar,
+//! SWAR and LUT tiers live in.
+//!
+//! Contract with the rest of the stack:
+//!
+//! * **Same layout, no repack.**  Entries prepare weights exactly like
+//!   `fullpack-*` and execute on `Weights::Packed` *or*
+//!   `Weights::SwarPacked` (whose packed matrix is byte-identical; its
+//!   row-sum side table is simply unused) — a plan can hop tiers
+//!   without touching the prepared artifact.
+//! * **Detection-gated registration.**  `KernelRegistry::with_builtins`
+//!   registers only the kinds [`detect::detected`] reports, so a
+//!   registered name is always executable on this host.  Tests build
+//!   local registries with [`register_isa_backends`] and a forced
+//!   [`IsaSupport`] to exercise selection without execution.
+//! * **Honest cost modeling.**  Each entry reports
+//!   `Method::FullPackIsa(variant, kind)`, whose instruction mix is
+//!   parameterized by [`IsaKind::lane_bytes`]; `PlanBuilder`'s
+//!   cost-model policy admits an ISA candidate only when the modeled
+//!   core's `vec_bytes` covers that lane width.
+#![warn(missing_docs)]
+
+pub mod detect;
+
+#[cfg(target_arch = "x86_64")]
+pub mod avx2;
+#[cfg(target_arch = "aarch64")]
+pub mod neon;
+
+use super::api::{check_rows, wrong_layout, GemvKernel, Weights};
+use super::{ActVec, KernelError};
+use crate::costmodel::Method;
+use crate::pack::{pad_rows, BitWidth, PackedMatrix, Variant};
+pub use detect::{detected, probe, IsaSupport};
+
+/// Which vector ISA a kernel (or a [`Method::FullPackIsa`] cost entry)
+/// targets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum IsaKind {
+    /// 256-bit AVX2 integer SIMD (x86-64).
+    Avx2,
+    /// 128-bit NEON/AdvSIMD (aarch64).
+    Neon,
+}
+
+/// Every kind, widest lane first — the `PlanBuilder` preference order.
+pub const ISA_KINDS: [IsaKind; 2] = [IsaKind::Avx2, IsaKind::Neon];
+
+impl IsaKind {
+    /// Vector register width in bytes (32 for AVX2, 16 for NEON) — the
+    /// lane count the cost-model mixes and the `CoreModel::vec_bytes`
+    /// admission gate are parameterized by.
+    pub fn lane_bytes(&self) -> usize {
+        match self {
+            IsaKind::Avx2 => 32,
+            IsaKind::Neon => 16,
+        }
+    }
+
+    /// Registry-name suffix (`avx2` / `neon`).
+    pub fn suffix(&self) -> &'static str {
+        match self {
+            IsaKind::Avx2 => "avx2",
+            IsaKind::Neon => "neon",
+        }
+    }
+
+    /// Figure-label fragment (`AVX2` / `NEON`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            IsaKind::Avx2 => "AVX2",
+            IsaKind::Neon => "NEON",
+        }
+    }
+}
+
+/// The variants the ISA tier implements, one registry entry per
+/// supported kind: sub-byte (and int8) weights × int8 activations —
+/// the serving variants.
+pub const ISA_VARIANTS: [Variant; 4] = [
+    Variant::new(BitWidth::B4, BitWidth::B8),
+    Variant::new(BitWidth::B2, BitWidth::B8),
+    Variant::new(BitWidth::B1, BitWidth::B8),
+    Variant::new(BitWidth::B8, BitWidth::B8),
+];
+
+/// Registry name of the ISA GEMV kernel for a variant × kind, if the
+/// tier implements it.
+pub fn isa_kernel_name(v: Variant, kind: IsaKind) -> Option<&'static str> {
+    match (v.w, v.a, kind) {
+        (BitWidth::B4, BitWidth::B8, IsaKind::Avx2) => Some("fullpack-w4a8-avx2"),
+        (BitWidth::B2, BitWidth::B8, IsaKind::Avx2) => Some("fullpack-w2a8-avx2"),
+        (BitWidth::B1, BitWidth::B8, IsaKind::Avx2) => Some("fullpack-w1a8-avx2"),
+        (BitWidth::B8, BitWidth::B8, IsaKind::Avx2) => Some("fullpack-w8a8-avx2"),
+        (BitWidth::B4, BitWidth::B8, IsaKind::Neon) => Some("fullpack-w4a8-neon"),
+        (BitWidth::B2, BitWidth::B8, IsaKind::Neon) => Some("fullpack-w2a8-neon"),
+        (BitWidth::B1, BitWidth::B8, IsaKind::Neon) => Some("fullpack-w1a8-neon"),
+        (BitWidth::B8, BitWidth::B8, IsaKind::Neon) => Some("fullpack-w8a8-neon"),
+        _ => None,
+    }
+}
+
+/// One ISA-tier registry entry: a (variant × kind) pair.
+pub struct IsaKernel {
+    variant: Variant,
+    kind: IsaKind,
+    name: &'static str,
+}
+
+impl IsaKernel {
+    /// Backend for `variant` on `kind`, if the tier implements it.
+    /// Construction does NOT check host support — registration does
+    /// (the selection tests rely on building kernels for foreign ISAs;
+    /// executing one on an unsupported host returns `Unsupported`).
+    pub fn new(variant: Variant, kind: IsaKind) -> Option<IsaKernel> {
+        isa_kernel_name(variant, kind).map(|name| IsaKernel { variant, kind, name })
+    }
+
+    /// The ISA this entry targets.
+    pub fn kind(&self) -> IsaKind {
+        self.kind
+    }
+}
+
+impl GemvKernel for IsaKernel {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn supports(&self, v: Variant) -> bool {
+        v == self.variant
+    }
+
+    fn prepare(&self, w: &[i8], rows: usize, k: usize) -> Result<Weights, KernelError> {
+        // identical layout to the FullPack tier: prepared weights are
+        // interchangeable across the scalar, SWAR, LUT and ISA tiers
+        let kp = self.variant.padded_depth(k);
+        let padded = pad_rows(w, rows, k, kp);
+        Ok(Weights::Packed(PackedMatrix::from_i8(&padded, rows, kp, self.variant.w)?))
+    }
+
+    fn gemv_at(
+        &self,
+        w: &Weights,
+        a: ActVec<'_>,
+        out: &mut [i32],
+        row0: usize,
+    ) -> Result<(), KernelError> {
+        // the SAME packed bytes run whether they were prepared by this
+        // tier, the scalar tier, or the SWAR tier (whose row-sum side
+        // table is simply unused here)
+        let wp = match w {
+            Weights::Packed(m) => m,
+            Weights::SwarPacked { m, .. } => m,
+            other => return Err(wrong_layout(self.name, other)),
+        };
+        if wp.bits() != self.variant.w {
+            return Err(wrong_layout(self.name, w));
+        }
+        check_rows(w, out, row0)?;
+        let ActVec::I8(av) = a else {
+            return Err(KernelError::Unsupported(format!("{}: packed activations", self.name)));
+        };
+        let kp = wp.k_padded();
+        if av.len() < kp {
+            return Err(KernelError::Shape(format!(
+                "activation elems {} < padded depth {kp}",
+                av.len()
+            )));
+        }
+        run(self.kind, wp, av, out, row0)
+    }
+
+    fn cost_method(&self) -> Option<Method> {
+        Some(Method::FullPackIsa(self.variant, self.kind))
+    }
+}
+
+/// Execute on `kind`, re-verifying host support at the call site (a
+/// kernel constructed for a foreign ISA — possible in selection-only
+/// tests — must fail loudly, never execute intrinsics the CPU lacks).
+fn run(
+    kind: IsaKind,
+    wp: &PackedMatrix,
+    a: &[i8],
+    out: &mut [i32],
+    row0: usize,
+) -> Result<(), KernelError> {
+    match kind {
+        IsaKind::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            if std::is_x86_feature_detected!("avx2") {
+                match wp.bits() {
+                    BitWidth::B4 => avx2::gemv_wsub_a8::<4>(wp, a, out, row0),
+                    BitWidth::B2 => avx2::gemv_wsub_a8::<2>(wp, a, out, row0),
+                    BitWidth::B1 => avx2::gemv_wsub_a8::<1>(wp, a, out, row0),
+                    BitWidth::B8 => avx2::gemv_w8_a8(wp, a, out, row0),
+                }
+                return Ok(());
+            }
+            Err(KernelError::Unsupported("avx2 is not executable on this host".into()))
+        }
+        IsaKind::Neon => {
+            #[cfg(target_arch = "aarch64")]
+            if std::arch::is_aarch64_feature_detected!("neon") {
+                match wp.bits() {
+                    BitWidth::B4 => neon::gemv_wsub_a8::<4>(wp, a, out, row0),
+                    BitWidth::B2 => neon::gemv_wsub_a8::<2>(wp, a, out, row0),
+                    BitWidth::B1 => neon::gemv_wsub_a8::<1>(wp, a, out, row0),
+                    BitWidth::B8 => neon::gemv_w8_a8(wp, a, out, row0),
+                }
+                return Ok(());
+            }
+            Err(KernelError::Unsupported("neon is not executable on this host".into()))
+        }
+    }
+}
+
+/// Register every ISA backend the support set covers (4 variants per
+/// kind).  `with_builtins` calls this with [`detect::detected`];
+/// selection tests call it with a forced [`IsaSupport`] to exercise
+/// planning for ISAs the host may lack (executing such an entry
+/// returns `Unsupported` — see [`IsaKernel::new`]).
+pub fn register_isa_backends(reg: &mut super::KernelRegistry, support: IsaSupport) {
+    for kind in ISA_KINDS {
+        if !support.has(kind) {
+            continue;
+        }
+        for v in ISA_VARIANTS {
+            let kernel = IsaKernel::new(v, kind).expect("ISA_VARIANTS are implemented");
+            reg.register(std::sync::Arc::new(kernel));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::testutil::{oracle_gemv, rngvals};
+    use crate::kernels::KernelRegistry;
+
+    #[test]
+    fn names_and_methods_share_the_registry_namespace() {
+        for kind in ISA_KINDS {
+            for v in ISA_VARIANTS {
+                let kern = IsaKernel::new(v, kind).unwrap();
+                let m = kern.cost_method().unwrap();
+                assert_eq!(m.registry_name(), kern.name(), "{v} {kind:?}");
+                assert!(kern.name().ends_with(kind.suffix()));
+                assert!(kern.supports(v));
+            }
+        }
+        // unimplemented pairs yield no entry
+        assert!(IsaKernel::new(Variant::new(BitWidth::B4, BitWidth::B4), IsaKind::Avx2).is_none());
+    }
+
+    #[test]
+    fn registration_follows_the_support_set() {
+        let mut reg = KernelRegistry::empty();
+        register_isa_backends(&mut reg, IsaSupport::NONE);
+        assert_eq!(reg.len(), 0);
+        let mut reg = KernelRegistry::empty();
+        register_isa_backends(&mut reg, IsaSupport { avx2: true, neon: false });
+        assert_eq!(reg.len(), ISA_VARIANTS.len());
+        assert!(reg.get("fullpack-w4a8-avx2").is_some());
+        assert!(reg.get("fullpack-w4a8-neon").is_none());
+        let mut reg = KernelRegistry::empty();
+        register_isa_backends(&mut reg, IsaSupport { avx2: true, neon: true });
+        assert_eq!(reg.len(), 2 * ISA_VARIANTS.len());
+    }
+
+    #[test]
+    fn foreign_isa_entries_fail_loudly_instead_of_executing() {
+        // a kernel for whichever kind this host does NOT support must
+        // return Unsupported from execution (selection-only tests build
+        // these freely; running one would be UB without this guard)
+        let host = detect::probe();
+        for kind in ISA_KINDS {
+            if host.has(kind) {
+                continue;
+            }
+            let kern = IsaKernel::new(ISA_VARIANTS[0], kind).unwrap();
+            let w = rngvals(BitWidth::B4, 4 * 64, 3);
+            let wts = kern.prepare(&w, 4, 64).unwrap();
+            let a = vec![0i8; wts.k_padded()];
+            let mut out = vec![0i32; 4];
+            let err = kern.gemv_at(&wts, ActVec::I8(&a), &mut out, 0);
+            assert!(matches!(err, Err(KernelError::Unsupported(_))), "{kind:?}: {err:?}");
+        }
+    }
+
+    #[test]
+    fn supported_kinds_match_the_oracle_and_accept_swar_layout() {
+        // executable check on whatever the host actually has — the full
+        // depth grid lives in tests/registry_conformance.rs
+        let host = detect::detected();
+        for kind in host.kinds() {
+            for v in ISA_VARIANTS {
+                let kern = IsaKernel::new(v, kind).unwrap();
+                let (z, k) = (7usize, 129usize);
+                let w = rngvals(v.w, z * k, 17);
+                let a0 = rngvals(v.a, k, 18);
+                let wts = kern.prepare(&w, z, k).unwrap();
+                let kp = wts.k_padded();
+                let mut a = a0.clone();
+                a.resize(kp, 0);
+                let mut out = vec![0i32; z];
+                kern.gemv_at(&wts, ActVec::I8(&a), &mut out, 0).unwrap();
+                let wpad = crate::pack::pad_rows(&w, z, k, kp);
+                assert_eq!(out, oracle_gemv(&wpad, &a, z, kp), "{v} {kind:?}");
+                // row-range sharding entry
+                let mut shard = vec![0i32; z - 2];
+                kern.gemv_at(&wts, ActVec::I8(&a), &mut shard, 2).unwrap();
+                assert_eq!(shard.as_slice(), &out[2..], "{v} {kind:?} shard");
+                // the SWAR tier's prepared layout runs unchanged
+                if v.w.is_sub_byte() {
+                    let reg = KernelRegistry::global();
+                    if let Some(swar) =
+                        reg.get(crate::kernels::swar::swar_kernel_name(v).unwrap())
+                    {
+                        let swts = swar.prepare(&w, z, k).unwrap();
+                        let mut via_swar_layout = vec![0i32; z];
+                        kern.gemv_at(&swts, ActVec::I8(&a), &mut via_swar_layout, 0).unwrap();
+                        assert_eq!(via_swar_layout, out, "{v} {kind:?} swar layout");
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,85 @@
+//! NEON/AdvSIMD FullPack GEMV kernels (DESIGN.md §15): the paper's own
+//! instruction schedule (§3.2, Alg. 2) as real `std::arch::aarch64`
+//! intrinsics — one 16-byte block per iteration.
+//!
+//! Extraction per sub-vector `k`: the two-shift schedule, `LSL` by
+//! `8-(k+1)·B` then `ASR` by `8-B`, both as `vshlq_s8` (a negative
+//! count is an arithmetic right shift on the signed variant).  MACs are
+//! `vmull_s8` widening multiplies (low/high halves) accumulated with
+//! `vpadalq_s16` into four i32 lanes — the widening chain never
+//! saturates, so the kernels are exact at **every** width including
+//! int8 (unlike AVX2's `maddubs`, which needs the biased schedule for
+//! sub-byte and a widening path for int8; see `isa::avx2`).
+//!
+//! Zero weight padding extracts to zero lanes and contributes nothing,
+//! so packed tail padding stays neutral exactly like the scalar tiers.
+
+use crate::pack::{PackedMatrix, VL};
+use std::arch::aarch64::*;
+
+/// Sub-byte weights (`B ∈ {1,2,4}`) × int8 activations.  Caller must
+/// have verified NEON support via `isa::detect` (debug-asserted here).
+pub fn gemv_wsub_a8<const B: usize>(wp: &PackedMatrix, a: &[i8], out: &mut [i32], row0: usize) {
+    debug_assert!(std::arch::is_aarch64_feature_detected!("neon"));
+    debug_assert_eq!(wp.bits().bits(), B);
+    debug_assert!(a.len() >= wp.k_padded());
+    unsafe { gemv_wsub_a8_impl::<B>(wp, a, out, row0) }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn gemv_wsub_a8_impl<const B: usize>(
+    wp: &PackedMatrix,
+    a: &[i8],
+    out: &mut [i32],
+    row0: usize,
+) {
+    let e = 8 / B;
+    for (r, o) in out.iter_mut().enumerate() {
+        let row = wp.row(row0 + r);
+        let nblk = row.len() / VL;
+        let mut acc = vdupq_n_s32(0);
+        for blk in 0..nblk {
+            let w = vld1q_s8(row.as_ptr().add(blk * VL) as *const i8);
+            for k in 0..e {
+                // LSL(8-(k+1)B) then ASR(8-B): Alg. 2 lines 8–9
+                let lsl = vdupq_n_s8((8 - (k + 1) * B) as i8);
+                let asr = vdupq_n_s8(-((8 - B) as i8));
+                let sw = vshlq_s8(vshlq_s8(w, lsl), asr);
+                let act = vld1q_s8(a.as_ptr().add((blk * e + k) * VL));
+                acc = vpadalq_s16(acc, vmull_s8(vget_low_s8(sw), vget_low_s8(act)));
+                acc = vpadalq_s16(acc, vmull_s8(vget_high_s8(sw), vget_high_s8(act)));
+            }
+        }
+        *o = vaddvq_s32(acc);
+    }
+}
+
+/// Int8 weights × int8 activations — same widening `vmull`/`vpadal`
+/// chain, no extraction stage.
+pub fn gemv_w8_a8(wp: &PackedMatrix, a: &[i8], out: &mut [i32], row0: usize) {
+    debug_assert!(std::arch::is_aarch64_feature_detected!("neon"));
+    debug_assert!(!wp.bits().is_sub_byte());
+    debug_assert!(a.len() >= wp.k_padded());
+    unsafe { gemv_w8_a8_impl(wp, a, out, row0) }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn gemv_w8_a8_impl(wp: &PackedMatrix, a: &[i8], out: &mut [i32], row0: usize) {
+    let k = wp.k_padded();
+    let nblk = k / VL;
+    for (r, o) in out.iter_mut().enumerate() {
+        let row = wp.row(row0 + r);
+        let mut acc = vdupq_n_s32(0);
+        for blk in 0..nblk {
+            let w = vld1q_s8(row.as_ptr().add(blk * VL) as *const i8);
+            let av = vld1q_s8(a.as_ptr().add(blk * VL));
+            acc = vpadalq_s16(acc, vmull_s8(vget_low_s8(w), vget_low_s8(av)));
+            acc = vpadalq_s16(acc, vmull_s8(vget_high_s8(w), vget_high_s8(av)));
+        }
+        let mut sum = vaddvq_s32(acc);
+        for i in nblk * VL..k {
+            sum += row[i] as i8 as i32 * a[i] as i32;
+        }
+        *o = sum;
+    }
+}

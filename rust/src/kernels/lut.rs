@@ -170,8 +170,24 @@ pub fn gemm_lut<const B: usize>(
     out: &mut [i32],
     tables: &mut Vec<i32>,
 ) {
+    gemm_lut_at::<B>(wp, cols, out, 0, tables)
+}
+
+/// [`gemm_lut`] over the row-tile `[row0, row0 + rt)` where
+/// `rt = out.len() / cols.len()` — the `GemmKernel::gemm_at` sharding
+/// entry.  Tile output is batch-major over the tile
+/// (`out[c·rt + (r - row0)]`); tables are per-column and built in full
+/// per shard, so few-row shards amortize the builds poorly — the same
+/// caveat as `gemv_lut_at`.
+pub fn gemm_lut_at<const B: usize>(
+    wp: &PackedMatrix,
+    cols: &[&[i8]],
+    out: &mut [i32],
+    row0: usize,
+    tables: &mut Vec<i32>,
+) {
     let wb = wp.bytes_per_row();
-    let z = wp.rows();
+    let rt = if cols.is_empty() { 0 } else { out.len() / cols.len() };
     let tb = wb * 256;
     for c0 in (0..cols.len()).step_by(COL_TILE) {
         let ct = (cols.len() - c0).min(COL_TILE);
@@ -180,8 +196,8 @@ pub fn gemm_lut<const B: usize>(
         for ci in 0..ct {
             build_tables::<B>(cols[c0 + ci], wb, &mut tables[ci * tb..(ci + 1) * tb]);
         }
-        for r in 0..z {
-            let row = wp.row(r);
+        for r in 0..rt {
+            let row = wp.row(row0 + r);
             let mut sums = [0i32; COL_TILE];
             for (pos, &byte) in row.iter().enumerate() {
                 let idx = pos * 256 + byte as usize;
@@ -190,7 +206,7 @@ pub fn gemm_lut<const B: usize>(
                 }
             }
             for (ci, s) in sums.iter().enumerate().take(ct) {
-                out[(c0 + ci) * z + r] = *s;
+                out[(c0 + ci) * rt + r] = *s;
             }
         }
     }
@@ -224,10 +240,21 @@ pub fn gemm_lut_dyn(
     out: &mut [i32],
     tables: &mut Vec<i32>,
 ) -> Result<(), KernelError> {
+    gemm_lut_dyn_at(wp, cols, out, 0, tables)
+}
+
+/// Width-dispatched [`gemm_lut_at`].
+pub fn gemm_lut_dyn_at(
+    wp: &PackedMatrix,
+    cols: &[&[i8]],
+    out: &mut [i32],
+    row0: usize,
+    tables: &mut Vec<i32>,
+) -> Result<(), KernelError> {
     match wp.bits() {
-        BitWidth::B4 => gemm_lut::<4>(wp, cols, out, tables),
-        BitWidth::B2 => gemm_lut::<2>(wp, cols, out, tables),
-        BitWidth::B1 => gemm_lut::<1>(wp, cols, out, tables),
+        BitWidth::B4 => gemm_lut_at::<4>(wp, cols, out, row0, tables),
+        BitWidth::B2 => gemm_lut_at::<2>(wp, cols, out, row0, tables),
+        BitWidth::B1 => gemm_lut_at::<1>(wp, cols, out, row0, tables),
         BitWidth::B8 => {
             return Err(KernelError::Unsupported("lut tier needs sub-byte weights".into()))
         }
@@ -390,6 +417,21 @@ impl GemmKernel for LutGemmKernel {
         // int8 columns even for w4a4: sub-byte activation values pass
         // through i8 losslessly and the table build consumes i8 anyway
         LUT_SCRATCH.with(|s| gemm_lut_dyn(wp, cols, out, &mut s.borrow_mut().table))
+    }
+
+    fn gemm_at(
+        &self,
+        w: &Weights,
+        cols: &[&[i8]],
+        out: &mut [i32],
+        row0: usize,
+    ) -> Result<(), KernelError> {
+        let Weights::Packed(wp) = w else { return Err(wrong_layout(self.name, w)) };
+        if !wp.bits().is_sub_byte() {
+            return Err(wrong_layout(self.name, w));
+        }
+        super::api::check_gemm_tile(w, cols, out, row0)?;
+        LUT_SCRATCH.with(|s| gemm_lut_dyn_at(wp, cols, out, row0, &mut s.borrow_mut().table))
     }
 
     fn cost_method(&self) -> Option<Method> {

@@ -5,6 +5,9 @@
 //! the paper's kernels one-for-one).
 //!
 //! * [`fullpack`] — the nine paper variants (§3.2) over the dense layout;
+//! * [`isa`]      — the real-ISA tier (DESIGN.md §15): AVX2/NEON
+//!   intrinsics over the same packed layout, registered only when the
+//!   host can execute them (`fullpack-*-avx2`/`-neon` entries);
 //! * [`lut`]      — the table-driven LUT tier (DESIGN.md §13): same
 //!   packed layout, gather-based row loops, `lut-*`/`lut-*-gemm` entries;
 //! * [`baseline`] — Ruy/XNNPack/TFLite/GEMMLOWP-like i8 and f32 rivals;
@@ -24,6 +27,7 @@ pub mod api;
 pub mod baseline;
 pub mod fullpack;
 pub mod fullpack_gemm;
+pub mod isa;
 pub mod lut;
 pub mod naive;
 pub mod parallel;
@@ -34,10 +38,12 @@ pub mod testutil;
 pub mod ulppack;
 
 pub use api::{GemmKernel, GemvKernel, Weights};
+pub use isa::{isa_kernel_name, IsaKernel, IsaKind, IsaSupport, ISA_VARIANTS};
 pub use lut::{lut_gemm_kernel_name, lut_kernel_name, LutGemmKernel, LutKernel, LUT_VARIANTS};
 pub use plan::{LayerShape, Plan, PlanBuilder, PlanScratch, SelectPolicy, Selection, GEMM_MIN_BATCH};
 pub use registry::{
-    fullpack_gemm_kernel_name, KernelRegistry, RowParallel, FULLPACK_GEMM_VARIANTS,
+    fullpack_gemm_kernel_name, KernelRegistry, RowParallel, RowParallelGemm,
+    FULLPACK_GEMM_VARIANTS,
 };
 pub use swar::{swar_kernel_name, SwarKernel, SWAR_MIN_DEPTH};
 

@@ -15,10 +15,32 @@ use crate::pack::PackedMatrix;
 /// Minimum rows per shard — below this the spawn overhead dominates.
 pub const MIN_ROWS_PER_SHARD: usize = 256;
 
+/// Balanced row spans for `z` rows over `shards` workers: the first
+/// `z % shards` spans take `z/shards + 1` rows, the rest `z/shards` —
+/// every pair of spans differs by at most one row, so the slowest shard
+/// carries at most one extra row of work.  (The old `div_ceil` split
+/// gave every shard but the last the ceiling and starved the final
+/// shard — e.g. 2050 rows over 8 threads ran 7×257 + 1×251, a built-in
+/// straggler imbalance; see the pinned test.)  Exact cover, in order.
+pub fn shard_spans(z: usize, shards: usize) -> Vec<(usize, usize)> {
+    let shards = shards.max(1).min(z.max(1));
+    let base = z / shards;
+    let extra = z % shards;
+    let mut spans = Vec::with_capacity(shards);
+    let mut lo = 0;
+    for s in 0..shards {
+        let hi = lo + base + usize::from(s < extra);
+        spans.push((lo, hi));
+        lo = hi;
+    }
+    spans
+}
+
 /// Shard the rows `[row0, row0 + out.len())` across up to `threads`
 /// scoped workers, calling `f(chunk, abs_row0)` per shard.  The generic
 /// engine behind [`gemv_parallel`] and the kernel-API `RowParallel`
 /// decorator: any row-independent GEMV backend can be sharded this way.
+/// Spans come from [`shard_spans`], so shard sizes differ by ≤ 1 row.
 pub fn shard_rows<F>(
     out: &mut [i32],
     row0: usize,
@@ -35,17 +57,12 @@ where
     if shards <= 1 {
         return f(out, row0);
     }
-    let rows_per = z.div_ceil(shards);
     let results: Vec<Result<(), KernelError>> = std::thread::scope(|scope| {
-        let mut handles = Vec::with_capacity(shards);
+        let spans = shard_spans(z, shards);
+        let mut handles = Vec::with_capacity(spans.len());
         let mut rest = &mut *out;
         let f = &f;
-        for s in 0..shards {
-            let lo = s * rows_per;
-            let hi = ((s + 1) * rows_per).min(z);
-            if lo >= hi {
-                break;
-            }
+        for (lo, hi) in spans {
             let (chunk, tail) = rest.split_at_mut(hi - lo);
             rest = tail;
             // zero-copy: each shard borrows the shared operands and runs
@@ -56,6 +73,60 @@ where
     });
     for r in results {
         r?;
+    }
+    Ok(())
+}
+
+/// Shard a **batched GEMM** by output row-tiles: `out` is the
+/// batch-major `z × batch` result (`out[c*z + r]`), `f(tile, lo, hi)`
+/// computes rows `[lo, hi)` of every column into a tile that is
+/// batch-major *over the tile* (`tile[c*(hi-lo) + (r-lo)]` — the
+/// `GemmKernel::gemm_at` contract).  Each shard owns a scratch tile;
+/// the main thread scatters tiles into `out` after the join, so shard
+/// writes never alias.  `threads = 1` (or few rows) calls `f` directly
+/// on `out` — for the full matrix the two layouts coincide.
+pub fn shard_gemm_rows<F>(
+    out: &mut [i32],
+    z: usize,
+    batch: usize,
+    threads: usize,
+    f: F,
+) -> Result<(), KernelError>
+where
+    F: Fn(&mut [i32], usize, usize) -> Result<(), KernelError> + Sync,
+{
+    if out.len() != z * batch {
+        return Err(KernelError::Shape(format!(
+            "out len {} != rows*batch {}",
+            out.len(),
+            z * batch
+        )));
+    }
+    let shards = threads.min((z / MIN_ROWS_PER_SHARD).max(1));
+    if shards <= 1 || batch == 0 {
+        return f(out, 0, z);
+    }
+    let results: Vec<(usize, usize, Vec<i32>, Result<(), KernelError>)> =
+        std::thread::scope(|scope| {
+            let f = &f;
+            let handles: Vec<_> = shard_spans(z, shards)
+                .into_iter()
+                .map(|(lo, hi)| {
+                    scope.spawn(move || {
+                        let mut tile = vec![0i32; (hi - lo) * batch];
+                        let r = f(&mut tile, lo, hi);
+                        (lo, hi, tile, r)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("shard panicked")).collect()
+        });
+    for (lo, hi, tile, r) in results {
+        r?;
+        let rt = hi - lo;
+        for c in 0..batch {
+            out[c * z + lo..c * z + hi].copy_from_slice(&tile[c * rt..(c + 1) * rt]);
+        }
     }
     Ok(())
 }
@@ -78,8 +149,8 @@ pub fn gemv_parallel(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::kernels::pack_activations;
     use crate::kernels::testutil::{oracle_gemv, rngvals};
+    use crate::kernels::{gemv, pack_activations};
     use crate::pack::{BitWidth, Variant};
 
     #[test]
@@ -116,6 +187,76 @@ mod tests {
         let mut out = vec![0i32; 8];
         gemv_parallel(&wp, ActVec::I8(&a), &mut out, 8).unwrap();
         assert_eq!(out, oracle_gemv(&w, &a, 8, 32));
+    }
+
+    #[test]
+    fn shard_spans_balance_uneven_rows() {
+        // pinned (load-imbalance fix): 2050 rows over 8 shards used to
+        // split 7×257 + 1×251 under the div_ceil schedule — a built-in
+        // straggler.  Balanced spans differ by at most one row.
+        let spans = shard_spans(2050, 8);
+        assert_eq!(spans.len(), 8);
+        assert_eq!(spans.first().unwrap().0, 0);
+        assert_eq!(spans.last().unwrap().1, 2050);
+        let sizes: Vec<usize> = spans.iter().map(|(lo, hi)| hi - lo).collect();
+        assert_eq!(sizes, vec![257, 257, 256, 256, 256, 256, 256, 256]);
+        assert_eq!(sizes.iter().sum::<usize>(), 2050);
+        // exact in-order cover, no overlap
+        for w in spans.windows(2) {
+            assert_eq!(w[0].1, w[1].0);
+        }
+        // even division stays even; degenerate cases collapse sanely
+        assert!(shard_spans(2048, 8).iter().all(|(lo, hi)| hi - lo == 256));
+        assert_eq!(shard_spans(3, 8), vec![(0, 1), (1, 2), (2, 3)]);
+        assert_eq!(shard_spans(0, 4), vec![(0, 0)]);
+    }
+
+    #[test]
+    fn uneven_rows_still_match_serial() {
+        // end-to-end guard on the rebalance: a row count that is not a
+        // multiple of the shard count must stay bit-identical to serial
+        let v = Variant::parse("w4a8").unwrap();
+        let z = 1027;
+        let k = v.padded_depth(64);
+        let w = rngvals(v.w, z * k, 3);
+        let a = rngvals(v.a, k, 4);
+        let wp = PackedMatrix::from_i8(&w, z, k, v.w).unwrap();
+        let oracle = oracle_gemv(&w, &a, z, k);
+        for threads in [2, 3, 4, 7] {
+            let mut out = vec![0i32; z];
+            gemv_parallel(&wp, ActVec::I8(&a), &mut out, threads).unwrap();
+            assert_eq!(out, oracle, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn gemm_sharding_scatters_batch_major_tiles() {
+        let (z, batch) = (1024usize, 3usize);
+        // a deterministic stand-in kernel writing the gemm_at tile
+        // layout: tile[c*rt + (r-lo)] for rows [lo, hi)
+        let fill = |tile: &mut [i32], lo: usize, hi: usize| {
+            let rt = hi - lo;
+            for c in 0..batch {
+                for i in 0..rt {
+                    tile[c * rt + i] = ((lo + i) * 31 + c * 7) as i32;
+                }
+            }
+            Ok(())
+        };
+        let mut serial = vec![0i32; z * batch];
+        shard_gemm_rows(&mut serial, z, batch, 1, fill).unwrap();
+        // on the full matrix the tile layout IS the batch-major result
+        assert_eq!(serial[0], 0);
+        assert_eq!(serial[1], 31);
+        assert_eq!(serial[z], 7);
+        for threads in [2, 4, 8] {
+            let mut par = vec![0i32; z * batch];
+            shard_gemm_rows(&mut par, z, batch, threads, fill).unwrap();
+            assert_eq!(par, serial, "threads={threads}");
+        }
+        // wrong output length is a shape error
+        let mut bad = vec![0i32; 5];
+        assert!(shard_gemm_rows(&mut bad, z, batch, 2, fill).is_err());
     }
 
     #[test]

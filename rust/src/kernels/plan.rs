@@ -404,6 +404,11 @@ impl PlanBuilder {
                     for kern in reg.iter() {
                         let Some(ev) = exec_for(kern) else { continue };
                         let Some(method) = kern.cost_method() else { continue };
+                        // ISA-tier methods are meaningless on cores
+                        // narrower than their lanes (DESIGN.md §15)
+                        if method.min_lane_bytes() > core.vec_bytes {
+                            continue;
+                        }
                         let cycles =
                             simulate_gemm(method, z, k, batch, *preset, core, *calls).cycles;
                         let better = match &best_gemv {
@@ -436,6 +441,11 @@ impl PlanBuilder {
                 for kern in reg.iter() {
                     let Some(ev) = exec_for(kern) else { continue };
                     let Some(method) = kern.cost_method() else { continue };
+                    // a core cannot run ISA kernels wider than its
+                    // vector registers — skip, don't mis-model
+                    if method.min_lane_bytes() > core.vec_bytes {
+                        continue;
+                    }
                     let cycles = simulate_gemv(method, z, k, *preset, core, *calls).cycles;
                     let better = match &best {
                         None => true,
@@ -676,7 +686,12 @@ impl Plan {
 
     /// One batched call on whichever backend owns this plan's batches:
     /// the GEMM backend for batch-first plans, otherwise the GEMV
-    /// kernel's own `gemm` default/override.
+    /// kernel's own `gemm` default/override.  With a thread budget > 1
+    /// a batch-first plan is sharded by output row-tiles
+    /// (`parallel::shard_gemm_rows` → [`GemmKernel::gemm_at`]), the
+    /// same intra-op axis `RowParallel` gives the GEMV tier — the
+    /// serving engine's flushed batches inherit it through
+    /// [`Plan::execute_batch`].
     fn dispatch_gemm(
         &self,
         w: &Weights,
@@ -684,6 +699,17 @@ impl Plan {
         out: &mut [i32],
     ) -> Result<(), KernelError> {
         match &self.gemm {
+            Some(g) if self.threads > 1 => {
+                // shape check (out == rows*batch) happens inside
+                let g = &**g;
+                parallel::shard_gemm_rows(
+                    out,
+                    w.rows(),
+                    cols.len(),
+                    self.threads,
+                    |tile, lo, _hi| g.gemm_at(w, cols, tile, lo),
+                )
+            }
             Some(g) => g.gemm(w, cols, out),
             None => self.kernel.gemm(w, cols, out),
         }
@@ -886,6 +912,73 @@ mod tests {
             .build()
             .unwrap();
         assert_eq!(p.kernel_name(), "fullpack-w1a8-swar");
+    }
+
+    #[test]
+    fn cost_model_prefers_the_isa_tier_on_wide_cores() {
+        use crate::kernels::{isa, IsaSupport};
+        use crate::sim::CachePreset;
+        // force-register every ISA backend in a LOCAL registry:
+        // selection is pure modeling and nothing below executes, so the
+        // roster need not be runnable on the test host (the global
+        // registry stays strictly detection-gated)
+        let mut reg = KernelRegistry::with_builtins();
+        isa::register_isa_backends(&mut reg, IsaSupport { avx2: true, neon: true });
+        let v = Variant::parse("w4a8").unwrap();
+        let policy = |core: CoreModel| SelectPolicy::CostModel {
+            preset: CachePreset::Gem5Ex5Big,
+            calls: 3,
+            core,
+        };
+        let select = |core: CoreModel| {
+            PlanBuilder::new(shape(2048, 2048, 1), v)
+                .policy(policy(core))
+                .select_in(&reg)
+                .unwrap()
+        };
+        // 256-bit core: the AVX2 entry wins the w4a8 serving shape
+        assert_eq!(select(CoreModel::avx2()).name(), "fullpack-w4a8-avx2");
+        // 128-bit core with untrusted autovec: the NEON entry wins and
+        // the 32-byte AVX2 entry is gated out by vec_bytes, not merely
+        // outscored
+        assert_eq!(select(CoreModel::neon()).name(), "fullpack-w4a8-neon");
+        // the paper's ex5 core (perfect staged codegen): the staged
+        // kernel stays ahead of the hand-written NEON tier, so the §4.4
+        // calibration pins don't move when ISA entries are present
+        assert_eq!(select(CoreModel::ex5_big()).name(), "fullpack-w4a8");
+        // a vec_bytes = 0 portable core never models an ISA entry
+        let name = select(CoreModel::portable()).name();
+        assert!(
+            !name.ends_with("-avx2") && !name.ends_with("-neon"),
+            "portable core picked ISA entry {name}"
+        );
+    }
+
+    #[test]
+    fn batched_plans_shard_gemm_by_row_tiles() {
+        // a batch-first plan with a thread budget: dispatch_gemm goes
+        // through shard_gemm_rows/gemm_at and stays bit-identical to
+        // the serial plan (rows large enough to actually spawn shards)
+        let v = Variant::parse("w4a8").unwrap();
+        let (z, k, batch) = (1024usize, 64usize, 4usize);
+        let serial =
+            PlanBuilder::new(shape(z, k, batch), v).prefer_gemm(true).build().unwrap();
+        let w = rngvals(v.w, z * k, 51);
+        let a = rngvals(v.a, batch * k, 52);
+        let wts = serial.prepare_weights(&w).unwrap();
+        let mut base = vec![0i32; batch * z];
+        serial.execute_batch(&wts, &a, batch, &mut base).unwrap();
+        for threads in [2usize, 4] {
+            let plan = PlanBuilder::new(shape(z, k, batch), v)
+                .prefer_gemm(true)
+                .threads(threads)
+                .build()
+                .unwrap();
+            assert!(plan.is_batched());
+            let mut out = vec![0i32; batch * z];
+            plan.execute_batch(&wts, &a, batch, &mut out).unwrap();
+            assert_eq!(out, base, "threads={threads}");
+        }
     }
 
     #[test]

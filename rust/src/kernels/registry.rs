@@ -10,6 +10,7 @@
 //! |-------------------|----------|-----------|-----------------------|
 //! | `fullpack-wXaY`   | FullPack | stride-16 | `Method::FullPack`    |
 //! | `fullpack-wXa8-swar` | SWAR tier | stride-16 + row sums | `Method::FullPackSwar` |
+//! | `fullpack-wXa8-avx2`/`-neon` | ISA tier (detected) | stride-16 | `Method::FullPackIsa` |
 //! | `lut-wXaY`        | LUT tier | stride-16 + per-call tables | `Method::Lut` |
 //! | `naive-wXa8`      | Alg. 1   | adjacent  | `Method::Naive`       |
 //! | `ulppack-wXaX`    | ULPPACK  | spacer    | `Method::Ulppack`     |
@@ -27,10 +28,19 @@
 //!
 //! [`RowParallel`] is the row-sharding decorator: it wraps any entry and
 //! implements the same trait, so intra-op parallelism composes with
-//! every backend.
+//! every backend.  [`RowParallelGemm`] is its GEMM-tier sibling: it
+//! shards batched calls by output row-tiles through
+//! [`GemmKernel::gemm_at`].
+//!
+//! The ISA tier (`fullpack-wXa8-avx2`, `fullpack-wXa8-neon` —
+//! `kernels::isa`) is registered **only when the running host can
+//! execute it** ([`super::isa::detect::detected`]), so the roster is
+//! host-dependent by design: every registered entry is runnable.
 #![warn(missing_docs)]
 
-use super::api::{check_gemm_shape, check_rows, wrong_layout, GemmKernel, GemvKernel, Weights};
+use super::api::{
+    check_gemm_shape, check_gemm_tile, check_rows, wrong_layout, GemmKernel, GemvKernel, Weights,
+};
 use super::lut::{LutGemmKernel, LutKernel, LUT_VARIANTS};
 use super::swar::{SwarKernel, SWAR_VARIANTS};
 use super::{baseline, fullpack_gemm, naive, parallel, ulppack, ActVec, KernelError};
@@ -492,6 +502,71 @@ impl GemvKernel for RowParallel {
     }
 }
 
+/// Tile-parallel decorator for the **GEMM tier**: shards a batched
+/// forward by output row-tiles across a scoped thread pool
+/// (`parallel::shard_gemm_rows`), calling the wrapped backend's
+/// [`GemmKernel::gemm_at`] once per tile.  Bit-identical to the serial
+/// call — every tile computes the same dot products over the same
+/// shared operands, and the scatter after the join reassembles the
+/// batch-major result.
+///
+/// ```
+/// use fullpack::kernels::{GemmKernel, KernelRegistry, RowParallelGemm};
+///
+/// let reg = KernelRegistry::global();
+/// let par = RowParallelGemm::new(reg.get_gemm("fullpack-w4a8-gemm").unwrap().clone(), 4);
+/// assert_eq!(par.name(), "fullpack-w4a8-gemm");
+/// ```
+pub struct RowParallelGemm {
+    inner: Arc<dyn GemmKernel>,
+    /// shard budget handed to `parallel::shard_gemm_rows` per call
+    pub threads: usize,
+}
+
+impl RowParallelGemm {
+    /// Wrap `inner` with a row-tile sharding budget of `threads`.
+    pub fn new(inner: Arc<dyn GemmKernel>, threads: usize) -> RowParallelGemm {
+        RowParallelGemm { inner, threads }
+    }
+}
+
+impl GemmKernel for RowParallelGemm {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn supports(&self, v: Variant) -> bool {
+        self.inner.supports(v)
+    }
+
+    fn prepare(&self, w: &[i8], rows: usize, k: usize) -> Result<Weights, KernelError> {
+        self.inner.prepare(w, rows, k)
+    }
+
+    fn gemm(&self, w: &Weights, cols: &[&[i8]], out: &mut [i32]) -> Result<(), KernelError> {
+        check_gemm_shape(w, cols, out)?;
+        let inner = &*self.inner;
+        parallel::shard_gemm_rows(out, w.rows(), cols.len(), self.threads, |tile, lo, _hi| {
+            inner.gemm_at(w, cols, tile, lo)
+        })
+    }
+
+    fn gemm_at(
+        &self,
+        w: &Weights,
+        cols: &[&[i8]],
+        out: &mut [i32],
+        row0: usize,
+    ) -> Result<(), KernelError> {
+        // tiles of tiles don't pay a second spawn: delegate directly
+        self.inner.gemm_at(w, cols, out, row0)
+    }
+
+    fn cost_method(&self) -> Option<Method> {
+        self.inner.cost_method()
+    }
+}
+
 /// Registry name of the FullPack GEMM backend for a variant, if the
 /// GEMM tier implements it (sub-byte weights × int8 activations — the
 /// extract-once/MAC-many amortization needs unpacked columns).
@@ -553,6 +628,21 @@ impl GemmKernel for FullPackGemmKernel {
         fullpack_gemm::gemm_fullpack_dyn(wp, cols, out)
     }
 
+    fn gemm_at(
+        &self,
+        w: &Weights,
+        cols: &[&[i8]],
+        out: &mut [i32],
+        row0: usize,
+    ) -> Result<(), KernelError> {
+        let Weights::Packed(wp) = w else { return Err(wrong_layout(self.name, w)) };
+        if !wp.bits().is_sub_byte() {
+            return Err(wrong_layout(self.name, w));
+        }
+        check_gemm_tile(w, cols, out, row0)?;
+        fullpack_gemm::gemm_fullpack_dyn_at(wp, cols, out, row0)
+    }
+
     fn cost_method(&self) -> Option<Method> {
         Some(Method::FullPackGemm(self.variant))
     }
@@ -585,6 +675,24 @@ impl GemmKernel for RuyLikeGemmKernel {
         let z = wp.rows();
         for (c, col) in cols.iter().enumerate() {
             baseline::gemv_ruy_i8_at(wp, col, &mut out[c * z..(c + 1) * z], 0);
+        }
+        Ok(())
+    }
+
+    fn gemm_at(
+        &self,
+        w: &Weights,
+        cols: &[&[i8]],
+        out: &mut [i32],
+        row0: usize,
+    ) -> Result<(), KernelError> {
+        let Weights::Packed(wp) = w else { return Err(wrong_layout(self.name(), w)) };
+        if wp.bits().is_sub_byte() {
+            return Err(wrong_layout(self.name(), w));
+        }
+        let rt = check_gemm_tile(w, cols, out, row0)?;
+        for (c, col) in cols.iter().enumerate() {
+            baseline::gemv_ruy_i8_at(wp, col, &mut out[c * rt..(c + 1) * rt], row0);
         }
         Ok(())
     }
@@ -641,6 +749,31 @@ impl GemmKernel for NaiveGemmOracle {
         }
         Ok(())
     }
+
+    fn gemm_at(
+        &self,
+        w: &Weights,
+        cols: &[&[i8]],
+        out: &mut [i32],
+        row0: usize,
+    ) -> Result<(), KernelError> {
+        let Weights::Naive { bytes, k, .. } = w else {
+            return Err(wrong_layout(self.name(), w));
+        };
+        let k = *k;
+        let rt = check_gemm_tile(w, cols, out, row0)?;
+        for (c, col) in cols.iter().enumerate() {
+            for r in 0..rt {
+                let row = row0 + r;
+                out[c * rt + r] = bytes[row * k..(row + 1) * k]
+                    .iter()
+                    .zip(col.iter())
+                    .map(|(&wv, &av)| (wv as i8) as i32 * av as i32)
+                    .sum();
+            }
+        }
+        Ok(())
+    }
 }
 
 /// The kernel registry: name → backend, in two namespaces — GEMV
@@ -660,9 +793,10 @@ impl KernelRegistry {
     }
 
     /// Every built-in backend: nine FullPack variants, the SWAR fast
-    /// path (DESIGN.md §8), the LUT tier (DESIGN.md §13), the naive
-    /// Alg. 1 strawman, ULPPACK, the W8A8 rivals and the FP32 rivals —
-    /// plus the GEMM tier (DESIGN.md §9):
+    /// path (DESIGN.md §8), the LUT tier (DESIGN.md §13), the real-ISA
+    /// tier for every vector ISA the host supports (DESIGN.md §15), the
+    /// naive Alg. 1 strawman, ULPPACK, the W8A8 rivals and the FP32
+    /// rivals — plus the GEMM tier (DESIGN.md §9):
     /// `fullpack-{w4,w2,w1}a8-gemm`, the `lut-*-gemm` wrappers, the
     /// Ruy-like W8A8 GEMM rival, and the naive oracle.
     pub fn with_builtins() -> KernelRegistry {
@@ -688,6 +822,10 @@ impl KernelRegistry {
             reg.register(Arc::new(NaiveKernel { bits }));
             reg.register(Arc::new(UlppackKernel { bits }));
         }
+        // the real-ISA tier: registered only for ISAs the running host
+        // can execute (restrictable via FULLPACK_ISA) — the roster never
+        // contains an entry that would fault at dispatch
+        super::isa::register_isa_backends(&mut reg, super::isa::detect::detected());
         for v in FULLPACK_GEMM_VARIANTS {
             let kernel = FullPackGemmKernel::new(v).expect("FULLPACK_GEMM_VARIANTS implemented");
             reg.register_gemm(Arc::new(kernel));
@@ -809,7 +947,20 @@ mod tests {
     fn builtin_roster_complete() {
         let reg = KernelRegistry::global();
         // 9 fullpack + 4 swar + 4 lut + 4 i8 + 3 f32 + 3 naive + 3 ulppack
-        assert_eq!(reg.len(), 30);
+        // + 4 ISA entries per detected vector ISA (host-dependent by
+        // design: only executable backends are registered)
+        let isa = crate::kernels::isa::detect::detected();
+        assert_eq!(reg.len(), 30 + 4 * isa.count());
+        for kind in crate::kernels::isa::ISA_KINDS {
+            for v in crate::kernels::isa::ISA_VARIANTS {
+                let name = crate::kernels::isa::isa_kernel_name(v, kind).unwrap();
+                assert_eq!(
+                    reg.get(name).is_some(),
+                    isa.has(kind),
+                    "{name} registration must track detection"
+                );
+            }
+        }
         for name in [
             "fullpack-w4a8",
             "fullpack-w4a8-swar",
@@ -989,6 +1140,85 @@ mod tests {
             assert_eq!(out, serial, "threads={threads}");
         }
         assert_eq!(serial, oracle_gemv(&w, &a, z, k));
+    }
+
+    #[test]
+    fn gemm_row_tiles_match_the_full_call() {
+        // every built-in GEMM backend implements the gemm_at contract:
+        // an interior tile equals the matching rows of the full result,
+        // batch-major over the tile
+        let reg = KernelRegistry::global();
+        let (z, k, batch) = (64usize, 50usize, 3usize);
+        let (lo, hi) = (17usize, 41usize);
+        let rt = hi - lo;
+        for g in reg.gemm_iter() {
+            let v = ["w4a8", "w2a8", "w1a8", "w4a4", "w8a8"]
+                .iter()
+                .map(|s| Variant::parse(s).unwrap())
+                .find(|&v| g.supports(v))
+                .unwrap_or_else(|| panic!("{}: no testable variant", g.name()));
+            let w = rngvals(v.w, z * k, 131);
+            let wts = g.prepare(&w, z, k).unwrap();
+            let kp = wts.k_padded();
+            let cols: Vec<Vec<i8>> = (0..batch)
+                .map(|c| {
+                    let mut col = rngvals(v.a, k, 132 + c as u64);
+                    col.resize(kp, 0);
+                    col
+                })
+                .collect();
+            let refs: Vec<&[i8]> = cols.iter().map(|c| c.as_slice()).collect();
+            let mut full = vec![0i32; z * batch];
+            g.gemm(&wts, &refs, &mut full).unwrap();
+            let mut tile = vec![0i32; rt * batch];
+            g.gemm_at(&wts, &refs, &mut tile, lo).unwrap();
+            for c in 0..batch {
+                assert_eq!(
+                    &tile[c * rt..(c + 1) * rt],
+                    &full[c * z + lo..c * z + hi],
+                    "{} col {c}",
+                    g.name()
+                );
+            }
+            // out-of-range tiles are shape errors
+            let mut bad = vec![0i32; 10 * batch];
+            assert!(g.gemm_at(&wts, &refs, &mut bad, z - 5).is_err(), "{}", g.name());
+        }
+    }
+
+    #[test]
+    fn tile_parallel_gemm_is_bit_identical() {
+        let reg = KernelRegistry::global();
+        // enough rows that shard_gemm_rows actually spawns (>= 2 shards
+        // past MIN_ROWS_PER_SHARD), on both a sub-byte FullPack entry
+        // and the w8a8 rival
+        let (z, k, batch) = (1024usize, 64usize, 3usize);
+        for (name, v) in
+            [("fullpack-w4a8-gemm", "w4a8"), ("ruy-like-w8a8-gemm", "w8a8")]
+        {
+            let base = reg.get_gemm(name).unwrap();
+            let v = Variant::parse(v).unwrap();
+            let w = rngvals(v.w, z * k, 141);
+            let wts = base.prepare(&w, z, k).unwrap();
+            let kp = wts.k_padded();
+            let cols: Vec<Vec<i8>> = (0..batch)
+                .map(|c| {
+                    let mut col = rngvals(v.a, k, 142 + c as u64);
+                    col.resize(kp, 0);
+                    col
+                })
+                .collect();
+            let refs: Vec<&[i8]> = cols.iter().map(|c| c.as_slice()).collect();
+            let mut serial = vec![0i32; z * batch];
+            base.gemm(&wts, &refs, &mut serial).unwrap();
+            for threads in [2usize, 4] {
+                let par = RowParallelGemm::new(base.clone(), threads);
+                assert_eq!(par.name(), name);
+                let mut out = vec![0i32; z * batch];
+                par.gemm(&wts, &refs, &mut out).unwrap();
+                assert_eq!(out, serial, "{name} threads={threads}");
+            }
+        }
     }
 
     #[test]

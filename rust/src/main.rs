@@ -106,6 +106,9 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             // not a paper figure: the LUT tier's table-vs-L1 crossover
             // sweep on the portable core (DESIGN.md §13)
             "lut-crossover" => sweeps::fig_lut_crossover(sz),
+            // not a paper figure: the real-ISA tier's gain over the
+            // staged/SWAR kernels on the wide cores (DESIGN.md §15)
+            "isa-crossover" => sweeps::fig_isa_crossover(sz),
             "fig10" | "fig1" => {
                 let (table, totals) = e2e::fig10(DeepSpeechConfig::FULL);
                 println!("=== fig10 (DeepSpeech per-layer breakdown, simulated) ===\n");
@@ -140,6 +143,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             "fig13",
             "gemm-batch",
             "lut-crossover",
+            "isa-crossover",
         ] {
             run(id)?;
         }

@@ -13,7 +13,7 @@ use fullpack::kernels::fullpack_gemm::gemm_fullpack_dyn;
 use fullpack::kernels::registry::fullpack_kernel_name;
 use fullpack::kernels::testutil::{oracle_gemv, rngvals};
 use fullpack::kernels::{
-    ActVec, GemmKernel, GemvKernel, KernelRegistry, LayerShape, PlanBuilder,
+    ActVec, GemmKernel, GemvKernel, KernelRegistry, LayerShape, PlanBuilder, RowParallelGemm,
 };
 use fullpack::pack::{BitWidth, PackedMatrix, Variant};
 use fullpack::util::proptest_lite::{run_prop, Gen};
@@ -240,6 +240,49 @@ fn router_promoted_plans_are_differentially_correct() {
                 logical_oracle(&w, col, z, k).as_slice(),
                 "{vname} col {b}"
             );
+        }
+    }
+}
+
+#[test]
+fn tile_parallel_gemm_equals_serial_for_every_backend() {
+    // the RowParallelGemm decorator (→ GemmKernel::gemm_at row tiles)
+    // must be bit-identical to the serial batched call on every
+    // registered GEMM backend, at a row count large enough to spawn
+    // real shards and a depth with a padded tail
+    let reg = KernelRegistry::global();
+    let (z, k, batch) = (1024usize, 65usize, 3usize);
+    for g in reg.gemm_iter() {
+        let bits = WIDTHS
+            .into_iter()
+            .find(|&b| exec_variant(g, Variant::new(b, BitWidth::B8)).is_some());
+        let Some(bits) = bits else { continue };
+        let w = rngvals(bits, z * k, 211);
+        let wts = g.prepare(&w, z, k).unwrap();
+        let kp = wts.k_padded();
+        let cols: Vec<Vec<i8>> = (0..batch)
+            .map(|c| {
+                let mut col = rngvals(BitWidth::B8, k, 212 + c as u64);
+                col.resize(kp, 0);
+                col
+            })
+            .collect();
+        let refs: Vec<&[i8]> = cols.iter().map(|c| c.as_slice()).collect();
+        let mut serial = vec![0i32; z * batch];
+        g.gemm(&wts, &refs, &mut serial).unwrap();
+        for (c, col) in cols.iter().enumerate() {
+            assert_eq!(
+                &serial[c * z..(c + 1) * z],
+                logical_oracle(&w, col, z, k).as_slice(),
+                "{} col {c}: serial vs oracle",
+                g.name()
+            );
+        }
+        for threads in [2usize, 4] {
+            let par = RowParallelGemm::new(g.clone(), threads);
+            let mut out = vec![0i32; z * batch];
+            par.gemm(&wts, &refs, &mut out).unwrap();
+            assert_eq!(out, serial, "{} threads={threads}", g.name());
         }
     }
 }

@@ -118,6 +118,87 @@ fn swar_and_scalar_tiers_agree_exactly() {
     }
 }
 
+/// Every real-ISA backend (`fullpack-*-avx2` / `-neon`) is bit-exact
+/// with the naive oracle **and** with its scalar and SWAR siblings
+/// across the full unaligned-depth grid — the three tiers share one
+/// packed layout and must be interchangeable per plan.  The roster is
+/// detection-gated, so backends this host cannot execute are simply
+/// absent and auto-skip (visibly, so CI logs show the coverage).
+#[test]
+fn isa_backends_match_oracle_and_siblings_across_depths() {
+    use fullpack::kernels::{isa_kernel_name, IsaKind, ISA_VARIANTS};
+    let reg = KernelRegistry::global();
+    let mut covered = 0usize;
+    for kind in [IsaKind::Avx2, IsaKind::Neon] {
+        for v in ISA_VARIANTS {
+            let name = isa_kernel_name(v, kind).unwrap();
+            if reg.get(name).is_none() {
+                eprintln!("SKIP {name}: not executable on this host (never registered)");
+                continue;
+            }
+            // vs the naive oracle, across the SWAR-tier depth grid
+            for (i, k) in SWAR_DEPTHS.iter().enumerate() {
+                check(name, v, 8, *k, 9000 + i as u64);
+            }
+            // vs the scalar and SWAR siblings on the same data
+            let scalar = format!("fullpack-{}", v.name());
+            let swar = format!("fullpack-{}-swar", v.name());
+            for k in SWAR_DEPTHS {
+                let z = 16;
+                let w = rngvals(v.w, z * k, 9100 + k as u64);
+                let a = rngvals(v.a, k, 9200 + k as u64);
+                let run = |kernel: &str| -> Vec<i32> {
+                    let plan = PlanBuilder::new(LayerShape { z, k, batch: 1 }, v)
+                        .policy(SelectPolicy::Explicit(kernel.to_string()))
+                        .build()
+                        .unwrap();
+                    let wts = plan.prepare_weights(&w).unwrap();
+                    let mut out = vec![0i32; z];
+                    plan.execute(&wts, &a, &mut out).unwrap();
+                    out
+                };
+                let isa_out = run(name);
+                assert_eq!(isa_out, run(&scalar), "{name} vs {scalar} k={k}");
+                assert_eq!(isa_out, run(&swar), "{name} vs {swar} k={k}");
+            }
+            covered += 1;
+        }
+    }
+    eprintln!("isa conformance: {covered} ISA backend(s) executable on this host");
+}
+
+/// `RowParallel` composes over the ISA tier exactly like the SWAR tier:
+/// sharded execution is bit-identical to serial (skips visibly when the
+/// host registers no ISA backend).
+#[test]
+fn row_parallel_composes_over_the_isa_tier() {
+    use fullpack::kernels::{isa_kernel_name, ISA_VARIANTS};
+    let reg = KernelRegistry::global();
+    let support = fullpack::kernels::isa::detected();
+    let Some(kind) = support.kinds().first().copied() else {
+        eprintln!("SKIP row_parallel_composes_over_the_isa_tier: no ISA tier on this host");
+        return;
+    };
+    let v = ISA_VARIANTS[0];
+    let base = reg.get(isa_kernel_name(v, kind).unwrap()).unwrap();
+    let (z, k) = (1024usize, 160usize);
+    let w = rngvals(v.w, z * k, 83);
+    let mut a = rngvals(v.a, k, 84);
+    a.resize(v.padded_depth(k), 0);
+    let wts = base.prepare(&w, z, k).unwrap();
+    let mut serial = vec![0i32; z];
+    base.gemv_at(&wts, ActVec::I8(&a), &mut serial, 0).unwrap();
+    for threads in [2usize, 4] {
+        let par = RowParallel::new(base.clone(), threads);
+        let mut out = vec![0i32; z];
+        par.gemv_at(&wts, ActVec::I8(&a), &mut out, 0).unwrap();
+        assert_eq!(out, serial, "threads={threads}");
+    }
+    let kp = v.padded_depth(k);
+    let wp = pad_rows(&w, z, k, kp);
+    assert_eq!(serial, oracle_gemv(&wp, &a, z, kp));
+}
+
 /// `RowParallel` composes over the SWAR tier: sharded execution is
 /// bit-identical to the serial call and to the oracle.
 #[test]

@@ -1,0 +1,35 @@
+#!/usr/bin/env bash
+# One-command host benchmark: runs the three measured suites and
+# overwrites the committed JSON documents in the repo root —
+#
+#   benches/swar_vs_scalar.rs  -> BENCH_kernels.json  (bench-kernels/v1)
+#   benches/gemm_batch_sweep.rs -> BENCH_gemm.json    (bench-gemm/v1)
+#   benches/serve_sweep.rs      -> BENCH_serve.json   (bench-serve/v3)
+#
+# The kernels suite includes the real-ISA tier (fullpack-*-avx2/-neon)
+# for whatever the host CPU supports; undetected ISAs are skipped with
+# a note, so the JSON only ever carries executed numbers.
+#
+# Usage:
+#   scripts/bench_host.sh            # full sampling (minutes)
+#   QUICK=1 scripts/bench_host.sh    # smoke-level sampling
+#   LIVE=1 scripts/bench_host.sh     # serve sweep on the real engine
+#
+# Re-run after changing kernels, then commit the refreshed JSONs —
+# EXPERIMENTS.md's "measured" columns are populated from them.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== suite 1/3: kernel tiers (SWAR + ISA) -> BENCH_kernels.json =="
+BENCH_OUT=BENCH_kernels.json cargo bench --bench swar_vs_scalar
+
+echo
+echo "== suite 2/3: batched GEMM sweep -> BENCH_gemm.json =="
+BENCH_OUT=BENCH_gemm.json cargo bench --bench gemm_batch_sweep
+
+echo
+echo "== suite 3/3: serve sweep -> BENCH_serve.json =="
+OUT=BENCH_serve.json cargo bench --bench serve_sweep
+
+echo
+echo "wrote BENCH_kernels.json BENCH_gemm.json BENCH_serve.json"
